@@ -1,0 +1,58 @@
+//! Quickstart: pull vs push on one small colocated cluster (sim plane).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the same experiment twice — once with the state-of-the-art
+//! pull-based source, once with the paper's push-based source — and prints
+//! the p50 per-second throughput each strategy achieves plus the source
+//! resource footprint. This is the 60-second version of the whole paper.
+
+use zettastream::cluster::launch;
+use zettastream::config::{ExperimentConfig, SourceMode, Workload};
+
+fn main() {
+    // Table I, small: 4 producers, 4 consumers, 8 partitions, a
+    // resource-constrained broker of 4 cores, replicated stream.
+    let mut config = ExperimentConfig {
+        name: "quickstart".into(),
+        np: 4,
+        nc: 4,
+        nmap: 8,
+        ns: 8,
+        producer_chunk: 8 * 1024,
+        consumer_chunk: 8 * 1024, // the Fig. 7 regime: consumer CS == producer CS
+        record_size: 100,
+        replication: 2,
+        broker_cores: 4,
+        workload: Workload::Filter,
+        duration_secs: 20,
+        warmup_secs: 3,
+        ..Default::default()
+    };
+
+    println!("zettastream quickstart — pull vs push streaming sources\n");
+    let mut rows = Vec::new();
+    for mode in [SourceMode::Pull, SourceMode::Push, SourceMode::NativePull] {
+        config.mode = mode;
+        config.name = format!("quickstart-{}", mode.name());
+        let summary = launch(&config, None).run();
+        println!("{}", summary.report.row());
+        rows.push((mode, summary));
+    }
+
+    let pull = rows[0].1.report.consumers.p50;
+    let push = rows[1].1.report.consumers.p50;
+    let native = rows[2].1.report.consumers.p50;
+    println!("\nconsumer throughput: pull {:.2} M/s | push {:.2} M/s | native {:.2} M/s",
+             pull / 1e6, push / 1e6, native / 1e6);
+    println!("push/pull speedup: {:.2}x (paper: up to 2x when storage is constrained)",
+             push / pull);
+    println!(
+        "source threads: pull {} vs push {} (paper Fig. 4: 'two threads versus eight')",
+        rows[0].1.report.gauge("source_threads").unwrap_or(0.0),
+        rows[1].1.report.gauge("source_threads").unwrap_or(0.0),
+    );
+    println!("\nnext: `cargo bench` regenerates every figure; see EXPERIMENTS.md.");
+}

@@ -1,0 +1,107 @@
+"""AOT-lower the Layer-2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Each graph is lowered once per ``[R, S]`` chunk-shape *variant*; the rust
+compute bridge (rust/src/compute) pads a chunk's record axis up to the
+smallest compiled variant that fits. The variant table below is the single
+source of truth — ``manifest.tsv`` carries it to the rust side.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+from . import model
+
+try:  # jax moved the private xla_client around across releases
+    from jax._src.lib import xla_client as xc
+except ImportError:  # pragma: no cover
+    from jaxlib import xla_client as xc
+
+MANIFEST = "manifest.tsv"
+
+# kind, R, S, extra — extra is pattern_len for filter, buckets for wordcount,
+# window size for window_sum. Keep this in sync with rust/src/compute/variants.rs
+# (the rust side reads manifest.tsv, so only names/shapes must agree).
+VARIANTS = [
+    # the synthetic benchmarks: RecS=100 B records, chunks 1..128 KiB
+    ("filter", 64, 100, model.PATTERN_LEN),
+    ("filter", 256, 100, model.PATTERN_LEN),
+    ("filter", 1024, 100, model.PATTERN_LEN),
+    ("filter", 2048, 100, model.PATTERN_LEN),
+    # the Wikipedia benchmarks: 2 KiB text records
+    ("filter", 64, 2048, model.PATTERN_LEN),
+    ("wordcount", 16, 2048, 8192),
+    ("wordcount", 64, 2048, 8192),
+    ("window_sum", 5, 8192, 0),
+]
+
+QUICK_VARIANTS = [
+    ("filter", 64, 100, model.PATTERN_LEN),
+    ("wordcount", 16, 2048, 8192),
+    ("window_sum", 5, 8192, 0),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_variant(kind: str, r: int, s: int, extra: int):
+    if kind == "filter":
+        fn, args = model.make_filter_fn(r, s, pattern_len=extra)
+    elif kind == "wordcount":
+        fn, args = model.make_wordcount_fn(r, s, buckets=extra)
+    elif kind == "window_sum":
+        fn, args = model.make_window_sum_fn(r, buckets=s)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown kind {kind}")
+    return jax.jit(fn).lower(*args)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the variants the tests need (fast CI loop)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    variants = QUICK_VARIANTS if args.quick else VARIANTS
+    rows = []
+    for kind, r, s, extra in variants:
+        name = f"{kind}_r{r}_s{s}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        lowered = build_variant(kind, r, s, extra)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        rows.append((name, kind, r, s, extra, f"{name}.hlo.txt"))
+        print(f"  {name}: {len(text)} chars -> {path}", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, MANIFEST), "w") as f:
+        f.write("# name\tkind\tr\ts\textra\tfile\n")
+        for row in rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"wrote {len(rows)} artifacts + {MANIFEST} to {args.out_dir}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the ZettaStream streaming operators.
+
+The paper's processing hot loops (the per-record work inside the Flink
+user functions of Listings 1 & 2) are implemented as Pallas kernels over
+chunk tensors:
+
+* :mod:`filter_count` — substring filter + record count over a ``[R, S]``
+  u8 chunk (the "iterate, count and filter" synthetic benchmarks,
+  Figs. 5-8).
+* :mod:`wordcount_hist` — token scan + rolling-FNV hash histogram (the
+  Wikipedia word-count benchmarks, Fig. 9).
+
+All kernels are lowered with ``interpret=True`` — real-TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute. Correctness is
+checked against the pure-jnp oracles in :mod:`ref` by the pytest suite.
+"""
+
+from .filter_count import filter_count_pallas, FNV_OFFSET, FNV_PRIME
+from .wordcount_hist import wordcount_hist_pallas, DEFAULT_BUCKETS
+
+__all__ = [
+    "filter_count_pallas",
+    "wordcount_hist_pallas",
+    "FNV_OFFSET",
+    "FNV_PRIME",
+    "DEFAULT_BUCKETS",
+]

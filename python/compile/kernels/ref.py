@@ -1,0 +1,63 @@
+"""Pure-Python/numpy oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: deliberately written in
+the most obvious way possible (Python bytes / regex / int arithmetic, no jax)
+so that a bug in the kernels cannot be mirrored here. The rust-side native
+fallback (rust/src/compute/native.rs) implements the same semantics and is
+cross-checked by the integration tests through the record framing.
+
+Token semantics shared by kernel, oracle, and rust:
+  * a token is a maximal run of ASCII ``[a-zA-Z0-9]`` bytes;
+  * tokens are case-folded to lowercase before hashing;
+  * hash is FNV-1a (32-bit): ``h = 2166136261; h = (h ^ b) * 16777619 mod 2^32``;
+  * a token is terminated by the record boundary (records do not continue
+    across framing).
+"""
+
+import re
+
+import numpy as np
+
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+_TOKEN_RE = re.compile(rb"[a-zA-Z0-9]+")
+
+
+def fnv1a(token: bytes) -> int:
+    """32-bit FNV-1a over an already-case-folded token."""
+    h = FNV_OFFSET
+    for b in token:
+        h = ((h ^ b) * FNV_PRIME) & 0xFFFFFFFF
+    return h
+
+
+def ref_filter(chunk: np.ndarray, pattern: bytes) -> np.ndarray:
+    """``[R]`` int32 flags: 1 where `pattern` occurs in the record bytes."""
+    assert chunk.dtype == np.uint8 and chunk.ndim == 2
+    rows = [1 if pattern in row.tobytes() else 0 for row in chunk]
+    return np.asarray(rows, dtype=np.int32)
+
+
+def ref_tokens(record: bytes) -> list[bytes]:
+    """Case-folded tokens of one record."""
+    return [t.lower() for t in _TOKEN_RE.findall(record)]
+
+
+def ref_wordcount_hist(chunk: np.ndarray, buckets: int) -> np.ndarray:
+    """``[B]`` int32 histogram of FNV-1a(token) % buckets over all records."""
+    assert chunk.dtype == np.uint8 and chunk.ndim == 2
+    hist = np.zeros(buckets, dtype=np.int32)
+    for row in chunk:
+        for tok in ref_tokens(row.tobytes()):
+            hist[fnv1a(tok) % buckets] += 1
+    return hist
+
+
+def ref_word_counts(chunk: np.ndarray) -> dict[bytes, int]:
+    """Exact per-word counts (used by integration-level word-count checks)."""
+    counts: dict[bytes, int] = {}
+    for row in chunk:
+        for tok in ref_tokens(row.tobytes()):
+            counts[tok] = counts.get(tok, 0) + 1
+    return counts

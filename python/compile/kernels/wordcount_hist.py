@@ -1,0 +1,116 @@
+"""Word-count kernel: tokenise records and histogram word hashes.
+
+The Wikipedia benchmarks (paper Fig. 9, Listing 2) tokenise 2 KiB text
+records and count words, keyed by word (``keyBy(f0).sum(1)``). The keyed
+aggregation state lives in the rust worker (the ``KeyBy``/``Sum`` operators);
+the per-record hot loop — scanning bytes, finding token boundaries, hashing
+tokens — is this kernel. It emits a bucketed histogram of FNV-1a word hashes
+per chunk, which the rust side merges into the keyed state (DESIGN.md §2
+documents this exact-word → hash-bucket substitution; the throughput metric
+the paper plots counts tuples, which is preserved).
+
+Algorithm, vectorised over a ``[TR, S]`` record tile in VMEM:
+
+* march one column (byte position) at a time with ``lax.fori_loop``;
+* per row maintain ``(hash, in_word)`` rolling state — FNV-1a over
+  lowercased alphanumeric runs;
+* when a token ends (alpha→non-alpha edge), scatter-add 1 into
+  ``hist[hash % B]``.
+
+The histogram (``B`` buckets, int32) stays VMEM-resident for the whole tile;
+only token-end columns touch it. The final column flushes still-open tokens.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filter_count import FNV_OFFSET, FNV_PRIME
+
+DEFAULT_BUCKETS = 8192
+
+
+def _is_alnum(ch):
+    """Token chars: ASCII letters (case-folded) and digits."""
+    lower = ch | 0x20
+    is_alpha = (lower >= ord("a")) & (lower <= ord("z"))
+    is_digit = (ch >= ord("0")) & (ch <= ord("9"))
+    return is_alpha | is_digit
+
+
+def _fold(ch):
+    """Case-fold a token byte the way the oracle/rust sides do."""
+    is_upper = (ch >= ord("A")) & (ch <= ord("Z"))
+    return jnp.where(is_upper, ch | 0x20, ch)
+
+
+def _wordcount_kernel(chunk_ref, hist_ref, *, buckets: int):
+    # Perf pass (EXPERIMENTS.md §Perf L1): a scan-then-scatter restructure
+    # (emit bucket ids per column, one scatter at the end) was tried and
+    # measured SLOWER (14.2 vs 13.0 us/record) — XLA already donates the
+    # histogram buffer through the While loop, so the carried [B] update is
+    # in-place and the scan variant only added a [S, TR] materialisation.
+    # Kept: the straightforward rolling-state loop with per-column scatter.
+    tile = chunk_ref[...].astype(jnp.uint32)  # [TR, S]
+    tr, s = tile.shape
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros((buckets,), jnp.int32)
+
+    def body(c, carry):
+        h, in_word, hist = carry
+        ch = tile[:, c]
+        tok = _is_alnum(ch)
+        folded = _fold(ch)
+        # FNV-1a step for rows inside a token char.
+        h_step = ((h ^ folded) * jnp.uint32(FNV_PRIME)).astype(jnp.uint32)
+        h_next = jnp.where(tok, h_step, jnp.uint32(FNV_OFFSET))
+        ended = in_word & ~tok
+        bucket = (h % jnp.uint32(buckets)).astype(jnp.int32)
+        hist = hist.at[bucket].add(ended.astype(jnp.int32))
+        return h_next, tok, hist
+
+    h0 = jnp.full((tr,), FNV_OFFSET, jnp.uint32)
+    in0 = jnp.zeros((tr,), jnp.bool_)
+    h, in_word, hist = jax.lax.fori_loop(0, s, body, (h0, in0, hist_ref[...]))
+    # Flush tokens that run into the record end (records are padded with
+    # NULs by the producer framing, but a fully-packed record can end
+    # mid-word).
+    bucket = (h % jnp.uint32(buckets)).astype(jnp.int32)
+    hist = hist.at[bucket].add(in_word.astype(jnp.int32))
+    hist_ref[...] = hist
+
+
+@functools.partial(jax.jit, static_argnames=("buckets", "block_records"))
+def wordcount_hist_pallas(chunk, *, buckets: int = DEFAULT_BUCKETS, block_records: int = 16):
+    """Histogram of FNV-1a word-hash buckets over a chunk.
+
+    Args:
+      chunk: ``[R, S]`` uint8 record-framed text chunk.
+      buckets: histogram size ``B`` (static).
+      block_records: records per VMEM tile (static).
+
+    Returns:
+      ``[B]`` int32 — token counts per hash bucket; ``sum(hist)`` is the
+      total token count of the chunk.
+    """
+    r, s = chunk.shape
+    tr = min(block_records, r)
+    # Pad the record axis to a whole number of tiles; all-NUL rows contain
+    # no token chars and contribute nothing to the histogram.
+    rpad = pl.cdiv(r, tr) * tr
+    if rpad != r:
+        chunk = jnp.pad(chunk, ((0, rpad - r), (0, 0)))
+    grid = (rpad // tr,)
+    return pl.pallas_call(
+        functools.partial(_wordcount_kernel, buckets=buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, s), lambda i: (i, 0))],
+        # One VMEM-resident histogram accumulated across all grid steps.
+        out_specs=pl.BlockSpec((buckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((buckets,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(chunk)

@@ -1,0 +1,117 @@
+"""Layer-2 JAX compute graphs for the streaming operators.
+
+Each function here is a chunk-granularity compute graph that the rust worker
+invokes on its hot path (through the AOT artifacts — python never runs at
+request time). They wrap the Layer-1 Pallas kernels with the masking and
+reductions the operators need:
+
+* :func:`filter_count_chunk` — the "iterate, count and filter" benchmark
+  body (paper Listing 1 / Figs. 5-8): per-record match flags for a partial
+  chunk + match / record counts.
+* :func:`wordcount_chunk` — the word-count benchmark body (paper Listing 2 /
+  Fig. 9): masked token-hash histogram of a partial chunk.
+* :func:`window_sum` — the sliding-window aggregation of the windowed
+  word-count (5 s window, 1 s slide): sums per-second histograms.
+
+Every graph takes ``nvalid`` (records actually present in the chunk — the
+tail chunk of a segment is rarely full) so one compiled variant serves any
+fill level of its ``[R, S]`` shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import filter_count_pallas, wordcount_hist_pallas, DEFAULT_BUCKETS
+
+# Pattern buffer length in the filter artifacts; actual needle length is a
+# compile-time constant baked into each variant (PATTERN_LEN).
+PATTERN_MAX = 16
+PATTERN_LEN = 6  # the benchmarks grep for a fixed 6-byte needle
+
+
+def filter_count_chunk(chunk, pattern, nvalid, *, pattern_len: int = PATTERN_LEN,
+                       block_records: int = 64):
+    """Filter + count one (possibly partial) chunk.
+
+    Args:
+      chunk: ``[R, S]`` uint8.
+      pattern: ``[PATTERN_MAX]`` uint8, needle in the first `pattern_len` bytes.
+      nvalid: int32 scalar — records present (``<= R``).
+
+    Returns:
+      ``(flags[R] int32, match_count int32, record_count int32)``.
+    """
+    r = chunk.shape[0]
+    flags = filter_count_pallas(chunk, pattern, pattern_len=pattern_len,
+                                block_records=block_records)
+    valid = (jnp.arange(r, dtype=jnp.int32) < nvalid).astype(jnp.int32)
+    flags = flags * valid
+    return flags, jnp.sum(flags), jnp.sum(valid)
+
+
+def wordcount_chunk(chunk, nvalid, *, buckets: int = DEFAULT_BUCKETS,
+                    block_records: int = 16):
+    """Token-hash histogram of one (possibly partial) chunk.
+
+    Rows at or past ``nvalid`` are zeroed before the kernel — NUL rows hold
+    no token characters, so they add nothing to the histogram.
+
+    Returns:
+      ``(hist[B] int32, token_count int32)``.
+    """
+    r = chunk.shape[0]
+    valid = (jnp.arange(r, dtype=jnp.int32) < nvalid).astype(chunk.dtype)
+    masked = chunk * valid[:, None]
+    hist = wordcount_hist_pallas(masked, buckets=buckets, block_records=block_records)
+    return hist, jnp.sum(hist)
+
+
+def window_sum(hists):
+    """Aggregate ``[W, B]`` per-slide histograms into one window histogram."""
+    return (jnp.sum(hists, axis=0, dtype=jnp.int32),)
+
+
+def make_filter_fn(r: int, s: int, *, pattern_len: int = PATTERN_LEN,
+                   block_records: int = 64):
+    """Closed-shape jit-able entry for AOT lowering of the filter graph."""
+
+    def fn(chunk, pattern, nvalid):
+        return filter_count_chunk(chunk, pattern, nvalid,
+                                  pattern_len=pattern_len,
+                                  block_records=block_records)
+
+    args = (
+        jax.ShapeDtypeStruct((r, s), jnp.uint8),
+        jax.ShapeDtypeStruct((PATTERN_MAX,), jnp.uint8),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, args
+
+
+def make_wordcount_fn(r: int, s: int, *, buckets: int = DEFAULT_BUCKETS,
+                      block_records: int | None = None):
+    """Closed-shape jit-able entry for AOT lowering of the word-count graph.
+
+    Perf pass: the column loop (`S` iterations of rolling-hash state) runs
+    once per grid step, so the tile should cover the whole record axis —
+    ``block_records = r`` amortises the loop across every row at once and
+    widens the per-column vector ops (EXPERIMENTS.md §Perf L1).
+    """
+    if block_records is None:
+        block_records = min(r, 64)
+
+    def fn(chunk, nvalid):
+        return wordcount_chunk(chunk, nvalid, buckets=buckets,
+                               block_records=block_records)
+
+    args = (
+        jax.ShapeDtypeStruct((r, s), jnp.uint8),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, args
+
+
+def make_window_sum_fn(w: int, buckets: int = DEFAULT_BUCKETS):
+    """Closed-shape entry for the window aggregation graph."""
+    args = (jax.ShapeDtypeStruct((w, buckets), jnp.int32),)
+    return window_sum, args

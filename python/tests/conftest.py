@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make the build-time `compile` package importable regardless of pytest's cwd.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,66 @@
+"""AOT lowering: HLO-text artifacts + manifest the rust runtime consumes."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+class TestLowering:
+    @pytest.mark.parametrize("kind,r,s,extra", aot.QUICK_VARIANTS)
+    def test_variant_lowers_to_hlo_text(self, kind, r, s, extra):
+        lowered = aot.build_variant(kind, r, s, extra)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "entry_computation_layout" in text
+
+    def test_filter_variant_io_signature(self):
+        text = aot.to_hlo_text(aot.build_variant("filter", 64, 100,
+                                                 model.PATTERN_LEN))
+        # (chunk u8[64,100], pattern u8[16], nvalid s32) -> tuple of 3
+        assert "u8[64,100]" in text
+        assert f"u8[{model.PATTERN_MAX}]" in text
+        assert "s32[64]" in text
+
+    def test_wordcount_variant_io_signature(self):
+        text = aot.to_hlo_text(aot.build_variant("wordcount", 16, 2048, 8192))
+        assert "u8[16,2048]" in text
+        assert "s32[8192]" in text
+
+    def test_lowered_executes_like_eager(self):
+        """AOT-compiled filter variant == eager model on the same inputs."""
+        lowered = aot.build_variant("filter", 64, 100, model.PATTERN_LEN)
+        compiled = lowered.compile()
+        rng = np.random.default_rng(3)
+        chunk = rng.integers(97, 100, size=(64, 100), dtype=np.uint8)
+        pat = np.zeros(model.PATTERN_MAX, np.uint8)
+        pat[:2] = np.frombuffer(b"ab", np.uint8)
+        got = compiled(jnp.asarray(chunk), jnp.asarray(pat), jnp.int32(50))
+        want = model.filter_count_chunk(jnp.asarray(chunk), jnp.asarray(pat),
+                                        jnp.int32(50))
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+class TestManifest:
+    def test_quick_run_writes_manifest(self, tmp_path):
+        rc = aot.main(["--out-dir", str(tmp_path), "--quick"])
+        assert rc == 0
+        manifest = (tmp_path / aot.MANIFEST).read_text().strip().splitlines()
+        assert manifest[0].startswith("#")
+        rows = [l.split("\t") for l in manifest[1:]]
+        assert len(rows) == len(aot.QUICK_VARIANTS)
+        for name, kind, r, s, extra, fname in rows:
+            assert (tmp_path / fname).exists()
+            assert name == f"{kind}_r{r}_s{s}"
+            assert (tmp_path / fname).read_text().startswith("HloModule")
+
+    def test_variant_table_consistent(self):
+        # every quick variant is a shipped variant (rust runtime relies on it)
+        assert set(aot.QUICK_VARIANTS) <= set(aot.VARIANTS)
+        names = [f"{k}_r{r}_s{s}" for k, r, s, _ in aot.VARIANTS]
+        assert len(names) == len(set(names)), "duplicate variant names"

@@ -1,0 +1,130 @@
+"""Layer-1 filter kernel vs the pure-Python oracle.
+
+Hypothesis sweeps shapes, block sizes, pattern lengths and payload content;
+the deterministic cases pin the exact configurations the AOT variants ship.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import filter_count_pallas
+from compile.kernels.ref import ref_filter
+
+
+def run_kernel(chunk: np.ndarray, pattern: bytes, block_records: int) -> np.ndarray:
+    patbuf = np.zeros(16, np.uint8)
+    patbuf[: len(pattern)] = np.frombuffer(pattern, np.uint8)
+    out = filter_count_pallas(
+        jnp.asarray(chunk),
+        jnp.asarray(patbuf),
+        pattern_len=len(pattern),
+        block_records=block_records,
+    )
+    return np.asarray(out)
+
+
+def plant(chunk: np.ndarray, pattern: bytes, rows, col: int) -> None:
+    for r in rows:
+        chunk[r, col : col + len(pattern)] = np.frombuffer(pattern, np.uint8)
+
+
+class TestFilterBasics:
+    def test_no_match(self):
+        chunk = np.zeros((8, 100), np.uint8)
+        assert run_kernel(chunk, b"needle", 8).sum() == 0
+
+    def test_all_match(self):
+        chunk = np.zeros((8, 100), np.uint8)
+        plant(chunk, b"needle", range(8), 3)
+        assert run_kernel(chunk, b"needle", 8).sum() == 8
+
+    def test_match_at_start(self):
+        chunk = np.zeros((4, 100), np.uint8)
+        plant(chunk, b"abc", [1], 0)
+        np.testing.assert_array_equal(run_kernel(chunk, b"abc", 4), [0, 1, 0, 0])
+
+    def test_match_at_exact_end(self):
+        chunk = np.zeros((4, 100), np.uint8)
+        plant(chunk, b"xyz", [2], 97)  # last window position
+        np.testing.assert_array_equal(run_kernel(chunk, b"xyz", 4), [0, 0, 1, 0])
+
+    def test_partial_pattern_no_match(self):
+        chunk = np.zeros((2, 50), np.uint8)
+        chunk[0, 10:15] = np.frombuffer(b"needl", np.uint8)  # truncated needle
+        assert run_kernel(chunk, b"needle", 2).sum() == 0
+
+    def test_single_byte_pattern(self):
+        chunk = np.zeros((3, 20), np.uint8)
+        chunk[1, 19] = ord("q")
+        np.testing.assert_array_equal(run_kernel(chunk, b"q", 3), [0, 1, 0])
+
+    def test_pattern_spans_full_record(self):
+        s = 12
+        chunk = np.zeros((2, s), np.uint8)
+        pat = b"x" * s
+        chunk[0, :] = ord("x")
+        np.testing.assert_array_equal(run_kernel(chunk, pat, 2), [1, 0])
+
+    def test_rejects_oversized_pattern(self):
+        chunk = np.zeros((2, 4), np.uint8)
+        with pytest.raises(ValueError):
+            run_kernel(chunk, b"toolongpattern", 2)
+
+    def test_ragged_grid_tail_rows(self):
+        # R=37 with block 8 -> padded grid; padded rows must not leak flags.
+        chunk = np.zeros((37, 100), np.uint8)
+        plant(chunk, b"tail", [36], 50)
+        flags = run_kernel(chunk, b"tail", 8)
+        assert flags.shape == (37,)
+        assert flags[36] == 1 and flags[:36].sum() == 0
+
+    @pytest.mark.parametrize("r,s,block", [(64, 100, 64), (256, 100, 64),
+                                           (1024, 100, 64), (64, 2048, 64)])
+    def test_shipped_variant_shapes(self, r, s, block):
+        """Exactly the AOT variant shapes from compile/aot.py::VARIANTS."""
+        rng = np.random.default_rng(r + s)
+        chunk = rng.integers(0, 256, size=(r, s), dtype=np.uint8)
+        pattern = b"ZSneed"
+        plant(chunk, pattern, range(0, r, 7), s // 3)
+        np.testing.assert_array_equal(run_kernel(chunk, pattern, block),
+                                      ref_filter(chunk, pattern))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r=st.integers(1, 80),
+    s=st.integers(8, 160),
+    block=st.integers(1, 96),
+    plen=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filter_matches_oracle_random(r, s, block, plen, seed):
+    """Property: kernel == bytes-level `in` oracle on random payloads."""
+    plen = min(plen, s)
+    rng = np.random.default_rng(seed)
+    # Low-entropy alphabet so incidental matches actually happen.
+    chunk = rng.integers(97, 101, size=(r, s), dtype=np.uint8)
+    pattern = bytes(rng.integers(97, 101, size=plen, dtype=np.uint8).tolist())
+    np.testing.assert_array_equal(
+        run_kernel(chunk, pattern, block), ref_filter(chunk, pattern)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(4, 64),
+    col=st.integers(0, 60),
+    plen=st.integers(1, 6),
+)
+def test_filter_planted_always_found(s, col, plen):
+    """Property: a planted in-bounds needle is always flagged."""
+    plen = min(plen, s)
+    col = min(col, s - plen)
+    chunk = np.zeros((5, s), np.uint8)
+    pattern = bytes(range(200, 200 + plen))
+    plant(chunk, pattern, [3], col)
+    flags = run_kernel(chunk, pattern, 2)
+    assert flags[3] == 1

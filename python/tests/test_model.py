@@ -1,0 +1,112 @@
+"""Layer-2 model graphs: masking, reductions, window aggregation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import ref_filter, ref_wordcount_hist
+
+
+def mk_pattern(pattern: bytes) -> np.ndarray:
+    buf = np.zeros(model.PATTERN_MAX, np.uint8)
+    buf[: len(pattern)] = np.frombuffer(pattern, np.uint8)
+    return buf
+
+
+class TestFilterCountChunk:
+    def test_full_chunk(self):
+        chunk = np.zeros((8, 100), np.uint8)
+        chunk[2, 5:11] = np.frombuffer(b"needle", np.uint8)
+        flags, matches, records = model.filter_count_chunk(
+            jnp.asarray(chunk), jnp.asarray(mk_pattern(b"needle")), jnp.int32(8)
+        )
+        assert int(matches) == 1
+        assert int(records) == 8
+        assert np.asarray(flags)[2] == 1
+
+    def test_nvalid_masks_tail(self):
+        chunk = np.zeros((8, 100), np.uint8)
+        for r in (1, 6):  # 6 is past nvalid
+            chunk[r, 0:6] = np.frombuffer(b"needle", np.uint8)
+        flags, matches, records = model.filter_count_chunk(
+            jnp.asarray(chunk), jnp.asarray(mk_pattern(b"needle")), jnp.int32(4)
+        )
+        assert int(matches) == 1
+        assert int(records) == 4
+        assert np.asarray(flags)[6] == 0
+
+    def test_nvalid_zero(self):
+        chunk = np.full((4, 50), ord("a"), np.uint8)
+        _, matches, records = model.filter_count_chunk(
+            jnp.asarray(chunk), jnp.asarray(mk_pattern(b"aaa")), jnp.int32(0)
+        )
+        assert int(matches) == 0 and int(records) == 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(nvalid=st.integers(0, 16), seed=st.integers(0, 1000))
+    def test_matches_oracle_on_valid_prefix(self, nvalid, seed):
+        rng = np.random.default_rng(seed)
+        chunk = rng.integers(97, 100, size=(16, 40), dtype=np.uint8)
+        pattern = b"ab"
+        flags, matches, records = model.filter_count_chunk(
+            jnp.asarray(chunk), jnp.asarray(mk_pattern(pattern)),
+            jnp.int32(nvalid), pattern_len=len(pattern), block_records=8,
+        )
+        expect = ref_filter(chunk, pattern)
+        expect[nvalid:] = 0
+        np.testing.assert_array_equal(np.asarray(flags), expect)
+        assert int(matches) == expect.sum()
+        assert int(records) == nvalid
+
+
+class TestWordcountChunk:
+    def test_masking_drops_invalid_rows(self):
+        chunk = np.zeros((4, 32), np.uint8)
+        for i in range(4):
+            chunk[i, :5] = np.frombuffer(b"hello", np.uint8)
+        hist, total = model.wordcount_chunk(jnp.asarray(chunk), jnp.int32(2),
+                                            buckets=64, block_records=2)
+        assert int(total) == 2
+
+    def test_full_matches_oracle(self):
+        text = b"To be or not to be that is the Question"
+        chunk = np.zeros((2, 64), np.uint8)
+        chunk[0, : len(text)] = np.frombuffer(text, np.uint8)
+        chunk[1, :10] = np.frombuffer(b"question 1", np.uint8)
+        hist, total = model.wordcount_chunk(jnp.asarray(chunk), jnp.int32(2),
+                                            buckets=256, block_records=2)
+        np.testing.assert_array_equal(np.asarray(hist),
+                                      ref_wordcount_hist(chunk, 256))
+        assert int(total) == 12
+
+
+class TestWindowSum:
+    def test_sums_slides(self):
+        hists = np.arange(5 * 16, dtype=np.int32).reshape(5, 16)
+        (out,) = model.window_sum(jnp.asarray(hists))
+        np.testing.assert_array_equal(np.asarray(out), hists.sum(axis=0))
+
+    @settings(max_examples=10, deadline=None)
+    @given(w=st.integers(1, 8), b=st.integers(1, 64), seed=st.integers(0, 99))
+    def test_window_sum_property(self, w, b, seed):
+        rng = np.random.default_rng(seed)
+        hists = rng.integers(0, 100, size=(w, b)).astype(np.int32)
+        (out,) = model.window_sum(jnp.asarray(hists))
+        np.testing.assert_array_equal(np.asarray(out), hists.sum(axis=0))
+
+
+class TestMakeFns:
+    def test_filter_fn_shapes(self):
+        fn, args = model.make_filter_fn(64, 100)
+        assert args[0].shape == (64, 100)
+        assert args[1].shape == (model.PATTERN_MAX,)
+
+    def test_wordcount_fn_shapes(self):
+        fn, args = model.make_wordcount_fn(16, 2048)
+        assert args[0].shape == (16, 2048)
+
+    def test_window_fn_shapes(self):
+        fn, args = model.make_window_sum_fn(5, 8192)
+        assert args[0].shape == (5, 8192)

@@ -1,0 +1,111 @@
+"""Layer-1 word-count kernel vs the regex/bytes oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import wordcount_hist_pallas
+from compile.kernels.ref import ref_wordcount_hist, fnv1a
+
+
+def run_kernel(chunk: np.ndarray, buckets: int, block: int) -> np.ndarray:
+    return np.asarray(
+        wordcount_hist_pallas(jnp.asarray(chunk), buckets=buckets, block_records=block)
+    )
+
+
+def to_chunk(lines: list[bytes], s: int) -> np.ndarray:
+    chunk = np.zeros((len(lines), s), np.uint8)
+    for i, line in enumerate(lines):
+        data = line[:s]
+        chunk[i, : len(data)] = np.frombuffer(data, np.uint8)
+    return chunk
+
+
+class TestWordcountBasics:
+    def test_empty_chunk(self):
+        assert run_kernel(np.zeros((4, 32), np.uint8), 64, 2).sum() == 0
+
+    def test_single_word(self):
+        chunk = to_chunk([b"hello"], 32)
+        hist = run_kernel(chunk, 64, 1)
+        assert hist.sum() == 1
+        assert hist[fnv1a(b"hello") % 64] == 1
+
+    def test_case_folding(self):
+        hist = run_kernel(to_chunk([b"Word word WORD"], 32), 128, 1)
+        assert hist[fnv1a(b"word") % 128] == 3
+
+    def test_digits_are_token_chars(self):
+        hist = run_kernel(to_chunk([b"abc123 123"], 32), 256, 1)
+        assert hist[fnv1a(b"abc123") % 256] == 1
+        assert hist[fnv1a(b"123") % 256] == 1
+
+    def test_punctuation_splits(self):
+        hist = run_kernel(to_chunk([b"a-b_c.d,e"], 32), 256, 1)
+        assert hist.sum() == 5
+
+    def test_word_at_record_end_flushed(self):
+        # token runs into the record boundary: must still be counted
+        s = 8
+        chunk = to_chunk([b"xx yyyyy"], s)  # 'yyyyy' ends exactly at S
+        hist = run_kernel(chunk, 64, 1)
+        assert hist.sum() == 2
+        assert hist[fnv1a(b"yyyyy") % 64] == 1
+
+    def test_tokens_do_not_span_records(self):
+        chunk = to_chunk([b"abc", b"def"], 4)
+        hist = run_kernel(chunk, 64, 2)
+        assert hist[fnv1a(b"abc") % 64] == 1
+        assert hist[fnv1a(b"def") % 64] == 1
+        assert hist[fnv1a(b"abcdef") % 64] == 0
+
+    def test_high_bytes_are_separators(self):
+        chunk = to_chunk(["héllo wörld".encode("utf-8")], 32)
+        np.testing.assert_array_equal(run_kernel(chunk, 128, 1),
+                                      ref_wordcount_hist(chunk, 128))
+
+    def test_ragged_grid(self):
+        chunk = to_chunk([b"one two"] * 7, 16)  # 7 rows, block 4 -> padded tile
+        hist = run_kernel(chunk, 64, 4)
+        assert hist.sum() == 14
+
+    def test_shipped_variant_shapes(self):
+        # wordcount_r16_s2048 / r64, buckets 8192 (compile/aot.py::VARIANTS)
+        rng = np.random.default_rng(7)
+        text = (b"the quick brown Fox jumps over the lazy dog 42 " * 50)[:2048]
+        chunk = np.tile(np.frombuffer(text, np.uint8), (16, 1))
+        chunk[3, :] = rng.integers(0, 256, 2048, np.uint8)  # one noisy row
+        np.testing.assert_array_equal(run_kernel(chunk, 8192, 16),
+                                      ref_wordcount_hist(chunk, 8192))
+
+
+TEXTISH = st.binary(min_size=0, max_size=40).map(
+    lambda b: bytes(x % 128 for x in b)  # bias toward ASCII
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lines=st.lists(TEXTISH, min_size=1, max_size=8),
+    buckets=st.sampled_from([16, 64, 256, 8192]),
+    block=st.integers(1, 8),
+)
+def test_wordcount_matches_oracle_random(lines, buckets, block):
+    """Property: kernel histogram == regex-tokenise + FNV oracle."""
+    s = max(max((len(l) for l in lines), default=1), 1)
+    chunk = to_chunk(lines, s)
+    np.testing.assert_array_equal(
+        run_kernel(chunk, buckets, block), ref_wordcount_hist(chunk, buckets)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(words=st.lists(st.from_regex(rb"[a-z0-9]{1,6}", fullmatch=True),
+                      min_size=1, max_size=10))
+def test_total_token_count_is_word_count(words):
+    """Property: sum(hist) == number of tokens regardless of bucketing."""
+    line = b" ".join(words)
+    chunk = to_chunk([line], len(line) + 1)
+    assert run_kernel(chunk, 32, 1).sum() == len(words)

@@ -1,0 +1,11 @@
+//! Ablation benches beyond the paper's figures (DESIGN.md §4): push
+//! object-pool size, network profile, pull timeout, push fan-in, credit
+//! window.
+mod common;
+
+fn main() {
+    for spec in zettastream::experiments::ablations(common::bench_duration()) {
+        common::run(&spec);
+        println!();
+    }
+}

@@ -1,0 +1,38 @@
+//! Shared bench-harness plumbing (criterion is not in the offline vendor
+//! set; benches are plain `harness = false` binaries driven by `cargo
+//! bench`). Environment knobs:
+//!   ZETTA_BENCH_SECS   virtual seconds per row (default 30)
+//!   ZETTA_BENCH_QUICK  set to shrink the chunk sweep to {4,32,128} KiB
+use std::time::Instant;
+
+use zettastream::experiments::FigureSpec;
+
+pub fn bench_duration() -> u64 {
+    std::env::var("ZETTA_BENCH_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(12)
+}
+
+#[allow(dead_code)]
+pub fn chunk_sweep() -> Vec<usize> {
+    if std::env::var_os("ZETTA_BENCH_QUICK").is_some() {
+        vec![4, 32, 128]
+    } else {
+        zettastream::experiments::CHUNK_SIZES_KIB.to_vec()
+    }
+}
+
+/// Run a figure and report wall time + simulated-vs-wall speed.
+pub fn run(spec: &FigureSpec) {
+    let t0 = Instant::now();
+    let summaries = zettastream::experiments::run_figure(spec);
+    let wall = t0.elapsed().as_secs_f64();
+    let virtual_s: u64 = spec.rows.iter().map(|(_, c)| c.duration_secs).sum();
+    println!(
+        "-- {}: {} rows, {:.1}s wall for {}s virtual ({:.1}x real time), {} runs ok",
+        spec.id,
+        spec.rows.len(),
+        wall,
+        virtual_s,
+        virtual_s as f64 / wall.max(1e-9),
+        summaries.len()
+    );
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig4 series. See experiments::fig4 for the
+//! parameterisation and the expected shape.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig4(common::bench_duration(), &common::chunk_sweep());
+    common::run(&spec);
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig5 series. See experiments::fig5 for the
+//! parameterisation and the expected shape.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig5(common::bench_duration(), &common::chunk_sweep());
+    common::run(&spec);
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig6 series. See experiments::fig6 for the
+//! parameterisation and the expected shape.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig6(common::bench_duration(), &common::chunk_sweep());
+    common::run(&spec);
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig7 series. See experiments::fig7 for the
+//! parameterisation and the expected shape.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig7(common::bench_duration(), &common::chunk_sweep());
+    common::run(&spec);
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Fig. 8 series (small chunks, consumer CS = 8x).
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig8(common::bench_duration());
+    common::run(&spec);
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Fig. 9 series ((windowed) word count).
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::fig9(common::bench_duration());
+    common::run(&spec);
+}

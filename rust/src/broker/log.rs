@@ -1,0 +1,240 @@
+//! Partition log: segments of record-framed chunks (KerA-style storage).
+//!
+//! A partition is an append-only sequence of chunks grouped into fixed-size
+//! *segments* (the paper fixes the segment size to 8 MiB, §V-A). Offsets
+//! are chunk indices. Reads return consecutive chunks from an offset up to
+//! a byte budget — the pull path's per-partition `CS` and the push path's
+//! object capacity both map to that budget. Retention trims whole segments
+//! strictly below the consumers' progress watermark, bounding memory in
+//! real-data-plane runs.
+
+use std::collections::VecDeque;
+
+use crate::proto::{Chunk, ChunkOffset, PartitionId, StampedChunk};
+
+/// Default segment capacity — the paper's fixed 8 MiB.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 8 * 1024 * 1024;
+
+#[derive(Debug)]
+struct Segment {
+    /// Offset of the first chunk in this segment.
+    base: ChunkOffset,
+    chunks: Vec<Chunk>,
+    bytes: u64,
+    capacity: u64,
+}
+
+impl Segment {
+    fn new(base: ChunkOffset, capacity: u64) -> Self {
+        Segment { base, chunks: Vec::new(), bytes: 0, capacity }
+    }
+
+    fn end(&self) -> ChunkOffset {
+        self.base + self.chunks.len() as u64
+    }
+
+    fn has_room(&self, bytes: u64) -> bool {
+        self.chunks.is_empty() || self.bytes + bytes <= self.capacity
+    }
+}
+
+/// One partition's log.
+#[derive(Debug)]
+pub struct PartitionLog {
+    pub id: PartitionId,
+    segments: VecDeque<Segment>,
+    segment_bytes: u64,
+    /// First retained offset (everything below was trimmed).
+    start: ChunkOffset,
+    /// Next offset to be assigned.
+    head: ChunkOffset,
+    total_appended_bytes: u64,
+    total_appended_records: u64,
+    sealed_segments: u64,
+}
+
+impl PartitionLog {
+    pub fn new(id: PartitionId, segment_bytes: u64) -> Self {
+        assert!(segment_bytes > 0);
+        Self {
+            id,
+            segments: VecDeque::new(),
+            segment_bytes,
+            start: 0,
+            head: 0,
+            total_appended_bytes: 0,
+            total_appended_records: 0,
+            sealed_segments: 0,
+        }
+    }
+
+    /// Append one sealed chunk; returns its offset.
+    pub fn append(&mut self, chunk: Chunk) -> ChunkOffset {
+        let bytes = chunk.bytes();
+        let records = chunk.records as u64;
+        let needs_new = match self.segments.back() {
+            Some(seg) => !seg.has_room(bytes),
+            None => true,
+        };
+        if needs_new {
+            if self.segments.back().is_some() {
+                self.sealed_segments += 1;
+            }
+            self.segments.push_back(Segment::new(self.head, self.segment_bytes));
+        }
+        let seg = self.segments.back_mut().expect("just ensured");
+        seg.chunks.push(chunk);
+        seg.bytes += bytes;
+        let offset = self.head;
+        self.head += 1;
+        self.total_appended_bytes += bytes;
+        self.total_appended_records += records;
+        offset
+    }
+
+    /// Next offset to be written (== number of chunks ever appended).
+    pub fn head(&self) -> ChunkOffset {
+        self.head
+    }
+
+    /// Oldest retained offset.
+    pub fn start(&self) -> ChunkOffset {
+        self.start
+    }
+
+    /// Chunks available at or past `offset`.
+    pub fn available_from(&self, offset: ChunkOffset) -> u64 {
+        self.head.saturating_sub(offset.max(self.start))
+    }
+
+    fn chunk_at(&self, offset: ChunkOffset) -> Option<&Chunk> {
+        if offset < self.start || offset >= self.head {
+            return None;
+        }
+        // Segments are contiguous; binary-search by base.
+        let idx = self
+            .segments
+            .partition_point(|seg| seg.end() <= offset)
+            .min(self.segments.len().saturating_sub(1));
+        let seg = self.segments.get(idx)?;
+        if offset < seg.base {
+            return None;
+        }
+        seg.chunks.get((offset - seg.base) as usize)
+    }
+
+    /// Read consecutive chunks from `offset`, stopping when the cumulative
+    /// payload would exceed `max_bytes` (always returns at least one chunk
+    /// if any is available — the paper's consumers always make progress).
+    ///
+    /// Returns an error if `offset` was already trimmed (a slow consumer
+    /// fell behind retention — surfaced, not papered over).
+    pub fn read_from(
+        &self,
+        offset: ChunkOffset,
+        max_bytes: u64,
+    ) -> Result<Vec<StampedChunk>, TrimmedError> {
+        if offset < self.start {
+            return Err(TrimmedError { requested: offset, start: self.start });
+        }
+        let mut out = Vec::new();
+        let mut budget = max_bytes;
+        let mut at = offset;
+        while at < self.head {
+            let chunk = self.chunk_at(at).expect("offset in [start, head)");
+            let bytes = chunk.bytes();
+            if !out.is_empty() && bytes > budget {
+                break;
+            }
+            out.push(StampedChunk { partition: self.id, offset: at, chunk: chunk.clone() });
+            budget = budget.saturating_sub(bytes);
+            at += 1;
+            if budget == 0 {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Cost-model peek: `(chunks, bytes)` a `read_from(offset, max_bytes)`
+    /// would return, without cloning anything. Keeps the broker's
+    /// service-time estimation off the allocator (hot on the pull path).
+    pub fn peek_from(&self, offset: ChunkOffset, max_bytes: u64) -> (u64, u64) {
+        if offset < self.start {
+            return (0, 0);
+        }
+        let mut chunks = 0u64;
+        let mut bytes = 0u64;
+        let mut budget = max_bytes;
+        let mut at = offset;
+        while at < self.head {
+            let chunk = self.chunk_at(at).expect("offset in [start, head)");
+            let b = chunk.bytes();
+            if chunks > 0 && b > budget {
+                break;
+            }
+            chunks += 1;
+            bytes += b;
+            budget = budget.saturating_sub(b);
+            at += 1;
+            if budget == 0 {
+                break;
+            }
+        }
+        (chunks, bytes)
+    }
+
+    /// Drop whole segments strictly below `watermark` (all consumers have
+    /// passed them). Returns bytes reclaimed.
+    pub fn trim_below(&mut self, watermark: ChunkOffset) -> u64 {
+        let mut reclaimed = 0;
+        while let Some(front) = self.segments.front() {
+            // Only fully-consumed, fully-sealed (non-tail) segments go.
+            if front.end() <= watermark && self.segments.len() > 1 {
+                let seg = self.segments.pop_front().expect("peeked");
+                reclaimed += seg.bytes;
+                self.start = seg.end();
+            } else {
+                break;
+            }
+        }
+        reclaimed
+    }
+
+    /// Bytes currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Segments currently resident.
+    pub fn resident_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn total_appended_bytes(&self) -> u64 {
+        self.total_appended_bytes
+    }
+
+    pub fn total_appended_records(&self) -> u64 {
+        self.total_appended_records
+    }
+}
+
+/// Read below retention: the consumer lost data to trimming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrimmedError {
+    pub requested: ChunkOffset,
+    pub start: ChunkOffset,
+}
+
+impl std::fmt::Display for TrimmedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "offset {} below retained start {} (trimmed)",
+            self.requested, self.start
+        )
+    }
+}
+
+impl std::error::Error for TrimmedError {}

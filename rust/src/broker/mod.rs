@@ -1,0 +1,577 @@
+//! The KerA-like streaming storage broker.
+//!
+//! §IV-A: "a broker is configured with one dispatcher thread (one CPU core)
+//! polling the network and responsible for serving RPC requests and
+//! multiple working threads that do the actual writes and reads to data
+//! stream partitions." Exactly that, as a DES actor:
+//!
+//! * every incoming RPC first occupies the **dispatcher** ([`CorePool`] of
+//!   one) for `dispatch_ns` — the single-core frontend the paper (via
+//!   RAMCloud/Arachne) identifies as the low-latency bottleneck;
+//! * the handler then occupies a **worker core** (pool of `NBc`, or
+//!   `NBc - push_threads` when a push thread is dedicated) for the
+//!   byte-proportional append/read service time — here producer and pull
+//!   RPCs *compete*, which is the paper's central interference effect;
+//! * with `Replication = 2` an append is acked only after a nested
+//!   replicate RPC to the backup broker round-trips (§V-C Fig. 3);
+//! * the **push path** (§IV-B) runs on dedicated push threads: one
+//!   subscription RPC registers sources, then each free push thread picks
+//!   a runnable subscription round-robin, fills a free shared object with
+//!   the next chunks of one partition, seals it and notifies the source.
+//!   Backpressure is object exhaustion (plasma), not RPC pacing.
+
+mod log;
+#[cfg(test)]
+mod tests;
+
+pub use log::{PartitionLog, TrimmedError, DEFAULT_SEGMENT_BYTES};
+
+use std::collections::HashMap;
+
+use crate::config::CostModel;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::{NodeId, SharedNetwork};
+use crate::plasma::SharedStore;
+use crate::proto::{
+    Chunk, ChunkOffset, Msg, ObjectId, PartitionId, RpcEnvelope, RpcId, RpcKind, RpcReply,
+    RpcRequest, StampedChunk, SubId,
+};
+use crate::sim::{Actor, ActorId, CorePool, Ctx, Job, Time};
+
+/// Job-tag phases (tag = ctx_id * 8 + phase).
+const PH_DISPATCH: u64 = 0;
+const PH_WORK: u64 = 1;
+const PH_PUSH: u64 = 2;
+
+/// Static broker wiring.
+#[derive(Debug, Clone)]
+pub struct BrokerParams {
+    /// Node this broker lives on.
+    pub node: NodeId,
+    /// `NBc` minus any dedicated push threads.
+    pub worker_cores: usize,
+    /// Dedicated push threads (0 in pull-only deployments; the paper uses 1).
+    pub push_threads: usize,
+    /// Segment capacity (8 MiB in the paper).
+    pub segment_bytes: u64,
+    /// Partitions this broker hosts.
+    pub partitions: Vec<PartitionId>,
+    /// Backup broker's actor id (replication target), if replication = 2.
+    pub backup: Option<(ActorId, NodeId)>,
+    /// True for the backup broker itself (serves only Replicate RPCs).
+    pub is_backup: bool,
+    pub cost: CostModel,
+}
+
+/// In-flight RPC context.
+#[derive(Debug)]
+struct RpcCtx {
+    req: RpcRequest,
+    /// Result staged by the work phase, sent after the handler completes.
+    staged: Option<RpcReply>,
+    /// Bytes the reply carries on the wire (pull data).
+    reply_bytes: u64,
+}
+
+/// In-flight push fill: content gathered at job start, sealed at job end.
+#[derive(Debug)]
+struct FillCtx {
+    object: ObjectId,
+    content: Vec<StampedChunk>,
+}
+
+/// The broker actor.
+pub struct Broker {
+    params: BrokerParams,
+    dispatcher: CorePool,
+    workers: CorePool,
+    push_pool: CorePool,
+    logs: HashMap<PartitionId, PartitionLog>,
+    /// Consumer progress per partition (for retention trimming).
+    watermarks: HashMap<PartitionId, ChunkOffset>,
+    ctxs: HashMap<u64, RpcCtx>,
+    fills: HashMap<u64, FillCtx>,
+    next_ctx: u64,
+    /// Appends waiting for a backup ack: replicate-rpc-id -> append ctx id.
+    awaiting_backup: HashMap<RpcId, u64>,
+    next_client_rpc: RpcId,
+    /// Subscriptions in round-robin order for push scheduling.
+    push_ring: Vec<SubId>,
+    push_rr: usize,
+    net: SharedNetwork,
+    store: SharedStore,
+    metrics: SharedMetrics,
+    /// Entity id for metrics gauges (broker index).
+    entity: usize,
+    trimmed_bytes: u64,
+    /// Retention scans are throttled: consumer progress advances every
+    /// read, but segments (8 MiB) only complete every many chunks, so
+    /// scanning on each read is pure overhead (perf pass, EXPERIMENTS.md
+    /// §Perf).
+    trim_tick: u32,
+}
+
+impl Broker {
+    pub fn new(
+        params: BrokerParams,
+        net: SharedNetwork,
+        store: SharedStore,
+        metrics: SharedMetrics,
+        entity: usize,
+    ) -> Self {
+        assert!(params.worker_cores > 0, "broker needs at least one worker core");
+        let logs = params
+            .partitions
+            .iter()
+            .map(|&p| (p, PartitionLog::new(p, params.segment_bytes)))
+            .collect();
+        Self {
+            dispatcher: CorePool::new(1),
+            workers: CorePool::new(params.worker_cores),
+            push_pool: CorePool::new(params.push_threads.max(1)),
+            // a pool must have >= 1 core; gate use on params.push_threads
+            logs,
+            watermarks: HashMap::new(),
+            ctxs: HashMap::new(),
+            fills: HashMap::new(),
+            next_ctx: 0,
+            awaiting_backup: HashMap::new(),
+            next_client_rpc: 0,
+            push_ring: Vec::new(),
+            push_rr: 0,
+            net,
+            store,
+            metrics,
+            entity,
+            trimmed_bytes: 0,
+            trim_tick: 0,
+            params,
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // Frontend: dispatcher -> worker phases
+    // ---------------------------------------------------------------------
+
+    fn on_rpc(&mut self, req: RpcRequest, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_ctx;
+        self.next_ctx += 1;
+        self.ctxs.insert(id, RpcCtx { req, staged: None, reply_bytes: 0 });
+        let job = Job { cost: self.params.cost.dispatch_ns, tag: id * 8 + PH_DISPATCH };
+        if let Some(started) = self.dispatcher.submit(ctx.now(), job) {
+            ctx.send_self_in(started.cost, Msg::JobDone(started.tag));
+        }
+    }
+
+    fn work_cost(&self, kind: &RpcKind) -> Time {
+        let c = &self.params.cost;
+        match kind {
+            RpcKind::Append { chunks } => {
+                let bytes: u64 = chunks.iter().map(|(_, ch)| ch.bytes()).sum();
+                c.rpc_base_ns + chunks.len() as Time * c.append_chunk_ns
+                    + (bytes as f64 / c.append_bw_bps * 1e9) as Time
+            }
+            RpcKind::Pull { assignments, max_bytes } => {
+                // Service time is proportional to what the read will return;
+                // peek the logs without cloning (state reads are free, the
+                // time is charged here; the clone happens once, in do_pull).
+                let mut bytes = 0u64;
+                let mut chunks = 0u64;
+                for &(p, off) in assignments {
+                    if let Some(log) = self.logs.get(&p) {
+                        let (ch, by) = log.peek_from(off, *max_bytes);
+                        chunks += ch;
+                        bytes += by;
+                    }
+                }
+                c.rpc_base_ns + c.read_cost(bytes, chunks)
+            }
+            RpcKind::PushSubscribe { sources } => {
+                c.rpc_base_ns + sources.len() as Time * c.rpc_base_ns
+            }
+            RpcKind::Replicate { bytes, chunks } => {
+                c.rpc_base_ns + *chunks as Time * c.append_chunk_ns
+                    + (*bytes as f64 / c.append_bw_bps * 1e9) as Time
+            }
+        }
+    }
+
+    fn on_dispatched(&mut self, id: u64, ctx: &mut Ctx<'_, Msg>) {
+        let cost = {
+            let rpc_ctx = self.ctxs.get(&id).expect("ctx alive through dispatch");
+            self.work_cost(&rpc_ctx.req.kind)
+        };
+        let job = Job { cost, tag: id * 8 + PH_WORK };
+        if let Some(started) = self.workers.submit(ctx.now(), job) {
+            ctx.send_self_in(started.cost, Msg::JobDone(started.tag));
+        }
+    }
+
+    fn on_worked(&mut self, id: u64, ctx: &mut Ctx<'_, Msg>) {
+        let mut rpc_ctx = self.ctxs.remove(&id).expect("ctx alive through work");
+        let kind = rpc_ctx.req.kind.clone();
+        match kind {
+            RpcKind::Append { chunks } => self.finish_append(id, rpc_ctx, chunks, ctx),
+            RpcKind::Pull { assignments, max_bytes } => {
+                let reply = self.do_pull(&assignments, max_bytes);
+                if let RpcReply::PullData { chunks } = &reply {
+                    rpc_ctx.reply_bytes = chunks.iter().map(|s| s.chunk.bytes()).sum();
+                    self.metrics.borrow_mut().record(
+                        Class::ConsumerBytes,
+                        self.entity,
+                        ctx.now(),
+                        rpc_ctx.reply_bytes,
+                    );
+                }
+                rpc_ctx.staged = Some(reply);
+                self.reply(rpc_ctx, ctx);
+            }
+            RpcKind::PushSubscribe { sources } => {
+                let reply = self.do_subscribe(&sources);
+                rpc_ctx.staged = Some(reply);
+                self.reply(rpc_ctx, ctx);
+                self.schedule_push(ctx);
+            }
+            RpcKind::Replicate { .. } => {
+                rpc_ctx.staged = Some(RpcReply::ReplicateAck);
+                self.reply(rpc_ctx, ctx);
+            }
+        }
+    }
+
+    /// Append chunks to partition logs; ack immediately (replication = 1)
+    /// or hold for the backup round-trip (replication = 2).
+    fn finish_append(
+        &mut self,
+        id: u64,
+        mut rpc_ctx: RpcCtx,
+        chunks: Vec<(PartitionId, Chunk)>,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        let mut records = 0u64;
+        let mut bytes = 0u64;
+        let nchunks = chunks.len() as u32;
+        for (p, chunk) in chunks {
+            records += chunk.records as u64;
+            bytes += chunk.bytes();
+            match self.logs.get_mut(&p) {
+                Some(log) => {
+                    log.append(chunk);
+                }
+                None => {
+                    rpc_ctx.staged =
+                        Some(RpcReply::Error { reason: format!("unknown partition {p}") });
+                    self.reply(rpc_ctx, ctx);
+                    return;
+                }
+            }
+        }
+        self.metrics
+            .borrow_mut()
+            .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
+        rpc_ctx.staged = Some(RpcReply::AppendAck { records, bytes });
+
+        if let Some((backup_actor, backup_node)) = self.params.backup {
+            // Nested replicate RPC; the producer's ack waits for it.
+            let rid = self.next_client_rpc;
+            self.next_client_rpc += 1;
+            self.awaiting_backup.insert(rid, id);
+            self.ctxs.insert(id, rpc_ctx);
+            let deliver = self.net.borrow_mut().send(
+                ctx.now(),
+                self.params.node,
+                backup_node,
+                bytes,
+            );
+            ctx.send_at(
+                deliver,
+                backup_actor,
+                Msg::Rpc(RpcRequest {
+                    id: rid,
+                    reply_to: ctx.self_id(),
+                    from_node: self.params.node,
+                    kind: RpcKind::Replicate { bytes, chunks: nchunks },
+                }),
+            );
+        } else {
+            self.reply(rpc_ctx, ctx);
+        }
+        // New data may unblock push subscriptions.
+        self.schedule_push(ctx);
+    }
+
+    fn do_pull(&mut self, assignments: &[(PartitionId, ChunkOffset)], max_bytes: u64) -> RpcReply {
+        let mut out = Vec::new();
+        for &(p, off) in assignments {
+            let Some(log) = self.logs.get(&p) else {
+                return RpcReply::Error { reason: format!("unknown partition {p}") };
+            };
+            match log.read_from(off, max_bytes) {
+                Ok(mut chunks) => out.append(&mut chunks),
+                Err(e) => return RpcReply::Error { reason: e.to_string() },
+            }
+            // Progress watermark feeds retention trimming.
+            let w = self.watermarks.entry(p).or_insert(0);
+            *w = (*w).max(off);
+        }
+        self.trim();
+        RpcReply::PullData { chunks: out }
+    }
+
+    fn do_subscribe(&mut self, sources: &[crate::proto::PushSourceSpec]) -> RpcReply {
+        let mut first = None;
+        for spec in sources {
+            for &(p, _) in &spec.assignments {
+                if !self.logs.contains_key(&p) {
+                    return RpcReply::Error { reason: format!("unknown partition {p}") };
+                }
+            }
+            let sub = self.store.borrow_mut().create_subscription(
+                spec.source_actor,
+                spec.assignments.clone(),
+                spec.objects,
+                spec.object_bytes,
+            );
+            self.push_ring.push(sub);
+            first.get_or_insert(sub);
+        }
+        RpcReply::SubscribeAck { sub: first.unwrap_or(SubId(0)) }
+    }
+
+    /// Send the staged reply back over the network.
+    fn reply(&mut self, rpc_ctx: RpcCtx, ctx: &mut Ctx<'_, Msg>) {
+        let reply = rpc_ctx.staged.expect("reply staged before send");
+        let to_node = rpc_ctx.req.from_node;
+        let deliver = if rpc_ctx.reply_bytes > 0 {
+            self.net
+                .borrow_mut()
+                .send(ctx.now(), self.params.node, to_node, rpc_ctx.reply_bytes)
+        } else {
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, to_node)
+        };
+        ctx.send_at(
+            deliver,
+            rpc_ctx.req.reply_to,
+            Msg::Reply(RpcEnvelope { id: rpc_ctx.req.id, reply }),
+        );
+    }
+
+    /// Backup acked a replicate: release the held producer append.
+    fn on_backup_ack(&mut self, rid: RpcId, ctx: &mut Ctx<'_, Msg>) {
+        let id = self
+            .awaiting_backup
+            .remove(&rid)
+            .expect("replicate ack matches a held append");
+        let rpc_ctx = self.ctxs.remove(&id).expect("held append ctx");
+        self.reply(rpc_ctx, ctx);
+    }
+
+    // ---------------------------------------------------------------------
+    // Push path (dedicated threads)
+    // ---------------------------------------------------------------------
+
+    /// Try to start fills on idle push threads. A subscription is runnable
+    /// if it has a free object AND unconsumed chunks on some partition.
+    fn schedule_push(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.params.push_threads == 0 || self.push_ring.is_empty() {
+            return;
+        }
+        loop {
+            if self.push_pool.busy() >= self.params.push_threads {
+                return; // all dedicated threads occupied
+            }
+            let Some(fill) = self.gather_next_fill() else {
+                return; // nothing runnable anywhere
+            };
+            let bytes: u64 = fill.content.iter().map(|s| s.chunk.bytes()).sum();
+            let records: u64 = fill.content.iter().map(|s| s.chunk.records as u64).sum();
+            let cost = self.params.cost.push_fill_cost(bytes, records);
+            let id = self.next_ctx;
+            self.next_ctx += 1;
+            self.fills.insert(id, fill);
+            let job = Job { cost, tag: id * 8 + PH_PUSH };
+            if let Some(started) = self.push_pool.submit(ctx.now(), job) {
+                ctx.send_self_in(started.cost, Msg::JobDone(started.tag));
+            }
+        }
+    }
+
+    /// Round-robin over subscriptions, then over a subscription's
+    /// partitions; acquire an object and stage the chunks it will carry.
+    fn gather_next_fill(&mut self) -> Option<FillCtx> {
+        let mut store = self.store.borrow_mut();
+        let nsubs = store.num_subscriptions();
+        for i in 0..nsubs {
+            let ring_idx = (self.push_rr + i) % self.push_ring.len();
+            let sub = self.push_ring[ring_idx];
+            if !store.has_free(sub) {
+                continue;
+            }
+            // Find a partition of this sub with data at its cursor.
+            let (nparts, rr0) = {
+                let s = store.subscription(sub);
+                (s.cursors.len(), s.rr_next)
+            };
+            let mut chosen: Option<(usize, PartitionId, ChunkOffset)> = None;
+            for j in 0..nparts {
+                let k = (rr0 + j) % nparts;
+                let (p, off) = store.subscription(sub).cursors[k];
+                let avail = self.logs.get(&p).map(|l| l.available_from(off)).unwrap_or(0);
+                if avail > 0 {
+                    chosen = Some((k, p, off));
+                    break;
+                }
+            }
+            let Some((k, p, off)) = chosen else { continue };
+            let object = store.acquire(sub).expect("has_free checked");
+            let capacity = store.capacity(object);
+            let content = self
+                .logs
+                .get(&p)
+                .expect("partition hosted here")
+                .read_from(off, capacity)
+                .expect("cursor is broker-managed, never below retention");
+            debug_assert!(!content.is_empty());
+            // Advance the broker-managed cursor & rr pointers now: the next
+            // fill (possibly concurrent on another push thread) must not
+            // re-send these chunks.
+            {
+                let s = store.subscription_mut(sub);
+                s.cursors[k].1 = off + content.len() as u64;
+                s.rr_next = (k + 1) % nparts;
+            }
+            let w = self.watermarks.entry(p).or_insert(0);
+            *w = (*w).max(off);
+            self.push_rr = (ring_idx + 1) % self.push_ring.len();
+            drop(store);
+            self.trim();
+            return Some(FillCtx { object, content });
+        }
+        None
+    }
+
+    /// A push thread finished copying: seal, notify the source, refill.
+    fn on_fill_done(&mut self, id: u64, ctx: &mut Ctx<'_, Msg>) {
+        let fill = self.fills.remove(&id).expect("fill ctx alive");
+        let bytes: u64 = fill.content.iter().map(|s| s.chunk.bytes()).sum();
+        let source = {
+            let mut store = self.store.borrow_mut();
+            store.seal(fill.object, fill.content);
+            store.subscription(fill.object.sub).source_actor
+        };
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.record(Class::ObjectsFilled, self.entity, ctx.now(), 1);
+            m.record(Class::ConsumerBytes, self.entity, ctx.now(), bytes);
+        }
+        // Step 3: notify the colocated source through the store.
+        ctx.send_in(self.params.cost.notify_ns, source, Msg::ObjectReady { id: fill.object });
+    }
+
+    /// Retention: trim below the slowest consumer's progress. Throttled —
+    /// a full scan every 64 reads is far more often than segments seal.
+    fn trim(&mut self) {
+        self.trim_tick = self.trim_tick.wrapping_add(1);
+        if self.trim_tick % 64 != 0 {
+            return;
+        }
+        // Push cursors also hold back retention.
+        let store = self.store.borrow();
+        for (&p, log) in self.logs.iter_mut() {
+            let mut watermark = *self.watermarks.get(&p).unwrap_or(&0);
+            for sub in store.subscriptions() {
+                for &(sp, off) in &sub.cursors {
+                    if sp == p {
+                        watermark = watermark.min(off);
+                    }
+                }
+            }
+            self.trimmed_bytes += log.trim_below(watermark);
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // Introspection for the launcher / tests
+    // ---------------------------------------------------------------------
+
+    pub fn partition(&self, p: PartitionId) -> Option<&PartitionLog> {
+        self.logs.get(&p)
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.logs.values().map(|l| l.resident_bytes()).sum()
+    }
+
+    pub fn trimmed_bytes(&self) -> u64 {
+        self.trimmed_bytes
+    }
+
+    /// End-of-run utilisation gauges.
+    pub fn export_gauges(&mut self, now: Time, prefix: &str) {
+        let d = self.dispatcher.utilization(now);
+        let w = self.workers.utilization(now);
+        let p = self.push_pool.utilization(now);
+        let mut m = self.metrics.borrow_mut();
+        m.set_gauge(format!("{prefix}.dispatcher_util"), d);
+        m.set_gauge(format!("{prefix}.worker_util"), w);
+        if self.params.push_threads > 0 {
+            m.set_gauge(format!("{prefix}.push_util"), p);
+        }
+        m.set_gauge(format!("{prefix}.worker_queue_peak"), self.workers.queue_peak() as f64);
+    }
+}
+
+impl Actor<Msg> for Broker {
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Rpc(req) => self.on_rpc(req, ctx),
+            Msg::JobDone(tag) => {
+                let (id, phase) = (tag / 8, tag % 8);
+                match phase {
+                    PH_DISPATCH => {
+                        self.on_dispatched(id, ctx);
+                        if let Some(next) = self.dispatcher.on_complete(ctx.now()) {
+                            ctx.send_self_in(next.cost, Msg::JobDone(next.tag));
+                        }
+                    }
+                    PH_WORK => {
+                        self.on_worked(id, ctx);
+                        if let Some(next) = self.workers.on_complete(ctx.now()) {
+                            ctx.send_self_in(next.cost, Msg::JobDone(next.tag));
+                        }
+                    }
+                    PH_PUSH => {
+                        self.on_fill_done(id, ctx);
+                        if let Some(next) = self.push_pool.on_complete(ctx.now()) {
+                            ctx.send_self_in(next.cost, Msg::JobDone(next.tag));
+                        }
+                        self.schedule_push(ctx);
+                    }
+                    _ => unreachable!("unknown phase {phase}"),
+                }
+            }
+            Msg::Reply(env) => self.on_backup_ack(env.id, ctx),
+            // Step 4: a source released an object — its buffer is free again.
+            Msg::ObjectFreed { id } => {
+                self.store.borrow_mut().release(id);
+                self.schedule_push(ctx);
+            }
+            Msg::DataAvailable => self.schedule_push(ctx),
+            other => panic!("broker {}: unexpected {:?}", self.entity, other),
+        }
+    }
+
+    fn label(&self) -> String {
+        if self.params.is_backup {
+            format!("backup-broker#{}", self.entity)
+        } else {
+            format!("broker#{}", self.entity)
+        }
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

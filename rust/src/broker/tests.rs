@@ -1,0 +1,524 @@
+//! Broker unit tests: log mechanics + RPC frontend behaviour via a scripted
+//! client actor.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::*;
+use crate::config::NetworkProfile;
+use crate::metrics::MetricsHub;
+use crate::net::Network;
+use crate::plasma::ObjectStore;
+use crate::proto::*;
+use crate::sim::{Actor, ActorId, Ctx, Engine, MICROS, SECOND};
+
+mod log_tests {
+    use super::*;
+    use crate::broker::log::PartitionLog;
+
+    fn log_with(chunks: usize, records: u32, rec_size: u32, seg_bytes: u64) -> PartitionLog {
+        let mut log = PartitionLog::new(PartitionId(0), seg_bytes);
+        for _ in 0..chunks {
+            log.append(Chunk::sim(records, rec_size));
+        }
+        log
+    }
+
+    #[test]
+    fn append_assigns_sequential_offsets() {
+        let mut log = PartitionLog::new(PartitionId(0), 1024);
+        assert_eq!(log.append(Chunk::sim(1, 10)), 0);
+        assert_eq!(log.append(Chunk::sim(1, 10)), 1);
+        assert_eq!(log.head(), 2);
+        assert_eq!(log.total_appended_records(), 2);
+        assert_eq!(log.total_appended_bytes(), 20);
+    }
+
+    #[test]
+    fn segments_roll_at_capacity() {
+        // 100-byte chunks into 256-byte segments: 2 per segment
+        let log = log_with(5, 1, 100, 256);
+        assert_eq!(log.resident_segments(), 3);
+    }
+
+    #[test]
+    fn oversized_chunk_gets_own_segment() {
+        let mut log = PartitionLog::new(PartitionId(0), 64);
+        log.append(Chunk::sim(1, 100)); // bigger than a segment: allowed alone
+        log.append(Chunk::sim(1, 100));
+        assert_eq!(log.resident_segments(), 2);
+    }
+
+    #[test]
+    fn read_respects_byte_budget() {
+        let log = log_with(10, 10, 10, 1 << 20); // 100-byte chunks
+        let got = log.read_from(0, 250).unwrap();
+        assert_eq!(got.len(), 2, "two whole chunks fit 250 bytes, third does not");
+        assert_eq!(got[0].offset, 0);
+        assert_eq!(got[1].offset, 1);
+    }
+
+    #[test]
+    fn read_returns_at_least_one_chunk() {
+        let log = log_with(3, 10, 10, 1 << 20);
+        let got = log.read_from(1, 1).unwrap(); // budget smaller than a chunk
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].offset, 1);
+    }
+
+    #[test]
+    fn read_at_head_is_empty() {
+        let log = log_with(3, 1, 10, 1 << 20);
+        assert!(log.read_from(3, 1024).unwrap().is_empty());
+        assert_eq!(log.available_from(3), 0);
+        assert_eq!(log.available_from(1), 2);
+    }
+
+    #[test]
+    fn trim_drops_whole_consumed_segments() {
+        let mut log = log_with(6, 1, 100, 200); // 2 chunks per segment
+        let reclaimed = log.trim_below(3); // chunks 0,1 in segment 0: below 3
+        assert_eq!(reclaimed, 200);
+        assert_eq!(log.start(), 2);
+        assert!(log.read_from(1, 100).is_err(), "trimmed offsets error");
+        let ok = log.read_from(2, 1000).unwrap();
+        assert_eq!(ok.first().unwrap().offset, 2);
+    }
+
+    #[test]
+    fn trim_never_drops_the_tail_segment() {
+        let mut log = log_with(2, 1, 100, 200); // both chunks in one segment
+        assert_eq!(log.trim_below(100), 0);
+        assert_eq!(log.resident_segments(), 1);
+    }
+
+    #[test]
+    fn trimmed_error_is_descriptive() {
+        let mut log = log_with(6, 1, 100, 200);
+        log.trim_below(4);
+        let err = log.read_from(0, 100).unwrap_err();
+        assert_eq!(err.start, 4);
+        assert!(err.to_string().contains("trimmed"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Actor-level tests with a scripted client
+// ---------------------------------------------------------------------------
+
+type Inbox = Rc<RefCell<Vec<(u64, Msg)>>>;
+
+/// Test client: forwards scripted requests, logs every delivery (time, msg).
+struct Probe {
+    inbox: Inbox,
+}
+
+impl Actor<Msg> for Probe {
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        self.inbox.borrow_mut().push((ctx.now(), msg));
+    }
+}
+
+struct Rig {
+    engine: Engine<Msg>,
+    broker: ActorId,
+    probe: ActorId,
+    inbox: Inbox,
+    store: crate::plasma::SharedStore,
+    metrics: crate::metrics::SharedMetrics,
+}
+
+fn rig(params_fn: impl FnOnce(&mut BrokerParams)) -> Rig {
+    let mut engine = Engine::new(7);
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let store = ObjectStore::shared();
+    let metrics = MetricsHub::shared();
+    let mut params = BrokerParams {
+        node: 0,
+        worker_cores: 4,
+        push_threads: 1,
+        segment_bytes: 8 * 1024 * 1024,
+        partitions: (0..4).map(PartitionId).collect(),
+        backup: None,
+        is_backup: false,
+        cost: Default::default(),
+    };
+    params_fn(&mut params);
+    let broker = engine.add_actor(Box::new(Broker::new(
+        params,
+        net,
+        store.clone(),
+        metrics.clone(),
+        0,
+    )));
+    let inbox: Inbox = Rc::new(RefCell::new(Vec::new()));
+    let probe = engine.add_actor(Box::new(Probe { inbox: inbox.clone() }));
+    Rig { engine, broker, probe, inbox, store, metrics }
+}
+
+fn append_req(rig: &Rig, id: RpcId, parts: &[usize], records: u32, rec_size: u32) -> Msg {
+    Msg::Rpc(RpcRequest {
+        id,
+        reply_to: rig.probe,
+        from_node: 1,
+        kind: RpcKind::Append {
+            chunks: parts
+                .iter()
+                .map(|&p| (PartitionId(p), Chunk::sim(records, rec_size)))
+                .collect(),
+        },
+    })
+}
+
+fn replies(inbox: &Inbox) -> Vec<(u64, RpcEnvelope)> {
+    inbox
+        .borrow()
+        .iter()
+        .filter_map(|(t, m)| match m {
+            Msg::Reply(env) => Some((*t, env.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn append_then_pull_round_trip() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0, 1], 100, 100));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert_eq!(reps.len(), 1);
+    match &reps[0].1.reply {
+        RpcReply::AppendAck { records, bytes } => {
+            assert_eq!(*records, 200);
+            assert_eq!(*bytes, 20_000);
+        }
+        other => panic!("want AppendAck, got {other:?}"),
+    }
+    // ack latency: dispatch + base + 2 appends + 20 kB memcpy + net
+    let t = reps[0].0;
+    assert!(t > 2 * MICROS && t < 100 * MICROS, "append ack at {t} ns");
+
+    // now pull it back
+    r.engine.schedule(
+        r.engine.now(),
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 2,
+            reply_to: r.probe,
+            from_node: 1,
+            kind: RpcKind::Pull {
+                assignments: vec![(PartitionId(0), 0), (PartitionId(1), 0)],
+                max_bytes: 1 << 20,
+            },
+        }),
+    );
+    r.engine.run_until(2 * SECOND);
+    let reps = replies(&r.inbox);
+    assert_eq!(reps.len(), 2);
+    match &reps[1].1.reply {
+        RpcReply::PullData { chunks } => {
+            assert_eq!(chunks.len(), 2);
+            assert_eq!(chunks[0].chunk.records, 100);
+        }
+        other => panic!("want PullData, got {other:?}"),
+    }
+}
+
+#[test]
+fn pull_of_unknown_partition_errors() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 9,
+            reply_to: r.probe,
+            from_node: 1,
+            kind: RpcKind::Pull { assignments: vec![(PartitionId(99), 0)], max_bytes: 1024 },
+        }),
+    );
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert!(matches!(reps[0].1.reply, RpcReply::Error { .. }));
+}
+
+#[test]
+fn single_worker_core_serialises_rpcs() {
+    // Two appends to a 1-core broker: second ack ~ one service time later.
+    let mut r = rig(|p| {
+        p.worker_cores = 1;
+        p.push_threads = 0;
+    });
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0], 1000, 100));
+    r.engine.schedule(0, r.broker, append_req(&r, 2, &[1], 1000, 100));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert_eq!(reps.len(), 2);
+    let gap = reps[1].0 - reps[0].0;
+    // 100 kB at 10 GB/s = 10 us service; the gap must be about that
+    assert!(gap > 8 * MICROS, "serialised appends must queue: gap {gap}");
+
+    // same pair with 2 cores: acks nearly simultaneous
+    let mut r2 = rig(|p| {
+        p.worker_cores = 2;
+        p.push_threads = 0;
+    });
+    r2.engine.schedule(0, r2.broker, append_req(&r2, 1, &[0], 1000, 100));
+    r2.engine.schedule(0, r2.broker, append_req(&r2, 2, &[1], 1000, 100));
+    r2.engine.run_until(SECOND);
+    let reps2 = replies(&r2.inbox);
+    let gap2 = reps2[1].0 - reps2[0].0;
+    assert!(gap2 < gap / 2, "parallel cores must overlap: {gap2} vs {gap}");
+}
+
+#[test]
+fn dispatcher_is_a_single_serial_core() {
+    // Many zero-byte pulls: their acks space out by at least dispatch_ns.
+    let mut r = rig(|p| {
+        p.worker_cores = 16;
+        p.push_threads = 0;
+    });
+    for i in 0..50 {
+        r.engine.schedule(
+            0,
+            r.broker,
+            Msg::Rpc(RpcRequest {
+                id: i,
+                reply_to: r.probe,
+                from_node: 1,
+                kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 0)], max_bytes: 1024 },
+            }),
+        );
+    }
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert_eq!(reps.len(), 50);
+    let span = reps.last().unwrap().0 - reps[0].0;
+    let dispatch = CostModel::default().dispatch_ns;
+    assert!(
+        span >= 49 * dispatch,
+        "dispatcher must serialise 50 RPCs: span {span} < {}",
+        49 * dispatch
+    );
+}
+
+use crate::config::CostModel;
+
+#[test]
+fn replicated_append_waits_for_backup() {
+    // Broker with a backup: ack arrives only after the nested round-trip.
+    let mut engine = Engine::new(7);
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let store = ObjectStore::shared();
+    let metrics = MetricsHub::shared();
+    let backup_params = BrokerParams {
+        node: 2,
+        worker_cores: 4,
+        push_threads: 0,
+        segment_bytes: 8 << 20,
+        partitions: vec![],
+        backup: None,
+        is_backup: true,
+        cost: Default::default(),
+    };
+    let backup = engine.add_actor(Box::new(Broker::new(
+        backup_params,
+        net.clone(),
+        store.clone(),
+        metrics.clone(),
+        1,
+    )));
+    let primary_params = BrokerParams {
+        node: 0,
+        worker_cores: 4,
+        push_threads: 0,
+        segment_bytes: 8 << 20,
+        partitions: vec![PartitionId(0)],
+        backup: Some((backup, 2)),
+        is_backup: false,
+        cost: Default::default(),
+    };
+    let primary = engine.add_actor(Box::new(Broker::new(
+        primary_params,
+        net,
+        store,
+        metrics,
+        0,
+    )));
+    let inbox: Inbox = Rc::new(RefCell::new(Vec::new()));
+    let probe = engine.add_actor(Box::new(Probe { inbox: inbox.clone() }));
+
+    engine.schedule(
+        0,
+        primary,
+        Msg::Rpc(RpcRequest {
+            id: 1,
+            reply_to: probe,
+            from_node: 1,
+            kind: RpcKind::Append { chunks: vec![(PartitionId(0), Chunk::sim(1000, 100))] },
+        }),
+    );
+    engine.run_until(SECOND);
+    let reps = replies(&inbox);
+    assert_eq!(reps.len(), 1);
+    assert!(matches!(reps[0].1.reply, RpcReply::AppendAck { .. }));
+    let t_replicated = reps[0].0;
+
+    // Reference: same append without replication is much faster.
+    let mut r = rig(|p| p.push_threads = 0);
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0], 1000, 100));
+    r.engine.run_until(SECOND);
+    let t_plain = replies(&r.inbox)[0].0;
+    assert!(
+        t_replicated > t_plain + 2 * MICROS,
+        "replication must add a round-trip: {t_replicated} vs {t_plain}"
+    );
+}
+
+#[test]
+fn push_subscription_fills_and_notifies() {
+    let mut r = rig(|p| p.push_threads = 1);
+    // Subscribe one source for partitions 0 and 1, two objects of 64 KiB.
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 1,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: r.probe,
+                    assignments: vec![(PartitionId(0), 0), (PartitionId(1), 0)],
+                    objects: 2,
+                    object_bytes: 64 * 1024,
+                }],
+            },
+        }),
+    );
+    // Produce data afterwards.
+    r.engine.schedule(10 * MICROS, r.broker, append_req(&r, 2, &[0, 1], 100, 100));
+    r.engine.run_until(SECOND);
+
+    let inbox = r.inbox.borrow();
+    let ready: Vec<_> = inbox
+        .iter()
+        .filter_map(|(t, m)| match m {
+            Msg::ObjectReady { id } => Some((*t, *id)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ready.len(), 2, "one object per partition's chunk: {inbox:?}");
+    // Verify sealed content is readable through the store.
+    let store = r.store.borrow();
+    let (records, bytes) = store.sealed_counts(ready[0].1);
+    assert_eq!(records, 100);
+    assert_eq!(bytes, 10_000);
+    drop(store);
+    assert_eq!(r.metrics.borrow().total(crate::metrics::Class::ObjectsFilled), 2);
+}
+
+#[test]
+fn push_respects_object_backpressure() {
+    let mut r = rig(|p| p.push_threads = 1);
+    // One object only: after it fills, the second chunk must wait for a free.
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 1,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: r.probe,
+                    assignments: vec![(PartitionId(0), 0)],
+                    objects: 1,
+                    object_bytes: 16 * 1024,
+                }],
+            },
+        }),
+    );
+    r.engine.schedule(10 * MICROS, r.broker, append_req(&r, 2, &[0], 100, 100));
+    r.engine.schedule(20 * MICROS, r.broker, append_req(&r, 3, &[0], 100, 100));
+    r.engine.run_until(SECOND);
+    let ready_count = r
+        .inbox
+        .borrow()
+        .iter()
+        .filter(|(_, m)| matches!(m, Msg::ObjectReady { .. }))
+        .count();
+    assert_eq!(ready_count, 1, "second fill must stall on the single object");
+
+    // Source frees the object -> the parked chunk is pushed.
+    let id = {
+        let inbox = r.inbox.borrow();
+        inbox
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::ObjectReady { id } => Some(*id),
+                _ => None,
+            })
+            .unwrap()
+    };
+    let now = r.engine.now();
+    r.engine.schedule(now, r.broker, Msg::ObjectFreed { id });
+    r.engine.run_until(2 * SECOND);
+    let ready_count = r
+        .inbox
+        .borrow()
+        .iter()
+        .filter(|(_, m)| matches!(m, Msg::ObjectReady { .. }))
+        .count();
+    assert_eq!(ready_count, 2, "freed object must be reused for the parked chunk");
+}
+
+#[test]
+fn push_object_batches_small_chunks() {
+    // Many small chunks, one big object: a single fill carries them all.
+    let mut r = rig(|p| p.push_threads = 1);
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0], 10, 100)); // 1 kB
+    r.engine.schedule(0, r.broker, append_req(&r, 2, &[0], 10, 100));
+    r.engine.schedule(0, r.broker, append_req(&r, 3, &[0], 10, 100));
+    r.engine.schedule(
+        50 * MICROS, // subscribe after data landed
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 4,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: r.probe,
+                    assignments: vec![(PartitionId(0), 0)],
+                    objects: 2,
+                    object_bytes: 64 * 1024,
+                }],
+            },
+        }),
+    );
+    r.engine.run_until(SECOND);
+    let ready: Vec<_> = r
+        .inbox
+        .borrow()
+        .iter()
+        .filter_map(|(_, m)| match m {
+            Msg::ObjectReady { id } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ready.len(), 1, "all three small chunks fit one object fill");
+    assert_eq!(r.store.borrow().read(ready[0]).len(), 3);
+}
+
+#[test]
+fn producer_bytes_metric_recorded() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0, 1, 2, 3], 100, 100));
+    r.engine.run_until(SECOND);
+    assert_eq!(
+        r.metrics.borrow().total(crate::metrics::Class::ProducerBytes),
+        4 * 100 * 100
+    );
+}

@@ -1,0 +1,443 @@
+//! The launcher: materialise an [`ExperimentConfig`] into a running cluster.
+//!
+//! Topology (paper §V-A): node 0 hosts the storage broker, the processing
+//! worker and the shared object store (*colocated* — the premise of the
+//! push design); node 1 hosts the producers ("deployed separately from the
+//! streaming architecture"); node 2 hosts the backup broker when
+//! `Replication = 2`.
+//!
+//! Task index space: sources take `0..Nc`, then each pipeline stage's
+//! tasks in order. The launcher builds the pipeline for the configured
+//! workload (Listings 1 & 2), wires credits, registers everything in the
+//! task registry and returns a [`Cluster`] ready to `run`.
+
+#[cfg(test)]
+mod tests;
+
+use crate::broker::{Broker, BrokerParams, DEFAULT_SEGMENT_BYTES};
+use crate::compute::SharedCompute;
+use crate::config::{DataPlane, ExperimentConfig, SourceMode, Workload};
+use crate::metrics::{Class, ExperimentReport, MetricsHub, SharedMetrics};
+use crate::net::{Network, SharedNetwork};
+use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedSumOp};
+use crate::pipeline::{OpKind, Pipeline};
+use crate::plasma::{ObjectStore, SharedStore};
+use crate::producer::{Producer, ProducerParams, RecordGen};
+use crate::proto::{Msg, PartitionId};
+use crate::sim::{ActorId, Engine, Rng, SECOND};
+use crate::source::{
+    NativeConsumer, NativeParams, PullParams, PullSource, PushGroupParams, PushMember,
+    PushSourceGroup,
+};
+use crate::wikipedia::CorpusReader;
+use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
+
+/// The grep needle all filter benchmarks use (length must equal the
+/// `PATTERN_LEN` baked into the filter artifacts).
+pub const FILTER_NEEDLE: &[u8] = b"needle";
+/// Fraction of synthetic records carrying the needle, in permille.
+pub const PLANT_PERMILLE: u32 = 50;
+
+const NODE_COLOCATED: usize = 0;
+const NODE_PRODUCERS: usize = 1;
+const NODE_BACKUP: usize = 2;
+
+/// A built cluster, ready to run.
+pub struct Cluster {
+    pub engine: Engine<Msg>,
+    pub config: ExperimentConfig,
+    pub metrics: SharedMetrics,
+    pub net: SharedNetwork,
+    pub store: SharedStore,
+    pub compute: Option<SharedCompute>,
+    pub broker: ActorId,
+    pub backup: Option<ActorId>,
+    pub producers: Vec<ActorId>,
+    pub sources: Vec<ActorId>,
+    pub tasks: Vec<ActorId>,
+    pub pipeline: Option<Pipeline>,
+}
+
+/// End-of-run summary: the report plus cross-checkable totals.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub report: ExperimentReport,
+    /// Records producers got acked.
+    pub records_produced: u64,
+    /// Records the sources consumed.
+    pub records_consumed: u64,
+    /// Needles planted by synthetic producers (real plane).
+    pub planted: u64,
+    /// Matches found by filter operators / native consumers (real plane).
+    pub matches: u64,
+    /// Windows fired by windowed aggregations.
+    pub windows_fired: u64,
+    /// Pull RPCs issued in total.
+    pub pull_rpcs: u64,
+    /// Shared objects filled in total.
+    pub objects_filled: u64,
+    /// Total tuples logged by the RTLogger points (records for count/
+    /// filter pipelines, tokens for word-count pipelines).
+    pub tuples_logged: u64,
+}
+
+/// Build a cluster from a config. `compute` is required for the real data
+/// plane (pass `None` on the sim plane).
+pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Cluster {
+    config.validate().expect("invalid experiment config");
+    if config.data_plane == DataPlane::Real {
+        assert!(compute.is_some(), "real data plane needs a compute engine");
+    }
+    let mut engine = Engine::new(config.seed);
+    let metrics = MetricsHub::shared();
+    let net = Network::shared(config.cost.network, config.cost.loopback);
+    let store = ObjectStore::shared();
+    let registry = TaskRegistry::shared();
+    let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+
+    // ---- brokers -------------------------------------------------------
+    let backup = (config.replication == 2).then(|| {
+        engine.add_actor(Box::new(Broker::new(
+            BrokerParams {
+                node: NODE_BACKUP,
+                worker_cores: config.broker_cores,
+                push_threads: 0,
+                segment_bytes: DEFAULT_SEGMENT_BYTES,
+                partitions: Vec::new(),
+                backup: None,
+                is_backup: true,
+                cost: config.cost.clone(),
+            },
+            net.clone(),
+            store.clone(),
+            metrics.clone(),
+            1,
+        )))
+    });
+    let push_threads = if config.mode == SourceMode::Push { 1 } else { 0 };
+    let worker_cores = (config.broker_cores - push_threads).max(1);
+    let broker = engine.add_actor(Box::new(Broker::new(
+        BrokerParams {
+            node: NODE_COLOCATED,
+            worker_cores,
+            push_threads,
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            partitions: partitions.clone(),
+            backup: backup.map(|b| (b, NODE_BACKUP)),
+            is_backup: false,
+            cost: config.cost.clone(),
+        },
+        net.clone(),
+        store.clone(),
+        metrics.clone(),
+        0,
+    )));
+
+    // ---- producers -----------------------------------------------------
+    let mut seed_rng = Rng::new(config.seed ^ 0x9D);
+    let producers: Vec<ActorId> = (0..config.np)
+        .map(|i| {
+            let gen = make_gen(config, &mut seed_rng);
+            engine.add_actor(Box::new(Producer::new(
+                ProducerParams {
+                    entity: i,
+                    node: NODE_PRODUCERS,
+                    broker,
+                    broker_node: NODE_COLOCATED,
+                    partitions: partitions.clone(),
+                    chunk_bytes: config.producer_chunk,
+                    record_size: config.record_size,
+                    cost: config.cost.clone(),
+                    data_plane: config.data_plane,
+                },
+                gen,
+                metrics.clone(),
+                net.clone(),
+            )))
+        })
+        .collect();
+
+    // ---- pipeline tasks (not for the native baseline) -------------------
+    let mut tasks = Vec::new();
+    let pipeline = (config.mode != SourceMode::NativePull)
+        .then(|| Pipeline::for_workload(config.workload, config.nc, config.nmap));
+    let mut stage_task_idxs: Vec<Vec<usize>> = Vec::new();
+    if let Some(p) = &pipeline {
+        let mut next_idx = config.nc;
+        for stage in &p.stages {
+            let idxs: Vec<usize> = (0..stage.parallelism).map(|k| next_idx + k).collect();
+            next_idx += stage.parallelism;
+            stage_task_idxs.push(idxs);
+        }
+        for (si, stage) in p.stages.iter().enumerate() {
+            let downstream: Vec<usize> = stage_task_idxs.get(si + 1).cloned().unwrap_or_default();
+            for &task_idx in &stage_task_idxs[si] {
+                let op = make_op(stage.op, config, &downstream, &compute);
+                let task = OperatorTask::new(
+                    TaskParams {
+                        task_idx,
+                        queue_cap: config.queue_cap,
+                        downstream: downstream.clone(),
+                        tick_ns: config.window_slide_secs * SECOND,
+                        cost: config.cost.clone(),
+                    },
+                    vec![op],
+                    registry.clone(),
+                    metrics.clone(),
+                );
+                let id = engine.add_actor(Box::new(task));
+                registry.borrow_mut().register(task_idx, id);
+                tasks.push(id);
+            }
+        }
+    }
+
+    // ---- sources ---------------------------------------------------------
+    let parts_per = config.ns / config.nc;
+    let member_parts = |i: usize| -> Vec<(PartitionId, u64)> {
+        (i * parts_per..(i + 1) * parts_per)
+            .map(|p| (PartitionId(p), 0))
+            .collect()
+    };
+    let stage0: Vec<usize> = stage_task_idxs.first().cloned().unwrap_or_default();
+    let mut sources = Vec::new();
+    match config.mode {
+        SourceMode::Pull => {
+            for i in 0..config.nc {
+                let id = engine.add_actor(Box::new(PullSource::new(
+                    PullParams {
+                        task_idx: i,
+                        node: NODE_COLOCATED,
+                        broker,
+                        broker_node: NODE_COLOCATED,
+                        assignments: member_parts(i),
+                        max_bytes: config.consumer_chunk as u64,
+                        pull_timeout: config.pull_timeout_us * 1_000,
+                        downstream: stage0.clone(),
+                        queue_cap: config.queue_cap,
+                        cost: config.cost.clone(),
+                    },
+                    metrics.clone(),
+                    net.clone(),
+                    registry.clone(),
+                )));
+                registry.borrow_mut().register(i, id);
+                sources.push(id);
+            }
+        }
+        SourceMode::Push => {
+            let members: Vec<PushMember> = (0..config.nc)
+                .map(|i| PushMember {
+                    task_idx: i,
+                    assignments: member_parts(i),
+                    objects: config.push_objects_per_source,
+                    object_bytes: config.consumer_chunk as u64,
+                })
+                .collect();
+            let group = engine.add_actor(Box::new(PushSourceGroup::new(
+                PushGroupParams {
+                    leader_task_idx: 0,
+                    node: NODE_COLOCATED,
+                    broker,
+                    broker_node: NODE_COLOCATED,
+                    members,
+                    downstream: stage0.clone(),
+                    queue_cap: config.queue_cap,
+                    cost: config.cost.clone(),
+                },
+                net.clone(),
+                store.clone(),
+                registry.clone(),
+            )));
+            for i in 0..config.nc {
+                registry.borrow_mut().register(i, group);
+            }
+            sources.push(group);
+        }
+        SourceMode::NativePull => {
+            for i in 0..config.nc {
+                let pattern = matches!(config.workload, Workload::Filter)
+                    .then(|| FILTER_NEEDLE.to_vec());
+                let id = engine.add_actor(Box::new(NativeConsumer::new(
+                    NativeParams {
+                        entity: i,
+                        node: NODE_COLOCATED,
+                        broker,
+                        broker_node: NODE_COLOCATED,
+                        assignments: member_parts(i),
+                        max_bytes: config.consumer_chunk as u64,
+                        pull_timeout: config.pull_timeout_us * 1_000,
+                        pattern,
+                        compute: (config.data_plane == DataPlane::Real)
+                            .then(|| compute.clone().expect("checked"))
+                            ,
+                        cost: config.cost.clone(),
+                    },
+                    metrics.clone(),
+                    net.clone(),
+                )));
+                sources.push(id);
+            }
+        }
+    }
+
+    Cluster {
+        engine,
+        config: config.clone(),
+        metrics,
+        net,
+        store,
+        compute,
+        broker,
+        backup,
+        producers,
+        sources,
+        tasks,
+        pipeline,
+    }
+}
+
+fn make_gen(config: &ExperimentConfig, seed_rng: &mut Rng) -> RecordGen {
+    match (config.data_plane, config.workload.is_text()) {
+        (DataPlane::Sim, false) => RecordGen::Sim,
+        (DataPlane::Sim, true) if config.corpus_records > 0 => {
+            // Bounded sim text producers mimic the Fig. 9 setup without
+            // payloads: emulate the budget with a bounded corpus of sim
+            // chunks — handled by Producer via Corpus with zero-copy?
+            // Simplest faithful form: a corpus reader budget with sim-sized
+            // records would still materialise text; keep payloads real only
+            // when the plane is real, and bound sim runs by duration.
+            RecordGen::Sim
+        }
+        (DataPlane::Sim, true) => RecordGen::Sim,
+        (DataPlane::Real, false) => RecordGen::Synthetic {
+            rng: seed_rng.fork(),
+            needle: FILTER_NEEDLE.to_vec(),
+            plant_permille: PLANT_PERMILLE,
+            planted: 0,
+        },
+        (DataPlane::Real, true) => {
+            let budget = if config.corpus_records > 0 { config.corpus_records } else { u64::MAX };
+            RecordGen::Corpus(CorpusReader::new(config.record_size, budget))
+        }
+    }
+}
+
+fn make_op(
+    kind: OpKind,
+    config: &ExperimentConfig,
+    downstream: &[usize],
+    compute: &Option<SharedCompute>,
+) -> Box<dyn Operator> {
+    let real = config.data_plane == DataPlane::Real;
+    let compute = real.then(|| compute.clone().expect("real plane needs compute"));
+    match kind {
+        OpKind::Count => Box::new(CountOp::default()),
+        OpKind::Filter => Box::new(FilterOp::new(FILTER_NEEDLE, compute)),
+        OpKind::Tokenizer => Box::new(TokenizerOp::new(
+            downstream.to_vec(),
+            compute,
+            config.cost.tokens_per_record,
+        )),
+        OpKind::KeyedSum => Box::new(KeyedSumOp::new()),
+        OpKind::WindowedSum => Box::new(WindowedSumOp::new(
+            (config.window_size_secs / config.window_slide_secs) as usize,
+            compute,
+        )),
+    }
+}
+
+impl Cluster {
+    /// Run the experiment for its configured duration and summarise.
+    pub fn run(mut self) -> RunSummary {
+        let horizon = self.config.duration_secs * SECOND;
+        self.engine.run_until(horizon);
+        self.finish()
+    }
+
+    /// Collect gauges + totals and build the report.
+    pub fn finish(mut self) -> RunSummary {
+        let now = self.engine.now();
+        // Broker utilisation gauges.
+        if let Some(b) = self.engine.actor_as::<Broker>(self.broker) {
+            b.export_gauges(now, "broker");
+        }
+        if let Some(backup) = self.backup {
+            if let Some(b) = self.engine.actor_as::<Broker>(backup) {
+                b.export_gauges(now, "backup");
+            }
+        }
+        // Source-side totals.
+        let mut records_consumed = 0;
+        let mut matches = 0;
+        let mut source_threads = 0usize;
+        for &sid in &self.sources {
+            if let Some(s) = self.engine.actor_as::<PullSource>(sid) {
+                records_consumed += s.records_consumed();
+                source_threads += 2; // fetch + emit threads per pull consumer
+            } else if let Some(g) = self.engine.actor_as::<PushSourceGroup>(sid) {
+                records_consumed += g.records_consumed();
+                source_threads += 2; // group consume thread + broker push thread
+            } else if let Some(n) = self.engine.actor_as::<NativeConsumer>(sid) {
+                records_consumed += n.records_consumed();
+                matches += n.matches();
+                source_threads += 1;
+            }
+        }
+        // Producer totals.
+        let mut records_produced = 0;
+        let mut planted = 0;
+        for &pid in &self.producers {
+            if let Some(p) = self.engine.actor_as::<Producer>(pid) {
+                records_produced += p.records_sent();
+                planted += p.planted();
+            }
+        }
+        // Operator state (matches, windows).
+        let mut windows_fired = 0;
+        for &tid in &self.tasks {
+            if let Some(t) = self.engine.actor_as::<OperatorTask>(tid) {
+                if let Some(f) = t.op_as::<FilterOp>(0) {
+                    matches += f.matches;
+                }
+                if let Some(w) = t.op_as::<WindowedSumOp>(0) {
+                    windows_fired += w.windows_fired;
+                }
+            }
+        }
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.set_gauge("source_threads", source_threads as f64);
+            m.set_gauge(
+                "slots_used",
+                self.pipeline.as_ref().map(|p| p.slots_used()).unwrap_or(self.config.nc) as f64,
+            );
+            m.set_gauge("store_reserved_bytes", self.store.borrow().reserved_bytes() as f64);
+            m.set_gauge("cross_node_bytes", self.net.borrow().cross_node_bytes() as f64);
+            if let Some(c) = &self.compute {
+                let st = c.stats();
+                m.set_gauge("compute_kernel_calls", (st.filter_calls + st.wordcount_calls) as f64);
+                m.set_gauge("compute_wall_ns", st.wall_ns as f64);
+                m.set_gauge("compute_records", st.records_processed as f64);
+            }
+        }
+        let metrics = self.metrics.borrow();
+        let report = ExperimentReport::from_hub(
+            &self.config.name,
+            &metrics,
+            self.config.warmup_secs,
+            self.config.duration_secs,
+        );
+        RunSummary {
+            report,
+            records_produced,
+            records_consumed,
+            planted,
+            matches,
+            windows_fired,
+            pull_rpcs: metrics.total(Class::PullRpcs),
+            objects_filled: metrics.total(Class::ObjectsFilled),
+            tuples_logged: metrics.total(Class::ConsumerTuples),
+        }
+    }
+}

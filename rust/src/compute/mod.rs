@@ -1,0 +1,234 @@
+//! Chunk → tensor bridge: run the operator compute on real chunk payloads.
+//!
+//! The real data plane executes the Layer-1/2 kernels through PJRT on the
+//! request path: a record-framed chunk becomes a `u8[R, S]` literal, the
+//! variant whose `r` fits is selected (record axis padded with NUL rows —
+//! the kernels treat NUL rows as empty), and the tuple outputs are decoded
+//! back. A pure-rust `Native` engine with identical semantics serves as
+//! the paper's "C++ consumer" data plane and as the ablation baseline for
+//! the XLA path; the integration tests cross-check the two bit-for-bit.
+
+pub mod native;
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::proto::{Chunk, Payload};
+use crate::runtime::ArtifactLibrary;
+
+/// Histogram buckets baked into the wordcount artifacts (aot.py VARIANTS).
+pub const WORDCOUNT_BUCKETS: usize = 8192;
+/// Pattern buffer length baked into the filter artifacts.
+pub const PATTERN_MAX: usize = 16;
+
+/// Execution statistics (kernel invocations on the hot path).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ComputeStats {
+    pub filter_calls: u64,
+    pub wordcount_calls: u64,
+    pub window_calls: u64,
+    pub records_processed: u64,
+    /// Wall-clock nanoseconds spent in kernel execution (host time, used
+    /// by `zettastream calibrate` to fit the cost model).
+    pub wall_ns: u64,
+}
+
+/// The operator compute engine.
+pub enum ComputeEngine {
+    /// AOT XLA artifacts through PJRT (the shipped hot path).
+    Xla { lib: ArtifactLibrary, stats: RefCell<ComputeStats> },
+    /// Pure-rust kernels (oracle / "C++ consumer" plane / ablation).
+    Native { stats: RefCell<ComputeStats> },
+}
+
+/// Shared handle for actors.
+pub type SharedCompute = Rc<ComputeEngine>;
+
+impl ComputeEngine {
+    pub fn xla(lib: ArtifactLibrary) -> SharedCompute {
+        Rc::new(ComputeEngine::Xla { lib, stats: RefCell::default() })
+    }
+
+    pub fn xla_from_default_dir() -> Result<SharedCompute> {
+        Ok(Self::xla(ArtifactLibrary::load(ArtifactLibrary::default_dir())?))
+    }
+
+    pub fn native() -> SharedCompute {
+        Rc::new(ComputeEngine::Native { stats: RefCell::default() })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeEngine::Xla { .. } => "xla",
+            ComputeEngine::Native { .. } => "native",
+        }
+    }
+
+    pub fn stats(&self) -> ComputeStats {
+        match self {
+            ComputeEngine::Xla { stats, .. } | ComputeEngine::Native { stats } => *stats.borrow(),
+        }
+    }
+
+    fn stats_mut(&self) -> std::cell::RefMut<'_, ComputeStats> {
+        match self {
+            ComputeEngine::Xla { stats, .. } | ComputeEngine::Native { stats } => stats.borrow_mut(),
+        }
+    }
+
+    /// Filter one real chunk: number of records containing `pattern`.
+    pub fn filter_count(&self, chunk: &Chunk, pattern: &[u8]) -> Result<u64> {
+        let data = real_payload(chunk)?;
+        let records = chunk.records as usize;
+        let s = chunk.record_size as usize;
+        let t0 = std::time::Instant::now();
+        let matches = match self {
+            ComputeEngine::Native { .. } => native::filter_count(data, records, s, pattern),
+            ComputeEngine::Xla { lib, .. } => {
+                let mut total = 0u64;
+                for (part, nvalid) in split_records(lib, "filter", s, records)? {
+                    let v = lib.select("filter", s, nvalid).context("filter variant")?;
+                    debug_assert!(v.meta.extra == pattern.len(),
+                        "artifact pattern_len {} != pattern {}", v.meta.extra, pattern.len());
+                    let r = v.meta.r;
+                    let mut padded = vec![0u8; r * s];
+                    padded[..nvalid * s]
+                        .copy_from_slice(&data[part * s..part * s + nvalid * s]);
+                    let chunk_lit = xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        &[r, s],
+                        &padded,
+                    )?;
+                    let mut pat = vec![0u8; PATTERN_MAX];
+                    pat[..pattern.len()].copy_from_slice(pattern);
+                    let pat_lit = xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        &[PATTERN_MAX],
+                        &pat,
+                    )?;
+                    let out = v.execute(&[chunk_lit, pat_lit, xla::Literal::from(nvalid as i32)])?;
+                    total += out[1].get_first_element::<i32>()? as u64;
+                }
+                total
+            }
+        };
+        let mut st = self.stats_mut();
+        st.filter_calls += 1;
+        st.records_processed += records as u64;
+        st.wall_ns += t0.elapsed().as_nanos() as u64;
+        Ok(matches)
+    }
+
+    /// Word-count one real chunk: `(hist[B], total_tokens)`.
+    pub fn wordcount(&self, chunk: &Chunk) -> Result<(Vec<i32>, u64)> {
+        let data = real_payload(chunk)?;
+        let records = chunk.records as usize;
+        let s = chunk.record_size as usize;
+        let t0 = std::time::Instant::now();
+        let hist = match self {
+            ComputeEngine::Native { .. } => {
+                native::wordcount_hist(data, records, s, WORDCOUNT_BUCKETS)
+            }
+            ComputeEngine::Xla { lib, .. } => {
+                let mut hist = vec![0i32; WORDCOUNT_BUCKETS];
+                for (part, nvalid) in split_records(lib, "wordcount", s, records)? {
+                    let v = lib.select("wordcount", s, nvalid).context("wordcount variant")?;
+                    let r = v.meta.r;
+                    let mut padded = vec![0u8; r * s];
+                    padded[..nvalid * s]
+                        .copy_from_slice(&data[part * s..part * s + nvalid * s]);
+                    let chunk_lit = xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        &[r, s],
+                        &padded,
+                    )?;
+                    let out = v.execute(&[chunk_lit, xla::Literal::from(nvalid as i32)])?;
+                    let part_hist = out[0].to_vec::<i32>()?;
+                    for (h, p) in hist.iter_mut().zip(part_hist.iter()) {
+                        *h += p;
+                    }
+                }
+                hist
+            }
+        };
+        let total: u64 = hist.iter().map(|&v| v as u64).sum();
+        let mut st = self.stats_mut();
+        st.wordcount_calls += 1;
+        st.records_processed += records as u64;
+        st.wall_ns += t0.elapsed().as_nanos() as u64;
+        Ok((hist, total))
+    }
+
+    /// Sliding-window aggregation of per-slide histograms.
+    pub fn window_sum(&self, hists: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let t0 = std::time::Instant::now();
+        let out = match self {
+            ComputeEngine::Native { .. } => native::window_sum(hists),
+            ComputeEngine::Xla { lib, .. } => {
+                let Some(v) = lib.select("window_sum", WORDCOUNT_BUCKETS, hists.len()) else {
+                    // Window count bigger than the artifact: fall back to
+                    // chunked sums through the artifact window.
+                    bail!("no window_sum variant for w={}", hists.len());
+                };
+                let w = v.meta.r;
+                // Keyed tasks hold a bucket *range*; zero-pad each slide
+                // row up to the artifact's full bucket axis and slice the
+                // result back down below.
+                let width = hists[0].len().min(WORDCOUNT_BUCKETS);
+                let mut flat = vec![0i32; w * WORDCOUNT_BUCKETS];
+                for (i, h) in hists.iter().enumerate() {
+                    flat[i * WORDCOUNT_BUCKETS..i * WORDCOUNT_BUCKETS + h.len().min(width)]
+                        .copy_from_slice(&h[..h.len().min(width)]);
+                }
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4)
+                };
+                let lit = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &[w, WORDCOUNT_BUCKETS],
+                    bytes,
+                )?;
+                let out = v.execute(&[lit])?;
+                let mut full = out[0].to_vec::<i32>()?;
+                full.truncate(hists[0].len());
+                full
+            }
+        };
+        let mut st = self.stats_mut();
+        st.window_calls += 1;
+        st.wall_ns += t0.elapsed().as_nanos() as u64;
+        Ok(out)
+    }
+}
+
+fn real_payload(chunk: &Chunk) -> Result<&[u8]> {
+    match &chunk.payload {
+        Payload::Real(data) => Ok(data.as_slice()),
+        Payload::Sim => bail!("compute invoked on a sim-plane chunk"),
+    }
+}
+
+/// Split `records` into `(start_record, count)` parts that each fit the
+/// largest compiled variant for `(kind, s)`.
+fn split_records(
+    lib: &ArtifactLibrary,
+    kind: &str,
+    s: usize,
+    records: usize,
+) -> Result<Vec<(usize, usize)>> {
+    let max_r = lib
+        .max_r(kind, s)
+        .with_context(|| format!("no {kind} artifact for record size {s} (see aot.py VARIANTS)"))?;
+    let mut parts = Vec::new();
+    let mut at = 0;
+    while at < records {
+        let n = (records - at).min(max_r);
+        parts.push((at, n));
+        at += n;
+    }
+    Ok(parts)
+}

@@ -1,0 +1,164 @@
+//! Pure-rust reference implementations of the kernels.
+//!
+//! Bit-for-bit the same semantics as `python/compile/kernels/ref.py` (the
+//! Python oracle): substring match per record, FNV-1a word-hash histogram
+//! over maximal `[a-zA-Z0-9]` runs, case-folded. Used as (a) the `native`
+//! compute engine (the paper's "C++ consumer" data plane and an ablation
+//! baseline for the XLA path), and (b) the oracle the integration tests
+//! compare the XLA path against.
+
+/// FNV-1a 32-bit constants — must match `kernels/filter_count.py`.
+pub const FNV_OFFSET: u32 = 2_166_136_261;
+pub const FNV_PRIME: u32 = 16_777_619;
+
+/// Per-record substring flags: `flags[r] = 1` iff `pattern` occurs in
+/// record `r` of the `records × record_size` framed `data`.
+pub fn filter_flags(data: &[u8], records: usize, record_size: usize, pattern: &[u8]) -> Vec<i32> {
+    debug_assert!(data.len() >= records * record_size);
+    debug_assert!(!pattern.is_empty());
+    let finder = memchr::memmem::Finder::new(pattern);
+    (0..records)
+        .map(|r| {
+            let rec = &data[r * record_size..(r + 1) * record_size];
+            finder.find(rec).is_some() as i32
+        })
+        .collect()
+}
+
+/// Count of records containing the pattern.
+pub fn filter_count(data: &[u8], records: usize, record_size: usize, pattern: &[u8]) -> u64 {
+    filter_flags(data, records, record_size, pattern)
+        .iter()
+        .map(|&f| f as u64)
+        .sum()
+}
+
+/// FNV-1a over an already-case-folded token.
+pub fn fnv1a(token: &[u8]) -> u32 {
+    let mut h = FNV_OFFSET;
+    for &b in token {
+        h = (h ^ b as u32).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[inline]
+fn fold(b: u8) -> u8 {
+    if b.is_ascii_uppercase() {
+        b | 0x20
+    } else {
+        b
+    }
+}
+
+/// Word-hash histogram: for each maximal alphanumeric run in each record
+/// (tokens do not span records), `hist[fnv1a(folded token) % buckets] += 1`.
+pub fn wordcount_hist(
+    data: &[u8],
+    records: usize,
+    record_size: usize,
+    buckets: usize,
+) -> Vec<i32> {
+    debug_assert!(buckets > 0);
+    let mut hist = vec![0i32; buckets];
+    for r in 0..records {
+        let rec = &data[r * record_size..(r + 1) * record_size];
+        let mut h = FNV_OFFSET;
+        let mut in_word = false;
+        for &b in rec {
+            if b.is_ascii_alphanumeric() {
+                h = (h ^ fold(b) as u32).wrapping_mul(FNV_PRIME);
+                in_word = true;
+            } else {
+                if in_word {
+                    hist[(h % buckets as u32) as usize] += 1;
+                }
+                h = FNV_OFFSET;
+                in_word = false;
+            }
+        }
+        if in_word {
+            hist[(h % buckets as u32) as usize] += 1;
+        }
+    }
+    hist
+}
+
+/// Sum per-slide histograms into a window histogram (the `window_sum`
+/// artifact's semantics).
+pub fn window_sum(hists: &[Vec<i32>]) -> Vec<i32> {
+    let Some(first) = hists.first() else { return Vec::new() };
+    let mut out = vec![0i32; first.len()];
+    for h in hists {
+        debug_assert_eq!(h.len(), out.len());
+        for (o, v) in out.iter_mut().zip(h.iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(lines: &[&[u8]], record_size: usize) -> Vec<u8> {
+        let mut data = vec![0u8; lines.len() * record_size];
+        for (i, line) in lines.iter().enumerate() {
+            data[i * record_size..i * record_size + line.len()].copy_from_slice(line);
+        }
+        data
+    }
+
+    #[test]
+    fn filter_finds_planted_needle() {
+        let data = frame(&[b"xxxxneedlexxxx", b"nothing here.."], 20);
+        assert_eq!(filter_flags(&data, 2, 20, b"needle"), vec![1, 0]);
+        assert_eq!(filter_count(&data, 2, 20, b"needle"), 1);
+    }
+
+    #[test]
+    fn filter_does_not_cross_record_boundary() {
+        // "nee" ends record 0, "dle" starts record 1: no match
+        let data = frame(&[b"xxxnee", b"dlexxx"], 6);
+        assert_eq!(filter_count(&data, 2, 6, b"needle"), 0);
+    }
+
+    #[test]
+    fn fnv_matches_python_reference_values() {
+        // printed by python: fnv1a(b"hello") etc. (ref.py semantics)
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+        assert_eq!(fnv1a(b"a"), 0xE40C292C);
+        assert_eq!(fnv1a(b"hello"), 0x4F9F2CAB);
+    }
+
+    #[test]
+    fn wordcount_counts_folded_tokens() {
+        let data = frame(&[b"Word word WORD 42"], 24);
+        let hist = wordcount_hist(&data, 1, 24, 64);
+        assert_eq!(hist[(fnv1a(b"word") % 64) as usize], 3);
+        assert_eq!(hist[(fnv1a(b"42") % 64) as usize], 1);
+        assert_eq!(hist.iter().sum::<i32>(), 4);
+    }
+
+    #[test]
+    fn wordcount_flushes_record_end_token() {
+        let data = frame(&[b"endword"], 7); // token runs to the boundary
+        let hist = wordcount_hist(&data, 1, 7, 32);
+        assert_eq!(hist[(fnv1a(b"endword") % 32) as usize], 1);
+    }
+
+    #[test]
+    fn nul_padding_is_a_separator() {
+        let data = frame(&[b"pad"], 16); // 13 NUL bytes after "pad"
+        let hist = wordcount_hist(&data, 1, 16, 32);
+        assert_eq!(hist.iter().sum::<i32>(), 1);
+    }
+
+    #[test]
+    fn window_sum_adds_elementwise() {
+        let out = window_sum(&[vec![1, 2], vec![10, 20], vec![100, 200]]);
+        assert_eq!(out, vec![111, 222]);
+        assert!(window_sum(&[]).is_empty());
+    }
+}

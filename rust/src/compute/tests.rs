@@ -1,0 +1,109 @@
+//! Compute-engine tests: native always; XLA vs native cross-check when
+//! artifacts are present (the integration suite requires them).
+
+use std::rc::Rc;
+
+use super::*;
+use crate::proto::Chunk;
+use crate::wikipedia::CorpusReader;
+
+fn real_chunk(records: usize, record_size: usize, fill: impl Fn(usize, &mut [u8])) -> Chunk {
+    let mut data = vec![0u8; records * record_size];
+    for r in 0..records {
+        fill(r, &mut data[r * record_size..(r + 1) * record_size]);
+    }
+    Chunk::real(records as u32, record_size as u32, Rc::new(data))
+}
+
+#[test]
+fn native_filter_counts_planted() {
+    let eng = ComputeEngine::native();
+    let chunk = real_chunk(50, 100, |r, rec| {
+        if r % 5 == 0 {
+            rec[20..26].copy_from_slice(b"needle");
+        }
+    });
+    assert_eq!(eng.filter_count(&chunk, b"needle").unwrap(), 10);
+    let st = eng.stats();
+    assert_eq!(st.filter_calls, 1);
+    assert_eq!(st.records_processed, 50);
+}
+
+#[test]
+fn native_wordcount_totals() {
+    let eng = ComputeEngine::native();
+    let chunk = real_chunk(4, 32, |_, rec| {
+        rec[..11].copy_from_slice(b"hello world");
+    });
+    let (hist, total) = eng.wordcount(&chunk).unwrap();
+    assert_eq!(total, 8);
+    assert_eq!(hist.len(), WORDCOUNT_BUCKETS);
+    assert_eq!(hist.iter().map(|&v| v as u64).sum::<u64>(), 8);
+}
+
+#[test]
+fn sim_chunk_is_rejected() {
+    let eng = ComputeEngine::native();
+    assert!(eng.filter_count(&Chunk::sim(10, 100), b"x").is_err());
+}
+
+#[test]
+fn native_window_sum() {
+    let eng = ComputeEngine::native();
+    let out = eng.window_sum(&[vec![1, 2, 3], vec![4, 5, 6]]).unwrap();
+    assert_eq!(out, vec![5, 7, 9]);
+}
+
+fn try_xla() -> Option<SharedCompute> {
+    match ComputeEngine::xla_from_default_dir() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping XLA compute test ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_matches_native_filter() {
+    let Some(xla) = try_xla() else { return };
+    let native = ComputeEngine::native();
+    // 130 records forces a split across the r=64 variant (2 full + 1 pad)
+    let chunk = real_chunk(130, 100, |r, rec| {
+        for (i, b) in rec.iter_mut().enumerate() {
+            *b = b'a' + ((r * 31 + i * 7) % 26) as u8;
+        }
+        if r % 7 == 3 {
+            rec[40..46].copy_from_slice(b"needle");
+        }
+    });
+    let want = native.filter_count(&chunk, b"needle").unwrap();
+    let got = xla.filter_count(&chunk, b"needle").unwrap();
+    assert_eq!(got, want);
+    assert!(want >= 18, "sanity: needles planted");
+}
+
+#[test]
+fn xla_matches_native_wordcount() {
+    let Some(xla) = try_xla() else { return };
+    let native = ComputeEngine::native();
+    let mut reader = CorpusReader::new(2048, 40);
+    let mut data = vec![0u8; 40 * 2048];
+    reader.fill_records(&mut data);
+    let chunk = Chunk::real(40, 2048, Rc::new(data));
+    let (h_native, t_native) = native.wordcount(&chunk).unwrap();
+    let (h_xla, t_xla) = xla.wordcount(&chunk).unwrap();
+    assert_eq!(t_xla, t_native);
+    assert_eq!(h_xla, h_native, "histograms must agree bucket-for-bucket");
+    assert!(t_native > 5000, "2 KiB x 40 records of text: {t_native} tokens");
+}
+
+#[test]
+fn xla_window_sum_matches_native() {
+    let Some(xla) = try_xla() else { return };
+    let native = ComputeEngine::native();
+    let hists: Vec<Vec<i32>> = (0..5)
+        .map(|i| (0..WORDCOUNT_BUCKETS as i32).map(|b| (b * (i + 1)) % 17).collect())
+        .collect();
+    assert_eq!(xla.window_sum(&hists).unwrap(), native.window_sum(&hists).unwrap());
+}

@@ -1,0 +1,210 @@
+//! The calibrated cost model (DESIGN.md §6).
+//!
+//! Every service time the DES charges comes from here. Defaults are
+//! calibrated against (a) the magnitudes the paper reports on Aion and
+//! (b) `zettastream calibrate`, which measures the *real* data plane
+//! (PJRT kernel ns/record, memcpy bandwidth) on the local host.
+
+use crate::sim::Time;
+
+/// Link characteristics between distinct nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    /// One-way propagation + NIC latency (ns).
+    pub latency_ns: Time,
+    /// Link bandwidth in bytes per second.
+    pub bandwidth_bps: f64,
+    pub name: &'static str,
+}
+
+impl NetworkProfile {
+    /// Aion's interconnect: Infiniband 100 Gb/s (paper §V-A).
+    pub const INFINIBAND: NetworkProfile = NetworkProfile {
+        latency_ns: 2_000,
+        bandwidth_bps: 12.5e9,
+        name: "infiniband-100g",
+    };
+
+    /// Commodity 10 GbE — the deployment §VII argues push favours even more.
+    pub const COMMODITY: NetworkProfile = NetworkProfile {
+        latency_ns: 30_000,
+        bandwidth_bps: 1.25e9,
+        name: "commodity-10g",
+    };
+
+    /// Same-node loopback (colocated broker and worker exchange pointers;
+    /// only a small syscall/notification cost remains, charged separately).
+    pub const LOOPBACK: NetworkProfile = NetworkProfile {
+        latency_ns: 300,
+        bandwidth_bps: 40e9,
+        name: "loopback",
+    };
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "infiniband" | "ib" | "infiniband-100g" => Some(Self::INFINIBAND),
+            "commodity" | "10g" | "commodity-10g" => Some(Self::COMMODITY),
+            "loopback" => Some(Self::LOOPBACK),
+            _ => None,
+        }
+    }
+
+    /// Wire time for `bytes` on this link (excluding queueing, which the
+    /// per-link serialisation in `net` adds).
+    pub fn wire_time(&self, bytes: u64) -> Time {
+        self.latency_ns + (bytes as f64 / self.bandwidth_bps * 1e9) as Time
+    }
+}
+
+/// All service-time constants, in nanoseconds unless noted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    // ---- broker frontend (RAMCloud-style dispatcher/worker, paper §II-B) ----
+    /// Dispatcher poll + dispatch per RPC (single dispatcher core).
+    pub dispatch_ns: Time,
+    /// Fixed worker-side cost to start any RPC handler.
+    pub rpc_base_ns: Time,
+    /// Broker-side memory write bandwidth for appends (bytes/s).
+    pub append_bw_bps: f64,
+    /// Broker-side memory read bandwidth for pulls/pushes (bytes/s).
+    pub read_bw_bps: f64,
+    /// Per-chunk bookkeeping on append (offset index, seal check).
+    pub append_chunk_ns: Time,
+    /// Per-chunk bookkeeping on read (offset lookup).
+    pub read_chunk_ns: Time,
+
+    // ---- push path (shared-memory object store, paper §IV-B) ----
+    /// Create/fill bookkeeping per shared object (pointer hand-off, header).
+    pub push_object_ns: Time,
+    /// Per-record work of the dedicated push thread while building an
+    /// object (chunk iteration, framing, offset bookkeeping) — this is what
+    /// saturates at Nc=8 in the paper's Fig. 4 ("does not scale ... due to
+    /// the limitations of the dedicated thread pushing the chunks").
+    pub push_fill_record_ns: Time,
+    /// Notification delivery (store -> source task or back), same node.
+    pub notify_ns: Time,
+
+    // ---- clients ----
+    /// Producer record generation + serialisation, per record.
+    pub producer_record_ns: Time,
+    /// Engine ("Flink"/JVM) per-record cost on the pull source's serial
+    /// fetch loop: network read, decompress, deserialise, emit. This is
+    /// what the shared-memory push path eliminates (paper §IV-B).
+    pub engine_record_ns: Time,
+    /// Per-record cost on the push group's consume thread: pointer access
+    /// into the shared object + routing — no copy, no deserialisation.
+    pub push_consume_record_ns: Time,
+    /// Handling cost per shared-object notification (paper Step 3/4 loop).
+    pub push_object_handle_ns: Time,
+    /// Native ("C++") per-record consume cost — the Fig. 7 baseline.
+    pub native_record_ns: Time,
+    /// Client-side per-RPC overhead of the pull fetch loop (request build,
+    /// response handling) — dominates when chunks are small (Fig. 8).
+    pub pull_rpc_client_ns: Time,
+    /// Mapper per-record cost of the count flatMap (RTLogger).
+    pub count_map_ns: Time,
+    /// Mapper per-record extra cost of the grep filter operator.
+    pub filter_record_ns: Time,
+    /// Mapper per-token cost of the word-count tokenizer (string split,
+    /// object churn — the reason Fig. 9 is CPU-bound).
+    pub tokenize_token_ns: Time,
+    /// Per-tuple cost of the keyed sum / window operators downstream.
+    pub keyed_tuple_ns: Time,
+    /// Tokens per 2 KiB text record (sim-plane estimate; the real plane
+    /// counts exactly via the wordcount kernel).
+    pub tokens_per_record: u64,
+    /// Fixed cost for a source task to hand a batch to the next operator
+    /// queue (Flink network-stack hop when tasks are not chained).
+    pub queue_hop_ns: Time,
+
+    // ---- network ----
+    pub network: NetworkProfile,
+    /// Colocated processes on a node talk via loopback.
+    pub loopback: NetworkProfile,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            dispatch_ns: 1_000,
+            rpc_base_ns: 2_000,
+            append_bw_bps: 10.0e9,
+            read_bw_bps: 12.0e9,
+            append_chunk_ns: 1_500,
+            read_chunk_ns: 800,
+            push_object_ns: 1_000,
+            push_fill_record_ns: 100,
+            notify_ns: 500,
+            producer_record_ns: 200,
+            engine_record_ns: 700,
+            push_consume_record_ns: 500,
+            push_object_handle_ns: 1_500,
+            native_record_ns: 60,
+            pull_rpc_client_ns: 20_000,
+            count_map_ns: 30,
+            filter_record_ns: 150,
+            tokenize_token_ns: 2_000,
+            keyed_tuple_ns: 1_500,
+            tokens_per_record: 300,
+            queue_hop_ns: 3_000,
+            network: NetworkProfile::INFINIBAND,
+            loopback: NetworkProfile::LOOPBACK,
+        }
+    }
+}
+
+impl CostModel {
+    /// Worker service time to append one chunk of `bytes`.
+    pub fn append_cost(&self, bytes: u64) -> Time {
+        self.append_chunk_ns + (bytes as f64 / self.append_bw_bps * 1e9) as Time
+    }
+
+    /// Worker service time to read `bytes` across `chunks` chunks.
+    pub fn read_cost(&self, bytes: u64, chunks: u64) -> Time {
+        self.read_chunk_ns * chunks.max(1) + (bytes as f64 / self.read_bw_bps * 1e9) as Time
+    }
+
+    /// Push-thread service time to fill one shared object of `bytes`
+    /// carrying `records` records.
+    pub fn push_fill_cost(&self, bytes: u64, records: u64) -> Time {
+        self.push_object_ns
+            + records * self.push_fill_record_ns
+            + (bytes as f64 / self.read_bw_bps * 1e9) as Time
+    }
+
+    /// Apply a `cost.<key>=value` override.
+    pub fn apply_one(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = || format!("invalid value `{value}` for `cost.{key}`");
+        macro_rules! set_ns {
+            ($field:ident) => {{
+                self.$field = value.parse().map_err(|_| bad())?;
+            }};
+        }
+        match key {
+            "dispatch_ns" => set_ns!(dispatch_ns),
+            "rpc_base_ns" => set_ns!(rpc_base_ns),
+            "append_chunk_ns" => set_ns!(append_chunk_ns),
+            "read_chunk_ns" => set_ns!(read_chunk_ns),
+            "push_object_ns" => set_ns!(push_object_ns),
+            "push_fill_record_ns" => set_ns!(push_fill_record_ns),
+            "notify_ns" => set_ns!(notify_ns),
+            "producer_record_ns" => set_ns!(producer_record_ns),
+            "engine_record_ns" => set_ns!(engine_record_ns),
+            "push_consume_record_ns" => set_ns!(push_consume_record_ns),
+            "push_object_handle_ns" => set_ns!(push_object_handle_ns),
+            "native_record_ns" => set_ns!(native_record_ns),
+            "pull_rpc_client_ns" => set_ns!(pull_rpc_client_ns),
+            "count_map_ns" => set_ns!(count_map_ns),
+            "filter_record_ns" => set_ns!(filter_record_ns),
+            "tokenize_token_ns" => set_ns!(tokenize_token_ns),
+            "keyed_tuple_ns" => set_ns!(keyed_tuple_ns),
+            "tokens_per_record" => set_ns!(tokens_per_record),
+            "queue_hop_ns" => set_ns!(queue_hop_ns),
+            "append_bw_bps" => self.append_bw_bps = value.parse().map_err(|_| bad())?,
+            "read_bw_bps" => self.read_bw_bps = value.parse().map_err(|_| bad())?,
+            "network" => self.network = NetworkProfile::parse(value).ok_or_else(bad)?,
+            _ => return Err(format!("unknown cost key `cost.{key}`")),
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,324 @@
+//! Configuration: every Table I parameter, the cost model, cluster topology.
+//!
+//! The paper's Table I parameter names are kept verbatim (`Np`, `Nc`,
+//! `Nmap`, `Ns`, `CS`, `ReqS`, `RecS`, `Replication`, `NBc`, `NFs`) so an
+//! experiment spec reads like the paper's setup section. Configs load from
+//! a minimal TOML-subset file (`key = value` under `[section]`; the offline
+//! vendor set has no serde/toml) plus `--key=value` CLI overrides.
+
+mod cost;
+mod parse;
+#[cfg(test)]
+mod tests;
+
+pub use cost::{CostModel, NetworkProfile};
+pub use parse::{parse_kv_file, parse_overrides, KvError, KvMap};
+
+/// Which source-reader strategy consumers use — the paper's central axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SourceMode {
+    /// Continuous synchronous pull RPCs (state-of-the-art Flink/Spark style).
+    Pull,
+    /// One subscription RPC + shared-memory objects + notifications (ours).
+    Push,
+    /// The paper's native "C++" pull consumer baseline (no engine overhead).
+    NativePull,
+}
+
+impl SourceMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pull" => Some(Self::Pull),
+            "push" => Some(Self::Push),
+            "native" | "nativepull" | "native-pull" | "cpp" => Some(Self::NativePull),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pull => "pull",
+            Self::Push => "push",
+            Self::NativePull => "native",
+        }
+    }
+}
+
+/// The benchmark applications of §V-B (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Pass over records, count per second (synthetic benchmark 1).
+    Count,
+    /// Count + grep-style filter on each record (synthetic benchmark 2).
+    Filter,
+    /// Wikipedia word count (Listing 2, first pipeline).
+    WordCount,
+    /// Wikipedia windowed word count (5 s window, 1 s slide).
+    WindowedWordCount,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "count" => Some(Self::Count),
+            "filter" => Some(Self::Filter),
+            "wordcount" | "wc" => Some(Self::WordCount),
+            "windowedwordcount" | "wwc" | "windowed-wordcount" => Some(Self::WindowedWordCount),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Count => "count",
+            Self::Filter => "filter",
+            Self::WordCount => "wordcount",
+            Self::WindowedWordCount => "windowed-wordcount",
+        }
+    }
+
+    /// Wikipedia workloads stream 2 KiB text records (paper §V-A).
+    pub fn is_text(&self) -> bool {
+        matches!(self, Self::WordCount | Self::WindowedWordCount)
+    }
+}
+
+/// How chunk payloads flow through the system (DESIGN.md §2, substitution 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Real bytes end-to-end; operators execute the AOT XLA kernels.
+    Real,
+    /// Byte/record accounting only; same control path, calibrated costs.
+    Sim,
+}
+
+impl DataPlane {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "real" => Some(Self::Real),
+            "sim" => Some(Self::Sim),
+            _ => None,
+        }
+    }
+}
+
+/// One experiment = the full Table I vector + run controls.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment label used in reports.
+    pub name: String,
+    /// `Np` — number of producers.
+    pub np: usize,
+    /// `Nc` — number of consumers == sourceParallelism.
+    pub nc: usize,
+    /// `Nmap` — mapper parallelism.
+    pub nmap: usize,
+    /// `Ns` — stream partitions.
+    pub ns: usize,
+    /// `CS` — producer chunk size in bytes.
+    pub producer_chunk: usize,
+    /// Consumer chunk size in bytes (pull `CS`; Fig. 4/5/6 fix it to 128 KiB,
+    /// Fig. 7 sets it equal to the producer's, Fig. 8 to 8x the producer's).
+    pub consumer_chunk: usize,
+    /// `RecS` — record size in bytes.
+    pub record_size: usize,
+    /// `Replication` — 1 (no backup) or 2 (one backup broker on another node).
+    pub replication: usize,
+    /// `NBc` — broker working cores.
+    pub broker_cores: usize,
+    /// `NFs` — processing worker slots.
+    pub worker_slots: usize,
+    /// Source strategy.
+    pub mode: SourceMode,
+    /// Benchmark application.
+    pub workload: Workload,
+    /// Virtual run length in seconds (paper runs 60–180 s).
+    pub duration_secs: u64,
+    /// Warm-up seconds excluded from the p50 aggregation.
+    pub warmup_secs: u64,
+    /// Payload handling.
+    pub data_plane: DataPlane,
+    /// Shared objects per push source (backpressure window).
+    pub push_objects_per_source: usize,
+    /// Pull poll timeout (µs) — the source waits at most this long before
+    /// issuing the next pull RPC even if the last one returned nothing.
+    pub pull_timeout_us: u64,
+    /// Producer chunk seal timeout (µs); paper: up to 1 ms.
+    pub seal_timeout_us: u64,
+    /// Word-count window size/slide in seconds (5/1 in the paper).
+    pub window_size_secs: u64,
+    pub window_slide_secs: u64,
+    /// Inter-task queue capacity in batches (credits per upstream).
+    pub queue_cap: usize,
+    /// Per-producer record budget for text workloads (the paper's
+    /// producers push ~2 GiB then stop); 0 = unbounded.
+    pub corpus_records: u64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Cost model.
+    pub cost: CostModel,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            np: 4,
+            nc: 4,
+            nmap: 8,
+            ns: 8,
+            producer_chunk: 16 * 1024,
+            consumer_chunk: 128 * 1024,
+            record_size: 100,
+            replication: 1,
+            broker_cores: 16,
+            worker_slots: 16,
+            mode: SourceMode::Pull,
+            workload: Workload::Count,
+            duration_secs: 60,
+            warmup_secs: 5,
+            data_plane: DataPlane::Sim,
+            push_objects_per_source: 4,
+            pull_timeout_us: 100,
+            seal_timeout_us: 1000,
+            window_size_secs: 5,
+            window_slide_secs: 1,
+            queue_cap: 8,
+            corpus_records: 0,
+            seed: 0x5E77A_57F3A,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// `ReqS` — request size: one chunk for each partition a producer
+    /// appends to in a single synchronous RPC (Table I).
+    pub fn request_size(&self) -> usize {
+        self.producer_chunk * self.partitions_per_producer_rpc()
+    }
+
+    /// The paper's producers write one chunk per partition of the broker
+    /// per RPC; all partitions live on the single storage broker.
+    pub fn partitions_per_producer_rpc(&self) -> usize {
+        self.ns
+    }
+
+    /// Records per producer chunk (chunks are record-framed, never split
+    /// a record).
+    pub fn records_per_chunk(&self) -> usize {
+        (self.producer_chunk / self.record_size).max(1)
+    }
+
+    /// Validate the cross-field invariants before launching.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.np == 0 || self.ns == 0 {
+            return Err("Np and Ns must be positive".into());
+        }
+        if self.nc == 0 || self.nc > self.ns {
+            return Err(format!(
+                "Nc={} must be in 1..=Ns={} (one partition is consumed by exactly one consumer)",
+                self.nc, self.ns
+            ));
+        }
+        if self.ns % self.nc != 0 {
+            return Err(format!(
+                "Ns={} must divide evenly among Nc={} consumers",
+                self.ns, self.nc
+            ));
+        }
+        if !(1..=2).contains(&self.replication) {
+            return Err("Replication must be 1 or 2".into());
+        }
+        if self.record_size == 0 || self.record_size > self.producer_chunk {
+            return Err(format!(
+                "RecS={} must fit in the producer chunk ({} B)",
+                self.record_size, self.producer_chunk
+            ));
+        }
+        if self.consumer_chunk < self.producer_chunk {
+            return Err("consumer chunk must be >= producer chunk".into());
+        }
+        if self.broker_cores == 0 || self.worker_slots == 0 {
+            return Err("NBc and NFs must be positive".into());
+        }
+        if self.duration_secs <= self.warmup_secs {
+            return Err("duration must exceed warmup".into());
+        }
+        if self.window_slide_secs == 0 || self.window_size_secs < self.window_slide_secs {
+            return Err("window size must be >= slide > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Apply `key=value` overrides (CLI or file body).
+    pub fn apply(&mut self, kv: &KvMap) -> Result<(), String> {
+        for (key, value) in kv.iter() {
+            self.apply_one(key, value)?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |k: &str, v: &str| format!("invalid value `{v}` for `{k}`");
+        match key {
+            "name" => self.name = value.to_string(),
+            "np" => self.np = value.parse().map_err(|_| bad(key, value))?,
+            "nc" => self.nc = value.parse().map_err(|_| bad(key, value))?,
+            "nmap" => self.nmap = value.parse().map_err(|_| bad(key, value))?,
+            "ns" => self.ns = value.parse().map_err(|_| bad(key, value))?,
+            "producer_chunk" | "cs" => {
+                self.producer_chunk = parse::parse_size(value).ok_or_else(|| bad(key, value))?
+            }
+            "consumer_chunk" => {
+                self.consumer_chunk = parse::parse_size(value).ok_or_else(|| bad(key, value))?
+            }
+            "record_size" | "recs" => {
+                self.record_size = parse::parse_size(value).ok_or_else(|| bad(key, value))?
+            }
+            "replication" => self.replication = value.parse().map_err(|_| bad(key, value))?,
+            "broker_cores" | "nbc" => {
+                self.broker_cores = value.parse().map_err(|_| bad(key, value))?
+            }
+            "worker_slots" | "nfs" => {
+                self.worker_slots = value.parse().map_err(|_| bad(key, value))?
+            }
+            "mode" => self.mode = SourceMode::parse(value).ok_or_else(|| bad(key, value))?,
+            "workload" => {
+                self.workload = Workload::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "duration_secs" | "duration" => {
+                self.duration_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "warmup_secs" | "warmup" => {
+                self.warmup_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "data_plane" => {
+                self.data_plane = DataPlane::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "push_objects_per_source" => {
+                self.push_objects_per_source = value.parse().map_err(|_| bad(key, value))?
+            }
+            "pull_timeout_us" => {
+                self.pull_timeout_us = value.parse().map_err(|_| bad(key, value))?
+            }
+            "seal_timeout_us" => {
+                self.seal_timeout_us = value.parse().map_err(|_| bad(key, value))?
+            }
+            "window_size_secs" => {
+                self.window_size_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "window_slide_secs" => {
+                self.window_slide_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "queue_cap" => self.queue_cap = value.parse().map_err(|_| bad(key, value))?,
+            "corpus_records" => {
+                self.corpus_records = value.parse().map_err(|_| bad(key, value))?
+            }
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            _ if key.starts_with("cost.") => self.cost.apply_one(&key[5..], value)?,
+            _ => return Err(format!("unknown config key `{key}`")),
+        }
+        Ok(())
+    }
+}

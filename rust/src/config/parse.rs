@@ -1,0 +1,144 @@
+//! Minimal `key = value` config parser + size/CLI helpers.
+//!
+//! The offline vendor set has no serde/toml, so experiment files use a flat
+//! TOML subset: comments (`#`), blank lines, optional `[section]` headers
+//! that prefix keys with `section.`, bare or quoted string values.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Ordered key-value view of a config file or CLI override list.
+#[derive(Debug, Default, Clone)]
+pub struct KvMap {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.entries.insert(key.into(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Config parse failure with line context.
+#[derive(Debug)]
+pub struct KvError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Parse a config file body.
+pub fn parse_kv_file(body: &str) -> Result<KvMap, KvError> {
+    let mut map = KvMap::new();
+    let mut section = String::new();
+    for (idx, raw) in body.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| KvError {
+                line: lineno,
+                message: format!("unterminated section header `{line}`"),
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| KvError {
+            line: lineno,
+            message: format!("expected `key = value`, got `{line}`"),
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(KvError { line: lineno, message: "empty key".into() });
+        }
+        let mut value = value.trim();
+        // strip trailing comment on unquoted values
+        if !value.starts_with('"') {
+            if let Some(pos) = value.find('#') {
+                value = value[..pos].trim_end();
+            }
+        }
+        let value = value.trim_matches('"');
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(full_key, value);
+    }
+    Ok(map)
+}
+
+/// Parse `--key=value` CLI overrides (`--` prefix optional).
+pub fn parse_overrides<I, S>(args: I) -> Result<KvMap, String>
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let mut map = KvMap::new();
+    for arg in args {
+        let arg = arg.as_ref();
+        let body = arg.strip_prefix("--").unwrap_or(arg);
+        let (key, value) = body
+            .split_once('=')
+            .ok_or_else(|| format!("expected key=value, got `{arg}`"))?;
+        if key.is_empty() {
+            return Err(format!("empty key in `{arg}`"));
+        }
+        map.insert(key.trim(), value.trim());
+    }
+    Ok(map)
+}
+
+/// Parse sizes with optional binary suffix: `4096`, `64k`/`64K`/`64KiB`,
+/// `8m`/`8MiB`, `1g`. The paper quotes chunk sizes in KiB.
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let lower = s.to_ascii_lowercase();
+    let (digits, mult) = if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")) {
+        (p, 1024)
+    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")) {
+        (p, 1024 * 1024)
+    } else if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")) {
+        (p, 1024 * 1024 * 1024)
+    } else if let Some(p) = lower.strip_suffix('k') {
+        (p, 1024)
+    } else if let Some(p) = lower.strip_suffix('m') {
+        (p, 1024 * 1024)
+    } else if let Some(p) = lower.strip_suffix('g') {
+        (p, 1024 * 1024 * 1024)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let n: usize = digits.trim().parse().ok()?;
+    Some(n * mult)
+}

@@ -1,0 +1,212 @@
+//! Unit tests: config parsing, validation, cost model.
+
+use super::*;
+
+mod parse_size {
+    use super::parse::parse_size;
+
+    #[test]
+    fn plain_bytes() {
+        assert_eq!(parse_size("4096"), Some(4096));
+    }
+
+    #[test]
+    fn kib_variants() {
+        for s in ["128k", "128K", "128KiB", "128kb", " 128 k "] {
+            assert_eq!(parse_size(s), Some(128 * 1024), "{s}");
+        }
+    }
+
+    #[test]
+    fn mib_and_gib() {
+        assert_eq!(parse_size("8MiB"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_size("1g"), Some(1024 * 1024 * 1024));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("12q"), None);
+        assert_eq!(parse_size("k"), None);
+    }
+}
+
+mod kv {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_quotes() {
+        let body = r#"
+# experiment file
+name = "fig7"
+np = 4
+
+[cost]
+dispatch_ns = 900   # tuned
+network = infiniband
+"#;
+        let kv = parse_kv_file(body).unwrap();
+        assert_eq!(kv.get("name"), Some("fig7"));
+        assert_eq!(kv.get("np"), Some("4"));
+        assert_eq!(kv.get("cost.dispatch_ns"), Some("900"));
+        assert_eq!(kv.get("cost.network"), Some("infiniband"));
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        let err = parse_kv_file("npx 4").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn rejects_unterminated_section() {
+        assert!(parse_kv_file("[cost").is_err());
+    }
+
+    #[test]
+    fn overrides_with_and_without_dashes() {
+        let kv = parse_overrides(["--np=8", "mode=push"]).unwrap();
+        assert_eq!(kv.get("np"), Some("8"));
+        assert_eq!(kv.get("mode"), Some("push"));
+    }
+
+    #[test]
+    fn overrides_reject_bare_flag() {
+        assert!(parse_overrides(["--push"]).is_err());
+    }
+}
+
+mod experiment {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_table1_keys() {
+        let mut cfg = ExperimentConfig::default();
+        let kv = parse_overrides([
+            "np=8", "nc=8", "ns=8", "cs=32KiB", "recs=100", "replication=2",
+            "nbc=4", "nfs=8", "mode=push", "workload=filter",
+            "consumer_chunk=256KiB", "cost.dispatch_ns=1200",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.np, 8);
+        assert_eq!(cfg.producer_chunk, 32 * 1024);
+        assert_eq!(cfg.replication, 2);
+        assert_eq!(cfg.broker_cores, 4);
+        assert_eq!(cfg.mode, SourceMode::Push);
+        assert_eq!(cfg.workload, Workload::Filter);
+        assert_eq!(cfg.cost.dispatch_ns, 1200);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut cfg = ExperimentConfig::default();
+        let kv = parse_overrides(["bogus=1"]).unwrap();
+        assert!(cfg.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_consumer_exceeding_partitions() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nc = 16;
+        cfg.ns = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_requires_even_partition_split() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nc = 3;
+        cfg.ns = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_replication() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.replication = 3;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_record_bigger_than_chunk() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.record_size = cfg.producer_chunk + 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_consumer_chunk_smaller_than_producer() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.consumer_chunk = cfg.producer_chunk - 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn request_size_is_chunk_times_partitions() {
+        let cfg = ExperimentConfig { producer_chunk: 4096, ns: 8, ..Default::default() };
+        assert_eq!(cfg.request_size(), 8 * 4096);
+    }
+
+    #[test]
+    fn records_per_chunk_floors() {
+        let cfg = ExperimentConfig {
+            producer_chunk: 1024,
+            record_size: 100,
+            ..Default::default()
+        };
+        assert_eq!(cfg.records_per_chunk(), 10);
+    }
+}
+
+mod cost_model {
+    use super::*;
+
+    #[test]
+    fn append_cost_scales_with_bytes() {
+        let cm = CostModel::default();
+        let small = cm.append_cost(1024);
+        let big = cm.append_cost(128 * 1024);
+        assert!(big > small);
+        // 128 KiB at 10 GB/s ~ 13.1 us plus bookkeeping
+        assert!((12_000..20_000).contains(&big), "{big}");
+    }
+
+    #[test]
+    fn read_cost_counts_chunks() {
+        let cm = CostModel::default();
+        assert!(cm.read_cost(4096, 4) > cm.read_cost(4096, 1));
+    }
+
+    #[test]
+    fn wire_time_includes_latency_and_bandwidth() {
+        let ib = NetworkProfile::INFINIBAND;
+        assert_eq!(ib.wire_time(0), ib.latency_ns);
+        // 1 MiB at 12.5 GB/s ~ 83.9 us
+        let t = ib.wire_time(1024 * 1024);
+        assert!((80_000..90_000).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn commodity_slower_than_infiniband() {
+        let b = 64 * 1024;
+        assert!(NetworkProfile::COMMODITY.wire_time(b) > NetworkProfile::INFINIBAND.wire_time(b));
+    }
+
+    #[test]
+    fn cost_overrides() {
+        let mut cm = CostModel::default();
+        cm.apply_one("engine_record_ns", "123").unwrap();
+        assert_eq!(cm.engine_record_ns, 123);
+        cm.apply_one("network", "commodity").unwrap();
+        assert_eq!(cm.network.name, "commodity-10g");
+        assert!(cm.apply_one("nope", "1").is_err());
+        assert!(cm.apply_one("dispatch_ns", "abc").is_err());
+    }
+}

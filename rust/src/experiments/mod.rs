@@ -1,0 +1,414 @@
+//! The experiment catalog: one driver per table/figure of the paper's
+//! evaluation (§V), plus the ablations DESIGN.md §4 calls out.
+//!
+//! Each figure is a [`FigureSpec`]: a list of labelled [`ExperimentConfig`]
+//! rows whose p50 throughputs are the series the paper plots. The bench
+//! harnesses (`rust/benches/figN_*.rs`) and the CLI (`zettastream bench`)
+//! both run these specs and print the rows.
+
+#[cfg(test)]
+mod tests;
+
+use crate::cluster::{launch, RunSummary};
+use crate::config::{ExperimentConfig, SourceMode, Workload};
+
+/// Chunk sizes the paper sweeps (KiB): "values=1,2,4,8,16,32,64,128".
+pub const CHUNK_SIZES_KIB: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// One figure/table to regenerate.
+pub struct FigureSpec {
+    /// `fig3` ... `fig9`, `ablation-*`.
+    pub id: &'static str,
+    pub title: &'static str,
+    /// What the paper's version of this figure shows (the shape to check).
+    pub expectation: &'static str,
+    pub rows: Vec<(String, ExperimentConfig)>,
+}
+
+fn base(duration: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        duration_secs: duration,
+        warmup_secs: duration / 6,
+        ..Default::default()
+    }
+}
+
+/// Fig. 3 — ingestion-only: Np ∈ {2,4,8}, Replication ∈ {1,2}, sweep CS.
+/// "R1Prods2 ... two producers ... one single copy; R2Prods8 ... eight
+/// producers with replication factor two."
+pub fn fig3(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    let mut rows = Vec::new();
+    for &np in &[2usize, 4, 8] {
+        for &repl in &[1usize, 2] {
+            for &cs in chunk_sizes {
+                let mut c = base(duration);
+                c.np = np;
+                c.nc = 1; // consumers idle: give the single consumer all partitions
+                c.ns = 8;
+                c.nmap = 1;
+                c.replication = repl;
+                c.producer_chunk = cs * 1024;
+                c.consumer_chunk = 128 * 1024;
+                c.record_size = 100;
+                c.broker_cores = 16;
+                c.mode = SourceMode::NativePull;
+                // Ingestion benchmark: measure producers only. A single
+                // idle-ish native consumer stands in for "no consumers".
+                c.pull_timeout_us = 1_000_000;
+                c.workload = Workload::Count;
+                c.name = format!("R{repl}Prods{np}/cs{cs}KiB");
+                rows.push((c.name.clone(), c));
+            }
+        }
+    }
+    FigureSpec {
+        id: "fig3",
+        title: "Ingestion benchmark: producers only, 8 partitions, RecS=100B",
+        expectation: "throughput grows with CS and Np; Replication=2 visibly lower",
+        rows,
+    }
+}
+
+/// Helper for the concurrent producer/consumer figures: one row per
+/// (mode, Np=Nc, producer CS).
+#[allow(clippy::too_many_arguments)]
+fn pc_rows(
+    duration: u64,
+    modes: &[SourceMode],
+    npc: &[usize],
+    chunk_sizes: &[usize],
+    ns: usize,
+    nbc: usize,
+    workload: Workload,
+    replication: usize,
+    consumer_chunk: ConsumerChunk,
+) -> Vec<(String, ExperimentConfig)> {
+    let mut rows = Vec::new();
+    for &mode in modes {
+        for &n in npc {
+            for &cs in chunk_sizes {
+                let mut c = base(duration);
+                c.np = n;
+                c.nc = n.min(ns);
+                c.nmap = 8;
+                c.ns = ns;
+                c.replication = replication;
+                c.producer_chunk = cs * 1024;
+                c.consumer_chunk = match consumer_chunk {
+                    ConsumerChunk::Fixed128KiB => 128 * 1024,
+                    ConsumerChunk::EqualToProducer => cs * 1024,
+                    ConsumerChunk::EightTimesProducer => 8 * cs * 1024,
+                };
+                c.record_size = 100;
+                c.broker_cores = nbc;
+                c.worker_slots = 16;
+                c.mode = mode;
+                c.workload = workload;
+                c.name = format!("{}{}x/cs{}KiB", mode.name(), n, cs);
+                rows.push((c.name.clone(), c));
+            }
+        }
+    }
+    rows
+}
+
+#[derive(Clone, Copy)]
+enum ConsumerChunk {
+    Fixed128KiB,
+    EqualToProducer,
+    EightTimesProducer,
+}
+
+/// Fig. 4 — iterate + count, 8 partitions, 16-core broker, consumer chunk
+/// fixed 128 KiB; producers vs pull vs push at Np=Nc ∈ {2,4,8}.
+pub fn fig4(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    FigureSpec {
+        id: "fig4",
+        title: "Iterate+count, Ns=8, NBc=16, consumer CS=128KiB",
+        expectation: "push ≥ pull for Nc<=4 with 2 source threads vs 2*Nc; \
+                      push does NOT scale to Nc=8 (single push/consume thread); \
+                      consumers mostly below producers",
+        rows: pc_rows(
+            duration,
+            &[SourceMode::Pull, SourceMode::Push],
+            &[2, 4, 8],
+            chunk_sizes,
+            8,
+            16,
+            Workload::Count,
+            1,
+            ConsumerChunk::Fixed128KiB,
+        ),
+    }
+}
+
+/// Fig. 5 — iterate + count + filter, 8 partitions: pull vs push.
+pub fn fig5(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    FigureSpec {
+        id: "fig5",
+        title: "Iterate+count+filter, Ns=8, consumer CS=128KiB",
+        expectation: "same shape as fig4 with slightly lower consumer throughput \
+                      (filter adds per-record CPU); push@8 lags pull@8",
+        rows: pc_rows(
+            duration,
+            &[SourceMode::Pull, SourceMode::Push],
+            &[2, 4, 8],
+            chunk_sizes,
+            8,
+            16,
+            Workload::Filter,
+            1,
+            ConsumerChunk::Fixed128KiB,
+        ),
+    }
+}
+
+/// Fig. 6 — iterate + count + filter with only 4 partitions, up to 4
+/// producers/consumers.
+pub fn fig6(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    FigureSpec {
+        id: "fig6",
+        title: "Iterate+count+filter, Ns=4, up to 4 producers/consumers",
+        expectation: "push slightly higher at small chunks (~+2 Mtup/s), \
+                      advantage fades at large chunks",
+        rows: pc_rows(
+            duration,
+            &[SourceMode::Pull, SourceMode::Push],
+            &[2, 4],
+            chunk_sizes,
+            4,
+            16,
+            Workload::Filter,
+            1,
+            ConsumerChunk::Fixed128KiB,
+        ),
+    }
+}
+
+/// Fig. 7 — constrained broker: NBc=4, Replication=2, Ns=8, Np=Nc=4,
+/// consumer chunk == producer chunk; C++ pull vs Flink pull vs Flink push.
+pub fn fig7(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    FigureSpec {
+        id: "fig7",
+        title: "Constrained broker (NBc=4, Replication=2, Np=Nc=4, Ns=8)",
+        expectation: "native (C++) pull keeps up with producers; Flink push up to \
+                      2x Flink pull; push producers >= pull producers",
+        rows: pc_rows(
+            duration,
+            &[SourceMode::NativePull, SourceMode::Pull, SourceMode::Push],
+            &[4],
+            chunk_sizes,
+            8,
+            4,
+            Workload::Filter,
+            2,
+            ConsumerChunk::EqualToProducer,
+        ),
+    }
+}
+
+/// Fig. 8 — small chunks: producer CS ∈ {1,2,4} KiB, consumer CS = 8x,
+/// 8-core broker.
+pub fn fig8(duration: u64) -> FigureSpec {
+    FigureSpec {
+        id: "fig8",
+        title: "Small chunks (consumer CS = 8x producer CS), NBc=8, Ns=8",
+        expectation: "pull pays per-RPC cost on small available batches; push \
+                      matches or beats it with fewer resources",
+        rows: pc_rows(
+            duration,
+            &[SourceMode::NativePull, SourceMode::Pull, SourceMode::Push],
+            &[4],
+            &[1, 2, 4],
+            8,
+            8,
+            Workload::Count,
+            1,
+            ConsumerChunk::EightTimesProducer,
+        ),
+    }
+}
+
+/// Fig. 9 — Wikipedia (windowed) word count, 4 partitions, Nc ∈ {1,2,4},
+/// Nmap=8, 2 KiB records; pull vs push.
+pub fn fig9(duration: u64) -> FigureSpec {
+    let mut rows = Vec::new();
+    for &windowed in &[false, true] {
+        for &mode in &[SourceMode::Pull, SourceMode::Push] {
+            for &nc in &[1usize, 2, 4] {
+                let mut c = base(duration);
+                c.np = 4;
+                c.nc = nc;
+                c.nmap = 8;
+                c.ns = 4;
+                c.producer_chunk = 16 * 1024;
+                c.consumer_chunk = 128 * 1024;
+                c.record_size = 2048;
+                c.broker_cores = 16;
+                c.mode = mode;
+                c.workload = if windowed {
+                    Workload::WindowedWordCount
+                } else {
+                    Workload::WordCount
+                };
+                c.name = format!(
+                    "{}{}Cons{}",
+                    if windowed { "w" } else { "" },
+                    if mode == SourceMode::Push { "FL" } else { "FPL" },
+                    nc
+                );
+                rows.push((c.name.clone(), c));
+            }
+        }
+    }
+    FigureSpec {
+        id: "fig9",
+        title: "Wikipedia (windowed) word count, Ns=4, Nmap=8, RecS=2KiB",
+        expectation: "pull ≈ push: the benchmark is CPU-bound in the mappers",
+        rows,
+    }
+}
+
+/// Ablations beyond the paper's figures (DESIGN.md §4).
+pub fn ablations(duration: u64) -> Vec<FigureSpec> {
+    let mut specs = Vec::new();
+
+    // (a) push backpressure window: objects per source.
+    let mut rows = Vec::new();
+    for objects in [1usize, 2, 4, 8, 16] {
+        let mut c = base(duration);
+        c.mode = SourceMode::Push;
+        c.push_objects_per_source = objects;
+        c.name = format!("objects{objects}");
+        rows.push((c.name.clone(), c));
+    }
+    specs.push(FigureSpec {
+        id: "ablation-objects",
+        title: "Push backpressure window: shared objects per source",
+        expectation: "1 object serialises fill/consume; >=2 pipelines them; \
+                      diminishing returns after a few",
+        rows,
+    });
+
+    // (b) network profile: the §VII claim that push matters more on
+    // commodity networks.
+    let mut rows = Vec::new();
+    for (net, label) in [("infiniband", "ib"), ("commodity", "10g")] {
+        for mode in [SourceMode::Pull, SourceMode::Push] {
+            let mut c = base(duration);
+            c.mode = mode;
+            c.cost.apply_one("network", net).unwrap();
+            c.name = format!("{}-{}", label, mode.name());
+            rows.push((c.name.clone(), c));
+        }
+    }
+    specs.push(FigureSpec {
+        id: "ablation-network",
+        title: "Network profile: Infiniband vs commodity 10G",
+        expectation: "push's relative advantage grows on the slower network \
+                      (producers own the ingest link; consumers are local)",
+        rows,
+    });
+
+    // (c) pull poll timeout sensitivity.
+    let mut rows = Vec::new();
+    for timeout_us in [10u64, 100, 1_000, 10_000] {
+        let mut c = base(duration);
+        c.mode = SourceMode::Pull;
+        c.np = 1;
+        c.producer_chunk = 2 * 1024; // slow producers: consumers poll often
+        c.pull_timeout_us = timeout_us;
+        c.name = format!("timeout{timeout_us}us");
+        rows.push((c.name.clone(), c));
+    }
+    specs.push(FigureSpec {
+        id: "ablation-timeout",
+        title: "Pull poll-timeout sensitivity (consumer ahead of producers)",
+        expectation: "long timeouts add consume latency when caught up; short \
+                      timeouts burn RPCs (§II-B: 'difficult to tune')",
+        rows,
+    });
+
+    // (d) push fan-in: consumers sharing the single push/consume pair.
+    let mut rows = Vec::new();
+    for nc in [1usize, 2, 4, 8] {
+        let mut c = base(duration);
+        c.mode = SourceMode::Push;
+        c.np = 8;
+        c.nc = nc;
+        c.ns = 8;
+        c.name = format!("push-fanin{nc}");
+        rows.push((c.name.clone(), c));
+    }
+    specs.push(FigureSpec {
+        id: "ablation-fanin",
+        title: "Push fan-in: sources sharing the dedicated thread pair",
+        expectation: "consumer throughput plateaus with Nc (the Fig. 4 \
+                      non-scaling, isolated)",
+        rows,
+    });
+
+    // (e) inter-task queue capacity (credit window).
+    let mut rows = Vec::new();
+    for cap in [1usize, 2, 8, 32] {
+        let mut c = base(duration);
+        c.mode = SourceMode::Push;
+        c.queue_cap = cap;
+        c.name = format!("queue{cap}");
+        rows.push((c.name.clone(), c));
+    }
+    specs.push(FigureSpec {
+        id: "ablation-queue",
+        title: "Credit window (queue capacity) between tasks",
+        expectation: "tiny windows stall sources on queue hops; a few batches \
+                      of slack recovers throughput",
+        rows,
+    });
+
+    specs
+}
+
+/// All paper figures at a given per-row duration and chunk sweep.
+pub fn all_figures(duration: u64, chunk_sizes: &[usize]) -> Vec<FigureSpec> {
+    vec![
+        fig3(duration, chunk_sizes),
+        fig4(duration, chunk_sizes),
+        fig5(duration, chunk_sizes),
+        fig6(duration, chunk_sizes),
+        fig7(duration, chunk_sizes),
+        fig8(duration),
+        fig9(duration),
+    ]
+}
+
+/// Run a figure spec (sim plane) and print the paper-style rows.
+pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
+    println!("== {} — {}", spec.id, spec.title);
+    println!("   expectation: {}", spec.expectation);
+    let mut out = Vec::new();
+    for (_label, config) in &spec.rows {
+        let summary = launch(config, None).run();
+        println!("   {}", summary.report.row());
+        out.push(summary);
+    }
+    out
+}
+
+/// Table II — the benchmark/operator matrix, printable.
+pub fn table2() -> String {
+    let rows = [
+        ("Count, broker 16 cores (Fig.4)", "-", "x", "x", "-"),
+        ("Filter, 8 partitions (Fig.5)", "x", "x", "x", "-"),
+        ("Filter, 4 partitions (Fig.6)", "x", "x", "x", "-"),
+        ("Filter, broker 4 cores (Fig.7)", "x", "x", "x", "-"),
+        ("Small chunks, broker 8 cores (Fig.8)", "-", "x", "x", "-"),
+        ("Windowed Word Count (Fig.9)", "-", "x", "x", "x"),
+    ];
+    let mut s = String::from(
+        "Benchmarks Pull versus Push             | Filter | Count | Map | KeyBy\n",
+    );
+    for (name, f, c, m, k) in rows {
+        s.push_str(&format!("{name:<40}|   {f}    |   {c}   |  {m}  |   {k}\n"));
+    }
+    s
+}

@@ -1,0 +1,106 @@
+//! Catalog sanity: every figure spec is valid and matches the paper's
+//! parameterisation.
+
+use super::*;
+use crate::config::DataPlane;
+
+#[test]
+fn all_figure_rows_validate() {
+    for spec in all_figures(10, &[4, 64]) {
+        assert!(!spec.rows.is_empty(), "{} empty", spec.id);
+        for (label, config) in &spec.rows {
+            config
+                .validate()
+                .unwrap_or_else(|e| panic!("{}/{label}: {e}", spec.id));
+            assert_eq!(config.data_plane, DataPlane::Sim);
+        }
+    }
+}
+
+#[test]
+fn ablation_rows_validate() {
+    for spec in ablations(10) {
+        for (label, config) in &spec.rows {
+            config
+                .validate()
+                .unwrap_or_else(|e| panic!("{}/{label}: {e}", spec.id));
+        }
+    }
+}
+
+#[test]
+fn fig3_sweeps_np_replication_chunks() {
+    let spec = fig3(10, &CHUNK_SIZES_KIB);
+    assert_eq!(spec.rows.len(), 3 * 2 * 8);
+    // the paper's naming convention is preserved
+    assert!(spec.rows.iter().any(|(l, _)| l == "R1Prods2/cs128KiB"));
+    assert!(spec.rows.iter().any(|(l, _)| l == "R2Prods8/cs1KiB"));
+}
+
+#[test]
+fn fig4_uses_16_core_broker_and_fixed_consumer_chunk() {
+    for (_, c) in &fig4(10, &[4]).rows {
+        assert_eq!(c.broker_cores, 16);
+        assert_eq!(c.consumer_chunk, 128 * 1024);
+        assert_eq!(c.ns, 8);
+        assert_eq!(c.record_size, 100);
+    }
+}
+
+#[test]
+fn fig7_is_the_constrained_configuration() {
+    let spec = fig7(10, &[4, 32]);
+    for (_, c) in &spec.rows {
+        assert_eq!(c.broker_cores, 4);
+        assert_eq!(c.replication, 2);
+        assert_eq!(c.np, 4);
+        assert_eq!(c.nc, 4);
+        assert_eq!(c.consumer_chunk, c.producer_chunk, "Fig.7: consumer CS = producer CS");
+    }
+    // all three strategies present
+    let modes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.mode.name()).collect();
+    assert_eq!(modes.len(), 3);
+}
+
+#[test]
+fn fig8_consumer_chunk_is_8x() {
+    for (_, c) in &fig8(10).rows {
+        assert_eq!(c.consumer_chunk, 8 * c.producer_chunk, "Fig.8: 8x higher chunks");
+        assert_eq!(c.broker_cores, 8);
+        assert!(c.producer_chunk <= 4 * 1024);
+    }
+}
+
+#[test]
+fn fig9_is_text_workloads_on_4_partitions() {
+    let spec = fig9(10);
+    assert_eq!(spec.rows.len(), 2 * 2 * 3);
+    for (_, c) in &spec.rows {
+        assert_eq!(c.ns, 4);
+        assert_eq!(c.record_size, 2048);
+        assert!(c.workload.is_text());
+        assert_eq!(c.nmap, 8);
+    }
+    assert!(spec.rows.iter().any(|(l, _)| l == "FLCons2"), "paper's label scheme");
+    assert!(spec.rows.iter().any(|(l, _)| l == "FPLCons4"));
+}
+
+#[test]
+fn table2_lists_all_benchmarks() {
+    let t = table2();
+    for fig in ["Fig.4", "Fig.5", "Fig.6", "Fig.7", "Fig.8", "Fig.9"] {
+        assert!(t.contains(fig), "missing {fig}");
+    }
+}
+
+#[test]
+fn a_small_figure_actually_runs() {
+    let mut spec = fig8(4);
+    spec.rows.truncate(2);
+    let summaries = run_figure(&spec);
+    assert_eq!(summaries.len(), 2);
+    for s in &summaries {
+        assert!(s.report.producers.p50 > 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! # ZettaStream
+//!
+//! A unified real-time storage and processing architecture reproducing
+//! *"Colocating Real-time Storage and Processing: An Analysis of Pull-based
+//! versus Push-based Streaming"* (Marcu & Bouvry, 2022).
+//!
+//! The crate is a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the KerA-like storage broker, the
+//!   Plasma-like shared-memory object store, pull/push/native streaming
+//!   sources, a Flink-like processing worker with a DataStream pipeline
+//!   API, producers, metrics and the experiment harness, all driven by a
+//!   deterministic discrete-event engine ([`sim`]).
+//! * **Layer 2/1 (python/, build-time only)** — the operators' compute
+//!   hot-spots (substring filter, word-hash histogram) as Pallas kernels
+//!   inside JAX graphs, AOT-lowered to HLO text artifacts that
+//!   [`runtime`] loads and [`compute`] executes through PJRT on the
+//!   request path. Python never runs at request time.
+//!
+//! Quick tour: [`config::ExperimentConfig`] describes a run in the paper's
+//! own Table I vocabulary; [`cluster::Launcher`] wires brokers, workers,
+//! producers and sources into an engine; [`experiments`] regenerates every
+//! figure of the paper's evaluation.
+
+pub mod config;
+pub mod sim;
+pub mod broker;
+pub mod metrics;
+pub mod net;
+pub mod plasma;
+pub mod proto;
+pub mod compute;
+pub mod producer;
+pub mod runtime;
+pub mod wikipedia;
+pub mod cluster;
+pub mod ops;
+pub mod pipeline;
+pub mod source;
+pub mod worker;
+pub mod experiments;

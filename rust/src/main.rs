@@ -1,0 +1,232 @@
+//! `zettastream` — the launcher CLI.
+//!
+//! ```text
+//! zettastream run [key=value ...]       one experiment, report to stdout
+//! zettastream bench <fig3..fig9|ablations|all> [--quick] [key=value ...]
+//! zettastream list                      the benchmark catalog (Table II)
+//! zettastream calibrate                 measure the real data plane, print
+//!                                       suggested cost-model overrides
+//! zettastream config [key=value ...]    resolve + dump a config
+//! ```
+//!
+//! Keys are `ExperimentConfig::apply` keys (Table I names: np, nc, nmap,
+//! ns, cs, recs, replication, nbc, nfs, mode, workload, ...) plus
+//! `cost.*` overrides. `run --data_plane=real` loads the AOT artifacts
+//! and executes the Layer-1 kernels on the hot path.
+
+use std::process::ExitCode;
+use std::rc::Rc;
+
+use zettastream::cluster::{launch, RunSummary};
+use zettastream::compute::ComputeEngine;
+use zettastream::config::{parse_kv_file, parse_overrides, DataPlane, ExperimentConfig};
+use zettastream::experiments;
+use zettastream::proto::Chunk;
+use zettastream::wikipedia::CorpusReader;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
+        "list" => cmd_list(),
+        "calibrate" => cmd_calibrate(),
+        "config" => cmd_config(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}` (try `zettastream help`)")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!("{}", include_str!("cli_help.txt"));
+}
+
+/// Build a config from optional `--config <file>` + key=value overrides.
+fn build_config(args: &[String]) -> Result<ExperimentConfig, String> {
+    let mut config = ExperimentConfig::default();
+    let mut overrides = Vec::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--config" {
+            let path = it.next().ok_or("--config needs a path")?;
+            let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let kv = parse_kv_file(&body).map_err(|e| e.to_string())?;
+            config.apply(&kv)?;
+        } else if arg != "--quick" {
+            overrides.push(arg.clone());
+        }
+    }
+    config.apply(&parse_overrides(&overrides)?)?;
+    config.validate()?;
+    Ok(config)
+}
+
+fn make_compute(config: &ExperimentConfig) -> Result<Option<Rc<ComputeEngine>>, String> {
+    if config.data_plane != DataPlane::Real {
+        return Ok(None);
+    }
+    ComputeEngine::xla_from_default_dir()
+        .map(Some)
+        .map_err(|e| format!("{e:#}"))
+}
+
+fn print_summary(s: &RunSummary) {
+    println!("{}", s.report.row());
+    println!(
+        "  totals: produced {} consumed {} pullRPCs {} objects {}",
+        s.records_produced, s.records_consumed, s.pull_rpcs, s.objects_filled
+    );
+    if s.planted > 0 || s.matches > 0 {
+        println!("  filter: planted {} matched {}", s.planted, s.matches);
+    }
+    if s.windows_fired > 0 {
+        println!("  windows fired: {}", s.windows_fired);
+    }
+    for (name, value) in &s.report.gauges {
+        println!("  gauge {name} = {value:.4}");
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let config = build_config(args)?;
+    let compute = make_compute(&config)?;
+    println!(
+        "running `{}`: Np={} Nc={} Ns={} CS={}B mode={} workload={} NBc={} repl={} plane={:?}",
+        config.name,
+        config.np,
+        config.nc,
+        config.ns,
+        config.producer_chunk,
+        config.mode.name(),
+        config.workload.name(),
+        config.broker_cores,
+        config.replication,
+        config.data_plane,
+    );
+    let summary = launch(&config, compute).run();
+    print_summary(&summary);
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<(), String> {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.iter().any(|a| a == "--quick");
+    let duration: u64 = if quick { 8 } else { 30 };
+    let chunks: &[usize] = if quick { &[4, 32, 128] } else { &experiments::CHUNK_SIZES_KIB };
+    let specs = match which {
+        "fig3" => vec![experiments::fig3(duration, chunks)],
+        "fig4" => vec![experiments::fig4(duration, chunks)],
+        "fig5" => vec![experiments::fig5(duration, chunks)],
+        "fig6" => vec![experiments::fig6(duration, chunks)],
+        "fig7" => vec![experiments::fig7(duration, chunks)],
+        "fig8" => vec![experiments::fig8(duration)],
+        "fig9" => vec![experiments::fig9(duration)],
+        "ablations" => experiments::ablations(duration),
+        "all" => {
+            let mut v = experiments::all_figures(duration, chunks);
+            v.extend(experiments::ablations(duration));
+            v
+        }
+        other => return Err(format!("unknown figure `{other}`")),
+    };
+    for spec in &specs {
+        experiments::run_figure(spec);
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<(), String> {
+    println!("{}", experiments::table2());
+    println!("bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 ablations all");
+    Ok(())
+}
+
+fn cmd_config(args: &[String]) -> Result<(), String> {
+    let config = build_config(args)?;
+    println!("{config:#?}");
+    Ok(())
+}
+
+/// Measure the real data plane on this host and suggest cost overrides
+/// (DESIGN.md §6: the sim plane's per-record costs are calibrated from the
+/// real path).
+fn cmd_calibrate() -> Result<(), String> {
+    println!("calibrating on the local host (artifacts: {:?})",
+             zettastream::runtime::ArtifactLibrary::default_dir());
+    // memcpy bandwidth (broker append/read service).
+    let src = vec![7u8; 64 << 20];
+    let mut dst = vec![0u8; 64 << 20];
+    let t0 = std::time::Instant::now();
+    dst.copy_from_slice(&src);
+    let memcpy_bps = 64e6 * 1e3 / t0.elapsed().as_nanos() as f64 * 1e6;
+    println!("memcpy bandwidth: {:.1} GB/s  -> cost.append_bw_bps", memcpy_bps / 1e9);
+
+    // native kernels per record.
+    let mk_chunk = |records: usize, s: usize| {
+        let mut reader = CorpusReader::new(s, records as u64);
+        let mut data = vec![0u8; records * s];
+        reader.fill_records(&mut data);
+        Chunk::real(records as u32, s as u32, Rc::new(data))
+    };
+    let native = ComputeEngine::native();
+    let chunk = mk_chunk(1024, 100);
+    for _ in 0..50 {
+        native.filter_count(&chunk, b"needle").map_err(|e| format!("{e:#}"))?;
+    }
+    let st = native.stats();
+    let native_filter_ns = st.wall_ns / st.records_processed.max(1);
+    println!("native filter: {native_filter_ns} ns/record -> cost.native_record_ns");
+
+    let native2 = ComputeEngine::native();
+    let text = mk_chunk(64, 2048);
+    for _ in 0..20 {
+        native2.wordcount(&text).map_err(|e| format!("{e:#}"))?;
+    }
+    let st = native2.stats();
+    println!(
+        "native wordcount: {} ns/record ({} records)",
+        st.wall_ns / st.records_processed.max(1),
+        st.records_processed
+    );
+
+    // XLA path, if artifacts are built.
+    match ComputeEngine::xla_from_default_dir() {
+        Ok(xla) => {
+            for _ in 0..20 {
+                xla.filter_count(&chunk, b"needle").map_err(|e| format!("{e:#}"))?;
+            }
+            let st = xla.stats();
+            println!(
+                "xla filter (PJRT, interpret-lowered): {} ns/record",
+                st.wall_ns / st.records_processed.max(1)
+            );
+            let xla2 = ComputeEngine::xla_from_default_dir().map_err(|e| format!("{e:#}"))?;
+            for _ in 0..5 {
+                xla2.wordcount(&text).map_err(|e| format!("{e:#}"))?;
+            }
+            let st = xla2.stats();
+            println!(
+                "xla wordcount (PJRT): {} ns/record",
+                st.wall_ns / st.records_processed.max(1)
+            );
+        }
+        Err(e) => println!("xla path skipped ({e:#}); run `make artifacts`"),
+    }
+    println!(
+        "\napply overrides like:\n  zettastream run cost.native_record_ns={native_filter_ns} ..."
+    );
+    Ok(())
+}

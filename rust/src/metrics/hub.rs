@@ -1,0 +1,133 @@
+//! The metrics blackboard shared by all actors.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::sim::{Time, SECOND};
+
+/// Throughput series class. Matches what the paper plots per figure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Class {
+    /// Records acknowledged to producers (appended).
+    ProducerRecords,
+    /// Tuples processed by consumers (the RTLogger counts).
+    ConsumerTuples,
+    /// Bytes appended (broker ingest volume).
+    ProducerBytes,
+    /// Bytes served to consumers (pull replies + filled objects).
+    ConsumerBytes,
+    /// Pull RPCs issued (resource accounting; push issues ~0).
+    PullRpcs,
+    /// Shared objects filled (push path volume).
+    ObjectsFilled,
+}
+
+impl Class {
+    pub const ALL: [Class; 6] = [
+        Class::ProducerRecords,
+        Class::ConsumerTuples,
+        Class::ProducerBytes,
+        Class::ConsumerBytes,
+        Class::PullRpcs,
+        Class::ObjectsFilled,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Class::ProducerRecords => "producer_records",
+            Class::ConsumerTuples => "consumer_tuples",
+            Class::ProducerBytes => "producer_bytes",
+            Class::ConsumerBytes => "consumer_bytes",
+            Class::PullRpcs => "pull_rpcs",
+            Class::ObjectsFilled => "objects_filled",
+        }
+    }
+}
+
+/// Per-(class, entity) counters bucketed by virtual second, plus end-of-run
+/// gauges (utilisation, thread counts) set by the launcher.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    // (class, entity) -> per-second counts, indexed by second.
+    series: HashMap<(Class, usize), Vec<u64>>,
+    gauges: Vec<(String, f64)>,
+}
+
+/// Shared handle actors hold.
+pub type SharedMetrics = Rc<RefCell<MetricsHub>>;
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shared() -> SharedMetrics {
+        Rc::new(RefCell::new(Self::new()))
+    }
+
+    /// Add `n` to the (class, entity) counter of the current second.
+    pub fn record(&mut self, class: Class, entity: usize, now: Time, n: u64) {
+        let sec = (now / SECOND) as usize;
+        let buckets = self.series.entry((class, entity)).or_default();
+        if buckets.len() <= sec {
+            buckets.resize(sec + 1, 0);
+        }
+        buckets[sec] += n;
+    }
+
+    /// Sum of a class across entities per second, over `[warmup, horizon)`.
+    /// Seconds with no activity count as zero — an idle system *is* a
+    /// zero-throughput system, and the paper's percentile must see that.
+    pub fn per_second_totals(&self, class: Class, warmup_s: u64, horizon_s: u64) -> Vec<u64> {
+        let lo = warmup_s as usize;
+        let hi = horizon_s as usize;
+        let mut totals = vec![0u64; hi.saturating_sub(lo)];
+        for ((c, _), buckets) in &self.series {
+            if *c != class {
+                continue;
+            }
+            for (sec, &v) in buckets.iter().enumerate() {
+                if sec >= lo && sec < hi {
+                    totals[sec - lo] += v;
+                }
+            }
+        }
+        totals
+    }
+
+    /// Lifetime total for a class.
+    pub fn total(&self, class: Class) -> u64 {
+        self.series
+            .iter()
+            .filter(|((c, _), _)| *c == class)
+            .map(|(_, b)| b.iter().sum::<u64>())
+            .sum()
+    }
+
+    /// Lifetime total for one entity of a class.
+    pub fn total_for(&self, class: Class, entity: usize) -> u64 {
+        self.series
+            .get(&(class, entity))
+            .map(|b| b.iter().sum())
+            .unwrap_or(0)
+    }
+
+    /// Entities that reported a class (e.g. how many consumers made progress).
+    pub fn entities(&self, class: Class) -> usize {
+        self.series.keys().filter(|(c, _)| *c == class).count()
+    }
+
+    /// Record an end-of-run gauge (utilisation, thread count, ...).
+    pub fn set_gauge(&mut self, name: impl Into<String>, value: f64) {
+        self.gauges.push((name.into(), value));
+    }
+
+    pub fn gauges(&self) -> &[(String, f64)] {
+        &self.gauges
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().rev().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+}

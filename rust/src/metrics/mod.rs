@@ -1,0 +1,15 @@
+//! Per-virtual-second throughput recording and the paper's p50 statistic.
+//!
+//! The paper: "We run each experiment for 60 to 180 seconds while we collect
+//! producer and consumer throughput metrics (records/tuples every second).
+//! We plot 50-percentile aggregated throughput per second" (§V-C). The hub
+//! buckets every counter increment into its virtual second; a report then
+//! sums across entities of a class per second and takes the median second.
+
+mod hub;
+mod report;
+#[cfg(test)]
+mod tests;
+
+pub use hub::{Class, MetricsHub, SharedMetrics};
+pub use report::{percentile, ExperimentReport, SeriesStat};

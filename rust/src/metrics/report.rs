@@ -1,0 +1,100 @@
+//! Experiment reports: the rows each figure of the paper plots.
+
+use super::{Class, MetricsHub};
+
+/// Summary statistics of one per-second series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesStat {
+    /// The paper's statistic: median per-second aggregated throughput.
+    pub p50: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mean: f64,
+    pub seconds: usize,
+}
+
+impl SeriesStat {
+    pub fn from_series(series: &[u64]) -> Self {
+        if series.is_empty() {
+            return SeriesStat { p50: 0.0, p10: 0.0, p90: 0.0, mean: 0.0, seconds: 0 };
+        }
+        let mut sorted: Vec<u64> = series.to_vec();
+        sorted.sort_unstable();
+        let mean = sorted.iter().sum::<u64>() as f64 / sorted.len() as f64;
+        SeriesStat {
+            p50: percentile(&sorted, 50.0),
+            p10: percentile(&sorted, 10.0),
+            p90: percentile(&sorted, 90.0),
+            mean,
+            seconds: series.len(),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted series.
+pub fn percentile(sorted: &[u64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((pct / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)] as f64
+}
+
+/// Everything one experiment run reports — one row of a figure's series.
+#[derive(Debug, Clone)]
+pub struct ExperimentReport {
+    pub name: String,
+    /// Producer records/s (aggregated, p50 across seconds).
+    pub producers: SeriesStat,
+    /// Consumer tuples/s (aggregated, p50 across seconds).
+    pub consumers: SeriesStat,
+    pub producer_bytes: SeriesStat,
+    pub consumer_bytes: SeriesStat,
+    /// Pull RPCs issued per second (resource pressure on the dispatcher).
+    pub pull_rpcs: SeriesStat,
+    /// Shared objects filled per second (push-path volume).
+    pub objects_filled: SeriesStat,
+    /// End-of-run gauges (utilisations, thread counts).
+    pub gauges: Vec<(String, f64)>,
+}
+
+impl ExperimentReport {
+    /// Build from the hub over `[warmup, horizon)` seconds.
+    pub fn from_hub(name: &str, hub: &MetricsHub, warmup_s: u64, horizon_s: u64) -> Self {
+        let stat = |class: Class| {
+            SeriesStat::from_series(&hub.per_second_totals(class, warmup_s, horizon_s))
+        };
+        ExperimentReport {
+            name: name.to_string(),
+            producers: stat(Class::ProducerRecords),
+            consumers: stat(Class::ConsumerTuples),
+            producer_bytes: stat(Class::ProducerBytes),
+            consumer_bytes: stat(Class::ConsumerBytes),
+            pull_rpcs: stat(Class::PullRpcs),
+            objects_filled: stat(Class::ObjectsFilled),
+            gauges: hub.gauges().to_vec(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().rev().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Cluster throughput the paper plots: producers + consumers, Mrec/s.
+    pub fn cluster_mrec_s(&self) -> f64 {
+        (self.producers.p50 + self.consumers.p50) / 1e6
+    }
+
+    /// One aligned table row (figure harnesses print these).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<34} prod(p50) {:>9.3} Mrec/s  cons(p50) {:>9.3} Mtup/s  cluster {:>9.3} M/s  pullRPC/s {:>9.0}  objs/s {:>7.0}",
+            self.name,
+            self.producers.p50 / 1e6,
+            self.consumers.p50 / 1e6,
+            self.cluster_mrec_s(),
+            self.pull_rpcs.p50,
+            self.objects_filled.p50,
+        )
+    }
+}

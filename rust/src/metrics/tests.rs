@@ -1,0 +1,115 @@
+//! Unit tests: second bucketing, aggregation, percentiles.
+
+use super::*;
+use crate::sim::SECOND;
+
+#[test]
+fn record_buckets_by_virtual_second() {
+    let mut hub = MetricsHub::new();
+    hub.record(Class::ProducerRecords, 0, 0, 10);
+    hub.record(Class::ProducerRecords, 0, SECOND - 1, 5);
+    hub.record(Class::ProducerRecords, 0, SECOND, 7);
+    let totals = hub.per_second_totals(Class::ProducerRecords, 0, 2);
+    assert_eq!(totals, vec![15, 7]);
+}
+
+#[test]
+fn totals_sum_across_entities() {
+    let mut hub = MetricsHub::new();
+    hub.record(Class::ConsumerTuples, 1, 0, 100);
+    hub.record(Class::ConsumerTuples, 2, 0, 200);
+    hub.record(Class::ConsumerTuples, 2, SECOND, 50);
+    assert_eq!(hub.per_second_totals(Class::ConsumerTuples, 0, 2), vec![300, 50]);
+    assert_eq!(hub.total(Class::ConsumerTuples), 350);
+    assert_eq!(hub.total_for(Class::ConsumerTuples, 2), 250);
+    assert_eq!(hub.entities(Class::ConsumerTuples), 2);
+}
+
+#[test]
+fn warmup_seconds_excluded() {
+    let mut hub = MetricsHub::new();
+    for sec in 0..10u64 {
+        hub.record(Class::ProducerRecords, 0, sec * SECOND, sec);
+    }
+    let totals = hub.per_second_totals(Class::ProducerRecords, 5, 10);
+    assert_eq!(totals, vec![5, 6, 7, 8, 9]);
+}
+
+#[test]
+fn idle_seconds_count_as_zero() {
+    let mut hub = MetricsHub::new();
+    hub.record(Class::ProducerRecords, 0, 0, 4);
+    // horizon 5s but only second 0 active: the series still has 5 entries
+    let totals = hub.per_second_totals(Class::ProducerRecords, 0, 5);
+    assert_eq!(totals, vec![4, 0, 0, 0, 0]);
+}
+
+#[test]
+fn classes_do_not_mix() {
+    let mut hub = MetricsHub::new();
+    hub.record(Class::ProducerRecords, 0, 0, 1);
+    hub.record(Class::ConsumerTuples, 0, 0, 2);
+    assert_eq!(hub.total(Class::ProducerRecords), 1);
+    assert_eq!(hub.total(Class::ConsumerTuples), 2);
+}
+
+#[test]
+fn gauges_last_write_wins() {
+    let mut hub = MetricsHub::new();
+    hub.set_gauge("dispatcher_util", 0.5);
+    hub.set_gauge("dispatcher_util", 0.9);
+    assert_eq!(hub.gauge("dispatcher_util"), Some(0.9));
+    assert_eq!(hub.gauge("missing"), None);
+}
+
+mod stats {
+    use super::*;
+
+    #[test]
+    fn p50_of_odd_series_is_median() {
+        let stat = SeriesStat::from_series(&[10, 30, 20]);
+        assert_eq!(stat.p50, 20.0);
+        assert_eq!(stat.seconds, 3);
+    }
+
+    #[test]
+    fn empty_series_is_zero() {
+        let stat = SeriesStat::from_series(&[]);
+        assert_eq!(stat.p50, 0.0);
+        assert_eq!(stat.seconds, 0);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 100.0), 100.0);
+        let p50 = percentile(&sorted, 50.0);
+        assert!((50.0..=51.0).contains(&p50));
+    }
+
+    #[test]
+    fn constant_series() {
+        let stat = SeriesStat::from_series(&[7; 60]);
+        assert_eq!(stat.p50, 7.0);
+        assert_eq!(stat.mean, 7.0);
+        assert_eq!(stat.p10, 7.0);
+        assert_eq!(stat.p90, 7.0);
+    }
+
+    #[test]
+    fn report_from_hub() {
+        let mut hub = MetricsHub::new();
+        for sec in 0..10u64 {
+            hub.record(Class::ProducerRecords, 0, sec * SECOND, 1_000_000);
+            hub.record(Class::ConsumerTuples, 0, sec * SECOND, 500_000);
+        }
+        hub.set_gauge("source_threads", 2.0);
+        let rep = ExperimentReport::from_hub("t", &hub, 2, 10);
+        assert_eq!(rep.producers.p50, 1_000_000.0);
+        assert_eq!(rep.consumers.p50, 500_000.0);
+        assert!((rep.cluster_mrec_s() - 1.5).abs() < 1e-9);
+        assert_eq!(rep.gauge("source_threads"), Some(2.0));
+        assert!(rep.row().contains("prod(p50)"));
+    }
+}

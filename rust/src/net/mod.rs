@@ -1,0 +1,97 @@
+//! Network model: per-directed-link bandwidth serialisation + latency.
+//!
+//! The paper runs on 100 Gb/s Infiniband ("we avoid the networking
+//! communication becoming a bottleneck", §V-A) but argues push-based
+//! colocation matters *more* on commodity networks (§VII). Both profiles
+//! are first-class here so the ablation benches can flip them.
+//!
+//! Each directed `(from, to)` node pair is a link with a serialisation
+//! horizon: a message occupies the link for `bytes / bandwidth`, then
+//! propagates for `latency`. Same-node traffic uses the loopback profile —
+//! colocated storage and processing is the paper's whole premise, so the
+//! distinction is load-bearing.
+
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::NetworkProfile;
+use crate::sim::Time;
+
+/// Node index in the cluster topology.
+pub type NodeId = usize;
+
+#[derive(Debug, Default)]
+struct Link {
+    /// Time the link becomes free to start serialising the next message.
+    next_free: Time,
+    messages: u64,
+    bytes: u64,
+}
+
+/// The shared network blackboard.
+#[derive(Debug)]
+pub struct Network {
+    profile: NetworkProfile,
+    loopback: NetworkProfile,
+    links: HashMap<(NodeId, NodeId), Link>,
+}
+
+/// Handle actors hold.
+pub type SharedNetwork = Rc<RefCell<Network>>;
+
+impl Network {
+    pub fn new(profile: NetworkProfile, loopback: NetworkProfile) -> Self {
+        Self { profile, loopback, links: HashMap::new() }
+    }
+
+    pub fn shared(profile: NetworkProfile, loopback: NetworkProfile) -> SharedNetwork {
+        Rc::new(RefCell::new(Self::new(profile, loopback)))
+    }
+
+    /// Schedule a message of `bytes` from `from` to `to` starting at `now`;
+    /// returns its delivery time. Mutates the link serialisation horizon —
+    /// concurrent senders on one link queue behind each other, which is how
+    /// "the network is the bottleneck" scenarios emerge.
+    pub fn send(&mut self, now: Time, from: NodeId, to: NodeId, bytes: u64) -> Time {
+        let profile = if from == to { self.loopback } else { self.profile };
+        let link = self.links.entry((from, to)).or_default();
+        let start = link.next_free.max(now);
+        let wire = (bytes as f64 / profile.bandwidth_bps * 1e9) as Time;
+        link.next_free = start + wire;
+        link.messages += 1;
+        link.bytes += bytes;
+        link.next_free + profile.latency_ns
+    }
+
+    /// Delivery time without occupying the link (control messages whose
+    /// payload is negligible: acks, notifications, subscribe).
+    pub fn send_control(&mut self, now: Time, from: NodeId, to: NodeId) -> Time {
+        let profile = if from == to { self.loopback } else { self.profile };
+        now + profile.latency_ns
+    }
+
+    /// Total messages and bytes carried by `(from, to)`.
+    pub fn link_stats(&self, from: NodeId, to: NodeId) -> (u64, u64) {
+        self.links
+            .get(&(from, to))
+            .map(|l| (l.messages, l.bytes))
+            .unwrap_or((0, 0))
+    }
+
+    /// Bytes carried by all non-loopback links.
+    pub fn cross_node_bytes(&self) -> u64 {
+        self.links
+            .iter()
+            .filter(|((f, t), _)| f != t)
+            .map(|(_, l)| l.bytes)
+            .sum()
+    }
+
+    pub fn profile(&self) -> NetworkProfile {
+        self.profile
+    }
+}

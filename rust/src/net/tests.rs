@@ -1,0 +1,73 @@
+//! Unit tests for link serialisation and profiles.
+
+use super::*;
+use crate::config::NetworkProfile;
+
+fn net() -> Network {
+    Network::new(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK)
+}
+
+#[test]
+fn delivery_includes_wire_and_latency() {
+    let mut n = net();
+    let t = n.send(0, 0, 1, 125_000); // 125 kB at 12.5 GB/s = 10 us
+    assert_eq!(t, 10_000 + NetworkProfile::INFINIBAND.latency_ns);
+}
+
+#[test]
+fn messages_serialise_on_a_link() {
+    let mut n = net();
+    let t1 = n.send(0, 0, 1, 125_000);
+    let t2 = n.send(0, 0, 1, 125_000); // queued behind the first
+    assert_eq!(t2 - t1, 10_000);
+}
+
+#[test]
+fn reverse_direction_is_a_separate_link() {
+    let mut n = net();
+    let fwd = n.send(0, 0, 1, 1_250_000);
+    let rev = n.send(0, 1, 0, 1_250_000);
+    assert_eq!(fwd, rev, "full-duplex: directions must not contend");
+}
+
+#[test]
+fn link_frees_over_time() {
+    let mut n = net();
+    n.send(0, 0, 1, 125_000);
+    // 50 us later the link is idle again: no queueing delay
+    let t = n.send(50_000, 0, 1, 0);
+    assert_eq!(t, 50_000 + NetworkProfile::INFINIBAND.latency_ns);
+}
+
+#[test]
+fn loopback_for_same_node() {
+    let mut n = net();
+    let t = n.send(0, 3, 3, 1024);
+    assert!(t < NetworkProfile::INFINIBAND.latency_ns, "loopback must be cheaper: {t}");
+}
+
+#[test]
+fn control_messages_skip_serialisation() {
+    let mut n = net();
+    n.send(0, 0, 1, 10_000_000); // big transfer holds the link
+    let ctl = n.send_control(0, 0, 1);
+    assert_eq!(ctl, NetworkProfile::INFINIBAND.latency_ns);
+}
+
+#[test]
+fn stats_accumulate() {
+    let mut n = net();
+    n.send(0, 0, 1, 100);
+    n.send(0, 0, 1, 200);
+    n.send(0, 2, 2, 999); // loopback
+    assert_eq!(n.link_stats(0, 1), (2, 300));
+    assert_eq!(n.cross_node_bytes(), 300);
+}
+
+#[test]
+fn commodity_profile_queues_sooner() {
+    let mut fast = net();
+    let mut slow = Network::new(NetworkProfile::COMMODITY, NetworkProfile::LOOPBACK);
+    let b = 1_250_000;
+    assert!(slow.send(0, 0, 1, b) > fast.send(0, 0, 1, b));
+}

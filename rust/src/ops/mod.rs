@@ -1,0 +1,376 @@
+//! Streaming operators: the paper's benchmark user functions (Table II).
+//!
+//! Each operator mirrors a Flink function from Listings 1 & 2:
+//!
+//! * [`CountOp`] — `RTLogger`, the iterate-and-count flatMap (benchmark 1);
+//! * [`FilterOp`] — `RichFilterThroughputLogger`, grep + count
+//!   (benchmark 2; Figs. 5-8). On the real data plane it executes the
+//!   Layer-1 filter kernel through PJRT;
+//! * [`TokenizerOp`] — the word-count tokenizer; real plane runs the
+//!   word-hash histogram kernel and routes keyed sub-batches (`keyBy`);
+//! * [`KeyedSumOp`] — `sum(1)`, keyed aggregation state;
+//! * [`WindowedSumOp`] — `countWindow(size, slide).sum(1)`: per-slide
+//!   histograms, window fired on slide ticks via the `window_sum` artifact.
+//!
+//! Operators are passive; [`crate::worker::OperatorTask`] drives them and
+//! charges their virtual cost.
+
+#[cfg(test)]
+mod tests;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::compute::SharedCompute;
+use crate::config::CostModel;
+use crate::proto::Batch;
+use crate::sim::Time;
+
+/// What an operator produced from one batch.
+#[derive(Debug, Default)]
+pub struct OpOutput {
+    /// Batches routed downstream: `(destination task index, batch)`.
+    pub emits: Vec<(usize, Batch)>,
+    /// Tuples this operator counted toward the figure's throughput metric
+    /// (what RTLogger logs every second).
+    pub tuples_logged: u64,
+}
+
+/// A streaming operator driven by an [`crate::worker::OperatorTask`].
+pub trait Operator {
+    fn name(&self) -> &'static str;
+
+    /// Virtual service time to process `batch` on the task's core.
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time;
+
+    /// Process a batch. `from_task` identifies this task for emits.
+    fn apply(&mut self, batch: Batch, from_task: usize, out: &mut OpOutput) -> Result<()>;
+
+    /// Periodic tick for windowed operators (fired every slide).
+    fn on_tick(&mut self, _out: &mut OpOutput) -> Result<()> {
+        Ok(())
+    }
+
+    /// Whether this operator needs slide ticks.
+    fn wants_ticks(&self) -> bool {
+        false
+    }
+
+    /// Downcast hook for end-of-run state inspection.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Iterate + count (`RTLogger`).
+#[derive(Debug, Default)]
+pub struct CountOp {
+    pub total: u64,
+}
+
+impl Operator for CountOp {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "count"
+    }
+
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time {
+        batch.tuples * cost.count_map_ns
+    }
+
+    fn apply(&mut self, batch: Batch, _from: usize, out: &mut OpOutput) -> Result<()> {
+        self.total += batch.tuples;
+        out.tuples_logged = batch.tuples;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Grep filter + count.
+pub struct FilterOp {
+    pub pattern: Vec<u8>,
+    /// Real-plane kernel engine (`None` on the sim plane).
+    pub compute: Option<SharedCompute>,
+    pub total: u64,
+    pub matches: u64,
+}
+
+impl FilterOp {
+    pub fn new(pattern: &[u8], compute: Option<SharedCompute>) -> Self {
+        Self { pattern: pattern.to_vec(), compute, total: 0, matches: 0 }
+    }
+}
+
+impl Operator for FilterOp {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "filter"
+    }
+
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time {
+        batch.tuples * (cost.count_map_ns + cost.filter_record_ns)
+    }
+
+    fn apply(&mut self, batch: Batch, _from: usize, out: &mut OpOutput) -> Result<()> {
+        if let Some(compute) = &self.compute {
+            for chunk in &batch.chunks {
+                self.matches += compute.filter_count(chunk, &self.pattern)?;
+            }
+        }
+        self.total += batch.tuples;
+        out.tuples_logged = batch.tuples;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Word-count tokenizer + `keyBy` exchange.
+pub struct TokenizerOp {
+    /// Downstream keyed tasks (global task indices); bucket space is split
+    /// evenly across them.
+    pub targets: Vec<usize>,
+    pub compute: Option<SharedCompute>,
+    /// Sim-plane tokens-per-record estimate (real plane counts exactly).
+    pub tokens_per_record: u64,
+    pub tokens_emitted: u64,
+}
+
+impl TokenizerOp {
+    pub fn new(targets: Vec<usize>, compute: Option<SharedCompute>, tokens_per_record: u64) -> Self {
+        assert!(!targets.is_empty());
+        Self { targets, compute, tokens_per_record, tokens_emitted: 0 }
+    }
+}
+
+impl Operator for TokenizerOp {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "tokenizer"
+    }
+
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time {
+        // Charged on the token estimate; the real token count (known only
+        // after the kernel runs) tracks it closely for corpus text.
+        batch.tuples * self.tokens_per_record * cost.tokenize_token_ns
+    }
+
+    fn apply(&mut self, batch: Batch, from: usize, out: &mut OpOutput) -> Result<()> {
+        let n = self.targets.len();
+        if let Some(compute) = &self.compute {
+            // Real plane: kernel histogram, split by bucket range.
+            let mut acc: Option<Vec<i32>> = None;
+            for chunk in &batch.chunks {
+                let (hist, _) = compute.wordcount(chunk)?;
+                match &mut acc {
+                    None => acc = Some(hist),
+                    Some(a) => {
+                        for (x, y) in a.iter_mut().zip(hist.iter()) {
+                            *x += y;
+                        }
+                    }
+                }
+            }
+            let hist = acc.unwrap_or_default();
+            let b = hist.len();
+            for (i, &target) in self.targets.iter().enumerate() {
+                let range = &hist[i * b / n..(i + 1) * b / n];
+                let tuples: u64 = range.iter().map(|&v| v as u64).sum();
+                if tuples == 0 {
+                    continue;
+                }
+                self.tokens_emitted += tuples;
+                out.emits.push((
+                    target,
+                    Batch {
+                        from_task: from,
+                        tuples,
+                        bytes: tuples * 8,
+                        chunks: Vec::new(),
+                        hist: Some(std::rc::Rc::new(range.to_vec())),
+                    },
+                ));
+            }
+        } else {
+            // Sim plane: estimated tokens, split evenly.
+            let total = batch.tuples * self.tokens_per_record;
+            for (i, &target) in self.targets.iter().enumerate() {
+                let tuples = total / n as u64
+                    + if i < (total % n as u64) as usize { 1 } else { 0 };
+                if tuples == 0 {
+                    continue;
+                }
+                self.tokens_emitted += tuples;
+                out.emits.push((
+                    target,
+                    Batch {
+                        from_task: from,
+                        tuples,
+                        bytes: tuples * 8,
+                        chunks: Vec::new(),
+                        hist: None,
+                    },
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Keyed `sum(1)`: per-word (bucketed) counts.
+pub struct KeyedSumOp {
+    /// Bucketed counts (real plane) — index is bucket offset within this
+    /// task's range.
+    pub counts: Vec<i64>,
+    pub total_tuples: u64,
+}
+
+impl KeyedSumOp {
+    pub fn new() -> Self {
+        Self { counts: Vec::new(), total_tuples: 0 }
+    }
+
+    fn merge(&mut self, hist: &[i32]) {
+        if self.counts.len() < hist.len() {
+            self.counts.resize(hist.len(), 0);
+        }
+        for (c, v) in self.counts.iter_mut().zip(hist.iter()) {
+            *c += *v as i64;
+        }
+    }
+}
+
+impl Default for KeyedSumOp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Operator for KeyedSumOp {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "keyed-sum"
+    }
+
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time {
+        batch.tuples * cost.keyed_tuple_ns
+    }
+
+    fn apply(&mut self, batch: Batch, _from: usize, out: &mut OpOutput) -> Result<()> {
+        if let Some(hist) = &batch.hist {
+            self.merge(hist);
+        }
+        self.total_tuples += batch.tuples;
+        out.tuples_logged = batch.tuples;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// `countWindow(size, slide).sum(1)`: sliding window over per-slide
+/// histograms; fires every slide tick once `window_slides` are buffered.
+pub struct WindowedSumOp {
+    pub window_slides: usize,
+    pub compute: Option<SharedCompute>,
+    /// Ring of completed slides (newest last).
+    slides: VecDeque<Vec<i32>>,
+    current: Vec<i32>,
+    current_tuples: u64,
+    pub total_tuples: u64,
+    pub windows_fired: u64,
+    /// Tuple count of the last fired window (inspectable).
+    pub last_window_tuples: u64,
+}
+
+impl WindowedSumOp {
+    pub fn new(window_slides: usize, compute: Option<SharedCompute>) -> Self {
+        assert!(window_slides > 0);
+        Self {
+            window_slides,
+            compute,
+            slides: VecDeque::new(),
+            current: Vec::new(),
+            current_tuples: 0,
+            total_tuples: 0,
+            windows_fired: 0,
+            last_window_tuples: 0,
+        }
+    }
+}
+
+impl Operator for WindowedSumOp {
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "windowed-sum"
+    }
+
+    fn cost(&self, batch: &Batch, cost: &CostModel) -> Time {
+        batch.tuples * cost.keyed_tuple_ns
+    }
+
+    fn apply(&mut self, batch: Batch, _from: usize, out: &mut OpOutput) -> Result<()> {
+        if let Some(hist) = &batch.hist {
+            if self.current.len() < hist.len() {
+                self.current.resize(hist.len(), 0);
+            }
+            for (c, v) in self.current.iter_mut().zip(hist.iter()) {
+                *c += v;
+            }
+        }
+        self.current_tuples += batch.tuples;
+        self.total_tuples += batch.tuples;
+        out.tuples_logged = batch.tuples;
+        Ok(())
+    }
+
+    fn on_tick(&mut self, _out: &mut OpOutput) -> Result<()> {
+        // Close the current slide.
+        let slide = std::mem::take(&mut self.current);
+        self.slides.push_back(slide);
+        self.current_tuples = 0;
+        while self.slides.len() > self.window_slides {
+            self.slides.pop_front();
+        }
+        if self.slides.len() == self.window_slides {
+            // Fire: aggregate the window through the window_sum artifact
+            // (real plane) or element-wise (sim plane histograms are empty).
+            let filled: Vec<Vec<i32>> = self
+                .slides
+                .iter()
+                .filter(|s| !s.is_empty())
+                .cloned()
+                .collect();
+            let window = match (&self.compute, filled.is_empty()) {
+                (Some(compute), false) => compute.window_sum(&filled)?,
+                _ => crate::compute::native::window_sum(&filled),
+            };
+            self.last_window_tuples = window.iter().map(|&v| v as u64).sum();
+            self.windows_fired += 1;
+        }
+        Ok(())
+    }
+
+    fn wants_ticks(&self) -> bool {
+        true
+    }
+}

@@ -1,0 +1,142 @@
+//! Operator unit tests (passive semantics; task-driving is in worker).
+
+use super::*;
+use crate::compute::ComputeEngine;
+use crate::proto::{Batch, Chunk};
+use std::rc::Rc;
+
+fn batch(tuples: u64) -> Batch {
+    Batch { from_task: 0, tuples, bytes: tuples * 100, chunks: Vec::new(), hist: None }
+}
+
+fn cm() -> CostModel {
+    CostModel::default()
+}
+
+#[test]
+fn count_logs_and_accumulates() {
+    let mut op = CountOp::default();
+    let mut out = OpOutput::default();
+    op.apply(batch(100), 0, &mut out).unwrap();
+    op.apply(batch(50), 0, &mut out).unwrap();
+    assert_eq!(op.total, 150);
+    assert_eq!(out.tuples_logged, 50, "per-apply logging");
+    assert!(out.emits.is_empty(), "RTLogger is terminal");
+}
+
+#[test]
+fn count_cost_is_per_tuple() {
+    let op = CountOp::default();
+    assert_eq!(op.cost(&batch(1000), &cm()), 1000 * cm().count_map_ns);
+}
+
+#[test]
+fn filter_cost_exceeds_count_cost() {
+    let f = FilterOp::new(b"needle", None);
+    let c = CountOp::default();
+    assert!(f.cost(&batch(1000), &cm()) > c.cost(&batch(1000), &cm()));
+}
+
+#[test]
+fn filter_real_plane_counts_matches() {
+    let mut f = FilterOp::new(b"needle", Some(ComputeEngine::native()));
+    let mut data = vec![b'x'; 300];
+    data[110..116].copy_from_slice(b"needle");
+    let mut b = batch(3);
+    b.chunks = vec![Chunk::real(3, 100, Rc::new(data))];
+    let mut out = OpOutput::default();
+    f.apply(b, 0, &mut out).unwrap();
+    assert_eq!(f.matches, 1);
+    assert_eq!(out.tuples_logged, 3, "throughput counts processed tuples");
+}
+
+#[test]
+fn tokenizer_sim_splits_tokens_across_targets() {
+    let mut t = TokenizerOp::new(vec![10, 11, 12], None, 300);
+    let mut out = OpOutput::default();
+    t.apply(batch(10), 5, &mut out).unwrap();
+    assert_eq!(out.emits.len(), 3);
+    let total: u64 = out.emits.iter().map(|(_, b)| b.tuples).sum();
+    assert_eq!(total, 3000, "10 records x 300 tokens");
+    assert_eq!(t.tokens_emitted, 3000);
+    for (target, b) in &out.emits {
+        assert!((10..=12).contains(target));
+        assert_eq!(b.from_task, 5);
+        assert_eq!(b.tuples, 1000);
+    }
+}
+
+#[test]
+fn tokenizer_real_plane_routes_by_bucket_range() {
+    let mut t = TokenizerOp::new(vec![7, 8], Some(ComputeEngine::native()), 300);
+    let text = b"alpha beta gamma delta epsilon zeta eta theta";
+    let mut data = vec![0u8; 64];
+    data[..text.len()].copy_from_slice(text);
+    let mut b = batch(1);
+    b.chunks = vec![Chunk::real(1, 64, Rc::new(data))];
+    let mut out = OpOutput::default();
+    t.apply(b, 0, &mut out).unwrap();
+    let total: u64 = out.emits.iter().map(|(_, b)| b.tuples).sum();
+    assert_eq!(total, 8, "eight words routed");
+    for (_, b) in &out.emits {
+        let hist = b.hist.as_ref().expect("real plane carries hists");
+        let sum: u64 = hist.iter().map(|&v| v as u64).sum();
+        assert_eq!(sum, b.tuples);
+    }
+}
+
+#[test]
+fn keyed_sum_merges_hists() {
+    let mut k = KeyedSumOp::new();
+    let mut out = OpOutput::default();
+    let mut b1 = batch(3);
+    b1.hist = Some(Rc::new(vec![1, 2, 0]));
+    let mut b2 = batch(4);
+    b2.hist = Some(Rc::new(vec![0, 1, 3]));
+    k.apply(b1, 0, &mut out).unwrap();
+    k.apply(b2, 0, &mut out).unwrap();
+    assert_eq!(k.counts, vec![1, 3, 3]);
+    assert_eq!(k.total_tuples, 7);
+}
+
+#[test]
+fn windowed_sum_fires_after_w_slides() {
+    let mut w = WindowedSumOp::new(3, None);
+    assert!(w.wants_ticks());
+    let mut out = OpOutput::default();
+    for round in 0..5 {
+        let mut b = batch(10);
+        b.hist = Some(Rc::new(vec![1i32; 4]));
+        w.apply(b, 0, &mut out).unwrap();
+        w.on_tick(&mut out).unwrap();
+        if round < 2 {
+            assert_eq!(w.windows_fired, 0, "window needs 3 slides");
+        }
+    }
+    assert_eq!(w.windows_fired, 3, "fires every tick once warm");
+    // 3 slides x 4 buckets x 1 each = 12 tuples per window
+    assert_eq!(w.last_window_tuples, 12);
+    assert_eq!(w.total_tuples, 50);
+}
+
+#[test]
+fn windowed_sum_evicts_old_slides() {
+    let mut w = WindowedSumOp::new(2, None);
+    let mut out = OpOutput::default();
+    // slide 1: 10 tokens; slide 2: 0; slide 3: 0 -> window at slide 3 = 0
+    let mut b = batch(10);
+    b.hist = Some(Rc::new(vec![10i32]));
+    w.apply(b, 0, &mut out).unwrap();
+    w.on_tick(&mut out).unwrap();
+    w.on_tick(&mut out).unwrap();
+    assert_eq!(w.last_window_tuples, 10, "slide 1 still in window");
+    w.on_tick(&mut out).unwrap();
+    assert_eq!(w.last_window_tuples, 0, "slide 1 evicted after 2 slides");
+}
+
+#[test]
+fn op_names_are_stable() {
+    assert_eq!(CountOp::default().name(), "count");
+    assert_eq!(FilterOp::new(b"x", None).name(), "filter");
+    assert_eq!(KeyedSumOp::new().name(), "keyed-sum");
+}

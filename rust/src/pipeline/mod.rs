@@ -1,0 +1,155 @@
+//! DataStream-like pipeline builder, mirroring the paper's Listings 1 & 2.
+//!
+//! A [`Pipeline`] is the logical dataflow: a source stage (the consumers,
+//! `sourceParallelism = Nc`) followed by operator stages with their own
+//! parallelism (`mapParallelism = Nmap`). The launcher materialises it into
+//! [`crate::worker::OperatorTask`] actors and wires the sources to stage 0.
+//!
+//! ```
+//! use zettastream::pipeline::{Pipeline, OpKind};
+//! // Listing 1 (count + filter):
+//! let p = Pipeline::source(4).flat_map(OpKind::Filter, 8).build();
+//! assert_eq!(p.stages.len(), 1);
+//! // Listing 2 (windowed word count):
+//! let p = Pipeline::source(4)
+//!     .flat_map(OpKind::Tokenizer, 8)
+//!     .key_by_windowed_sum(8)
+//!     .build();
+//! assert_eq!(p.stages.len(), 2);
+//! ```
+
+#[cfg(test)]
+mod tests;
+
+use crate::config::Workload;
+
+/// Operator kinds the builder can place (Table II's columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Iterate + count (`RTLogger`).
+    Count,
+    /// Grep filter + count.
+    Filter,
+    /// Word-count tokenizer (emits a keyed exchange).
+    Tokenizer,
+    /// Keyed `sum(1)`.
+    KeyedSum,
+    /// Sliding-window keyed sum.
+    WindowedSum,
+}
+
+/// One operator stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stage {
+    pub op: OpKind,
+    pub parallelism: usize,
+}
+
+/// The logical dataflow.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pipeline {
+    /// `sourceParallelism` (= `Nc`).
+    pub source_parallelism: usize,
+    pub stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    /// Start a builder with `Nc` source tasks.
+    pub fn source(parallelism: usize) -> PipelineBuilder {
+        assert!(parallelism > 0);
+        PipelineBuilder {
+            pipeline: Pipeline { source_parallelism: parallelism, stages: Vec::new() },
+        }
+    }
+
+    /// The pipeline for a paper workload (Listings 1 & 2 verbatim).
+    pub fn for_workload(workload: Workload, nc: usize, nmap: usize) -> Pipeline {
+        match workload {
+            Workload::Count => Pipeline::source(nc).flat_map(OpKind::Count, nmap).build(),
+            Workload::Filter => Pipeline::source(nc).flat_map(OpKind::Filter, nmap).build(),
+            Workload::WordCount => Pipeline::source(nc)
+                .flat_map(OpKind::Tokenizer, nmap)
+                .key_by_sum(nmap)
+                .build(),
+            Workload::WindowedWordCount => Pipeline::source(nc)
+                .flat_map(OpKind::Tokenizer, nmap)
+                .key_by_windowed_sum(nmap)
+                .build(),
+        }
+    }
+
+    /// Total operator tasks (slots used beyond the sources).
+    pub fn task_count(&self) -> usize {
+        self.stages.iter().map(|s| s.parallelism).sum()
+    }
+
+    /// Slots the deployment occupies (sources + operator tasks), to compare
+    /// against `NFs`.
+    pub fn slots_used(&self) -> usize {
+        self.source_parallelism + self.task_count()
+    }
+
+    /// Validate stage composition (exchange stages follow a tokenizer...).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("a pipeline needs at least one operator stage".into());
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            if stage.parallelism == 0 {
+                return Err(format!("stage {i} has zero parallelism"));
+            }
+            match stage.op {
+                OpKind::KeyedSum | OpKind::WindowedSum => {
+                    let ok = i > 0 && self.stages[i - 1].op == OpKind::Tokenizer;
+                    if !ok {
+                        return Err(format!(
+                            "stage {i}: keyed aggregation requires a tokenizer (keyBy) upstream"
+                        ));
+                    }
+                }
+                OpKind::Tokenizer => {
+                    let last = i + 1 == self.stages.len();
+                    let next_keyed = !last
+                        && matches!(self.stages[i + 1].op, OpKind::KeyedSum | OpKind::WindowedSum);
+                    if !last && !next_keyed {
+                        return Err(format!("stage {i}: tokenizer must feed a keyed stage"));
+                    }
+                }
+                OpKind::Count | OpKind::Filter => {
+                    if i + 1 != self.stages.len() {
+                        return Err(format!("stage {i}: {:?} is terminal (RTLogger)", stage.op));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder.
+pub struct PipelineBuilder {
+    pipeline: Pipeline,
+}
+
+impl PipelineBuilder {
+    /// Append a flatMap stage (`.flatMap(op).setParallelism(n)`).
+    pub fn flat_map(mut self, op: OpKind, parallelism: usize) -> Self {
+        self.pipeline.stages.push(Stage { op, parallelism });
+        self
+    }
+
+    /// `.keyBy(f0).sum(1)` after a tokenizer.
+    pub fn key_by_sum(self, parallelism: usize) -> Self {
+        self.flat_map(OpKind::KeyedSum, parallelism)
+    }
+
+    /// `.keyBy(f0).countWindow(size, slide).sum(1)` after a tokenizer.
+    pub fn key_by_windowed_sum(self, parallelism: usize) -> Self {
+        self.flat_map(OpKind::WindowedSum, parallelism)
+    }
+
+    pub fn build(self) -> Pipeline {
+        self.pipeline.validate().expect("invalid pipeline");
+        self.pipeline
+    }
+}

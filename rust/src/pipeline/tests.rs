@@ -1,0 +1,87 @@
+//! Pipeline builder tests.
+
+use super::*;
+
+#[test]
+fn count_pipeline_matches_listing1() {
+    let p = Pipeline::for_workload(Workload::Count, 4, 8);
+    assert_eq!(p.source_parallelism, 4);
+    assert_eq!(p.stages, vec![Stage { op: OpKind::Count, parallelism: 8 }]);
+    assert_eq!(p.slots_used(), 12);
+}
+
+#[test]
+fn wordcount_pipeline_matches_listing2() {
+    let p = Pipeline::for_workload(Workload::WordCount, 2, 8);
+    assert_eq!(
+        p.stages,
+        vec![
+            Stage { op: OpKind::Tokenizer, parallelism: 8 },
+            Stage { op: OpKind::KeyedSum, parallelism: 8 },
+        ]
+    );
+    assert_eq!(p.task_count(), 16);
+}
+
+#[test]
+fn windowed_wordcount_uses_windowed_sum() {
+    let p = Pipeline::for_workload(Workload::WindowedWordCount, 1, 8);
+    assert_eq!(p.stages[1].op, OpKind::WindowedSum);
+}
+
+#[test]
+fn builder_is_fluent() {
+    let p = Pipeline::source(2).flat_map(OpKind::Filter, 4).build();
+    assert_eq!(p.source_parallelism, 2);
+    assert_eq!(p.stages.len(), 1);
+}
+
+#[test]
+fn validate_rejects_keyed_without_tokenizer() {
+    let p = Pipeline {
+        source_parallelism: 1,
+        stages: vec![Stage { op: OpKind::KeyedSum, parallelism: 2 }],
+    };
+    assert!(p.validate().is_err());
+}
+
+#[test]
+fn validate_rejects_tokenizer_feeding_count() {
+    let p = Pipeline {
+        source_parallelism: 1,
+        stages: vec![
+            Stage { op: OpKind::Tokenizer, parallelism: 2 },
+            Stage { op: OpKind::Count, parallelism: 2 },
+        ],
+    };
+    assert!(p.validate().is_err());
+}
+
+#[test]
+fn validate_rejects_nonterminal_count() {
+    let p = Pipeline {
+        source_parallelism: 1,
+        stages: vec![
+            Stage { op: OpKind::Count, parallelism: 2 },
+            Stage { op: OpKind::Count, parallelism: 2 },
+        ],
+    };
+    assert!(p.validate().is_err());
+}
+
+#[test]
+fn validate_rejects_empty_and_zero_parallelism() {
+    let p = Pipeline { source_parallelism: 1, stages: vec![] };
+    assert!(p.validate().is_err());
+    let p = Pipeline {
+        source_parallelism: 1,
+        stages: vec![Stage { op: OpKind::Count, parallelism: 0 }],
+    };
+    assert!(p.validate().is_err());
+}
+
+#[test]
+#[should_panic(expected = "invalid pipeline")]
+fn build_panics_on_invalid() {
+    Pipeline::source(1).flat_map(OpKind::KeyedSum, 2).build();
+}

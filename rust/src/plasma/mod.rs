@@ -1,0 +1,220 @@
+//! Shared-memory object store between broker and processing worker.
+//!
+//! Models the paper's Arrow-Plasma-based store (§IV-B): a pool of
+//! fixed-capacity in-memory *objects* per push subscription. The broker's
+//! dedicated push thread fills a free object with the next chunks of a
+//! source's partitions (Step 2), seals it and notifies the source (Step 3);
+//! the source processes it through a pointer — never a copy — and notifies
+//! back (Step 4) so the buffer is *reused*. Backpressure is the finite pool:
+//! a slow source stops freeing objects, which stalls the push thread for
+//! that source, which leaves partition data parked in the broker log.
+//!
+//! The paper runs Plasma as a third process with shared pointers; here the
+//! store is an in-process blackboard (`Rc<RefCell>`) with the same object
+//! lifecycle — substitution 2 in DESIGN.md §2. Chunk payloads are `Rc`ed
+//! buffers, so "filling" an object shares pointers exactly like Plasma.
+
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::proto::{ChunkOffset, ObjectId, PartitionId, StampedChunk, SubId};
+use crate::sim::ActorId;
+
+/// Object lifecycle. Free → Filling → Sealed → Free (reuse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectState {
+    /// Available to the push thread.
+    Free,
+    /// The push thread is copying chunks in (holds the slot).
+    Filling,
+    /// Content visible to the source; awaiting release.
+    Sealed,
+}
+
+#[derive(Debug)]
+struct ObjectSlot {
+    state: ObjectState,
+    capacity: u64,
+    content: Vec<StampedChunk>,
+    bytes: u64,
+    records: u64,
+    fills: u64,
+}
+
+/// One worker-local push source group member's registration state.
+#[derive(Debug)]
+pub struct Subscription {
+    pub id: SubId,
+    /// Source task actor to notify on seal.
+    pub source_actor: ActorId,
+    /// Broker-managed consumption cursors (paper: "the storage broker can
+    /// assign local partitions and build consumer offsets").
+    pub cursors: Vec<(PartitionId, ChunkOffset)>,
+    slots: Vec<ObjectSlot>,
+    free: VecDeque<usize>,
+    /// Next partition to serve (round-robin fairness within the source).
+    pub rr_next: usize,
+}
+
+/// The store: all subscriptions of one colocated node.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    subs: Vec<Subscription>,
+    objects_filled: u64,
+    bytes_filled: u64,
+}
+
+/// Shared handle.
+pub type SharedStore = Rc<RefCell<ObjectStore>>;
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shared() -> SharedStore {
+        Rc::new(RefCell::new(Self::new()))
+    }
+
+    /// Register a push source: `objects` slots of `object_bytes` each.
+    pub fn create_subscription(
+        &mut self,
+        source_actor: ActorId,
+        cursors: Vec<(PartitionId, ChunkOffset)>,
+        objects: usize,
+        object_bytes: u64,
+    ) -> SubId {
+        assert!(objects > 0, "a subscription needs at least one object");
+        assert!(object_bytes > 0, "objects need non-zero capacity");
+        let id = SubId(self.subs.len());
+        let slots = (0..objects)
+            .map(|_| ObjectSlot {
+                state: ObjectState::Free,
+                capacity: object_bytes,
+                content: Vec::new(),
+                bytes: 0,
+                records: 0,
+                fills: 0,
+            })
+            .collect();
+        self.subs.push(Subscription {
+            id,
+            source_actor,
+            cursors,
+            slots,
+            free: (0..objects).collect(),
+            rr_next: 0,
+        });
+        id
+    }
+
+    pub fn subscription(&self, sub: SubId) -> &Subscription {
+        &self.subs[sub.0]
+    }
+
+    pub fn subscription_mut(&mut self, sub: SubId) -> &mut Subscription {
+        &mut self.subs[sub.0]
+    }
+
+    pub fn subscriptions(&self) -> impl Iterator<Item = &Subscription> {
+        self.subs.iter()
+    }
+
+    pub fn num_subscriptions(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Take a free object for filling. `None` == backpressure.
+    pub fn acquire(&mut self, sub: SubId) -> Option<ObjectId> {
+        let s = &mut self.subs[sub.0];
+        let slot = s.free.pop_front()?;
+        debug_assert_eq!(s.slots[slot].state, ObjectState::Free);
+        s.slots[slot].state = ObjectState::Filling;
+        Some(ObjectId { sub, slot })
+    }
+
+    /// Whether the subscription has a free object (peek, for scheduling).
+    pub fn has_free(&self, sub: SubId) -> bool {
+        !self.subs[sub.0].free.is_empty()
+    }
+
+    /// Capacity of an object in bytes.
+    pub fn capacity(&self, id: ObjectId) -> u64 {
+        self.subs[id.sub.0].slots[id.slot].capacity
+    }
+
+    /// Fill + seal an acquired object. Content must respect capacity.
+    pub fn seal(&mut self, id: ObjectId, content: Vec<StampedChunk>) {
+        let slot = &mut self.subs[id.sub.0].slots[id.slot];
+        assert_eq!(slot.state, ObjectState::Filling, "seal of unacquired object");
+        let bytes: u64 = content.iter().map(|c| c.chunk.bytes()).sum();
+        let records: u64 = content.iter().map(|c| c.chunk.records as u64).sum();
+        assert!(bytes <= slot.capacity, "object overfilled: {bytes} > {}", slot.capacity);
+        assert!(!content.is_empty(), "sealing an empty object");
+        slot.content = content;
+        slot.bytes = bytes;
+        slot.records = records;
+        slot.fills += 1;
+        slot.state = ObjectState::Sealed;
+        self.objects_filled += 1;
+        self.bytes_filled += bytes;
+    }
+
+    /// Source-side read: the sealed content, by shared pointer.
+    pub fn read(&self, id: ObjectId) -> &[StampedChunk] {
+        let slot = &self.subs[id.sub.0].slots[id.slot];
+        assert_eq!(slot.state, ObjectState::Sealed, "read of unsealed object");
+        &slot.content
+    }
+
+    /// Records/bytes of a sealed object (cost accounting without borrowing
+    /// the content).
+    pub fn sealed_counts(&self, id: ObjectId) -> (u64, u64) {
+        let slot = &self.subs[id.sub.0].slots[id.slot];
+        assert_eq!(slot.state, ObjectState::Sealed);
+        (slot.records, slot.bytes)
+    }
+
+    /// Source is done: buffer returns to the free pool (paper Step 4).
+    pub fn release(&mut self, id: ObjectId) {
+        let s = &mut self.subs[id.sub.0];
+        let slot = &mut s.slots[id.slot];
+        assert_eq!(slot.state, ObjectState::Sealed, "release of unsealed object");
+        slot.content.clear();
+        slot.bytes = 0;
+        slot.records = 0;
+        slot.state = ObjectState::Free;
+        s.free.push_back(id.slot);
+    }
+
+    /// Lifetime fill count (== notifications sent to sources).
+    pub fn objects_filled(&self) -> u64 {
+        self.objects_filled
+    }
+
+    pub fn bytes_filled(&self) -> u64 {
+        self.bytes_filled
+    }
+
+    /// Total reuse across slots of a subscription: fills beyond first use.
+    pub fn reuses(&self, sub: SubId) -> u64 {
+        self.subs[sub.0]
+            .slots
+            .iter()
+            .map(|s| s.fills.saturating_sub(1))
+            .sum()
+    }
+
+    /// Memory footprint the store reserves (sum of slot capacities).
+    pub fn reserved_bytes(&self) -> u64 {
+        self.subs
+            .iter()
+            .flat_map(|s| s.slots.iter())
+            .map(|s| s.capacity)
+            .sum()
+    }
+}

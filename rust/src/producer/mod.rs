@@ -1,0 +1,234 @@
+//! Producers: multi-threaded clients appending chunks of records.
+//!
+//! §V-A: "Each producer issues one synchronous RPC having one chunk of CS
+//! size for each partition of a broker, having in total ReqS size" and
+//! "Producers wait up to one millisecond before sealing chunks ready to be
+//! pushed to the broker (or the chunk gets filled and sealed)". Our
+//! producers saturate (the benchmarks measure peak ingestion), so chunks
+//! always fill before the seal timeout; the generation cost per record and
+//! the synchronous append round-trip pace each producer:
+//!
+//! ```text
+//! loop { generate ReqS records  ->  Append RPC  ->  wait ack }
+//! ```
+//!
+//! Two record generators cover the paper's workloads: synthetic fixed-size
+//! records (optionally planting the filter needle), and the Wikipedia
+//! corpus reader (2 KiB text records, bounded volume).
+
+#[cfg(test)]
+mod tests;
+
+use std::rc::Rc;
+
+use crate::config::{CostModel, DataPlane};
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::{NodeId, SharedNetwork};
+use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::sim::{Actor, ActorId, Ctx, Rng, Time};
+use crate::wikipedia::CorpusReader;
+
+/// What producers put inside records.
+pub enum RecordGen {
+    /// Accounting-only payloads (sim data plane).
+    Sim,
+    /// Random lowercase text with the filter needle planted in a fraction
+    /// of records (real data plane, synthetic benchmarks).
+    Synthetic { rng: Rng, needle: Vec<u8>, plant_permille: u32, planted: u64 },
+    /// The Wikipedia corpus (real data plane, word-count benchmarks).
+    Corpus(CorpusReader),
+}
+
+impl RecordGen {
+    /// Produce one chunk of `records` × `record_size`. Returns `None` when
+    /// a bounded generator is exhausted (Wikipedia producers stop).
+    fn next_chunk(&mut self, records: u32, record_size: u32) -> Option<Chunk> {
+        match self {
+            RecordGen::Sim => Some(Chunk::sim(records, record_size)),
+            RecordGen::Synthetic { rng, needle, plant_permille, planted } => {
+                let mut data = vec![0u8; records as usize * record_size as usize];
+                for r in 0..records as usize {
+                    let rec = &mut data[r * record_size as usize..(r + 1) * record_size as usize];
+                    for b in rec.iter_mut() {
+                        *b = b'a' + rng.next_below(26) as u8;
+                    }
+                    if rng.next_below(1000) < *plant_permille as u64
+                        && rec.len() >= needle.len()
+                    {
+                        let at = rng.next_below((rec.len() - needle.len() + 1) as u64) as usize;
+                        rec[at..at + needle.len()].copy_from_slice(needle);
+                        *planted += 1;
+                    }
+                }
+                Some(Chunk::real(records, record_size, Rc::new(data)))
+            }
+            RecordGen::Corpus(reader) => {
+                if reader.remaining() == 0 {
+                    return None;
+                }
+                let want = (records as u64).min(reader.remaining()) as u32;
+                let mut data = vec![0u8; want as usize * record_size as usize];
+                let got = reader.fill_records(&mut data);
+                debug_assert_eq!(got as u32, want);
+                Some(Chunk::real(want, record_size, Rc::new(data)))
+            }
+        }
+    }
+}
+
+/// Static producer wiring.
+pub struct ProducerParams {
+    /// Metrics entity (producer index).
+    pub entity: usize,
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    /// Partitions this producer appends to (all `Ns` of the stream).
+    pub partitions: Vec<PartitionId>,
+    /// `CS` producer chunk size in bytes.
+    pub chunk_bytes: usize,
+    /// `RecS`.
+    pub record_size: usize,
+    pub cost: CostModel,
+    pub data_plane: DataPlane,
+}
+
+/// The producer actor: a serial generate → append → ack loop.
+pub struct Producer {
+    params: ProducerParams,
+    gen: RecordGen,
+    next_rpc: u64,
+    /// Chunks staged for the in-flight request (built at GenDone).
+    staged: Vec<(PartitionId, Chunk)>,
+    /// True once the generator is exhausted (bounded corpus).
+    done: bool,
+    records_sent: u64,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+}
+
+impl Producer {
+    pub fn new(
+        params: ProducerParams,
+        gen: RecordGen,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+    ) -> Self {
+        assert!(!params.partitions.is_empty());
+        assert!(params.chunk_bytes >= params.record_size);
+        Self {
+            params,
+            gen,
+            next_rpc: 0,
+            staged: Vec::new(),
+            done: false,
+            records_sent: 0,
+            metrics,
+            net,
+        }
+    }
+
+    fn records_per_chunk(&self) -> u32 {
+        (self.params.chunk_bytes / self.params.record_size) as u32
+    }
+
+    /// Start generating the next request: busy for `records × gen cost`,
+    /// then `GenDone` fires and the RPC goes out.
+    fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let rpc = self.next_rpc;
+        let per_chunk = self.records_per_chunk();
+        let mut total_records: u64 = 0;
+        self.staged.clear();
+        for &p in &self.params.partitions {
+            match self.gen.next_chunk(per_chunk, self.params.record_size as u32) {
+                Some(chunk) => {
+                    total_records += chunk.records as u64;
+                    self.staged.push((p, chunk));
+                }
+                None => break, // generator exhausted mid-request: send what we have
+            }
+        }
+        if self.staged.is_empty() {
+            self.done = true;
+            return;
+        }
+        let cost = total_records * self.params.cost.producer_record_ns;
+        ctx.send_self_in(cost as Time, Msg::GenDone(rpc));
+    }
+
+    fn send_append(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let chunks = std::mem::take(&mut self.staged);
+        let bytes: u64 = chunks.iter().map(|(_, c)| c.bytes()).sum();
+        let rpc = self.next_rpc;
+        self.next_rpc += 1;
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send(ctx.now(), self.params.node, self.params.broker_node, bytes);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id: rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Append { chunks },
+            }),
+        );
+    }
+
+    fn on_ack(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        match env.reply {
+            RpcReply::AppendAck { records, .. } => {
+                self.records_sent += records;
+                self.metrics.borrow_mut().record(
+                    Class::ProducerRecords,
+                    self.params.entity,
+                    ctx.now(),
+                    records,
+                );
+            }
+            RpcReply::Error { reason } => {
+                panic!("producer {}: append rejected: {reason}", self.params.entity)
+            }
+            other => panic!("producer {}: unexpected reply {other:?}", self.params.entity),
+        }
+        if !self.done {
+            self.start_generation(ctx);
+        }
+    }
+
+    pub fn records_sent(&self) -> u64 {
+        self.records_sent
+    }
+
+    /// Needle plants so far (synthetic generator; for end-to-end checks).
+    pub fn planted(&self) -> u64 {
+        match &self.gen {
+            RecordGen::Synthetic { planted, .. } => *planted,
+            _ => 0,
+        }
+    }
+}
+
+impl Actor<Msg> for Producer {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.start_generation(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::GenDone(_) => self.send_append(ctx),
+            Msg::Reply(env) => self.on_ack(env, ctx),
+            other => panic!("producer {}: unexpected {other:?}", self.params.entity),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("producer#{}", self.params.entity)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

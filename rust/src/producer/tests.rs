@@ -1,0 +1,129 @@
+//! Producer tests against a real broker actor.
+
+use super::*;
+use crate::broker::{Broker, BrokerParams};
+use crate::config::NetworkProfile;
+use crate::metrics::{Class, MetricsHub};
+use crate::net::Network;
+use crate::plasma::ObjectStore;
+use crate::sim::{Engine, Rng, SECOND};
+
+struct Rig {
+    engine: Engine<Msg>,
+    producer: ActorId,
+    metrics: SharedMetrics,
+}
+
+fn rig(gen: RecordGen, chunk_bytes: usize, record_size: usize, ns: usize) -> Rig {
+    let mut engine = Engine::new(3);
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let store = ObjectStore::shared();
+    let metrics = MetricsHub::shared();
+    let broker = engine.add_actor(Box::new(Broker::new(
+        BrokerParams {
+            node: 0,
+            worker_cores: 8,
+            push_threads: 0,
+            segment_bytes: 8 << 20,
+            partitions: (0..ns).map(PartitionId).collect(),
+            backup: None,
+            is_backup: false,
+            cost: Default::default(),
+        },
+        net.clone(),
+        store,
+        metrics.clone(),
+        0,
+    )));
+    let producer = engine.add_actor(Box::new(Producer::new(
+        ProducerParams {
+            entity: 0,
+            node: 1,
+            broker,
+            broker_node: 0,
+            partitions: (0..ns).map(PartitionId).collect(),
+            chunk_bytes,
+            record_size,
+            cost: Default::default(),
+            data_plane: DataPlane::Sim,
+        },
+        gen,
+        metrics.clone(),
+        net,
+    )));
+    Rig { engine, producer, metrics }
+}
+
+#[test]
+fn producer_appends_continuously() {
+    let mut r = rig(RecordGen::Sim, 1024, 100, 4);
+    r.engine.run_until(SECOND);
+    let total = r.metrics.borrow().total(Class::ProducerRecords);
+    assert!(total > 100_000, "1s of appends: {total}");
+    let sent = r.engine.actor_as::<Producer>(r.producer).unwrap().records_sent();
+    assert_eq!(sent, total);
+}
+
+#[test]
+fn pacing_is_generation_plus_round_trip() {
+    // 10 records per chunk x 4 partitions = 40 records per request at
+    // 200 ns each = 8 us generation; RTT adds a few us more. The rate must
+    // sit near records/(gen+rtt), well under the pure-generation bound.
+    let mut r = rig(RecordGen::Sim, 1024, 100, 4);
+    r.engine.run_until(SECOND);
+    let total = r.metrics.borrow().total(Class::ProducerRecords);
+    let gen_bound = SECOND as u64 / 200 ; // 5M records/s at 200ns
+    assert!(total < gen_bound, "sync RPC must slow the loop: {total}");
+    assert!(total > gen_bound / 10, "but not by 10x: {total}");
+}
+
+#[test]
+fn larger_chunks_raise_throughput() {
+    let mut small = rig(RecordGen::Sim, 1024, 100, 8);
+    small.engine.run_until(SECOND);
+    let t_small = small.metrics.borrow().total(Class::ProducerRecords);
+    let mut big = rig(RecordGen::Sim, 128 * 1024, 100, 8);
+    big.engine.run_until(SECOND);
+    let t_big = big.metrics.borrow().total(Class::ProducerRecords);
+    assert!(
+        t_big > t_small * 2,
+        "paper Fig. 3 shape: chunk size grows throughput ({t_small} -> {t_big})"
+    );
+}
+
+#[test]
+fn synthetic_generator_plants_needles() {
+    let gen = RecordGen::Synthetic {
+        rng: Rng::new(5),
+        needle: b"needle".to_vec(),
+        plant_permille: 100, // 10%
+        planted: 0,
+    };
+    let mut r = rig(gen, 4096, 100, 2);
+    r.engine.run_until(SECOND / 10);
+    let p = r.engine.actor_as::<Producer>(r.producer).unwrap();
+    let sent = p.records_sent();
+    let planted = p.planted();
+    assert!(sent > 1000);
+    let ratio = planted as f64 / sent as f64;
+    assert!((0.05..0.15).contains(&ratio), "plant ratio {ratio}");
+}
+
+#[test]
+fn corpus_producer_stops_when_exhausted() {
+    let gen = RecordGen::Corpus(CorpusReader::new(2048, 500));
+    let mut r = rig(gen, 16 * 1024, 2048, 2);
+    r.engine.run_until(10 * SECOND);
+    let p = r.engine.actor_as::<Producer>(r.producer).unwrap();
+    assert_eq!(p.records_sent(), 500, "bounded volume then stop (paper Fig. 9)");
+}
+
+#[test]
+fn corpus_partial_final_request_is_sent() {
+    // 500 records of budget with 8 records/chunk x 2 partitions = 16/request:
+    // the last request is partial and must still be appended.
+    let gen = RecordGen::Corpus(CorpusReader::new(2048, 30));
+    let mut r = rig(gen, 16 * 1024, 2048, 2);
+    r.engine.run_until(10 * SECOND);
+    assert_eq!(r.metrics.borrow().total(Class::ProducerRecords), 30);
+}

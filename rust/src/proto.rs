@@ -1,0 +1,209 @@
+//! Shared wire/data types: chunks, records, RPCs, and the engine message.
+//!
+//! Everything the actors exchange is one [`Msg`] enum — the DES engine is
+//! generic, but the cluster instantiates `Engine<Msg>`. The data unit is the
+//! [`Chunk`]: the record-framed byte block a producer seals and appends, a
+//! pull RPC returns, and the push thread copies into a shared object.
+
+use std::rc::Rc;
+
+use crate::sim::ActorId;
+
+/// Global partition index within the (single) stream topic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PartitionId(pub usize);
+
+impl std::fmt::Display for PartitionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Offset within a partition log, in **chunks** (the broker's append unit —
+/// the paper's record offsets are chunk-aligned on both the pull and push
+/// paths, so chunk granularity loses nothing).
+pub type ChunkOffset = u64;
+
+/// Identifier of a shared-memory object slot (plasma store).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ObjectId {
+    /// Owning subscription.
+    pub sub: SubId,
+    /// Slot index within the subscription's object pool.
+    pub slot: usize,
+}
+
+/// Push subscription id (one per worker-local source group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubId(pub usize);
+
+/// Chunk payload: real bytes or byte/record accounting (DESIGN.md §2.5).
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Record-framed bytes: `records × record_size`, records back to back.
+    /// `Rc` — cloning a chunk shares the buffer, exactly like the paper's
+    /// shared-pointer hand-off (the engine is single-threaded).
+    Real(Rc<Vec<u8>>),
+    /// Accounting-only payload for the long figure sweeps.
+    Sim,
+}
+
+impl Payload {
+    pub fn is_real(&self) -> bool {
+        matches!(self, Payload::Real(_))
+    }
+}
+
+/// The unit of ingestion and consumption.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    /// Records in this chunk.
+    pub records: u32,
+    /// Fixed per-record size (bytes) — the benchmarks use fixed `RecS`.
+    pub record_size: u32,
+    /// Payload (real framing or accounting).
+    pub payload: Payload,
+}
+
+impl Chunk {
+    /// Payload size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.records as u64 * self.record_size as u64
+    }
+
+    /// Accounting-only chunk.
+    pub fn sim(records: u32, record_size: u32) -> Self {
+        Chunk { records, record_size, payload: Payload::Sim }
+    }
+
+    /// Real chunk; `data.len()` must equal `records * record_size`.
+    pub fn real(records: u32, record_size: u32, data: Rc<Vec<u8>>) -> Self {
+        debug_assert_eq!(data.len() as u64, records as u64 * record_size as u64);
+        Chunk { records, record_size, payload: Payload::Real(data) }
+    }
+}
+
+/// A chunk stamped with its partition position (what read paths return).
+#[derive(Debug, Clone)]
+pub struct StampedChunk {
+    pub partition: PartitionId,
+    pub offset: ChunkOffset,
+    pub chunk: Chunk,
+}
+
+// ---------------------------------------------------------------------------
+// RPCs
+// ---------------------------------------------------------------------------
+
+/// Monotone per-client RPC id (for tracing; uniqueness is per client).
+pub type RpcId = u64;
+
+/// Request kinds served by the broker frontend (paper §IV-A).
+#[derive(Debug, Clone)]
+pub enum RpcKind {
+    /// Producer append: one sealed chunk per partition (`ReqS` total).
+    Append { chunks: Vec<(PartitionId, Chunk)> },
+    /// Pull-based consumer read: per-partition resume offsets, up to
+    /// `max_bytes` (the consumer `CS`) returned **per partition**.
+    Pull { assignments: Vec<(PartitionId, ChunkOffset)>, max_bytes: u64 },
+    /// Push-based source group subscription: the single RPC of the paper's
+    /// Step 1. One entry per local source task: its partitions + offsets.
+    PushSubscribe { sources: Vec<PushSourceSpec> },
+    /// Primary -> backup replication of one append (Replication = 2).
+    Replicate { bytes: u64, chunks: u32 },
+}
+
+/// One push source task's registration.
+#[derive(Debug, Clone)]
+pub struct PushSourceSpec {
+    /// Actor to notify when objects fill.
+    pub source_actor: ActorId,
+    /// Partitions this source consumes exclusively.
+    pub assignments: Vec<(PartitionId, ChunkOffset)>,
+    /// Object pool size (backpressure window) for this source.
+    pub objects: usize,
+    /// Object capacity in bytes (the push-path consumer chunk size).
+    pub object_bytes: u64,
+}
+
+/// Responses the broker sends back.
+#[derive(Debug, Clone)]
+pub enum RpcReply {
+    AppendAck { records: u64, bytes: u64 },
+    /// Pull result; `chunks` may be empty (consumer caught up).
+    PullData { chunks: Vec<StampedChunk> },
+    SubscribeAck { sub: SubId },
+    ReplicateAck,
+    /// Request refused (unknown partition, bad offset...). Carried instead
+    /// of panicking so fault-injection tests can exercise client handling.
+    Error { reason: String },
+}
+
+/// Full request envelope delivered to a broker dispatcher.
+#[derive(Debug, Clone)]
+pub struct RpcRequest {
+    pub id: RpcId,
+    /// Where the reply goes.
+    pub reply_to: ActorId,
+    /// Origin node (network path selection).
+    pub from_node: usize,
+    pub kind: RpcKind,
+}
+
+/// Full reply envelope.
+#[derive(Debug, Clone)]
+pub struct RpcEnvelope {
+    pub id: RpcId,
+    pub reply: RpcReply,
+}
+
+// ---------------------------------------------------------------------------
+// Dataflow between worker tasks
+// ---------------------------------------------------------------------------
+
+/// A batch of tuples flowing between operator tasks (one source chunk or
+/// one shared object's worth, or a keyed sub-batch after an exchange).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Upstream task index (for credit return).
+    pub from_task: usize,
+    /// Tuple count in the batch.
+    pub tuples: u64,
+    /// Payload bytes represented (accounting).
+    pub bytes: u64,
+    /// Real chunks, when the data plane is real.
+    pub chunks: Vec<Chunk>,
+    /// Keyed-histogram carry (real word-count path): bucket -> count.
+    pub hist: Option<Rc<Vec<i32>>>,
+}
+
+// ---------------------------------------------------------------------------
+// The engine message
+// ---------------------------------------------------------------------------
+
+/// Every event in the simulated cluster.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// An RPC request arriving at a broker dispatcher.
+    Rpc(RpcRequest),
+    /// An RPC reply arriving back at the client.
+    Reply(RpcEnvelope),
+    /// Core-pool job completion inside an actor (tag = owner-defined).
+    JobDone(u64),
+    /// Generic timer with owner-defined tag.
+    Timer(u64),
+    /// Plasma: object `id` was filled and sealed; records/bytes describe
+    /// its content (chunks are read from the store by the source).
+    ObjectReady { id: ObjectId },
+    /// Plasma: source finished with object `id`; broker may reuse it.
+    ObjectFreed { id: ObjectId },
+    /// Broker-internal: new data appended to a partition some push
+    /// subscription watches — wake the push thread.
+    DataAvailable,
+    /// Dataflow: a batch pushed into a task's input queue.
+    Data(Batch),
+    /// Dataflow: downstream returns one queue credit to `from_task`.
+    Credit { to_upstream_task: usize },
+    /// Producer resumes after generating records (tag = request id).
+    GenDone(u64),
+}

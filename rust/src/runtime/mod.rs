@@ -1,0 +1,162 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! The interchange format is HLO **text** (`python/compile/aot.py`): jax
+//! >= 0.5 serialises `HloModuleProto`s with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md). Each artifact is one chunk-shape
+//! *variant* of a Layer-2 graph; `manifest.tsv` lists them.
+//!
+//! Compilation happens once at load; execution is the request-path hot
+//! call. Python never runs here.
+
+#[cfg(test)]
+mod tests;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One row of `manifest.tsv`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantMeta {
+    pub name: String,
+    /// `filter`, `wordcount` or `window_sum`.
+    pub kind: String,
+    /// Record rows of the chunk tensor (window count for `window_sum`).
+    pub r: usize,
+    /// Record size in bytes (bucket count for `window_sum`).
+    pub s: usize,
+    /// Kind-specific: pattern length / buckets / unused.
+    pub extra: usize,
+    pub file: String,
+}
+
+/// Parse a manifest body (tab-separated, `#` comments).
+pub fn parse_manifest(body: &str) -> Result<Vec<VariantMeta>> {
+    let mut out = Vec::new();
+    for (i, line) in body.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 6 {
+            bail!("manifest line {}: want 6 columns, got {}", i + 1, cols.len());
+        }
+        out.push(VariantMeta {
+            name: cols[0].to_string(),
+            kind: cols[1].to_string(),
+            r: cols[2].parse().with_context(|| format!("manifest line {}: r", i + 1))?,
+            s: cols[3].parse().with_context(|| format!("manifest line {}: s", i + 1))?,
+            extra: cols[4].parse().with_context(|| format!("manifest line {}: extra", i + 1))?,
+            file: cols[5].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled variant ready to execute.
+pub struct LoadedVariant {
+    pub meta: VariantMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedVariant {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.meta.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// The artifact library: every compiled variant, indexed by kind.
+pub struct ArtifactLibrary {
+    client: xla::PjRtClient,
+    variants: HashMap<String, Vec<LoadedVariant>>, // kind -> sorted by r asc
+    dir: PathBuf,
+}
+
+impl ArtifactLibrary {
+    /// Load + compile every artifact in `dir` (expects `manifest.tsv`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let body = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", manifest_path.display())
+        })?;
+        let metas = parse_manifest(&body)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut variants: HashMap<String, Vec<LoadedVariant>> = HashMap::new();
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.name))?;
+            variants
+                .entry(meta.kind.clone())
+                .or_default()
+                .push(LoadedVariant { meta, exe });
+        }
+        for list in variants.values_mut() {
+            list.sort_by_key(|v| v.meta.r);
+        }
+        Ok(Self { client, variants, dir })
+    }
+
+    /// The default artifact directory: `$ZETTA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ZETTA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest variant of `kind` with matching `s` and `r >= r_min`
+    /// (callers pad the record axis up to the variant's `r`).
+    pub fn select(&self, kind: &str, s: usize, r_min: usize) -> Option<&LoadedVariant> {
+        self.variants
+            .get(kind)?
+            .iter()
+            .find(|v| v.meta.s == s && v.meta.r >= r_min)
+    }
+
+    /// Largest `r` available for `(kind, s)` — callers split bigger chunks.
+    pub fn max_r(&self, kind: &str, s: usize) -> Option<usize> {
+        self.variants
+            .get(kind)?
+            .iter()
+            .filter(|v| v.meta.s == s)
+            .map(|v| v.meta.r)
+            .max()
+    }
+
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.variants.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn count(&self) -> usize {
+        self.variants.values().map(|v| v.len()).sum()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,79 @@
+//! Runtime tests: manifest parsing (always) + artifact load/execute
+//! (skipped with a notice when `make artifacts` has not run).
+
+use super::*;
+
+#[test]
+fn manifest_parses_rows_and_comments() {
+    let body = "# name\tkind\tr\ts\textra\tfile\n\
+                filter_r64_s100\tfilter\t64\t100\t6\tfilter_r64_s100.hlo.txt\n\
+                \n\
+                wordcount_r16_s2048\twordcount\t16\t2048\t8192\twordcount_r16_s2048.hlo.txt\n";
+    let metas = parse_manifest(body).unwrap();
+    assert_eq!(metas.len(), 2);
+    assert_eq!(metas[0].kind, "filter");
+    assert_eq!(metas[0].r, 64);
+    assert_eq!(metas[0].s, 100);
+    assert_eq!(metas[0].extra, 6);
+    assert_eq!(metas[1].name, "wordcount_r16_s2048");
+}
+
+#[test]
+fn manifest_rejects_bad_columns() {
+    assert!(parse_manifest("a\tb\tc\n").is_err());
+    assert!(parse_manifest("a\tb\tx\t100\t6\tf\n").is_err());
+}
+
+/// Artifact-dependent tests run only when the library is present; the
+/// integration suite (rust/tests) requires it unconditionally.
+fn try_lib() -> Option<ArtifactLibrary> {
+    let dir = ArtifactLibrary::default_dir();
+    match ArtifactLibrary::load(&dir) {
+        Ok(lib) => Some(lib),
+        Err(e) => {
+            eprintln!("skipping artifact test ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_and_selects_variants() {
+    let Some(lib) = try_lib() else { return };
+    assert!(lib.count() >= 3, "quick set has 3 variants");
+    assert!(lib.kinds().contains(&"filter"));
+    let v = lib.select("filter", 100, 10).expect("filter s=100 exists");
+    assert!(v.meta.r >= 10);
+    assert!(lib.select("filter", 100, 1_000_000).is_none(), "r too large");
+    assert!(lib.select("filter", 9999, 1).is_none(), "unknown s");
+    assert!(lib.max_r("filter", 100).unwrap() >= 64);
+}
+
+#[test]
+fn filter_variant_executes_end_to_end() {
+    let Some(lib) = try_lib() else { return };
+    let v = lib.select("filter", 100, 64).expect("filter_r64_s100");
+    let r = v.meta.r;
+    // chunk: record 3 contains the needle "needle" at byte 10
+    let mut data = vec![0u8; r * 100];
+    data[3 * 100 + 10..3 * 100 + 16].copy_from_slice(b"needle");
+    let chunk = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &[r, 100],
+        &data,
+    )
+    .unwrap();
+    let mut pat = vec![0u8; 16];
+    pat[..6].copy_from_slice(b"needle");
+    let pattern =
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[16], &pat)
+            .unwrap();
+    let nvalid = xla::Literal::from(10i32);
+    let out = v.execute(&[chunk, pattern, nvalid]).unwrap();
+    assert_eq!(out.len(), 3, "(flags, matches, records)");
+    let flags = out[0].to_vec::<i32>().unwrap();
+    assert_eq!(flags[3], 1);
+    assert_eq!(flags.iter().sum::<i32>(), 1);
+    assert_eq!(out[1].get_first_element::<i32>().unwrap(), 1);
+    assert_eq!(out[2].get_first_element::<i32>().unwrap(), 10);
+}

@@ -1,0 +1,275 @@
+//! Event queue, actor registry and the run loop.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::{Rng, Time};
+
+/// Index of a registered actor. Stable for the lifetime of the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ActorId(pub usize);
+
+impl std::fmt::Display for ActorId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "actor#{}", self.0)
+    }
+}
+
+/// A component of the simulated cluster, driven purely by messages.
+pub trait Actor<M> {
+    /// Handle one message delivered at virtual time `ctx.now()`.
+    fn on_event(&mut self, msg: M, ctx: &mut Ctx<'_, M>);
+
+    /// Called once when the engine starts, before any event — the place to
+    /// schedule the actor's first self-message (timers, first RPC, ...).
+    fn on_start(&mut self, _ctx: &mut Ctx<'_, M>) {}
+
+    /// Human-readable label for traces and panics.
+    fn label(&self) -> String {
+        "actor".to_string()
+    }
+
+    /// Downcast hook so the launcher can inspect an actor after the run
+    /// (export gauges, read end-of-run state). Return `Some(self)` to
+    /// opt in.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}
+
+struct Scheduled<M> {
+    time: Time,
+    seq: u64,
+    target: ActorId,
+    msg: M,
+}
+
+// Order by (time, seq): deterministic FIFO among equal timestamps.
+impl<M> PartialEq for Scheduled<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<M> Eq for Scheduled<M> {}
+impl<M> PartialOrd for Scheduled<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<M> Ord for Scheduled<M> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Handle actors use to read the clock, schedule messages and draw
+/// deterministic randomness. Emissions are buffered and flushed into the
+/// event queue after the handler returns (so a handler never observes its
+/// own sends).
+pub struct Ctx<'a, M> {
+    now: Time,
+    self_id: ActorId,
+    emits: &'a mut Vec<(Time, ActorId, M)>,
+    rng: &'a mut Rng,
+    stop: &'a mut bool,
+}
+
+impl<'a, M> Ctx<'a, M> {
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// The actor this event was delivered to.
+    pub fn self_id(&self) -> ActorId {
+        self.self_id
+    }
+
+    /// Deliver `msg` to `target` at absolute virtual time `at`
+    /// (clamped to now — scheduling in the past is a bug we surface loudly).
+    pub fn send_at(&mut self, at: Time, target: ActorId, msg: M) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        self.emits.push((at.max(self.now), target, msg));
+    }
+
+    /// Deliver `msg` to `target` after `delay`.
+    pub fn send_in(&mut self, delay: Time, target: ActorId, msg: M) {
+        self.emits.push((self.now + delay, target, msg));
+    }
+
+    /// Deliver `msg` to `target` "now" (ordered after already-queued events
+    /// at this timestamp).
+    pub fn send(&mut self, target: ActorId, msg: M) {
+        self.send_in(0, target, msg);
+    }
+
+    /// Self-message after `delay` — the idiom for timers and thread loops.
+    pub fn send_self_in(&mut self, delay: Time, msg: M) {
+        let id = self.self_id;
+        self.send_in(delay, id, msg);
+    }
+
+    /// Deterministic per-engine RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        self.rng
+    }
+
+    /// Ask the engine to stop after this handler returns.
+    pub fn stop(&mut self) {
+        *self.stop = true;
+    }
+}
+
+/// The simulation: actor registry + event queue + virtual clock.
+pub struct Engine<M> {
+    clock: Time,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Scheduled<M>>>,
+    actors: Vec<Box<dyn Actor<M>>>,
+    events_processed: u64,
+    started: bool,
+    rng: Rng,
+}
+
+impl<M> Engine<M> {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            clock: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            actors: Vec::new(),
+            events_processed: 0,
+            started: false,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Register an actor; its id is fixed from now on.
+    pub fn add_actor(&mut self, actor: Box<dyn Actor<M>>) -> ActorId {
+        self.actors.push(actor);
+        ActorId(self.actors.len() - 1)
+    }
+
+    /// Number of registered actors.
+    pub fn actor_count(&self) -> usize {
+        self.actors.len()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.clock
+    }
+
+    /// Total events processed so far (engine throughput metric).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Schedule an external (bootstrap) message.
+    pub fn schedule(&mut self, at: Time, target: ActorId, msg: M) {
+        assert!(target.0 < self.actors.len(), "unknown {target}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Scheduled { time: at.max(self.clock), seq, target, msg }));
+    }
+
+    fn flush_emits(&mut self, emits: &mut Vec<(Time, ActorId, M)>) {
+        for (time, target, msg) in emits.drain(..) {
+            assert!(
+                target.0 < self.actors.len(),
+                "send to unregistered {target} at t={time}"
+            );
+            let seq = self.seq;
+            self.seq += 1;
+            self.queue.push(Reverse(Scheduled { time, seq, target, msg }));
+        }
+    }
+
+    fn start(&mut self) {
+        let mut emits = Vec::new();
+        let mut stop = false;
+        for i in 0..self.actors.len() {
+            let mut actor = std::mem::replace(&mut self.actors[i], Box::new(Nop));
+            {
+                let mut ctx = Ctx {
+                    now: self.clock,
+                    self_id: ActorId(i),
+                    emits: &mut emits,
+                    rng: &mut self.rng,
+                    stop: &mut stop,
+                };
+                actor.on_start(&mut ctx);
+            }
+            self.actors[i] = actor;
+        }
+        self.flush_emits(&mut emits);
+        self.started = true;
+    }
+
+    /// Run until the queue drains or virtual time would pass `until`.
+    /// Returns the number of events processed by this call.
+    pub fn run_until(&mut self, until: Time) -> u64 {
+        if !self.started {
+            self.start();
+        }
+        let mut emits: Vec<(Time, ActorId, M)> = Vec::new();
+        let mut processed = 0;
+        let mut stop = false;
+        while let Some(Reverse(head)) = self.queue.peek() {
+            if head.time > until {
+                break;
+            }
+            let Reverse(ev) = self.queue.pop().expect("peeked");
+            debug_assert!(ev.time >= self.clock, "time went backwards");
+            self.clock = ev.time;
+            // Temporarily take the actor out so it can freely use Ctx while
+            // the engine remains borrowable for the emit buffer.
+            let mut actor = std::mem::replace(&mut self.actors[ev.target.0], Box::new(Nop));
+            {
+                let mut ctx = Ctx {
+                    now: self.clock,
+                    self_id: ev.target,
+                    emits: &mut emits,
+                    rng: &mut self.rng,
+                    stop: &mut stop,
+                };
+                actor.on_event(ev.msg, &mut ctx);
+            }
+            self.actors[ev.target.0] = actor;
+            self.flush_emits(&mut emits);
+            processed += 1;
+            self.events_processed += 1;
+            if stop {
+                break;
+            }
+        }
+        // Advance the clock to the horizon even if we idled out early.
+        if self.clock < until && self.queue.iter().all(|Reverse(s)| s.time > until) {
+            self.clock = until;
+        }
+        processed
+    }
+
+    /// Run to quiescence (empty queue). Use only for bounded workloads.
+    pub fn run_to_quiescence(&mut self) -> u64 {
+        self.run_until(Time::MAX)
+    }
+
+    /// Borrow an actor downcast to its concrete type (see
+    /// [`Actor::as_any_mut`]); `None` if the id is unknown, the actor does
+    /// not opt in, or the type does not match.
+    pub fn actor_as<T: 'static>(&mut self, id: ActorId) -> Option<&mut T> {
+        self.actors
+            .get_mut(id.0)?
+            .as_any_mut()?
+            .downcast_mut::<T>()
+    }
+}
+
+/// Placeholder actor swapped in while a real actor's handler runs.
+struct Nop;
+impl<M> Actor<M> for Nop {
+    fn on_event(&mut self, _msg: M, _ctx: &mut Ctx<'_, M>) {
+        panic!("message delivered to an actor that is currently executing (re-entrancy)");
+    }
+}

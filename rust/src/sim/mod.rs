@@ -1,0 +1,49 @@
+//! Deterministic discrete-event simulation (DES) engine.
+//!
+//! The paper's evaluation ran on 128-core Aion nodes with 100 Gb/s
+//! Infiniband; this host has one core, so real thread-per-core concurrency
+//! cannot reproduce any of the contention effects the paper measures
+//! (DESIGN.md §2, substitution 1). Instead, every schedulable entity of the
+//! streaming architecture — broker dispatcher, broker worker cores, the
+//! dedicated push thread, producers, source readers, operator tasks, the
+//! network — is an [`Actor`] driven by this engine in *virtual* time.
+//!
+//! The engine is deliberately minimal and fully deterministic:
+//! * a binary-heap event queue ordered by `(time, seq)` — FIFO among
+//!   same-timestamp events, so runs are reproducible bit-for-bit;
+//! * actors own their state and communicate only through messages
+//!   scheduled via [`Ctx`];
+//! * shared blackboards (network, object store, metrics) are `Rc<RefCell>`
+//!   handles held by the actors that need them — the engine itself is
+//!   single-threaded, which is exactly what makes that sound.
+//!
+//! The engine is generic over the message type so it can be unit-tested
+//! in isolation (see `tests.rs`) and reused by any component.
+
+mod engine;
+mod pool;
+pub mod proptest;
+mod rng;
+#[cfg(test)]
+mod tests;
+
+pub use engine::{Actor, ActorId, Ctx, Engine};
+pub use pool::{CorePool, Job};
+pub use rng::Rng;
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Time = u64;
+
+/// One virtual second, in [`Time`] units.
+pub const SECOND: Time = 1_000_000_000;
+
+/// One virtual millisecond.
+pub const MILLIS: Time = 1_000_000;
+
+/// One virtual microsecond.
+pub const MICROS: Time = 1_000;
+
+/// Convert a f64 number of seconds to [`Time`].
+pub fn secs(s: f64) -> Time {
+    (s * SECOND as f64) as Time
+}

@@ -1,0 +1,119 @@
+//! FIFO multi-server resource — the model of a CPU core pool.
+//!
+//! The paper's broker is "configured with one dispatcher thread (one CPU
+//! core) polling the network ... and multiple working threads that do the
+//! actual writes and reads" (§IV-A). Both are [`CorePool`]s: the dispatcher
+//! a pool of one, the workers a pool of `NBc`. Producer/consumer RPC
+//! *interference* — the effect the whole paper is about — is queueing at
+//! these pools.
+//!
+//! The pool is passive (no events of its own): the owning actor submits
+//! jobs, schedules a completion self-message for each started job, and asks
+//! the pool for the next queued job when one finishes.
+
+use std::collections::VecDeque;
+
+use super::Time;
+
+/// A unit of work for a core: a service time plus an opaque tag the owner
+/// uses to resume the RPC/task that was waiting for the core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    /// Service time on one core.
+    pub cost: Time,
+    /// Owner-defined identifier of the waiting work item.
+    pub tag: u64,
+}
+
+/// FIFO queue in front of `cores` identical servers.
+#[derive(Debug)]
+pub struct CorePool {
+    cores: usize,
+    busy: usize,
+    queue: VecDeque<Job>,
+    // instrumentation
+    jobs_started: u64,
+    busy_ns_accum: u64,
+    last_change: Time,
+    queue_peak: usize,
+}
+
+impl CorePool {
+    pub fn new(cores: usize) -> Self {
+        assert!(cores > 0, "a core pool needs at least one core");
+        Self {
+            cores,
+            busy: 0,
+            queue: VecDeque::new(),
+            jobs_started: 0,
+            busy_ns_accum: 0,
+            last_change: 0,
+            queue_peak: 0,
+        }
+    }
+
+    /// Submit a job. If a core is free the job starts immediately and is
+    /// returned — the owner must schedule its completion at `now + cost`.
+    /// Otherwise it queues and `None` is returned.
+    pub fn submit(&mut self, now: Time, job: Job) -> Option<Job> {
+        if self.busy < self.cores {
+            self.note(now);
+            self.busy += 1;
+            self.jobs_started += 1;
+            Some(job)
+        } else {
+            self.queue.push_back(job);
+            self.queue_peak = self.queue_peak.max(self.queue.len());
+            None
+        }
+    }
+
+    /// A job finished: free its core and, if work is queued, start the next
+    /// job (returned; owner schedules its completion at `now + cost`).
+    pub fn on_complete(&mut self, now: Time) -> Option<Job> {
+        debug_assert!(self.busy > 0, "completion without a running job");
+        self.note(now);
+        self.busy -= 1;
+        if let Some(job) = self.queue.pop_front() {
+            self.busy += 1;
+            self.jobs_started += 1;
+            Some(job)
+        } else {
+            None
+        }
+    }
+
+    fn note(&mut self, now: Time) {
+        self.busy_ns_accum += self.busy as u64 * (now - self.last_change);
+        self.last_change = now;
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak
+    }
+
+    pub fn jobs_started(&self) -> u64 {
+        self.jobs_started
+    }
+
+    /// Mean utilisation in `[0, 1]` over `[0, now]` (per core).
+    pub fn utilization(&mut self, now: Time) -> f64 {
+        self.note(now);
+        if now == 0 {
+            return 0.0;
+        }
+        self.busy_ns_accum as f64 / (self.cores as f64 * now as f64)
+    }
+}

@@ -1,0 +1,29 @@
+//! Minimal property-testing harness (the offline vendor set has no
+//! proptest crate): deterministic random-case generation with automatic
+//! seed reporting on failure.
+//!
+//! ```ignore
+//! forall(100, |rng| {
+//!     let n = rng.range(1, 64);
+//!     ... assertions ...
+//! });
+//! ```
+//!
+//! Failures re-panic with the case seed so the exact case can be replayed
+//! by seeding [`Rng`] directly.
+
+use super::Rng;
+
+/// Run `f` on `cases` deterministic random cases. On panic, report which
+/// case seed failed before propagating.
+pub fn forall(cases: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xF0A11 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (Rng seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Unit tests for the DES engine, core pool and RNG.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::*;
+
+#[derive(Debug, Clone, PartialEq)]
+enum TestMsg {
+    Ping(u32),
+    Tick,
+    Fwd(ActorId, u32),
+}
+
+/// Records every (time, payload) it receives into a shared log.
+struct Recorder {
+    log: Rc<RefCell<Vec<(Time, u32)>>>,
+}
+
+impl Actor<TestMsg> for Recorder {
+    fn on_event(&mut self, msg: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+        if let TestMsg::Ping(v) = msg {
+            self.log.borrow_mut().push((ctx.now(), v));
+        }
+    }
+}
+
+/// Sends Ping(i) to a target every `period`, `n` times, starting at t=period.
+struct Ticker {
+    target: ActorId,
+    period: Time,
+    remaining: u32,
+    sent: u32,
+}
+
+impl Actor<TestMsg> for Ticker {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, TestMsg>) {
+        ctx.send_self_in(self.period, TestMsg::Tick);
+    }
+
+    fn on_event(&mut self, msg: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+        if let TestMsg::Tick = msg {
+            if self.remaining == 0 {
+                return;
+            }
+            self.remaining -= 1;
+            self.sent += 1;
+            ctx.send(self.target, TestMsg::Ping(self.sent));
+            ctx.send_self_in(self.period, TestMsg::Tick);
+        }
+    }
+}
+
+/// Forwards Fwd(next, v) as Ping(v) after a fixed hop delay.
+struct Hop {
+    delay: Time,
+}
+
+impl Actor<TestMsg> for Hop {
+    fn on_event(&mut self, msg: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+        if let TestMsg::Fwd(next, v) = msg {
+            ctx.send_in(self.delay, next, TestMsg::Ping(v));
+        }
+    }
+}
+
+fn recorder(engine: &mut Engine<TestMsg>) -> (ActorId, Rc<RefCell<Vec<(Time, u32)>>>) {
+    let log = Rc::new(RefCell::new(Vec::new()));
+    let id = engine.add_actor(Box::new(Recorder { log: log.clone() }));
+    (id, log)
+}
+
+#[test]
+fn events_deliver_in_time_order() {
+    let mut engine = Engine::new(1);
+    let (rec, log) = recorder(&mut engine);
+    engine.schedule(30, rec, TestMsg::Ping(3));
+    engine.schedule(10, rec, TestMsg::Ping(1));
+    engine.schedule(20, rec, TestMsg::Ping(2));
+    engine.run_to_quiescence();
+    assert_eq!(*log.borrow(), vec![(10, 1), (20, 2), (30, 3)]);
+}
+
+#[test]
+fn same_timestamp_is_fifo() {
+    let mut engine = Engine::new(1);
+    let (rec, log) = recorder(&mut engine);
+    for v in 0..100 {
+        engine.schedule(5, rec, TestMsg::Ping(v));
+    }
+    engine.run_to_quiescence();
+    let got: Vec<u32> = log.borrow().iter().map(|&(_, v)| v).collect();
+    assert_eq!(got, (0..100).collect::<Vec<_>>());
+}
+
+#[test]
+fn run_until_stops_at_horizon() {
+    let mut engine = Engine::new(1);
+    let (rec, log) = recorder(&mut engine);
+    let _ticker = engine.add_actor(Box::new(Ticker {
+        target: rec,
+        period: 10,
+        remaining: 1000,
+        sent: 0,
+    }));
+    engine.run_until(55);
+    assert_eq!(log.borrow().len(), 5); // ticks at 10..=50
+    assert_eq!(engine.now(), 55);
+    engine.run_until(100);
+    assert_eq!(log.borrow().len(), 10);
+}
+
+#[test]
+fn on_start_runs_once() {
+    let mut engine = Engine::new(1);
+    let (rec, log) = recorder(&mut engine);
+    engine.add_actor(Box::new(Ticker { target: rec, period: 7, remaining: 2, sent: 0 }));
+    engine.run_until(3); // before first tick: start must have scheduled it
+    assert!(log.borrow().is_empty());
+    engine.run_until(20);
+    assert_eq!(log.borrow().len(), 2);
+}
+
+#[test]
+fn chained_hops_accumulate_delay() {
+    let mut engine = Engine::new(1);
+    let (rec, log) = recorder(&mut engine);
+    let hop = engine.add_actor(Box::new(Hop { delay: 25 }));
+    engine.schedule(100, hop, TestMsg::Fwd(rec, 9));
+    engine.run_to_quiescence();
+    assert_eq!(*log.borrow(), vec![(125, 9)]);
+}
+
+#[test]
+fn determinism_same_seed_same_trace() {
+    let run = |seed: u64| {
+        let mut engine = Engine::new(seed);
+        let (rec, log) = recorder(&mut engine);
+        let hop = engine.add_actor(Box::new(Hop { delay: 3 }));
+        engine.add_actor(Box::new(Ticker { target: rec, period: 11, remaining: 50, sent: 0 }));
+        engine.schedule(1, hop, TestMsg::Fwd(rec, 77));
+        engine.run_until(600);
+        let trace = log.borrow().clone();
+        trace
+    };
+    assert_eq!(run(42), run(42));
+}
+
+#[test]
+#[should_panic(expected = "unregistered")]
+fn send_to_unregistered_actor_panics() {
+    struct Bad;
+    impl Actor<TestMsg> for Bad {
+        fn on_event(&mut self, _m: TestMsg, ctx: &mut Ctx<'_, TestMsg>) {
+            ctx.send(ActorId(999), TestMsg::Tick);
+        }
+    }
+    let mut engine = Engine::new(1);
+    let bad = engine.add_actor(Box::new(Bad));
+    engine.schedule(0, bad, TestMsg::Tick);
+    engine.run_to_quiescence();
+}
+
+mod pool {
+    use super::*;
+
+    #[test]
+    fn starts_immediately_when_core_free() {
+        let mut pool = CorePool::new(2);
+        assert!(pool.submit(0, Job { cost: 10, tag: 1 }).is_some());
+        assert!(pool.submit(0, Job { cost: 10, tag: 2 }).is_some());
+        assert_eq!(pool.busy(), 2);
+    }
+
+    #[test]
+    fn queues_when_saturated_fifo_resume() {
+        let mut pool = CorePool::new(1);
+        assert!(pool.submit(0, Job { cost: 10, tag: 1 }).is_some());
+        assert!(pool.submit(0, Job { cost: 10, tag: 2 }).is_none());
+        assert!(pool.submit(0, Job { cost: 10, tag: 3 }).is_none());
+        assert_eq!(pool.queued(), 2);
+        let next = pool.on_complete(10).expect("tag 2 resumes");
+        assert_eq!(next.tag, 2);
+        let next = pool.on_complete(20).expect("tag 3 resumes");
+        assert_eq!(next.tag, 3);
+        assert!(pool.on_complete(30).is_none());
+        assert_eq!(pool.busy(), 0);
+    }
+
+    #[test]
+    fn utilization_accounts_busy_time() {
+        let mut pool = CorePool::new(2);
+        pool.submit(0, Job { cost: 100, tag: 1 }).unwrap();
+        pool.on_complete(100);
+        // one of two cores busy for 100 of 200 ns -> 25%
+        let u = pool.utilization(200);
+        assert!((u - 0.25).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn queue_peak_tracks_high_water() {
+        let mut pool = CorePool::new(1);
+        pool.submit(0, Job { cost: 1, tag: 0 });
+        for t in 1..=5 {
+            pool.submit(0, Job { cost: 1, tag: t });
+        }
+        assert_eq!(pool.queue_peak(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_core_pool_is_a_bug() {
+        CorePool::new(0);
+    }
+}
+
+mod rng {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(rng.next_below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive_bounds_hit() {
+        let mut rng = Rng::new(4);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..2000 {
+            match rng.range(5, 8) {
+                5 => lo_seen = true,
+                8 => hi_seen = true,
+                v => assert!((5..=8).contains(&v)),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(5);
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            acc += v;
+        }
+        assert!((acc / 1000.0 - 0.5).abs() < 0.05, "mean off: {}", acc / 1000.0);
+    }
+
+    #[test]
+    fn fill_bytes_covers_partial_chunks() {
+        let mut rng = Rng::new(6);
+        let mut buf = [0u8; 13];
+        rng.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut base = Rng::new(9);
+        let mut f1 = base.fork();
+        let mut f2 = base.fork();
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+}

@@ -1,0 +1,35 @@
+//! Streaming source readers: pull-based, push-based, and the native
+//! ("C++") pull baseline — the paper's central comparison axis.
+//!
+//! **Pull** (`PullSource`, §II-B): the state-of-the-art Flink/Spark design.
+//! A serial fetch loop issues synchronous pull RPCs (up to the consumer
+//! `CS` per partition), pays a per-RPC client cost and a per-record
+//! deserialisation cost, hands batches to the mappers through credited
+//! queues, and — when a pull returns nothing — waits `pull_timeout` before
+//! polling again. Backpressure: no mapper credits → no further pulls.
+//!
+//! **Push** (`PushSourceGroup`, §IV-B): the paper's design. All push source
+//! tasks of a worker coordinate so *one* subscription RPC is issued (by the
+//! leader — "the smallest of the source tasks' identifiers"); the broker's
+//! dedicated thread then fills shared-memory objects and notifies. The
+//! group's consume loop reads each sealed object **by pointer** — no fetch
+//! RPC, no deserialisation copy (`push_consume_record_ns` vs
+//! `engine_record_ns`) — routes batches to the mappers, and only then
+//! notifies the broker to reuse the buffer (Step 4): object-pool exhaustion
+//! *is* the backpressure. Resource footprint: 2 threads total (consume +
+//! broker push) versus 2 per pull consumer — the Fig. 4 claim.
+//!
+//! **Native** (`NativeConsumer`): the Fig. 7 baseline — the same pull loop
+//! without the streaming-engine overhead (C++-grade per-record cost),
+//! counting tuples in place.
+
+#[cfg(test)]
+mod tests;
+
+mod native;
+mod pull;
+mod push;
+
+pub use native::{NativeConsumer, NativeParams};
+pub use pull::{PullParams, PullSource};
+pub use push::{PushGroupParams, PushMember, PushSourceGroup};

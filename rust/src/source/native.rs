@@ -1,0 +1,172 @@
+//! The native ("C++") pull consumer — the Fig. 7 baseline.
+//!
+//! Same pull loop as [`super::PullSource`] but without the streaming
+//! engine: no worker tasks downstream, no queue hops, native per-record
+//! cost. It iterates, (optionally) filters and counts in place, like the
+//! paper's RAMCloud-client-based consumers.
+
+use crate::compute::SharedCompute;
+use crate::config::CostModel;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::{NodeId, SharedNetwork};
+use crate::proto::{
+    ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest, StampedChunk,
+};
+use crate::sim::{Actor, ActorId, Ctx, Time};
+
+/// Wiring for one native consumer.
+pub struct NativeParams {
+    /// Metrics entity (consumer index).
+    pub entity: usize,
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    pub assignments: Vec<(PartitionId, ChunkOffset)>,
+    /// Consumer `CS` per partition per RPC.
+    pub max_bytes: u64,
+    pub pull_timeout: Time,
+    /// Grep needle, when the workload filters.
+    pub pattern: Option<Vec<u8>>,
+    /// Real-plane kernels (native engine — the C++ consumer runs native
+    /// code, not the JVM path).
+    pub compute: Option<SharedCompute>,
+    pub cost: CostModel,
+}
+
+/// The native consumer actor: pull → count (→ filter) → pull.
+pub struct NativeConsumer {
+    params: NativeParams,
+    offsets: Vec<(PartitionId, ChunkOffset)>,
+    processing: Option<Vec<StampedChunk>>,
+    next_rpc: u64,
+    records_consumed: u64,
+    matches: u64,
+    pulls_issued: u64,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+}
+
+impl NativeConsumer {
+    pub fn new(params: NativeParams, metrics: SharedMetrics, net: SharedNetwork) -> Self {
+        let offsets = params.assignments.clone();
+        Self {
+            params,
+            offsets,
+            processing: None,
+            next_rpc: 0,
+            records_consumed: 0,
+            matches: 0,
+            pulls_issued: 0,
+            metrics,
+            net,
+        }
+    }
+
+    fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        self.pulls_issued += 1;
+        self.metrics.borrow_mut().record(Class::PullRpcs, self.params.entity, ctx.now(), 1);
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Pull {
+                    assignments: self.offsets.clone(),
+                    max_bytes: self.params.max_bytes,
+                },
+            }),
+        );
+    }
+
+    fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        let chunks = match env.reply {
+            RpcReply::PullData { chunks } => chunks,
+            RpcReply::Error { reason } => panic!("native consumer: {reason}"),
+            other => panic!("native consumer: unexpected reply {other:?}"),
+        };
+        if chunks.is_empty() {
+            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(0));
+            return;
+        }
+        for sc in &chunks {
+            for (p, off) in self.offsets.iter_mut() {
+                if *p == sc.partition {
+                    *off = (*off).max(sc.offset + 1);
+                }
+            }
+        }
+        let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
+        // Thin native client: small fixed per-RPC cost, native per-record.
+        let cost = self.params.cost.rpc_base_ns + records * self.params.cost.native_record_ns;
+        self.processing = Some(chunks);
+        ctx.send_self_in(cost, Msg::JobDone(0));
+    }
+
+    fn on_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let chunks = self.processing.take().expect("JobDone only while processing");
+        let mut records = 0u64;
+        for sc in &chunks {
+            records += sc.chunk.records as u64;
+            if let (Some(pattern), Some(compute)) = (&self.params.pattern, &self.params.compute) {
+                self.matches += compute
+                    .filter_count(&sc.chunk, pattern)
+                    .unwrap_or_else(|e| panic!("native filter: {e:#}"));
+            }
+        }
+        self.records_consumed += records;
+        self.metrics.borrow_mut().record(
+            Class::ConsumerTuples,
+            self.params.entity,
+            ctx.now(),
+            records,
+        );
+        self.issue_pull(ctx);
+    }
+
+    pub fn records_consumed(&self) -> u64 {
+        self.records_consumed
+    }
+
+    pub fn matches(&self) -> u64 {
+        self.matches
+    }
+
+    pub fn pulls_issued(&self) -> u64 {
+        self.pulls_issued
+    }
+}
+
+impl Actor<Msg> for NativeConsumer {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.issue_pull(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::JobDone(_) => self.on_processed(ctx),
+            Msg::Timer(_) => {
+                if self.processing.is_none() {
+                    self.issue_pull(ctx);
+                }
+            }
+            other => panic!("native consumer: unexpected {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("native-consumer#{}", self.params.entity)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -1,0 +1,232 @@
+//! The pull-based source reader (state-of-the-art baseline).
+
+use crate::config::CostModel;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::{NodeId, SharedNetwork};
+use crate::proto::{
+    Batch, ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest,
+    StampedChunk,
+};
+use crate::sim::{Actor, ActorId, Ctx, Time};
+use std::collections::VecDeque;
+
+use crate::worker::{CreditLedger, SharedRegistry};
+
+/// Wiring for one pull source task.
+pub struct PullParams {
+    /// Global task index (upstream id for credits) == metrics entity.
+    pub task_idx: usize,
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    /// Exclusive partitions with starting offsets.
+    pub assignments: Vec<(PartitionId, ChunkOffset)>,
+    /// Consumer `CS`: byte budget **per partition** per pull RPC.
+    pub max_bytes: u64,
+    /// Poll backoff when a pull returns empty.
+    pub pull_timeout: Time,
+    /// Mapper tasks this source feeds (round-robin).
+    pub downstream: Vec<usize>,
+    /// Credits per downstream (queue capacity).
+    pub queue_cap: usize,
+    pub cost: CostModel,
+}
+
+enum State {
+    /// RPC in flight.
+    Fetching,
+    /// Deserialising the fetched chunks.
+    Processing(Vec<StampedChunk>),
+    /// Stalled: batches wait for mapper credits (backpressure).
+    Blocked,
+    /// Empty poll: waiting out the pull timeout.
+    Idle,
+}
+
+/// The pull source actor: a serial fetch → deserialise → emit loop.
+pub struct PullSource {
+    params: PullParams,
+    offsets: Vec<(PartitionId, ChunkOffset)>,
+    ledger: CreditLedger,
+    state: State,
+    rr: usize,
+    next_rpc: u64,
+    pending: VecDeque<Batch>,
+    pulls_issued: u64,
+    empty_pulls: u64,
+    records_consumed: u64,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+    registry: SharedRegistry,
+}
+
+impl PullSource {
+    pub fn new(
+        params: PullParams,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+        registry: SharedRegistry,
+    ) -> Self {
+        assert!(!params.assignments.is_empty());
+        assert!(!params.downstream.is_empty());
+        let offsets = params.assignments.clone();
+        let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        Self {
+            params,
+            offsets,
+            ledger,
+            state: State::Idle,
+            rr: 0,
+            next_rpc: 0,
+            pending: VecDeque::new(),
+            pulls_issued: 0,
+            empty_pulls: 0,
+            records_consumed: 0,
+            metrics,
+            net,
+            registry,
+        }
+    }
+
+    fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        self.pulls_issued += 1;
+        self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
+        // The request itself is a control message (tiny payload).
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Pull {
+                    assignments: self.offsets.clone(),
+                    max_bytes: self.params.max_bytes,
+                },
+            }),
+        );
+        self.state = State::Fetching;
+    }
+
+    fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        let chunks = match env.reply {
+            RpcReply::PullData { chunks } => chunks,
+            RpcReply::Error { reason } => {
+                panic!("pull source {}: {reason}", self.params.task_idx)
+            }
+            other => panic!("pull source {}: unexpected reply {other:?}", self.params.task_idx),
+        };
+        if chunks.is_empty() {
+            self.empty_pulls += 1;
+            self.state = State::Idle;
+            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(0));
+            return;
+        }
+        // Advance offsets past what we received.
+        for sc in &chunks {
+            for (p, off) in self.offsets.iter_mut() {
+                if *p == sc.partition {
+                    *off = (*off).max(sc.offset + 1);
+                }
+            }
+        }
+        let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
+        // Serial consume loop: per-RPC client overhead + per-record
+        // deserialisation — the cost the push path eliminates.
+        let cost = self.params.cost.pull_rpc_client_ns
+            + records * self.params.cost.engine_record_ns;
+        self.state = State::Processing(chunks);
+        ctx.send_self_in(cost, Msg::JobDone(0));
+    }
+
+    fn on_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let State::Processing(chunks) = std::mem::replace(&mut self.state, State::Blocked) else {
+            panic!("pull source {}: JobDone outside Processing", self.params.task_idx)
+        };
+        for sc in chunks {
+            self.records_consumed += sc.chunk.records as u64;
+            self.pending.push_back(Batch {
+                from_task: self.params.task_idx,
+                tuples: sc.chunk.records as u64,
+                bytes: sc.chunk.bytes(),
+                chunks: vec![sc.chunk],
+                hist: None,
+            });
+        }
+        self.flush(ctx);
+    }
+
+    /// Send pending batches while credits allow; when drained, loop back to
+    /// the next pull.
+    fn flush(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        while !self.pending.is_empty() {
+            // Round-robin over the mappers, skipping credit-exhausted ones.
+            let n = self.params.downstream.len();
+            let Some(k) = (0..n)
+                .map(|i| (self.rr + i) % n)
+                .find(|&k| self.ledger.has(self.params.downstream[k]))
+            else {
+                self.state = State::Blocked;
+                return;
+            };
+            let target = self.params.downstream[k];
+            self.rr = k + 1;
+            self.ledger.spend(target);
+            let batch = self.pending.pop_front().expect("checked non-empty");
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
+        }
+        self.issue_pull(ctx);
+    }
+
+    pub fn pulls_issued(&self) -> u64 {
+        self.pulls_issued
+    }
+
+    pub fn empty_pulls(&self) -> u64 {
+        self.empty_pulls
+    }
+
+    pub fn records_consumed(&self) -> u64 {
+        self.records_consumed
+    }
+}
+
+impl Actor<Msg> for PullSource {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.issue_pull(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::JobDone(_) => self.on_processed(ctx),
+            Msg::Timer(_) => {
+                if matches!(self.state, State::Idle) {
+                    self.issue_pull(ctx);
+                }
+            }
+            Msg::Credit { to_upstream_task } => {
+                self.ledger.refund(to_upstream_task);
+                if matches!(self.state, State::Blocked) {
+                    self.flush(ctx);
+                }
+            }
+            other => panic!("pull source {}: unexpected {other:?}", self.params.task_idx),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("pull-source#{}", self.params.task_idx)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

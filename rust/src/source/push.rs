@@ -1,0 +1,293 @@
+//! The push-based source group (the paper's design, §IV-B).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::CostModel;
+use crate::net::{NodeId, SharedNetwork};
+use crate::plasma::SharedStore;
+use crate::proto::{
+    Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
+    RpcReply, RpcRequest, SubId,
+};
+use crate::sim::{Actor, ActorId, Ctx};
+use crate::worker::{CreditLedger, SharedRegistry};
+
+/// One logical push source task in the group (a consumer of the paper's
+/// model: exclusive partitions, its own shared-object pool, its own slot
+/// thread for materialising tuples out of shared objects).
+#[derive(Debug, Clone)]
+pub struct PushMember {
+    /// Global task index of this logical source.
+    pub task_idx: usize,
+    pub assignments: Vec<(PartitionId, ChunkOffset)>,
+    /// Object pool size (backpressure window).
+    pub objects: usize,
+    /// Object capacity — the push-path consumer chunk size.
+    pub object_bytes: u64,
+}
+
+/// Wiring for the worker-local push source group.
+pub struct PushGroupParams {
+    /// The leader's global task index (smallest member id in the paper) —
+    /// the one task that issues the single subscription RPC and handles
+    /// notifications.
+    pub leader_task_idx: usize,
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    pub members: Vec<PushMember>,
+    /// Mapper tasks fed round-robin (shared by all members).
+    pub downstream: Vec<usize>,
+    pub queue_cap: usize,
+    pub cost: CostModel,
+}
+
+/// Per-member consume state: each member's slot thread materialises tuples
+/// from its own sealed objects, concurrently with the other members.
+#[derive(Debug, Default)]
+struct MemberState {
+    ready: VecDeque<ObjectId>,
+    /// Object whose consume cost is currently being charged.
+    consuming: Option<ObjectId>,
+    /// Batches awaiting mapper credits; the object is freed only after
+    /// they drain (backpressure propagates to the broker's push thread).
+    pending: VecDeque<Batch>,
+    pending_free: Option<ObjectId>,
+    objects_consumed: u64,
+    records_consumed: u64,
+}
+
+/// The group actor. One *extra* thread pair versus `2 × Nc` for pull:
+/// the leader's subscription/notification thread here plus the broker's
+/// dedicated push thread; the members' tuple materialisation runs on the
+/// worker slots they already occupy (hence per-member concurrency).
+pub struct PushSourceGroup {
+    params: PushGroupParams,
+    ledger: CreditLedger,
+    members: Vec<MemberState>,
+    /// SubId -> member index, resolved from the subscribe ack (the broker
+    /// assigns consecutive sub ids in spec order).
+    sub_to_member: HashMap<SubId, usize>,
+    base_sub: Option<SubId>,
+    /// Notifications that raced ahead of the subscribe ack.
+    early: Vec<ObjectId>,
+    subscribed: bool,
+    rr: usize,
+    net: SharedNetwork,
+    store: SharedStore,
+    registry: SharedRegistry,
+}
+
+impl PushSourceGroup {
+    pub fn new(
+        params: PushGroupParams,
+        net: SharedNetwork,
+        store: SharedStore,
+        registry: SharedRegistry,
+    ) -> Self {
+        assert!(!params.members.is_empty());
+        assert!(!params.downstream.is_empty());
+        let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        let members = params.members.iter().map(|_| MemberState::default()).collect();
+        Self {
+            params,
+            ledger,
+            members,
+            sub_to_member: HashMap::new(),
+            base_sub: None,
+            early: Vec::new(),
+            subscribed: false,
+            rr: 0,
+            net,
+            store,
+            registry,
+        }
+    }
+
+    /// Step 1: the single subscription RPC, issued by the leader on behalf
+    /// of every member.
+    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let sources = self
+            .params
+            .members
+            .iter()
+            .map(|m| PushSourceSpec {
+                source_actor: ctx.self_id(),
+                assignments: m.assignments.clone(),
+                objects: m.objects,
+                object_bytes: m.object_bytes,
+            })
+            .collect();
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id: 0,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::PushSubscribe { sources },
+            }),
+        );
+    }
+
+    fn member_of(&mut self, id: ObjectId) -> usize {
+        let base = self.base_sub.expect("subscribed before notifications").0;
+        let idx = id.sub.0 - base;
+        debug_assert!(idx < self.members.len(), "sub {:?} not ours", id.sub);
+        self.sub_to_member.entry(id.sub).or_insert(idx);
+        idx
+    }
+
+    fn on_ready(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
+        if !self.subscribed {
+            self.early.push(id);
+            return;
+        }
+        let m = self.member_of(id);
+        self.members[m].ready.push_back(id);
+        self.try_consume(m, ctx);
+    }
+
+    /// Start the member's slot thread on its next sealed object.
+    fn try_consume(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        let state = &mut self.members[m];
+        if state.consuming.is_some()
+            || !state.pending.is_empty()
+            || state.pending_free.is_some()
+        {
+            return;
+        }
+        let Some(id) = state.ready.pop_front() else { return };
+        let (records, _bytes) = self.store.borrow().sealed_counts(id);
+        // Pointer access into shared memory: tuples are materialised from
+        // the shared object without a fetch RPC or a deser copy.
+        let cost = self.params.cost.push_object_handle_ns
+            + records * self.params.cost.push_consume_record_ns;
+        state.consuming = Some(id);
+        ctx.send_self_in(cost, Msg::JobDone(m as u64));
+    }
+
+    fn on_consumed(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        let id = {
+            let state = &mut self.members[m];
+            state.consuming.take().expect("JobDone only while consuming")
+        };
+        let from_task = self.params.members[m].task_idx;
+        {
+            let store = self.store.borrow();
+            let state = &mut self.members[m];
+            for sc in store.read(id) {
+                state.records_consumed += sc.chunk.records as u64;
+                state.pending.push_back(Batch {
+                    from_task,
+                    tuples: sc.chunk.records as u64,
+                    bytes: sc.chunk.bytes(),
+                    chunks: vec![sc.chunk.clone()],
+                    hist: None,
+                });
+            }
+            state.objects_consumed += 1;
+        }
+        self.members[m].pending_free = Some(id);
+        self.flush(m, ctx);
+    }
+
+    /// Forward the member's batches under credits; once drained, notify the
+    /// broker (Step 4) so the buffer is reused, then serve its next object.
+    fn flush(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        loop {
+            let Some(batch) = ({
+                let state = &mut self.members[m];
+                state.pending.pop_front()
+            }) else {
+                break;
+            };
+            // Round-robin over the mappers, skipping credit-exhausted ones.
+            let n = self.params.downstream.len();
+            let Some(k) = (0..n)
+                .map(|i| (self.rr + i) % n)
+                .find(|&k| self.ledger.has(self.params.downstream[k]))
+            else {
+                self.members[m].pending.push_front(batch);
+                return; // blocked: object stays held -> broker stalls
+            };
+            let target = self.params.downstream[k];
+            self.rr = k + 1;
+            self.ledger.spend(target);
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
+        }
+        if let Some(id) = self.members[m].pending_free.take() {
+            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+        }
+        self.try_consume(m, ctx);
+    }
+
+    pub fn objects_consumed(&self) -> u64 {
+        self.members.iter().map(|m| m.objects_consumed).sum()
+    }
+
+    pub fn records_consumed(&self) -> u64 {
+        self.members.iter().map(|m| m.records_consumed).sum()
+    }
+
+    /// Per-member records (partition-skew diagnostics).
+    pub fn member_records(&self) -> Vec<u64> {
+        self.members.iter().map(|m| m.records_consumed).collect()
+    }
+
+    pub fn is_subscribed(&self) -> bool {
+        self.subscribed
+    }
+}
+
+impl Actor<Msg> for PushSourceGroup {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.subscribe(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Reply(env) => {
+                let RpcEnvelope { reply, .. } = env;
+                match reply {
+                    RpcReply::SubscribeAck { sub } => {
+                        self.base_sub = Some(sub);
+                        self.subscribed = true;
+                        let early = std::mem::take(&mut self.early);
+                        for id in early {
+                            self.on_ready(id, ctx);
+                        }
+                    }
+                    RpcReply::Error { reason } => panic!(
+                        "push group {}: subscribe failed: {reason}",
+                        self.params.leader_task_idx
+                    ),
+                    other => panic!("push group: unexpected reply {other:?}"),
+                }
+            }
+            // Step 3: the broker sealed an object for one of our members.
+            Msg::ObjectReady { id } => self.on_ready(id, ctx),
+            Msg::JobDone(m) => self.on_consumed(m as usize, ctx),
+            Msg::Credit { to_upstream_task } => {
+                self.ledger.refund(to_upstream_task);
+                for m in 0..self.members.len() {
+                    self.flush(m, ctx);
+                }
+            }
+            other => panic!("push group: unexpected {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("push-group(leader#{})", self.params.leader_task_idx)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -1,0 +1,238 @@
+//! Source-reader tests against a real broker + worker tasks.
+
+use super::*;
+use crate::broker::{Broker, BrokerParams};
+use crate::config::{CostModel, NetworkProfile};
+use crate::metrics::{Class, MetricsHub, SharedMetrics};
+use crate::net::Network;
+use crate::ops::CountOp;
+use crate::plasma::ObjectStore;
+use crate::producer::{Producer, ProducerParams, RecordGen};
+use crate::proto::{Msg, PartitionId};
+use crate::sim::{ActorId, Engine, SECOND};
+use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
+
+/// A full mini-cluster: 1 producer, broker, 1 source (mode-dependent),
+/// 2 count mappers.
+struct Rig {
+    engine: Engine<Msg>,
+    metrics: SharedMetrics,
+    source: ActorId,
+}
+
+fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
+    let mut engine = Engine::new(11);
+    let metrics = MetricsHub::shared();
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let store = ObjectStore::shared();
+    let registry = TaskRegistry::shared();
+    let parts: Vec<PartitionId> = (0..2).map(PartitionId).collect();
+    let push = mode == "push";
+    let broker = engine.add_actor(Box::new(Broker::new(
+        BrokerParams {
+            node: 0,
+            worker_cores: 4,
+            push_threads: if push { 1 } else { 0 },
+            segment_bytes: 8 << 20,
+            partitions: parts.clone(),
+            backup: None,
+            is_backup: false,
+            cost: CostModel::default(),
+        },
+        net.clone(),
+        store.clone(),
+        metrics.clone(),
+        0,
+    )));
+    engine.add_actor(Box::new(Producer::new(
+        ProducerParams {
+            entity: 0,
+            node: 1,
+            broker,
+            broker_node: 0,
+            partitions: parts.clone(),
+            chunk_bytes: producer_chunk,
+            record_size: 100,
+            cost: CostModel::default(),
+            data_plane: crate::config::DataPlane::Sim,
+        },
+        RecordGen::Sim,
+        metrics.clone(),
+        net.clone(),
+    )));
+    // two count mappers at task idx 1, 2 (source is task 0)
+    let downstream = vec![1usize, 2];
+    for &idx in &downstream {
+        let t = engine.add_actor(Box::new(OperatorTask::new(
+            TaskParams {
+                task_idx: idx,
+                queue_cap: 8,
+                downstream: vec![],
+                tick_ns: SECOND,
+                cost: CostModel::default(),
+            },
+            vec![Box::new(CountOp::default())],
+            registry.clone(),
+            metrics.clone(),
+        )));
+        registry.borrow_mut().register(idx, t);
+    }
+    let source = match mode {
+        "pull" => {
+            let s = engine.add_actor(Box::new(PullSource::new(
+                PullParams {
+                    task_idx: 0,
+                    node: 0,
+                    broker,
+                    broker_node: 0,
+                    assignments: parts.iter().map(|&p| (p, 0)).collect(),
+                    max_bytes: consumer_chunk as u64,
+                    pull_timeout: 100_000,
+                    downstream: downstream.clone(),
+                    queue_cap: 8,
+                    cost: CostModel::default(),
+                },
+                metrics.clone(),
+                net.clone(),
+                registry.clone(),
+            )));
+            registry.borrow_mut().register(0, s);
+            s
+        }
+        "push" => {
+            let s = engine.add_actor(Box::new(PushSourceGroup::new(
+                PushGroupParams {
+                    leader_task_idx: 0,
+                    node: 0,
+                    broker,
+                    broker_node: 0,
+                    members: vec![PushMember {
+                        task_idx: 0,
+                        assignments: parts.iter().map(|&p| (p, 0)).collect(),
+                        objects: 4,
+                        object_bytes: consumer_chunk as u64,
+                    }],
+                    downstream: downstream.clone(),
+                    queue_cap: 8,
+                    cost: CostModel::default(),
+                },
+                net.clone(),
+                store.clone(),
+                registry.clone(),
+            )));
+            registry.borrow_mut().register(0, s);
+            s
+        }
+        "native" => engine.add_actor(Box::new(NativeConsumer::new(
+            NativeParams {
+                entity: 0,
+                node: 0,
+                broker,
+                broker_node: 0,
+                assignments: parts.iter().map(|&p| (p, 0)).collect(),
+                max_bytes: consumer_chunk as u64,
+                pull_timeout: 100_000,
+                pattern: None,
+                compute: None,
+                cost: CostModel::default(),
+            },
+            metrics.clone(),
+            net.clone(),
+        ))),
+        other => panic!("unknown mode {other}"),
+    };
+    Rig { engine, metrics, source }
+}
+
+#[test]
+fn pull_source_consumes_and_feeds_mappers() {
+    let mut r = rig("pull", 4096, 64 * 1024);
+    r.engine.run_until(SECOND);
+    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    assert!(s.records_consumed() > 10_000, "consumed {}", s.records_consumed());
+    assert!(s.pulls_issued() > 10);
+    let consumed = s.records_consumed();
+    // mappers logged every consumed tuple
+    let logged = r.metrics.borrow().total(Class::ConsumerTuples);
+    assert!(logged > 0 && logged <= consumed);
+    assert!(
+        logged as f64 > consumed as f64 * 0.9,
+        "mappers keep up: {logged} vs {consumed}"
+    );
+}
+
+#[test]
+fn pull_source_records_rpc_metric() {
+    let mut r = rig("pull", 4096, 64 * 1024);
+    r.engine.run_until(SECOND / 2);
+    let rpcs = r.metrics.borrow().total(Class::PullRpcs);
+    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    assert_eq!(rpcs, s.pulls_issued());
+}
+
+#[test]
+fn pull_source_backs_off_when_caught_up() {
+    // Tiny producer chunks + huge consumer budget: the source catches up
+    // and issues empty polls paced by pull_timeout.
+    let mut r = rig("pull", 1024, 1 << 20);
+    r.engine.run_until(SECOND);
+    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    assert!(s.empty_pulls() > 0, "must hit empty polls");
+}
+
+#[test]
+fn push_group_consumes_objects() {
+    let mut r = rig("push", 4096, 64 * 1024);
+    r.engine.run_until(SECOND);
+    let g = r.engine.actor_as::<PushSourceGroup>(r.source).unwrap();
+    assert!(g.is_subscribed());
+    assert!(g.objects_consumed() > 5, "objects {}", g.objects_consumed());
+    assert!(g.records_consumed() > 10_000);
+    let consumed = g.records_consumed();
+    let logged = r.metrics.borrow().total(Class::ConsumerTuples);
+    assert!(logged as f64 > consumed as f64 * 0.9);
+    // push issues no pull RPCs
+    assert_eq!(r.metrics.borrow().total(Class::PullRpcs), 0);
+}
+
+#[test]
+fn push_objects_are_filled_and_reused() {
+    let mut r = rig("push", 4096, 64 * 1024);
+    r.engine.run_until(SECOND);
+    let filled = r.metrics.borrow().total(Class::ObjectsFilled);
+    let g = r.engine.actor_as::<PushSourceGroup>(r.source).unwrap();
+    // every filled object is eventually consumed (within one in flight)
+    assert!(filled >= g.objects_consumed());
+    assert!(filled <= g.objects_consumed() + 4 + 1, "bounded in-flight");
+}
+
+#[test]
+fn native_consumer_keeps_up_with_producer() {
+    let mut r = rig("native", 4096, 64 * 1024);
+    r.engine.run_until(SECOND);
+    let n = r.engine.actor_as::<NativeConsumer>(r.source).unwrap();
+    let produced = r.metrics.borrow().total(Class::ProducerRecords);
+    let consumed = n.records_consumed();
+    assert!(
+        consumed as f64 > produced as f64 * 0.8,
+        "native keeps up (paper Fig. 7): {consumed} vs {produced}"
+    );
+    // native counts tuples directly
+    assert_eq!(r.metrics.borrow().total(Class::ConsumerTuples), consumed);
+}
+
+#[test]
+fn consumption_never_exceeds_production() {
+    for mode in ["pull", "push", "native"] {
+        let mut r = rig(mode, 16 * 1024, 64 * 1024);
+        r.engine.run_until(SECOND);
+        let produced = r.metrics.borrow().total(Class::ProducerRecords);
+        let consumed = match mode {
+            "pull" => r.engine.actor_as::<PullSource>(r.source).unwrap().records_consumed(),
+            "push" => r.engine.actor_as::<PushSourceGroup>(r.source).unwrap().records_consumed(),
+            _ => r.engine.actor_as::<NativeConsumer>(r.source).unwrap().records_consumed(),
+        };
+        assert!(consumed <= produced, "{mode}: {consumed} <= {produced}");
+        assert!(consumed > 0, "{mode}: progress");
+    }
+}

@@ -1,0 +1,76 @@
+//! Corpus reader tests.
+
+use super::*;
+
+#[test]
+fn corpus_is_nontrivial_ascii_text() {
+    assert!(CORPUS.len() > 2000);
+    assert!(CORPUS.is_ascii());
+    assert!(CORPUS.contains("broker"));
+}
+
+#[test]
+fn fill_serves_whole_records() {
+    let mut r = CorpusReader::new(128, 10);
+    let mut buf = vec![0u8; 4 * 128];
+    assert_eq!(r.fill_records(&mut buf), 4);
+    assert_eq!(r.remaining(), 6);
+    assert!(buf.iter().all(|&b| b != 0), "records fully filled with text");
+}
+
+#[test]
+fn budget_exhaustion_stops_the_reader() {
+    let mut r = CorpusReader::new(64, 3);
+    let mut buf = vec![0u8; 5 * 64];
+    assert_eq!(r.fill_records(&mut buf), 3);
+    assert_eq!(r.fill_records(&mut buf), 0);
+    assert_eq!(r.remaining(), 0);
+}
+
+#[test]
+fn text_tiles_across_the_corpus_boundary() {
+    let mut r = CorpusReader::from_text("abc ", 8, 4);
+    let mut buf = vec![0u8; 8];
+    r.fill_records(&mut buf);
+    assert_eq!(&buf, b"abc abc ");
+}
+
+#[test]
+fn records_are_deterministic_sequence() {
+    let mut a = CorpusReader::new(256, 100);
+    let mut b = CorpusReader::new(256, 100);
+    let (mut ba, mut bb) = (vec![0u8; 256 * 3], vec![0u8; 256 * 3]);
+    a.fill_records(&mut ba);
+    b.fill_records(&mut bb);
+    assert_eq!(ba, bb);
+}
+
+mod tokens {
+    use super::*;
+
+    #[test]
+    fn counts_simple_words() {
+        assert_eq!(CorpusReader::count_tokens(b"hello world"), 2);
+        assert_eq!(CorpusReader::count_tokens(b"  a  b  "), 2);
+        assert_eq!(CorpusReader::count_tokens(b""), 0);
+        assert_eq!(CorpusReader::count_tokens(b"..."), 0);
+    }
+
+    #[test]
+    fn digits_and_trailing_token() {
+        assert_eq!(CorpusReader::count_tokens(b"year 1881 end"), 3);
+        assert_eq!(CorpusReader::count_tokens(b"endword"), 1);
+    }
+
+    #[test]
+    fn corpus_token_density_is_realistic() {
+        // ~5-6 chars per word + space: a 2 KiB record holds roughly
+        // 250-400 tokens. The sim-plane default (cost.tokens_per_record)
+        // must be in that ballpark.
+        let mut r = CorpusReader::new(2048, 1);
+        let mut buf = vec![0u8; 2048];
+        r.fill_records(&mut buf);
+        let tokens = CorpusReader::count_tokens(&buf);
+        assert!((250..=420).contains(&tokens), "tokens in 2 KiB: {tokens}");
+    }
+}

@@ -1,0 +1,295 @@
+//! The Flink-like processing worker: operator tasks, bounded queues,
+//! credit-based backpressure.
+//!
+//! §IV-A: a worker hosts `NFs` slots; sources, sinks and other operators
+//! deploy on slots and exchange batches through queues. Flink's actual
+//! flow control is credit-based; so is ours: every upstream→downstream
+//! pair starts with `queue_cap` credits, an upstream spends one per batch
+//! and the downstream returns it after *processing* the batch. A slow
+//! operator therefore stalls its upstreams — which is exactly the
+//! backpressure the paper's push design must preserve (§III).
+//!
+//! [`OperatorTask`] is one slot-resident task thread: a serial loop over
+//! its input queue driving an operator chain (chained operators execute
+//! in the same task, Fig. 1's S1→Op3 case).
+
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+use crate::config::CostModel;
+use crate::metrics::{Class, SharedMetrics};
+use crate::ops::{OpOutput, Operator};
+use crate::proto::{Batch, Msg};
+use crate::sim::{Actor, ActorId, Ctx, Time, SECOND};
+
+/// Maps global task index -> actor id (filled by the launcher).
+#[derive(Debug, Default)]
+pub struct TaskRegistry {
+    actors: Vec<Option<ActorId>>,
+}
+
+pub type SharedRegistry = Rc<RefCell<TaskRegistry>>;
+
+impl TaskRegistry {
+    pub fn shared() -> SharedRegistry {
+        Rc::new(RefCell::new(Self::default()))
+    }
+
+    pub fn register(&mut self, task_idx: usize, actor: ActorId) {
+        if self.actors.len() <= task_idx {
+            self.actors.resize(task_idx + 1, None);
+        }
+        assert!(self.actors[task_idx].is_none(), "task {task_idx} registered twice");
+        self.actors[task_idx] = Some(actor);
+    }
+
+    pub fn actor_of(&self, task_idx: usize) -> ActorId {
+        self.actors[task_idx].unwrap_or_else(|| panic!("task {task_idx} not registered"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.actors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actors.is_empty()
+    }
+}
+
+/// Credit ledger an upstream keeps toward its downstream targets.
+#[derive(Debug)]
+pub struct CreditLedger {
+    credits: HashMap<usize, usize>,
+    cap: usize,
+}
+
+impl CreditLedger {
+    pub fn new(targets: &[usize], cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { credits: targets.iter().map(|&t| (t, cap)).collect(), cap }
+    }
+
+    pub fn has(&self, target: usize) -> bool {
+        self.credits.get(&target).copied().unwrap_or(0) > 0
+    }
+
+    pub fn spend(&mut self, target: usize) {
+        let c = self.credits.get_mut(&target).expect("known target");
+        assert!(*c > 0, "spending a credit we do not have (task {target})");
+        *c -= 1;
+    }
+
+    pub fn refund(&mut self, target: usize) {
+        let c = self.credits.get_mut(&target).expect("known target");
+        *c += 1;
+        assert!(*c <= self.cap, "credit overflow from task {target}");
+    }
+}
+
+/// Wiring for one operator task.
+pub struct TaskParams {
+    /// Global task index (registry key; also the metrics entity).
+    pub task_idx: usize,
+    /// Credits granted per upstream (input queue capacity in batches).
+    pub queue_cap: usize,
+    /// Credits toward each downstream target this task emits to.
+    pub downstream: Vec<usize>,
+    /// Slide tick period for windowed chains (ns); `SECOND` in the paper.
+    pub tick_ns: Time,
+    pub cost: CostModel,
+}
+
+/// One slot-resident task: input queue + operator chain + credit flow.
+pub struct OperatorTask {
+    params: TaskParams,
+    chain: Vec<Box<dyn Operator>>,
+    inbox: VecDeque<Batch>,
+    /// Emits waiting for downstream credits.
+    pending_emits: VecDeque<(usize, Batch)>,
+    ledger: CreditLedger,
+    busy: bool,
+    registry: SharedRegistry,
+    metrics: SharedMetrics,
+    batches_processed: u64,
+    /// Peak input-queue depth (backpressure diagnostics).
+    inbox_peak: usize,
+}
+
+impl OperatorTask {
+    pub fn new(
+        params: TaskParams,
+        chain: Vec<Box<dyn Operator>>,
+        registry: SharedRegistry,
+        metrics: SharedMetrics,
+    ) -> Self {
+        assert!(!chain.is_empty(), "a task needs at least one operator");
+        let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        Self {
+            params,
+            chain,
+            inbox: VecDeque::new(),
+            pending_emits: VecDeque::new(),
+            ledger,
+            busy: false,
+            registry,
+            metrics,
+            batches_processed: 0,
+            inbox_peak: 0,
+        }
+    }
+
+    fn chain_cost(&self, batch: &Batch) -> Time {
+        self.chain.iter().map(|op| op.cost(batch, &self.params.cost)).sum::<Time>()
+            + self.params.cost.queue_hop_ns
+    }
+
+    /// Start processing the head batch if idle and not emit-blocked.
+    fn try_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.busy || !self.pending_emits.is_empty() {
+            return;
+        }
+        if let Some(batch) = self.inbox.front() {
+            let cost = self.chain_cost(batch);
+            self.busy = true;
+            ctx.send_self_in(cost, Msg::JobDone(0));
+        }
+    }
+
+    fn flush_emits(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        while let Some((target, _)) = self.pending_emits.front() {
+            if !self.ledger.has(*target) {
+                return;
+            }
+            let (target, batch) = self.pending_emits.pop_front().expect("peeked");
+            self.send_batch(target, batch, ctx);
+        }
+    }
+
+    fn send_batch(&mut self, target: usize, batch: Batch, ctx: &mut Ctx<'_, Msg>) {
+        self.ledger.spend(target);
+        let actor = self.registry.borrow().actor_of(target);
+        ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
+    }
+
+    fn route(&mut self, out: OpOutput, ctx: &mut Ctx<'_, Msg>) {
+        if out.tuples_logged > 0 {
+            self.metrics.borrow_mut().record(
+                Class::ConsumerTuples,
+                self.params.task_idx,
+                ctx.now(),
+                out.tuples_logged,
+            );
+        }
+        for (target, batch) in out.emits {
+            if self.pending_emits.is_empty() && self.ledger.has(target) {
+                self.send_batch(target, batch, ctx);
+            } else {
+                self.pending_emits.push_back((target, batch));
+            }
+        }
+    }
+
+    fn on_done(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        debug_assert!(self.busy);
+        self.busy = false;
+        let batch = self.inbox.pop_front().expect("processing an inbox batch");
+        let from_upstream = batch.from_task;
+        let me = self.params.task_idx;
+        let mut out = OpOutput::default();
+        let mut current = batch;
+        let chain_len = self.chain.len();
+        for (i, op) in self.chain.iter_mut().enumerate() {
+            let mut step = OpOutput::default();
+            let passthrough = current.clone();
+            op.apply(current, me, &mut step)
+                .unwrap_or_else(|e| panic!("task {me} op {}: {e:#}", i));
+            out.tuples_logged += step.tuples_logged;
+            if i + 1 == chain_len {
+                out.emits = step.emits;
+                break;
+            }
+            // Chained operators hand at most one batch to the next stage;
+            // pass-through loggers (count/filter) forward the input batch,
+            // multi-emit stages (keyBy exchanges) must end a chain.
+            match step.emits.len() {
+                0 => current = passthrough,
+                1 => current = step.emits.pop().expect("len checked").1,
+                n => panic!("task {me}: chained op emits {n} batches mid-chain"),
+            }
+        }
+        self.batches_processed += 1;
+        self.route(out, ctx);
+        // Return the credit to the upstream that sent the processed batch.
+        let upstream_actor = self.registry.borrow().actor_of(from_upstream);
+        ctx.send(upstream_actor, Msg::Credit { to_upstream_task: self.params.task_idx });
+        self.try_start(ctx);
+    }
+
+    pub fn batches_processed(&self) -> u64 {
+        self.batches_processed
+    }
+
+    pub fn inbox_peak(&self) -> usize {
+        self.inbox_peak
+    }
+
+    /// Borrow an operator in the chain (end-of-run inspection).
+    pub fn op(&self, idx: usize) -> &dyn Operator {
+        self.chain[idx].as_ref()
+    }
+
+    /// Downcast an operator in the chain to its concrete type.
+    pub fn op_as<T: 'static>(&mut self, idx: usize) -> Option<&mut T> {
+        self.chain[idx].as_any_mut().downcast_mut::<T>()
+    }
+}
+
+impl Actor<Msg> for OperatorTask {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.chain.iter().any(|op| op.wants_ticks()) {
+            let tick = if self.params.tick_ns > 0 { self.params.tick_ns } else { SECOND };
+            ctx.send_self_in(tick, Msg::Timer(0));
+        }
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Data(batch) => {
+                self.inbox.push_back(batch);
+                self.inbox_peak = self.inbox_peak.max(self.inbox.len());
+                self.try_start(ctx);
+            }
+            Msg::JobDone(_) => self.on_done(ctx),
+            Msg::Credit { to_upstream_task } => {
+                self.ledger.refund(to_upstream_task);
+                self.flush_emits(ctx);
+                self.try_start(ctx);
+            }
+            Msg::Timer(_) => {
+                let mut out = OpOutput::default();
+                for op in self.chain.iter_mut() {
+                    if op.wants_ticks() {
+                        op.on_tick(&mut out)
+                            .unwrap_or_else(|e| panic!("task {} tick: {e:#}", self.params.task_idx));
+                    }
+                }
+                self.route(out, ctx);
+                let tick = if self.params.tick_ns > 0 { self.params.tick_ns } else { SECOND };
+                ctx.send_self_in(tick, Msg::Timer(0));
+            }
+            other => panic!("task {}: unexpected {other:?}", self.params.task_idx),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("task#{}({})", self.params.task_idx, self.chain[0].name())
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

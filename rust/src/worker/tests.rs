@@ -1,0 +1,221 @@
+//! OperatorTask tests: queueing, credits, backpressure, chaining, ticks.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::*;
+use crate::metrics::MetricsHub;
+use crate::ops::{CountOp, OpOutput, Operator};
+use crate::sim::{ActorId, Engine};
+
+/// Upstream stub: sends N batches as fast as credits allow; records credit
+/// returns.
+struct Feeder {
+    my_task: usize,
+    target_task: usize,
+    to_send: u64,
+    tuples_per_batch: u64,
+    ledger: CreditLedger,
+    registry: SharedRegistry,
+    credits_seen: Rc<RefCell<u64>>,
+}
+
+impl crate::sim::Actor<Msg> for Feeder {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.pump(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if let Msg::Credit { to_upstream_task } = msg {
+            *self.credits_seen.borrow_mut() += 1;
+            self.ledger.refund(to_upstream_task);
+            self.pump(ctx);
+        }
+    }
+}
+
+impl Feeder {
+    fn pump(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        while self.to_send > 0 && self.ledger.has(self.target_task) {
+            self.ledger.spend(self.target_task);
+            self.to_send -= 1;
+            let actor = self.registry.borrow().actor_of(self.target_task);
+            ctx.send(
+                actor,
+                Msg::Data(Batch {
+                    from_task: self.my_task,
+                    tuples: self.tuples_per_batch,
+                    bytes: self.tuples_per_batch * 100,
+                    chunks: Vec::new(),
+                    hist: None,
+                }),
+            );
+        }
+    }
+}
+
+/// Slow terminal operator with a fixed per-batch cost.
+struct SlowOp {
+    per_batch: Time,
+    seen: u64,
+}
+
+impl Operator for SlowOp {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+    fn cost(&self, _b: &Batch, _c: &CostModel) -> Time {
+        self.per_batch
+    }
+    fn apply(&mut self, b: Batch, _f: usize, out: &mut OpOutput) -> Result<(), anyhow::Error> {
+        self.seen += 1;
+        out.tuples_logged = b.tuples;
+        Ok(())
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+struct Rig {
+    engine: Engine<Msg>,
+    task: ActorId,
+    metrics: SharedMetrics,
+    credits_seen: Rc<RefCell<u64>>,
+}
+
+fn rig(n_batches: u64, queue_cap: usize, per_batch_ns: Time) -> Rig {
+    let mut engine = Engine::new(1);
+    let metrics = MetricsHub::shared();
+    let registry = TaskRegistry::shared();
+    let task = engine.add_actor(Box::new(OperatorTask::new(
+        TaskParams {
+            task_idx: 1,
+            queue_cap,
+            downstream: vec![],
+            tick_ns: crate::sim::SECOND,
+            cost: CostModel::default(),
+        },
+        vec![Box::new(SlowOp { per_batch: per_batch_ns, seen: 0 })],
+        registry.clone(),
+        metrics.clone(),
+    )));
+    registry.borrow_mut().register(1, task);
+    let credits_seen = Rc::new(RefCell::new(0u64));
+    let feeder = engine.add_actor(Box::new(Feeder {
+        my_task: 0,
+        target_task: 1,
+        to_send: n_batches,
+        tuples_per_batch: 10,
+        ledger: CreditLedger::new(&[1], queue_cap),
+        registry: registry.clone(),
+        credits_seen: credits_seen.clone(),
+    }));
+    registry.borrow_mut().register(0, feeder);
+    Rig { engine, task, metrics, credits_seen }
+}
+
+#[test]
+fn processes_all_batches_and_returns_credits() {
+    let mut r = rig(20, 4, 1000);
+    r.engine.run_to_quiescence();
+    let t = r.engine.actor_as::<OperatorTask>(r.task).unwrap();
+    assert_eq!(t.batches_processed(), 20);
+    assert_eq!(*r.credits_seen.borrow(), 20);
+    assert_eq!(
+        r.metrics.borrow().total(crate::metrics::Class::ConsumerTuples),
+        200
+    );
+}
+
+#[test]
+fn queue_depth_bounded_by_credits() {
+    let mut r = rig(100, 3, 10_000);
+    r.engine.run_to_quiescence();
+    let t = r.engine.actor_as::<OperatorTask>(r.task).unwrap();
+    assert_eq!(t.batches_processed(), 100);
+    assert!(t.inbox_peak() <= 3, "credits cap the inbox: {}", t.inbox_peak());
+}
+
+#[test]
+fn serial_processing_takes_cost_times_batches() {
+    let mut r = rig(10, 2, 50_000);
+    r.engine.run_to_quiescence();
+    // 10 batches x 50us each, serially
+    assert!(r.engine.now() >= 500_000, "serial task time: {}", r.engine.now());
+}
+
+#[test]
+fn credit_ledger_protocol() {
+    let mut l = CreditLedger::new(&[5, 6], 2);
+    assert!(l.has(5));
+    l.spend(5);
+    l.spend(5);
+    assert!(!l.has(5));
+    assert!(l.has(6), "targets are independent");
+    l.refund(5);
+    assert!(l.has(5));
+}
+
+#[test]
+#[should_panic(expected = "credit overflow")]
+fn over_refund_is_a_bug() {
+    let mut l = CreditLedger::new(&[1], 1);
+    l.refund(1);
+}
+
+#[test]
+#[should_panic(expected = "spending a credit")]
+fn overspend_is_a_bug() {
+    let mut l = CreditLedger::new(&[1], 1);
+    l.spend(1);
+    l.spend(1);
+}
+
+#[test]
+fn registry_rejects_double_registration() {
+    let reg = TaskRegistry::shared();
+    reg.borrow_mut().register(0, ActorId(1));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        reg.borrow_mut().register(0, ActorId(2));
+    }));
+    assert!(result.is_err());
+}
+
+#[test]
+fn chained_operators_share_one_task() {
+    // Chain: count -> count. Both see the batch; cost adds up.
+    let mut engine = Engine::new(1);
+    let metrics = MetricsHub::shared();
+    let registry = TaskRegistry::shared();
+    let task = engine.add_actor(Box::new(OperatorTask::new(
+        TaskParams {
+            task_idx: 1,
+            queue_cap: 4,
+            downstream: vec![],
+            tick_ns: crate::sim::SECOND,
+            cost: CostModel::default(),
+        },
+        vec![Box::new(CountOp::default()), Box::new(CountOp::default())],
+        registry.clone(),
+        metrics.clone(),
+    )));
+    registry.borrow_mut().register(1, task);
+    let probe = engine.add_actor(Box::new(NullActor));
+    registry.borrow_mut().register(0, probe);
+    engine.schedule(
+        0,
+        task,
+        Msg::Data(Batch { from_task: 0, tuples: 7, bytes: 700, chunks: vec![], hist: None }),
+    );
+    engine.run_to_quiescence();
+    let t = engine.actor_as::<OperatorTask>(task).unwrap();
+    // both chain stages logged the batch
+    assert_eq!(metrics.borrow().total(crate::metrics::Class::ConsumerTuples), 14);
+    assert_eq!(t.batches_processed(), 1);
+}
+
+struct NullActor;
+impl crate::sim::Actor<Msg> for NullActor {
+    fn on_event(&mut self, _m: Msg, _c: &mut Ctx<'_, Msg>) {}
+}

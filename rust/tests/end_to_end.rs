@@ -1,0 +1,179 @@
+//! Integration: the full three-layer stack on the REAL data plane.
+//!
+//! These tests REQUIRE the AOT artifacts (`make artifacts`) — they are the
+//! proof that Layer 3 (rust broker/sources/worker), Layer 2 (JAX graphs)
+//! and Layer 1 (Pallas kernels) compose: real bytes flow producer →
+//! broker log → source → PJRT kernel → keyed state, and every count is
+//! validated against an independent oracle.
+
+use std::rc::Rc;
+
+use zettastream::cluster::{launch, FILTER_NEEDLE};
+use zettastream::compute::{ComputeEngine, SharedCompute};
+use zettastream::config::{DataPlane, ExperimentConfig, SourceMode, Workload};
+use zettastream::wikipedia::CorpusReader;
+
+fn xla() -> SharedCompute {
+    ComputeEngine::xla_from_default_dir()
+        .expect("integration tests need the AOT artifacts: run `make artifacts`")
+}
+
+fn real_config(mode: SourceMode, workload: Workload) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("e2e-{}-{}", mode.name(), workload.name()),
+        np: 1,
+        nc: 2,
+        nmap: 2,
+        ns: 2,
+        producer_chunk: 8 * 1024,
+        consumer_chunk: 32 * 1024,
+        record_size: 100,
+        broker_cores: 4,
+        mode,
+        workload,
+        data_plane: DataPlane::Real,
+        duration_secs: 8,
+        warmup_secs: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn filter_pipeline_finds_planted_needles_pull() {
+    let summary = launch(&real_config(SourceMode::Pull, Workload::Filter), Some(xla())).run();
+    assert!(summary.planted > 100, "enough needles planted: {}", summary.planted);
+    // Consumers may lag producers slightly at the horizon; every consumed
+    // needle must be matched, and the match count can never exceed plants
+    // (the alphabet is a..z, needle can't occur by chance at 6 bytes of
+    // 26^6 ~ 3e8 odds over ~1e5 records).
+    assert!(summary.matches <= summary.planted);
+    let consumed_frac = summary.records_consumed as f64 / summary.records_produced as f64;
+    let match_frac = summary.matches as f64 / summary.planted as f64;
+    assert!(
+        (match_frac - consumed_frac).abs() < 0.1,
+        "matches track consumption: {match_frac:.3} vs {consumed_frac:.3}"
+    );
+}
+
+#[test]
+fn filter_pipeline_finds_planted_needles_push() {
+    let summary = launch(&real_config(SourceMode::Push, Workload::Filter), Some(xla())).run();
+    assert!(summary.planted > 100);
+    assert!(summary.matches > 0);
+    assert!(summary.matches <= summary.planted);
+}
+
+#[test]
+fn native_consumer_matches_like_the_engine_path() {
+    let summary =
+        launch(&real_config(SourceMode::NativePull, Workload::Filter), Some(xla())).run();
+    assert!(summary.matches > 0, "native consumers filter in place");
+    assert!(summary.matches <= summary.planted);
+}
+
+/// The core cross-layer correctness check: XLA (Pallas kernels through
+/// PJRT) and the pure-rust native engine must produce byte-identical
+/// results on the same cluster run.
+#[test]
+fn xla_and_native_planes_agree_exactly() {
+    let mut results = Vec::new();
+    for compute in [xla(), ComputeEngine::native()] {
+        let mut config = real_config(SourceMode::Push, Workload::Filter);
+        config.name = format!("plane-{}", compute.name());
+        let summary = launch(&config, Some(compute)).run();
+        results.push((summary.planted, summary.matches, summary.records_consumed));
+    }
+    assert_eq!(results[0], results[1], "xla vs native must agree bit-for-bit");
+}
+
+fn oracle_tokens(np: u64, corpus_records: u64) -> u64 {
+    let mut total = 0;
+    for _ in 0..np {
+        let mut reader = CorpusReader::new(2048, corpus_records);
+        let mut buf = vec![0u8; 2048];
+        while reader.remaining() > 0 {
+            reader.fill_records(&mut buf);
+            total += CorpusReader::count_tokens(&buf);
+        }
+    }
+    total
+}
+
+fn wordcount_config(mode: SourceMode, corpus_records: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("e2e-wc-{}", mode.name()),
+        np: 1,
+        nc: 2,
+        nmap: 2,
+        ns: 2,
+        producer_chunk: 16 * 1024,
+        consumer_chunk: 64 * 1024,
+        record_size: 2048,
+        broker_cores: 4,
+        mode,
+        workload: Workload::WordCount,
+        data_plane: DataPlane::Real,
+        corpus_records,
+        duration_secs: 20,
+        warmup_secs: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn wordcount_tokens_match_oracle_exactly_pull() {
+    let corpus_records = 1_000;
+    let summary = launch(&wordcount_config(SourceMode::Pull, corpus_records), Some(xla())).run();
+    assert_eq!(summary.records_produced, corpus_records, "bounded corpus fully pushed");
+    assert_eq!(summary.records_consumed, corpus_records, "fully drained");
+    assert_eq!(
+        summary.tuples_logged,
+        oracle_tokens(1, corpus_records),
+        "keyed sums count exactly the oracle's tokens (via the Pallas kernel)"
+    );
+}
+
+#[test]
+fn wordcount_tokens_match_oracle_exactly_push() {
+    let corpus_records = 1_000;
+    let summary = launch(&wordcount_config(SourceMode::Push, corpus_records), Some(xla())).run();
+    assert_eq!(summary.records_consumed, corpus_records);
+    assert_eq!(summary.tuples_logged, oracle_tokens(1, corpus_records));
+}
+
+#[test]
+fn windowed_wordcount_fires_and_counts() {
+    let mut config = wordcount_config(SourceMode::Push, 800);
+    config.workload = Workload::WindowedWordCount;
+    config.duration_secs = 15;
+    let summary = launch(&config, Some(xla())).run();
+    assert!(summary.windows_fired > 0, "sliding windows fired");
+    assert_eq!(summary.tuples_logged, oracle_tokens(1, 800));
+}
+
+/// Pull and push must deliver the same DATA (same tokens) — the transport
+/// strategy cannot change the answer.
+#[test]
+fn pull_and_push_agree_on_the_answer() {
+    let a = launch(&wordcount_config(SourceMode::Pull, 600), Some(xla())).run();
+    let b = launch(&wordcount_config(SourceMode::Push, 600), Some(xla())).run();
+    assert_eq!(a.tuples_logged, b.tuples_logged);
+    assert_eq!(a.records_consumed, b.records_consumed);
+}
+
+/// Real-plane chunk payloads survive the broker log + object store
+/// round-trip even when consumers lag producers (retention respects the
+/// slowest reader).
+#[test]
+fn retention_never_loses_unconsumed_data() {
+    let mut config = real_config(SourceMode::Pull, Workload::Count);
+    config.producer_chunk = 64 * 1024; // fast producers, 1 consumer
+    config.consumer_chunk = 64 * 1024;
+    config.nc = 1;
+    config.nmap = 1;
+    config.duration_secs = 6;
+    let summary = launch(&config, Some(xla())).run();
+    // no TrimmedError panics + consumers made progress
+    assert!(summary.records_consumed > 0);
+    assert!(summary.records_consumed <= summary.records_produced);
+}

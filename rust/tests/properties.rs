@@ -1,0 +1,228 @@
+//! Property-based tests on coordinator invariants: random configurations
+//! and payloads must never violate the conservation/ordering/backpressure
+//! laws, regardless of mode or parameters.
+
+use std::rc::Rc;
+
+use zettastream::broker::PartitionLog;
+use zettastream::cluster::launch;
+use zettastream::compute::{native, ComputeEngine};
+use zettastream::config::{ExperimentConfig, SourceMode, Workload};
+use zettastream::proto::{Chunk, PartitionId};
+use zettastream::sim::proptest::forall;
+use zettastream::sim::Rng;
+
+fn random_config(rng: &mut Rng) -> ExperimentConfig {
+    let ns_choices = [1usize, 2, 4, 8];
+    let ns = ns_choices[rng.next_below(4) as usize];
+    // nc must divide ns
+    let divisors: Vec<usize> = (1..=ns).filter(|d| ns % d == 0).collect();
+    let nc = divisors[rng.next_below(divisors.len() as u64) as usize];
+    let mode = match rng.next_below(3) {
+        0 => SourceMode::Pull,
+        1 => SourceMode::Push,
+        _ => SourceMode::NativePull,
+    };
+    let workload = match rng.next_below(3) {
+        0 => Workload::Count,
+        1 => Workload::Filter,
+        _ => Workload::WordCount,
+    };
+    let record_size = if workload.is_text() { 2048 } else { 100 };
+    let producer_chunk = (1 << rng.range(11, 16)) as usize; // 2KiB..64KiB
+    let mut c = ExperimentConfig {
+        np: rng.range(1, 4) as usize,
+        nc,
+        ns,
+        nmap: rng.range(1, 4) as usize,
+        producer_chunk,
+        consumer_chunk: producer_chunk * (1 << rng.next_below(3)) as usize,
+        record_size,
+        replication: 1 + rng.next_below(2) as usize,
+        broker_cores: rng.range(1, 8) as usize,
+        mode,
+        workload,
+        duration_secs: 3,
+        warmup_secs: 1,
+        queue_cap: rng.range(1, 8) as usize,
+        push_objects_per_source: rng.range(1, 6) as usize,
+        seed: rng.next_u64(),
+        ..Default::default()
+    };
+    // push mode needs a spare core for the dedicated thread
+    if c.mode == SourceMode::Push && c.broker_cores == 1 {
+        c.broker_cores = 2;
+    }
+    c
+}
+
+/// Conservation: consumed <= produced; tuples logged are consistent with
+/// consumption; push never issues pull RPCs; everything terminates.
+#[test]
+fn random_clusters_conserve_records() {
+    forall(25, |rng| {
+        let config = random_config(rng);
+        config.validate().unwrap_or_else(|e| panic!("config invalid: {e}\n{config:#?}"));
+        let summary = launch(&config, None).run();
+        assert!(
+            summary.records_consumed <= summary.records_produced,
+            "conservation violated: {} > {} ({config:#?})",
+            summary.records_consumed,
+            summary.records_produced
+        );
+        match config.mode {
+            SourceMode::Push => assert_eq!(summary.pull_rpcs, 0),
+            _ => assert!(summary.pull_rpcs > 0),
+        }
+        if config.workload == Workload::WordCount && config.mode != SourceMode::NativePull {
+            // tokens logged track consumed records (sim estimate is exact)
+            let expect = summary.records_consumed * config.cost.tokens_per_record;
+            assert!(
+                summary.tuples_logged <= expect,
+                "logged {} > est {}",
+                summary.tuples_logged,
+                expect
+            );
+        }
+    });
+}
+
+/// The partition log is an append-only queue: reads at increasing offsets
+/// return exactly the appended sequence, under random chunk sizes, read
+/// budgets and trims.
+#[test]
+fn partition_log_is_a_faithful_queue() {
+    forall(50, |rng| {
+        let seg_bytes = rng.range(512, 64 * 1024);
+        let mut log = PartitionLog::new(PartitionId(0), seg_bytes);
+        let n = rng.range(1, 200);
+        let mut appended = Vec::new();
+        for _ in 0..n {
+            let records = rng.range(1, 50) as u32;
+            let rec_size = rng.range(10, 200) as u32;
+            log.append(Chunk::sim(records, rec_size));
+            appended.push((records, rec_size));
+        }
+        // sequential read-back with random budgets
+        let mut offset = 0u64;
+        let mut seen = Vec::new();
+        while offset < log.head() {
+            let budget = rng.range(1, 128 * 1024);
+            let chunks = log.read_from(offset, budget).expect("offset retained");
+            assert!(!chunks.is_empty(), "must make progress");
+            for sc in &chunks {
+                assert_eq!(sc.offset, offset);
+                seen.push((sc.chunk.records, sc.chunk.record_size));
+                offset += 1;
+            }
+            // random trim below current progress: never affects future reads
+            if rng.next_below(4) == 0 {
+                log.trim_below(rng.next_below(offset + 1));
+            }
+        }
+        assert_eq!(seen, appended, "read-back == append order");
+    });
+}
+
+/// Random trims never drop data at or above the watermark.
+#[test]
+fn trim_respects_watermark() {
+    forall(40, |rng| {
+        let mut log = PartitionLog::new(PartitionId(0), rng.range(256, 4096));
+        let n = rng.range(2, 100);
+        for _ in 0..n {
+            log.append(Chunk::sim(rng.range(1, 20) as u32, 16));
+        }
+        let watermark = rng.next_below(log.head());
+        log.trim_below(watermark);
+        assert!(log.start() <= watermark, "never trim past the watermark");
+        // reading from the watermark always works
+        let got = log.read_from(watermark, u64::MAX).unwrap();
+        assert_eq!(got.len() as u64, log.head() - watermark);
+    });
+}
+
+/// Kernel-semantics invariants on random payloads: histogram total equals
+/// independent token count; filter flags independent of framing split.
+#[test]
+fn kernel_invariants_on_random_payloads() {
+    forall(40, |rng| {
+        let records = rng.range(1, 20) as usize;
+        let rec_size = rng.range(8, 128) as usize;
+        let mut data = vec![0u8; records * rec_size];
+        for b in data.iter_mut() {
+            // mix of letters, digits, separators, high bytes
+            *b = match rng.next_below(5) {
+                0 => b'a' + rng.next_below(26) as u8,
+                1 => b'A' + rng.next_below(26) as u8,
+                2 => b'0' + rng.next_below(10) as u8,
+                3 => b' ',
+                _ => rng.next_byte(),
+            };
+        }
+        let hist = native::wordcount_hist(&data, records, rec_size, 64);
+        let total: i64 = hist.iter().map(|&v| v as i64).sum();
+        // independent token count, respecting record boundaries
+        let mut expect = 0i64;
+        for r in 0..records {
+            expect += zettastream::wikipedia::CorpusReader::count_tokens(
+                &data[r * rec_size..(r + 1) * rec_size],
+            ) as i64;
+        }
+        assert_eq!(total, expect, "histogram mass == token count");
+
+        // filter: flags match naive substring search per record
+        let pat: Vec<u8> = (0..rng.range(1, 4)).map(|_| b'a' + rng.next_below(3) as u8).collect();
+        let flags = native::filter_flags(&data, records, rec_size, &pat);
+        for (r, &flag) in flags.iter().enumerate() {
+            let rec = &data[r * rec_size..(r + 1) * rec_size];
+            let naive = rec.windows(pat.len()).any(|w| w == &pat[..]);
+            assert_eq!(flag == 1, naive, "record {r}, pattern {pat:?}");
+        }
+    });
+}
+
+/// Sim determinism: identical configs ⇒ identical summaries, across modes.
+#[test]
+fn random_configs_are_deterministic() {
+    forall(8, |rng| {
+        let config = random_config(rng);
+        let a = launch(&config, None).run();
+        let b = launch(&config, None).run();
+        assert_eq!(a.records_produced, b.records_produced);
+        assert_eq!(a.records_consumed, b.records_consumed);
+        assert_eq!(a.tuples_logged, b.tuples_logged);
+        assert_eq!(a.pull_rpcs, b.pull_rpcs);
+        assert_eq!(a.objects_filled, b.objects_filled);
+    });
+}
+
+/// Real plane on random synthetic payloads: native compute engine results
+/// are framing-stable (splitting a chunk in two never changes totals).
+#[test]
+fn compute_results_framing_stable() {
+    forall(20, |rng| {
+        let records = 2 * rng.range(1, 16) as usize;
+        let rec_size = rng.range(16, 64) as usize;
+        let mut data = vec![0u8; records * rec_size];
+        rng.fill_bytes(&mut data);
+        let engine = ComputeEngine::native();
+        let whole = Chunk::real(records as u32, rec_size as u32, Rc::new(data.clone()));
+        let half = records / 2;
+        let a = Chunk::real(half as u32, rec_size as u32,
+                            Rc::new(data[..half * rec_size].to_vec()));
+        let b = Chunk::real((records - half) as u32, rec_size as u32,
+                            Rc::new(data[half * rec_size..].to_vec()));
+        let pat = b"ab";
+        let whole_matches = engine.filter_count(&whole, pat).unwrap();
+        let split_matches =
+            engine.filter_count(&a, pat).unwrap() + engine.filter_count(&b, pat).unwrap();
+        assert_eq!(whole_matches, split_matches);
+        let (wh, wt) = engine.wordcount(&whole).unwrap();
+        let (ah, at) = engine.wordcount(&a).unwrap();
+        let (bh, bt) = engine.wordcount(&b).unwrap();
+        assert_eq!(wt, at + bt);
+        let sum: Vec<i32> = ah.iter().zip(bh.iter()).map(|(x, y)| x + y).collect();
+        assert_eq!(wh, sum);
+    });
+}
