@@ -189,6 +189,7 @@ impl Broker {
             RpcKind::PushSubscribe { sources } => {
                 c.rpc_base_ns + sources.len() as Time * c.rpc_base_ns
             }
+            RpcKind::PushUnsubscribe { .. } => c.rpc_base_ns,
             RpcKind::Replicate { bytes, chunks } => {
                 c.rpc_base_ns + *chunks as Time * c.append_chunk_ns
                     + (*bytes as f64 / c.append_bw_bps * 1e9) as Time
@@ -231,6 +232,11 @@ impl Broker {
                 rpc_ctx.staged = Some(reply);
                 self.reply(rpc_ctx, ctx);
                 self.schedule_push(ctx);
+            }
+            RpcKind::PushUnsubscribe { sub } => {
+                let reply = self.do_unsubscribe(sub);
+                rpc_ctx.staged = Some(reply);
+                self.reply(rpc_ctx, ctx);
             }
             RpcKind::Replicate { .. } => {
                 rpc_ctx.staged = Some(RpcReply::ReplicateAck);
@@ -338,6 +344,27 @@ impl Broker {
         RpcReply::SubscribeAck { sub: first.unwrap_or(SubId(0)) }
     }
 
+    /// Remove `sub` from the push rotation. Any fill already gathered keeps
+    /// going (its chunks are reflected in the returned cursors, so the
+    /// client consumes it, then resumes pulling from the cursors — neither
+    /// loss nor duplication).
+    fn do_unsubscribe(&mut self, sub: SubId) -> RpcReply {
+        let Some(pos) = self.push_ring.iter().position(|&s| s == sub) else {
+            return RpcReply::Error { reason: format!("unknown subscription {sub:?}") };
+        };
+        self.push_ring.remove(pos);
+        if self.push_rr > pos {
+            self.push_rr -= 1;
+        }
+        if !self.push_ring.is_empty() {
+            self.push_rr %= self.push_ring.len();
+        } else {
+            self.push_rr = 0;
+        }
+        let cursors = self.store.borrow_mut().deactivate(sub);
+        RpcReply::UnsubscribeAck { sub, cursors }
+    }
+
     /// Send the staged reply back over the network.
     fn reply(&mut self, rpc_ctx: RpcCtx, ctx: &mut Ctx<'_, Msg>) {
         let reply = rpc_ctx.staged.expect("reply staged before send");
@@ -402,8 +429,7 @@ impl Broker {
     /// partitions; acquire an object and stage the chunks it will carry.
     fn gather_next_fill(&mut self) -> Option<FillCtx> {
         let mut store = self.store.borrow_mut();
-        let nsubs = store.num_subscriptions();
-        for i in 0..nsubs {
+        for i in 0..self.push_ring.len() {
             let ring_idx = (self.push_rr + i) % self.push_ring.len();
             let sub = self.push_ring[ring_idx];
             if !store.has_free(sub) {
@@ -482,6 +508,9 @@ impl Broker {
         for (&p, log) in self.logs.iter_mut() {
             let mut watermark = *self.watermarks.get(&p).unwrap_or(&0);
             for sub in store.subscriptions() {
+                if !sub.active {
+                    continue; // unsubscribed cursors no longer pin retention
+                }
                 for &(sp, off) in &sub.cursors {
                     if sp == p {
                         watermark = watermark.min(off);

@@ -475,6 +475,97 @@ fn push_respects_object_backpressure() {
 }
 
 #[test]
+fn push_unsubscribe_returns_cursors_and_stops_fills() {
+    let mut r = rig(|p| p.push_threads = 1);
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 1,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: r.probe,
+                    assignments: vec![(PartitionId(0), 0)],
+                    objects: 2,
+                    object_bytes: 64 * 1024,
+                }],
+            },
+        }),
+    );
+    r.engine.schedule(10 * MICROS, r.broker, append_req(&r, 2, &[0], 100, 100));
+    r.engine.run_until(SECOND);
+    let sub = {
+        let inbox = r.inbox.borrow();
+        inbox
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::Reply(RpcEnvelope { reply: RpcReply::SubscribeAck { sub }, .. }) => {
+                    Some(*sub)
+                }
+                _ => None,
+            })
+            .expect("subscribed")
+    };
+    // Tear the subscription down; the ack must carry the advanced cursor.
+    let now = r.engine.now();
+    r.engine.schedule(
+        now,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 3,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushUnsubscribe { sub },
+        }),
+    );
+    r.engine.run_until(2 * SECOND);
+    let cursors = {
+        let inbox = r.inbox.borrow();
+        inbox
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::Reply(RpcEnvelope {
+                    reply: RpcReply::UnsubscribeAck { cursors, .. }, ..
+                }) => Some(cursors.clone()),
+                _ => None,
+            })
+            .expect("unsubscribe acked")
+    };
+    assert_eq!(cursors, vec![(PartitionId(0), 1)], "cursor advanced past the gathered fill");
+    // Appends after the unsubscribe must not fill further objects.
+    let filled_before = r.metrics.borrow().total(crate::metrics::Class::ObjectsFilled);
+    let now = r.engine.now();
+    r.engine.schedule(now, r.broker, append_req(&r, 4, &[0], 100, 100));
+    r.engine.run_until(3 * SECOND);
+    let filled_after = r.metrics.borrow().total(crate::metrics::Class::ObjectsFilled);
+    assert_eq!(filled_before, filled_after, "inactive subscription gets no fills");
+    // Unknown subscriptions error instead of panicking.
+    let now = r.engine.now();
+    r.engine.schedule(
+        now,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 5,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::PushUnsubscribe { sub },
+        }),
+    );
+    r.engine.run_until(4 * SECOND);
+    let errors = r
+        .inbox
+        .borrow()
+        .iter()
+        .filter(|(_, m)| {
+            matches!(m, Msg::Reply(RpcEnvelope { reply: RpcReply::Error { .. }, .. }))
+        })
+        .count();
+    assert_eq!(errors, 1, "double unsubscribe is a client error");
+}
+
+#[test]
 fn push_object_batches_small_chunks() {
     // Many small chunks, one big object: a single fill carries them all.
     let mut r = rig(|p| p.push_threads = 1);

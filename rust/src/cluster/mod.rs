@@ -10,13 +10,18 @@
 //! tasks in order. The launcher builds the pipeline for the configured
 //! workload (Listings 1 & 2), wires credits, registers everything in the
 //! task registry and returns a [`Cluster`] ready to `run`.
+//!
+//! Sources are built through the [`SourceRegistry`]: the launcher resolves
+//! `config.mode` to a [`crate::source::SourceFactory`] and never names a
+//! concrete source type — plug a new ingestion mechanism in by registering
+//! a factory and launching with [`launch_with`].
 
 #[cfg(test)]
 mod tests;
 
 use crate::broker::{Broker, BrokerParams, DEFAULT_SEGMENT_BYTES};
 use crate::compute::SharedCompute;
-use crate::config::{DataPlane, ExperimentConfig, SourceMode, Workload};
+use crate::config::{DataPlane, ExperimentConfig};
 use crate::metrics::{Class, ExperimentReport, MetricsHub, SharedMetrics};
 use crate::net::{Network, SharedNetwork};
 use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedSumOp};
@@ -25,10 +30,7 @@ use crate::plasma::{ObjectStore, SharedStore};
 use crate::producer::{Producer, ProducerParams, RecordGen};
 use crate::proto::{Msg, PartitionId};
 use crate::sim::{ActorId, Engine, Rng, SECOND};
-use crate::source::{
-    NativeConsumer, NativeParams, PullParams, PullSource, PushGroupParams, PushMember,
-    PushSourceGroup,
-};
+use crate::source::{SourceActor, SourceRegistry, SourceStats, SourceWiring, StatKey};
 use crate::wikipedia::CorpusReader;
 use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
 
@@ -79,15 +81,28 @@ pub struct RunSummary {
     /// Total tuples logged by the RTLogger points (records for count/
     /// filter pipelines, tokens for word-count pipelines).
     pub tuples_logged: u64,
+    /// Aggregated per-source statistics (uniform across all modes).
+    pub sources: SourceStats,
 }
 
-/// Build a cluster from a config. `compute` is required for the real data
-/// plane (pass `None` on the sim plane).
+/// Build a cluster from a config with the built-in source modes. `compute`
+/// is required for the real data plane (pass `None` on the sim plane).
 pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Cluster {
+    launch_with(&SourceRegistry::builtin(), config, compute)
+}
+
+/// Build a cluster resolving `config.mode` against a caller-supplied
+/// [`SourceRegistry`] — the pluggable path for out-of-tree source modes.
+pub fn launch_with(
+    source_registry: &SourceRegistry,
+    config: &ExperimentConfig,
+    compute: Option<SharedCompute>,
+) -> Cluster {
     config.validate().expect("invalid experiment config");
     if config.data_plane == DataPlane::Real {
         assert!(compute.is_some(), "real data plane needs a compute engine");
     }
+    let factory = source_registry.expect(config.mode);
     let mut engine = Engine::new(config.seed);
     let metrics = MetricsHub::shared();
     let net = Network::shared(config.cost.network, config.cost.loopback);
@@ -114,7 +129,7 @@ pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Clus
             1,
         )))
     });
-    let push_threads = if config.mode == SourceMode::Push { 1 } else { 0 };
+    let push_threads = factory.broker_push_threads();
     let worker_cores = (config.broker_cores - push_threads).max(1);
     let broker = engine.add_actor(Box::new(Broker::new(
         BrokerParams {
@@ -157,9 +172,10 @@ pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Clus
         })
         .collect();
 
-    // ---- pipeline tasks (not for the native baseline) -------------------
+    // ---- pipeline tasks (not for engine-less modes) ---------------------
     let mut tasks = Vec::new();
-    let pipeline = (config.mode != SourceMode::NativePull)
+    let pipeline = factory
+        .uses_pipeline()
         .then(|| Pipeline::for_workload(config.workload, config.nc, config.nmap));
     let mut stage_task_idxs: Vec<Vec<usize>> = Vec::new();
     if let Some(p) = &pipeline {
@@ -192,94 +208,21 @@ pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Clus
         }
     }
 
-    // ---- sources ---------------------------------------------------------
-    let parts_per = config.ns / config.nc;
-    let member_parts = |i: usize| -> Vec<(PartitionId, u64)> {
-        (i * parts_per..(i + 1) * parts_per)
-            .map(|p| (PartitionId(p), 0))
-            .collect()
-    };
+    // ---- sources (one generic path through the factory registry) --------
     let stage0: Vec<usize> = stage_task_idxs.first().cloned().unwrap_or_default();
-    let mut sources = Vec::new();
-    match config.mode {
-        SourceMode::Pull => {
-            for i in 0..config.nc {
-                let id = engine.add_actor(Box::new(PullSource::new(
-                    PullParams {
-                        task_idx: i,
-                        node: NODE_COLOCATED,
-                        broker,
-                        broker_node: NODE_COLOCATED,
-                        assignments: member_parts(i),
-                        max_bytes: config.consumer_chunk as u64,
-                        pull_timeout: config.pull_timeout_us * 1_000,
-                        downstream: stage0.clone(),
-                        queue_cap: config.queue_cap,
-                        cost: config.cost.clone(),
-                    },
-                    metrics.clone(),
-                    net.clone(),
-                    registry.clone(),
-                )));
-                registry.borrow_mut().register(i, id);
-                sources.push(id);
-            }
-        }
-        SourceMode::Push => {
-            let members: Vec<PushMember> = (0..config.nc)
-                .map(|i| PushMember {
-                    task_idx: i,
-                    assignments: member_parts(i),
-                    objects: config.push_objects_per_source,
-                    object_bytes: config.consumer_chunk as u64,
-                })
-                .collect();
-            let group = engine.add_actor(Box::new(PushSourceGroup::new(
-                PushGroupParams {
-                    leader_task_idx: 0,
-                    node: NODE_COLOCATED,
-                    broker,
-                    broker_node: NODE_COLOCATED,
-                    members,
-                    downstream: stage0.clone(),
-                    queue_cap: config.queue_cap,
-                    cost: config.cost.clone(),
-                },
-                net.clone(),
-                store.clone(),
-                registry.clone(),
-            )));
-            for i in 0..config.nc {
-                registry.borrow_mut().register(i, group);
-            }
-            sources.push(group);
-        }
-        SourceMode::NativePull => {
-            for i in 0..config.nc {
-                let pattern = matches!(config.workload, Workload::Filter)
-                    .then(|| FILTER_NEEDLE.to_vec());
-                let id = engine.add_actor(Box::new(NativeConsumer::new(
-                    NativeParams {
-                        entity: i,
-                        node: NODE_COLOCATED,
-                        broker,
-                        broker_node: NODE_COLOCATED,
-                        assignments: member_parts(i),
-                        max_bytes: config.consumer_chunk as u64,
-                        pull_timeout: config.pull_timeout_us * 1_000,
-                        pattern,
-                        compute: (config.data_plane == DataPlane::Real)
-                            .then(|| compute.clone().expect("checked"))
-                            ,
-                        cost: config.cost.clone(),
-                    },
-                    metrics.clone(),
-                    net.clone(),
-                )));
-                sources.push(id);
-            }
-        }
-    }
+    let wiring = SourceWiring {
+        config,
+        node: NODE_COLOCATED,
+        broker,
+        broker_node: NODE_COLOCATED,
+        downstream: stage0,
+        metrics: metrics.clone(),
+        net: net.clone(),
+        store: store.clone(),
+        registry: registry.clone(),
+        compute: compute.clone(),
+    };
+    let sources = factory.build(&wiring, &mut engine);
 
     Cluster {
         engine,
@@ -367,23 +310,19 @@ impl Cluster {
                 b.export_gauges(now, "backup");
             }
         }
-        // Source-side totals.
-        let mut records_consumed = 0;
-        let mut matches = 0;
-        let mut source_threads = 0usize;
+        // Source-side totals, through the uniform trait API. A source that
+        // is not a registry-built `SourceActor` is a hard error — silently
+        // dropping its stats would corrupt every total below.
+        let mut source_stats = SourceStats::default();
         for &sid in &self.sources {
-            if let Some(s) = self.engine.actor_as::<PullSource>(sid) {
-                records_consumed += s.records_consumed();
-                source_threads += 2; // fetch + emit threads per pull consumer
-            } else if let Some(g) = self.engine.actor_as::<PushSourceGroup>(sid) {
-                records_consumed += g.records_consumed();
-                source_threads += 2; // group consume thread + broker push thread
-            } else if let Some(n) = self.engine.actor_as::<NativeConsumer>(sid) {
-                records_consumed += n.records_consumed();
-                matches += n.matches();
-                source_threads += 1;
-            }
+            let actor = self.engine.actor_as::<SourceActor>(sid).unwrap_or_else(|| {
+                panic!("source {sid} was not built through the SourceFactory registry")
+            });
+            source_stats.merge(&actor.stats());
         }
+        let records_consumed = source_stats.records_consumed;
+        let mut matches = source_stats.extra(StatKey::Matches);
+        let source_threads = source_stats.threads;
         // Producer totals.
         let mut records_produced = 0;
         let mut planted = 0;
@@ -438,6 +377,7 @@ impl Cluster {
             pull_rpcs: metrics.total(Class::PullRpcs),
             objects_filled: metrics.total(Class::ObjectsFilled),
             tuples_logged: metrics.total(Class::ConsumerTuples),
+            sources: source_stats,
         }
     }
 }

@@ -2,6 +2,7 @@
 
 use super::*;
 use crate::config::{parse_overrides, ExperimentConfig};
+use crate::source::{SourceRegistry, StatKey};
 
 fn cfg(overrides: &[&str]) -> ExperimentConfig {
     let mut c = ExperimentConfig {
@@ -39,6 +40,67 @@ fn native_cluster_runs_and_reports() {
     assert!(summary.report.consumers.p50 > 100_000.0);
     assert!(summary.pull_rpcs > 0);
     assert_eq!(summary.report.gauge("source_threads"), Some(2.0), "1 per native consumer");
+}
+
+#[test]
+fn hybrid_cluster_runs_and_reports() {
+    let summary = launch(&cfg(&["mode=hybrid", "np=2", "nc=2", "ns=4"]), None).run();
+    assert!(summary.report.consumers.p50 > 100_000.0);
+    assert!(summary.records_consumed <= summary.records_produced);
+    assert!(summary.records_consumed > 0);
+    // 2 threads per source while pulling, 1 while pushing — the run may
+    // end in either phase.
+    let threads = summary.report.gauge("source_threads").expect("gauge set");
+    assert!((2.0..=4.0).contains(&threads), "source_threads {threads}");
+}
+
+#[test]
+fn hybrid_switches_to_push_under_write_heavy_load() {
+    // Eight producers against a 2-core broker starve the pull RPCs; with
+    // the contention threshold at 1 µs the sources must take the push
+    // hand-off — and the push path must then carry data.
+    let summary = launch(
+        &cfg(&[
+            "mode=hybrid",
+            "np=8",
+            "nc=2",
+            "ns=8",
+            "cs=64KiB",
+            "nbc=2",
+            "hybrid_latency_us=1",
+            "hybrid_window_polls=4",
+            "hybrid_cooldown_ms=0",
+        ]),
+        None,
+    )
+    .run();
+    assert!(
+        summary.sources.extra(StatKey::SwitchesToPush) >= 1,
+        "write-heavy load must push the hybrid sources off the pull path: {:?}",
+        summary.sources
+    );
+    assert!(summary.objects_filled > 0, "push path served objects after the switch");
+    assert!(summary.records_consumed <= summary.records_produced);
+    assert!(summary.sources.pulls_issued >= 4, "monitoring window ran on pulls first");
+}
+
+#[test]
+fn all_builtin_modes_run_through_the_registry() {
+    // The acceptance gate: every mode builds through the one generic
+    // factory path and reports uniform stats.
+    for mode in crate::config::SourceMode::ALL {
+        let mode_kv = format!("mode={}", mode.name());
+        let summary = launch(&cfg(&[mode_kv.as_str(), "np=2", "nc=2", "ns=4"]), None).run();
+        assert!(summary.records_consumed > 0, "{}: progress", mode.name());
+        assert!(summary.sources.threads > 0, "{}: threads accounted", mode.name());
+    }
+}
+
+#[test]
+#[should_panic(expected = "no source factory registered")]
+fn unregistered_mode_is_a_hard_error() {
+    let config = cfg(&["mode=push", "np=1", "nc=1", "ns=2"]);
+    launch_with(&SourceRegistry::empty(), &config, None);
 }
 
 #[test]

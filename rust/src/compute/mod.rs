@@ -15,9 +15,12 @@ mod tests;
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 use crate::proto::{Chunk, Payload};
+#[cfg(feature = "xla")]
 use crate::runtime::ArtifactLibrary;
 
 /// Histogram buckets baked into the wordcount artifacts (aot.py VARIANTS).
@@ -39,7 +42,9 @@ pub struct ComputeStats {
 
 /// The operator compute engine.
 pub enum ComputeEngine {
-    /// AOT XLA artifacts through PJRT (the shipped hot path).
+    /// AOT XLA artifacts through PJRT (the shipped hot path; needs the
+    /// `xla` cargo feature — the sim plane never constructs this).
+    #[cfg(feature = "xla")]
     Xla { lib: ArtifactLibrary, stats: RefCell<ComputeStats> },
     /// Pure-rust kernels (oracle / "C++ consumer" plane / ablation).
     Native { stats: RefCell<ComputeStats> },
@@ -49,12 +54,22 @@ pub enum ComputeEngine {
 pub type SharedCompute = Rc<ComputeEngine>;
 
 impl ComputeEngine {
+    #[cfg(feature = "xla")]
     pub fn xla(lib: ArtifactLibrary) -> SharedCompute {
         Rc::new(ComputeEngine::Xla { lib, stats: RefCell::default() })
     }
 
+    #[cfg(feature = "xla")]
     pub fn xla_from_default_dir() -> Result<SharedCompute> {
         Ok(Self::xla(ArtifactLibrary::load(ArtifactLibrary::default_dir())?))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    pub fn xla_from_default_dir() -> Result<SharedCompute> {
+        bail!(
+            "built without the `xla` feature: PJRT execution unavailable \
+             (rebuild with `cargo build --features xla` and run `make artifacts`)"
+        )
     }
 
     pub fn native() -> SharedCompute {
@@ -63,21 +78,26 @@ impl ComputeEngine {
 
     pub fn name(&self) -> &'static str {
         match self {
+            #[cfg(feature = "xla")]
             ComputeEngine::Xla { .. } => "xla",
             ComputeEngine::Native { .. } => "native",
         }
     }
 
-    pub fn stats(&self) -> ComputeStats {
+    fn stats_cell(&self) -> &RefCell<ComputeStats> {
         match self {
-            ComputeEngine::Xla { stats, .. } | ComputeEngine::Native { stats } => *stats.borrow(),
+            #[cfg(feature = "xla")]
+            ComputeEngine::Xla { stats, .. } => stats,
+            ComputeEngine::Native { stats } => stats,
         }
     }
 
+    pub fn stats(&self) -> ComputeStats {
+        *self.stats_cell().borrow()
+    }
+
     fn stats_mut(&self) -> std::cell::RefMut<'_, ComputeStats> {
-        match self {
-            ComputeEngine::Xla { stats, .. } | ComputeEngine::Native { stats } => stats.borrow_mut(),
-        }
+        self.stats_cell().borrow_mut()
     }
 
     /// Filter one real chunk: number of records containing `pattern`.
@@ -88,6 +108,7 @@ impl ComputeEngine {
         let t0 = std::time::Instant::now();
         let matches = match self {
             ComputeEngine::Native { .. } => native::filter_count(data, records, s, pattern),
+            #[cfg(feature = "xla")]
             ComputeEngine::Xla { lib, .. } => {
                 let mut total = 0u64;
                 for (part, nvalid) in split_records(lib, "filter", s, records)? {
@@ -133,6 +154,7 @@ impl ComputeEngine {
             ComputeEngine::Native { .. } => {
                 native::wordcount_hist(data, records, s, WORDCOUNT_BUCKETS)
             }
+            #[cfg(feature = "xla")]
             ComputeEngine::Xla { lib, .. } => {
                 let mut hist = vec![0i32; WORDCOUNT_BUCKETS];
                 for (part, nvalid) in split_records(lib, "wordcount", s, records)? {
@@ -168,6 +190,7 @@ impl ComputeEngine {
         let t0 = std::time::Instant::now();
         let out = match self {
             ComputeEngine::Native { .. } => native::window_sum(hists),
+            #[cfg(feature = "xla")]
             ComputeEngine::Xla { lib, .. } => {
                 let Some(v) = lib.select("window_sum", WORDCOUNT_BUCKETS, hists.len()) else {
                     // Window count bigger than the artifact: fall back to
@@ -214,6 +237,7 @@ fn real_payload(chunk: &Chunk) -> Result<&[u8]> {
 
 /// Split `records` into `(start_record, count)` parts that each fit the
 /// largest compiled variant for `(kind, s)`.
+#[cfg(feature = "xla")]
 fn split_records(
     lib: &ArtifactLibrary,
     kind: &str,

@@ -23,14 +23,23 @@ pub enum SourceMode {
     Push,
     /// The paper's native "C++" pull consumer baseline (no engine overhead).
     NativePull,
+    /// Adaptive: start pulling, switch to the push subscription when pull
+    /// RPCs are starved by writes (empty polls / broker contention over a
+    /// sliding window), fall back with hysteresis. The paper's implied
+    /// fourth mode: "push-based **and/or** pull-based".
+    Hybrid,
 }
 
 impl SourceMode {
+    pub const ALL: [SourceMode; 4] =
+        [Self::Pull, Self::Push, Self::NativePull, Self::Hybrid];
+
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "pull" => Some(Self::Pull),
             "push" => Some(Self::Push),
             "native" | "nativepull" | "native-pull" | "cpp" => Some(Self::NativePull),
+            "hybrid" | "adaptive" => Some(Self::Hybrid),
             _ => None,
         }
     }
@@ -40,6 +49,7 @@ impl SourceMode {
             Self::Pull => "pull",
             Self::Push => "push",
             Self::NativePull => "native",
+            Self::Hybrid => "hybrid",
         }
     }
 }
@@ -153,6 +163,21 @@ pub struct ExperimentConfig {
     /// Per-producer record budget for text workloads (the paper's
     /// producers push ~2 GiB then stop); 0 = unbounded.
     pub corpus_records: u64,
+    /// Hybrid: sliding window length, in completed pull RPCs, over which
+    /// the source judges whether pulling still pays off.
+    pub hybrid_window_polls: usize,
+    /// Hybrid: switch pull→push when empty polls exceed this fraction
+    /// (permille) of the window.
+    pub hybrid_empty_permille: u32,
+    /// Hybrid: switch pull→push when the window's mean pull RPC round-trip
+    /// exceeds this (µs) — the "pulls starved by writes" contention signal.
+    pub hybrid_latency_us: u64,
+    /// Hybrid: minimum dwell time after a switch before the next one (ms) —
+    /// the hysteresis that prevents flapping.
+    pub hybrid_cooldown_ms: u64,
+    /// Hybrid: fall back push→pull when no shared object arrives for this
+    /// long (ms).
+    pub hybrid_idle_ms: u64,
     /// RNG seed.
     pub seed: u64,
     /// Cost model.
@@ -185,6 +210,11 @@ impl Default for ExperimentConfig {
             window_slide_secs: 1,
             queue_cap: 8,
             corpus_records: 0,
+            hybrid_window_polls: 32,
+            hybrid_empty_permille: 600,
+            hybrid_latency_us: 200,
+            hybrid_cooldown_ms: 1000,
+            hybrid_idle_ms: 200,
             seed: 0x5E77A_57F3A,
             cost: CostModel::default(),
         }
@@ -247,6 +277,18 @@ impl ExperimentConfig {
         }
         if self.window_slide_secs == 0 || self.window_size_secs < self.window_slide_secs {
             return Err("window size must be >= slide > 0".into());
+        }
+        if self.hybrid_window_polls == 0 {
+            return Err("hybrid_window_polls must be positive".into());
+        }
+        if self.hybrid_empty_permille > 1000 {
+            return Err(format!(
+                "hybrid_empty_permille={} must be a permille (0..=1000)",
+                self.hybrid_empty_permille
+            ));
+        }
+        if self.hybrid_idle_ms == 0 {
+            return Err("hybrid_idle_ms must be positive".into());
         }
         Ok(())
     }
@@ -314,6 +356,21 @@ impl ExperimentConfig {
             "queue_cap" => self.queue_cap = value.parse().map_err(|_| bad(key, value))?,
             "corpus_records" => {
                 self.corpus_records = value.parse().map_err(|_| bad(key, value))?
+            }
+            "hybrid_window_polls" => {
+                self.hybrid_window_polls = value.parse().map_err(|_| bad(key, value))?
+            }
+            "hybrid_empty_permille" => {
+                self.hybrid_empty_permille = value.parse().map_err(|_| bad(key, value))?
+            }
+            "hybrid_latency_us" => {
+                self.hybrid_latency_us = value.parse().map_err(|_| bad(key, value))?
+            }
+            "hybrid_cooldown_ms" => {
+                self.hybrid_cooldown_ms = value.parse().map_err(|_| bad(key, value))?
+            }
+            "hybrid_idle_ms" => {
+                self.hybrid_idle_ms = value.parse().map_err(|_| bad(key, value))?
             }
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             _ if key.starts_with("cost.") => self.cost.apply_one(&key[5..], value)?,

@@ -105,6 +105,59 @@ mod experiment {
     }
 
     #[test]
+    fn source_mode_names_round_trip() {
+        for mode in SourceMode::ALL {
+            assert_eq!(SourceMode::parse(mode.name()), Some(mode), "{}", mode.name());
+        }
+        assert_eq!(SourceMode::parse("hybrid"), Some(SourceMode::Hybrid));
+        assert_eq!(SourceMode::parse("adaptive"), Some(SourceMode::Hybrid));
+        assert_eq!(SourceMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn hybrid_config_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        let kv = parse_overrides([
+            "mode=hybrid",
+            "hybrid_window_polls=16",
+            "hybrid_empty_permille=750",
+            "hybrid_latency_us=50",
+            "hybrid_cooldown_ms=250",
+            "hybrid_idle_ms=20",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.mode, SourceMode::Hybrid);
+        assert_eq!(cfg.hybrid_window_polls, 16);
+        assert_eq!(cfg.hybrid_empty_permille, 750);
+        assert_eq!(cfg.hybrid_latency_us, 50);
+        assert_eq!(cfg.hybrid_cooldown_ms, 250);
+        assert_eq!(cfg.hybrid_idle_ms, 20);
+        cfg.validate().unwrap();
+        // And back through the same parser, paper-config style.
+        let body = "mode = hybrid\nhybrid_window_polls = 16\nhybrid_empty_permille = 750\n";
+        let kv = parse_kv_file(body).unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply(&kv).unwrap();
+        assert_eq!(cfg2.mode, SourceMode::Hybrid);
+        assert_eq!(cfg2.hybrid_window_polls, cfg.hybrid_window_polls);
+        assert_eq!(cfg2.hybrid_empty_permille, cfg.hybrid_empty_permille);
+    }
+
+    #[test]
+    fn validate_rejects_bad_hybrid_params() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.hybrid_window_polls = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.hybrid_empty_permille = 1001;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.hybrid_idle_ms = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn unknown_key_is_error() {
         let mut cfg = ExperimentConfig::default();
         let kv = parse_overrides(["bogus=1"]).unwrap();

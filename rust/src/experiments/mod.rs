@@ -269,9 +269,49 @@ pub fn fig9(duration: u64) -> FigureSpec {
     }
 }
 
+/// Ablation — the adaptive hybrid source against its two parents on the
+/// Fig. 3/4 setup: the count workload, sweeping producer pressure from the
+/// unloaded broker (Np=2, 16 cores) to the write-heavy constrained one
+/// (Np=8, 4 cores) where Fig. 7 shows pulls starving.
+pub fn ablation_hybrid(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    let modes = [SourceMode::Pull, SourceMode::Push, SourceMode::Hybrid];
+    let mut rows = pc_rows(
+        duration,
+        &modes,
+        &[2],
+        chunk_sizes,
+        8,
+        16,
+        Workload::Count,
+        1,
+        ConsumerChunk::Fixed128KiB,
+    );
+    rows.extend(pc_rows(
+        duration,
+        &modes,
+        &[8],
+        chunk_sizes,
+        8,
+        4,
+        Workload::Count,
+        1,
+        ConsumerChunk::Fixed128KiB,
+    ));
+    FigureSpec {
+        id: "ablation-hybrid",
+        title: "Adaptive hybrid vs pull vs push (count, Np∈{2,8}, NBc∈{16,4})",
+        expectation: "hybrid tracks pull on the unloaded broker and converges \
+                      to push under write-heavy contention",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
+
+    // (0) the hybrid mode against its parents (quick chunk sweep).
+    specs.push(ablation_hybrid(duration, &[4, 32, 128]));
 
     // (a) push backpressure window: objects per source.
     let mut rows = Vec::new();

@@ -87,6 +87,22 @@ fn fig9_is_text_workloads_on_4_partitions() {
 }
 
 #[test]
+fn hybrid_ablation_sweeps_all_three_modes() {
+    let spec = ablation_hybrid(10, &[4, 128]);
+    let modes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.mode.name()).collect();
+    for mode in ["pull", "push", "hybrid"] {
+        assert!(modes.contains(mode), "missing {mode}");
+    }
+    for (label, c) in &spec.rows {
+        c.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+    }
+    // The write-heavy half runs on the Fig. 7-style constrained broker.
+    assert!(spec.rows.iter().any(|(_, c)| c.np == 8 && c.broker_cores == 4));
+    assert!(spec.rows.iter().any(|(_, c)| c.np == 2 && c.broker_cores == 16));
+}
+
+#[test]
 fn table2_lists_all_benchmarks() {
     let t = table2();
     for fig in ["Fig.4", "Fig.5", "Fig.6", "Fig.7", "Fig.8", "Fig.9"] {

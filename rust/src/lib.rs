@@ -7,8 +7,9 @@
 //! The crate is a three-layer rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the KerA-like storage broker, the
-//!   Plasma-like shared-memory object store, pull/push/native streaming
-//!   sources, a Flink-like processing worker with a DataStream pipeline
+//!   Plasma-like shared-memory object store, the pull/push/native/hybrid
+//!   streaming sources behind the pluggable [`source::StreamSource`] trait
+//!   API, a Flink-like processing worker with a DataStream pipeline
 //!   API, producers, metrics and the experiment harness, all driven by a
 //!   deterministic discrete-event engine ([`sim`]).
 //! * **Layer 2/1 (python/, build-time only)** — the operators' compute
@@ -18,9 +19,14 @@
 //!   request path. Python never runs at request time.
 //!
 //! Quick tour: [`config::ExperimentConfig`] describes a run in the paper's
-//! own Table I vocabulary; [`cluster::Launcher`] wires brokers, workers,
-//! producers and sources into an engine; [`experiments`] regenerates every
-//! figure of the paper's evaluation.
+//! own Table I vocabulary; [`cluster::launch`] wires brokers, workers,
+//! producers and sources into an engine — sources are built through the
+//! [`source::SourceRegistry`], so selecting an ingestion mechanism is just
+//! `config.mode`: [`config::SourceMode::Pull`], `Push`, `NativePull`, or
+//! the adaptive [`config::SourceMode::Hybrid`], which starts pulling and
+//! hands off to the push subscription when writes starve its pull RPCs
+//! (see [`source::HybridSource`]). [`experiments`] regenerates every
+//! figure of the paper's evaluation plus the pull/push/hybrid ablation.
 
 pub mod config;
 pub mod sim;

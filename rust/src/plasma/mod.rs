@@ -58,6 +58,10 @@ pub struct Subscription {
     free: VecDeque<usize>,
     /// Next partition to serve (round-robin fairness within the source).
     pub rr_next: usize,
+    /// False once unsubscribed: the push thread must not fill for it and
+    /// its cursors no longer hold back retention. Sealed objects still
+    /// drain through the normal read/release lifecycle.
+    pub active: bool,
 }
 
 /// The store: all subscriptions of one colocated node.
@@ -108,8 +112,31 @@ impl ObjectStore {
             slots,
             free: (0..objects).collect(),
             rr_next: 0,
+            active: true,
         });
         id
+    }
+
+    /// Unsubscribe: stop filling for `sub` and return its resume cursors.
+    /// Slots stay allocated only until in-flight fills and already-sealed
+    /// objects drain; then the pool is reclaimed (a flapping hybrid source
+    /// subscribes afresh on every switch, so dead pools must not pile up).
+    pub fn deactivate(&mut self, sub: SubId) -> Vec<(PartitionId, ChunkOffset)> {
+        let s = &mut self.subs[sub.0];
+        s.active = false;
+        let cursors = s.cursors.clone();
+        self.try_reclaim(sub);
+        cursors
+    }
+
+    /// Drop a deactivated subscription's object pool once every slot is
+    /// back to `Free` (nothing filling, nothing sealed).
+    fn try_reclaim(&mut self, sub: SubId) {
+        let s = &mut self.subs[sub.0];
+        if !s.active && s.slots.iter().all(|slot| slot.state == ObjectState::Free) {
+            s.slots.clear();
+            s.free.clear();
+        }
     }
 
     pub fn subscription(&self, sub: SubId) -> &Subscription {
@@ -122,10 +149,6 @@ impl ObjectStore {
 
     pub fn subscriptions(&self) -> impl Iterator<Item = &Subscription> {
         self.subs.iter()
-    }
-
-    pub fn num_subscriptions(&self) -> usize {
-        self.subs.len()
     }
 
     /// Take a free object for filling. `None` == backpressure.
@@ -179,7 +202,8 @@ impl ObjectStore {
         (slot.records, slot.bytes)
     }
 
-    /// Source is done: buffer returns to the free pool (paper Step 4).
+    /// Source is done: buffer returns to the free pool (paper Step 4) —
+    /// or, for a deactivated subscription, towards reclamation.
     pub fn release(&mut self, id: ObjectId) {
         let s = &mut self.subs[id.sub.0];
         let slot = &mut s.slots[id.slot];
@@ -189,6 +213,7 @@ impl ObjectStore {
         slot.records = 0;
         slot.state = ObjectState::Free;
         s.free.push_back(id.slot);
+        self.try_reclaim(id.sub);
     }
 
     /// Lifetime fill count (== notifications sent to sources).

@@ -143,3 +143,32 @@ fn cursors_are_broker_managed_state() {
     s.cursors[0].1 = 42;
     assert_eq!(store.subscription(sub).cursors[0], (PartitionId(0), 42));
 }
+
+#[test]
+fn deactivate_returns_cursors_and_drains_sealed_objects() {
+    let (mut store, sub) = store_with_sub(2, 4096);
+    let id = store.acquire(sub).unwrap();
+    store.seal(id, vec![stamped(0, 0, 10, 100)]);
+    store.subscription_mut(sub).cursors[0].1 = 1;
+    let cursors = store.deactivate(sub);
+    assert_eq!(cursors, vec![(PartitionId(0), 1), (PartitionId(1), 0)]);
+    assert!(!store.subscription(sub).active);
+    // The already-sealed object still drains through the normal lifecycle;
+    // its capacity stays reserved until it does.
+    assert_eq!(store.sealed_counts(id), (10, 1000));
+    assert_eq!(store.reserved_bytes(), 2 * 4096);
+    // Once the last object drains, the dead pool is reclaimed — a flapping
+    // hybrid source must not leak one pool per switch.
+    store.release(id);
+    assert!(!store.has_free(sub), "reclaimed pool holds no buffers");
+    assert_eq!(store.reserved_bytes(), 0);
+}
+
+#[test]
+fn deactivate_with_all_objects_free_reclaims_immediately() {
+    let (mut store, sub) = store_with_sub(4, 1024);
+    assert_eq!(store.reserved_bytes(), 4 * 1024);
+    store.deactivate(sub);
+    assert_eq!(store.reserved_bytes(), 0, "idle pool reclaimed at unsubscribe");
+    assert!(!store.has_free(sub));
+}

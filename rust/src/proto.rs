@@ -109,6 +109,10 @@ pub enum RpcKind {
     /// Push-based source group subscription: the single RPC of the paper's
     /// Step 1. One entry per local source task: its partitions + offsets.
     PushSubscribe { sources: Vec<PushSourceSpec> },
+    /// Tear down one push subscription (the hybrid source falling back to
+    /// pulling). The ack returns the broker-managed cursors so the client
+    /// resumes pulling exactly where the push path left off.
+    PushUnsubscribe { sub: SubId },
     /// Primary -> backup replication of one append (Replication = 2).
     Replicate { bytes: u64, chunks: u32 },
 }
@@ -133,6 +137,10 @@ pub enum RpcReply {
     /// Pull result; `chunks` may be empty (consumer caught up).
     PullData { chunks: Vec<StampedChunk> },
     SubscribeAck { sub: SubId },
+    /// Subscription removed; `cursors` are the partitions' resume offsets
+    /// (they already account for every object the broker gathered, so the
+    /// client must still drain in-flight `ObjectReady` notifications).
+    UnsubscribeAck { sub: SubId, cursors: Vec<(PartitionId, ChunkOffset)> },
     ReplicateAck,
     /// Request refused (unknown partition, bad offset...). Carried instead
     /// of panicking so fault-injection tests can exercise client handling.

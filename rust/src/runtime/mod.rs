@@ -12,6 +12,7 @@
 #[cfg(test)]
 mod tests;
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -57,11 +58,13 @@ pub fn parse_manifest(body: &str) -> Result<Vec<VariantMeta>> {
 }
 
 /// A compiled variant ready to execute.
+#[cfg(feature = "xla")]
 pub struct LoadedVariant {
     pub meta: VariantMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla")]
 impl LoadedVariant {
     /// Execute with literal inputs; returns the flattened tuple outputs.
     pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -78,12 +81,39 @@ impl LoadedVariant {
 }
 
 /// The artifact library: every compiled variant, indexed by kind.
+#[cfg(feature = "xla")]
 pub struct ArtifactLibrary {
     client: xla::PjRtClient,
     variants: HashMap<String, Vec<LoadedVariant>>, // kind -> sorted by r asc
     dir: PathBuf,
 }
 
+/// Stub for builds without the `xla` feature: loading always fails with a
+/// pointer at the opt-in flag; the sim plane never gets here.
+#[cfg(not(feature = "xla"))]
+pub struct ArtifactLibrary {}
+
+#[cfg(not(feature = "xla"))]
+impl ArtifactLibrary {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "built without the `xla` feature: cannot load artifacts from {} \
+             (rebuild with `cargo build --features xla`)",
+            dir.as_ref().display()
+        )
+    }
+}
+
+impl ArtifactLibrary {
+    /// The default artifact directory: `$ZETTA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ZETTA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(feature = "xla")]
 impl ArtifactLibrary {
     /// Load + compile every artifact in `dir` (expects `manifest.tsv`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -114,13 +144,6 @@ impl ArtifactLibrary {
             list.sort_by_key(|v| v.meta.r);
         }
         Ok(Self { client, variants, dir })
-    }
-
-    /// The default artifact directory: `$ZETTA_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("ZETTA_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
     /// Smallest variant of `kind` with matching `s` and `r >= r_min`

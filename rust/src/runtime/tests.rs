@@ -26,6 +26,7 @@ fn manifest_rejects_bad_columns() {
 
 /// Artifact-dependent tests run only when the library is present; the
 /// integration suite (rust/tests) requires it unconditionally.
+#[cfg(feature = "xla")]
 fn try_lib() -> Option<ArtifactLibrary> {
     let dir = ArtifactLibrary::default_dir();
     match ArtifactLibrary::load(&dir) {
@@ -37,6 +38,7 @@ fn try_lib() -> Option<ArtifactLibrary> {
     }
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn loads_and_selects_variants() {
     let Some(lib) = try_lib() else { return };
@@ -49,6 +51,7 @@ fn loads_and_selects_variants() {
     assert!(lib.max_r("filter", 100).unwrap() >= 64);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn filter_variant_executes_end_to_end() {
     let Some(lib) = try_lib() else { return };

@@ -1,0 +1,257 @@
+//! The unified source API: one trait, one stats shape, one registry.
+//!
+//! The engine/storage decoupling the stream-processing literature calls
+//! for (Fragkoulis et al., 2020) lands here as three pieces:
+//!
+//! * [`StreamSource`] — the lifecycle + introspection contract every
+//!   source reader implements. A source is wired by its factory, started
+//!   by the engine (`Actor::on_start`), and reports uniform
+//!   [`SourceStats`] when the run ends.
+//! * [`SourceActor`] — the type-erased actor the launcher registers. The
+//!   cluster only ever sees `SourceActor`s, so end-of-run stats extraction
+//!   is a single downcast with a hard error — no per-concrete-type chain,
+//!   no silently dropped stats.
+//! * [`SourceFactory`] + [`SourceRegistry`] — the pluggable construction
+//!   path, keyed by [`SourceMode`]. `cluster::launch` resolves the
+//!   configured mode against the registry and builds sources through one
+//!   generic code path; registering a new ingestion mechanism never
+//!   touches the engine (the Uber connector-registry pattern).
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use crate::compute::SharedCompute;
+use crate::config::{ExperimentConfig, SourceMode};
+use crate::metrics::SharedMetrics;
+use crate::net::{NodeId, SharedNetwork};
+use crate::plasma::SharedStore;
+use crate::proto::{ChunkOffset, Msg, PartitionId};
+use crate::sim::{Actor, ActorId, Ctx, Engine};
+use crate::worker::SharedRegistry;
+
+/// Typed keys for the per-mode counters a [`SourceStats`] may carry beyond
+/// the uniform core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StatKey {
+    /// Shared-memory objects consumed (push path).
+    ObjectsConsumed,
+    /// Grep matches counted in place (native consumers).
+    Matches,
+    /// 1 while the source is operating on the push subscription.
+    Subscribed,
+    /// Pull→push transitions taken (hybrid).
+    SwitchesToPush,
+    /// Push→pull transitions taken (hybrid).
+    SwitchesToPull,
+}
+
+impl StatKey {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ObjectsConsumed => "objects_consumed",
+            Self::Matches => "matches",
+            Self::Subscribed => "subscribed",
+            Self::SwitchesToPush => "switches_to_push",
+            Self::SwitchesToPull => "switches_to_pull",
+        }
+    }
+}
+
+/// The typed extension map for per-mode extras.
+pub type StatExtras = BTreeMap<StatKey, u64>;
+
+/// Uniform end-of-run report every source returns. Core counters cover the
+/// paper's resource-accounting axes; anything mode-specific lives in the
+/// typed `extras` map.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SourceStats {
+    /// Records this source handed to the pipeline (or counted in place).
+    pub records_consumed: u64,
+    /// Pull RPCs issued (push-phase sources report 0).
+    pub pulls_issued: u64,
+    /// Pulls that returned nothing (the poll-timeout tax).
+    pub empty_pulls: u64,
+    /// Threads the source occupies — the Fig. 4 footprint claim.
+    pub threads: usize,
+    /// Per-mode extras.
+    pub extras: StatExtras,
+}
+
+impl SourceStats {
+    /// An extra counter, defaulting to 0 when the mode doesn't report it.
+    pub fn extra(&self, key: StatKey) -> u64 {
+        self.extras.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Fold another source's stats into this one (cluster aggregation).
+    pub fn merge(&mut self, other: &SourceStats) {
+        self.records_consumed += other.records_consumed;
+        self.pulls_issued += other.pulls_issued;
+        self.empty_pulls += other.empty_pulls;
+        self.threads += other.threads;
+        for (&k, &v) in &other.extras {
+            *self.extras.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+/// The contract every source reader implements on top of being an actor.
+/// Wiring happens in the factory's `build`, starting in `Actor::on_start`;
+/// this trait adds the uniform introspection surface.
+pub trait StreamSource: Actor<Msg> {
+    /// The mode this source implements.
+    fn mode(&self) -> SourceMode;
+
+    /// Uniform end-of-run statistics.
+    fn stats(&self) -> SourceStats;
+}
+
+/// The type-erased source actor the launcher registers with the engine.
+/// Stats extraction downcasts to this single concrete type — a source that
+/// was not built through the registry is a hard error, not dropped stats.
+pub struct SourceActor {
+    inner: Box<dyn StreamSource>,
+}
+
+impl SourceActor {
+    pub fn new(inner: Box<dyn StreamSource>) -> Self {
+        Self { inner }
+    }
+
+    pub fn mode(&self) -> SourceMode {
+        self.inner.mode()
+    }
+
+    pub fn stats(&self) -> SourceStats {
+        self.inner.stats()
+    }
+
+    /// Borrow the wrapped source as its concrete type (tests, examples).
+    pub fn source_as<T: 'static>(&mut self) -> Option<&mut T> {
+        self.inner.as_any_mut()?.downcast_mut::<T>()
+    }
+}
+
+impl Actor<Msg> for SourceActor {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.inner.on_start(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        self.inner.on_event(msg, ctx);
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn Any> {
+        Some(self)
+    }
+}
+
+/// Everything a factory may need to wire its sources into a cluster. The
+/// launcher fills this once; factories take what their mode uses.
+pub struct SourceWiring<'a> {
+    pub config: &'a ExperimentConfig,
+    /// Node the sources run on (the colocated worker node).
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    /// Task indices of the first pipeline stage (empty for engine-less
+    /// modes such as the native baseline).
+    pub downstream: Vec<usize>,
+    pub metrics: SharedMetrics,
+    pub net: SharedNetwork,
+    pub store: SharedStore,
+    pub registry: SharedRegistry,
+    pub compute: Option<SharedCompute>,
+}
+
+impl SourceWiring<'_> {
+    /// Exclusive partition span of consumer `i` (contiguous split of `Ns`
+    /// over `Nc`, starting at offset 0).
+    pub fn member_assignments(&self, i: usize) -> Vec<(PartitionId, ChunkOffset)> {
+        let parts_per = self.config.ns / self.config.nc;
+        (i * parts_per..(i + 1) * parts_per)
+            .map(|p| (PartitionId(p), 0))
+            .collect()
+    }
+}
+
+/// Builds one mode's sources. Implementations live next to their source
+/// type; the registry hands the launcher the right one for the configured
+/// [`SourceMode`].
+pub trait SourceFactory {
+    /// The mode this factory serves.
+    fn mode(&self) -> SourceMode;
+
+    /// Dedicated broker push threads the mode needs (0 for pull-only).
+    fn broker_push_threads(&self) -> usize {
+        0
+    }
+
+    /// Whether the mode feeds a streaming-engine pipeline (false for the
+    /// native baseline, which counts tuples in place).
+    fn uses_pipeline(&self) -> bool {
+        true
+    }
+
+    /// Build + register the mode's sources; return their actor ids. Every
+    /// actor must be a [`SourceActor`] so stats extraction can't miss it.
+    fn build(&self, wiring: &SourceWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId>;
+}
+
+/// The pluggable factory registry, keyed by [`SourceMode`].
+pub struct SourceRegistry {
+    factories: Vec<Box<dyn SourceFactory>>,
+}
+
+impl SourceRegistry {
+    /// An empty registry (plug in your own factories).
+    pub fn empty() -> Self {
+        Self { factories: Vec::new() }
+    }
+
+    /// The four built-in modes: pull, push, native, hybrid.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(Box::new(super::pull::PullSourceFactory));
+        r.register(Box::new(super::push::PushSourceFactory));
+        r.register(Box::new(super::native::NativeSourceFactory));
+        r.register(Box::new(super::hybrid::HybridSourceFactory));
+        r
+    }
+
+    /// Register a factory; replaces any previous factory for the same mode.
+    pub fn register(&mut self, factory: Box<dyn SourceFactory>) {
+        if let Some(slot) = self.factories.iter_mut().find(|f| f.mode() == factory.mode()) {
+            *slot = factory;
+        } else {
+            self.factories.push(factory);
+        }
+    }
+
+    pub fn get(&self, mode: SourceMode) -> Option<&dyn SourceFactory> {
+        self.factories.iter().find(|f| f.mode() == mode).map(|b| b.as_ref())
+    }
+
+    /// Resolve a mode or die loudly — an unregistered mode is a config
+    /// error, not a silently sourceless cluster.
+    pub fn expect(&self, mode: SourceMode) -> &dyn SourceFactory {
+        self.get(mode).unwrap_or_else(|| {
+            panic!("no source factory registered for mode `{}`", mode.name())
+        })
+    }
+
+    /// The modes currently registered (in registration order).
+    pub fn modes(&self) -> Vec<SourceMode> {
+        self.factories.iter().map(|f| f.mode()).collect()
+    }
+}
+
+impl Default for SourceRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}

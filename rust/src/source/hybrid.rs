@@ -1,0 +1,645 @@
+//! The adaptive hybrid source: pull until pulling hurts, then push.
+//!
+//! The paper proposes an architecture leveraging "push-based **and/or**
+//! pull-based source implementations" — this is the *and*. A hybrid source
+//! starts on the pull path (lowest resource footprint when the broker is
+//! unloaded) and monitors its own pull loop over a sliding window of
+//! completed RPCs:
+//!
+//! * **empty-poll rate** — pulls that return nothing burn an RPC and a
+//!   timeout (§II-B: the poll timeout is "difficult to tune");
+//! * **RPC round-trip latency** — when producers saturate the broker's
+//!   worker cores, pull RPCs queue behind appends (the Fig. 7 starvation).
+//!
+//! When either signal crosses its threshold the source issues the push
+//! subscription RPC at its current offsets and consumes shared-memory
+//! objects by pointer, exactly like [`super::PushSourceGroup`]. If the
+//! push path then starves (no object for `idle_timeout`), it unsubscribes
+//! — the broker returns the resume cursors, so the pull loop continues
+//! without loss or duplication. A cooldown after every switch provides the
+//! hysteresis that stops the source flapping between modes.
+
+use std::collections::VecDeque;
+
+use crate::config::{CostModel, ExperimentConfig, SourceMode};
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::{NodeId, SharedNetwork};
+use crate::plasma::SharedStore;
+use crate::proto::{
+    Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
+    RpcReply, RpcRequest, StampedChunk, SubId,
+};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+use crate::worker::{CreditLedger, SharedRegistry};
+
+use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource};
+
+const TAG_POLL: u64 = 0;
+/// Idle-check timers carry `TAG_IDLE_BASE + generation` so a stale chain
+/// from an earlier push phase dies at its first fire instead of re-arming.
+const TAG_IDLE_BASE: u64 = 1;
+const JOB_PULL: u64 = 0;
+const JOB_PUSH: u64 = 1;
+
+/// Table-I-style parameters governing the adaptive switch.
+#[derive(Debug, Clone)]
+pub struct HybridTuning {
+    /// Sliding window length, in completed pull RPCs.
+    pub window_polls: usize,
+    /// Pull→push when empty polls exceed this permille of the window.
+    pub empty_permille: u32,
+    /// Pull→push when the window's mean RPC round-trip exceeds this.
+    pub rpc_latency_ns: Time,
+    /// Minimum dwell after a switch before the next one (hysteresis).
+    pub cooldown_ns: Time,
+    /// Push→pull when no object arrives for this long.
+    pub idle_timeout_ns: Time,
+}
+
+impl HybridTuning {
+    pub fn from_config(c: &ExperimentConfig) -> Self {
+        Self {
+            window_polls: c.hybrid_window_polls,
+            empty_permille: c.hybrid_empty_permille,
+            rpc_latency_ns: c.hybrid_latency_us * 1_000,
+            cooldown_ns: c.hybrid_cooldown_ms * 1_000_000,
+            idle_timeout_ns: c.hybrid_idle_ms * 1_000_000,
+        }
+    }
+}
+
+/// Wiring for one hybrid source task.
+#[derive(Debug, Clone)]
+pub struct HybridParams {
+    /// Global task index (upstream id for credits) == metrics entity.
+    pub task_idx: usize,
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    /// Exclusive partitions with starting offsets.
+    pub assignments: Vec<(PartitionId, ChunkOffset)>,
+    /// Consumer `CS`: pull byte budget per partition == push object bytes.
+    pub max_bytes: u64,
+    /// Poll backoff when a pull returns empty.
+    pub pull_timeout: Time,
+    /// Mapper tasks this source feeds (round-robin).
+    pub downstream: Vec<usize>,
+    /// Credits per downstream (queue capacity).
+    pub queue_cap: usize,
+    /// Push-phase object pool size (backpressure window).
+    pub objects: usize,
+    pub tuning: HybridTuning,
+    pub cost: CostModel,
+}
+
+/// Where the control loop currently is. The push consumption machinery
+/// (ready queue / consuming marker) lives outside the phase so residual
+/// sealed objects keep draining across a fallback.
+enum Phase {
+    /// Pull loop: RPC in flight.
+    PullFetching,
+    /// Pull loop: deserialising the fetched chunks.
+    PullProcessing(Vec<StampedChunk>),
+    /// Pull loop: batches wait for mapper credits.
+    PullBlocked,
+    /// Pull loop: empty poll, waiting out the timeout.
+    PullIdle,
+    /// Subscription RPC in flight (pull loop quiesced, pending empty).
+    Subscribing,
+    /// Push phase: consuming shared objects.
+    Push { sub: SubId },
+    /// Unsubscribe RPC in flight; sealed objects still drain.
+    Unsubscribing,
+}
+
+/// The hybrid source actor.
+pub struct HybridSource {
+    params: HybridParams,
+    offsets: Vec<(PartitionId, ChunkOffset)>,
+    ledger: CreditLedger,
+    phase: Phase,
+    rr: usize,
+    next_rpc: u64,
+    /// Issue time of the in-flight pull (round-trip measurement).
+    inflight_since: Time,
+    /// Batches awaiting mapper credits (shared by both paths).
+    pending: VecDeque<Batch>,
+    /// Sliding window of completed pulls: (was_empty, round_trip).
+    poll_window: VecDeque<(bool, Time)>,
+    /// Sealed objects awaiting the consume thread.
+    ready: VecDeque<ObjectId>,
+    /// Object whose consume cost is currently being charged.
+    consuming: Option<ObjectId>,
+    /// Object freed once its batches drain (backpressure to the broker).
+    pending_free: Option<ObjectId>,
+    last_switch: Time,
+    last_delivery: Time,
+    /// Bumped on every subscribe: invalidates idle-check timer chains from
+    /// earlier push phases.
+    idle_gen: u64,
+    pulls_issued: u64,
+    empty_pulls: u64,
+    records_consumed: u64,
+    objects_consumed: u64,
+    switches_to_push: u64,
+    switches_to_pull: u64,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+    store: SharedStore,
+    registry: SharedRegistry,
+}
+
+impl HybridSource {
+    pub fn new(
+        params: HybridParams,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+        store: SharedStore,
+        registry: SharedRegistry,
+    ) -> Self {
+        assert!(!params.assignments.is_empty());
+        assert!(!params.downstream.is_empty());
+        assert!(params.tuning.window_polls > 0);
+        let offsets = params.assignments.clone();
+        let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        Self {
+            params,
+            offsets,
+            ledger,
+            phase: Phase::PullIdle,
+            rr: 0,
+            next_rpc: 0,
+            inflight_since: 0,
+            pending: VecDeque::new(),
+            poll_window: VecDeque::new(),
+            ready: VecDeque::new(),
+            consuming: None,
+            pending_free: None,
+            last_switch: 0,
+            last_delivery: 0,
+            idle_gen: 0,
+            pulls_issued: 0,
+            empty_pulls: 0,
+            records_consumed: 0,
+            objects_consumed: 0,
+            switches_to_push: 0,
+            switches_to_pull: 0,
+            metrics,
+            net,
+            store,
+            registry,
+        }
+    }
+
+    // -------------------------------------------------------------- pull --
+
+    fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        self.pulls_issued += 1;
+        self.inflight_since = ctx.now();
+        self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Pull {
+                    assignments: self.offsets.clone(),
+                    max_bytes: self.params.max_bytes,
+                },
+            }),
+        );
+        self.phase = Phase::PullFetching;
+    }
+
+    fn on_pull_data(&mut self, chunks: Vec<StampedChunk>, ctx: &mut Ctx<'_, Msg>) {
+        assert!(
+            matches!(self.phase, Phase::PullFetching),
+            "hybrid source {}: pull data outside PullFetching",
+            self.params.task_idx
+        );
+        let latency = ctx.now().saturating_sub(self.inflight_since);
+        if self.poll_window.len() >= self.params.tuning.window_polls {
+            self.poll_window.pop_front();
+        }
+        self.poll_window.push_back((chunks.is_empty(), latency));
+        if chunks.is_empty() {
+            self.empty_pulls += 1;
+            if self.should_switch_to_push(ctx.now()) {
+                self.begin_subscribe(ctx);
+            } else {
+                self.phase = Phase::PullIdle;
+                ctx.send_self_in(self.params.pull_timeout, Msg::Timer(TAG_POLL));
+            }
+            return;
+        }
+        for sc in &chunks {
+            for (p, off) in self.offsets.iter_mut() {
+                if *p == sc.partition {
+                    *off = (*off).max(sc.offset + 1);
+                }
+            }
+        }
+        let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
+        // Same serial consume tax as the plain pull source.
+        let cost =
+            self.params.cost.pull_rpc_client_ns + records * self.params.cost.engine_record_ns;
+        self.phase = Phase::PullProcessing(chunks);
+        ctx.send_self_in(cost, Msg::JobDone(JOB_PULL));
+    }
+
+    fn on_pull_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Phase::PullProcessing(chunks) =
+            std::mem::replace(&mut self.phase, Phase::PullBlocked)
+        else {
+            panic!("hybrid source {}: JobDone outside PullProcessing", self.params.task_idx)
+        };
+        self.last_delivery = ctx.now();
+        for sc in chunks {
+            self.records_consumed += sc.chunk.records as u64;
+            self.pending.push_back(Batch {
+                from_task: self.params.task_idx,
+                tuples: sc.chunk.records as u64,
+                bytes: sc.chunk.bytes(),
+                chunks: vec![sc.chunk],
+                hist: None,
+            });
+        }
+        self.flush(ctx);
+    }
+
+    /// True when the sliding window says pulling is losing to the broker's
+    /// write load — and the post-switch cooldown has expired.
+    fn should_switch_to_push(&self, now: Time) -> bool {
+        let t = &self.params.tuning;
+        // Residual push batches still draining (flap in progress): the
+        // subscribe point requires an empty emit queue.
+        if !self.pending.is_empty() {
+            return false;
+        }
+        if self.poll_window.len() < t.window_polls {
+            return false;
+        }
+        if now.saturating_sub(self.last_switch) < t.cooldown_ns {
+            return false;
+        }
+        // Both thresholds are strict ("exceed"): the documented maxima —
+        // empty_permille=1000, a huge latency — disable their signal.
+        let empties = self.poll_window.iter().filter(|(e, _)| *e).count();
+        if (empties * 1000 / self.poll_window.len()) as u32 > t.empty_permille {
+            return true;
+        }
+        let mean_latency: Time = self.poll_window.iter().map(|(_, l)| l).sum::<Time>()
+            / self.poll_window.len() as Time;
+        mean_latency > t.rpc_latency_ns
+    }
+
+    // -------------------------------------------------------------- push --
+
+    /// The single subscription RPC, issued at the pull loop's current
+    /// offsets (pending is empty and no pull is in flight here).
+    fn begin_subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        debug_assert!(self.pending.is_empty());
+        let spec = PushSourceSpec {
+            source_actor: ctx.self_id(),
+            assignments: self.offsets.clone(),
+            objects: self.params.objects,
+            object_bytes: self.params.max_bytes,
+        };
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id: self.next_rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::PushSubscribe { sources: vec![spec] },
+            }),
+        );
+        self.next_rpc += 1;
+        self.switches_to_push += 1;
+        self.last_switch = ctx.now();
+        self.poll_window.clear();
+        self.phase = Phase::Subscribing;
+    }
+
+    fn on_subscribed(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        assert!(
+            matches!(self.phase, Phase::Subscribing),
+            "hybrid source {}: unexpected SubscribeAck",
+            self.params.task_idx
+        );
+        self.phase = Phase::Push { sub };
+        self.last_delivery = ctx.now(); // the idle clock starts now
+        self.idle_gen += 1;
+        ctx.send_self_in(
+            self.params.tuning.idle_timeout_ns,
+            Msg::Timer(TAG_IDLE_BASE + self.idle_gen),
+        );
+    }
+
+    /// Start the consume thread on the next sealed object, if free. Runs in
+    /// every phase: residual objects of a torn-down subscription must still
+    /// drain (their chunks are already reflected in the resume cursors).
+    fn try_consume(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.consuming.is_some() || self.pending_free.is_some() || !self.pending.is_empty() {
+            return;
+        }
+        let Some(id) = self.ready.pop_front() else { return };
+        let (records, _bytes) = self.store.borrow().sealed_counts(id);
+        // Pointer access into shared memory — no fetch RPC, no deser copy.
+        let cost = self.params.cost.push_object_handle_ns
+            + records * self.params.cost.push_consume_record_ns;
+        self.consuming = Some(id);
+        ctx.send_self_in(cost, Msg::JobDone(JOB_PUSH));
+    }
+
+    fn on_object_consumed(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.consuming.take().expect("JobDone only while consuming");
+        self.last_delivery = ctx.now();
+        {
+            let store = self.store.borrow();
+            for sc in store.read(id) {
+                self.records_consumed += sc.chunk.records as u64;
+                self.pending.push_back(Batch {
+                    from_task: self.params.task_idx,
+                    tuples: sc.chunk.records as u64,
+                    bytes: sc.chunk.bytes(),
+                    chunks: vec![sc.chunk.clone()],
+                    hist: None,
+                });
+            }
+        }
+        self.objects_consumed += 1;
+        self.pending_free = Some(id);
+        self.flush(ctx);
+    }
+
+    /// Periodic push-phase starvation check: no object for `idle_timeout`
+    /// (and past the cooldown) → tear the subscription down. Downstream
+    /// credit backpressure is NOT starvation: while objects are queued,
+    /// consuming, or draining, the broker is delivering and the pull path
+    /// would be equally blocked — tearing down would just churn.
+    fn on_idle_check(&mut self, tag: u64, ctx: &mut Ctx<'_, Msg>) {
+        if tag != TAG_IDLE_BASE + self.idle_gen {
+            return; // stale chain from an earlier push phase
+        }
+        let Phase::Push { sub } = &self.phase else { return };
+        let sub = *sub;
+        let t = &self.params.tuning;
+        let now = ctx.now();
+        let drained = self.ready.is_empty()
+            && self.consuming.is_none()
+            && self.pending_free.is_none()
+            && self.pending.is_empty();
+        let starved = drained && now.saturating_sub(self.last_delivery) >= t.idle_timeout_ns;
+        if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
+            let deliver =
+                self.net
+                    .borrow_mut()
+                    .send_control(now, self.params.node, self.params.broker_node);
+            ctx.send_at(
+                deliver,
+                self.params.broker,
+                Msg::Rpc(RpcRequest {
+                    id: self.next_rpc,
+                    reply_to: ctx.self_id(),
+                    from_node: self.params.node,
+                    kind: RpcKind::PushUnsubscribe { sub },
+                }),
+            );
+            self.next_rpc += 1;
+            self.switches_to_pull += 1;
+            self.last_switch = now;
+            self.phase = Phase::Unsubscribing;
+        } else {
+            ctx.send_self_in(t.idle_timeout_ns, Msg::Timer(tag));
+        }
+    }
+
+    fn on_unsubscribed(
+        &mut self,
+        cursors: Vec<(PartitionId, ChunkOffset)>,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        assert!(
+            matches!(self.phase, Phase::Unsubscribing),
+            "hybrid source {}: unexpected UnsubscribeAck",
+            self.params.task_idx
+        );
+        // Resume pulling exactly where the broker's push cursors stopped;
+        // in-flight sealed objects still drain through `ready`/`consuming`.
+        debug_assert_eq!(cursors.len(), self.offsets.len());
+        self.offsets = cursors;
+        self.phase = Phase::PullIdle;
+        ctx.send_self_in(0, Msg::Timer(TAG_POLL));
+    }
+
+    // -------------------------------------------------------------- emit --
+
+    /// Send pending batches while credits allow; once drained, resume the
+    /// active loop (free the object / next pull / switch).
+    fn flush(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        while !self.pending.is_empty() {
+            let n = self.params.downstream.len();
+            let Some(k) = (0..n)
+                .map(|i| (self.rr + i) % n)
+                .find(|&k| self.ledger.has(self.params.downstream[k]))
+            else {
+                return; // blocked (phase stays PullBlocked / object stays held)
+            };
+            let target = self.params.downstream[k];
+            self.rr = k + 1;
+            self.ledger.spend(target);
+            let batch = self.pending.pop_front().expect("checked non-empty");
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
+        }
+        self.after_drain(ctx);
+    }
+
+    fn after_drain(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        // Step 4: the drained object's buffer returns to the broker pool.
+        if let Some(id) = self.pending_free.take() {
+            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+        }
+        self.try_consume(ctx);
+        if matches!(self.phase, Phase::PullBlocked) {
+            if self.should_switch_to_push(ctx.now()) {
+                self.begin_subscribe(ctx);
+            } else {
+                self.issue_pull(ctx);
+            }
+        }
+    }
+
+    // ------------------------------------------------------ introspection --
+
+    pub fn pulls_issued(&self) -> u64 {
+        self.pulls_issued
+    }
+
+    pub fn empty_pulls(&self) -> u64 {
+        self.empty_pulls
+    }
+
+    pub fn records_consumed(&self) -> u64 {
+        self.records_consumed
+    }
+
+    pub fn objects_consumed(&self) -> u64 {
+        self.objects_consumed
+    }
+
+    pub fn switches_to_push(&self) -> u64 {
+        self.switches_to_push
+    }
+
+    pub fn switches_to_pull(&self) -> u64 {
+        self.switches_to_pull
+    }
+
+    /// True while operating (or transitioning) on the push subscription.
+    pub fn is_pushing(&self) -> bool {
+        matches!(self.phase, Phase::Subscribing | Phase::Push { .. })
+    }
+}
+
+impl Actor<Msg> for HybridSource {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.issue_pull(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Reply(env) => {
+                let RpcEnvelope { reply, .. } = env;
+                match reply {
+                    RpcReply::PullData { chunks } => self.on_pull_data(chunks, ctx),
+                    RpcReply::SubscribeAck { sub } => self.on_subscribed(sub, ctx),
+                    RpcReply::UnsubscribeAck { cursors, .. } => self.on_unsubscribed(cursors, ctx),
+                    RpcReply::Error { reason } => {
+                        panic!("hybrid source {}: {reason}", self.params.task_idx)
+                    }
+                    other => panic!(
+                        "hybrid source {}: unexpected reply {other:?}",
+                        self.params.task_idx
+                    ),
+                }
+            }
+            Msg::JobDone(JOB_PULL) => self.on_pull_processed(ctx),
+            Msg::JobDone(JOB_PUSH) => self.on_object_consumed(ctx),
+            Msg::Timer(TAG_POLL) => {
+                if matches!(self.phase, Phase::PullIdle) {
+                    self.issue_pull(ctx);
+                }
+            }
+            Msg::Timer(tag) => self.on_idle_check(tag, ctx),
+            Msg::ObjectReady { id } => {
+                self.ready.push_back(id);
+                self.try_consume(ctx);
+            }
+            Msg::Credit { to_upstream_task } => {
+                self.ledger.refund(to_upstream_task);
+                if !self.pending.is_empty() {
+                    self.flush(ctx);
+                }
+            }
+            other => panic!("hybrid source {}: unexpected {other:?}", self.params.task_idx),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("hybrid-source#{}", self.params.task_idx)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+impl StreamSource for HybridSource {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Hybrid
+    }
+
+    fn stats(&self) -> SourceStats {
+        let mut extras = super::api::StatExtras::new();
+        extras.insert(StatKey::ObjectsConsumed, self.objects_consumed);
+        extras.insert(StatKey::SwitchesToPush, self.switches_to_push);
+        extras.insert(StatKey::SwitchesToPull, self.switches_to_pull);
+        extras.insert(StatKey::Subscribed, matches!(self.phase, Phase::Push { .. }) as u64);
+        SourceStats {
+            records_consumed: self.records_consumed,
+            pulls_issued: self.pulls_issued,
+            empty_pulls: self.empty_pulls,
+            // Pull phase: fetch + emit, like a plain pull source. Push
+            // phase: just this source's consume loop — the one dedicated
+            // broker push thread is shared by every subscription and is
+            // already reserved out of `NBc` (counting it per source would
+            // inflate the aggregate footprint by Nc-1). Note the deliberate
+            // convention difference vs `PushSourceGroup`, which folds that
+            // broker thread into its single group-wide figure: the hybrid
+            // aggregate is Nc, with the broker-side thread visible through
+            // `broker.push_util` instead.
+            threads: if matches!(self.phase, Phase::Push { .. }) { 1 } else { 2 },
+            extras,
+        }
+    }
+}
+
+/// Builds one [`HybridSource`] per consumer. Reserves a broker push thread
+/// so the push phase has somewhere to switch to.
+pub struct HybridSourceFactory;
+
+impl SourceFactory for HybridSourceFactory {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Hybrid
+    }
+
+    fn broker_push_threads(&self) -> usize {
+        1
+    }
+
+    fn build(&self, w: &SourceWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        let c = w.config;
+        (0..c.nc)
+            .map(|i| {
+                let src = HybridSource::new(
+                    HybridParams {
+                        task_idx: i,
+                        node: w.node,
+                        broker: w.broker,
+                        broker_node: w.broker_node,
+                        assignments: w.member_assignments(i),
+                        max_bytes: c.consumer_chunk as u64,
+                        pull_timeout: c.pull_timeout_us * 1_000,
+                        downstream: w.downstream.clone(),
+                        queue_cap: c.queue_cap,
+                        objects: c.push_objects_per_source,
+                        tuning: HybridTuning::from_config(c),
+                        cost: c.cost.clone(),
+                    },
+                    w.metrics.clone(),
+                    w.net.clone(),
+                    w.store.clone(),
+                    w.registry.clone(),
+                );
+                let id = engine.add_actor(Box::new(SourceActor::new(Box::new(src))));
+                w.registry.borrow_mut().register(i, id);
+                id
+            })
+            .collect()
+    }
+}

@@ -1,5 +1,12 @@
-//! Streaming source readers: pull-based, push-based, and the native
-//! ("C++") pull baseline — the paper's central comparison axis.
+//! Streaming source readers behind one trait — the paper's central
+//! comparison axis as a pluggable API.
+//!
+//! Every reader implements [`StreamSource`] (an [`crate::sim::Actor`] plus
+//! uniform [`SourceStats`] introspection) and is built by a
+//! [`SourceFactory`] resolved from the [`SourceRegistry`] keyed by
+//! [`crate::config::SourceMode`] — the launcher never names a concrete
+//! source type, and plugging a new ingestion mechanism in means
+//! registering a factory, not editing the engine. Modes:
 //!
 //! **Pull** (`PullSource`, §II-B): the state-of-the-art Flink/Spark design.
 //! A serial fetch loop issues synchronous pull RPCs (up to the consumer
@@ -22,14 +29,28 @@
 //! **Native** (`NativeConsumer`): the Fig. 7 baseline — the same pull loop
 //! without the streaming-engine overhead (C++-grade per-record cost),
 //! counting tuples in place.
+//!
+//! **Hybrid** (`HybridSource`): the adaptive fourth mode the paper's
+//! "push-based and/or pull-based" architecture implies. Starts pulling,
+//! watches its empty-poll rate and pull round-trip latency over a sliding
+//! window, switches to the push subscription when pulls are starved by
+//! writes, and falls back (with cooldown hysteresis) when the push path
+//! starves instead. See [`HybridSource`] for the switch protocol.
 
 #[cfg(test)]
 mod tests;
 
+pub mod api;
+mod hybrid;
 mod native;
 mod pull;
 mod push;
 
-pub use native::{NativeConsumer, NativeParams};
-pub use pull::{PullParams, PullSource};
-pub use push::{PushGroupParams, PushMember, PushSourceGroup};
+pub use api::{
+    SourceActor, SourceFactory, SourceRegistry, SourceStats, SourceWiring, StatExtras, StatKey,
+    StreamSource,
+};
+pub use hybrid::{HybridParams, HybridSource, HybridSourceFactory, HybridTuning};
+pub use native::{NativeConsumer, NativeParams, NativeSourceFactory};
+pub use pull::{PullParams, PullSource, PullSourceFactory};
+pub use push::{PushGroupParams, PushMember, PushSourceFactory, PushSourceGroup};

@@ -6,15 +6,18 @@
 //! paper's RAMCloud-client-based consumers.
 
 use crate::compute::SharedCompute;
-use crate::config::CostModel;
+use crate::config::{CostModel, DataPlane, SourceMode, Workload};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
 use crate::proto::{
     ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest, StampedChunk,
 };
-use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+
+use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource};
 
 /// Wiring for one native consumer.
+#[derive(Clone)]
 pub struct NativeParams {
     /// Metrics entity (consumer index).
     pub entity: usize,
@@ -33,6 +36,24 @@ pub struct NativeParams {
     pub cost: CostModel,
 }
 
+// Not derived: `ComputeEngine` holds a PJRT client with no Debug impl.
+impl std::fmt::Debug for NativeParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NativeParams")
+            .field("entity", &self.entity)
+            .field("node", &self.node)
+            .field("broker", &self.broker)
+            .field("broker_node", &self.broker_node)
+            .field("assignments", &self.assignments)
+            .field("max_bytes", &self.max_bytes)
+            .field("pull_timeout", &self.pull_timeout)
+            .field("pattern", &self.pattern)
+            .field("compute", &self.compute.is_some())
+            .field("cost", &self.cost)
+            .finish()
+    }
+}
+
 /// The native consumer actor: pull → count (→ filter) → pull.
 pub struct NativeConsumer {
     params: NativeParams,
@@ -42,6 +63,7 @@ pub struct NativeConsumer {
     records_consumed: u64,
     matches: u64,
     pulls_issued: u64,
+    empty_pulls: u64,
     metrics: SharedMetrics,
     net: SharedNetwork,
 }
@@ -57,6 +79,7 @@ impl NativeConsumer {
             records_consumed: 0,
             matches: 0,
             pulls_issued: 0,
+            empty_pulls: 0,
             metrics,
             net,
         }
@@ -93,6 +116,7 @@ impl NativeConsumer {
             other => panic!("native consumer: unexpected reply {other:?}"),
         };
         if chunks.is_empty() {
+            self.empty_pulls += 1;
             ctx.send_self_in(self.params.pull_timeout, Msg::Timer(0));
             return;
         }
@@ -142,6 +166,10 @@ impl NativeConsumer {
     pub fn pulls_issued(&self) -> u64 {
         self.pulls_issued
     }
+
+    pub fn empty_pulls(&self) -> u64 {
+        self.empty_pulls
+    }
 }
 
 impl Actor<Msg> for NativeConsumer {
@@ -168,5 +196,65 @@ impl Actor<Msg> for NativeConsumer {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+}
+
+impl StreamSource for NativeConsumer {
+    fn mode(&self) -> SourceMode {
+        SourceMode::NativePull
+    }
+
+    fn stats(&self) -> SourceStats {
+        let mut extras = super::api::StatExtras::new();
+        extras.insert(StatKey::Matches, self.matches);
+        SourceStats {
+            records_consumed: self.records_consumed,
+            pulls_issued: self.pulls_issued,
+            empty_pulls: self.empty_pulls,
+            threads: 1,
+            extras,
+        }
+    }
+}
+
+/// Builds one engine-less [`NativeConsumer`] per consumer (no pipeline).
+pub struct NativeSourceFactory;
+
+impl SourceFactory for NativeSourceFactory {
+    fn mode(&self) -> SourceMode {
+        SourceMode::NativePull
+    }
+
+    fn uses_pipeline(&self) -> bool {
+        false
+    }
+
+    fn build(&self, w: &SourceWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        let c = w.config;
+        (0..c.nc)
+            .map(|i| {
+                let pattern = matches!(c.workload, Workload::Filter)
+                    .then(|| crate::cluster::FILTER_NEEDLE.to_vec());
+                let src = NativeConsumer::new(
+                    NativeParams {
+                        entity: i,
+                        node: w.node,
+                        broker: w.broker,
+                        broker_node: w.broker_node,
+                        assignments: w.member_assignments(i),
+                        max_bytes: c.consumer_chunk as u64,
+                        pull_timeout: c.pull_timeout_us * 1_000,
+                        pattern,
+                        compute: (c.data_plane == DataPlane::Real).then(|| {
+                            w.compute.clone().expect("real data plane needs a compute engine")
+                        }),
+                        cost: c.cost.clone(),
+                    },
+                    w.metrics.clone(),
+                    w.net.clone(),
+                );
+                engine.add_actor(Box::new(SourceActor::new(Box::new(src))))
+            })
+            .collect()
     }
 }

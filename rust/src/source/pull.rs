@@ -1,18 +1,20 @@
 //! The pull-based source reader (state-of-the-art baseline).
 
-use crate::config::CostModel;
+use crate::config::{CostModel, SourceMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
 use crate::proto::{
     Batch, ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest,
     StampedChunk,
 };
-use crate::sim::{Actor, ActorId, Ctx, Time};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 use std::collections::VecDeque;
 
+use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StreamSource};
 use crate::worker::{CreditLedger, SharedRegistry};
 
 /// Wiring for one pull source task.
+#[derive(Debug, Clone)]
 pub struct PullParams {
     /// Global task index (upstream id for credits) == metrics entity.
     pub task_idx: usize,
@@ -228,5 +230,58 @@ impl Actor<Msg> for PullSource {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+}
+
+impl StreamSource for PullSource {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Pull
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            records_consumed: self.records_consumed,
+            pulls_issued: self.pulls_issued,
+            empty_pulls: self.empty_pulls,
+            threads: 2, // fetch + emit threads per pull consumer
+            extras: Default::default(),
+        }
+    }
+}
+
+/// Builds one [`PullSource`] per consumer (`Nc` total, 2 threads each).
+pub struct PullSourceFactory;
+
+impl SourceFactory for PullSourceFactory {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Pull
+    }
+
+    fn build(&self, w: &SourceWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        let c = w.config;
+        (0..c.nc)
+            .map(|i| {
+                let src = PullSource::new(
+                    PullParams {
+                        task_idx: i,
+                        node: w.node,
+                        broker: w.broker,
+                        broker_node: w.broker_node,
+                        assignments: w.member_assignments(i),
+                        max_bytes: c.consumer_chunk as u64,
+                        pull_timeout: c.pull_timeout_us * 1_000,
+                        downstream: w.downstream.clone(),
+                        queue_cap: c.queue_cap,
+                        cost: c.cost.clone(),
+                    },
+                    w.metrics.clone(),
+                    w.net.clone(),
+                    w.registry.clone(),
+                );
+                let id = engine.add_actor(Box::new(SourceActor::new(Box::new(src))));
+                w.registry.borrow_mut().register(i, id);
+                id
+            })
+            .collect()
     }
 }

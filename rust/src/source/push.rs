@@ -2,15 +2,17 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::CostModel;
+use crate::config::{CostModel, SourceMode};
 use crate::net::{NodeId, SharedNetwork};
 use crate::plasma::SharedStore;
 use crate::proto::{
     Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
     RpcReply, RpcRequest, SubId,
 };
-use crate::sim::{Actor, ActorId, Ctx};
+use crate::sim::{Actor, ActorId, Ctx, Engine};
 use crate::worker::{CreditLedger, SharedRegistry};
+
+use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource};
 
 /// One logical push source task in the group (a consumer of the paper's
 /// model: exclusive partitions, its own shared-object pool, its own slot
@@ -27,6 +29,7 @@ pub struct PushMember {
 }
 
 /// Wiring for the worker-local push source group.
+#[derive(Debug, Clone)]
 pub struct PushGroupParams {
     /// The leader's global task index (smallest member id in the paper) —
     /// the one task that issues the single subscription RPC and handles
@@ -289,5 +292,70 @@ impl Actor<Msg> for PushSourceGroup {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+}
+
+impl StreamSource for PushSourceGroup {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Push
+    }
+
+    fn stats(&self) -> SourceStats {
+        let mut extras = super::api::StatExtras::new();
+        extras.insert(StatKey::ObjectsConsumed, self.objects_consumed());
+        extras.insert(StatKey::Subscribed, self.subscribed as u64);
+        SourceStats {
+            records_consumed: self.records_consumed(),
+            pulls_issued: 0,
+            empty_pulls: 0,
+            threads: 2, // group consume thread + broker push thread
+            extras,
+        }
+    }
+}
+
+/// Builds the single worker-local [`PushSourceGroup`] covering all `Nc`
+/// logical source tasks (2 threads total — the Fig. 4 footprint claim).
+pub struct PushSourceFactory;
+
+impl SourceFactory for PushSourceFactory {
+    fn mode(&self) -> SourceMode {
+        SourceMode::Push
+    }
+
+    fn broker_push_threads(&self) -> usize {
+        1
+    }
+
+    fn build(&self, w: &SourceWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        let c = w.config;
+        let members: Vec<PushMember> = (0..c.nc)
+            .map(|i| PushMember {
+                task_idx: i,
+                assignments: w.member_assignments(i),
+                objects: c.push_objects_per_source,
+                object_bytes: c.consumer_chunk as u64,
+            })
+            .collect();
+        let group = PushSourceGroup::new(
+            PushGroupParams {
+                leader_task_idx: 0,
+                node: w.node,
+                broker: w.broker,
+                broker_node: w.broker_node,
+                members,
+                downstream: w.downstream.clone(),
+                queue_cap: c.queue_cap,
+                cost: c.cost.clone(),
+            },
+            w.net.clone(),
+            w.store.clone(),
+            w.registry.clone(),
+        );
+        let id = engine.add_actor(Box::new(SourceActor::new(Box::new(group))));
+        for i in 0..c.nc {
+            w.registry.borrow_mut().register(i, id);
+        }
+        vec![id]
     }
 }

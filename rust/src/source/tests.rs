@@ -1,4 +1,6 @@
-//! Source-reader tests against a real broker + worker tasks.
+//! Source-reader tests against a real broker + worker tasks. Sources are
+//! registered the way the launcher registers them — wrapped in
+//! [`SourceActor`] — so every test also exercises the trait API.
 
 use super::*;
 use crate::broker::{Broker, BrokerParams};
@@ -9,7 +11,7 @@ use crate::ops::CountOp;
 use crate::plasma::ObjectStore;
 use crate::producer::{Producer, ProducerParams, RecordGen};
 use crate::proto::{Msg, PartitionId};
-use crate::sim::{ActorId, Engine, SECOND};
+use crate::sim::{ActorId, Engine, Time, SECOND};
 use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
 
 /// A full mini-cluster: 1 producer, broker, 1 source (mode-dependent),
@@ -20,14 +22,30 @@ struct Rig {
     source: ActorId,
 }
 
+/// The wrapped source, as the launcher sees it (borrows only the engine so
+/// tests can keep reading the rig's metrics).
+fn actor_of(engine: &mut Engine<Msg>, id: ActorId) -> &mut SourceActor {
+    engine.actor_as::<SourceActor>(id).expect("registry-built source")
+}
+
 fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
+    rig_opts(mode, producer_chunk, consumer_chunk, true, None)
+}
+
+fn rig_opts(
+    mode: &str,
+    producer_chunk: usize,
+    consumer_chunk: usize,
+    with_producer: bool,
+    tuning: Option<HybridTuning>,
+) -> Rig {
     let mut engine = Engine::new(11);
     let metrics = MetricsHub::shared();
     let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
     let store = ObjectStore::shared();
     let registry = TaskRegistry::shared();
     let parts: Vec<PartitionId> = (0..2).map(PartitionId).collect();
-    let push = mode == "push";
+    let push = mode == "push" || mode == "hybrid";
     let broker = engine.add_actor(Box::new(Broker::new(
         BrokerParams {
             node: 0,
@@ -44,22 +62,24 @@ fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
         metrics.clone(),
         0,
     )));
-    engine.add_actor(Box::new(Producer::new(
-        ProducerParams {
-            entity: 0,
-            node: 1,
-            broker,
-            broker_node: 0,
-            partitions: parts.clone(),
-            chunk_bytes: producer_chunk,
-            record_size: 100,
-            cost: CostModel::default(),
-            data_plane: crate::config::DataPlane::Sim,
-        },
-        RecordGen::Sim,
-        metrics.clone(),
-        net.clone(),
-    )));
+    if with_producer {
+        engine.add_actor(Box::new(Producer::new(
+            ProducerParams {
+                entity: 0,
+                node: 1,
+                broker,
+                broker_node: 0,
+                partitions: parts.clone(),
+                chunk_bytes: producer_chunk,
+                record_size: 100,
+                cost: CostModel::default(),
+                data_plane: crate::config::DataPlane::Sim,
+            },
+            RecordGen::Sim,
+            metrics.clone(),
+            net.clone(),
+        )));
+    }
     // two count mappers at task idx 1, 2 (source is task 0)
     let downstream = vec![1usize, 2];
     for &idx in &downstream {
@@ -77,53 +97,45 @@ fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
         )));
         registry.borrow_mut().register(idx, t);
     }
-    let source = match mode {
-        "pull" => {
-            let s = engine.add_actor(Box::new(PullSource::new(
-                PullParams {
+    let source: Box<dyn StreamSource> = match mode {
+        "pull" => Box::new(PullSource::new(
+            PullParams {
+                task_idx: 0,
+                node: 0,
+                broker,
+                broker_node: 0,
+                assignments: parts.iter().map(|&p| (p, 0)).collect(),
+                max_bytes: consumer_chunk as u64,
+                pull_timeout: 100_000,
+                downstream: downstream.clone(),
+                queue_cap: 8,
+                cost: CostModel::default(),
+            },
+            metrics.clone(),
+            net.clone(),
+            registry.clone(),
+        )),
+        "push" => Box::new(PushSourceGroup::new(
+            PushGroupParams {
+                leader_task_idx: 0,
+                node: 0,
+                broker,
+                broker_node: 0,
+                members: vec![PushMember {
                     task_idx: 0,
-                    node: 0,
-                    broker,
-                    broker_node: 0,
                     assignments: parts.iter().map(|&p| (p, 0)).collect(),
-                    max_bytes: consumer_chunk as u64,
-                    pull_timeout: 100_000,
-                    downstream: downstream.clone(),
-                    queue_cap: 8,
-                    cost: CostModel::default(),
-                },
-                metrics.clone(),
-                net.clone(),
-                registry.clone(),
-            )));
-            registry.borrow_mut().register(0, s);
-            s
-        }
-        "push" => {
-            let s = engine.add_actor(Box::new(PushSourceGroup::new(
-                PushGroupParams {
-                    leader_task_idx: 0,
-                    node: 0,
-                    broker,
-                    broker_node: 0,
-                    members: vec![PushMember {
-                        task_idx: 0,
-                        assignments: parts.iter().map(|&p| (p, 0)).collect(),
-                        objects: 4,
-                        object_bytes: consumer_chunk as u64,
-                    }],
-                    downstream: downstream.clone(),
-                    queue_cap: 8,
-                    cost: CostModel::default(),
-                },
-                net.clone(),
-                store.clone(),
-                registry.clone(),
-            )));
-            registry.borrow_mut().register(0, s);
-            s
-        }
-        "native" => engine.add_actor(Box::new(NativeConsumer::new(
+                    objects: 4,
+                    object_bytes: consumer_chunk as u64,
+                }],
+                downstream: downstream.clone(),
+                queue_cap: 8,
+                cost: CostModel::default(),
+            },
+            net.clone(),
+            store.clone(),
+            registry.clone(),
+        )),
+        "native" => Box::new(NativeConsumer::new(
             NativeParams {
                 entity: 0,
                 node: 0,
@@ -138,9 +150,40 @@ fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
             },
             metrics.clone(),
             net.clone(),
-        ))),
+        )),
+        "hybrid" => Box::new(HybridSource::new(
+            HybridParams {
+                task_idx: 0,
+                node: 0,
+                broker,
+                broker_node: 0,
+                assignments: parts.iter().map(|&p| (p, 0)).collect(),
+                max_bytes: consumer_chunk as u64,
+                pull_timeout: 100_000,
+                downstream: downstream.clone(),
+                queue_cap: 8,
+                objects: 4,
+                tuning: tuning.clone().unwrap_or(HybridTuning {
+                    window_polls: 32,
+                    empty_permille: 600,
+                    rpc_latency_ns: 200_000,
+                    cooldown_ns: SECOND,
+                    idle_timeout_ns: 200_000_000,
+                }),
+                cost: CostModel::default(),
+            },
+            metrics.clone(),
+            net.clone(),
+            store.clone(),
+            registry.clone(),
+        )),
         other => panic!("unknown mode {other}"),
     };
+    let is_engine_source = mode != "native";
+    let source = engine.add_actor(Box::new(SourceActor::new(source)));
+    if is_engine_source {
+        registry.borrow_mut().register(0, source);
+    }
     Rig { engine, metrics, source }
 }
 
@@ -148,7 +191,7 @@ fn rig(mode: &str, producer_chunk: usize, consumer_chunk: usize) -> Rig {
 fn pull_source_consumes_and_feeds_mappers() {
     let mut r = rig("pull", 4096, 64 * 1024);
     r.engine.run_until(SECOND);
-    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    let s = actor_of(&mut r.engine, r.source).source_as::<PullSource>().unwrap();
     assert!(s.records_consumed() > 10_000, "consumed {}", s.records_consumed());
     assert!(s.pulls_issued() > 10);
     let consumed = s.records_consumed();
@@ -166,7 +209,7 @@ fn pull_source_records_rpc_metric() {
     let mut r = rig("pull", 4096, 64 * 1024);
     r.engine.run_until(SECOND / 2);
     let rpcs = r.metrics.borrow().total(Class::PullRpcs);
-    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    let s = actor_of(&mut r.engine, r.source).source_as::<PullSource>().unwrap();
     assert_eq!(rpcs, s.pulls_issued());
 }
 
@@ -176,7 +219,7 @@ fn pull_source_backs_off_when_caught_up() {
     // and issues empty polls paced by pull_timeout.
     let mut r = rig("pull", 1024, 1 << 20);
     r.engine.run_until(SECOND);
-    let s = r.engine.actor_as::<PullSource>(r.source).unwrap();
+    let s = actor_of(&mut r.engine, r.source).source_as::<PullSource>().unwrap();
     assert!(s.empty_pulls() > 0, "must hit empty polls");
 }
 
@@ -184,7 +227,7 @@ fn pull_source_backs_off_when_caught_up() {
 fn push_group_consumes_objects() {
     let mut r = rig("push", 4096, 64 * 1024);
     r.engine.run_until(SECOND);
-    let g = r.engine.actor_as::<PushSourceGroup>(r.source).unwrap();
+    let g = actor_of(&mut r.engine, r.source).source_as::<PushSourceGroup>().unwrap();
     assert!(g.is_subscribed());
     assert!(g.objects_consumed() > 5, "objects {}", g.objects_consumed());
     assert!(g.records_consumed() > 10_000);
@@ -200,7 +243,7 @@ fn push_objects_are_filled_and_reused() {
     let mut r = rig("push", 4096, 64 * 1024);
     r.engine.run_until(SECOND);
     let filled = r.metrics.borrow().total(Class::ObjectsFilled);
-    let g = r.engine.actor_as::<PushSourceGroup>(r.source).unwrap();
+    let g = actor_of(&mut r.engine, r.source).source_as::<PushSourceGroup>().unwrap();
     // every filled object is eventually consumed (within one in flight)
     assert!(filled >= g.objects_consumed());
     assert!(filled <= g.objects_consumed() + 4 + 1, "bounded in-flight");
@@ -210,9 +253,9 @@ fn push_objects_are_filled_and_reused() {
 fn native_consumer_keeps_up_with_producer() {
     let mut r = rig("native", 4096, 64 * 1024);
     r.engine.run_until(SECOND);
-    let n = r.engine.actor_as::<NativeConsumer>(r.source).unwrap();
+    let consumed =
+        actor_of(&mut r.engine, r.source).source_as::<NativeConsumer>().unwrap().records_consumed();
     let produced = r.metrics.borrow().total(Class::ProducerRecords);
-    let consumed = n.records_consumed();
     assert!(
         consumed as f64 > produced as f64 * 0.8,
         "native keeps up (paper Fig. 7): {consumed} vs {produced}"
@@ -223,16 +266,110 @@ fn native_consumer_keeps_up_with_producer() {
 
 #[test]
 fn consumption_never_exceeds_production() {
-    for mode in ["pull", "push", "native"] {
+    // The uniform trait API replaces the old per-type downcast chain.
+    for mode in ["pull", "push", "native", "hybrid"] {
         let mut r = rig(mode, 16 * 1024, 64 * 1024);
         r.engine.run_until(SECOND);
         let produced = r.metrics.borrow().total(Class::ProducerRecords);
-        let consumed = match mode {
-            "pull" => r.engine.actor_as::<PullSource>(r.source).unwrap().records_consumed(),
-            "push" => r.engine.actor_as::<PushSourceGroup>(r.source).unwrap().records_consumed(),
-            _ => r.engine.actor_as::<NativeConsumer>(r.source).unwrap().records_consumed(),
-        };
+        let consumed = actor_of(&mut r.engine, r.source).stats().records_consumed;
         assert!(consumed <= produced, "{mode}: {consumed} <= {produced}");
         assert!(consumed > 0, "{mode}: progress");
     }
+}
+
+#[test]
+fn trait_stats_match_concrete_getters() {
+    // `SourceStats` parity with the old per-type getters, through the
+    // type-erased `SourceActor` the launcher uses.
+    for mode in ["pull", "push", "native", "hybrid"] {
+        let mut r = rig(mode, 4096, 64 * 1024);
+        r.engine.run_until(SECOND / 2);
+        let actor = actor_of(&mut r.engine, r.source);
+        let stats = actor.stats();
+        match mode {
+            "pull" => {
+                let s = actor.source_as::<PullSource>().unwrap();
+                assert_eq!(stats.records_consumed, s.records_consumed());
+                assert_eq!(stats.pulls_issued, s.pulls_issued());
+                assert_eq!(stats.empty_pulls, s.empty_pulls());
+                assert_eq!(stats.threads, 2);
+                assert!(stats.extras.is_empty());
+            }
+            "push" => {
+                let g = actor.source_as::<PushSourceGroup>().unwrap();
+                assert_eq!(stats.records_consumed, g.records_consumed());
+                assert_eq!(stats.extra(StatKey::ObjectsConsumed), g.objects_consumed());
+                assert_eq!(stats.extra(StatKey::Subscribed), g.is_subscribed() as u64);
+                assert_eq!(stats.pulls_issued, 0);
+                assert_eq!(stats.threads, 2);
+            }
+            "native" => {
+                let n = actor.source_as::<NativeConsumer>().unwrap();
+                assert_eq!(stats.records_consumed, n.records_consumed());
+                assert_eq!(stats.pulls_issued, n.pulls_issued());
+                assert_eq!(stats.empty_pulls, n.empty_pulls());
+                assert_eq!(stats.extra(StatKey::Matches), n.matches());
+                assert_eq!(stats.threads, 1);
+            }
+            _ => {
+                let h = actor.source_as::<HybridSource>().unwrap();
+                assert_eq!(stats.records_consumed, h.records_consumed());
+                assert_eq!(stats.pulls_issued, h.pulls_issued());
+                assert_eq!(stats.extra(StatKey::SwitchesToPush), h.switches_to_push());
+                assert_eq!(stats.extra(StatKey::SwitchesToPull), h.switches_to_pull());
+                assert_eq!(stats.threads, 2);
+            }
+        }
+        assert!(stats.records_consumed > 0, "{mode}: progress");
+        // Wrong-type downcasts fail loudly rather than silently.
+        assert!(actor.source_as::<crate::producer::Producer>().is_none());
+    }
+}
+
+#[test]
+fn hybrid_switches_on_sustained_empty_polls_and_falls_back_after_cooldown() {
+    // No producer at all: every pull comes back empty, so the source must
+    // switch to push; the push path then starves, so after the cooldown it
+    // must fall back — and keep cycling with hysteresis.
+    let tuning = HybridTuning {
+        window_polls: 4,
+        empty_permille: 500,
+        rpc_latency_ns: Time::MAX, // only the empty-poll signal fires
+        cooldown_ns: 1_000_000,    // 1 ms dwell
+        idle_timeout_ns: 10_000_000, // 10 ms without objects = starved
+    };
+    let mut r = rig_opts("hybrid", 4096, 64 * 1024, false, Some(tuning));
+    r.engine.run_until(SECOND);
+    let h = actor_of(&mut r.engine, r.source).source_as::<HybridSource>().unwrap();
+    assert!(h.empty_pulls() >= 4, "polls stayed empty: {}", h.empty_pulls());
+    assert!(h.switches_to_push() >= 1, "sustained empty polls must switch to push");
+    assert!(h.switches_to_pull() >= 1, "a starved push phase must fall back after cooldown");
+    // Hysteresis: each direction needs a full window + cooldown, so the
+    // cycle count stays bounded well below the raw poll count.
+    assert!(h.switches_to_push() <= 1 + h.switches_to_pull());
+    assert_eq!(h.records_consumed(), 0, "no data existed to consume");
+}
+
+#[test]
+fn hybrid_switch_preserves_data_flow() {
+    // Force the contention signal (any RPC round-trip beats 1 ns) so the
+    // source switches while data is flowing, then verify the push phase
+    // carries the stream: objects consumed, conservation holds.
+    let tuning = HybridTuning {
+        window_polls: 4,
+        empty_permille: 1000, // empty-poll signal effectively off
+        rpc_latency_ns: 1,
+        cooldown_ns: 0,
+        idle_timeout_ns: SECOND, // never starved within the run
+    };
+    let mut r = rig_opts("hybrid", 4096, 64 * 1024, true, Some(tuning));
+    r.engine.run_until(SECOND);
+    let produced = r.metrics.borrow().total(Class::ProducerRecords);
+    let h = actor_of(&mut r.engine, r.source).source_as::<HybridSource>().unwrap();
+    assert_eq!(h.switches_to_push(), 1, "exactly one switch, no fallback");
+    assert!(h.is_pushing(), "stays on the push path");
+    assert!(h.pulls_issued() >= 4, "pulled through the monitoring window first");
+    assert!(h.objects_consumed() > 0, "push phase served shared objects");
+    assert!(h.records_consumed() > 10_000, "stream kept flowing across the switch");
+    assert!(h.records_consumed() <= produced, "no duplication across the hand-off");
 }

@@ -4,7 +4,10 @@
 //! proof that Layer 3 (rust broker/sources/worker), Layer 2 (JAX graphs)
 //! and Layer 1 (Pallas kernels) compose: real bytes flow producer →
 //! broker log → source → PJRT kernel → keyed state, and every count is
-//! validated against an independent oracle.
+//! validated against an independent oracle. They only exist in `--features
+//! xla` builds; the default (sim-plane) build compiles this file empty.
+
+#![cfg(feature = "xla")]
 
 use std::rc::Rc;
 
