@@ -1,0 +1,12 @@
+//! Regenerates the write-path ablation: the three producer backends
+//! (sync / pipelined / sharedmem) against the pull/push/hybrid sources on
+//! the Fig. 3 ingestion workload. See experiments::ablation_writepath.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::ablation_writepath(
+        common::bench_duration(),
+        &common::chunk_sweep(),
+    );
+    common::run(&spec);
+}

@@ -18,7 +18,12 @@
 //!   subscription RPC registers sources, then each free push thread picks
 //!   a runnable subscription round-robin, fills a free shared object with
 //!   the next chunks of one partition, seals it and notifies the source.
-//!   Backpressure is object exhaustion (plasma), not RPC pacing.
+//!   Backpressure is object exhaustion (plasma), not RPC pacing;
+//! * the **shared-memory write path** (`WriteMode::SharedMem`) mirrors
+//!   that for ingestion: a `WriteSubscribe` RPC registers a colocated
+//!   producer's object pool, and each `SealObject` notification makes a
+//!   worker core append the object's chunks to the logs — the payload
+//!   reaches the broker through plasma, never the wire.
 
 mod log;
 #[cfg(test)]
@@ -190,6 +195,22 @@ impl Broker {
                 c.rpc_base_ns + sources.len() as Time * c.rpc_base_ns
             }
             RpcKind::PushUnsubscribe { .. } => c.rpc_base_ns,
+            RpcKind::SealObject { id } => {
+                // Appending a sealed object is charged like the equivalent
+                // Append RPC: the payload still has to reach the log — what
+                // the shared-memory path saves is the wire transfer and the
+                // per-request producer round-trip, not the append work. A
+                // bad/stale object id costs the base handler time; the
+                // handler will reject it with an Error reply.
+                match self.store.borrow().sealed_info(*id) {
+                    Some((_, bytes, chunks)) => {
+                        c.rpc_base_ns + chunks as Time * c.append_chunk_ns
+                            + (bytes as f64 / c.append_bw_bps * 1e9) as Time
+                    }
+                    None => c.rpc_base_ns,
+                }
+            }
+            RpcKind::WriteSubscribe { .. } => 2 * c.rpc_base_ns,
             RpcKind::Replicate { bytes, chunks } => {
                 c.rpc_base_ns + *chunks as Time * c.append_chunk_ns
                     + (*bytes as f64 / c.append_bw_bps * 1e9) as Time
@@ -208,39 +229,200 @@ impl Broker {
         }
     }
 
+    /// Worker phase complete: hand off to the per-kind handler. One method
+    /// per RPC kind keeps the frontend dispatch flat as kinds accumulate
+    /// (the write path added two).
     fn on_worked(&mut self, id: u64, ctx: &mut Ctx<'_, Msg>) {
-        let mut rpc_ctx = self.ctxs.remove(&id).expect("ctx alive through work");
+        let rpc_ctx = self.ctxs.remove(&id).expect("ctx alive through work");
         let kind = rpc_ctx.req.kind.clone();
         match kind {
             RpcKind::Append { chunks } => self.finish_append(id, rpc_ctx, chunks, ctx),
             RpcKind::Pull { assignments, max_bytes } => {
-                let reply = self.do_pull(&assignments, max_bytes);
-                if let RpcReply::PullData { chunks } = &reply {
-                    rpc_ctx.reply_bytes = chunks.iter().map(|s| s.chunk.bytes()).sum();
-                    self.metrics.borrow_mut().record(
-                        Class::ConsumerBytes,
-                        self.entity,
-                        ctx.now(),
-                        rpc_ctx.reply_bytes,
-                    );
-                }
-                rpc_ctx.staged = Some(reply);
-                self.reply(rpc_ctx, ctx);
+                self.finish_pull(rpc_ctx, &assignments, max_bytes, ctx)
             }
             RpcKind::PushSubscribe { sources } => {
-                let reply = self.do_subscribe(&sources);
-                rpc_ctx.staged = Some(reply);
+                self.finish_push_subscribe(rpc_ctx, &sources, ctx)
+            }
+            RpcKind::PushUnsubscribe { sub } => self.finish_push_unsubscribe(rpc_ctx, sub, ctx),
+            RpcKind::WriteSubscribe { producer } => {
+                self.finish_write_subscribe(rpc_ctx, &producer, ctx)
+            }
+            RpcKind::SealObject { id: object } => self.finish_seal(id, rpc_ctx, object, ctx),
+            RpcKind::Replicate { .. } => self.finish_replicate(rpc_ctx, ctx),
+        }
+    }
+
+    fn finish_pull(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        assignments: &[(PartitionId, ChunkOffset)],
+        max_bytes: u64,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        let reply = self.do_pull(assignments, max_bytes);
+        if let RpcReply::PullData { chunks } = &reply {
+            rpc_ctx.reply_bytes = chunks.iter().map(|s| s.chunk.bytes()).sum();
+            self.metrics.borrow_mut().record(
+                Class::ConsumerBytes,
+                self.entity,
+                ctx.now(),
+                rpc_ctx.reply_bytes,
+            );
+        }
+        rpc_ctx.staged = Some(reply);
+        self.reply(rpc_ctx, ctx);
+    }
+
+    fn finish_push_subscribe(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        sources: &[crate::proto::PushSourceSpec],
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        let reply = self.do_subscribe(sources);
+        rpc_ctx.staged = Some(reply);
+        self.reply(rpc_ctx, ctx);
+        self.schedule_push(ctx);
+    }
+
+    fn finish_push_unsubscribe(&mut self, mut rpc_ctx: RpcCtx, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        let reply = self.do_unsubscribe(sub);
+        rpc_ctx.staged = Some(reply);
+        self.reply(rpc_ctx, ctx);
+    }
+
+    fn finish_replicate(&mut self, mut rpc_ctx: RpcCtx, ctx: &mut Ctx<'_, Msg>) {
+        rpc_ctx.staged = Some(RpcReply::ReplicateAck);
+        self.reply(rpc_ctx, ctx);
+    }
+
+    /// Register a colocated producer's write-side object pool. Write
+    /// subscriptions carry no read cursors: they never enter the push
+    /// rotation and never pin retention.
+    fn finish_write_subscribe(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        spec: &crate::proto::WriteProducerSpec,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        for &p in &spec.partitions {
+            if !self.logs.contains_key(&p) {
+                rpc_ctx.staged = Some(RpcReply::Error { reason: format!("unknown partition {p}") });
                 self.reply(rpc_ctx, ctx);
+                return;
+            }
+        }
+        let sub = self.store.borrow_mut().create_subscription(
+            spec.producer_actor,
+            Vec::new(),
+            spec.objects,
+            spec.object_bytes,
+        );
+        rpc_ctx.staged = Some(RpcReply::WriteSubscribeAck { sub });
+        self.reply(rpc_ctx, ctx);
+    }
+
+    /// Validate-then-append one batch; returns `(records, bytes, chunks)`
+    /// or the first unknown partition, in which case NOTHING was appended —
+    /// the client's bounded retry must not duplicate a landed prefix.
+    fn append_chunks(
+        &mut self,
+        chunks: Vec<(PartitionId, Chunk)>,
+    ) -> Result<(u64, u64, u32), PartitionId> {
+        if let Some(bad) = chunks.iter().find(|(p, _)| !self.logs.contains_key(p)) {
+            return Err(bad.0);
+        }
+        let mut records = 0u64;
+        let mut bytes = 0u64;
+        let nchunks = chunks.len() as u32;
+        for (p, chunk) in chunks {
+            records += chunk.records as u64;
+            bytes += chunk.bytes();
+            self.logs.get_mut(&p).expect("validated above").append(chunk);
+        }
+        Ok((records, bytes, nchunks))
+    }
+
+    /// The shared tail of every ingesting handler: with a backup, forward
+    /// the payload as a nested Replicate RPC and hold the staged ack until
+    /// it round-trips; without one, ack immediately. Returns true when the
+    /// ack was held.
+    fn ack_after_replication(
+        &mut self,
+        id: u64,
+        rpc_ctx: RpcCtx,
+        bytes: u64,
+        nchunks: u32,
+        ctx: &mut Ctx<'_, Msg>,
+    ) -> bool {
+        let Some((backup_actor, backup_node)) = self.params.backup else {
+            self.reply(rpc_ctx, ctx);
+            return false;
+        };
+        let rid = self.next_client_rpc;
+        self.next_client_rpc += 1;
+        self.awaiting_backup.insert(rid, id);
+        self.ctxs.insert(id, rpc_ctx);
+        let deliver = self.net.borrow_mut().send(ctx.now(), self.params.node, backup_node, bytes);
+        ctx.send_at(
+            deliver,
+            backup_actor,
+            Msg::Rpc(RpcRequest {
+                id: rid,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Replicate { bytes, chunks: nchunks },
+            }),
+        );
+        true
+    }
+
+    /// A colocated producer sealed a shared object: append its chunks to
+    /// the partition logs (the worker-core service time was already
+    /// charged), replicate if configured, then release the buffer and ack.
+    fn finish_seal(
+        &mut self,
+        id: u64,
+        mut rpc_ctx: RpcCtx,
+        object: ObjectId,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        // A duplicate or stale notification (object unknown, already
+        // released) is a client error, not a broker panic.
+        if self.store.borrow().sealed_info(object).is_none() {
+            rpc_ctx.staged =
+                Some(RpcReply::Error { reason: format!("object {object:?} is not sealed") });
+            self.reply(rpc_ctx, ctx);
+            return;
+        }
+        let chunks: Vec<(PartitionId, Chunk)> = self
+            .store
+            .borrow()
+            .read(object)
+            .iter()
+            .map(|sc| (sc.partition, sc.chunk.clone()))
+            .collect();
+        match self.append_chunks(chunks) {
+            Err(p) => {
+                // The object stays sealed: the producer owns the retry (or
+                // reclaims the buffer after bounded retries).
+                rpc_ctx.staged =
+                    Some(RpcReply::Error { reason: format!("unknown partition {p}") });
+                self.reply(rpc_ctx, ctx);
+            }
+            Ok((records, bytes, nchunks)) => {
+                self.metrics
+                    .borrow_mut()
+                    .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
+                rpc_ctx.staged = Some(RpcReply::SealAck { records, bytes });
+                if !self.ack_after_replication(id, rpc_ctx, bytes, nchunks, ctx) {
+                    // No backup: the buffer is reusable right away. (With
+                    // one, on_backup_ack releases it — the ack doubles as
+                    // the durable-reuse signal.)
+                    self.store.borrow_mut().release(object);
+                }
+                // New data may unblock push subscriptions.
                 self.schedule_push(ctx);
-            }
-            RpcKind::PushUnsubscribe { sub } => {
-                let reply = self.do_unsubscribe(sub);
-                rpc_ctx.staged = Some(reply);
-                self.reply(rpc_ctx, ctx);
-            }
-            RpcKind::Replicate { .. } => {
-                rpc_ctx.staged = Some(RpcReply::ReplicateAck);
-                self.reply(rpc_ctx, ctx);
             }
         }
     }
@@ -254,56 +436,22 @@ impl Broker {
         chunks: Vec<(PartitionId, Chunk)>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
-        let mut records = 0u64;
-        let mut bytes = 0u64;
-        let nchunks = chunks.len() as u32;
-        for (p, chunk) in chunks {
-            records += chunk.records as u64;
-            bytes += chunk.bytes();
-            match self.logs.get_mut(&p) {
-                Some(log) => {
-                    log.append(chunk);
-                }
-                None => {
-                    rpc_ctx.staged =
-                        Some(RpcReply::Error { reason: format!("unknown partition {p}") });
-                    self.reply(rpc_ctx, ctx);
-                    return;
-                }
+        match self.append_chunks(chunks) {
+            Err(p) => {
+                rpc_ctx.staged =
+                    Some(RpcReply::Error { reason: format!("unknown partition {p}") });
+                self.reply(rpc_ctx, ctx);
+            }
+            Ok((records, bytes, nchunks)) => {
+                self.metrics
+                    .borrow_mut()
+                    .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
+                rpc_ctx.staged = Some(RpcReply::AppendAck { records, bytes });
+                self.ack_after_replication(id, rpc_ctx, bytes, nchunks, ctx);
+                // New data may unblock push subscriptions.
+                self.schedule_push(ctx);
             }
         }
-        self.metrics
-            .borrow_mut()
-            .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
-        rpc_ctx.staged = Some(RpcReply::AppendAck { records, bytes });
-
-        if let Some((backup_actor, backup_node)) = self.params.backup {
-            // Nested replicate RPC; the producer's ack waits for it.
-            let rid = self.next_client_rpc;
-            self.next_client_rpc += 1;
-            self.awaiting_backup.insert(rid, id);
-            self.ctxs.insert(id, rpc_ctx);
-            let deliver = self.net.borrow_mut().send(
-                ctx.now(),
-                self.params.node,
-                backup_node,
-                bytes,
-            );
-            ctx.send_at(
-                deliver,
-                backup_actor,
-                Msg::Rpc(RpcRequest {
-                    id: rid,
-                    reply_to: ctx.self_id(),
-                    from_node: self.params.node,
-                    kind: RpcKind::Replicate { bytes, chunks: nchunks },
-                }),
-            );
-        } else {
-            self.reply(rpc_ctx, ctx);
-        }
-        // New data may unblock push subscriptions.
-        self.schedule_push(ctx);
     }
 
     fn do_pull(&mut self, assignments: &[(PartitionId, ChunkOffset)], max_bytes: u64) -> RpcReply {
@@ -385,13 +533,19 @@ impl Broker {
         );
     }
 
-    /// Backup acked a replicate: release the held producer append.
+    /// Backup acked a replicate: release the held producer append. A held
+    /// seal additionally returns its shared object to the free pool now —
+    /// reuse before replication would hand the producer a buffer whose
+    /// data is not durable yet.
     fn on_backup_ack(&mut self, rid: RpcId, ctx: &mut Ctx<'_, Msg>) {
         let id = self
             .awaiting_backup
             .remove(&rid)
             .expect("replicate ack matches a held append");
         let rpc_ctx = self.ctxs.remove(&id).expect("held append ctx");
+        if let RpcKind::SealObject { id: object } = rpc_ctx.req.kind {
+            self.store.borrow_mut().release(object);
+        }
         self.reply(rpc_ctx, ctx);
     }
 

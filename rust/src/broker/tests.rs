@@ -100,6 +100,37 @@ mod log_tests {
         assert_eq!(err.start, 4);
         assert!(err.to_string().contains("trimmed"));
     }
+
+    #[test]
+    fn trim_crosses_multiple_segment_boundaries() {
+        // 10 chunks of 100 B into 200 B segments: 5 segments of 2 chunks.
+        let mut log = log_with(10, 1, 100, 200);
+        assert_eq!(log.resident_segments(), 5);
+        // Watermark 7 clears segments [0,1], [2,3], [4,5] — three whole
+        // segments — but not [6,7], which the watermark splits.
+        let reclaimed = log.trim_below(7);
+        assert_eq!(reclaimed, 600);
+        assert_eq!(log.start(), 6);
+        assert_eq!(log.resident_segments(), 2);
+        // Reads straddling the trim point: behind errors, at/after works.
+        assert_eq!(log.read_from(5, 1000).unwrap_err().start, 6);
+        let ok = log.read_from(6, 1000).unwrap();
+        assert_eq!(ok.first().unwrap().offset, 6);
+        assert_eq!(ok.len(), 4);
+        // A later, higher watermark keeps trimming incrementally.
+        assert_eq!(log.trim_below(9), 200);
+        assert_eq!(log.start(), 8);
+    }
+
+    #[test]
+    fn trim_is_idempotent_and_monotone() {
+        let mut log = log_with(8, 1, 100, 200);
+        assert_eq!(log.trim_below(4), 400);
+        assert_eq!(log.trim_below(4), 0, "re-trimming the same watermark is free");
+        assert_eq!(log.trim_below(2), 0, "a regressing watermark never un-trims");
+        assert_eq!(log.start(), 4);
+        assert_eq!(log.available_from(0), 4, "only retained chunks count");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -611,5 +642,349 @@ fn producer_bytes_metric_recorded() {
     assert_eq!(
         r.metrics.borrow().total(crate::metrics::Class::ProducerBytes),
         4 * 100 * 100
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory write path: WriteSubscribe + SealObject
+// ---------------------------------------------------------------------------
+
+fn write_subscribe_req(r: &Rig, id: RpcId, parts: &[usize], objects: usize) -> Msg {
+    Msg::Rpc(RpcRequest {
+        id,
+        reply_to: r.probe,
+        from_node: 0,
+        kind: RpcKind::WriteSubscribe {
+            producer: WriteProducerSpec {
+                producer_actor: r.probe,
+                partitions: parts.iter().map(|&p| PartitionId(p)).collect(),
+                objects,
+                object_bytes: 64 * 1024,
+            },
+        },
+    })
+}
+
+/// Run the subscription handshake and return the granted SubId.
+fn write_sub(r: &mut Rig, parts: &[usize], objects: usize) -> SubId {
+    r.engine.schedule(0, r.broker, write_subscribe_req(r, 1, parts, objects));
+    r.engine.run_until(10 * MICROS);
+    let reps = replies(&r.inbox);
+    match reps.last().expect("subscribe acked").1.reply {
+        RpcReply::WriteSubscribeAck { sub } => sub,
+        ref other => panic!("expected WriteSubscribeAck, got {other:?}"),
+    }
+}
+
+#[test]
+fn write_subscribe_allocates_a_pool() {
+    let mut r = rig(|_| {});
+    let sub = write_sub(&mut r, &[0, 1], 3);
+    let store = r.store.borrow();
+    assert!(store.has_free(sub), "objects start free");
+    assert_eq!(store.reserved_bytes(), 3 * 64 * 1024);
+    assert!(
+        store.subscription(sub).cursors.is_empty(),
+        "write pools carry no read cursors (never pin retention)"
+    );
+}
+
+#[test]
+fn write_subscribe_of_unknown_partition_errors() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(0, r.broker, write_subscribe_req(&r, 1, &[0, 9], 2));
+    r.engine.run_until(10 * MICROS);
+    let reps = replies(&r.inbox);
+    assert!(
+        matches!(&reps[0].1.reply, RpcReply::Error { reason } if reason.contains("unknown")),
+        "{reps:?}"
+    );
+    assert_eq!(r.store.borrow().reserved_bytes(), 0, "no pool for a rejected spec");
+}
+
+fn seal_req(r: &Rig, id: RpcId, object: crate::proto::ObjectId) -> Msg {
+    Msg::Rpc(RpcRequest {
+        id,
+        reply_to: r.probe,
+        from_node: 0,
+        kind: RpcKind::SealObject { id: object },
+    })
+}
+
+/// Acquire + fill + seal one object the way the colocated producer does.
+fn fill_object(r: &Rig, sub: SubId, parts: &[usize], records: u32) -> crate::proto::ObjectId {
+    let mut store = r.store.borrow_mut();
+    let object = store.acquire(sub).expect("a free object");
+    let content = parts
+        .iter()
+        .map(|&p| StampedChunk {
+            partition: PartitionId(p),
+            offset: 0, // placeholder: the broker assigns log offsets
+            chunk: Chunk::sim(records, 100),
+        })
+        .collect();
+    store.seal(object, content);
+    object
+}
+
+#[test]
+fn seal_object_appends_releases_and_acks() {
+    let mut r = rig(|_| {});
+    let sub = write_sub(&mut r, &[0, 1], 1);
+    let object = fill_object(&r, sub, &[0, 1], 100);
+    assert!(!r.store.borrow().has_free(sub), "the only object is sealed");
+    r.engine.schedule(20 * MICROS, r.broker, seal_req(&r, 2, object));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    let seal_ack = &reps.last().unwrap().1;
+    match seal_ack.reply {
+        RpcReply::SealAck { records, bytes } => {
+            assert_eq!(records, 200);
+            assert_eq!(bytes, 20_000);
+        }
+        ref other => panic!("expected SealAck, got {other:?}"),
+    }
+    // The chunks are in the logs at broker-assigned offsets...
+    let b = r.engine.actor_as::<Broker>(r.broker).unwrap();
+    assert_eq!(b.partition(PartitionId(0)).unwrap().total_appended_records(), 100);
+    assert_eq!(b.partition(PartitionId(1)).unwrap().total_appended_records(), 100);
+    // ...and the buffer is reusable.
+    assert!(r.store.borrow().has_free(sub), "released for reuse");
+    assert_eq!(
+        r.metrics.borrow().total(crate::metrics::Class::ProducerBytes),
+        20_000,
+        "seal appends count as producer ingest"
+    );
+}
+
+#[test]
+fn seal_of_unknown_partition_errors_and_keeps_the_object() {
+    let mut r = rig(|_| {});
+    let sub = write_sub(&mut r, &[0], 1);
+    // A mixed object: valid p0 plus unknown p9. Nothing may be appended —
+    // the producer retries the whole object, so a landed prefix would be
+    // duplicated.
+    let object = fill_object(&r, sub, &[0, 9], 10);
+    r.engine.schedule(20 * MICROS, r.broker, seal_req(&r, 2, object));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert!(
+        matches!(&reps.last().unwrap().1.reply, RpcReply::Error { reason }
+            if reason.contains("unknown partition")),
+        "{reps:?}"
+    );
+    {
+        let b = r.engine.actor_as::<Broker>(r.broker).unwrap();
+        assert_eq!(
+            b.partition(PartitionId(0)).unwrap().total_appended_records(),
+            0,
+            "no valid-prefix append on a rejected object"
+        );
+    }
+    // The producer owns the retry: the object must still be sealed.
+    assert!(!r.store.borrow().has_free(sub));
+    assert_eq!(r.store.borrow().sealed_chunks(object), 2, "content intact for the retry");
+}
+
+#[test]
+fn stale_seal_notification_is_an_error_not_a_panic() {
+    let mut r = rig(|_| {});
+    let sub = write_sub(&mut r, &[0], 1);
+    let object = fill_object(&r, sub, &[0], 10);
+    r.engine.schedule(20 * MICROS, r.broker, seal_req(&r, 2, object));
+    // A duplicate notification for the same object, arriving after the
+    // broker appended and released it...
+    r.engine.schedule(SECOND / 2, r.broker, seal_req(&r, 3, object));
+    // ...and one for an object that never existed.
+    let bogus = ObjectId { sub: SubId(99), slot: 7 };
+    r.engine.schedule(SECOND / 2 + MICROS, r.broker, seal_req(&r, 4, bogus));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    let ack = reps.iter().find(|(_, e)| e.id == 2).expect("first seal served");
+    assert!(matches!(ack.1.reply, RpcReply::SealAck { .. }), "{ack:?}");
+    for id in [3u64, 4] {
+        let rep = reps.iter().find(|(_, e)| e.id == id).expect("stale seal answered");
+        assert!(
+            matches!(&rep.1.reply, RpcReply::Error { reason } if reason.contains("not sealed")),
+            "stale/bogus seal must be a protocol error, not a broker panic: {rep:?}"
+        );
+    }
+}
+
+#[test]
+fn append_with_any_unknown_partition_appends_nothing() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(0, r.broker, append_req(&r, 1, &[0, 9], 100, 100));
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert!(matches!(&reps[0].1.reply, RpcReply::Error { .. }), "{reps:?}");
+    let b = r.engine.actor_as::<Broker>(r.broker).unwrap();
+    assert_eq!(
+        b.partition(PartitionId(0)).unwrap().total_appended_records(),
+        0,
+        "the valid prefix must not land (a client retry would duplicate it)"
+    );
+}
+
+#[test]
+fn replicated_seal_releases_only_after_backup_ack() {
+    let mut engine = Engine::new(7);
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let store = ObjectStore::shared();
+    let metrics = MetricsHub::shared();
+    let backup = engine.add_actor(Box::new(Broker::new(
+        BrokerParams {
+            node: 2,
+            worker_cores: 4,
+            push_threads: 0,
+            segment_bytes: 8 << 20,
+            partitions: vec![],
+            backup: None,
+            is_backup: true,
+            cost: Default::default(),
+        },
+        net.clone(),
+        store.clone(),
+        metrics.clone(),
+        1,
+    )));
+    let primary = engine.add_actor(Box::new(Broker::new(
+        BrokerParams {
+            node: 0,
+            worker_cores: 4,
+            push_threads: 0,
+            segment_bytes: 8 << 20,
+            partitions: vec![PartitionId(0)],
+            backup: Some((backup, 2)),
+            is_backup: false,
+            cost: Default::default(),
+        },
+        net,
+        store.clone(),
+        metrics,
+        0,
+    )));
+    let inbox: Inbox = Rc::new(RefCell::new(Vec::new()));
+    let probe = engine.add_actor(Box::new(Probe { inbox: inbox.clone() }));
+    engine.schedule(
+        0,
+        primary,
+        Msg::Rpc(RpcRequest {
+            id: 1,
+            reply_to: probe,
+            from_node: 0,
+            kind: RpcKind::WriteSubscribe {
+                producer: WriteProducerSpec {
+                    producer_actor: probe,
+                    partitions: vec![PartitionId(0)],
+                    objects: 1,
+                    object_bytes: 64 * 1024,
+                },
+            },
+        }),
+    );
+    engine.run_until(10 * MICROS);
+    let sub = match replies(&inbox).last().expect("subscribed").1.reply {
+        RpcReply::WriteSubscribeAck { sub } => sub,
+        ref other => panic!("expected WriteSubscribeAck, got {other:?}"),
+    };
+    let object = {
+        let mut s = store.borrow_mut();
+        let object = s.acquire(sub).expect("free object");
+        s.seal(
+            object,
+            vec![StampedChunk {
+                partition: PartitionId(0),
+                offset: 0,
+                chunk: Chunk::sim(1000, 100),
+            }],
+        );
+        object
+    };
+    engine.schedule(
+        20 * MICROS,
+        primary,
+        Msg::Rpc(RpcRequest {
+            id: 2,
+            reply_to: probe,
+            from_node: 0,
+            kind: RpcKind::SealObject { id: object },
+        }),
+    );
+    engine.run_until(SECOND);
+    let reps = replies(&inbox);
+    let (t_ack, env) = reps.last().unwrap();
+    assert!(matches!(env.reply, RpcReply::SealAck { records: 1000, .. }), "{env:?}");
+    assert!(store.borrow().has_free(sub), "released after the backup round-trip");
+    // The ack must carry the backup's extra round-trip (node 0 <-> node 2).
+    assert!(*t_ack > 20 * MICROS + 10 * MICROS, "replicated seal ack at {t_ack}");
+}
+
+// ---------------------------------------------------------------------------
+// Watermark-driven retention at the broker (satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn watermark_trim_leaves_laggards_behind() {
+    // Tiny segments so retention actually rolls: 100-byte chunks into
+    // 1000-byte segments. A fast consumer advances the watermark past many
+    // sealed segments; the throttled trim (every 64 reads) then drops
+    // them, and a pull from offset 0 afterwards reports the trim instead
+    // of silently rereading.
+    let mut r = rig(|p| p.segment_bytes = 1000);
+    // 200 chunks on partition 0, appended in 4 RPCs of 50 chunks each.
+    for i in 0..4u64 {
+        r.engine.schedule(
+            i * 10 * MICROS,
+            r.broker,
+            Msg::Rpc(RpcRequest {
+                id: i,
+                reply_to: r.probe,
+                from_node: 1,
+                kind: RpcKind::Append {
+                    chunks: (0..50).map(|_| (PartitionId(0), Chunk::sim(1, 100))).collect(),
+                },
+            }),
+        );
+    }
+    // 70 fast-consumer pulls at offset 150: enough reads to pass the
+    // 64-read trim throttle with the watermark parked at 150.
+    for i in 0..70u64 {
+        r.engine.schedule(
+            (100 + i * 20) * MICROS,
+            r.broker,
+            Msg::Rpc(RpcRequest {
+                id: 100 + i,
+                reply_to: r.probe,
+                from_node: 1,
+                kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 150)], max_bytes: 100 },
+            }),
+        );
+    }
+    // The laggard wakes up at offset 0 after retention has moved on.
+    r.engine.schedule(
+        SECOND / 100,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 999,
+            reply_to: r.probe,
+            from_node: 1,
+            kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 0)], max_bytes: 100 },
+        }),
+    );
+    r.engine.run_until(SECOND);
+    {
+        let b = r.engine.actor_as::<Broker>(r.broker).unwrap();
+        assert!(b.trimmed_bytes() > 0, "segments were reclaimed");
+        let log = b.partition(PartitionId(0)).unwrap();
+        assert_eq!(log.start(), 150, "whole segments strictly below the watermark went");
+        assert_eq!(log.head(), 200);
+    }
+    let reps = replies(&r.inbox);
+    let laggard = reps.iter().find(|(_, env)| env.id == 999).expect("laggard answered");
+    assert!(
+        matches!(&laggard.1.reply, RpcReply::Error { reason } if reason.contains("trimmed")),
+        "a read behind the trim point surfaces TrimmedError: {:?}",
+        laggard.1
     );
 }

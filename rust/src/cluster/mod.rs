@@ -11,10 +11,12 @@
 //! workload (Listings 1 & 2), wires credits, registers everything in the
 //! task registry and returns a [`Cluster`] ready to `run`.
 //!
-//! Sources are built through the [`SourceRegistry`]: the launcher resolves
-//! `config.mode` to a [`crate::source::SourceFactory`] and never names a
-//! concrete source type — plug a new ingestion mechanism in by registering
-//! a factory and launching with [`launch_with`].
+//! Sources are built through the [`SourceRegistry`] and producers through
+//! the [`WriterRegistry`]: the launcher resolves `config.mode` to a
+//! [`crate::source::SourceFactory`] and `config.write_mode` to a
+//! [`crate::producer::WriterFactory`], and never names a concrete source
+//! or producer type — plug a new ingestion mechanism in by registering a
+//! factory and launching with [`launch_with`].
 
 #[cfg(test)]
 mod tests;
@@ -27,18 +29,15 @@ use crate::net::{Network, SharedNetwork};
 use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedSumOp};
 use crate::pipeline::{OpKind, Pipeline};
 use crate::plasma::{ObjectStore, SharedStore};
-use crate::producer::{Producer, ProducerParams, RecordGen};
+use crate::producer::{WriteStats, WriterActor, WriterRegistry, WriterWiring};
 use crate::proto::{Msg, PartitionId};
-use crate::sim::{ActorId, Engine, Rng, SECOND};
+use crate::sim::{ActorId, Engine, SECOND};
 use crate::source::{SourceActor, SourceRegistry, SourceStats, SourceWiring, StatKey};
-use crate::wikipedia::CorpusReader;
 use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
 
-/// The grep needle all filter benchmarks use (length must equal the
-/// `PATTERN_LEN` baked into the filter artifacts).
-pub const FILTER_NEEDLE: &[u8] = b"needle";
-/// Fraction of synthetic records carrying the needle, in permille.
-pub const PLANT_PERMILLE: u32 = 50;
+// The needle constants moved next to the generator that plants them; the
+// historic re-export keeps the public path alive.
+pub use crate::producer::{FILTER_NEEDLE, PLANT_PERMILLE};
 
 const NODE_COLOCATED: usize = 0;
 const NODE_PRODUCERS: usize = 1;
@@ -83,18 +82,23 @@ pub struct RunSummary {
     pub tuples_logged: u64,
     /// Aggregated per-source statistics (uniform across all modes).
     pub sources: SourceStats,
+    /// Aggregated per-writer statistics (uniform across all write modes).
+    pub writers: WriteStats,
 }
 
-/// Build a cluster from a config with the built-in source modes. `compute`
-/// is required for the real data plane (pass `None` on the sim plane).
+/// Build a cluster from a config with the built-in source and write modes.
+/// `compute` is required for the real data plane (pass `None` on the sim
+/// plane).
 pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Cluster {
-    launch_with(&SourceRegistry::builtin(), config, compute)
+    launch_with(&SourceRegistry::builtin(), &WriterRegistry::builtin(), config, compute)
 }
 
-/// Build a cluster resolving `config.mode` against a caller-supplied
-/// [`SourceRegistry`] — the pluggable path for out-of-tree source modes.
+/// Build a cluster resolving `config.mode` / `config.write_mode` against
+/// caller-supplied registries — the pluggable path for out-of-tree source
+/// or writer modes.
 pub fn launch_with(
     source_registry: &SourceRegistry,
+    writer_registry: &WriterRegistry,
     config: &ExperimentConfig,
     compute: Option<SharedCompute>,
 ) -> Cluster {
@@ -103,6 +107,7 @@ pub fn launch_with(
         assert!(compute.is_some(), "real data plane needs a compute engine");
     }
     let factory = source_registry.expect(config.mode);
+    let writer_factory = writer_registry.expect(config.write_mode);
     let mut engine = Engine::new(config.seed);
     let metrics = MetricsHub::shared();
     let net = Network::shared(config.cost.network, config.cost.loopback);
@@ -148,29 +153,18 @@ pub fn launch_with(
         0,
     )));
 
-    // ---- producers -----------------------------------------------------
-    let mut seed_rng = Rng::new(config.seed ^ 0x9D);
-    let producers: Vec<ActorId> = (0..config.np)
-        .map(|i| {
-            let gen = make_gen(config, &mut seed_rng);
-            engine.add_actor(Box::new(Producer::new(
-                ProducerParams {
-                    entity: i,
-                    node: NODE_PRODUCERS,
-                    broker,
-                    broker_node: NODE_COLOCATED,
-                    partitions: partitions.clone(),
-                    chunk_bytes: config.producer_chunk,
-                    record_size: config.record_size,
-                    cost: config.cost.clone(),
-                    data_plane: config.data_plane,
-                },
-                gen,
-                metrics.clone(),
-                net.clone(),
-            )))
-        })
-        .collect();
+    // ---- producers (one generic path through the writer registry) -------
+    let writer_wiring = WriterWiring {
+        config,
+        producer_node: NODE_PRODUCERS,
+        broker,
+        broker_node: NODE_COLOCATED,
+        partitions: partitions.clone(),
+        metrics: metrics.clone(),
+        net: net.clone(),
+        store: store.clone(),
+    };
+    let producers = writer_factory.build(&writer_wiring, &mut engine);
 
     // ---- pipeline tasks (not for engine-less modes) ---------------------
     let mut tasks = Vec::new();
@@ -240,32 +234,6 @@ pub fn launch_with(
     }
 }
 
-fn make_gen(config: &ExperimentConfig, seed_rng: &mut Rng) -> RecordGen {
-    match (config.data_plane, config.workload.is_text()) {
-        (DataPlane::Sim, false) => RecordGen::Sim,
-        (DataPlane::Sim, true) if config.corpus_records > 0 => {
-            // Bounded sim text producers mimic the Fig. 9 setup without
-            // payloads: emulate the budget with a bounded corpus of sim
-            // chunks — handled by Producer via Corpus with zero-copy?
-            // Simplest faithful form: a corpus reader budget with sim-sized
-            // records would still materialise text; keep payloads real only
-            // when the plane is real, and bound sim runs by duration.
-            RecordGen::Sim
-        }
-        (DataPlane::Sim, true) => RecordGen::Sim,
-        (DataPlane::Real, false) => RecordGen::Synthetic {
-            rng: seed_rng.fork(),
-            needle: FILTER_NEEDLE.to_vec(),
-            plant_permille: PLANT_PERMILLE,
-            planted: 0,
-        },
-        (DataPlane::Real, true) => {
-            let budget = if config.corpus_records > 0 { config.corpus_records } else { u64::MAX };
-            RecordGen::Corpus(CorpusReader::new(config.record_size, budget))
-        }
-    }
-}
-
 fn make_op(
     kind: OpKind,
     config: &ExperimentConfig,
@@ -323,15 +291,17 @@ impl Cluster {
         let records_consumed = source_stats.records_consumed;
         let mut matches = source_stats.extra(StatKey::Matches);
         let source_threads = source_stats.threads;
-        // Producer totals.
-        let mut records_produced = 0;
-        let mut planted = 0;
+        // Producer totals, through the uniform write-path trait API — the
+        // same hard-error contract as the sources.
+        let mut writer_stats = WriteStats::default();
         for &pid in &self.producers {
-            if let Some(p) = self.engine.actor_as::<Producer>(pid) {
-                records_produced += p.records_sent();
-                planted += p.planted();
-            }
+            let actor = self.engine.actor_as::<WriterActor>(pid).unwrap_or_else(|| {
+                panic!("producer {pid} was not built through the WriterFactory registry")
+            });
+            writer_stats.merge(&actor.stats());
         }
+        let records_produced = writer_stats.records_sent;
+        let planted = writer_stats.planted;
         // Operator state (matches, windows).
         let mut windows_fired = 0;
         for &tid in &self.tasks {
@@ -347,6 +317,11 @@ impl Cluster {
         {
             let mut m = self.metrics.borrow_mut();
             m.set_gauge("source_threads", source_threads as f64);
+            m.set_gauge("writer_threads", writer_stats.threads as f64);
+            m.set_gauge(
+                "write_append_latency_us",
+                writer_stats.mean_append_ns() as f64 / 1e3,
+            );
             m.set_gauge(
                 "slots_used",
                 self.pipeline.as_ref().map(|p| p.slots_used()).unwrap_or(self.config.nc) as f64,
@@ -378,6 +353,7 @@ impl Cluster {
             objects_filled: metrics.total(Class::ObjectsFilled),
             tuples_logged: metrics.total(Class::ConsumerTuples),
             sources: source_stats,
+            writers: writer_stats,
         }
     }
 }

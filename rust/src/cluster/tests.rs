@@ -1,7 +1,8 @@
 //! Launcher tests: full clusters on the sim plane.
 
 use super::*;
-use crate::config::{parse_overrides, ExperimentConfig};
+use crate::config::{parse_overrides, ExperimentConfig, WriteMode};
+use crate::producer::{WriteStatKey, WriterRegistry};
 use crate::source::{SourceRegistry, StatKey};
 
 fn cfg(overrides: &[&str]) -> ExperimentConfig {
@@ -100,7 +101,114 @@ fn all_builtin_modes_run_through_the_registry() {
 #[should_panic(expected = "no source factory registered")]
 fn unregistered_mode_is_a_hard_error() {
     let config = cfg(&["mode=push", "np=1", "nc=1", "ns=2"]);
-    launch_with(&SourceRegistry::empty(), &config, None);
+    launch_with(&SourceRegistry::empty(), &WriterRegistry::builtin(), &config, None);
+}
+
+#[test]
+#[should_panic(expected = "no writer factory registered")]
+fn unregistered_write_mode_is_a_hard_error() {
+    let config = cfg(&["mode=push", "np=1", "nc=1", "ns=2"]);
+    launch_with(&SourceRegistry::builtin(), &WriterRegistry::empty(), &config, None);
+}
+
+#[test]
+fn all_builtin_write_modes_run_through_the_registry() {
+    for wmode in WriteMode::ALL {
+        let kv = format!("write_mode={}", wmode.name());
+        let summary = launch(&cfg(&[kv.as_str(), "np=2", "nc=2", "ns=4"]), None).run();
+        assert!(summary.records_produced > 0, "{}: progress", wmode.name());
+        assert!(summary.records_consumed > 0, "{}: consumers fed", wmode.name());
+        assert!(summary.writers.appends_acked > 0, "{}: acks accounted", wmode.name());
+        assert!(summary.writers.mean_append_ns() > 0, "{}: latency measured", wmode.name());
+        assert!(summary.writers.threads > 0, "{}: threads accounted", wmode.name());
+        assert_eq!(summary.writers.extra(WriteStatKey::Errors), 0, "{}", wmode.name());
+        assert_eq!(
+            summary.report.gauge("writer_threads"),
+            Some(summary.writers.threads as f64)
+        );
+    }
+}
+
+#[test]
+fn pipelined_writer_outpaces_sync_on_the_ingestion_workload() {
+    // Fig. 3 shape: small chunks make the sync round-trip the bottleneck;
+    // overlapping appends must raise ingestion throughput.
+    let sync = launch(&cfg(&["write_mode=sync", "np=2", "nc=1", "ns=8", "cs=2KiB"]), None).run();
+    let pipe = launch(
+        &cfg(&["write_mode=pipelined", "write_inflight=8", "np=2", "nc=1", "ns=8", "cs=2KiB"]),
+        None,
+    )
+    .run();
+    assert!(
+        pipe.records_produced as f64 > sync.records_produced as f64 * 1.2,
+        "pipelining must overlap round-trips: sync {} vs pipelined {}",
+        sync.records_produced,
+        pipe.records_produced
+    );
+}
+
+#[test]
+fn write_modes_deliver_identical_bounded_totals() {
+    // The acceptance gate: on a bounded ingestion workload every write
+    // mode delivers exactly the same records (no loss, no duplication),
+    // and the consumers drain all of them.
+    let mut totals = Vec::new();
+    for wmode in WriteMode::ALL {
+        let kv = format!("write_mode={}", wmode.name());
+        let mut c = cfg(&[kv.as_str(), "mode=pull", "np=2", "nc=2", "ns=4", "cs=4KiB"]);
+        c.corpus_records = 20_000; // per producer
+        c.duration_secs = 30; // long enough to drain after producers stop
+        let summary = launch(&c, None).run();
+        assert_eq!(
+            summary.records_produced,
+            2 * 20_000,
+            "{}: bounded producers send the full budget",
+            wmode.name()
+        );
+        assert_eq!(
+            summary.records_consumed, summary.records_produced,
+            "{}: consumers drain the bounded stream",
+            wmode.name()
+        );
+        totals.push(summary.records_produced);
+    }
+    assert!(totals.windows(2).all(|w| w[0] == w[1]), "identical across modes: {totals:?}");
+}
+
+#[test]
+fn sharedmem_writer_keeps_payload_off_the_wire() {
+    let sync = launch(&cfg(&["write_mode=sync", "np=2", "nc=2", "ns=4"]), None).run();
+    let shm = launch(&cfg(&["write_mode=sharedmem", "np=2", "nc=2", "ns=4"]), None).run();
+    let sync_wire = sync.report.gauge("cross_node_bytes").unwrap();
+    let shm_wire = shm.report.gauge("cross_node_bytes").unwrap();
+    assert!(
+        shm_wire < sync_wire * 0.1,
+        "colocated producers must not ship payloads cross-node: {shm_wire} vs {sync_wire}"
+    );
+    assert!(shm.writers.extra(WriteStatKey::ObjectsSealed) > 0);
+    assert_eq!(shm.writers.extra(WriteStatKey::Subscribed), 2, "both producers registered");
+}
+
+#[test]
+fn sharedmem_write_combines_with_push_sources() {
+    // Shared-memory ingestion and the read-side push subscription share
+    // the plasma store and the broker: both directions must make progress.
+    let summary =
+        launch(&cfg(&["write_mode=sharedmem", "mode=push", "np=2", "nc=2", "ns=4"]), None).run();
+    assert!(summary.records_produced > 0);
+    assert!(summary.objects_filled > 0, "read-side push objects still flow");
+    assert!(summary.records_consumed > 0);
+}
+
+#[test]
+fn replicated_sharedmem_appends_still_ack() {
+    let summary = launch(
+        &cfg(&["write_mode=sharedmem", "np=2", "nc=2", "ns=4", "replication=2"]),
+        None,
+    )
+    .run();
+    assert!(summary.records_produced > 0, "seals survive the backup round-trip");
+    assert!(summary.writers.mean_append_ns() > 0);
 }
 
 #[test]

@@ -54,6 +54,46 @@ impl SourceMode {
     }
 }
 
+/// Which write-path strategy producers use — the write-side mirror of
+/// [`SourceMode`] (the paper's "making room for higher ingestion").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WriteMode {
+    /// The paper's §V-A baseline: one synchronous Append RPC per request,
+    /// `generate → Append → wait ack`.
+    SyncRpc,
+    /// Asynchronous appends with a bounded in-flight window
+    /// (`write_inflight`). Per-partition sequence tracking detects acks
+    /// that complete out of send order (`acks_reordered`); the simulated
+    /// fabric is FIFO, so the log itself keeps send order.
+    Pipelined,
+    /// The push-source idea applied to ingestion: one `WriteSubscribe` RPC
+    /// registers the colocated producer, which fills free plasma objects
+    /// directly and notifies the broker to seal/append them. Backpressure
+    /// is object exhaustion, not RPC pacing.
+    SharedMem,
+}
+
+impl WriteMode {
+    pub const ALL: [WriteMode; 3] = [Self::SyncRpc, Self::Pipelined, Self::SharedMem];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" | "syncrpc" | "sync-rpc" => Some(Self::SyncRpc),
+            "pipelined" | "pipeline" | "async" => Some(Self::Pipelined),
+            "sharedmem" | "shared-mem" | "shm" => Some(Self::SharedMem),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SyncRpc => "sync",
+            Self::Pipelined => "pipelined",
+            Self::SharedMem => "sharedmem",
+        }
+    }
+}
+
 /// The benchmark applications of §V-B (Table II).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Workload {
@@ -140,6 +180,17 @@ pub struct ExperimentConfig {
     pub worker_slots: usize,
     /// Source strategy.
     pub mode: SourceMode,
+    /// Producer write-path strategy.
+    pub write_mode: WriteMode,
+    /// Pipelined writer: bounded in-flight append window (requests).
+    pub write_inflight: usize,
+    /// Shared-memory writer: objects per producer (backpressure window).
+    pub write_objects_per_producer: usize,
+    /// Writers: bounded retries before a rejected append is surfaced as a
+    /// `WriteError` (0 = fail on first rejection).
+    pub write_retry_max: u32,
+    /// Writers: backoff before each retry (µs).
+    pub write_retry_backoff_us: u64,
     /// Benchmark application.
     pub workload: Workload,
     /// Virtual run length in seconds (paper runs 60–180 s).
@@ -160,8 +211,11 @@ pub struct ExperimentConfig {
     pub window_slide_secs: u64,
     /// Inter-task queue capacity in batches (credits per upstream).
     pub queue_cap: usize,
-    /// Per-producer record budget for text workloads (the paper's
-    /// producers push ~2 GiB then stop); 0 = unbounded.
+    /// Per-producer record budget; 0 = unbounded. Bounds the real-plane
+    /// corpus readers (the paper's text producers push ~2 GiB then stop)
+    /// AND, when > 0, sim-plane generators of every workload
+    /// (`RecordGen::BoundedSim`) — that is what lets the write modes be
+    /// cross-checked on identical totals.
     pub corpus_records: u64,
     /// Hybrid: sliding window length, in completed pull RPCs, over which
     /// the source judges whether pulling still pays off.
@@ -199,6 +253,11 @@ impl Default for ExperimentConfig {
             broker_cores: 16,
             worker_slots: 16,
             mode: SourceMode::Pull,
+            write_mode: WriteMode::SyncRpc,
+            write_inflight: 4,
+            write_objects_per_producer: 4,
+            write_retry_max: 3,
+            write_retry_backoff_us: 100,
             workload: Workload::Count,
             duration_secs: 60,
             warmup_secs: 5,
@@ -278,6 +337,12 @@ impl ExperimentConfig {
         if self.window_slide_secs == 0 || self.window_size_secs < self.window_slide_secs {
             return Err("window size must be >= slide > 0".into());
         }
+        if self.write_inflight == 0 {
+            return Err("write_inflight must be positive".into());
+        }
+        if self.write_objects_per_producer == 0 {
+            return Err("write_objects_per_producer must be positive".into());
+        }
         if self.hybrid_window_polls == 0 {
             return Err("hybrid_window_polls must be positive".into());
         }
@@ -326,6 +391,21 @@ impl ExperimentConfig {
                 self.worker_slots = value.parse().map_err(|_| bad(key, value))?
             }
             "mode" => self.mode = SourceMode::parse(value).ok_or_else(|| bad(key, value))?,
+            "write_mode" | "wmode" => {
+                self.write_mode = WriteMode::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "write_inflight" => {
+                self.write_inflight = value.parse().map_err(|_| bad(key, value))?
+            }
+            "write_objects_per_producer" => {
+                self.write_objects_per_producer = value.parse().map_err(|_| bad(key, value))?
+            }
+            "write_retry_max" => {
+                self.write_retry_max = value.parse().map_err(|_| bad(key, value))?
+            }
+            "write_retry_backoff_us" => {
+                self.write_retry_backoff_us = value.parse().map_err(|_| bad(key, value))?
+            }
             "workload" => {
                 self.workload = Workload::parse(value).ok_or_else(|| bad(key, value))?
             }

@@ -158,6 +158,53 @@ mod experiment {
     }
 
     #[test]
+    fn write_mode_names_round_trip() {
+        for mode in WriteMode::ALL {
+            assert_eq!(WriteMode::parse(mode.name()), Some(mode), "{}", mode.name());
+        }
+        assert_eq!(WriteMode::parse("async"), Some(WriteMode::Pipelined));
+        assert_eq!(WriteMode::parse("shm"), Some(WriteMode::SharedMem));
+        assert_eq!(WriteMode::parse("sync-rpc"), Some(WriteMode::SyncRpc));
+        assert_eq!(WriteMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn write_config_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.write_mode, WriteMode::SyncRpc, "the paper's §V-A baseline by default");
+        let kv = parse_overrides([
+            "write_mode=pipelined",
+            "write_inflight=8",
+            "write_objects_per_producer=6",
+            "write_retry_max=5",
+            "write_retry_backoff_us=250",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.write_mode, WriteMode::Pipelined);
+        assert_eq!(cfg.write_inflight, 8);
+        assert_eq!(cfg.write_objects_per_producer, 6);
+        assert_eq!(cfg.write_retry_max, 5);
+        assert_eq!(cfg.write_retry_backoff_us, 250);
+        cfg.validate().unwrap();
+        // And the `wmode` shorthand through the file parser.
+        let kv = parse_kv_file("wmode = sharedmem\n").unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply(&kv).unwrap();
+        assert_eq!(cfg2.write_mode, WriteMode::SharedMem);
+    }
+
+    #[test]
+    fn validate_rejects_bad_write_params() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.write_inflight = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.write_objects_per_producer = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn unknown_key_is_error() {
         let mut cfg = ExperimentConfig::default();
         let kv = parse_overrides(["bogus=1"]).unwrap();

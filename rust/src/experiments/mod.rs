@@ -10,7 +10,7 @@
 mod tests;
 
 use crate::cluster::{launch, RunSummary};
-use crate::config::{ExperimentConfig, SourceMode, Workload};
+use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
 
 /// Chunk sizes the paper sweeps (KiB): "values=1,2,4,8,16,32,64,128".
 pub const CHUNK_SIZES_KIB: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
@@ -306,12 +306,58 @@ pub fn ablation_hybrid(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
     }
 }
 
+/// Ablation — the three write paths against the read-side modes on the
+/// Fig. 3 ingestion workload: Np=4 producers on 8 partitions, RecS=100B,
+/// sweeping CS, once on the unloaded 16-core broker and once on the
+/// constrained 4-core one where write RPCs and pull reads fight hardest.
+/// Reports per-mode ingestion throughput and append round-trip latency
+/// (`write_append_latency_us`); `sync` is the pre-refactor §V-A baseline.
+pub fn ablation_writepath(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
+    let mut rows = Vec::new();
+    for &nbc in &[16usize, 4] {
+        for &wmode in &WriteMode::ALL {
+            for &smode in &[SourceMode::Pull, SourceMode::Push, SourceMode::Hybrid] {
+                for &cs in chunk_sizes {
+                    let mut c = base(duration);
+                    c.np = 4;
+                    c.nc = 4;
+                    c.nmap = 8;
+                    c.ns = 8;
+                    c.producer_chunk = cs * 1024;
+                    c.consumer_chunk = 128 * 1024;
+                    c.record_size = 100;
+                    c.broker_cores = nbc;
+                    c.write_mode = wmode;
+                    c.mode = smode;
+                    c.workload = Workload::Count;
+                    c.name =
+                        format!("{}+{}-nbc{}/cs{}KiB", wmode.name(), smode.name(), nbc, cs);
+                    rows.push((c.name.clone(), c));
+                }
+            }
+        }
+    }
+    FigureSpec {
+        id: "ablation-writepath",
+        title: "Write paths (sync/pipelined/sharedmem) x sources (pull/push/hybrid), \
+                Fig. 3 ingestion workload",
+        expectation: "pipelined raises ingestion over sync (round-trips overlap) at the \
+                      cost of append latency under contention; sharedmem keeps latency \
+                      low and frees the wire, but its appends still compete on the \
+                      worker cores; sync matches the pre-refactor baseline",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
 
     // (0) the hybrid mode against its parents (quick chunk sweep).
     specs.push(ablation_hybrid(duration, &[4, 32, 128]));
+
+    // (0b) the write-path modes against the source modes (quick sweep).
+    specs.push(ablation_writepath(duration, &[4, 128]));
 
     // (a) push backpressure window: objects per source.
     let mut rows = Vec::new();
@@ -429,6 +475,15 @@ pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
     for (_label, config) in &spec.rows {
         let summary = launch(config, None).run();
         println!("   {}", summary.report.row());
+        if spec.id == "ablation-writepath" {
+            println!(
+                "      write[{}]: append latency {:>8.1} us  acked {}  errors {}",
+                config.write_mode.name(),
+                summary.report.gauge("write_append_latency_us").unwrap_or(0.0),
+                summary.writers.appends_acked,
+                summary.writers.extra(crate::producer::WriteStatKey::Errors),
+            );
+        }
         out.push(summary);
     }
     out

@@ -103,6 +103,47 @@ fn hybrid_ablation_sweeps_all_three_modes() {
 }
 
 #[test]
+fn writepath_ablation_sweeps_write_and_source_modes() {
+    let spec = ablation_writepath(10, &[4, 128]);
+    let wmodes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.write_mode.name()).collect();
+    for mode in ["sync", "pipelined", "sharedmem"] {
+        assert!(wmodes.contains(mode), "missing write mode {mode}");
+    }
+    let smodes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.mode.name()).collect();
+    for mode in ["pull", "push", "hybrid"] {
+        assert!(smodes.contains(mode), "missing source mode {mode}");
+    }
+    for (label, c) in &spec.rows {
+        c.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        // The Fig. 3 ingestion parameterisation.
+        assert_eq!(c.np, 4);
+        assert_eq!(c.ns, 8);
+        assert_eq!(c.record_size, 100);
+    }
+    // Both the unloaded and the constrained broker are swept.
+    assert!(spec.rows.iter().any(|(_, c)| c.broker_cores == 16));
+    assert!(spec.rows.iter().any(|(_, c)| c.broker_cores == 4));
+    // 2 NBc x 3 write modes x 3 source modes x 2 chunk sizes.
+    assert_eq!(spec.rows.len(), 2 * 3 * 3 * 2);
+}
+
+#[test]
+fn writepath_ablation_reports_append_latency() {
+    let mut spec = ablation_writepath(4, &[32]);
+    spec.rows.truncate(2);
+    let summaries = run_figure(&spec);
+    for s in &summaries {
+        assert!(s.report.producers.p50 > 0.0, "ingestion throughput reported");
+        assert!(
+            s.report.gauge("write_append_latency_us").unwrap_or(0.0) > 0.0,
+            "append latency reported"
+        );
+    }
+}
+
+#[test]
 fn table2_lists_all_benchmarks() {
     let t = table2();
     for fig in ["Fig.4", "Fig.5", "Fig.6", "Fig.7", "Fig.8", "Fig.9"] {

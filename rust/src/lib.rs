@@ -25,8 +25,21 @@
 //! `config.mode`: [`config::SourceMode::Pull`], `Push`, `NativePull`, or
 //! the adaptive [`config::SourceMode::Hybrid`], which starts pulling and
 //! hands off to the push subscription when writes starve its pull RPCs
-//! (see [`source::HybridSource`]). [`experiments`] regenerates every
-//! figure of the paper's evaluation plus the pull/push/hybrid ablation.
+//! (see [`source::HybridSource`]).
+//!
+//! The **write path** is the symmetric axis: producers are built through
+//! the [`producer::WriterRegistry`] behind the [`producer::WritePath`]
+//! trait, keyed by `config.write_mode` —
+//! [`config::WriteMode::SyncRpc`] (the paper's §V-A synchronous
+//! `generate → Append → ack` baseline), [`config::WriteMode::Pipelined`]
+//! (bounded in-flight append window with per-partition ack sequencing) or
+//! [`config::WriteMode::SharedMem`] (one `WriteSubscribe` RPC, then the
+//! colocated producer fills plasma objects the broker seals into the log —
+//! object exhaustion replaces RPC pacing as write backpressure). All
+//! writers report uniform [`producer::WriteStats`], retry rejected appends
+//! with bounded backoff and surface [`producer::WriteError`] instead of
+//! panicking. [`experiments`] regenerates every figure of the paper's
+//! evaluation plus the pull/push/hybrid and write-path ablations.
 
 pub mod config;
 pub mod sim;

@@ -13,6 +13,12 @@
 //! store is an in-process blackboard (`Rc<RefCell>`) with the same object
 //! lifecycle — substitution 2 in DESIGN.md §2. Chunk payloads are `Rc`ed
 //! buffers, so "filling" an object shares pointers exactly like Plasma.
+//!
+//! The shared-memory **write path** (`WriteMode::SharedMem`) reuses the
+//! identical lifecycle with the roles swapped: the colocated *producer*
+//! acquires/fills/seals objects and the *broker* reads, appends and
+//! releases them (write subscriptions carry no read cursors, so they never
+//! pin retention or enter the push rotation).
 
 #[cfg(test)]
 mod tests;
@@ -200,6 +206,27 @@ impl ObjectStore {
         let slot = &self.subs[id.sub.0].slots[id.slot];
         assert_eq!(slot.state, ObjectState::Sealed);
         (slot.records, slot.bytes)
+    }
+
+    /// Chunks inside a sealed object (the broker's per-chunk append
+    /// bookkeeping on the shared-memory write path is charged per chunk).
+    pub fn sealed_chunks(&self, id: ObjectId) -> u64 {
+        let slot = &self.subs[id.sub.0].slots[id.slot];
+        assert_eq!(slot.state, ObjectState::Sealed);
+        slot.content.len() as u64
+    }
+
+    /// `(records, bytes, chunks)` of a sealed object, or `None` when the
+    /// id is unknown or the object is not currently sealed. The broker's
+    /// `SealObject` validation peeks through this — a duplicate or stale
+    /// notification from a (possibly out-of-tree) writer must become an
+    /// `Error` reply, never a store panic.
+    pub fn sealed_info(&self, id: ObjectId) -> Option<(u64, u64, u64)> {
+        let slot = self.subs.get(id.sub.0)?.slots.get(id.slot)?;
+        if slot.state != ObjectState::Sealed {
+            return None;
+        }
+        Some((slot.records, slot.bytes, slot.content.len() as u64))
     }
 
     /// Source is done: buffer returns to the free pool (paper Step 4) —

@@ -1,0 +1,403 @@
+//! The unified write-path API: one trait, one stats shape, one registry.
+//!
+//! The mirror of [`crate::source::api`] on the ingestion side. The paper's
+//! central interference effect is producer write RPCs competing with pull
+//! reads on the broker's worker cores; studying the symmetric design space
+//! ("making room for higher ingestion") needs the write mechanism to be a
+//! pluggable framework component (the ingestion-framework argument of
+//! Marcu et al., 1812.04197, and Uber's connector registry, 2104.00087):
+//!
+//! * [`WritePath`] — the lifecycle + introspection contract every producer
+//!   backend implements; uniform [`WriteStats`] at end of run.
+//! * [`WriterActor`] — the type-erased actor the launcher registers, so
+//!   end-of-run stats extraction is one downcast with a hard error.
+//! * [`WriterFactory`] + [`WriterRegistry`] — pluggable construction keyed
+//!   by [`WriteMode`]; `cluster::launch` resolves the configured mode and
+//!   never names a concrete producer type.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use crate::config::{ExperimentConfig, WriteMode};
+use crate::metrics::SharedMetrics;
+use crate::net::{NodeId, SharedNetwork};
+use crate::plasma::SharedStore;
+use crate::proto::{Msg, PartitionId};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+
+/// Typed keys for the per-mode counters a [`WriteStats`] may carry beyond
+/// the uniform core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WriteStatKey {
+    /// Appends retried after a broker rejection.
+    Retries,
+    /// Appends abandoned after the bounded retries ran out.
+    Errors,
+    /// Acks that completed out of send order (pipelined mode; the
+    /// per-partition sequencing absorbs them without reordering the log).
+    AcksReordered,
+    /// Peak appends simultaneously in flight (pipelined mode).
+    InflightPeak,
+    /// Shared objects sealed and handed to the broker (shared-mem mode).
+    ObjectsSealed,
+    /// 1 while the writer holds a write subscription (shared-mem mode).
+    Subscribed,
+    /// Generation stalls on object exhaustion — the shared-memory
+    /// backpressure signal (shared-mem mode).
+    ObjectStalls,
+}
+
+impl WriteStatKey {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Retries => "retries",
+            Self::Errors => "errors",
+            Self::AcksReordered => "acks_reordered",
+            Self::InflightPeak => "inflight_peak",
+            Self::ObjectsSealed => "objects_sealed",
+            Self::Subscribed => "subscribed",
+            Self::ObjectStalls => "object_stalls",
+        }
+    }
+}
+
+/// The typed extension map for per-mode extras.
+pub type WriteStatExtras = BTreeMap<WriteStatKey, u64>;
+
+/// A rejected or failed append, surfaced instead of panicking so overload
+/// experiments keep running (satellite of the write-path redesign).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WriteError {
+    /// The broker refused the append (unknown partition, bad request) and
+    /// the bounded retries ran out.
+    Rejected { reason: String, attempts: u32 },
+    /// The write-subscription handshake failed (shared-mem mode).
+    SubscribeFailed { reason: String },
+}
+
+impl std::fmt::Display for WriteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Rejected { reason, attempts } => {
+                write!(f, "append rejected after {attempts} attempt(s): {reason}")
+            }
+            Self::SubscribeFailed { reason } => write!(f, "write subscribe failed: {reason}"),
+        }
+    }
+}
+
+/// Bounded retry/backoff for rejected appends, from the `write_retry_*`
+/// knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first rejection (0 = fail immediately).
+    pub max_retries: u32,
+    /// Backoff before each retry, in virtual ns.
+    pub backoff_ns: Time,
+}
+
+impl Default for RetryPolicy {
+    /// Derived from the config defaults — `write_retry_*` in
+    /// [`ExperimentConfig::default`] is the single source of truth.
+    fn default() -> Self {
+        Self::from_config(&ExperimentConfig::default())
+    }
+}
+
+impl RetryPolicy {
+    pub fn from_config(config: &ExperimentConfig) -> Self {
+        Self {
+            max_retries: config.write_retry_max,
+            backoff_ns: config.write_retry_backoff_us * crate::sim::MICROS,
+        }
+    }
+}
+
+/// The append accounting every writer backend shares: issue/ack counters,
+/// latency sums, and the bounded-retry decision for rejections. Keeping
+/// it in one struct keeps the three backends' `WriteStats` assembly from
+/// drifting.
+#[derive(Debug, Default)]
+pub(crate) struct WriteAccounting {
+    pub records_sent: u64,
+    pub bytes_sent: u64,
+    pub appends_issued: u64,
+    pub appends_acked: u64,
+    pub append_ns_total: u64,
+    pub retries: u64,
+    pub errors: u64,
+    pub last_error: Option<WriteError>,
+}
+
+impl WriteAccounting {
+    /// One append (or seal notification) went out — first send or retry.
+    pub fn on_issued(&mut self) {
+        self.appends_issued += 1;
+    }
+
+    /// One append was acked after `rtt_ns` of round-trip.
+    pub fn on_acked(&mut self, records: u64, bytes: u64, rtt_ns: Time) {
+        self.records_sent += records;
+        self.bytes_sent += bytes;
+        self.appends_acked += 1;
+        self.append_ns_total += rtt_ns;
+    }
+
+    /// Bounded-retry decision for a rejection at `attempts` tries so far:
+    /// `true` = retry (the caller re-transmits after its backoff timer),
+    /// `false` = give up, with the typed error recorded.
+    pub fn on_rejected(&mut self, retry: &RetryPolicy, attempts: u32, reason: String) -> bool {
+        if attempts <= retry.max_retries {
+            self.retries += 1;
+            true
+        } else {
+            self.errors += 1;
+            self.last_error = Some(WriteError::Rejected { reason, attempts });
+            false
+        }
+    }
+
+    /// Assemble the uniform stats; `Retries`/`Errors` extras come from
+    /// here, mode-specific extras from the caller.
+    pub fn stats(&self, planted: u64, threads: usize, mut extras: WriteStatExtras) -> WriteStats {
+        extras.insert(WriteStatKey::Retries, self.retries);
+        extras.insert(WriteStatKey::Errors, self.errors);
+        WriteStats {
+            records_sent: self.records_sent,
+            bytes_sent: self.bytes_sent,
+            appends_issued: self.appends_issued,
+            appends_acked: self.appends_acked,
+            append_ns_total: self.append_ns_total,
+            planted,
+            threads,
+            last_error: self.last_error.clone(),
+            extras,
+        }
+    }
+}
+
+/// Uniform end-of-run report every writer returns. Core counters cover the
+/// paper's ingestion-accounting axes; mode-specific numbers live in the
+/// typed `extras` map.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WriteStats {
+    /// Records acked by the broker (appended, and replicated if configured).
+    pub records_sent: u64,
+    /// Payload bytes acked.
+    pub bytes_sent: u64,
+    /// Append requests issued (RPCs or sealed objects, including retries).
+    pub appends_issued: u64,
+    /// Append requests acked.
+    pub appends_acked: u64,
+    /// Sum of append round-trip latencies (issue → ack), virtual ns.
+    pub append_ns_total: u64,
+    /// Needles planted by the synthetic generator (end-to-end checks).
+    pub planted: u64,
+    /// Threads the writer occupies — the write-side footprint axis.
+    pub threads: usize,
+    /// Most recent fatal error, if any append was abandoned.
+    pub last_error: Option<WriteError>,
+    /// Per-mode extras.
+    pub extras: WriteStatExtras,
+}
+
+impl WriteStats {
+    /// An extra counter, defaulting to 0 when the mode doesn't report it.
+    pub fn extra(&self, key: WriteStatKey) -> u64 {
+        self.extras.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Mean append round-trip latency in ns (0 before the first ack).
+    pub fn mean_append_ns(&self) -> u64 {
+        if self.appends_acked == 0 {
+            0
+        } else {
+            self.append_ns_total / self.appends_acked
+        }
+    }
+
+    /// Fold another writer's stats into this one (cluster aggregation).
+    pub fn merge(&mut self, other: &WriteStats) {
+        self.records_sent += other.records_sent;
+        self.bytes_sent += other.bytes_sent;
+        self.appends_issued += other.appends_issued;
+        self.appends_acked += other.appends_acked;
+        self.append_ns_total += other.append_ns_total;
+        self.planted += other.planted;
+        self.threads += other.threads;
+        if other.last_error.is_some() {
+            self.last_error = other.last_error.clone();
+        }
+        for (&k, &v) in &other.extras {
+            match k {
+                // Peaks don't add across writers; take the max.
+                WriteStatKey::InflightPeak => {
+                    let e = self.extras.entry(k).or_insert(0);
+                    *e = (*e).max(v);
+                }
+                _ => *self.extras.entry(k).or_insert(0) += v,
+            }
+        }
+    }
+}
+
+/// The contract every producer backend implements on top of being an
+/// actor. Wiring happens in the factory's `build`, the first generation in
+/// `Actor::on_start`; this trait adds the uniform introspection surface.
+pub trait WritePath: Actor<Msg> {
+    /// The mode this writer implements.
+    fn mode(&self) -> WriteMode;
+
+    /// Uniform end-of-run statistics.
+    fn stats(&self) -> WriteStats;
+}
+
+/// The type-erased writer actor the launcher registers with the engine.
+/// Stats extraction downcasts to this single concrete type — a producer
+/// that was not built through the registry is a hard error, not dropped
+/// ingestion totals.
+pub struct WriterActor {
+    inner: Box<dyn WritePath>,
+}
+
+impl WriterActor {
+    pub fn new(inner: Box<dyn WritePath>) -> Self {
+        Self { inner }
+    }
+
+    pub fn mode(&self) -> WriteMode {
+        self.inner.mode()
+    }
+
+    pub fn stats(&self) -> WriteStats {
+        self.inner.stats()
+    }
+
+    /// Borrow the wrapped writer as its concrete type (tests, examples).
+    pub fn writer_as<T: 'static>(&mut self) -> Option<&mut T> {
+        self.inner.as_any_mut()?.downcast_mut::<T>()
+    }
+}
+
+impl Actor<Msg> for WriterActor {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.inner.on_start(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        self.inner.on_event(msg, ctx);
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn Any> {
+        Some(self)
+    }
+}
+
+/// Everything a factory may need to wire its writers into a cluster. The
+/// launcher fills this once; factories take what their mode uses.
+pub struct WriterWiring<'a> {
+    pub config: &'a ExperimentConfig,
+    /// Node remote producers run on (the paper deploys producers separately
+    /// from the streaming architecture).
+    pub producer_node: NodeId,
+    pub broker: ActorId,
+    /// The broker's node — also the *colocated* node a shared-memory
+    /// writer must live on to reach the plasma store.
+    pub broker_node: NodeId,
+    /// Partitions producers append to (all `Ns` of the stream).
+    pub partitions: Vec<PartitionId>,
+    pub metrics: SharedMetrics,
+    pub net: SharedNetwork,
+    pub store: SharedStore,
+}
+
+/// The construction loop shared by the built-in factories: one writer per
+/// producer, each with a deterministic generator fork (the seed derivation
+/// lives here so every mode draws identical record streams — the
+/// cross-mode "identical totals / identical planted needles" checks
+/// depend on it), wrapped in a [`WriterActor`].
+pub(crate) fn build_writers(
+    w: &WriterWiring<'_>,
+    engine: &mut Engine<Msg>,
+    node: NodeId,
+    mut make: impl FnMut(super::ProducerParams, super::RecordGen) -> Box<dyn WritePath>,
+) -> Vec<ActorId> {
+    let mut seed_rng = crate::sim::Rng::new(w.config.seed ^ 0x9D);
+    (0..w.config.np)
+        .map(|i| {
+            let gen = super::make_gen(w.config, &mut seed_rng);
+            let params = super::ProducerParams::from_wiring(w, i, node);
+            engine.add_actor(Box::new(WriterActor::new(make(params, gen))))
+        })
+        .collect()
+}
+
+/// Builds one mode's writers. Implementations live next to their writer
+/// type; the registry hands the launcher the right one for the configured
+/// [`WriteMode`].
+pub trait WriterFactory {
+    /// The mode this factory serves.
+    fn mode(&self) -> WriteMode;
+
+    /// Build + register the mode's `Np` writers; return their actor ids.
+    /// Every actor must be a [`WriterActor`] so stats extraction can't
+    /// miss it.
+    fn build(&self, wiring: &WriterWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId>;
+}
+
+/// The pluggable factory registry, keyed by [`WriteMode`].
+pub struct WriterRegistry {
+    factories: Vec<Box<dyn WriterFactory>>,
+}
+
+impl WriterRegistry {
+    /// An empty registry (plug in your own factories).
+    pub fn empty() -> Self {
+        Self { factories: Vec::new() }
+    }
+
+    /// The three built-in modes: sync, pipelined, sharedmem.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(Box::new(super::sync::SyncRpcWriterFactory));
+        r.register(Box::new(super::pipelined::PipelinedWriterFactory));
+        r.register(Box::new(super::shmem::SharedMemWriterFactory));
+        r
+    }
+
+    /// Register a factory; replaces any previous factory for the same mode.
+    pub fn register(&mut self, factory: Box<dyn WriterFactory>) {
+        if let Some(slot) = self.factories.iter_mut().find(|f| f.mode() == factory.mode()) {
+            *slot = factory;
+        } else {
+            self.factories.push(factory);
+        }
+    }
+
+    pub fn get(&self, mode: WriteMode) -> Option<&dyn WriterFactory> {
+        self.factories.iter().find(|f| f.mode() == mode).map(|b| b.as_ref())
+    }
+
+    /// Resolve a mode or die loudly — an unregistered mode is a config
+    /// error, not a silently producer-less cluster.
+    pub fn expect(&self, mode: WriteMode) -> &dyn WriterFactory {
+        self.get(mode).unwrap_or_else(|| {
+            panic!("no writer factory registered for mode `{}`", mode.name())
+        })
+    }
+
+    /// The modes currently registered (in registration order).
+    pub fn modes(&self) -> Vec<WriteMode> {
+        self.factories.iter().map(|f| f.mode()).collect()
+    }
+}
+
+impl Default for WriterRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}

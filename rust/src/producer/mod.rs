@@ -1,37 +1,82 @@
-//! Producers: multi-threaded clients appending chunks of records.
+//! Producers: the pluggable write path, behind one trait.
 //!
-//! §V-A: "Each producer issues one synchronous RPC having one chunk of CS
-//! size for each partition of a broker, having in total ReqS size" and
-//! "Producers wait up to one millisecond before sealing chunks ready to be
-//! pushed to the broker (or the chunk gets filled and sealed)". Our
-//! producers saturate (the benchmarks measure peak ingestion), so chunks
-//! always fill before the seal timeout; the generation cost per record and
-//! the synchronous append round-trip pace each producer:
+//! PR 1 turned the paper's *read*-side comparison (pull vs push vs hybrid
+//! sources) into the [`crate::source::StreamSource`] trait API; this module
+//! is the symmetric redesign of the *write* side. Every producer backend
+//! implements [`WritePath`] (an [`crate::sim::Actor`] plus uniform
+//! [`WriteStats`] introspection) and is built by a [`WriterFactory`]
+//! resolved from the [`WriterRegistry`] keyed by
+//! [`crate::config::WriteMode`] — the launcher never names a concrete
+//! producer type. Modes:
 //!
-//! ```text
-//! loop { generate ReqS records  ->  Append RPC  ->  wait ack }
-//! ```
+//! **SyncRpc** ([`Producer`], §V-A baseline): "Each producer issues one
+//! synchronous RPC having one chunk of CS size for each partition of a
+//! broker, having in total ReqS size". The serial
+//! `generate ReqS records → Append RPC → wait ack` loop; the generation
+//! cost per record and the synchronous round-trip pace each producer.
+//!
+//! **Pipelined** ([`PipelinedWriter`]): production ingestion layers batch
+//! and pipeline writes (Uber's real-time infra, 2104.00087). Generation
+//! overlaps with up to `write_inflight` outstanding appends; every chunk
+//! carries a per-partition sequence number, and the writer's sequencers
+//! detect and account acks completing out of send order
+//! (`acks_reordered`) — on the simulator's FIFO fabric the log keeps
+//! send order, and the counter verifies it.
+//!
+//! **SharedMem** ([`SharedMemWriter`]): the paper's push-source idea
+//! applied to ingestion. One `WriteSubscribe` RPC registers the *colocated*
+//! producer, which then fills free plasma objects directly and sends a
+//! `SealObject` control notification; the broker appends the object's
+//! chunks and releases the buffer. Per-chunk dispatcher+worker RPC
+//! occupancy (and the payload's trip over the wire) is replaced by
+//! object-exhaustion backpressure.
+//!
+//! Rejected appends never panic: every backend retries with bounded
+//! backoff ([`RetryPolicy`]) and surfaces a typed [`WriteError`] through
+//! its [`WriteStats`], so overload experiments keep running.
 //!
 //! Two record generators cover the paper's workloads: synthetic fixed-size
 //! records (optionally planting the filter needle), and the Wikipedia
-//! corpus reader (2 KiB text records, bounded volume).
+//! corpus reader (2 KiB text records, bounded volume); [`RecordGen::
+//! BoundedSim`] mirrors the corpus budget on the accounting-only plane.
 
+pub mod api;
+mod pipelined;
+mod shmem;
+mod sync;
 #[cfg(test)]
 mod tests;
 
+pub use api::{
+    RetryPolicy, WriteError, WritePath, WriteStatExtras, WriteStatKey, WriteStats, WriterActor,
+    WriterFactory, WriterRegistry, WriterWiring,
+};
+pub use pipelined::{PipelinedParams, PipelinedWriter, PipelinedWriterFactory};
+pub use shmem::{SharedMemParams, SharedMemWriter, SharedMemWriterFactory};
+pub use sync::{Producer, SyncRpcWriterFactory};
+
 use std::rc::Rc;
 
-use crate::config::{CostModel, DataPlane};
-use crate::metrics::{Class, SharedMetrics};
-use crate::net::{NodeId, SharedNetwork};
-use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
-use crate::sim::{Actor, ActorId, Ctx, Rng, Time};
+use crate::config::{CostModel, DataPlane, ExperimentConfig};
+use crate::net::NodeId;
+use crate::proto::{Chunk, PartitionId};
+use crate::sim::{ActorId, Rng};
 use crate::wikipedia::CorpusReader;
+
+/// The grep needle all filter benchmarks use (length must equal the
+/// `PATTERN_LEN` baked into the filter artifacts).
+pub const FILTER_NEEDLE: &[u8] = b"needle";
+/// Fraction of synthetic records carrying the needle, in permille.
+pub const PLANT_PERMILLE: u32 = 50;
 
 /// What producers put inside records.
 pub enum RecordGen {
     /// Accounting-only payloads (sim data plane).
     Sim,
+    /// Accounting-only payloads with a bounded record budget — the sim
+    /// plane's mirror of the corpus volume bound, so write modes can be
+    /// cross-checked on identical totals.
+    BoundedSim { remaining: u64 },
     /// Random lowercase text with the filter needle planted in a fraction
     /// of records (real data plane, synthetic benchmarks).
     Synthetic { rng: Rng, needle: Vec<u8>, plant_permille: u32, planted: u64 },
@@ -45,6 +90,14 @@ impl RecordGen {
     fn next_chunk(&mut self, records: u32, record_size: u32) -> Option<Chunk> {
         match self {
             RecordGen::Sim => Some(Chunk::sim(records, record_size)),
+            RecordGen::BoundedSim { remaining } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                let want = (records as u64).min(*remaining) as u32;
+                *remaining -= want as u64;
+                Some(Chunk::sim(want, record_size))
+            }
             RecordGen::Synthetic { rng, needle, plant_permille, planted } => {
                 let mut data = vec![0u8; records as usize * record_size as usize];
                 for r in 0..records as usize {
@@ -74,9 +127,71 @@ impl RecordGen {
             }
         }
     }
+
+    /// Needle plants so far (synthetic generator; for end-to-end checks).
+    pub fn planted(&self) -> u64 {
+        match self {
+            RecordGen::Synthetic { planted, .. } => *planted,
+            _ => 0,
+        }
+    }
 }
 
-/// Static producer wiring.
+/// The generator matching a config's data plane + workload (factories call
+/// this once per producer; `seed_rng` forks keep producers decorrelated
+/// but deterministic).
+pub fn make_gen(config: &ExperimentConfig, seed_rng: &mut Rng) -> RecordGen {
+    match (config.data_plane, config.workload.is_text()) {
+        (DataPlane::Sim, _) if config.corpus_records > 0 => {
+            // Bounded sim producers: same budget semantics as the corpus
+            // (paper Fig. 9: push ~2 GiB then stop) without materialising
+            // payloads — the write-mode cross-checks rely on this.
+            RecordGen::BoundedSim { remaining: config.corpus_records }
+        }
+        (DataPlane::Sim, _) => RecordGen::Sim,
+        (DataPlane::Real, false) => RecordGen::Synthetic {
+            rng: seed_rng.fork(),
+            needle: FILTER_NEEDLE.to_vec(),
+            plant_permille: PLANT_PERMILLE,
+            planted: 0,
+        },
+        (DataPlane::Real, true) => {
+            let budget = if config.corpus_records > 0 { config.corpus_records } else { u64::MAX };
+            RecordGen::Corpus(CorpusReader::new(config.record_size, budget))
+        }
+    }
+}
+
+/// Stage one request: up to one chunk per partition (`ReqS` total),
+/// stopping early when a bounded generator runs out mid-request (the
+/// partial final request is still sent). Returns the staged chunks and
+/// their total records, or `None` once the generator is exhausted — the
+/// one staging loop every write mode shares.
+pub(crate) fn stage_request(
+    gen: &mut RecordGen,
+    params: &ProducerParams,
+) -> Option<(Vec<(PartitionId, Chunk)>, u64)> {
+    let per_chunk = (params.chunk_bytes / params.record_size) as u32;
+    let mut total_records = 0u64;
+    let mut chunks = Vec::new();
+    for &p in &params.partitions {
+        match gen.next_chunk(per_chunk, params.record_size as u32) {
+            Some(chunk) => {
+                total_records += chunk.records as u64;
+                chunks.push((p, chunk));
+            }
+            None => break,
+        }
+    }
+    if chunks.is_empty() {
+        None
+    } else {
+        Some((chunks, total_records))
+    }
+}
+
+/// Static producer wiring, shared by all write modes.
+#[derive(Debug, Clone)]
 pub struct ProducerParams {
     /// Metrics entity (producer index).
     pub entity: usize,
@@ -89,146 +204,26 @@ pub struct ProducerParams {
     pub chunk_bytes: usize,
     /// `RecS`.
     pub record_size: usize,
+    /// Bounded retry/backoff for rejected appends.
+    pub retry: RetryPolicy,
     pub cost: CostModel,
     pub data_plane: DataPlane,
 }
 
-/// The producer actor: a serial generate → append → ack loop.
-pub struct Producer {
-    params: ProducerParams,
-    gen: RecordGen,
-    next_rpc: u64,
-    /// Chunks staged for the in-flight request (built at GenDone).
-    staged: Vec<(PartitionId, Chunk)>,
-    /// True once the generator is exhausted (bounded corpus).
-    done: bool,
-    records_sent: u64,
-    metrics: SharedMetrics,
-    net: SharedNetwork,
-}
-
-impl Producer {
-    pub fn new(
-        params: ProducerParams,
-        gen: RecordGen,
-        metrics: SharedMetrics,
-        net: SharedNetwork,
-    ) -> Self {
-        assert!(!params.partitions.is_empty());
-        assert!(params.chunk_bytes >= params.record_size);
+impl ProducerParams {
+    /// Fill from a config + registry wiring (the factories' common path).
+    pub fn from_wiring(w: &WriterWiring<'_>, entity: usize, node: NodeId) -> Self {
         Self {
-            params,
-            gen,
-            next_rpc: 0,
-            staged: Vec::new(),
-            done: false,
-            records_sent: 0,
-            metrics,
-            net,
+            entity,
+            node,
+            broker: w.broker,
+            broker_node: w.broker_node,
+            partitions: w.partitions.clone(),
+            chunk_bytes: w.config.producer_chunk,
+            record_size: w.config.record_size,
+            retry: RetryPolicy::from_config(w.config),
+            cost: w.config.cost.clone(),
+            data_plane: w.config.data_plane,
         }
-    }
-
-    fn records_per_chunk(&self) -> u32 {
-        (self.params.chunk_bytes / self.params.record_size) as u32
-    }
-
-    /// Start generating the next request: busy for `records × gen cost`,
-    /// then `GenDone` fires and the RPC goes out.
-    fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        let rpc = self.next_rpc;
-        let per_chunk = self.records_per_chunk();
-        let mut total_records: u64 = 0;
-        self.staged.clear();
-        for &p in &self.params.partitions {
-            match self.gen.next_chunk(per_chunk, self.params.record_size as u32) {
-                Some(chunk) => {
-                    total_records += chunk.records as u64;
-                    self.staged.push((p, chunk));
-                }
-                None => break, // generator exhausted mid-request: send what we have
-            }
-        }
-        if self.staged.is_empty() {
-            self.done = true;
-            return;
-        }
-        let cost = total_records * self.params.cost.producer_record_ns;
-        ctx.send_self_in(cost as Time, Msg::GenDone(rpc));
-    }
-
-    fn send_append(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        let chunks = std::mem::take(&mut self.staged);
-        let bytes: u64 = chunks.iter().map(|(_, c)| c.bytes()).sum();
-        let rpc = self.next_rpc;
-        self.next_rpc += 1;
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send(ctx.now(), self.params.node, self.params.broker_node, bytes);
-        ctx.send_at(
-            deliver,
-            self.params.broker,
-            Msg::Rpc(RpcRequest {
-                id: rpc,
-                reply_to: ctx.self_id(),
-                from_node: self.params.node,
-                kind: RpcKind::Append { chunks },
-            }),
-        );
-    }
-
-    fn on_ack(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
-        match env.reply {
-            RpcReply::AppendAck { records, .. } => {
-                self.records_sent += records;
-                self.metrics.borrow_mut().record(
-                    Class::ProducerRecords,
-                    self.params.entity,
-                    ctx.now(),
-                    records,
-                );
-            }
-            RpcReply::Error { reason } => {
-                panic!("producer {}: append rejected: {reason}", self.params.entity)
-            }
-            other => panic!("producer {}: unexpected reply {other:?}", self.params.entity),
-        }
-        if !self.done {
-            self.start_generation(ctx);
-        }
-    }
-
-    pub fn records_sent(&self) -> u64 {
-        self.records_sent
-    }
-
-    /// Needle plants so far (synthetic generator; for end-to-end checks).
-    pub fn planted(&self) -> u64 {
-        match &self.gen {
-            RecordGen::Synthetic { planted, .. } => *planted,
-            _ => 0,
-        }
-    }
-}
-
-impl Actor<Msg> for Producer {
-    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        self.start_generation(ctx);
-    }
-
-    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
-        match msg {
-            Msg::GenDone(_) => self.send_append(ctx),
-            Msg::Reply(env) => self.on_ack(env, ctx),
-            other => panic!("producer {}: unexpected {other:?}", self.params.entity),
-        }
-    }
-
-    fn label(&self) -> String {
-        format!("producer#{}", self.params.entity)
-    }
-
-    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
-        Some(self)
     }
 }

@@ -1,0 +1,320 @@
+//! `WriteMode::Pipelined` — asynchronous appends with a bounded in-flight
+//! window.
+//!
+//! Production ingestion layers do not wait one round-trip per request:
+//! they pipeline writes with a bounded window and sequence them so acks
+//! can complete out of order (Uber's real-time infra, 2104.00087). Here
+//! record generation overlaps with up to `write_inflight` outstanding
+//! Append RPCs; each chunk carries a per-partition sequence number, and
+//! the writer tracks ack completion per partition. The sequencers are
+//! *detection*, not enforcement: an ack arriving ahead of an older
+//! outstanding append is absorbed and counted
+//! ([`WriteStatKey::AcksReordered`]). On the simulator's FIFO network and
+//! single-broker topology appends are served in send order, so the
+//! counter staying at zero is itself a checked property (see tests); a
+//! multi-path transport would use the same sequence numbers broker-side
+//! to reject out-of-order appends.
+//!
+//! Backpressure: a full window parks the generated request and pauses
+//! generation; the next ack releases it.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::config::WriteMode;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::SharedNetwork;
+use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+
+use super::api::{
+    WriteAccounting, WritePath, WriteStatKey, WriteStats, WriterFactory, WriterWiring,
+};
+use super::{ProducerParams, RecordGen};
+
+/// Pipelined writer wiring: the shared producer params plus the window.
+#[derive(Debug, Clone)]
+pub struct PipelinedParams {
+    pub base: ProducerParams,
+    /// Bounded in-flight append window (`write_inflight`, >= 1).
+    pub inflight_window: usize,
+}
+
+/// One outstanding append.
+#[derive(Debug, Clone)]
+struct Inflight {
+    chunks: Vec<(PartitionId, Chunk)>,
+    /// `(partition, per-partition sequence)` of every chunk in the request.
+    seqs: Vec<(PartitionId, u64)>,
+    sent_at: Time,
+    attempts: u32,
+}
+
+/// Per-partition ack sequencing: acks may arrive out of order; the log
+/// order is fixed by send order, and this tracks completion holes.
+#[derive(Debug, Default)]
+struct PartSeq {
+    next_expected: u64,
+    acked_ahead: BTreeSet<u64>,
+}
+
+impl PartSeq {
+    /// Record an ack; returns false when it completed out of order.
+    fn ack(&mut self, seq: u64) -> bool {
+        if seq == self.next_expected {
+            self.next_expected += 1;
+            while self.acked_ahead.remove(&self.next_expected) {
+                self.next_expected += 1;
+            }
+            true
+        } else {
+            self.acked_ahead.insert(seq);
+            false
+        }
+    }
+}
+
+/// The pipelined producer actor.
+pub struct PipelinedWriter {
+    params: PipelinedParams,
+    gen: RecordGen,
+    next_rpc: u64,
+    /// A generated request waiting for a free window slot (at most one —
+    /// generation is serial, so this bounds memory).
+    ready: Option<(u64, Vec<(PartitionId, Chunk)>, Vec<(PartitionId, u64)>)>,
+    /// A GenDone is outstanding.
+    generating: bool,
+    inflight: HashMap<u64, Inflight>,
+    seq: HashMap<PartitionId, PartSeq>,
+    next_seq: HashMap<PartitionId, u64>,
+    done: bool,
+    acct: WriteAccounting,
+    reordered: u64,
+    inflight_peak: usize,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+}
+
+impl PipelinedWriter {
+    pub fn new(
+        params: PipelinedParams,
+        gen: RecordGen,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+    ) -> Self {
+        assert!(!params.base.partitions.is_empty());
+        assert!(params.base.chunk_bytes >= params.base.record_size);
+        assert!(params.inflight_window >= 1, "pipelining needs a window of at least 1");
+        Self {
+            params,
+            gen,
+            next_rpc: 0,
+            ready: None,
+            generating: false,
+            inflight: HashMap::new(),
+            seq: HashMap::new(),
+            next_seq: HashMap::new(),
+            done: false,
+            acct: WriteAccounting::default(),
+            reordered: 0,
+            inflight_peak: 0,
+            metrics,
+            net,
+        }
+    }
+
+    /// Generate the next request's chunks; `GenDone` fires after the
+    /// per-record generation cost.
+    fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        debug_assert!(self.ready.is_none(), "one staged request at a time");
+        let rpc = self.next_rpc;
+        self.next_rpc += 1;
+        let Some((chunks, total_records)) =
+            super::stage_request(&mut self.gen, &self.params.base)
+        else {
+            self.done = true;
+            return;
+        };
+        // Sequence assignment happens at generation: generation order ==
+        // send order per partition.
+        let seqs = chunks
+            .iter()
+            .map(|&(p, _)| {
+                let s = self.next_seq.entry(p).or_insert(0);
+                let assigned = *s;
+                *s += 1;
+                (p, assigned)
+            })
+            .collect();
+        self.generating = true;
+        let cost = total_records * self.params.base.cost.producer_record_ns;
+        ctx.send_self_in(cost as Time, Msg::GenDone(rpc));
+        self.ready = Some((rpc, chunks, seqs));
+    }
+
+    /// Send the parked request if a window slot is free, then keep the
+    /// generation thread busy — the pipelining heart.
+    fn try_dispatch(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if !self.generating {
+            if let Some((rpc, chunks, seqs)) = self.ready.take() {
+                if self.inflight.len() < self.params.inflight_window {
+                    self.inflight
+                        .insert(rpc, Inflight { chunks, seqs, sent_at: ctx.now(), attempts: 1 });
+                    self.inflight_peak = self.inflight_peak.max(self.inflight.len());
+                    self.transmit(rpc, ctx);
+                } else {
+                    self.ready = Some((rpc, chunks, seqs)); // window full: park
+                }
+            }
+        }
+        if self.ready.is_none() && !self.generating && !self.done {
+            self.start_generation(ctx);
+        }
+    }
+
+    /// Put one in-flight request on the wire (first send or retry).
+    fn transmit(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        let inflight = self.inflight.get_mut(&rpc).expect("transmit of a live append");
+        inflight.sent_at = ctx.now();
+        let bytes: u64 = inflight.chunks.iter().map(|(_, c)| c.bytes()).sum();
+        self.acct.on_issued();
+        let deliver = self.net.borrow_mut().send(
+            ctx.now(),
+            self.params.base.node,
+            self.params.base.broker_node,
+            bytes,
+        );
+        ctx.send_at(
+            deliver,
+            self.params.base.broker,
+            Msg::Rpc(RpcRequest {
+                id: rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.base.node,
+                kind: RpcKind::Append { chunks: inflight.chunks.clone() },
+            }),
+        );
+    }
+
+    /// Feed a completed (or abandoned) request through the per-partition
+    /// sequencers.
+    fn sequence_ack(&mut self, seqs: &[(PartitionId, u64)]) {
+        for &(p, s) in seqs {
+            if !self.seq.entry(p).or_default().ack(s) {
+                self.reordered += 1;
+            }
+        }
+    }
+
+    fn on_ack(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        match env.reply {
+            RpcReply::AppendAck { records, bytes } => {
+                let inflight =
+                    self.inflight.remove(&env.id).expect("ack matches an in-flight append");
+                self.sequence_ack(&inflight.seqs);
+                self.acct.on_acked(records, bytes, ctx.now() - inflight.sent_at);
+                self.metrics.borrow_mut().record(
+                    Class::ProducerRecords,
+                    self.params.base.entity,
+                    ctx.now(),
+                    records,
+                );
+            }
+            RpcReply::Error { reason } => {
+                let attempts = self
+                    .inflight
+                    .get(&env.id)
+                    .expect("error matches an in-flight append")
+                    .attempts;
+                if self.acct.on_rejected(&self.params.base.retry, attempts, reason) {
+                    self.inflight.get_mut(&env.id).expect("just checked").attempts += 1;
+                    ctx.send_self_in(self.params.base.retry.backoff_ns, Msg::Timer(env.id));
+                    return; // slot stays occupied until the retry resolves
+                }
+                // Retries exhausted: the typed error is recorded; free the
+                // slot and mark the sequences complete so later acks don't
+                // count as reordered forever.
+                let dropped = self.inflight.remove(&env.id).expect("just checked");
+                self.sequence_ack(&dropped.seqs);
+            }
+            other => {
+                panic!("pipelined writer {}: unexpected reply {other:?}", self.params.base.entity)
+            }
+        }
+        self.try_dispatch(ctx);
+    }
+
+    pub fn records_sent(&self) -> u64 {
+        self.acct.records_sent
+    }
+
+    pub fn planted(&self) -> u64 {
+        self.gen.planted()
+    }
+
+    /// Acks that completed out of send order (absorbed by sequencing).
+    pub fn acks_reordered(&self) -> u64 {
+        self.reordered
+    }
+}
+
+impl Actor<Msg> for PipelinedWriter {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.start_generation(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::GenDone(_) => {
+                self.generating = false;
+                self.try_dispatch(ctx);
+            }
+            Msg::Reply(env) => self.on_ack(env, ctx),
+            Msg::Timer(rpc) => self.transmit(rpc, ctx),
+            other => {
+                panic!("pipelined writer {}: unexpected {other:?}", self.params.base.entity)
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("pipelined-writer#{}", self.params.base.entity)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+impl WritePath for PipelinedWriter {
+    fn mode(&self) -> WriteMode {
+        WriteMode::Pipelined
+    }
+
+    fn stats(&self) -> WriteStats {
+        let mut extras = super::api::WriteStatExtras::new();
+        extras.insert(WriteStatKey::AcksReordered, self.reordered);
+        extras.insert(WriteStatKey::InflightPeak, self.inflight_peak as u64);
+        // Generation thread + async completion thread.
+        self.acct.stats(self.gen.planted(), 2, extras)
+    }
+}
+
+/// Builds the `Np` pipelined producers on the producer node.
+pub struct PipelinedWriterFactory;
+
+impl WriterFactory for PipelinedWriterFactory {
+    fn mode(&self) -> WriteMode {
+        WriteMode::Pipelined
+    }
+
+    fn build(&self, w: &WriterWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        super::api::build_writers(w, engine, w.producer_node, |base, gen| {
+            Box::new(PipelinedWriter::new(
+                PipelinedParams { base, inflight_window: w.config.write_inflight },
+                gen,
+                w.metrics.clone(),
+                w.net.clone(),
+            ))
+        })
+    }
+}

@@ -1,0 +1,337 @@
+//! `WriteMode::SharedMem` — the paper's push-source idea applied to
+//! ingestion.
+//!
+//! The read-side push path (§IV-B) replaces a stream of pull RPCs with one
+//! subscription RPC plus shared-memory objects; this writer mirrors that
+//! on the write side. The producer is *colocated* with the broker (the
+//! premise of the shared store), issues one `WriteSubscribe` RPC, then
+//! loops:
+//!
+//! ```text
+//! acquire free object → generate ReqS records into it → seal →
+//! SealObject notification → (broker appends + releases) → SealAck
+//! ```
+//!
+//! The payload never crosses the wire and no per-chunk append RPC occupies
+//! the dispatcher; only the per-object control notification does. The
+//! broker still charges its worker pool the full append service time, so
+//! the paper's write/read interference on the worker cores is preserved —
+//! what disappears is the producer-side round-trip pacing and the network
+//! transfer. Backpressure is object exhaustion: when all objects are in
+//! flight the generation loop stalls ([`WriteStatKey::ObjectStalls`]).
+//!
+//! Fill offsets inside a sealed object are placeholders (0): log offsets
+//! are assigned by the broker at append time, exactly like the Append RPC.
+
+use std::collections::HashMap;
+
+use crate::config::WriteMode;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::SharedNetwork;
+use crate::plasma::SharedStore;
+use crate::proto::{
+    Chunk, Msg, ObjectId, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest, StampedChunk,
+    SubId, WriteProducerSpec,
+};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+
+use super::api::{
+    WriteAccounting, WriteError, WritePath, WriteStatKey, WriteStats, WriterFactory, WriterWiring,
+};
+use super::{ProducerParams, RecordGen};
+
+/// Shared-memory writer wiring: the shared producer params (node = the
+/// colocated broker node) plus the object pool.
+#[derive(Debug, Clone)]
+pub struct SharedMemParams {
+    pub base: ProducerParams,
+    /// Objects in this producer's pool (`write_objects_per_producer`).
+    pub objects: usize,
+}
+
+/// One sealed object awaiting the broker's append ack.
+#[derive(Debug, Clone, Copy)]
+struct SealInflight {
+    object: ObjectId,
+    sent_at: Time,
+    attempts: u32,
+}
+
+/// The colocated shared-memory producer actor.
+pub struct SharedMemWriter {
+    params: SharedMemParams,
+    gen: RecordGen,
+    sub: Option<SubId>,
+    next_rpc: u64,
+    /// A generated batch parked until an object frees up (at most one).
+    parked: Option<Vec<(PartitionId, Chunk)>>,
+    generating: bool,
+    seals: HashMap<u64, SealInflight>,
+    done: bool,
+    acct: WriteAccounting,
+    objects_sealed: u64,
+    object_stalls: u64,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+    store: SharedStore,
+}
+
+impl SharedMemWriter {
+    pub fn new(
+        params: SharedMemParams,
+        gen: RecordGen,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+        store: SharedStore,
+    ) -> Self {
+        assert!(!params.base.partitions.is_empty());
+        assert!(params.base.chunk_bytes >= params.base.record_size);
+        assert!(params.objects >= 1, "the write pool needs at least one object");
+        Self {
+            params,
+            gen,
+            sub: None,
+            next_rpc: 0,
+            parked: None,
+            generating: false,
+            seals: HashMap::new(),
+            done: false,
+            acct: WriteAccounting::default(),
+            objects_sealed: 0,
+            object_stalls: 0,
+            metrics,
+            net,
+            store,
+        }
+    }
+
+    /// One producer request worth of object capacity (`ReqS`).
+    fn object_bytes(&self) -> u64 {
+        (self.params.base.chunk_bytes * self.params.base.partitions.len()) as u64
+    }
+
+    /// Step 1: the single registration RPC (control-sized; carries no
+    /// payload).
+    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let rpc = self.next_rpc;
+        self.next_rpc += 1;
+        let deliver = self.net.borrow_mut().send_control(
+            ctx.now(),
+            self.params.base.node,
+            self.params.base.broker_node,
+        );
+        ctx.send_at(
+            deliver,
+            self.params.base.broker,
+            Msg::Rpc(RpcRequest {
+                id: rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.base.node,
+                kind: RpcKind::WriteSubscribe {
+                    producer: WriteProducerSpec {
+                        producer_actor: ctx.self_id(),
+                        partitions: self.params.base.partitions.clone(),
+                        objects: self.params.objects,
+                        object_bytes: self.object_bytes(),
+                    },
+                },
+            }),
+        );
+    }
+
+    /// Generate the next batch; `GenDone` fires after the per-record cost.
+    fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        debug_assert!(self.parked.is_none(), "one parked batch at a time");
+        let Some((chunks, total_records)) =
+            super::stage_request(&mut self.gen, &self.params.base)
+        else {
+            self.done = true;
+            return;
+        };
+        self.generating = true;
+        let cost = total_records * self.params.base.cost.producer_record_ns;
+        ctx.send_self_in(cost as Time, Msg::GenDone(0));
+        self.parked = Some(chunks);
+    }
+
+    /// Seal the parked batch into a free object and notify the broker;
+    /// stall on object exhaustion (the shared-memory backpressure).
+    fn try_seal(&mut self, from_generation: bool, ctx: &mut Ctx<'_, Msg>) {
+        if self.generating {
+            return; // the batch is still being generated
+        }
+        if let Some(chunks) = self.parked.take() {
+            let sub = self.sub.expect("subscribed before sealing");
+            let Some(object) = self.store.borrow_mut().acquire(sub) else {
+                self.parked = Some(chunks);
+                if from_generation {
+                    self.object_stalls += 1;
+                }
+                return; // pool exhausted: resume on the next SealAck
+            };
+            let content: Vec<StampedChunk> = chunks
+                .into_iter()
+                .map(|(p, chunk)| StampedChunk { partition: p, offset: 0, chunk })
+                .collect();
+            self.store.borrow_mut().seal(object, content);
+            self.objects_sealed += 1;
+            let rpc = self.next_rpc;
+            self.next_rpc += 1;
+            self.seals.insert(rpc, SealInflight { object, sent_at: ctx.now(), attempts: 1 });
+            self.notify_seal(rpc, ctx);
+        }
+        if self.parked.is_none() && !self.generating && !self.done {
+            self.start_generation(ctx);
+        }
+    }
+
+    /// Send the `SealObject` control notification (first send or retry).
+    fn notify_seal(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        let seal = self.seals.get_mut(&rpc).expect("notify of a live seal");
+        seal.sent_at = ctx.now();
+        self.acct.on_issued();
+        let deliver = self.net.borrow_mut().send_control(
+            ctx.now(),
+            self.params.base.node,
+            self.params.base.broker_node,
+        );
+        ctx.send_at(
+            deliver,
+            self.params.base.broker,
+            Msg::Rpc(RpcRequest {
+                id: rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.base.node,
+                kind: RpcKind::SealObject { id: seal.object },
+            }),
+        );
+    }
+
+    fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        match env.reply {
+            RpcReply::WriteSubscribeAck { sub } => {
+                self.sub = Some(sub);
+                self.start_generation(ctx);
+            }
+            RpcReply::SealAck { records, bytes } => {
+                let seal = self.seals.remove(&env.id).expect("ack matches an in-flight seal");
+                self.acct.on_acked(records, bytes, ctx.now() - seal.sent_at);
+                self.metrics.borrow_mut().record(
+                    Class::ProducerRecords,
+                    self.params.base.entity,
+                    ctx.now(),
+                    records,
+                );
+                // The broker released the object before acking: a parked
+                // batch can seal immediately.
+                self.try_seal(false, ctx);
+            }
+            RpcReply::Error { reason } if self.sub.is_none() => {
+                // The registration itself failed: nothing to retry into.
+                self.acct.last_error = Some(WriteError::SubscribeFailed { reason });
+                self.acct.errors += 1;
+                self.done = true;
+            }
+            RpcReply::Error { reason } => {
+                let attempts =
+                    self.seals.get(&env.id).expect("error matches an in-flight seal").attempts;
+                if self.acct.on_rejected(&self.params.base.retry, attempts, reason) {
+                    self.seals.get_mut(&env.id).expect("just checked").attempts += 1;
+                    ctx.send_self_in(self.params.base.retry.backoff_ns, Msg::Timer(env.id));
+                    return;
+                }
+                // Retries exhausted: reclaim the object ourselves (we are
+                // colocated with the store) and keep producing.
+                let dropped = self.seals.remove(&env.id).expect("just checked");
+                self.store.borrow_mut().release(dropped.object);
+                self.try_seal(false, ctx);
+            }
+            other => {
+                panic!("sharedmem writer {}: unexpected reply {other:?}", self.params.base.entity)
+            }
+        }
+    }
+
+    pub fn records_sent(&self) -> u64 {
+        self.acct.records_sent
+    }
+
+    pub fn planted(&self) -> u64 {
+        self.gen.planted()
+    }
+
+    pub fn is_subscribed(&self) -> bool {
+        self.sub.is_some()
+    }
+
+    /// Generation stalls on object exhaustion so far.
+    pub fn object_stalls(&self) -> u64 {
+        self.object_stalls
+    }
+}
+
+impl Actor<Msg> for SharedMemWriter {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.subscribe(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::GenDone(_) => {
+                self.generating = false;
+                self.try_seal(true, ctx);
+            }
+            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::Timer(rpc) => self.notify_seal(rpc, ctx),
+            other => {
+                panic!("sharedmem writer {}: unexpected {other:?}", self.params.base.entity)
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("sharedmem-writer#{}", self.params.base.entity)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+impl WritePath for SharedMemWriter {
+    fn mode(&self) -> WriteMode {
+        WriteMode::SharedMem
+    }
+
+    fn stats(&self) -> WriteStats {
+        let mut extras = super::api::WriteStatExtras::new();
+        extras.insert(WriteStatKey::ObjectsSealed, self.objects_sealed);
+        extras.insert(WriteStatKey::Subscribed, self.sub.is_some() as u64);
+        extras.insert(WriteStatKey::ObjectStalls, self.object_stalls);
+        // One fill thread; acks arrive as notifications.
+        self.acct.stats(self.gen.planted(), 1, extras)
+    }
+}
+
+/// Builds the `Np` shared-memory producers — on the *broker's* node: the
+/// colocation premise is what makes the plasma store reachable.
+pub struct SharedMemWriterFactory;
+
+impl WriterFactory for SharedMemWriterFactory {
+    fn mode(&self) -> WriteMode {
+        WriteMode::SharedMem
+    }
+
+    fn build(&self, w: &WriterWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        // On the broker's node: colocation is what makes the store reachable.
+        super::api::build_writers(w, engine, w.broker_node, |base, gen| {
+            Box::new(SharedMemWriter::new(
+                SharedMemParams { base, objects: w.config.write_objects_per_producer },
+                gen,
+                w.metrics.clone(),
+                w.net.clone(),
+                w.store.clone(),
+            ))
+        })
+    }
+}

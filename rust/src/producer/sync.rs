@@ -1,0 +1,204 @@
+//! `WriteMode::SyncRpc` — the paper's §V-A baseline producer.
+//!
+//! The serial `generate ReqS records → Append RPC → wait ack` loop,
+//! unchanged from the pre-trait producer: the generation cost per record
+//! and the synchronous append round-trip pace each producer. Our producers
+//! saturate (the benchmarks measure peak ingestion), so chunks always fill
+//! before the paper's 1 ms seal timeout.
+
+use crate::config::WriteMode;
+use crate::metrics::{Class, SharedMetrics};
+use crate::net::SharedNetwork;
+use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
+
+use super::api::{WriteAccounting, WritePath, WriteStats, WriterFactory, WriterWiring};
+use super::{ProducerParams, RecordGen};
+
+/// One append's retry state: what to resend and how often we tried.
+#[derive(Debug, Clone)]
+struct Inflight {
+    rpc: u64,
+    chunks: Vec<(PartitionId, Chunk)>,
+    sent_at: Time,
+    attempts: u32,
+}
+
+/// The synchronous producer actor: a serial generate → append → ack loop.
+pub struct Producer {
+    params: ProducerParams,
+    gen: RecordGen,
+    next_rpc: u64,
+    /// Chunks staged for the in-flight request (built at GenDone).
+    staged: Vec<(PartitionId, Chunk)>,
+    /// The one outstanding append (kept for bounded retry + latency).
+    inflight: Option<Inflight>,
+    /// True once the generator is exhausted (bounded corpus).
+    done: bool,
+    acct: WriteAccounting,
+    metrics: SharedMetrics,
+    net: SharedNetwork,
+}
+
+impl Producer {
+    pub fn new(
+        params: ProducerParams,
+        gen: RecordGen,
+        metrics: SharedMetrics,
+        net: SharedNetwork,
+    ) -> Self {
+        assert!(!params.partitions.is_empty());
+        assert!(params.chunk_bytes >= params.record_size);
+        Self {
+            params,
+            gen,
+            next_rpc: 0,
+            staged: Vec::new(),
+            inflight: None,
+            done: false,
+            acct: WriteAccounting::default(),
+            metrics,
+            net,
+        }
+    }
+
+    /// Start generating the next request: busy for `records × gen cost`,
+    /// then `GenDone` fires and the RPC goes out.
+    fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let rpc = self.next_rpc;
+        let Some((chunks, total_records)) = super::stage_request(&mut self.gen, &self.params)
+        else {
+            self.done = true;
+            return;
+        };
+        self.staged = chunks;
+        let cost = total_records * self.params.cost.producer_record_ns;
+        ctx.send_self_in(cost as Time, Msg::GenDone(rpc));
+    }
+
+    fn send_append(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let chunks = std::mem::take(&mut self.staged);
+        let rpc = self.next_rpc;
+        self.next_rpc += 1;
+        self.inflight = Some(Inflight { rpc, chunks, sent_at: ctx.now(), attempts: 1 });
+        self.transmit(ctx);
+    }
+
+    /// Put the in-flight request on the wire (first send or retry).
+    fn transmit(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let inflight = self.inflight.as_mut().expect("transmit with an append staged");
+        inflight.sent_at = ctx.now();
+        let bytes: u64 = inflight.chunks.iter().map(|(_, c)| c.bytes()).sum();
+        self.acct.on_issued();
+        let deliver =
+            self.net
+                .borrow_mut()
+                .send(ctx.now(), self.params.node, self.params.broker_node, bytes);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id: inflight.rpc,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::Append { chunks: inflight.chunks.clone() },
+            }),
+        );
+    }
+
+    fn on_ack(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
+        match env.reply {
+            RpcReply::AppendAck { records, bytes } => {
+                let inflight = self.inflight.take().expect("ack matches the in-flight append");
+                debug_assert_eq!(inflight.rpc, env.id);
+                self.acct.on_acked(records, bytes, ctx.now() - inflight.sent_at);
+                self.metrics.borrow_mut().record(
+                    Class::ProducerRecords,
+                    self.params.entity,
+                    ctx.now(),
+                    records,
+                );
+            }
+            RpcReply::Error { reason } => {
+                let attempts =
+                    self.inflight.as_ref().expect("error matches in-flight append").attempts;
+                if self.acct.on_rejected(&self.params.retry, attempts, reason) {
+                    // Bounded retry with backoff: resend the same request.
+                    let inflight = self.inflight.as_mut().expect("just checked");
+                    inflight.attempts += 1;
+                    let rpc = inflight.rpc;
+                    ctx.send_self_in(self.params.retry.backoff_ns, Msg::Timer(rpc));
+                    return; // next generation starts after the retry acks
+                }
+                // Retries exhausted: the typed error is recorded; move on —
+                // overload experiments must not abort the sim.
+                self.inflight = None;
+            }
+            other => panic!("producer {}: unexpected reply {other:?}", self.params.entity),
+        }
+        if !self.done {
+            self.start_generation(ctx);
+        }
+    }
+
+    pub fn records_sent(&self) -> u64 {
+        self.acct.records_sent
+    }
+
+    /// Needle plants so far (synthetic generator; for end-to-end checks).
+    pub fn planted(&self) -> u64 {
+        self.gen.planted()
+    }
+}
+
+impl Actor<Msg> for Producer {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.start_generation(ctx);
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::GenDone(_) => self.send_append(ctx),
+            Msg::Reply(env) => self.on_ack(env, ctx),
+            Msg::Timer(rpc) => {
+                debug_assert_eq!(self.inflight.as_ref().map(|i| i.rpc), Some(rpc));
+                self.transmit(ctx);
+            }
+            other => panic!("producer {}: unexpected {other:?}", self.params.entity),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("producer#{}", self.params.entity)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+impl WritePath for Producer {
+    fn mode(&self) -> WriteMode {
+        WriteMode::SyncRpc
+    }
+
+    fn stats(&self) -> WriteStats {
+        // One client thread generates and waits in turn.
+        self.acct.stats(self.gen.planted(), 1, super::api::WriteStatExtras::new())
+    }
+}
+
+/// Builds the `Np` synchronous baseline producers on the producer node.
+pub struct SyncRpcWriterFactory;
+
+impl WriterFactory for SyncRpcWriterFactory {
+    fn mode(&self) -> WriteMode {
+        WriteMode::SyncRpc
+    }
+
+    fn build(&self, w: &WriterWiring<'_>, engine: &mut Engine<Msg>) -> Vec<ActorId> {
+        super::api::build_writers(w, engine, w.producer_node, |params, gen| {
+            Box::new(Producer::new(params, gen, w.metrics.clone(), w.net.clone()))
+        })
+    }
+}

@@ -113,8 +113,29 @@ pub enum RpcKind {
     /// pulling). The ack returns the broker-managed cursors so the client
     /// resumes pulling exactly where the push path left off.
     PushUnsubscribe { sub: SubId },
+    /// Shared-memory write-path registration (the push-source idea applied
+    /// to ingestion): the single RPC a colocated producer issues before
+    /// filling plasma objects directly.
+    WriteSubscribe { producer: WriteProducerSpec },
+    /// A colocated producer sealed shared object `id`: append its chunks to
+    /// the partition logs and release the buffer. The payload never crosses
+    /// the dispatcher — only this control notification does.
+    SealObject { id: ObjectId },
     /// Primary -> backup replication of one append (Replication = 2).
     Replicate { bytes: u64, chunks: u32 },
+}
+
+/// One colocated producer's write-side registration.
+#[derive(Debug, Clone)]
+pub struct WriteProducerSpec {
+    /// Producer actor the broker acks seals to.
+    pub producer_actor: ActorId,
+    /// Partitions this producer will append to (validated up front).
+    pub partitions: Vec<PartitionId>,
+    /// Object pool size (the write-side backpressure window).
+    pub objects: usize,
+    /// Object capacity in bytes (one producer request, `ReqS`).
+    pub object_bytes: u64,
 }
 
 /// One push source task's registration.
@@ -141,6 +162,11 @@ pub enum RpcReply {
     /// (they already account for every object the broker gathered, so the
     /// client must still drain in-flight `ObjectReady` notifications).
     UnsubscribeAck { sub: SubId, cursors: Vec<(PartitionId, ChunkOffset)> },
+    /// Write-side registration accepted: the producer's object pool.
+    WriteSubscribeAck { sub: SubId },
+    /// Sealed object appended (and replicated, if configured); its buffer
+    /// is back in the free pool by the time this arrives.
+    SealAck { records: u64, bytes: u64 },
     ReplicateAck,
     /// Request refused (unknown partition, bad offset...). Carried instead
     /// of panicking so fault-injection tests can exercise client handling.

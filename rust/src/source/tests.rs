@@ -72,6 +72,7 @@ fn rig_opts(
                 partitions: parts.clone(),
                 chunk_bytes: producer_chunk,
                 record_size: 100,
+                retry: crate::producer::RetryPolicy::default(),
                 cost: CostModel::default(),
                 data_plane: crate::config::DataPlane::Sim,
             },
