@@ -1,0 +1,10 @@
+//! Regenerates the checkpoint & recovery ablation: checkpoint overhead,
+//! barrier alignment time and recovery time across the pull/push/hybrid
+//! sources x sync/pipelined/sharedmem writers.
+//! See experiments::ablation_checkpoint.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::ablation_checkpoint(common::bench_duration());
+    common::run(&spec);
+}

@@ -94,6 +94,10 @@ pub struct Broker {
     logs: HashMap<PartitionId, PartitionLog>,
     /// Consumer progress per partition (for retention trimming).
     watermarks: HashMap<PartitionId, ChunkOffset>,
+    /// Last committed checkpoint cursors (`CommitCheckpoint`): once any
+    /// commit landed, retention may never trim past these — the log below
+    /// the floor is the recovery replay data.
+    committed: HashMap<PartitionId, ChunkOffset>,
     ctxs: HashMap<u64, RpcCtx>,
     fills: HashMap<u64, FillCtx>,
     next_ctx: u64,
@@ -137,6 +141,7 @@ impl Broker {
             // a pool must have >= 1 core; gate use on params.push_threads
             logs,
             watermarks: HashMap::new(),
+            committed: HashMap::new(),
             ctxs: HashMap::new(),
             fills: HashMap::new(),
             next_ctx: 0,
@@ -195,6 +200,7 @@ impl Broker {
                 c.rpc_base_ns + sources.len() as Time * c.rpc_base_ns
             }
             RpcKind::PushUnsubscribe { .. } => c.rpc_base_ns,
+            RpcKind::CommitCheckpoint { .. } => c.rpc_base_ns,
             RpcKind::SealObject { id } => {
                 // Appending a sealed object is charged like the equivalent
                 // Append RPC: the payload still has to reach the log — what
@@ -244,6 +250,9 @@ impl Broker {
                 self.finish_push_subscribe(rpc_ctx, &sources, ctx)
             }
             RpcKind::PushUnsubscribe { sub } => self.finish_push_unsubscribe(rpc_ctx, sub, ctx),
+            RpcKind::CommitCheckpoint { epoch, cursors } => {
+                self.finish_commit(rpc_ctx, epoch, &cursors, ctx)
+            }
             RpcKind::WriteSubscribe { producer } => {
                 self.finish_write_subscribe(rpc_ctx, &producer, ctx)
             }
@@ -260,7 +269,7 @@ impl Broker {
         ctx: &mut Ctx<'_, Msg>,
     ) {
         let reply = self.do_pull(assignments, max_bytes);
-        if let RpcReply::PullData { chunks } = &reply {
+        if let RpcReply::PullData { chunks, .. } = &reply {
             rpc_ctx.reply_bytes = chunks.iter().map(|s| s.chunk.bytes()).sum();
             self.metrics.borrow_mut().record(
                 Class::ConsumerBytes,
@@ -293,6 +302,31 @@ impl Broker {
 
     fn finish_replicate(&mut self, mut rpc_ctx: RpcCtx, ctx: &mut Ctx<'_, Msg>) {
         rpc_ctx.staged = Some(RpcReply::ReplicateAck);
+        self.reply(rpc_ctx, ctx);
+    }
+
+    /// Record a completed checkpoint's cursors as the new retention floor.
+    /// Floors are monotone per partition (epochs commit in order, but the
+    /// network may not deliver them so). The whole batch is validated
+    /// before any floor moves — a refused commit must not raise a partial
+    /// prefix (same hardening rule as Append/seal batches).
+    fn finish_commit(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        epoch: u64,
+        cursors: &[(PartitionId, ChunkOffset)],
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        if let Some((p, _)) = cursors.iter().find(|(p, _)| !self.logs.contains_key(p)) {
+            rpc_ctx.staged = Some(RpcReply::Error { reason: format!("unknown partition {p}") });
+            self.reply(rpc_ctx, ctx);
+            return;
+        }
+        for &(p, off) in cursors {
+            let e = self.committed.entry(p).or_insert(0);
+            *e = (*e).max(off);
+        }
+        rpc_ctx.staged = Some(RpcReply::CommitAck { epoch });
         self.reply(rpc_ctx, ctx);
     }
 
@@ -456,10 +490,19 @@ impl Broker {
 
     fn do_pull(&mut self, assignments: &[(PartitionId, ChunkOffset)], max_bytes: u64) -> RpcReply {
         let mut out = Vec::new();
+        let mut trims = Vec::new();
         for &(p, off) in assignments {
             let Some(log) = self.logs.get(&p) else {
                 return RpcReply::Error { reason: format!("unknown partition {p}") };
             };
+            if off < log.start() {
+                // The consumer fell behind retention (a torn-down push
+                // subscription's cursors no longer pin it). Surface the
+                // trim floor so the client can skip forward and count the
+                // gap instead of wedging the partition.
+                trims.push((p, log.start()));
+                continue;
+            }
             match log.read_from(off, max_bytes) {
                 Ok(mut chunks) => out.append(&mut chunks),
                 Err(e) => return RpcReply::Error { reason: e.to_string() },
@@ -469,7 +512,7 @@ impl Broker {
             *w = (*w).max(off);
         }
         self.trim();
-        RpcReply::PullData { chunks: out }
+        RpcReply::PullData { chunks: out, trims }
     }
 
     fn do_subscribe(&mut self, sources: &[crate::proto::PushSourceSpec]) -> RpcReply {
@@ -670,6 +713,11 @@ impl Broker {
                         watermark = watermark.min(off);
                     }
                 }
+            }
+            if !self.committed.is_empty() {
+                // Checkpointing active: retention never passes the last
+                // restorable point (the committed checkpoint's cursor).
+                watermark = watermark.min(self.committed.get(&p).copied().unwrap_or(0));
             }
             self.trimmed_bytes += log.trim_below(watermark);
         }

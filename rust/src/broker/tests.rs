@@ -248,9 +248,10 @@ fn append_then_pull_round_trip() {
     let reps = replies(&r.inbox);
     assert_eq!(reps.len(), 2);
     match &reps[1].1.reply {
-        RpcReply::PullData { chunks } => {
+        RpcReply::PullData { chunks, trims } => {
             assert_eq!(chunks.len(), 2);
             assert_eq!(chunks[0].chunk.records, 100);
+            assert!(trims.is_empty(), "nothing trimmed yet");
         }
         other => panic!("want PullData, got {other:?}"),
     }
@@ -982,9 +983,95 @@ fn watermark_trim_leaves_laggards_behind() {
     }
     let reps = replies(&r.inbox);
     let laggard = reps.iter().find(|(_, env)| env.id == 999).expect("laggard answered");
-    assert!(
-        matches!(&laggard.1.reply, RpcReply::Error { reason } if reason.contains("trimmed")),
-        "a read behind the trim point surfaces TrimmedError: {:?}",
-        laggard.1
+    // A read behind the trim point surfaces the trim — structured, so the
+    // client can skip to the floor with a counted gap instead of wedging.
+    match &laggard.1.reply {
+        RpcReply::PullData { chunks, trims } => {
+            assert!(chunks.is_empty(), "nothing below the floor is served");
+            assert_eq!(trims, &vec![(PartitionId(0), 150)], "the floor is reported");
+        }
+        other => panic!("want PullData with trims, got {other:?}"),
+    }
+}
+
+#[test]
+fn committed_checkpoint_floors_retention() {
+    // Same layout as the laggard test, but a checkpoint commit at offset
+    // 100 pins retention below the fast consumer's watermark (150): the
+    // replay data in [100, 150) must survive trimming.
+    let mut r = rig(|p| p.segment_bytes = 1000);
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 1000,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::CommitCheckpoint { epoch: 1, cursors: vec![(PartitionId(0), 100)] },
+        }),
     );
+    for i in 0..4u64 {
+        r.engine.schedule(
+            (1 + i * 10) * MICROS,
+            r.broker,
+            Msg::Rpc(RpcRequest {
+                id: i,
+                reply_to: r.probe,
+                from_node: 1,
+                kind: RpcKind::Append {
+                    chunks: (0..50).map(|_| (PartitionId(0), Chunk::sim(1, 100))).collect(),
+                },
+            }),
+        );
+    }
+    for i in 0..70u64 {
+        r.engine.schedule(
+            (100 + i * 20) * MICROS,
+            r.broker,
+            Msg::Rpc(RpcRequest {
+                id: 100 + i,
+                reply_to: r.probe,
+                from_node: 1,
+                kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 150)], max_bytes: 100 },
+            }),
+        );
+    }
+    r.engine.run_until(SECOND);
+    {
+        let reps = replies(&r.inbox);
+        let ack = reps.iter().find(|(_, env)| env.id == 1000).expect("commit answered");
+        assert!(
+            matches!(ack.1.reply, RpcReply::CommitAck { epoch: 1 }),
+            "commit acked: {:?}",
+            ack.1
+        );
+    }
+    let b = r.engine.actor_as::<Broker>(r.broker).unwrap();
+    let log = b.partition(PartitionId(0)).unwrap();
+    assert!(
+        log.start() <= 100,
+        "retention must not pass the committed floor: start {}",
+        log.start()
+    );
+    assert!(b.trimmed_bytes() > 0, "segments below the floor still trim");
+    // A recovery replay from the committed cursor succeeds.
+    assert!(log.read_from(100, 1000).is_ok());
+}
+
+#[test]
+fn commit_for_an_unknown_partition_errors() {
+    let mut r = rig(|_| {});
+    r.engine.schedule(
+        0,
+        r.broker,
+        Msg::Rpc(RpcRequest {
+            id: 7,
+            reply_to: r.probe,
+            from_node: 0,
+            kind: RpcKind::CommitCheckpoint { epoch: 1, cursors: vec![(PartitionId(99), 0)] },
+        }),
+    );
+    r.engine.run_until(SECOND);
+    let reps = replies(&r.inbox);
+    assert!(matches!(&reps[0].1.reply, RpcReply::Error { .. }), "{reps:?}");
 }

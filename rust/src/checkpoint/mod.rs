@@ -1,0 +1,467 @@
+//! Checkpoint & recovery: aligned barriers, state snapshots, exactly-once.
+//!
+//! The defining evolution of stream processing engines (Fragkoulis et al.,
+//! "A Survey on the Evolution of Stream Processing Systems") and a hard
+//! production requirement at scale (Uber, 2104.00087) is checkpoint-based
+//! fault tolerance — and it is also where the paper's pull/push designs
+//! differ most: a pull source resumes from cursors trivially, while a
+//! push/shared-memory source must tear down its subscription, resubscribe
+//! at the restored cursors and replay. This module makes that measurable:
+//!
+//! * [`CheckpointCoordinator`] — an actor that periodically
+//!   (`checkpoint_interval_ms`) starts an epoch by asking every source to
+//!   inject an aligned barrier ([`crate::proto::Msg::BarrierInject`]). The
+//!   barrier flows in-band through the operator exchange channels;
+//!   multi-input tasks align (buffer post-barrier input per channel until
+//!   every upstream's barrier arrived), snapshot their operator state and
+//!   forward the barrier — the classic Chandy-Lamport/Flink protocol.
+//! * [`CheckpointControl`] — the shared blackboard (`Rc<RefCell>`, like
+//!   the plasma store) where participants write their epoch snapshots:
+//!   per-partition source cursors ([`SourceSnapshot`], captured uniformly
+//!   through the [`crate::source::StreamSource::checkpoint`] trait
+//!   extension, so all four source modes checkpoint identically) and
+//!   operator state ([`TaskSnapshot`] of [`crate::ops::OpState`]).
+//! * **Commit** — a completed epoch is committed to the broker via the
+//!   `CommitCheckpoint` RPC; the committed cursors become the floor for
+//!   watermark log trimming, so retention can never pass the last
+//!   restorable point.
+//! * **Recovery** — an injected fault (`fault_at_secs`/`fault_kind`) makes
+//!   the victim wipe its volatile state and report
+//!   [`crate::proto::Msg::FailureDetected`]; the coordinator then rolls
+//!   the *whole* dataflow back (the Flink global-restart model): every
+//!   source and task receives [`crate::proto::Msg::Restore`], resets to
+//!   the latest completed snapshot under a new incarnation number, and
+//!   resumes. Messages stamped with an older incarnation (in-flight
+//!   batches, credits, timers, RPC replies) are dropped on receipt; the
+//!   records between the checkpoint and the fault are replayed from the
+//!   restored cursors and counted exactly once, because every counter they
+//!   touch was rolled back with them.
+//!
+//! The invariant the whole design serves: **a faulted run produces
+//! identical record/window totals to the fault-free run on the same
+//! seed** — see `cluster::tests::exactly_once_*`.
+
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::CostModel;
+use crate::net::{NodeId, SharedNetwork};
+use crate::ops::OpState;
+use crate::proto::{ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::sim::{Actor, ActorId, Ctx, Time};
+
+/// A source's restart position: exclusive per-partition cursors covering
+/// exactly the records already handed downstream before the barrier, plus
+/// the exactly-once counters that roll back with them.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SourceSnapshot {
+    /// Resume cursors, one per owned partition.
+    pub cursors: Vec<(PartitionId, ChunkOffset)>,
+    /// Records handed downstream (or counted in place) so far.
+    pub records_consumed: u64,
+    /// In-place grep matches (native consumers; 0 elsewhere).
+    pub matches: u64,
+    /// Per-member record counts for grouped sources (the push group); empty
+    /// for single-task sources.
+    pub member_records: Vec<u64>,
+}
+
+/// One operator task's snapshot: the state of its operator chain, in chain
+/// order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSnapshot {
+    pub ops: Vec<OpState>,
+}
+
+/// One epoch's gathered snapshots. (Timing lives with the coordinator,
+/// which measures trigger→commit spans itself.)
+#[derive(Debug, Clone, Default)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    pub sources: HashMap<ActorId, SourceSnapshot>,
+    pub tasks: HashMap<ActorId, TaskSnapshot>,
+}
+
+impl EpochRecord {
+    /// The epoch's committed cursors: the union of every source's restart
+    /// positions, taking the minimum where a partition appears twice (the
+    /// restorable floor must cover the lowest restart point).
+    pub fn committed_cursors(&self) -> Vec<(PartitionId, ChunkOffset)> {
+        let mut floor: HashMap<PartitionId, ChunkOffset> = HashMap::new();
+        for snap in self.sources.values() {
+            for &(p, off) in &snap.cursors {
+                let e = floor.entry(p).or_insert(off);
+                *e = (*e).min(off);
+            }
+        }
+        let mut out: Vec<_> = floor.into_iter().collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// The shared checkpoint blackboard: participants write snapshots here and
+/// read them back on restore; the coordinator drives the epoch lifecycle.
+#[derive(Debug, Default)]
+pub struct CheckpointControl {
+    /// The coordinator actor — set by the launcher after it is built, so
+    /// sources and tasks (built first) can address their acks.
+    pub coordinator: Option<ActorId>,
+    /// The epoch currently gathering snapshots.
+    pending: Option<EpochRecord>,
+    /// The latest *completed* epoch — the restore point. Older completed
+    /// epochs are dropped (one restorable point bounds memory).
+    latest: Option<EpochRecord>,
+    /// Worst/total barrier-alignment span across tasks (ns), all epochs.
+    pub align_ns_max: u64,
+    pub align_ns_total: u64,
+    pub align_spans: u64,
+}
+
+/// Shared handle actors hold (same idiom as the plasma store).
+pub type SharedCheckpoint = Rc<RefCell<CheckpointControl>>;
+
+impl CheckpointControl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shared() -> SharedCheckpoint {
+        Rc::new(RefCell::new(Self::new()))
+    }
+
+    /// Start gathering epoch `epoch`. Any leftover pending epoch was
+    /// aborted (a recovery ran) and is discarded.
+    pub fn begin(&mut self, epoch: u64) {
+        self.pending = Some(EpochRecord { epoch, ..Default::default() });
+    }
+
+    /// A source's snapshot for `epoch`. Writes against a stale epoch (the
+    /// participant raced an abort) are dropped.
+    pub fn put_source(&mut self, epoch: u64, actor: ActorId, snap: SourceSnapshot) {
+        if let Some(p) = &mut self.pending {
+            if p.epoch == epoch {
+                p.sources.insert(actor, snap);
+            }
+        }
+    }
+
+    /// A task's snapshot for `epoch`.
+    pub fn put_task(&mut self, epoch: u64, actor: ActorId, snap: TaskSnapshot) {
+        if let Some(p) = &mut self.pending {
+            if p.epoch == epoch {
+                p.tasks.insert(actor, snap);
+            }
+        }
+    }
+
+    /// A task finished aligning after `span` ns (metrics).
+    pub fn note_alignment(&mut self, span: Time) {
+        self.align_ns_max = self.align_ns_max.max(span);
+        self.align_ns_total += span;
+        self.align_spans += 1;
+    }
+
+    /// Promote the pending epoch to the restore point; returns its
+    /// committed cursors for the broker commit.
+    pub fn complete(&mut self, epoch: u64) -> Vec<(PartitionId, ChunkOffset)> {
+        let p = self.pending.take().expect("completing an epoch that was begun");
+        assert_eq!(p.epoch, epoch, "epoch lifecycle out of order");
+        let cursors = p.committed_cursors();
+        self.latest = Some(p);
+        cursors
+    }
+
+    /// Drop the pending epoch (recovery aborted it mid-alignment).
+    pub fn abort(&mut self) -> bool {
+        self.pending.take().is_some()
+    }
+
+    /// The restore point's epoch, if any checkpoint completed yet.
+    pub fn latest_epoch(&self) -> Option<u64> {
+        self.latest.as_ref().map(|e| e.epoch)
+    }
+
+    /// A source's snapshot at the restore point (`None` = restart from the
+    /// initial assignments — no checkpoint completed yet).
+    pub fn source_snapshot(&self, actor: ActorId) -> Option<SourceSnapshot> {
+        self.latest.as_ref().and_then(|e| e.sources.get(&actor)).cloned()
+    }
+
+    /// A task's snapshot at the restore point.
+    pub fn task_snapshot(&self, actor: ActorId) -> Option<TaskSnapshot> {
+        self.latest.as_ref().and_then(|e| e.tasks.get(&actor)).cloned()
+    }
+
+    /// The epoch currently gathering snapshots (tests/introspection).
+    pub fn pending_epoch(&self) -> Option<u64> {
+        self.pending.as_ref().map(|e| e.epoch)
+    }
+}
+
+/// End-of-run checkpoint/recovery accounting, exported as gauges by the
+/// launcher and printed by the `checkpoint` ablation.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointStats {
+    /// Epochs that aligned everywhere and were committed.
+    pub epochs_completed: u64,
+    /// Epochs aborted by a recovery mid-alignment.
+    pub epochs_aborted: u64,
+    /// Interval ticks skipped because the previous epoch was still
+    /// aligning (sustained alignment pressure).
+    pub epochs_skipped: u64,
+    /// Sum/max of trigger→commit spans (ns) over completed epochs.
+    pub epoch_ns_total: u64,
+    pub epoch_ns_max: u64,
+    /// Worst single-task barrier alignment span (ns).
+    pub align_ns_max: u64,
+    /// Mean task alignment span (ns).
+    pub align_ns_mean: u64,
+    /// Recoveries run (fault injections detected).
+    pub recoveries: u64,
+    /// Fault detection → every participant restored, for the last
+    /// recovery (ns).
+    pub last_recovery_ns: u64,
+    /// Commit RPCs acked by the broker.
+    pub commits_acked: u64,
+    /// Records re-read and re-processed after rollbacks (from source
+    /// stats; filled by the launcher).
+    pub records_replayed: u64,
+}
+
+impl CheckpointStats {
+    /// Mean trigger→commit span (ns).
+    pub fn mean_epoch_ns(&self) -> u64 {
+        if self.epochs_completed == 0 {
+            0
+        } else {
+            self.epoch_ns_total / self.epochs_completed
+        }
+    }
+}
+
+/// Static coordinator wiring.
+#[derive(Debug, Clone)]
+pub struct CoordinatorParams {
+    /// Barrier injection period (ns).
+    pub interval_ns: Time,
+    /// Node the coordinator runs on (the colocated worker node).
+    pub node: NodeId,
+    pub broker: ActorId,
+    pub broker_node: NodeId,
+    /// Source actors (barrier injection targets + snapshot participants).
+    pub sources: Vec<ActorId>,
+    /// Operator task actors (snapshot participants).
+    pub tasks: Vec<ActorId>,
+    /// All stream partitions (the genesis commit pins retention at 0 until
+    /// the first epoch completes).
+    pub partitions: Vec<PartitionId>,
+    pub cost: CostModel,
+}
+
+/// In-flight epoch state.
+#[derive(Debug)]
+struct PendingEpoch {
+    epoch: u64,
+    started: Time,
+    acks: Vec<ActorId>,
+}
+
+/// In-flight recovery state.
+#[derive(Debug)]
+struct Recovery {
+    started: Time,
+    acks: Vec<ActorId>,
+}
+
+/// The coordinator actor: epoch lifecycle + failure detection/recovery.
+pub struct CheckpointCoordinator {
+    params: CoordinatorParams,
+    control: SharedCheckpoint,
+    net: SharedNetwork,
+    /// Next epoch number (epochs are 1-based; 0 is the genesis commit).
+    next_epoch: u64,
+    /// Current recovery incarnation (bumped per recovery).
+    inc: u64,
+    pending: Option<PendingEpoch>,
+    recovering: Option<Recovery>,
+    next_rpc: u64,
+    stats: CheckpointStats,
+}
+
+impl CheckpointCoordinator {
+    pub fn new(params: CoordinatorParams, control: SharedCheckpoint, net: SharedNetwork) -> Self {
+        assert!(params.interval_ns > 0, "coordinator needs a positive interval");
+        assert!(!params.sources.is_empty(), "checkpointing needs sources");
+        Self {
+            params,
+            control,
+            net,
+            next_epoch: 1,
+            inc: 0,
+            pending: None,
+            recovering: None,
+            next_rpc: 0,
+            stats: CheckpointStats::default(),
+        }
+    }
+
+    /// Uniform end-of-run stats (alignment spans merged in from the
+    /// shared control, where tasks record them).
+    pub fn stats(&self) -> CheckpointStats {
+        let mut s = self.stats.clone();
+        let c = self.control.borrow();
+        s.align_ns_max = c.align_ns_max;
+        s.align_ns_mean =
+            if c.align_spans == 0 { 0 } else { c.align_ns_total / c.align_spans };
+        s
+    }
+
+    fn participants(&self) -> usize {
+        self.params.sources.len() + self.params.tasks.len()
+    }
+
+    fn commit(&mut self, epoch: u64, cursors: Vec<(PartitionId, ChunkOffset)>, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        let deliver = self
+            .net
+            .borrow_mut()
+            .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        ctx.send_at(
+            deliver,
+            self.params.broker,
+            Msg::Rpc(RpcRequest {
+                id,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind: RpcKind::CommitCheckpoint { epoch, cursors },
+            }),
+        );
+    }
+
+    fn trigger_epoch(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let epoch = self.next_epoch;
+        self.next_epoch += 1;
+        self.control.borrow_mut().begin(epoch);
+        self.pending = Some(PendingEpoch { epoch, started: ctx.now(), acks: Vec::new() });
+        for &s in &self.params.sources {
+            ctx.send_in(self.params.cost.notify_ns, s, Msg::BarrierInject { epoch });
+        }
+    }
+
+    fn on_tick(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        ctx.send_self_in(self.params.interval_ns, Msg::Timer(self.inc));
+        if self.recovering.is_some() {
+            return; // checkpointing pauses while the pipeline restores
+        }
+        if self.pending.is_some() {
+            // Previous epoch still aligning: skip rather than queue —
+            // overlapping barrier waves would confuse alignment.
+            self.stats.epochs_skipped += 1;
+            return;
+        }
+        self.trigger_epoch(ctx);
+    }
+
+    fn on_barrier_ack(&mut self, epoch: u64, from: ActorId, ctx: &mut Ctx<'_, Msg>) {
+        let Some(p) = &mut self.pending else { return };
+        if p.epoch != epoch {
+            return; // stale ack from an aborted epoch
+        }
+        if !p.acks.contains(&from) {
+            p.acks.push(from);
+        }
+        if p.acks.len() < self.participants() {
+            return;
+        }
+        let p = self.pending.take().expect("checked above");
+        let cursors = self.control.borrow_mut().complete(p.epoch);
+        let span = ctx.now() - p.started;
+        self.stats.epochs_completed += 1;
+        self.stats.epoch_ns_total += span;
+        self.stats.epoch_ns_max = self.stats.epoch_ns_max.max(span);
+        self.commit(p.epoch, cursors, ctx);
+    }
+
+    fn on_failure(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.recovering.is_some() {
+            return; // already rolling back; the restore covers this victim
+        }
+        self.stats.recoveries += 1;
+        if self.pending.take().is_some() {
+            self.control.borrow_mut().abort();
+            self.stats.epochs_aborted += 1;
+        }
+        self.inc += 1;
+        // Everything below next_epoch (completed or aborted) is stale to
+        // the restored pipeline; future epochs start at next_epoch.
+        let epoch_floor = self.next_epoch - 1;
+        self.recovering = Some(Recovery { started: ctx.now(), acks: Vec::new() });
+        let restore = Msg::Restore { inc: self.inc, epoch_floor };
+        for &a in self.params.sources.iter().chain(self.params.tasks.iter()) {
+            ctx.send_in(self.params.cost.notify_ns, a, restore.clone());
+        }
+    }
+
+    fn on_restore_ack(&mut self, from: ActorId, ctx: &mut Ctx<'_, Msg>) {
+        let Some(r) = &mut self.recovering else { return };
+        if !r.acks.contains(&from) {
+            r.acks.push(from);
+        }
+        if r.acks.len() < self.participants() {
+            return;
+        }
+        let r = self.recovering.take().expect("checked above");
+        self.stats.last_recovery_ns = ctx.now() - r.started;
+        // The old timer chain died with the old incarnation tag; resume
+        // checkpointing on the new one.
+        ctx.send_self_in(self.params.interval_ns, Msg::Timer(self.inc));
+    }
+}
+
+impl Actor<Msg> for CheckpointCoordinator {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        // Genesis commit: pin retention at offset 0 for every partition so
+        // a recovery before the first completed checkpoint can replay from
+        // the beginning of the log.
+        let cursors: Vec<_> = self.params.partitions.iter().map(|&p| (p, 0)).collect();
+        self.commit(0, cursors, ctx);
+        ctx.send_self_in(self.params.interval_ns, Msg::Timer(self.inc));
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(tag) => {
+                if tag == self.inc {
+                    self.on_tick(ctx);
+                }
+                // A stale tag is a timer chain from before a recovery: let
+                // it die (the recovery completion armed the new chain).
+            }
+            Msg::BarrierAck { epoch, from } => self.on_barrier_ack(epoch, from, ctx),
+            Msg::FailureDetected { .. } => self.on_failure(ctx),
+            Msg::RestoreAck { from } => self.on_restore_ack(from, ctx),
+            Msg::Reply(RpcEnvelope { reply, .. }) => match reply {
+                RpcReply::CommitAck { .. } => self.stats.commits_acked += 1,
+                RpcReply::Error { reason } => {
+                    panic!("checkpoint commit refused by the broker: {reason}")
+                }
+                other => panic!("coordinator: unexpected reply {other:?}"),
+            },
+            other => panic!("coordinator: unexpected {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        "checkpoint-coordinator".into()
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -1,0 +1,252 @@
+//! Checkpoint store + coordinator tests with scripted participants.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::*;
+use crate::config::NetworkProfile;
+use crate::net::Network;
+use crate::proto::{Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply};
+use crate::sim::{Actor, ActorId, Ctx, Engine, MILLIS, SECOND};
+
+// ---------------------------------------------------------------------------
+// Store mechanics (no engine)
+// ---------------------------------------------------------------------------
+
+fn snap(p: usize, off: u64, records: u64) -> SourceSnapshot {
+    SourceSnapshot {
+        cursors: vec![(PartitionId(p), off)],
+        records_consumed: records,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn control_epoch_lifecycle() {
+    let mut c = CheckpointControl::new();
+    assert_eq!(c.latest_epoch(), None);
+    c.begin(1);
+    assert_eq!(c.pending_epoch(), Some(1));
+    c.put_source(1, ActorId(3), snap(0, 7, 700));
+    c.put_task(1, ActorId(4), TaskSnapshot { ops: vec![crate::ops::OpState::Count { total: 9 }] });
+    let cursors = c.complete(1);
+    assert_eq!(cursors, vec![(PartitionId(0), 7)]);
+    assert_eq!(c.latest_epoch(), Some(1));
+    assert_eq!(c.source_snapshot(ActorId(3)).unwrap().records_consumed, 700);
+    assert!(c.task_snapshot(ActorId(4)).is_some());
+    assert!(c.source_snapshot(ActorId(99)).is_none(), "unknown participants have no snapshot");
+}
+
+#[test]
+fn stale_epoch_writes_are_dropped() {
+    let mut c = CheckpointControl::new();
+    c.begin(2);
+    c.put_source(1, ActorId(0), snap(0, 3, 30)); // epoch 1 was aborted
+    let cursors = c.complete(2);
+    assert!(cursors.is_empty(), "stale write must not leak into epoch 2");
+}
+
+#[test]
+fn abort_discards_the_pending_epoch() {
+    let mut c = CheckpointControl::new();
+    c.begin(1);
+    c.put_source(1, ActorId(0), snap(0, 3, 30));
+    assert!(c.abort());
+    assert!(!c.abort(), "nothing left to abort");
+    assert_eq!(c.latest_epoch(), None, "an aborted epoch is not a restore point");
+}
+
+#[test]
+fn committed_cursors_take_the_minimum_per_partition() {
+    let mut e = EpochRecord::default();
+    e.sources.insert(ActorId(0), snap(0, 9, 0));
+    e.sources.insert(
+        ActorId(1),
+        SourceSnapshot {
+            cursors: vec![(PartitionId(0), 4), (PartitionId(1), 6)],
+            ..Default::default()
+        },
+    );
+    assert_eq!(
+        e.committed_cursors(),
+        vec![(PartitionId(0), 4), (PartitionId(1), 6)],
+        "the restorable floor covers the lowest restart point"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator lifecycle with scripted participants
+// ---------------------------------------------------------------------------
+
+type Commits = Rc<RefCell<Vec<(u64, Vec<(PartitionId, u64)>)>>>;
+
+/// Stands in for the broker: records commits, acks them.
+struct AckBroker {
+    commits: Commits,
+}
+
+impl Actor<Msg> for AckBroker {
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        let Msg::Rpc(req) = msg else { panic!("fake broker got {msg:?}") };
+        let RpcKind::CommitCheckpoint { epoch, cursors } = req.kind else {
+            panic!("fake broker only serves commits")
+        };
+        self.commits.borrow_mut().push((epoch, cursors));
+        ctx.send(
+            req.reply_to,
+            Msg::Reply(RpcEnvelope { id: req.id, reply: RpcReply::CommitAck { epoch } }),
+        );
+    }
+}
+
+/// A scripted participant: snapshots + acks barriers (when cooperative),
+/// forwards them in-band to its downstream (sources do, in the real
+/// protocol), acks restores, reports injected faults.
+struct Participant {
+    control: SharedCheckpoint,
+    as_task: bool,
+    cooperative: bool,
+    downstream: Option<ActorId>,
+    restores_seen: Rc<RefCell<Vec<u64>>>,
+}
+
+impl Participant {
+    fn coordinator(&self) -> ActorId {
+        self.control.borrow().coordinator.expect("coordinator wired")
+    }
+}
+
+impl Actor<Msg> for Participant {
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::BarrierInject { epoch } | Msg::Barrier { epoch, .. } => {
+                if !self.cooperative {
+                    return; // never aligns: the epoch must stall, not wedge others
+                }
+                {
+                    let mut c = self.control.borrow_mut();
+                    if self.as_task {
+                        c.put_task(epoch, ctx.self_id(), TaskSnapshot { ops: vec![] });
+                    } else {
+                        c.put_source(epoch, ctx.self_id(), snap(0, epoch, 10 * epoch));
+                    }
+                }
+                let coord = self.coordinator();
+                ctx.send(coord, Msg::BarrierAck { epoch, from: ctx.self_id() });
+                if let Some(d) = self.downstream {
+                    ctx.send(d, Msg::Barrier { epoch, from_task: 0 });
+                }
+            }
+            Msg::Restore { inc, .. } => {
+                self.restores_seen.borrow_mut().push(inc);
+                let coord = self.coordinator();
+                ctx.send(coord, Msg::RestoreAck { from: ctx.self_id() });
+            }
+            Msg::Fault { .. } => {
+                let coord = self.coordinator();
+                ctx.send(coord, Msg::FailureDetected { from: ctx.self_id() });
+            }
+            _ => {}
+        }
+    }
+}
+
+struct Rig {
+    engine: Engine<Msg>,
+    coordinator: ActorId,
+    source: ActorId,
+    commits: Commits,
+    restores: Rc<RefCell<Vec<u64>>>,
+    control: SharedCheckpoint,
+}
+
+fn rig(cooperative_task: bool) -> Rig {
+    let mut engine = Engine::new(3);
+    let control = CheckpointControl::shared();
+    let net = Network::shared(NetworkProfile::INFINIBAND, NetworkProfile::LOOPBACK);
+    let commits: Commits = Rc::new(RefCell::new(Vec::new()));
+    let restores = Rc::new(RefCell::new(Vec::new()));
+    let broker = engine.add_actor(Box::new(AckBroker { commits: commits.clone() }));
+    let task = engine.add_actor(Box::new(Participant {
+        control: control.clone(),
+        as_task: true,
+        cooperative: cooperative_task,
+        downstream: None,
+        restores_seen: restores.clone(),
+    }));
+    let source = engine.add_actor(Box::new(Participant {
+        control: control.clone(),
+        as_task: false,
+        cooperative: true,
+        downstream: Some(task),
+        restores_seen: restores.clone(),
+    }));
+    let coordinator = engine.add_actor(Box::new(CheckpointCoordinator::new(
+        CoordinatorParams {
+            interval_ns: 100 * MILLIS,
+            node: 0,
+            broker,
+            broker_node: 0,
+            sources: vec![source],
+            tasks: vec![task],
+            partitions: vec![PartitionId(0), PartitionId(1)],
+            cost: Default::default(),
+        },
+        control.clone(),
+        net,
+    )));
+    control.borrow_mut().coordinator = Some(coordinator);
+    Rig { engine, coordinator, source, commits, restores, control }
+}
+
+fn coordinator_stats(r: &mut Rig) -> CheckpointStats {
+    r.engine.actor_as::<CheckpointCoordinator>(r.coordinator).unwrap().stats()
+}
+
+#[test]
+fn epochs_complete_and_commit_on_the_interval() {
+    let mut r = rig(true);
+    r.engine.run_until(SECOND);
+    let stats = coordinator_stats(&mut r);
+    // 100 ms interval over 1 s: the first trigger fires at 100 ms.
+    assert!(stats.epochs_completed >= 8, "epochs: {stats:?}");
+    assert_eq!(stats.epochs_aborted, 0);
+    assert_eq!(stats.recoveries, 0);
+    let commits = r.commits.borrow();
+    // Genesis (epoch 0, all partitions at 0) + one commit per epoch.
+    assert_eq!(commits[0].0, 0);
+    assert_eq!(commits[0].1, vec![(PartitionId(0), 0), (PartitionId(1), 0)]);
+    assert_eq!(commits.len() as u64, 1 + stats.epochs_completed);
+    // Committed cursors advance with the source snapshots (epoch = offset).
+    let (last_epoch, last_cursors) = commits.last().unwrap().clone();
+    assert_eq!(last_cursors, vec![(PartitionId(0), last_epoch)]);
+    assert_eq!(stats.commits_acked, commits.len() as u64);
+    assert_eq!(r.control.borrow().latest_epoch(), Some(last_epoch));
+}
+
+#[test]
+fn a_stalled_participant_stalls_the_epoch_not_the_coordinator() {
+    let mut r = rig(false); // the task never acks
+    r.engine.run_until(SECOND);
+    let stats = coordinator_stats(&mut r);
+    assert_eq!(stats.epochs_completed, 0, "no epoch can complete without the task");
+    assert!(stats.epochs_skipped >= 7, "ticks keep firing and skipping: {stats:?}");
+    assert_eq!(r.commits.borrow().len(), 1, "only the genesis commit went out");
+}
+
+#[test]
+fn failure_aborts_restores_and_resumes_checkpointing() {
+    let mut r = rig(true);
+    // Inject the fault into the source participant mid-run.
+    r.engine.schedule(450 * MILLIS, r.source, Msg::Fault { kind: crate::config::FaultKind::Source });
+    r.engine.run_until(SECOND);
+    let stats = coordinator_stats(&mut r);
+    assert_eq!(stats.recoveries, 1);
+    assert!(stats.last_recovery_ns > 0, "recovery span measured: {stats:?}");
+    // Both participants were restored exactly once, at incarnation 1.
+    assert_eq!(*r.restores.borrow(), vec![1, 1]);
+    // Checkpointing resumed after the recovery: epochs kept completing.
+    assert!(stats.epochs_completed >= 6, "post-recovery epochs: {stats:?}");
+    let commits = r.commits.borrow();
+    assert_eq!(commits.len() as u64, 1 + stats.epochs_completed);
+}

@@ -22,8 +22,11 @@
 mod tests;
 
 use crate::broker::{Broker, BrokerParams, DEFAULT_SEGMENT_BYTES};
+use crate::checkpoint::{
+    CheckpointControl, CheckpointCoordinator, CheckpointStats, CoordinatorParams,
+};
 use crate::compute::SharedCompute;
-use crate::config::{DataPlane, ExperimentConfig};
+use crate::config::{DataPlane, ExperimentConfig, FaultKind};
 use crate::metrics::{Class, ExperimentReport, MetricsHub, SharedMetrics};
 use crate::net::{Network, SharedNetwork};
 use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedSumOp};
@@ -31,7 +34,7 @@ use crate::pipeline::{OpKind, Pipeline};
 use crate::plasma::{ObjectStore, SharedStore};
 use crate::producer::{WriteStats, WriterActor, WriterRegistry, WriterWiring};
 use crate::proto::{Msg, PartitionId};
-use crate::sim::{ActorId, Engine, SECOND};
+use crate::sim::{ActorId, Engine, MILLIS, SECOND};
 use crate::source::{SourceActor, SourceRegistry, SourceStats, SourceWiring, StatKey};
 use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
 
@@ -57,6 +60,8 @@ pub struct Cluster {
     pub sources: Vec<ActorId>,
     pub tasks: Vec<ActorId>,
     pub pipeline: Option<Pipeline>,
+    /// The checkpoint coordinator, when `checkpoint_interval_ms > 0`.
+    pub coordinator: Option<ActorId>,
 }
 
 /// End-of-run summary: the report plus cross-checkable totals.
@@ -80,10 +85,15 @@ pub struct RunSummary {
     /// Total tuples logged by the RTLogger points (records for count/
     /// filter pipelines, tokens for word-count pipelines).
     pub tuples_logged: u64,
+    /// Tuples aggregated by windowed-sum operators (rolled back with the
+    /// operator snapshots, so it cross-checks exactly-once under faults).
+    pub windowed_tuples: u64,
     /// Aggregated per-source statistics (uniform across all modes).
     pub sources: SourceStats,
     /// Aggregated per-writer statistics (uniform across all write modes).
     pub writers: WriteStats,
+    /// Checkpoint/recovery accounting (all zero when checkpointing is off).
+    pub checkpoints: CheckpointStats,
 }
 
 /// Build a cluster from a config with the built-in source and write modes.
@@ -114,6 +124,7 @@ pub fn launch_with(
     let store = ObjectStore::shared();
     let registry = TaskRegistry::shared();
     let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+    let checkpoint = (config.checkpoint_interval_ms > 0).then(CheckpointControl::shared);
 
     // ---- brokers -------------------------------------------------------
     let backup = (config.replication == 2).then(|| {
@@ -181,6 +192,14 @@ pub fn launch_with(
         }
         for (si, stage) in p.stages.iter().enumerate() {
             let downstream: Vec<usize> = stage_task_idxs.get(si + 1).cloned().unwrap_or_default();
+            // Stage 0 is fed by the logical source tasks (indices 0..Nc);
+            // later stages by the previous stage — the channel set a
+            // checkpoint barrier aligns over.
+            let upstream: Vec<usize> = if si == 0 {
+                (0..config.nc).collect()
+            } else {
+                stage_task_idxs[si - 1].clone()
+            };
             for &task_idx in &stage_task_idxs[si] {
                 let op = make_op(stage.op, config, &downstream, &compute);
                 let task = OperatorTask::new(
@@ -188,8 +207,10 @@ pub fn launch_with(
                         task_idx,
                         queue_cap: config.queue_cap,
                         downstream: downstream.clone(),
+                        upstream: upstream.clone(),
                         tick_ns: config.window_slide_secs * SECOND,
                         cost: config.cost.clone(),
+                        checkpoint: checkpoint.clone(),
                     },
                     vec![op],
                     registry.clone(),
@@ -215,8 +236,44 @@ pub fn launch_with(
         store: store.clone(),
         registry: registry.clone(),
         compute: compute.clone(),
+        checkpoint: checkpoint.clone(),
     };
     let sources = factory.build(&wiring, &mut engine);
+
+    // ---- checkpoint coordinator + fault injection ------------------------
+    let coordinator = checkpoint.as_ref().map(|cp| {
+        let id = engine.add_actor(Box::new(CheckpointCoordinator::new(
+            CoordinatorParams {
+                interval_ns: config.checkpoint_interval_ms * MILLIS,
+                node: NODE_COLOCATED,
+                broker,
+                broker_node: NODE_COLOCATED,
+                sources: sources.clone(),
+                tasks: tasks.clone(),
+                partitions: partitions.clone(),
+                cost: config.cost.clone(),
+            },
+            cp.clone(),
+            net.clone(),
+        )));
+        // Sources and tasks were built first; close the loop so their
+        // barrier/failure acks can address the coordinator.
+        cp.borrow_mut().coordinator = Some(id);
+        id
+    });
+    if config.fault_at_secs > 0 {
+        let victim = match config.fault_kind {
+            // Engine-less modes (native) have no worker tasks; the fault
+            // falls back to a source so every mode stays faultable.
+            FaultKind::Worker => tasks.first().copied().unwrap_or(sources[0]),
+            FaultKind::Source => sources[0],
+        };
+        engine.schedule(
+            config.fault_at_secs * SECOND,
+            victim,
+            Msg::Fault { kind: config.fault_kind },
+        );
+    }
 
     Cluster {
         engine,
@@ -231,6 +288,7 @@ pub fn launch_with(
         sources,
         tasks,
         pipeline,
+        coordinator,
     }
 }
 
@@ -269,14 +327,19 @@ impl Cluster {
     /// Collect gauges + totals and build the report.
     pub fn finish(mut self) -> RunSummary {
         let now = self.engine.now();
-        // Broker utilisation gauges.
-        if let Some(b) = self.engine.actor_as::<Broker>(self.broker) {
-            b.export_gauges(now, "broker");
-        }
+        // Broker utilisation gauges. A broker actor that fails the
+        // downcast is a hard error — silently skipping the export would
+        // strip the utilisation gauges every figure reads, the same
+        // corruption rationale as the source-stats panic below.
+        self.engine
+            .actor_as::<Broker>(self.broker)
+            .unwrap_or_else(|| panic!("broker {} is not a Broker actor", self.broker))
+            .export_gauges(now, "broker");
         if let Some(backup) = self.backup {
-            if let Some(b) = self.engine.actor_as::<Broker>(backup) {
-                b.export_gauges(now, "backup");
-            }
+            self.engine
+                .actor_as::<Broker>(backup)
+                .unwrap_or_else(|| panic!("backup {backup} is not a Broker actor"))
+                .export_gauges(now, "backup");
         }
         // Source-side totals, through the uniform trait API. A source that
         // is not a registry-built `SourceActor` is a hard error — silently
@@ -304,6 +367,7 @@ impl Cluster {
         let planted = writer_stats.planted;
         // Operator state (matches, windows).
         let mut windows_fired = 0;
+        let mut windowed_tuples = 0;
         for &tid in &self.tasks {
             if let Some(t) = self.engine.actor_as::<OperatorTask>(tid) {
                 if let Some(f) = t.op_as::<FilterOp>(0) {
@@ -311,9 +375,19 @@ impl Cluster {
                 }
                 if let Some(w) = t.op_as::<WindowedSumOp>(0) {
                     windows_fired += w.windows_fired;
+                    windowed_tuples += w.total_tuples;
                 }
             }
         }
+        // Checkpoint/recovery accounting, through the coordinator.
+        let mut checkpoints = CheckpointStats::default();
+        if let Some(cid) = self.coordinator {
+            let c = self.engine.actor_as::<CheckpointCoordinator>(cid).unwrap_or_else(|| {
+                panic!("coordinator {cid} is not a CheckpointCoordinator actor")
+            });
+            checkpoints = c.stats();
+        }
+        checkpoints.records_replayed = source_stats.extra(StatKey::RecordsReplayed);
         {
             let mut m = self.metrics.borrow_mut();
             m.set_gauge("source_threads", source_threads as f64);
@@ -328,6 +402,17 @@ impl Cluster {
             );
             m.set_gauge("store_reserved_bytes", self.store.borrow().reserved_bytes() as f64);
             m.set_gauge("cross_node_bytes", self.net.borrow().cross_node_bytes() as f64);
+            if self.coordinator.is_some() {
+                m.set_gauge("checkpoint.epochs", checkpoints.epochs_completed as f64);
+                m.set_gauge("checkpoint.epochs_skipped", checkpoints.epochs_skipped as f64);
+                m.set_gauge("checkpoint.mean_epoch_ms", checkpoints.mean_epoch_ns() as f64 / 1e6);
+                m.set_gauge("checkpoint.max_epoch_ms", checkpoints.epoch_ns_max as f64 / 1e6);
+                m.set_gauge("checkpoint.max_align_ms", checkpoints.align_ns_max as f64 / 1e6);
+                m.set_gauge("checkpoint.mean_align_ms", checkpoints.align_ns_mean as f64 / 1e6);
+                m.set_gauge("checkpoint.recoveries", checkpoints.recoveries as f64);
+                m.set_gauge("checkpoint.recovery_ms", checkpoints.last_recovery_ns as f64 / 1e6);
+                m.set_gauge("checkpoint.replayed_records", checkpoints.records_replayed as f64);
+            }
             if let Some(c) = &self.compute {
                 let st = c.stats();
                 m.set_gauge("compute_kernel_calls", (st.filter_calls + st.wordcount_calls) as f64);
@@ -349,11 +434,13 @@ impl Cluster {
             planted,
             matches,
             windows_fired,
+            windowed_tuples,
             pull_rpcs: metrics.total(Class::PullRpcs),
             objects_filled: metrics.total(Class::ObjectsFilled),
             tuples_logged: metrics.total(Class::ConsumerTuples),
             sources: source_stats,
             writers: writer_stats,
+            checkpoints,
         }
     }
 }

@@ -94,6 +94,35 @@ impl WriteMode {
     }
 }
 
+/// What the injected fault kills (sim-plane fault injection; see the
+/// `checkpoint` module for the recovery protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Kill an operator task on the processing worker. Engine-less modes
+    /// (the native baseline) have no worker tasks, so the fault falls back
+    /// to a source there.
+    Worker,
+    /// Kill a source reader.
+    Source,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "worker" | "task" => Some(Self::Worker),
+            "source" | "reader" => Some(Self::Source),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Worker => "worker",
+            Self::Source => "source",
+        }
+    }
+}
+
 /// The benchmark applications of §V-B (Table II).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Workload {
@@ -232,6 +261,15 @@ pub struct ExperimentConfig {
     /// Hybrid: fall back push→pull when no shared object arrives for this
     /// long (ms).
     pub hybrid_idle_ms: u64,
+    /// Checkpointing: aligned-barrier interval (ms); 0 disables the
+    /// checkpoint subsystem entirely (no coordinator is built).
+    pub checkpoint_interval_ms: u64,
+    /// Fault injection: kill `fault_kind`'s victim at this virtual second;
+    /// 0 disables. Requires checkpointing (recovery needs a restorable
+    /// floor protecting the broker log from retention).
+    pub fault_at_secs: u64,
+    /// Fault injection: what the fault kills.
+    pub fault_kind: FaultKind,
     /// RNG seed.
     pub seed: u64,
     /// Cost model.
@@ -274,6 +312,9 @@ impl Default for ExperimentConfig {
             hybrid_latency_us: 200,
             hybrid_cooldown_ms: 1000,
             hybrid_idle_ms: 200,
+            checkpoint_interval_ms: 0,
+            fault_at_secs: 0,
+            fault_kind: FaultKind::Worker,
             seed: 0x5E77A_57F3A,
             cost: CostModel::default(),
         }
@@ -354,6 +395,21 @@ impl ExperimentConfig {
         }
         if self.hybrid_idle_ms == 0 {
             return Err("hybrid_idle_ms must be positive".into());
+        }
+        if self.fault_at_secs > 0 {
+            if self.checkpoint_interval_ms == 0 {
+                return Err(
+                    "fault injection needs checkpointing (checkpoint_interval_ms > 0): \
+                     without a committed floor, retention may trim the replay data"
+                        .into(),
+                );
+            }
+            if self.fault_at_secs >= self.duration_secs {
+                return Err(format!(
+                    "fault_at_secs={} must fall inside the run (duration {} s)",
+                    self.fault_at_secs, self.duration_secs
+                ));
+            }
         }
         Ok(())
     }
@@ -451,6 +507,15 @@ impl ExperimentConfig {
             }
             "hybrid_idle_ms" => {
                 self.hybrid_idle_ms = value.parse().map_err(|_| bad(key, value))?
+            }
+            "checkpoint_interval_ms" => {
+                self.checkpoint_interval_ms = value.parse().map_err(|_| bad(key, value))?
+            }
+            "fault_at_secs" | "fault_at" => {
+                self.fault_at_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "fault_kind" => {
+                self.fault_kind = FaultKind::parse(value).ok_or_else(|| bad(key, value))?
             }
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             _ if key.starts_with("cost.") => self.cost.apply_one(&key[5..], value)?,

@@ -205,6 +205,62 @@ mod experiment {
     }
 
     #[test]
+    fn checkpoint_config_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.checkpoint_interval_ms, 0, "checkpointing is opt-in");
+        assert_eq!(cfg.fault_at_secs, 0, "fault injection is opt-in");
+        let kv = parse_overrides([
+            "checkpoint_interval_ms=500",
+            "fault_at_secs=20",
+            "fault_kind=source",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.checkpoint_interval_ms, 500);
+        assert_eq!(cfg.fault_at_secs, 20);
+        assert_eq!(cfg.fault_kind, FaultKind::Source);
+        cfg.validate().unwrap();
+        // And through the file parser, with the shorthand + worker kind.
+        let kv = parse_kv_file("checkpoint_interval_ms = 250\nfault_at = 10\nfault_kind = worker\n")
+            .unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply(&kv).unwrap();
+        assert_eq!(cfg2.checkpoint_interval_ms, 250);
+        assert_eq!(cfg2.fault_at_secs, 10);
+        assert_eq!(cfg2.fault_kind, FaultKind::Worker);
+        cfg2.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_kind_names_round_trip() {
+        for kind in [FaultKind::Worker, FaultKind::Source] {
+            assert_eq!(FaultKind::parse(kind.name()), Some(kind), "{}", kind.name());
+        }
+        assert_eq!(FaultKind::parse("task"), Some(FaultKind::Worker));
+        assert_eq!(FaultKind::parse("reader"), Some(FaultKind::Source));
+        assert_eq!(FaultKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validate_rejects_fault_without_checkpointing() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fault_at_secs = 10;
+        assert!(cfg.validate().is_err(), "recovery needs a committed retention floor");
+        cfg.checkpoint_interval_ms = 500;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_fault_outside_the_run() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.checkpoint_interval_ms = 500;
+        cfg.fault_at_secs = cfg.duration_secs;
+        assert!(cfg.validate().is_err());
+        cfg.fault_at_secs = cfg.duration_secs - 1;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn unknown_key_is_error() {
         let mut cfg = ExperimentConfig::default();
         let kv = parse_overrides(["bogus=1"]).unwrap();

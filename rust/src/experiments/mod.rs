@@ -10,7 +10,7 @@
 mod tests;
 
 use crate::cluster::{launch, RunSummary};
-use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
+use crate::config::{ExperimentConfig, FaultKind, SourceMode, Workload, WriteMode};
 
 /// Chunk sizes the paper sweeps (KiB): "values=1,2,4,8,16,32,64,128".
 pub const CHUNK_SIZES_KIB: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
@@ -349,6 +349,58 @@ pub fn ablation_writepath(duration: u64, chunk_sizes: &[usize]) -> FigureSpec {
     }
 }
 
+/// Ablation — checkpoint & recovery: the cost of exactly-once across the
+/// source/write design space, on the Fig. 4-style count workload. For each
+/// (source mode × write mode) cell, three rows: `base` (no checkpointing —
+/// the overhead reference), `ckpt` (aligned barriers every 500 ms), and
+/// `fault` (checkpointing plus a mid-run worker kill and recovery).
+/// Quantifies what the paper never measured: checkpoint overhead, barrier
+/// alignment time, and recovery time differ between the pull design
+/// (rewind a cursor) and the push/shared-memory design (resubscribe and
+/// replay).
+pub fn ablation_checkpoint(duration: u64) -> FigureSpec {
+    let smodes = [SourceMode::Pull, SourceMode::Push, SourceMode::Hybrid];
+    let mut rows = Vec::new();
+    for &wmode in &WriteMode::ALL {
+        for &smode in &smodes {
+            for variant in ["base", "ckpt", "fault"] {
+                let mut c = base(duration);
+                c.np = 4;
+                c.nc = 4;
+                c.nmap = 8;
+                c.ns = 8;
+                c.producer_chunk = 16 * 1024;
+                c.consumer_chunk = 128 * 1024;
+                c.record_size = 100;
+                c.broker_cores = 16;
+                c.mode = smode;
+                c.write_mode = wmode;
+                c.workload = Workload::Count;
+                if variant != "base" {
+                    c.checkpoint_interval_ms = 500;
+                }
+                if variant == "fault" {
+                    c.fault_at_secs = (duration / 2).max(1);
+                    c.fault_kind = FaultKind::Worker;
+                }
+                c.name = format!("{}+{}-{}", smode.name(), wmode.name(), variant);
+                rows.push((c.name.clone(), c));
+            }
+        }
+    }
+    FigureSpec {
+        id: "ablation-checkpoint",
+        title: "Checkpoint & recovery: sources (pull/push/hybrid) x writers \
+                (sync/pipelined/sharedmem), count workload",
+        expectation: "checkpointing costs a few percent of throughput (barrier \
+                      alignment stalls the emit loop); pull recovers by rewinding \
+                      cursors while push must resubscribe and replay, so push \
+                      recovery/replay is costlier; faulted rows report non-zero \
+                      recovery time and replayed records",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
@@ -358,6 +410,9 @@ pub fn ablations(duration: u64) -> Vec<FigureSpec> {
 
     // (0b) the write-path modes against the source modes (quick sweep).
     specs.push(ablation_writepath(duration, &[4, 128]));
+
+    // (0c) checkpoint & recovery across the source/write design space.
+    specs.push(ablation_checkpoint(duration));
 
     // (a) push backpressure window: objects per source.
     let mut rows = Vec::new();
@@ -482,6 +537,20 @@ pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
                 summary.report.gauge("write_append_latency_us").unwrap_or(0.0),
                 summary.writers.appends_acked,
                 summary.writers.extra(crate::producer::WriteStatKey::Errors),
+            );
+        }
+        if spec.id == "ablation-checkpoint" && config.checkpoint_interval_ms > 0 {
+            let ck = &summary.checkpoints;
+            println!(
+                "      ckpt: epochs {:>3} (skipped {})  mean epoch {:>7.3} ms  \
+                 max align {:>7.3} ms  recoveries {}  recovery {:>7.3} ms  replayed {}",
+                ck.epochs_completed,
+                ck.epochs_skipped,
+                ck.mean_epoch_ns() as f64 / 1e6,
+                ck.align_ns_max as f64 / 1e6,
+                ck.recoveries,
+                ck.last_recovery_ns as f64 / 1e6,
+                ck.records_replayed,
             );
         }
         out.push(summary);

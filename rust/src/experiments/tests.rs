@@ -144,6 +144,48 @@ fn writepath_ablation_reports_append_latency() {
 }
 
 #[test]
+fn checkpoint_ablation_sweeps_modes_and_variants() {
+    let spec = ablation_checkpoint(10);
+    // 3 write modes x 3 source modes x {base, ckpt, fault}.
+    assert_eq!(spec.rows.len(), 3 * 3 * 3);
+    for (label, c) in &spec.rows {
+        c.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        if c.fault_at_secs > 0 {
+            assert!(c.checkpoint_interval_ms > 0, "{label}: faults need checkpoints");
+            assert!(c.fault_at_secs < c.duration_secs);
+        }
+    }
+    let smodes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.mode.name()).collect();
+    for mode in ["pull", "push", "hybrid"] {
+        assert!(smodes.contains(mode), "missing source mode {mode}");
+    }
+    let wmodes: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.write_mode.name()).collect();
+    for mode in ["sync", "pipelined", "sharedmem"] {
+        assert!(wmodes.contains(mode), "missing write mode {mode}");
+    }
+    assert!(spec.rows.iter().any(|(l, c)| l.ends_with("-base") && c.checkpoint_interval_ms == 0));
+    assert!(spec.rows.iter().any(|(l, c)| l.ends_with("-fault") && c.fault_at_secs > 0));
+}
+
+#[test]
+fn checkpoint_ablation_reports_recovery_gauges() {
+    let mut spec = ablation_checkpoint(4);
+    // Keep one checkpointing row and one faulted row (pull+sync cell).
+    spec.rows.retain(|(l, _)| l == "pull+sync-ckpt" || l == "pull+sync-fault");
+    assert_eq!(spec.rows.len(), 2);
+    let summaries = run_figure(&spec);
+    for s in &summaries {
+        assert!(s.checkpoints.epochs_completed > 0, "epochs ran");
+        assert!(s.report.gauge("checkpoint.epochs").unwrap() > 0.0);
+    }
+    let faulted = &summaries[1];
+    assert_eq!(faulted.checkpoints.recoveries, 1, "the injected fault recovered");
+    assert!(faulted.report.gauge("checkpoint.recovery_ms").unwrap() > 0.0);
+}
+
+#[test]
 fn table2_lists_all_benchmarks() {
     let t = table2();
     for fig in ["Fig.4", "Fig.5", "Fig.6", "Fig.7", "Fig.8", "Fig.9"] {

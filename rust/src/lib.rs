@@ -38,12 +38,30 @@
 //! object exhaustion replaces RPC pacing as write backpressure). All
 //! writers report uniform [`producer::WriteStats`], retry rejected appends
 //! with bounded backoff and surface [`producer::WriteError`] instead of
-//! panicking. [`experiments`] regenerates every figure of the paper's
-//! evaluation plus the pull/push/hybrid and write-path ablations.
+//! panicking.
+//!
+//! **Fault tolerance** is the third axis: with `checkpoint_interval_ms`
+//! set, a [`checkpoint::CheckpointCoordinator`] periodically injects
+//! aligned barriers at every source; barriers flow in-band through the
+//! operator exchange channels, multi-input tasks align and snapshot their
+//! operator state ([`ops::OpState`]), and every source captures its
+//! per-partition cursors uniformly through the
+//! [`source::StreamSource::checkpoint`] trait extension — so all four
+//! modes checkpoint identically. Completed epochs are committed to the
+//! broker (`CommitCheckpoint`), whose cursors become the floor for
+//! watermark log trimming: retention can never pass the last restorable
+//! point. `fault_at_secs`/`fault_kind` inject a worker- or source-kill on
+//! the sim plane; recovery rolls the whole dataflow back to the last
+//! completed checkpoint and replays — a faulted run reports identical
+//! record/window totals to the fault-free run on the same seed
+//! (exactly-once). [`experiments`] regenerates every figure of the paper's
+//! evaluation plus the pull/push/hybrid, write-path and
+//! checkpoint/recovery ablations.
 
 pub mod config;
 pub mod sim;
 pub mod broker;
+pub mod checkpoint;
 pub mod metrics;
 pub mod net;
 pub mod plasma;

@@ -37,6 +37,38 @@ pub struct OpOutput {
     pub tuples_logged: u64,
 }
 
+/// A checkpointed operator state — what an aligned-barrier snapshot
+/// captures and recovery restores. One variant per built-in operator;
+/// out-of-tree stateless operators use [`OpState::Stateless`] (the trait
+/// default).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpState {
+    /// The operator carries no state worth checkpointing.
+    Stateless,
+    Count {
+        total: u64,
+    },
+    Filter {
+        total: u64,
+        matches: u64,
+    },
+    Tokenizer {
+        tokens_emitted: u64,
+    },
+    KeyedSum {
+        counts: Vec<i64>,
+        total_tuples: u64,
+    },
+    WindowedSum {
+        slides: Vec<Vec<i32>>,
+        current: Vec<i32>,
+        current_tuples: u64,
+        total_tuples: u64,
+        windows_fired: u64,
+        last_window_tuples: u64,
+    },
+}
+
 /// A streaming operator driven by an [`crate::worker::OperatorTask`].
 pub trait Operator {
     fn name(&self) -> &'static str;
@@ -56,6 +88,18 @@ pub trait Operator {
     fn wants_ticks(&self) -> bool {
         false
     }
+
+    /// Checkpoint the operator's state (taken at an aligned barrier, after
+    /// every pre-barrier batch was applied). Stateless operators keep the
+    /// default.
+    fn snapshot(&self) -> OpState {
+        OpState::Stateless
+    }
+
+    /// Restore state captured by [`Operator::snapshot`] (recovery rollback).
+    /// Implementations panic on a mismatched variant — a snapshot can only
+    /// legally come from the same operator kind at the same task.
+    fn restore(&mut self, _state: &OpState) {}
 
     /// Downcast hook for end-of-run state inspection.
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
@@ -86,6 +130,17 @@ impl Operator for CountOp {
         self.total += batch.tuples;
         out.tuples_logged = batch.tuples;
         Ok(())
+    }
+
+    fn snapshot(&self) -> OpState {
+        OpState::Count { total: self.total }
+    }
+
+    fn restore(&mut self, state: &OpState) {
+        let OpState::Count { total } = state else {
+            panic!("count op: mismatched snapshot {state:?}")
+        };
+        self.total = *total;
     }
 }
 
@@ -128,6 +183,18 @@ impl Operator for FilterOp {
         self.total += batch.tuples;
         out.tuples_logged = batch.tuples;
         Ok(())
+    }
+
+    fn snapshot(&self) -> OpState {
+        OpState::Filter { total: self.total, matches: self.matches }
+    }
+
+    fn restore(&mut self, state: &OpState) {
+        let OpState::Filter { total, matches } = state else {
+            panic!("filter op: mismatched snapshot {state:?}")
+        };
+        self.total = *total;
+        self.matches = *matches;
     }
 }
 
@@ -199,6 +266,7 @@ impl Operator for TokenizerOp {
                         bytes: tuples * 8,
                         chunks: Vec::new(),
                         hist: Some(std::rc::Rc::new(range.to_vec())),
+                        inc: 0,
                     },
                 ));
             }
@@ -220,11 +288,23 @@ impl Operator for TokenizerOp {
                         bytes: tuples * 8,
                         chunks: Vec::new(),
                         hist: None,
+                        inc: 0,
                     },
                 ));
             }
         }
         Ok(())
+    }
+
+    fn snapshot(&self) -> OpState {
+        OpState::Tokenizer { tokens_emitted: self.tokens_emitted }
+    }
+
+    fn restore(&mut self, state: &OpState) {
+        let OpState::Tokenizer { tokens_emitted } = state else {
+            panic!("tokenizer op: mismatched snapshot {state:?}")
+        };
+        self.tokens_emitted = *tokens_emitted;
     }
 }
 
@@ -279,6 +359,18 @@ impl Operator for KeyedSumOp {
         self.total_tuples += batch.tuples;
         out.tuples_logged = batch.tuples;
         Ok(())
+    }
+
+    fn snapshot(&self) -> OpState {
+        OpState::KeyedSum { counts: self.counts.clone(), total_tuples: self.total_tuples }
+    }
+
+    fn restore(&mut self, state: &OpState) {
+        let OpState::KeyedSum { counts, total_tuples } = state else {
+            panic!("keyed-sum op: mismatched snapshot {state:?}")
+        };
+        self.counts = counts.clone();
+        self.total_tuples = *total_tuples;
     }
 }
 
@@ -372,5 +464,36 @@ impl Operator for WindowedSumOp {
 
     fn wants_ticks(&self) -> bool {
         true
+    }
+
+    fn snapshot(&self) -> OpState {
+        OpState::WindowedSum {
+            slides: self.slides.iter().cloned().collect(),
+            current: self.current.clone(),
+            current_tuples: self.current_tuples,
+            total_tuples: self.total_tuples,
+            windows_fired: self.windows_fired,
+            last_window_tuples: self.last_window_tuples,
+        }
+    }
+
+    fn restore(&mut self, state: &OpState) {
+        let OpState::WindowedSum {
+            slides,
+            current,
+            current_tuples,
+            total_tuples,
+            windows_fired,
+            last_window_tuples,
+        } = state
+        else {
+            panic!("windowed-sum op: mismatched snapshot {state:?}")
+        };
+        self.slides = slides.iter().cloned().collect();
+        self.current = current.clone();
+        self.current_tuples = *current_tuples;
+        self.total_tuples = *total_tuples;
+        self.windows_fired = *windows_fired;
+        self.last_window_tuples = *last_window_tuples;
     }
 }

@@ -6,7 +6,7 @@ use crate::proto::{Batch, Chunk};
 use std::rc::Rc;
 
 fn batch(tuples: u64) -> Batch {
-    Batch { from_task: 0, tuples, bytes: tuples * 100, chunks: Vec::new(), hist: None }
+    Batch { from_task: 0, tuples, bytes: tuples * 100, chunks: Vec::new(), hist: None, inc: 0 }
 }
 
 fn cm() -> CostModel {
@@ -139,4 +139,104 @@ fn op_names_are_stable() {
     assert_eq!(CountOp::default().name(), "count");
     assert_eq!(FilterOp::new(b"x", None).name(), "filter");
     assert_eq!(KeyedSumOp::new().name(), "keyed-sum");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint snapshots
+// ---------------------------------------------------------------------------
+
+#[test]
+fn count_snapshot_round_trips() {
+    let mut op = CountOp::default();
+    let mut out = OpOutput::default();
+    op.apply(batch(100), 0, &mut out).unwrap();
+    let snap = op.snapshot();
+    op.apply(batch(50), 0, &mut out).unwrap();
+    assert_eq!(op.total, 150);
+    op.restore(&snap);
+    assert_eq!(op.total, 100, "rolled back to the snapshot");
+}
+
+#[test]
+fn filter_snapshot_restores_matches() {
+    let mut f = FilterOp::new(b"needle", None);
+    f.total = 7;
+    f.matches = 3;
+    let snap = f.snapshot();
+    f.total = 100;
+    f.matches = 50;
+    f.restore(&snap);
+    assert_eq!((f.total, f.matches), (7, 3));
+}
+
+#[test]
+fn keyed_sum_snapshot_restores_counts() {
+    let mut k = KeyedSumOp::new();
+    let mut out = OpOutput::default();
+    let mut b = batch(3);
+    b.hist = Some(Rc::new(vec![1, 2, 0]));
+    k.apply(b, 0, &mut out).unwrap();
+    let snap = k.snapshot();
+    let mut b2 = batch(4);
+    b2.hist = Some(Rc::new(vec![0, 1, 3]));
+    k.apply(b2, 0, &mut out).unwrap();
+    k.restore(&snap);
+    assert_eq!(k.counts, vec![1, 2, 0]);
+    assert_eq!(k.total_tuples, 3);
+}
+
+#[test]
+fn windowed_sum_snapshot_restores_the_slide_ring() {
+    let mut w = WindowedSumOp::new(2, None);
+    let mut out = OpOutput::default();
+    let mut b = batch(10);
+    b.hist = Some(Rc::new(vec![10i32]));
+    w.apply(b, 0, &mut out).unwrap();
+    w.on_tick(&mut out).unwrap();
+    let snap = w.snapshot();
+    // Diverge: more data + ticks fire windows.
+    let mut b2 = batch(5);
+    b2.hist = Some(Rc::new(vec![5i32]));
+    w.apply(b2, 0, &mut out).unwrap();
+    w.on_tick(&mut out).unwrap();
+    assert_eq!(w.windows_fired, 1);
+    w.restore(&snap);
+    assert_eq!(w.windows_fired, 0);
+    assert_eq!(w.total_tuples, 10);
+    // The restored ring replays identically: one more empty tick fires the
+    // first window over [slide1, empty].
+    w.on_tick(&mut out).unwrap();
+    assert_eq!(w.windows_fired, 1);
+    assert_eq!(w.last_window_tuples, 10);
+}
+
+#[test]
+fn stateless_default_snapshot() {
+    // An out-of-tree operator without checkpoint support keeps the
+    // Stateless default and restore is a no-op.
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &'static str {
+            "noop"
+        }
+        fn cost(&self, _b: &Batch, _c: &CostModel) -> crate::sim::Time {
+            0
+        }
+        fn apply(&mut self, _b: Batch, _f: usize, _o: &mut OpOutput) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+    let mut op = Noop;
+    assert_eq!(op.snapshot(), OpState::Stateless);
+    op.restore(&OpState::Stateless);
+}
+
+#[test]
+#[should_panic(expected = "mismatched snapshot")]
+fn restore_rejects_a_foreign_snapshot() {
+    let mut op = CountOp::default();
+    op.restore(&OpState::Tokenizer { tokens_emitted: 9 });
 }

@@ -123,6 +123,14 @@ impl ObjectStore {
         id
     }
 
+    /// The id the next `create_subscription` will assign. Recovery uses it
+    /// as a staleness floor: any subscription created before a rollback is
+    /// dead to the restored source, and its object notifications must be
+    /// freed rather than consumed.
+    pub fn next_sub_id(&self) -> usize {
+        self.subs.len()
+    }
+
     /// Unsubscribe: stop filling for `sub` and return its resume cursors.
     /// Slots stay allocated only until in-flight fills and already-sealed
     /// objects drain; then the pool is reclaimed (a flapping hybrid source
@@ -231,8 +239,19 @@ impl ObjectStore {
 
     /// Source is done: buffer returns to the free pool (paper Step 4) —
     /// or, for a deactivated subscription, towards reclamation.
+    ///
+    /// For an *inactive* subscription a release of an already-free (or
+    /// reclaimed) slot is a no-op, not a bug: a recovery sweep
+    /// ([`ObjectStore::release_sealed`]) can race the stale `ObjectFreed`
+    /// notifications of the source it replaced. Double-release of an
+    /// active subscription's slot stays a hard error.
     pub fn release(&mut self, id: ObjectId) {
         let s = &mut self.subs[id.sub.0];
+        if !s.active
+            && s.slots.get(id.slot).map_or(true, |slot| slot.state != ObjectState::Sealed)
+        {
+            return;
+        }
         let slot = &mut s.slots[id.slot];
         assert_eq!(slot.state, ObjectState::Sealed, "release of unsealed object");
         slot.content.clear();
@@ -241,6 +260,28 @@ impl ObjectStore {
         slot.state = ObjectState::Free;
         s.free.push_back(id.slot);
         self.try_reclaim(id.sub);
+    }
+
+    /// Recovery sweep: release every still-sealed slot of a *deactivated*
+    /// subscription — a crashed source lost its `ObjectReady`
+    /// notifications, so nothing else will ever free them (the broker-side
+    /// lease GC of a real deployment, modelled instantly). Returns the
+    /// number of slots released.
+    pub fn release_sealed(&mut self, sub: SubId) -> usize {
+        assert!(!self.subs[sub.0].active, "sweeping an active subscription");
+        let slots = self.subs[sub.0].slots.len();
+        let mut released = 0;
+        for slot in 0..slots {
+            let sealed = self.subs[sub.0]
+                .slots
+                .get(slot)
+                .map_or(false, |s| s.state == ObjectState::Sealed);
+            if sealed {
+                self.release(ObjectId { sub, slot });
+                released += 1;
+            }
+        }
+        released
     }
 
     /// Lifetime fill count (== notifications sent to sources).

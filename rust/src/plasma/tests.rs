@@ -165,6 +165,38 @@ fn deactivate_returns_cursors_and_drains_sealed_objects() {
 }
 
 #[test]
+fn recovery_sweep_releases_lost_sealed_objects() {
+    // A crashed source loses its ObjectReady notifications: after the
+    // recovery unsubscribes, release_sealed returns the orphaned sealed
+    // slots to the pool so the deactivated pool can be reclaimed.
+    let (mut store, sub) = store_with_sub(3, 4096);
+    let a = store.acquire(sub).unwrap();
+    let b = store.acquire(sub).unwrap();
+    store.seal(a, vec![stamped(0, 0, 5, 100)]);
+    store.seal(b, vec![stamped(1, 0, 5, 100)]);
+    store.deactivate(sub);
+    assert_eq!(store.reserved_bytes(), 3 * 4096, "sealed slots block reclamation");
+    assert_eq!(store.release_sealed(sub), 2);
+    assert_eq!(store.reserved_bytes(), 0, "swept pool is reclaimed");
+    // A stale ObjectFreed racing the sweep is a no-op on the dead pool.
+    store.release(a);
+    store.release(b);
+    assert_eq!(store.next_sub_id(), 1);
+}
+
+#[test]
+fn stale_release_on_inactive_sub_is_a_noop() {
+    let (mut store, sub) = store_with_sub(1, 4096);
+    let id = store.acquire(sub).unwrap();
+    store.seal(id, vec![stamped(0, 0, 1, 10)]);
+    store.release(id);
+    store.deactivate(sub);
+    // Double release would panic on an active sub (see
+    // double_release_panics); on a deactivated one it is a no-op.
+    store.release(id);
+}
+
+#[test]
 fn deactivate_with_all_objects_free_reclaims_immediately() {
     let (mut store, sub) = store_with_sub(4, 1024);
     assert_eq!(store.reserved_bytes(), 4 * 1024);

@@ -7,6 +7,7 @@
 
 use std::rc::Rc;
 
+use crate::config::FaultKind;
 use crate::sim::ActorId;
 
 /// Global partition index within the (single) stream topic.
@@ -117,6 +118,11 @@ pub enum RpcKind {
     /// to ingestion): the single RPC a colocated producer issues before
     /// filling plasma objects directly.
     WriteSubscribe { producer: WriteProducerSpec },
+    /// Checkpoint coordinator commits a completed epoch: `cursors` are the
+    /// per-partition source restart positions of the epoch's snapshots.
+    /// Committed offsets become the floor for watermark log trimming —
+    /// retention may never pass the last restorable point.
+    CommitCheckpoint { epoch: u64, cursors: Vec<(PartitionId, ChunkOffset)> },
     /// A colocated producer sealed shared object `id`: append its chunks to
     /// the partition logs and release the buffer. The payload never crosses
     /// the dispatcher — only this control notification does.
@@ -155,8 +161,14 @@ pub struct PushSourceSpec {
 #[derive(Debug, Clone)]
 pub enum RpcReply {
     AppendAck { records: u64, bytes: u64 },
-    /// Pull result; `chunks` may be empty (consumer caught up).
-    PullData { chunks: Vec<StampedChunk> },
+    /// Pull result; `chunks` may be empty (consumer caught up). `trims`
+    /// reports every requested partition whose offset fell below the
+    /// retention floor as `(partition, floor)` — the consumer recovers by
+    /// skipping to the floor and counting the gap, instead of wedging on a
+    /// hard error (checkpoint-commit floors make this rare but a torn-down
+    /// push subscription's cursors stop pinning retention, so a hybrid
+    /// fallback can still land behind the trim point).
+    PullData { chunks: Vec<StampedChunk>, trims: Vec<(PartitionId, ChunkOffset)> },
     SubscribeAck { sub: SubId },
     /// Subscription removed; `cursors` are the partitions' resume offsets
     /// (they already account for every object the broker gathered, so the
@@ -168,6 +180,8 @@ pub enum RpcReply {
     /// is back in the free pool by the time this arrives.
     SealAck { records: u64, bytes: u64 },
     ReplicateAck,
+    /// Checkpoint epoch recorded as the new retention floor.
+    CommitAck { epoch: u64 },
     /// Request refused (unknown partition, bad offset...). Carried instead
     /// of panicking so fault-injection tests can exercise client handling.
     Error { reason: String },
@@ -209,6 +223,11 @@ pub struct Batch {
     pub chunks: Vec<Chunk>,
     /// Keyed-histogram carry (real word-count path): bucket -> count.
     pub hist: Option<Rc<Vec<i32>>>,
+    /// Sender's recovery incarnation. Stamped at send time (operators build
+    /// batches with 0); a receiver drops batches from an older incarnation —
+    /// they were in flight when a fault rolled the pipeline back and their
+    /// contents will be replayed from the checkpoint cursors.
+    pub inc: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -237,7 +256,30 @@ pub enum Msg {
     /// Dataflow: a batch pushed into a task's input queue.
     Data(Batch),
     /// Dataflow: downstream returns one queue credit to `from_task`.
-    Credit { to_upstream_task: usize },
+    /// `inc` is the sender's recovery incarnation: a credit for a batch
+    /// that predates a rollback is dropped (ledgers reset on restore).
+    Credit { to_upstream_task: usize, inc: u64 },
     /// Producer resumes after generating records (tag = request id).
     GenDone(u64),
+    /// Checkpoint: the coordinator asks a source to inject barrier `epoch`
+    /// into its output stream at the next clean point.
+    BarrierInject { epoch: u64 },
+    /// Checkpoint: an aligned barrier flowing in-band between tasks — sent
+    /// on a channel after the last pre-barrier batch, never overtaking data
+    /// (barriers carry no payload and consume no credits).
+    Barrier { epoch: u64, from_task: usize },
+    /// Checkpoint: participant `from` wrote its epoch snapshot to the
+    /// shared checkpoint store.
+    BarrierAck { epoch: u64, from: ActorId },
+    /// Fault injection: the receiving actor "crashes" — it wipes its
+    /// volatile state, reports the failure and goes silent until restored.
+    Fault { kind: FaultKind },
+    /// Recovery: the failure detector's notice to the coordinator.
+    FailureDetected { from: ActorId },
+    /// Recovery: roll back to the latest completed checkpoint. `inc` is the
+    /// new incarnation every participant adopts; barriers with
+    /// `epoch <= epoch_floor` are stale and must be ignored.
+    Restore { inc: u64, epoch_floor: u64 },
+    /// Recovery: participant `from` finished restoring and resumed.
+    RestoreAck { from: ActorId },
 }

@@ -20,13 +20,14 @@
 use std::any::Any;
 use std::collections::BTreeMap;
 
+use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::compute::SharedCompute;
 use crate::config::{ExperimentConfig, SourceMode};
 use crate::metrics::SharedMetrics;
 use crate::net::{NodeId, SharedNetwork};
 use crate::plasma::SharedStore;
 use crate::proto::{ChunkOffset, Msg, PartitionId};
-use crate::sim::{Actor, ActorId, Ctx, Engine};
+use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 use crate::worker::SharedRegistry;
 
 /// Typed keys for the per-mode counters a [`SourceStats`] may carry beyond
@@ -43,6 +44,12 @@ pub enum StatKey {
     SwitchesToPush,
     /// Push→pull transitions taken (hybrid).
     SwitchesToPull,
+    /// Records re-read and re-processed after recovery rollbacks — the
+    /// exactly-once replay volume (reported only when non-zero).
+    RecordsReplayed,
+    /// Chunks lost to retention the source skipped over (trim-floor
+    /// recovery on the pull path; reported only when non-zero).
+    TrimGapChunks,
 }
 
 impl StatKey {
@@ -53,12 +60,69 @@ impl StatKey {
             Self::Subscribed => "subscribed",
             Self::SwitchesToPush => "switches_to_push",
             Self::SwitchesToPull => "switches_to_pull",
+            Self::RecordsReplayed => "records_replayed",
+            Self::TrimGapChunks => "trim_gap_chunks",
         }
     }
 }
 
 /// The typed extension map for per-mode extras.
 pub type StatExtras = BTreeMap<StatKey, u64>;
+
+/// Skip `offsets` past retention-trimmed chunks reported by a pull reply
+/// (`(partition, floor)` pairs, see `RpcReply::PullData::trims`); returns
+/// the skipped gap in chunks. The uniform trim-floor recovery every
+/// pull-capable source shares: never wedge, never silently lose the
+/// partition — count what retention took ([`StatKey::TrimGapChunks`]).
+pub fn apply_trims(
+    offsets: &mut [(PartitionId, ChunkOffset)],
+    trims: &[(PartitionId, ChunkOffset)],
+) -> u64 {
+    let mut gap = 0;
+    for &(p, floor) in trims {
+        for (sp, off) in offsets.iter_mut() {
+            if *sp == p && floor > *off {
+                gap += floor - *off;
+                *off = floor;
+            }
+        }
+    }
+    gap
+}
+
+// The coordinator-handshake tails every source shares (each source keeps
+// its own clean-point and barrier-broadcast logic — only the bookkeeping
+// against the checkpoint blackboard is uniform).
+
+/// Write `snap` as the source's `epoch` snapshot and ack the coordinator.
+pub(crate) fn ack_barrier(
+    cp: &SharedCheckpoint,
+    epoch: u64,
+    snap: SourceSnapshot,
+    notify_ns: Time,
+    ctx: &mut Ctx<'_, Msg>,
+) {
+    let coordinator = {
+        let mut c = cp.borrow_mut();
+        c.put_source(epoch, ctx.self_id(), snap);
+        c.coordinator
+    };
+    if let Some(coordinator) = coordinator {
+        ctx.send_in(notify_ns, coordinator, Msg::BarrierAck { epoch, from: ctx.self_id() });
+    }
+}
+
+/// The failure detector: report an injected fault to the coordinator.
+pub(crate) fn report_failure(cp: &SharedCheckpoint, notify_ns: Time, ctx: &mut Ctx<'_, Msg>) {
+    let coordinator = cp.borrow().coordinator.expect("coordinator wired before faults");
+    ctx.send_in(notify_ns, coordinator, Msg::FailureDetected { from: ctx.self_id() });
+}
+
+/// Tell the coordinator this source finished restoring and resumed.
+pub(crate) fn ack_restore(cp: &SharedCheckpoint, notify_ns: Time, ctx: &mut Ctx<'_, Msg>) {
+    let coordinator = cp.borrow().coordinator.expect("coordinator wired");
+    ctx.send_in(notify_ns, coordinator, Msg::RestoreAck { from: ctx.self_id() });
+}
 
 /// Uniform end-of-run report every source returns. Core counters cover the
 /// paper's resource-accounting axes; anything mode-specific lives in the
@@ -104,6 +168,16 @@ pub trait StreamSource: Actor<Msg> {
 
     /// Uniform end-of-run statistics.
     fn stats(&self) -> SourceStats;
+
+    /// The source's restart position: exclusive per-partition cursors
+    /// covering exactly the records already handed downstream, plus the
+    /// exactly-once counters that roll back with them. This is the
+    /// uniform cursor-capture surface all four modes share — a source
+    /// takes it internally at barrier-clean points (everything fetched is
+    /// emitted, nothing half-processed); callers outside the checkpoint
+    /// protocol (tests, inspection) should only trust it when the source
+    /// is quiescent.
+    fn checkpoint(&self) -> SourceSnapshot;
 }
 
 /// The type-erased source actor the launcher registers with the engine.
@@ -124,6 +198,10 @@ impl SourceActor {
 
     pub fn stats(&self) -> SourceStats {
         self.inner.stats()
+    }
+
+    pub fn checkpoint(&self) -> SourceSnapshot {
+        self.inner.checkpoint()
     }
 
     /// Borrow the wrapped source as its concrete type (tests, examples).
@@ -166,6 +244,10 @@ pub struct SourceWiring<'a> {
     pub store: SharedStore,
     pub registry: SharedRegistry,
     pub compute: Option<SharedCompute>,
+    /// Checkpoint blackboard (`None` = checkpointing disabled). Factories
+    /// hand it to their sources so barrier snapshots and restores work
+    /// identically across modes.
+    pub checkpoint: Option<SharedCheckpoint>,
 }
 
 impl SourceWiring<'_> {

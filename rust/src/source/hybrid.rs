@@ -18,9 +18,25 @@
 //! — the broker returns the resume cursors, so the pull loop continues
 //! without loss or duplication. A cooldown after every switch provides the
 //! hysteresis that stops the source flapping between modes.
+//!
+//! ## Checkpointing
+//!
+//! The hybrid source keeps one set of `offsets` that always equals its
+//! *emitted floor*: the pull loop advances them on fetch, the push phase
+//! advances them as objects are materialised. A barrier is therefore taken
+//! at the next clean point of whichever loop is active — snapshotting the
+//! same cursors either way, which is what makes the hybrid checkpoint
+//! identical to its parents'. A restore always lands in the *pull* phase
+//! (a hybrid can always pull): any live/in-flight subscription is orphaned
+//! — unsubscribed fire-and-forget, its late notifications freed back to
+//! the broker — and the loop re-pulls from the snapshot cursors. If those
+//! cursors fell behind the broker trim point (an orphaned subscription's
+//! cursors stop pinning retention), the pull reply's `trims` are applied:
+//! skip to the floor, count the gap, keep the partition alive.
 
 use std::collections::VecDeque;
 
+use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::config::{CostModel, ExperimentConfig, SourceMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
@@ -40,6 +56,9 @@ const TAG_POLL: u64 = 0;
 const TAG_IDLE_BASE: u64 = 1;
 const JOB_PULL: u64 = 0;
 const JOB_PUSH: u64 = 1;
+/// Job tags: `inc * JOB_STRIDE + JOB_*` — completions from before a
+/// rollback die on the incarnation mismatch.
+const JOB_STRIDE: u64 = 2;
 
 /// Table-I-style parameters governing the adaptive switch.
 #[derive(Debug, Clone)]
@@ -89,6 +108,8 @@ pub struct HybridParams {
     /// Push-phase object pool size (backpressure window).
     pub objects: usize,
     pub tuning: HybridTuning,
+    /// Checkpoint blackboard (`None` = checkpointing disabled).
+    pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
 }
 
@@ -134,9 +155,33 @@ pub struct HybridSource {
     pending_free: Option<ObjectId>,
     last_switch: Time,
     last_delivery: Time,
-    /// Bumped on every subscribe: invalidates idle-check timer chains from
-    /// earlier push phases.
+    /// Bumped on every subscribe and restore: invalidates idle-check timer
+    /// chains from earlier push phases.
     idle_gen: u64,
+    /// Barrier waiting for the next clean point of the active loop.
+    pending_epoch: Option<u64>,
+    /// Recovery incarnation; stale-tagged messages are dropped.
+    inc: u64,
+    /// Dead between an injected fault and the restore.
+    failed: bool,
+    /// Pull replies to RPCs issued before the last restore are stale.
+    rpc_floor: u64,
+    /// Subscribe acks to discard: a restore hit while the subscription RPC
+    /// was in flight; the granted sub is immediately unsubscribed.
+    orphan_subs: u64,
+    /// Unsubscribe acks to discard: a restore hit while the unsubscribe
+    /// RPC was in flight.
+    orphan_unsub_acks: u64,
+    /// Subscriptions torn down by restores: their late object
+    /// notifications are freed straight back to the broker.
+    orphaned: Vec<SubId>,
+    /// Subscriptions created before the last restore are dead to this
+    /// incarnation (covers the fallback-in-flight case where the sub id
+    /// was never learned): their objects are freed, never consumed —
+    /// consuming one would jump the cursors past unreplayed data.
+    stale_sub_floor: usize,
+    replayed: u64,
+    trim_gap_chunks: u64,
     pulls_issued: u64,
     empty_pulls: u64,
     records_consumed: u64,
@@ -178,6 +223,16 @@ impl HybridSource {
             last_switch: 0,
             last_delivery: 0,
             idle_gen: 0,
+            pending_epoch: None,
+            inc: 0,
+            failed: false,
+            rpc_floor: 0,
+            orphan_subs: 0,
+            orphan_unsub_acks: 0,
+            orphaned: Vec::new(),
+            stale_sub_floor: 0,
+            replayed: 0,
+            trim_gap_chunks: 0,
             pulls_issued: 0,
             empty_pulls: 0,
             records_consumed: 0,
@@ -191,14 +246,9 @@ impl HybridSource {
         }
     }
 
-    // -------------------------------------------------------------- pull --
-
-    fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+    fn rpc(&mut self, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) -> u64 {
         let id = self.next_rpc;
         self.next_rpc += 1;
-        self.pulls_issued += 1;
-        self.inflight_since = ctx.now();
-        self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
         let deliver =
             self.net
                 .borrow_mut()
@@ -210,21 +260,46 @@ impl HybridSource {
                 id,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
-                kind: RpcKind::Pull {
-                    assignments: self.offsets.clone(),
-                    max_bytes: self.params.max_bytes,
-                },
+                kind,
             }),
         );
+        id
+    }
+
+    // -------------------------------------------------------------- pull --
+
+    fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.maybe_checkpoint(ctx);
+        self.pulls_issued += 1;
+        self.inflight_since = ctx.now();
+        self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
+        let kind = RpcKind::Pull {
+            assignments: self.offsets.clone(),
+            max_bytes: self.params.max_bytes,
+        };
+        self.rpc(kind, ctx);
         self.phase = Phase::PullFetching;
     }
 
-    fn on_pull_data(&mut self, chunks: Vec<StampedChunk>, ctx: &mut Ctx<'_, Msg>) {
+    fn on_pull_data(
+        &mut self,
+        id: u64,
+        chunks: Vec<StampedChunk>,
+        trims: Vec<(PartitionId, ChunkOffset)>,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        if id < self.rpc_floor {
+            return; // reply to a pre-restore pull: the cursor was rewound
+        }
         assert!(
             matches!(self.phase, Phase::PullFetching),
             "hybrid source {}: pull data outside PullFetching",
             self.params.task_idx
         );
+        // Resume cursors of a torn-down subscription stop pinning
+        // retention, so a fallback (or a restore) can land behind the
+        // trim point: skip to the floor and count the gap.
+        self.trim_gap_chunks += super::api::apply_trims(&mut self.offsets, &trims);
         let latency = ctx.now().saturating_sub(self.inflight_since);
         if self.poll_window.len() >= self.params.tuning.window_polls {
             self.poll_window.pop_front();
@@ -232,6 +307,7 @@ impl HybridSource {
         self.poll_window.push_back((chunks.is_empty(), latency));
         if chunks.is_empty() {
             self.empty_pulls += 1;
+            self.maybe_checkpoint(ctx);
             if self.should_switch_to_push(ctx.now()) {
                 self.begin_subscribe(ctx);
             } else {
@@ -252,7 +328,7 @@ impl HybridSource {
         let cost =
             self.params.cost.pull_rpc_client_ns + records * self.params.cost.engine_record_ns;
         self.phase = Phase::PullProcessing(chunks);
-        ctx.send_self_in(cost, Msg::JobDone(JOB_PULL));
+        ctx.send_self_in(cost, Msg::JobDone(self.inc * JOB_STRIDE + JOB_PULL));
     }
 
     fn on_pull_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
@@ -270,6 +346,7 @@ impl HybridSource {
                 bytes: sc.chunk.bytes(),
                 chunks: vec![sc.chunk],
                 hist: None,
+                inc: self.inc,
             });
         }
         self.flush(ctx);
@@ -279,9 +356,24 @@ impl HybridSource {
     /// write load — and the post-switch cooldown has expired.
     fn should_switch_to_push(&self, now: Time) -> bool {
         let t = &self.params.tuning;
-        // Residual push batches still draining (flap in progress): the
-        // subscribe point requires an empty emit queue.
-        if !self.pending.is_empty() {
+        // Residual push state still draining (flap in progress): a new
+        // subscription starts only once the previous one's objects and
+        // batches are fully consumed — which also guarantees that in the
+        // push phase everything in `ready` belongs to the *current*
+        // subscription (the consumed-floor checkpoint relies on that).
+        if !self.pending.is_empty()
+            || !self.ready.is_empty()
+            || self.consuming.is_some()
+            || self.pending_free.is_some()
+        {
+            return false;
+        }
+        // A restore left a subscription handshake unresolved: no new push
+        // phase until its ack lands. This keeps the invariant that while
+        // `orphan_subs > 0` no legitimate subscription can exist, which is
+        // what lets ObjectReady free dead-handshake fills without relying
+        // on cost-model timing.
+        if self.orphan_subs > 0 || self.orphan_unsub_acks > 0 {
             return false;
         }
         if self.poll_window.len() < t.window_polls {
@@ -313,21 +405,7 @@ impl HybridSource {
             objects: self.params.objects,
             object_bytes: self.params.max_bytes,
         };
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send_control(ctx.now(), self.params.node, self.params.broker_node);
-        ctx.send_at(
-            deliver,
-            self.params.broker,
-            Msg::Rpc(RpcRequest {
-                id: self.next_rpc,
-                reply_to: ctx.self_id(),
-                from_node: self.params.node,
-                kind: RpcKind::PushSubscribe { sources: vec![spec] },
-            }),
-        );
-        self.next_rpc += 1;
+        self.rpc(RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
         self.switches_to_push += 1;
         self.last_switch = ctx.now();
         self.poll_window.clear();
@@ -335,6 +413,17 @@ impl HybridSource {
     }
 
     fn on_subscribed(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        if self.orphan_subs > 0 {
+            // A restore hit while this subscribe was in flight: the
+            // granted subscription belongs to a dead incarnation. Its
+            // unsubscribe ack is recognised through `orphaned`, and the
+            // staleness floor moves past it so late fills are freed.
+            self.orphan_subs -= 1;
+            self.orphaned.push(sub);
+            self.stale_sub_floor = self.stale_sub_floor.max(sub.0 + 1);
+            self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
+            return;
+        }
         assert!(
             matches!(self.phase, Phase::Subscribing),
             "hybrid source {}: unexpected SubscribeAck",
@@ -347,12 +436,21 @@ impl HybridSource {
             self.params.tuning.idle_timeout_ns,
             Msg::Timer(TAG_IDLE_BASE + self.idle_gen),
         );
+        self.maybe_checkpoint(ctx);
     }
 
     /// Start the consume thread on the next sealed object, if free. Runs in
     /// every phase: residual objects of a torn-down subscription must still
     /// drain (their chunks are already reflected in the resume cursors).
     fn try_consume(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.pending_epoch.is_some() && matches!(self.phase, Phase::Push { .. }) {
+            // Push phase: pause at the consumed floor so the barrier can
+            // be taken. Outside it, residual objects must keep draining —
+            // the fallback cursors already cover them, so a checkpoint is
+            // only consistent once they are consumed (see
+            // `clean_for_checkpoint`).
+            return;
+        }
         if self.consuming.is_some() || self.pending_free.is_some() || !self.pending.is_empty() {
             return;
         }
@@ -362,7 +460,7 @@ impl HybridSource {
         let cost = self.params.cost.push_object_handle_ns
             + records * self.params.cost.push_consume_record_ns;
         self.consuming = Some(id);
-        ctx.send_self_in(cost, Msg::JobDone(JOB_PUSH));
+        ctx.send_self_in(cost, Msg::JobDone(self.inc * JOB_STRIDE + JOB_PUSH));
     }
 
     fn on_object_consumed(&mut self, ctx: &mut Ctx<'_, Msg>) {
@@ -372,12 +470,20 @@ impl HybridSource {
             let store = self.store.borrow();
             for sc in store.read(id) {
                 self.records_consumed += sc.chunk.records as u64;
+                // The push phase advances the same emitted-floor cursors
+                // the pull loop uses — the uniform checkpoint position.
+                for (p, off) in self.offsets.iter_mut() {
+                    if *p == sc.partition {
+                        *off = (*off).max(sc.offset + 1);
+                    }
+                }
                 self.pending.push_back(Batch {
                     from_task: self.params.task_idx,
                     tuples: sc.chunk.records as u64,
                     bytes: sc.chunk.bytes(),
                     chunks: vec![sc.chunk.clone()],
                     hist: None,
+                    inc: self.inc,
                 });
             }
         }
@@ -405,21 +511,7 @@ impl HybridSource {
             && self.pending.is_empty();
         let starved = drained && now.saturating_sub(self.last_delivery) >= t.idle_timeout_ns;
         if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
-            let deliver =
-                self.net
-                    .borrow_mut()
-                    .send_control(now, self.params.node, self.params.broker_node);
-            ctx.send_at(
-                deliver,
-                self.params.broker,
-                Msg::Rpc(RpcRequest {
-                    id: self.next_rpc,
-                    reply_to: ctx.self_id(),
-                    from_node: self.params.node,
-                    kind: RpcKind::PushUnsubscribe { sub },
-                }),
-            );
-            self.next_rpc += 1;
+            self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
             self.switches_to_pull += 1;
             self.last_switch = now;
             self.phase = Phase::Unsubscribing;
@@ -430,9 +522,24 @@ impl HybridSource {
 
     fn on_unsubscribed(
         &mut self,
+        sub: SubId,
         cursors: Vec<(PartitionId, ChunkOffset)>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
+        if self.orphaned.contains(&sub) {
+            // The unsubscribe we fired during a restore: sweep any slots
+            // whose notifications died with the old incarnation.
+            self.store.borrow_mut().release_sealed(sub);
+            return;
+        }
+        if self.orphan_unsub_acks > 0 {
+            // A restore hit while this (normal-fallback) unsubscribe was in
+            // flight: its cursors are stale — the snapshot already rewound
+            // the offsets. Sweep and ignore.
+            self.orphan_unsub_acks -= 1;
+            self.store.borrow_mut().release_sealed(sub);
+            return;
+        }
         assert!(
             matches!(self.phase, Phase::Unsubscribing),
             "hybrid source {}: unexpected UnsubscribeAck",
@@ -443,7 +550,124 @@ impl HybridSource {
         debug_assert_eq!(cursors.len(), self.offsets.len());
         self.offsets = cursors;
         self.phase = Phase::PullIdle;
+        self.maybe_checkpoint(ctx);
         ctx.send_self_in(0, Msg::Timer(TAG_POLL));
+    }
+
+    // ------------------------------------------------------- checkpoint --
+
+    /// Clean point: everything fetched/materialised has been emitted, so
+    /// `offsets` are exactly the emitted floor. In the push phase, sealed
+    /// but unconsumed objects in `ready` are *beyond* the consumed floor
+    /// (they all belong to the current subscription — a new one only
+    /// starts fully drained) and simply replay after a restore. Outside
+    /// it the offsets came from an unsubscribe ack that already covers
+    /// the residual objects, so those must drain before the snapshot is
+    /// consistent — a snapshot taken earlier would lose their records.
+    fn clean_for_checkpoint(&self) -> bool {
+        let quiesced = self.pending.is_empty()
+            && self.consuming.is_none()
+            && self.pending_free.is_none()
+            && !matches!(self.phase, Phase::PullProcessing(_));
+        quiesced && (matches!(self.phase, Phase::Push { .. }) || self.ready.is_empty())
+    }
+
+    fn maybe_checkpoint(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Some(epoch) = self.pending_epoch else { return };
+        if !self.clean_for_checkpoint() {
+            return;
+        }
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().expect("barrier implies checkpointing");
+        super::api::ack_barrier(cp, epoch, self.checkpoint(), self.params.cost.notify_ns, ctx);
+        for &target in &self.params.downstream {
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(
+                self.params.cost.queue_hop_ns,
+                actor,
+                Msg::Barrier { epoch, from_task: self.params.task_idx },
+            );
+        }
+        self.try_consume(ctx);
+    }
+
+    // --------------------------------------------------------- recovery --
+
+    /// Discard a fill a dead/torn-down consumer cannot use. For a still
+    /// *active* subscription, freeing the buffer would make the broker
+    /// instantly refill and re-notify it (a free→fill ping-pong until the
+    /// orphan unsubscribe lands), so the slot is left sealed: pool
+    /// exhaustion pauses fills and the unsubscribe ack's `release_sealed`
+    /// sweep reclaims it. Objects of already-inactive subscriptions have
+    /// no sweep coming, so those are freed now.
+    fn discard_stale(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
+        if !self.store.borrow().subscription(id.sub).active {
+            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+        }
+    }
+
+    fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.failed = true;
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().unwrap_or_else(|| {
+            panic!("hybrid source {} faulted without checkpointing", self.params.task_idx)
+        });
+        super::api::report_failure(cp, self.params.cost.notify_ns, ctx);
+    }
+
+    /// Global rollback: always land in the pull phase (a hybrid can always
+    /// pull). Any live or in-flight subscription is orphaned; held objects
+    /// go back to the broker; the cursors and exactly-once counters rewind
+    /// to the snapshot.
+    fn on_restore(&mut self, inc: u64, ctx: &mut Ctx<'_, Msg>) {
+        self.inc = inc;
+        self.failed = false;
+        match self.phase {
+            Phase::Push { sub } => {
+                // Orphan the live subscription; its unsubscribe ack and
+                // any late object notifications are recognised through
+                // `orphaned`.
+                self.orphaned.push(sub);
+                self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
+            }
+            Phase::Subscribing => self.orphan_subs += 1,
+            // A normal-fallback unsubscribe is in flight; its ack cannot
+            // be identified by sub id (we never learned it here), so it is
+            // counted instead.
+            Phase::Unsubscribing => self.orphan_unsub_acks += 1,
+            _ => {}
+        }
+        // Discard held objects (a dead incarnation cannot consume them;
+        // their data replays from the cursors). Active-subscription slots
+        // stay sealed until the orphan unsubscribe's sweep.
+        let held: Vec<ObjectId> = self
+            .ready
+            .drain(..)
+            .chain(self.consuming.take())
+            .chain(self.pending_free.take())
+            .collect();
+        for id in held {
+            self.discard_stale(id, ctx);
+        }
+        self.pending.clear();
+        self.pending_epoch = None;
+        self.poll_window.clear();
+        self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
+        self.rr = 0;
+        self.idle_gen += 1; // stale idle chains die
+        self.rpc_floor = self.next_rpc;
+        self.stale_sub_floor = self.store.borrow().next_sub_id();
+        let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
+        let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
+            cursors: self.params.assignments.clone(),
+            ..Default::default()
+        });
+        debug_assert_eq!(snap.cursors.len(), self.offsets.len());
+        self.offsets = snap.cursors;
+        self.replayed += self.records_consumed.saturating_sub(snap.records_consumed);
+        self.records_consumed = snap.records_consumed;
+        super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
+        self.issue_pull(ctx);
     }
 
     // -------------------------------------------------------------- emit --
@@ -474,6 +698,7 @@ impl HybridSource {
         if let Some(id) = self.pending_free.take() {
             ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
         }
+        self.maybe_checkpoint(ctx);
         self.try_consume(ctx);
         if matches!(self.phase, Phase::PullBlocked) {
             if self.should_switch_to_push(ctx.now()) {
@@ -510,6 +735,14 @@ impl HybridSource {
         self.switches_to_pull
     }
 
+    pub fn trim_gap_chunks(&self) -> u64 {
+        self.trim_gap_chunks
+    }
+
+    pub fn records_replayed(&self) -> u64 {
+        self.replayed
+    }
+
     /// True while operating (or transitioning) on the push subscription.
     pub fn is_pushing(&self) -> bool {
         matches!(self.phase, Phase::Subscribing | Phase::Push { .. })
@@ -522,13 +755,28 @@ impl Actor<Msg> for HybridSource {
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.failed {
+            match msg {
+                Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
+                // A dead subscriber cannot consume fills; discarding them
+                // (sealed until the recovery sweep) also pauses the
+                // broker's fill pump via pool exhaustion.
+                Msg::ObjectReady { id } => self.discard_stale(id, ctx),
+                _ => {}
+            }
+            return;
+        }
         match msg {
             Msg::Reply(env) => {
-                let RpcEnvelope { reply, .. } = env;
+                let RpcEnvelope { id, reply } = env;
                 match reply {
-                    RpcReply::PullData { chunks } => self.on_pull_data(chunks, ctx),
+                    RpcReply::PullData { chunks, trims } => {
+                        self.on_pull_data(id, chunks, trims, ctx)
+                    }
                     RpcReply::SubscribeAck { sub } => self.on_subscribed(sub, ctx),
-                    RpcReply::UnsubscribeAck { cursors, .. } => self.on_unsubscribed(cursors, ctx),
+                    RpcReply::UnsubscribeAck { sub, cursors } => {
+                        self.on_unsubscribed(sub, cursors, ctx)
+                    }
                     RpcReply::Error { reason } => {
                         panic!("hybrid source {}: {reason}", self.params.task_idx)
                     }
@@ -538,8 +786,15 @@ impl Actor<Msg> for HybridSource {
                     ),
                 }
             }
-            Msg::JobDone(JOB_PULL) => self.on_pull_processed(ctx),
-            Msg::JobDone(JOB_PUSH) => self.on_object_consumed(ctx),
+            Msg::JobDone(tag) => {
+                if tag / JOB_STRIDE != self.inc {
+                    return; // completion from a rolled-back incarnation
+                }
+                match tag % JOB_STRIDE {
+                    JOB_PULL => self.on_pull_processed(ctx),
+                    _ => self.on_object_consumed(ctx),
+                }
+            }
             Msg::Timer(TAG_POLL) => {
                 if matches!(self.phase, Phase::PullIdle) {
                     self.issue_pull(ctx);
@@ -547,15 +802,38 @@ impl Actor<Msg> for HybridSource {
             }
             Msg::Timer(tag) => self.on_idle_check(tag, ctx),
             Msg::ObjectReady { id } => {
+                // Dead-incarnation fills: below the restore floor, from an
+                // orphaned subscription, or — while a restored-over
+                // subscribe handshake is still unresolved — from the dead
+                // subscription whose id we have not learned yet (no
+                // legitimate subscription can exist in that window; see
+                // should_switch_to_push). Consuming one would jump the
+                // cursors past data not yet replayed — free it instead.
+                if id.sub.0 < self.stale_sub_floor
+                    || self.orphaned.contains(&id.sub)
+                    || self.orphan_subs > 0
+                {
+                    self.discard_stale(id, ctx);
+                    return;
+                }
                 self.ready.push_back(id);
                 self.try_consume(ctx);
             }
-            Msg::Credit { to_upstream_task } => {
+            Msg::Credit { to_upstream_task, inc } => {
+                if inc != self.inc {
+                    return; // credit for a pre-rollback batch: ledger was reset
+                }
                 self.ledger.refund(to_upstream_task);
                 if !self.pending.is_empty() {
                     self.flush(ctx);
                 }
             }
+            Msg::BarrierInject { epoch } => {
+                self.pending_epoch = Some(epoch);
+                self.maybe_checkpoint(ctx);
+            }
+            Msg::Fault { .. } => self.on_fault(ctx),
+            Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
             other => panic!("hybrid source {}: unexpected {other:?}", self.params.task_idx),
         }
     }
@@ -580,6 +858,12 @@ impl StreamSource for HybridSource {
         extras.insert(StatKey::SwitchesToPush, self.switches_to_push);
         extras.insert(StatKey::SwitchesToPull, self.switches_to_pull);
         extras.insert(StatKey::Subscribed, matches!(self.phase, Phase::Push { .. }) as u64);
+        if self.replayed > 0 {
+            extras.insert(StatKey::RecordsReplayed, self.replayed);
+        }
+        if self.trim_gap_chunks > 0 {
+            extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
+        }
         SourceStats {
             records_consumed: self.records_consumed,
             pulls_issued: self.pulls_issued,
@@ -595,6 +879,14 @@ impl StreamSource for HybridSource {
             // `broker.push_util` instead.
             threads: if matches!(self.phase, Phase::Push { .. }) { 1 } else { 2 },
             extras,
+        }
+    }
+
+    fn checkpoint(&self) -> SourceSnapshot {
+        SourceSnapshot {
+            cursors: self.offsets.clone(),
+            records_consumed: self.records_consumed,
+            ..Default::default()
         }
     }
 }
@@ -629,6 +921,7 @@ impl SourceFactory for HybridSourceFactory {
                         queue_cap: c.queue_cap,
                         objects: c.push_objects_per_source,
                         tuning: HybridTuning::from_config(c),
+                        checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                     },
                     w.metrics.clone(),

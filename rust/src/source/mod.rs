@@ -36,6 +36,36 @@
 //! window, switches to the push subscription when pulls are starved by
 //! writes, and falls back (with cooldown hysteresis) when the push path
 //! starves instead. See [`HybridSource`] for the switch protocol.
+//!
+//! ## Checkpointing
+//!
+//! Every source also implements the [`StreamSource::checkpoint`] trait
+//! extension: a uniform per-partition cursor snapshot covering exactly the
+//! records already handed downstream, plus the exactly-once counters that
+//! roll back with it (see [`crate::checkpoint`]). The *protocol* around it
+//! is mode-specific — and that asymmetry is precisely the recovery
+//! tradeoff the paper never measured:
+//!
+//! * **Pull/native** take a barrier at the next clean point of the serial
+//!   fetch loop and restore by rewinding their own offsets — cursors make
+//!   recovery trivial.
+//! * **Push** pauses new object consumes until every member quiesces,
+//!   snapshots the members' *consumed floors* (the broker-managed
+//!   subscription cursors run ahead by the sealed-but-unconsumed
+//!   objects), and must recover by tearing down its subscriptions,
+//!   sweeping still-sealed objects back to the pool, resubscribing at the
+//!   restored cursors and replaying.
+//! * **Hybrid** snapshots the same emitted-floor offsets in either phase
+//!   and always restores into the pull phase, orphaning any live
+//!   subscription. If restored (or fallback) cursors land behind the
+//!   broker trim point — torn-down subscriptions stop pinning retention —
+//!   the pull reply's `trims` recovery skips to the floor and counts the
+//!   gap instead of wedging the partition.
+//!
+//! When a barrier is taken, single-task sources broadcast
+//! `Msg::Barrier { epoch, from_task }` on every output channel; the push
+//! group broadcasts one barrier *per member id*, because downstream tasks
+//! align over all `Nc` logical source channels.
 
 #[cfg(test)]
 mod tests;
@@ -47,8 +77,8 @@ mod pull;
 mod push;
 
 pub use api::{
-    SourceActor, SourceFactory, SourceRegistry, SourceStats, SourceWiring, StatExtras, StatKey,
-    StreamSource,
+    apply_trims, SourceActor, SourceFactory, SourceRegistry, SourceStats, SourceWiring,
+    StatExtras, StatKey, StreamSource,
 };
 pub use hybrid::{HybridParams, HybridSource, HybridSourceFactory, HybridTuning};
 pub use native::{NativeConsumer, NativeParams, NativeSourceFactory};

@@ -3,8 +3,11 @@
 //! Same pull loop as [`super::PullSource`] but without the streaming
 //! engine: no worker tasks downstream, no queue hops, native per-record
 //! cost. It iterates, (optionally) filters and counts in place, like the
-//! paper's RAMCloud-client-based consumers.
+//! paper's RAMCloud-client-based consumers. Checkpointing degenerates
+//! accordingly: no downstream means no barrier broadcast — a barrier is
+//! just a cursor + counter snapshot at the next clean point of the loop.
 
+use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::compute::SharedCompute;
 use crate::config::{CostModel, DataPlane, SourceMode, Workload};
 use crate::metrics::{Class, SharedMetrics};
@@ -33,6 +36,8 @@ pub struct NativeParams {
     /// Real-plane kernels (native engine — the C++ consumer runs native
     /// code, not the JVM path).
     pub compute: Option<SharedCompute>,
+    /// Checkpoint blackboard (`None` = checkpointing disabled).
+    pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
 }
 
@@ -49,6 +54,7 @@ impl std::fmt::Debug for NativeParams {
             .field("pull_timeout", &self.pull_timeout)
             .field("pattern", &self.pattern)
             .field("compute", &self.compute.is_some())
+            .field("checkpoint", &self.checkpoint.is_some())
             .field("cost", &self.cost)
             .finish()
     }
@@ -64,6 +70,16 @@ pub struct NativeConsumer {
     matches: u64,
     pulls_issued: u64,
     empty_pulls: u64,
+    /// Barrier waiting for the next clean point of the loop.
+    pending_epoch: Option<u64>,
+    /// Recovery incarnation; stale-tagged messages are dropped.
+    inc: u64,
+    /// Dead between an injected fault and the restore.
+    failed: bool,
+    /// Replies to RPCs issued before the last restore are stale.
+    rpc_floor: u64,
+    replayed: u64,
+    trim_gap_chunks: u64,
     metrics: SharedMetrics,
     net: SharedNetwork,
 }
@@ -80,12 +96,19 @@ impl NativeConsumer {
             matches: 0,
             pulls_issued: 0,
             empty_pulls: 0,
+            pending_epoch: None,
+            inc: 0,
+            failed: false,
+            rpc_floor: 0,
+            replayed: 0,
+            trim_gap_chunks: 0,
             metrics,
             net,
         }
     }
 
     fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.maybe_checkpoint(ctx);
         let id = self.next_rpc;
         self.next_rpc += 1;
         self.pulls_issued += 1;
@@ -109,15 +132,31 @@ impl NativeConsumer {
         );
     }
 
+    /// Take a pending barrier at a clean point (nothing half-processed):
+    /// snapshot + ack. The native consumer feeds no pipeline, so there is
+    /// no barrier to broadcast.
+    fn maybe_checkpoint(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Some(epoch) = self.pending_epoch else { return };
+        debug_assert!(self.processing.is_none(), "clean points have nothing in flight");
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().expect("barrier implies checkpointing");
+        super::api::ack_barrier(cp, epoch, self.checkpoint(), self.params.cost.notify_ns, ctx);
+    }
+
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
-        let chunks = match env.reply {
-            RpcReply::PullData { chunks } => chunks,
+        if env.id < self.rpc_floor {
+            return; // reply to a pre-restore pull
+        }
+        let (chunks, trims) = match env.reply {
+            RpcReply::PullData { chunks, trims } => (chunks, trims),
             RpcReply::Error { reason } => panic!("native consumer: {reason}"),
             other => panic!("native consumer: unexpected reply {other:?}"),
         };
+        self.trim_gap_chunks += super::api::apply_trims(&mut self.offsets, &trims);
         if chunks.is_empty() {
             self.empty_pulls += 1;
-            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(0));
+            self.maybe_checkpoint(ctx);
+            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
             return;
         }
         for sc in &chunks {
@@ -131,7 +170,7 @@ impl NativeConsumer {
         // Thin native client: small fixed per-RPC cost, native per-record.
         let cost = self.params.cost.rpc_base_ns + records * self.params.cost.native_record_ns;
         self.processing = Some(chunks);
-        ctx.send_self_in(cost, Msg::JobDone(0));
+        ctx.send_self_in(cost, Msg::JobDone(self.inc));
     }
 
     fn on_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
@@ -152,6 +191,36 @@ impl NativeConsumer {
             ctx.now(),
             records,
         );
+        self.issue_pull(ctx);
+    }
+
+    fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.failed = true;
+        self.processing = None;
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().unwrap_or_else(|| {
+            panic!("native consumer {} faulted without checkpointing", self.params.entity)
+        });
+        super::api::report_failure(cp, self.params.cost.notify_ns, ctx);
+    }
+
+    fn on_restore(&mut self, inc: u64, ctx: &mut Ctx<'_, Msg>) {
+        self.inc = inc;
+        self.failed = false;
+        self.processing = None;
+        self.pending_epoch = None;
+        self.rpc_floor = self.next_rpc;
+        let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
+        let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
+            cursors: self.params.assignments.clone(),
+            ..Default::default()
+        });
+        debug_assert_eq!(snap.cursors.len(), self.offsets.len());
+        self.offsets = snap.cursors;
+        self.replayed += self.records_consumed.saturating_sub(snap.records_consumed);
+        self.records_consumed = snap.records_consumed;
+        self.matches = snap.matches;
+        super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
         self.issue_pull(ctx);
     }
 
@@ -178,14 +247,32 @@ impl Actor<Msg> for NativeConsumer {
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.failed {
+            if let Msg::Restore { inc, .. } = msg {
+                self.on_restore(inc, ctx);
+            }
+            return;
+        }
         match msg {
             Msg::Reply(env) => self.on_reply(env, ctx),
-            Msg::JobDone(_) => self.on_processed(ctx),
-            Msg::Timer(_) => {
-                if self.processing.is_none() {
+            Msg::JobDone(tag) => {
+                if tag == self.inc {
+                    self.on_processed(ctx);
+                }
+            }
+            Msg::Timer(tag) => {
+                if tag == self.inc && self.processing.is_none() {
                     self.issue_pull(ctx);
                 }
             }
+            Msg::BarrierInject { epoch } => {
+                self.pending_epoch = Some(epoch);
+                if self.processing.is_none() {
+                    self.maybe_checkpoint(ctx);
+                }
+            }
+            Msg::Fault { .. } => self.on_fault(ctx),
+            Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
             other => panic!("native consumer: unexpected {other:?}"),
         }
     }
@@ -207,12 +294,27 @@ impl StreamSource for NativeConsumer {
     fn stats(&self) -> SourceStats {
         let mut extras = super::api::StatExtras::new();
         extras.insert(StatKey::Matches, self.matches);
+        if self.replayed > 0 {
+            extras.insert(StatKey::RecordsReplayed, self.replayed);
+        }
+        if self.trim_gap_chunks > 0 {
+            extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
+        }
         SourceStats {
             records_consumed: self.records_consumed,
             pulls_issued: self.pulls_issued,
             empty_pulls: self.empty_pulls,
             threads: 1,
             extras,
+        }
+    }
+
+    fn checkpoint(&self) -> SourceSnapshot {
+        SourceSnapshot {
+            cursors: self.offsets.clone(),
+            records_consumed: self.records_consumed,
+            matches: self.matches,
+            ..Default::default()
         }
     }
 }
@@ -248,6 +350,7 @@ impl SourceFactory for NativeSourceFactory {
                         compute: (c.data_plane == DataPlane::Real).then(|| {
                             w.compute.clone().expect("real data plane needs a compute engine")
                         }),
+                        checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                     },
                     w.metrics.clone(),

@@ -1,5 +1,14 @@
 //! The pull-based source reader (state-of-the-art baseline).
+//!
+//! Checkpointing (see [`crate::checkpoint`]) is where pulling shines: the
+//! source's own `offsets` *are* its restart position. A barrier is taken at
+//! the next clean point of the serial fetch loop — everything fetched has
+//! been emitted, nothing is half-processed — by snapshotting the offsets,
+//! broadcasting the barrier downstream and acking the coordinator. A
+//! restore simply rewinds the offsets (and the exactly-once counters) to
+//! the latest completed snapshot and re-pulls.
 
+use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::config::{CostModel, SourceMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
@@ -10,7 +19,9 @@ use crate::proto::{
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 use std::collections::VecDeque;
 
-use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StreamSource};
+use super::api::{
+    SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource,
+};
 use crate::worker::{CreditLedger, SharedRegistry};
 
 /// Wiring for one pull source task.
@@ -31,6 +42,8 @@ pub struct PullParams {
     pub downstream: Vec<usize>,
     /// Credits per downstream (queue capacity).
     pub queue_cap: usize,
+    /// Checkpoint blackboard (`None` = checkpointing disabled).
+    pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
 }
 
@@ -54,9 +67,21 @@ pub struct PullSource {
     rr: usize,
     next_rpc: u64,
     pending: VecDeque<Batch>,
+    /// Barrier waiting for the next clean point of the fetch loop.
+    pending_epoch: Option<u64>,
+    /// Recovery incarnation; stale-tagged messages are dropped.
+    inc: u64,
+    /// Dead between an injected fault and the restore.
+    failed: bool,
+    /// Replies to RPCs issued before the last restore are stale.
+    rpc_floor: u64,
     pulls_issued: u64,
     empty_pulls: u64,
     records_consumed: u64,
+    /// Records re-read after rollbacks (exactly-once replay volume).
+    replayed: u64,
+    /// Chunks lost to retention and skipped (trim-floor recovery).
+    trim_gap_chunks: u64,
     metrics: SharedMetrics,
     net: SharedNetwork,
     registry: SharedRegistry,
@@ -81,9 +106,15 @@ impl PullSource {
             rr: 0,
             next_rpc: 0,
             pending: VecDeque::new(),
+            pending_epoch: None,
+            inc: 0,
+            failed: false,
+            rpc_floor: 0,
             pulls_issued: 0,
             empty_pulls: 0,
             records_consumed: 0,
+            replayed: 0,
+            trim_gap_chunks: 0,
             metrics,
             net,
             registry,
@@ -91,6 +122,7 @@ impl PullSource {
     }
 
     fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.maybe_checkpoint(ctx);
         let id = self.next_rpc;
         self.next_rpc += 1;
         self.pulls_issued += 1;
@@ -116,18 +148,42 @@ impl PullSource {
         self.state = State::Fetching;
     }
 
+    /// Take a pending barrier at a clean point: `pending` is empty and no
+    /// fetched chunks await processing, so `offsets` cover exactly what was
+    /// emitted. Snapshot, ack the coordinator, broadcast the barrier.
+    fn maybe_checkpoint(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Some(epoch) = self.pending_epoch else { return };
+        debug_assert!(self.pending.is_empty(), "clean points have an empty emit queue");
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().expect("barrier implies checkpointing");
+        super::api::ack_barrier(cp, epoch, self.checkpoint(), self.params.cost.notify_ns, ctx);
+        for &target in &self.params.downstream {
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(
+                self.params.cost.queue_hop_ns,
+                actor,
+                Msg::Barrier { epoch, from_task: self.params.task_idx },
+            );
+        }
+    }
+
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
-        let chunks = match env.reply {
-            RpcReply::PullData { chunks } => chunks,
+        if env.id < self.rpc_floor {
+            return; // reply to a pre-restore pull: the cursor was rewound
+        }
+        let (chunks, trims) = match env.reply {
+            RpcReply::PullData { chunks, trims } => (chunks, trims),
             RpcReply::Error { reason } => {
                 panic!("pull source {}: {reason}", self.params.task_idx)
             }
             other => panic!("pull source {}: unexpected reply {other:?}", self.params.task_idx),
         };
+        self.trim_gap_chunks += super::api::apply_trims(&mut self.offsets, &trims);
         if chunks.is_empty() {
             self.empty_pulls += 1;
+            self.maybe_checkpoint(ctx);
             self.state = State::Idle;
-            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(0));
+            ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
             return;
         }
         // Advance offsets past what we received.
@@ -144,7 +200,7 @@ impl PullSource {
         let cost = self.params.cost.pull_rpc_client_ns
             + records * self.params.cost.engine_record_ns;
         self.state = State::Processing(chunks);
-        ctx.send_self_in(cost, Msg::JobDone(0));
+        ctx.send_self_in(cost, Msg::JobDone(self.inc));
     }
 
     fn on_processed(&mut self, ctx: &mut Ctx<'_, Msg>) {
@@ -159,6 +215,7 @@ impl PullSource {
                 bytes: sc.chunk.bytes(),
                 chunks: vec![sc.chunk],
                 hist: None,
+                inc: self.inc,
             });
         }
         self.flush(ctx);
@@ -187,6 +244,43 @@ impl PullSource {
         self.issue_pull(ctx);
     }
 
+    /// An injected fault: volatile state dies; the failure detector alerts
+    /// the coordinator; everything but `Restore` is ignored until then.
+    fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.failed = true;
+        self.pending.clear();
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().unwrap_or_else(|| {
+            panic!("pull source {} faulted without checkpointing", self.params.task_idx)
+        });
+        super::api::report_failure(cp, self.params.cost.notify_ns, ctx);
+    }
+
+    /// Global rollback: rewind the cursors and the exactly-once counters
+    /// to the latest completed snapshot (or the initial assignments) and
+    /// resume pulling under the new incarnation.
+    fn on_restore(&mut self, inc: u64, ctx: &mut Ctx<'_, Msg>) {
+        self.inc = inc;
+        self.failed = false;
+        self.pending.clear();
+        self.pending_epoch = None;
+        self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
+        self.rr = 0;
+        self.rpc_floor = self.next_rpc;
+        let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
+        let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
+            cursors: self.params.assignments.clone(),
+            ..Default::default()
+        });
+        debug_assert_eq!(snap.cursors.len(), self.offsets.len());
+        self.offsets = snap.cursors;
+        let replay = self.records_consumed.saturating_sub(snap.records_consumed);
+        self.replayed += replay;
+        self.records_consumed = snap.records_consumed;
+        super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
+        self.issue_pull(ctx);
+    }
+
     pub fn pulls_issued(&self) -> u64 {
         self.pulls_issued
     }
@@ -198,6 +292,14 @@ impl PullSource {
     pub fn records_consumed(&self) -> u64 {
         self.records_consumed
     }
+
+    pub fn trim_gap_chunks(&self) -> u64 {
+        self.trim_gap_chunks
+    }
+
+    pub fn records_replayed(&self) -> u64 {
+        self.replayed
+    }
 }
 
 impl Actor<Msg> for PullSource {
@@ -206,20 +308,43 @@ impl Actor<Msg> for PullSource {
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.failed {
+            if let Msg::Restore { inc, .. } = msg {
+                self.on_restore(inc, ctx);
+            }
+            return;
+        }
         match msg {
             Msg::Reply(env) => self.on_reply(env, ctx),
-            Msg::JobDone(_) => self.on_processed(ctx),
-            Msg::Timer(_) => {
-                if matches!(self.state, State::Idle) {
+            Msg::JobDone(tag) => {
+                if tag == self.inc {
+                    self.on_processed(ctx);
+                }
+            }
+            Msg::Timer(tag) => {
+                if tag == self.inc && matches!(self.state, State::Idle) {
                     self.issue_pull(ctx);
                 }
             }
-            Msg::Credit { to_upstream_task } => {
+            Msg::Credit { to_upstream_task, inc } => {
+                if inc != self.inc {
+                    return; // credit for a pre-rollback batch: ledger was reset
+                }
                 self.ledger.refund(to_upstream_task);
                 if matches!(self.state, State::Blocked) {
                     self.flush(ctx);
                 }
             }
+            Msg::BarrierInject { epoch } => {
+                self.pending_epoch = Some(epoch);
+                // Fetching/Idle are already clean (nothing staged, nothing
+                // pending); otherwise the next issue_pull takes it.
+                if matches!(self.state, State::Fetching | State::Idle) {
+                    self.maybe_checkpoint(ctx);
+                }
+            }
+            Msg::Fault { .. } => self.on_fault(ctx),
+            Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
             other => panic!("pull source {}: unexpected {other:?}", self.params.task_idx),
         }
     }
@@ -239,12 +364,27 @@ impl StreamSource for PullSource {
     }
 
     fn stats(&self) -> SourceStats {
+        let mut extras = super::api::StatExtras::new();
+        if self.replayed > 0 {
+            extras.insert(StatKey::RecordsReplayed, self.replayed);
+        }
+        if self.trim_gap_chunks > 0 {
+            extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
+        }
         SourceStats {
             records_consumed: self.records_consumed,
             pulls_issued: self.pulls_issued,
             empty_pulls: self.empty_pulls,
             threads: 2, // fetch + emit threads per pull consumer
-            extras: Default::default(),
+            extras,
+        }
+    }
+
+    fn checkpoint(&self) -> SourceSnapshot {
+        SourceSnapshot {
+            cursors: self.offsets.clone(),
+            records_consumed: self.records_consumed,
+            ..Default::default()
         }
     }
 }
@@ -272,6 +412,7 @@ impl SourceFactory for PullSourceFactory {
                         pull_timeout: c.pull_timeout_us * 1_000,
                         downstream: w.downstream.clone(),
                         queue_cap: c.queue_cap,
+                        checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                     },
                     w.metrics.clone(),

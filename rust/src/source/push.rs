@@ -1,10 +1,21 @@
 //! The push-based source group (the paper's design, §IV-B).
+//!
+//! Checkpointing is where the push design pays for its shared-memory
+//! fast path: the group tracks a *consumed floor* per member (the offsets
+//! of the objects it actually materialised), pauses new consumes while a
+//! barrier waits, snapshots at the quiesce point and broadcasts the
+//! barrier on behalf of every member. Recovery cannot simply rewind a
+//! cursor like the pull source: the group tears down its broker-managed
+//! subscriptions (`PushUnsubscribe` per member), sweeps still-sealed
+//! objects back to the free pool, resubscribes at the restored cursors
+//! and replays — the protocol asymmetry the `checkpoint` ablation
+//! measures.
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::config::{CostModel, SourceMode};
 use crate::net::{NodeId, SharedNetwork};
-use crate::plasma::SharedStore;
 use crate::proto::{
     Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
     RpcReply, RpcRequest, SubId,
@@ -13,6 +24,10 @@ use crate::sim::{Actor, ActorId, Ctx, Engine};
 use crate::worker::{CreditLedger, SharedRegistry};
 
 use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource};
+
+/// Job tags carry the recovery incarnation above this stride; the member
+/// index lives below it.
+const INC_STRIDE: u64 = 1 << 32;
 
 /// One logical push source task in the group (a consumer of the paper's
 /// model: exclusive partitions, its own shared-object pool, its own slot
@@ -42,6 +57,8 @@ pub struct PushGroupParams {
     /// Mapper tasks fed round-robin (shared by all members).
     pub downstream: Vec<usize>,
     pub queue_cap: usize,
+    /// Checkpoint blackboard (`None` = checkpointing disabled).
+    pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
 }
 
@@ -56,6 +73,10 @@ struct MemberState {
     /// they drain (backpressure propagates to the broker's push thread).
     pending: VecDeque<Batch>,
     pending_free: Option<ObjectId>,
+    /// Exclusive consumed floor per owned partition: offsets of everything
+    /// this member materialised and handed downstream — the member's
+    /// checkpoint cursor.
+    consumed: Vec<(PartitionId, ChunkOffset)>,
     objects_consumed: u64,
     records_consumed: u64,
 }
@@ -75,9 +96,31 @@ pub struct PushSourceGroup {
     /// Notifications that raced ahead of the subscribe ack.
     early: Vec<ObjectId>,
     subscribed: bool,
+    /// Barrier waiting for every member to reach its quiesce point.
+    pending_epoch: Option<u64>,
+    /// Recovery incarnation; stale-tagged messages are dropped.
+    inc: u64,
+    /// Dead between an injected fault and the restore.
+    failed: bool,
+    /// Mid-restore: tearing down / re-establishing the subscriptions.
+    recovering: bool,
+    /// Unsubscribe acks still outstanding during a restore.
+    unsubs_pending: usize,
+    /// A restore that arrived before the initial subscribe ack (carries
+    /// the incarnation to adopt once the handshake completes).
+    deferred_restore: Option<u64>,
+    /// Sub ids below this belong to torn-down incarnations: their object
+    /// notifications are freed straight back to the broker.
+    stale_floor: usize,
+    /// During a restore: sub ids at or above this belong to the
+    /// resubscribe in flight — their fills must be *queued* (they carry
+    /// replay data), everything below is a dead incarnation's and is
+    /// freed. `usize::MAX` until the resubscribe goes out.
+    resub_floor: usize,
+    replayed: u64,
     rr: usize,
     net: SharedNetwork,
-    store: SharedStore,
+    store: crate::plasma::SharedStore,
     registry: SharedRegistry,
 }
 
@@ -85,13 +128,17 @@ impl PushSourceGroup {
     pub fn new(
         params: PushGroupParams,
         net: SharedNetwork,
-        store: SharedStore,
+        store: crate::plasma::SharedStore,
         registry: SharedRegistry,
     ) -> Self {
         assert!(!params.members.is_empty());
         assert!(!params.downstream.is_empty());
         let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
-        let members = params.members.iter().map(|_| MemberState::default()).collect();
+        let members = params
+            .members
+            .iter()
+            .map(|m| MemberState { consumed: m.assignments.clone(), ..Default::default() })
+            .collect();
         Self {
             params,
             ledger,
@@ -100,6 +147,15 @@ impl PushSourceGroup {
             base_sub: None,
             early: Vec::new(),
             subscribed: false,
+            pending_epoch: None,
+            inc: 0,
+            failed: false,
+            recovering: false,
+            unsubs_pending: 0,
+            deferred_restore: None,
+            stale_floor: 0,
+            resub_floor: usize::MAX,
+            replayed: 0,
             rr: 0,
             net,
             store,
@@ -107,20 +163,7 @@ impl PushSourceGroup {
         }
     }
 
-    /// Step 1: the single subscription RPC, issued by the leader on behalf
-    /// of every member.
-    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        let sources = self
-            .params
-            .members
-            .iter()
-            .map(|m| PushSourceSpec {
-                source_actor: ctx.self_id(),
-                assignments: m.assignments.clone(),
-                objects: m.objects,
-                object_bytes: m.object_bytes,
-            })
-            .collect();
+    fn rpc(&mut self, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) {
         let deliver =
             self.net
                 .borrow_mut()
@@ -132,9 +175,29 @@ impl PushSourceGroup {
                 id: 0,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
-                kind: RpcKind::PushSubscribe { sources },
+                kind,
             }),
         );
+    }
+
+    /// Step 1: the single subscription RPC, issued by the leader on behalf
+    /// of every member — at the members' current consumed cursors, so the
+    /// same call serves both the initial subscribe and the post-restore
+    /// resubscribe.
+    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let sources = self
+            .params
+            .members
+            .iter()
+            .zip(self.members.iter())
+            .map(|(m, state)| PushSourceSpec {
+                source_actor: ctx.self_id(),
+                assignments: state.consumed.clone(),
+                objects: m.objects,
+                object_bytes: m.object_bytes,
+            })
+            .collect();
+        self.rpc(RpcKind::PushSubscribe { sources }, ctx);
     }
 
     fn member_of(&mut self, id: ObjectId) -> usize {
@@ -145,7 +208,45 @@ impl PushSourceGroup {
         idx
     }
 
+    /// Return an object's buffer to the broker without consuming it (stale
+    /// notifications of torn-down subscriptions).
+    fn free_object(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
+        ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+    }
+
+    /// Discard a fill a dead/torn-down consumer cannot use. For a still
+    /// *active* subscription, freeing the buffer would make the broker
+    /// instantly refill and re-notify it (a free→fill ping-pong until the
+    /// recovery unsubscribe lands), so the slot is left sealed instead:
+    /// pool exhaustion pauses fills and the unsubscribe's `release_sealed`
+    /// sweep reclaims it. Objects of already-inactive subscriptions have
+    /// no sweep coming, so those are freed now — an inactive subscription
+    /// cannot be refilled.
+    fn discard_stale(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
+        if !self.store.borrow().subscription(id.sub).active {
+            self.free_object(id, ctx);
+        }
+    }
+
     fn on_ready(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
+        if self.recovering {
+            // Mid-restore: a fill for the resubscribe in flight carries
+            // replay data (the broker-managed cursor has already advanced
+            // past it, so freeing it would lose its records) — queue it
+            // for the subscribe ack. Anything older belongs to a dead
+            // incarnation and is discarded.
+            if id.sub.0 >= self.resub_floor {
+                self.early.push(id);
+            } else {
+                self.discard_stale(id, ctx);
+            }
+            return;
+        }
+        if id.sub.0 < self.stale_floor {
+            // A fill for a torn-down incarnation sealed after the sweep.
+            self.discard_stale(id, ctx);
+            return;
+        }
         if !self.subscribed {
             self.early.push(id);
             return;
@@ -157,6 +258,9 @@ impl PushSourceGroup {
 
     /// Start the member's slot thread on its next sealed object.
     fn try_consume(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        if self.pending_epoch.is_some() {
+            return; // a barrier is waiting for the group to quiesce
+        }
         let state = &mut self.members[m];
         if state.consuming.is_some()
             || !state.pending.is_empty()
@@ -171,7 +275,7 @@ impl PushSourceGroup {
         let cost = self.params.cost.push_object_handle_ns
             + records * self.params.cost.push_consume_record_ns;
         state.consuming = Some(id);
-        ctx.send_self_in(cost, Msg::JobDone(m as u64));
+        ctx.send_self_in(cost, Msg::JobDone(self.inc * INC_STRIDE + m as u64));
     }
 
     fn on_consumed(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
@@ -180,17 +284,24 @@ impl PushSourceGroup {
             state.consuming.take().expect("JobDone only while consuming")
         };
         let from_task = self.params.members[m].task_idx;
+        let inc = self.inc;
         {
             let store = self.store.borrow();
             let state = &mut self.members[m];
             for sc in store.read(id) {
                 state.records_consumed += sc.chunk.records as u64;
+                for (p, off) in state.consumed.iter_mut() {
+                    if *p == sc.partition {
+                        *off = (*off).max(sc.offset + 1);
+                    }
+                }
                 state.pending.push_back(Batch {
                     from_task,
                     tuples: sc.chunk.records as u64,
                     bytes: sc.chunk.bytes(),
                     chunks: vec![sc.chunk.clone()],
                     hist: None,
+                    inc,
                 });
             }
             state.objects_consumed += 1;
@@ -225,10 +336,170 @@ impl PushSourceGroup {
             ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
         }
         if let Some(id) = self.members[m].pending_free.take() {
-            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+            self.free_object(id, ctx);
         }
+        self.maybe_checkpoint(ctx);
         self.try_consume(m, ctx);
     }
+
+    // ------------------------------------------------------- checkpoint --
+
+    /// Take a waiting barrier once every member quiesced (nothing being
+    /// consumed, nothing pending, nothing held for free): the members'
+    /// consumed floors then cover exactly what was handed downstream.
+    /// Snapshot, ack, broadcast one barrier per member id, resume.
+    fn maybe_checkpoint(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Some(epoch) = self.pending_epoch else { return };
+        if self.recovering {
+            return;
+        }
+        let quiesced = self
+            .members
+            .iter()
+            .all(|s| s.consuming.is_none() && s.pending.is_empty() && s.pending_free.is_none());
+        if !quiesced {
+            return;
+        }
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().expect("barrier implies checkpointing");
+        super::api::ack_barrier(cp, epoch, self.checkpoint(), self.params.cost.notify_ns, ctx);
+        // Every downstream task aligns over all member channels: broadcast
+        // the barrier on behalf of each member.
+        for i in 0..self.params.members.len() {
+            let from_task = self.params.members[i].task_idx;
+            for &target in &self.params.downstream {
+                let actor = self.registry.borrow().actor_of(target);
+                ctx.send_in(
+                    self.params.cost.queue_hop_ns,
+                    actor,
+                    Msg::Barrier { epoch, from_task },
+                );
+            }
+        }
+        for m in 0..self.members.len() {
+            self.try_consume(m, ctx);
+        }
+    }
+
+    // --------------------------------------------------------- recovery --
+
+    fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.failed = true;
+        self.pending_epoch = None;
+        let cp = self.params.checkpoint.as_ref().unwrap_or_else(|| {
+            panic!("push group {} faulted without checkpointing", self.params.leader_task_idx)
+        });
+        super::api::report_failure(cp, self.params.cost.notify_ns, ctx);
+    }
+
+    /// Global rollback. The push path cannot just rewind a cursor: tear
+    /// down every member's subscription, sweep its objects, then
+    /// resubscribe at the snapshot cursors and replay.
+    fn begin_restore(&mut self, inc: u64, ctx: &mut Ctx<'_, Msg>) {
+        let Some(base) = self.base_sub else {
+            // The initial subscribe is still in flight: finish the
+            // handshake first (the ack completes it), then restore.
+            self.deferred_restore = Some(inc);
+            self.failed = false;
+            return;
+        };
+        self.inc = inc;
+        self.failed = false;
+        self.recovering = true;
+        self.pending_epoch = None;
+        // Discard every held object: their subscriptions are about to be
+        // unsubscribed, whose `release_sealed` sweep reclaims the slots.
+        for m in 0..self.members.len() {
+            let ids: Vec<ObjectId> = {
+                let s = &mut self.members[m];
+                s.pending.clear();
+                s.ready
+                    .drain(..)
+                    .chain(s.consuming.take())
+                    .chain(s.pending_free.take())
+                    .collect()
+            };
+            for id in ids {
+                self.discard_stale(id, ctx);
+            }
+        }
+        let early: Vec<ObjectId> = std::mem::take(&mut self.early);
+        for id in early {
+            self.discard_stale(id, ctx);
+        }
+        self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
+        self.rr = 0;
+        // Roll the consumed floors and counters back to the snapshot.
+        let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
+        let snap = cp.borrow().source_snapshot(ctx.self_id());
+        let consumed_total: u64 = self.members.iter().map(|s| s.records_consumed).sum();
+        match snap {
+            Some(snap) => {
+                let mut at = 0;
+                for (i, state) in self.members.iter_mut().enumerate() {
+                    let n = state.consumed.len();
+                    state.consumed = snap.cursors[at..at + n].to_vec();
+                    at += n;
+                    state.records_consumed =
+                        snap.member_records.get(i).copied().unwrap_or(0);
+                }
+                debug_assert_eq!(at, snap.cursors.len());
+            }
+            None => {
+                for (m, state) in self.params.members.iter().zip(self.members.iter_mut()) {
+                    state.consumed = m.assignments.clone();
+                    state.records_consumed = 0;
+                }
+            }
+        }
+        let rolled_back: u64 = self.members.iter().map(|s| s.records_consumed).sum();
+        self.replayed += consumed_total.saturating_sub(rolled_back);
+        // Tear down the old subscriptions; the acks gate the resubscribe.
+        self.subscribed = false;
+        self.sub_to_member.clear();
+        self.unsubs_pending = self.members.len();
+        for k in 0..self.members.len() {
+            self.rpc(RpcKind::PushUnsubscribe { sub: SubId(base.0 + k) }, ctx);
+        }
+    }
+
+    fn on_unsubscribed(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        assert!(self.recovering, "push group only unsubscribes during recovery");
+        // Sweep: a crashed incarnation lost its ObjectReady notifications,
+        // so still-sealed slots would otherwise never return to the pool.
+        self.store.borrow_mut().release_sealed(sub);
+        self.unsubs_pending -= 1;
+        if self.unsubs_pending == 0 {
+            // Resubscribe at the restored cursors. Sub ids granted from
+            // here on are the new incarnation's: their fills are replay
+            // data, never freed.
+            self.resub_floor = self.store.borrow().next_sub_id();
+            self.subscribe(ctx);
+        }
+    }
+
+    fn on_subscribe_ack(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        self.base_sub = Some(sub);
+        self.subscribed = true;
+        self.stale_floor = sub.0;
+        let was_recovering = std::mem::take(&mut self.recovering);
+        if was_recovering {
+            self.resub_floor = usize::MAX;
+            let cp = self.params.checkpoint.as_ref().expect("recovering implies checkpointing");
+            super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
+        }
+        // Deliver fills that raced ahead of this ack (including replay
+        // fills queued during the recovery resubscribe).
+        let early = std::mem::take(&mut self.early);
+        for id in early {
+            self.on_ready(id, ctx);
+        }
+        if let Some(inc) = self.deferred_restore.take() {
+            self.begin_restore(inc, ctx);
+        }
+    }
+
+    // ---------------------------------------------------- introspection --
 
     pub fn objects_consumed(&self) -> u64 {
         self.members.iter().map(|m| m.objects_consumed).sum()
@@ -246,6 +517,10 @@ impl PushSourceGroup {
     pub fn is_subscribed(&self) -> bool {
         self.subscribed
     }
+
+    pub fn records_replayed(&self) -> u64 {
+        self.replayed
+    }
 }
 
 impl Actor<Msg> for PushSourceGroup {
@@ -254,18 +529,23 @@ impl Actor<Msg> for PushSourceGroup {
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.failed {
+            match msg {
+                Msg::Restore { inc, .. } => self.begin_restore(inc, ctx),
+                // A dead subscriber cannot consume fills; discarding them
+                // (sealed until the recovery sweep) also pauses the
+                // broker's fill pump via pool exhaustion.
+                Msg::ObjectReady { id } => self.discard_stale(id, ctx),
+                _ => {}
+            }
+            return;
+        }
         match msg {
             Msg::Reply(env) => {
                 let RpcEnvelope { reply, .. } = env;
                 match reply {
-                    RpcReply::SubscribeAck { sub } => {
-                        self.base_sub = Some(sub);
-                        self.subscribed = true;
-                        let early = std::mem::take(&mut self.early);
-                        for id in early {
-                            self.on_ready(id, ctx);
-                        }
-                    }
+                    RpcReply::SubscribeAck { sub } => self.on_subscribe_ack(sub, ctx),
+                    RpcReply::UnsubscribeAck { sub, .. } => self.on_unsubscribed(sub, ctx),
                     RpcReply::Error { reason } => panic!(
                         "push group {}: subscribe failed: {reason}",
                         self.params.leader_task_idx
@@ -275,13 +555,26 @@ impl Actor<Msg> for PushSourceGroup {
             }
             // Step 3: the broker sealed an object for one of our members.
             Msg::ObjectReady { id } => self.on_ready(id, ctx),
-            Msg::JobDone(m) => self.on_consumed(m as usize, ctx),
-            Msg::Credit { to_upstream_task } => {
+            Msg::JobDone(tag) => {
+                if tag / INC_STRIDE == self.inc {
+                    self.on_consumed((tag % INC_STRIDE) as usize, ctx);
+                }
+            }
+            Msg::Credit { to_upstream_task, inc } => {
+                if inc != self.inc {
+                    return; // credit for a pre-rollback batch: ledger was reset
+                }
                 self.ledger.refund(to_upstream_task);
                 for m in 0..self.members.len() {
                     self.flush(m, ctx);
                 }
             }
+            Msg::BarrierInject { epoch } => {
+                self.pending_epoch = Some(epoch);
+                self.maybe_checkpoint(ctx);
+            }
+            Msg::Fault { .. } => self.on_fault(ctx),
+            Msg::Restore { inc, .. } => self.begin_restore(inc, ctx),
             other => panic!("push group: unexpected {other:?}"),
         }
     }
@@ -304,12 +597,24 @@ impl StreamSource for PushSourceGroup {
         let mut extras = super::api::StatExtras::new();
         extras.insert(StatKey::ObjectsConsumed, self.objects_consumed());
         extras.insert(StatKey::Subscribed, self.subscribed as u64);
+        if self.replayed > 0 {
+            extras.insert(StatKey::RecordsReplayed, self.replayed);
+        }
         SourceStats {
             records_consumed: self.records_consumed(),
             pulls_issued: 0,
             empty_pulls: 0,
             threads: 2, // group consume thread + broker push thread
             extras,
+        }
+    }
+
+    fn checkpoint(&self) -> SourceSnapshot {
+        SourceSnapshot {
+            cursors: self.members.iter().flat_map(|s| s.consumed.iter().copied()).collect(),
+            records_consumed: self.records_consumed(),
+            matches: 0,
+            member_records: self.member_records(),
         }
     }
 }
@@ -346,6 +651,7 @@ impl SourceFactory for PushSourceFactory {
                 members,
                 downstream: w.downstream.clone(),
                 queue_cap: c.queue_cap,
+                checkpoint: w.checkpoint.clone(),
                 cost: c.cost.clone(),
             },
             w.net.clone(),

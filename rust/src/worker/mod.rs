@@ -1,5 +1,5 @@
 //! The Flink-like processing worker: operator tasks, bounded queues,
-//! credit-based backpressure.
+//! credit-based backpressure, aligned checkpoint barriers.
 //!
 //! §IV-A: a worker hosts `NFs` slots; sources, sinks and other operators
 //! deploy on slots and exchange batches through queues. Flink's actual
@@ -12,6 +12,26 @@
 //! [`OperatorTask`] is one slot-resident task thread: a serial loop over
 //! its input queue driving an operator chain (chained operators execute
 //! in the same task, Fig. 1's S1→Op3 case).
+//!
+//! ## Checkpoint barriers & recovery
+//!
+//! When checkpointing is on (see [`crate::checkpoint`]), barriers flow
+//! in-band through the same channels as data. A task *aligns*: it keeps
+//! processing channels whose barrier has not arrived, buffers post-barrier
+//! batches from channels whose barrier has (they belong to the next
+//! epoch), and — once every upstream's barrier arrived and the inbox
+//! drained — snapshots its operator chain, acks the coordinator and
+//! forwards the barrier downstream behind any still-pending emits.
+//! Barriers consume no credits (they carry no payload); the in-band
+//! ordering is what matters.
+//!
+//! Recovery is a global rollback: on [`Msg::Restore`] the task wipes its
+//! volatile state (inbox, pending emits, ledger), restores its operators
+//! from the latest completed snapshot (or their pristine state, captured
+//! at construction, if none completed yet) and adopts the new incarnation
+//! number. Everything in flight from the old incarnation — batches,
+//! credits, job completions, tick timers — identifies itself by `inc` tag
+//! and is dropped on receipt.
 
 #[cfg(test)]
 mod tests;
@@ -20,9 +40,10 @@ use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
+use crate::checkpoint::{SharedCheckpoint, TaskSnapshot};
 use crate::config::CostModel;
 use crate::metrics::{Class, SharedMetrics};
-use crate::ops::{OpOutput, Operator};
+use crate::ops::{OpOutput, OpState, Operator};
 use crate::proto::{Batch, Msg};
 use crate::sim::{Actor, ActorId, Ctx, Time, SECOND};
 
@@ -98,20 +119,56 @@ pub struct TaskParams {
     pub queue_cap: usize,
     /// Credits toward each downstream target this task emits to.
     pub downstream: Vec<usize>,
+    /// Upstream task indices feeding this task (sources for stage 0) —
+    /// the channel set a checkpoint barrier aligns over.
+    pub upstream: Vec<usize>,
     /// Slide tick period for windowed chains (ns); `SECOND` in the paper.
     pub tick_ns: Time,
     pub cost: CostModel,
+    /// Checkpoint blackboard (`None` = checkpointing disabled).
+    pub checkpoint: Option<SharedCheckpoint>,
+}
+
+/// An element of the emit queue: a credited batch toward one target, or an
+/// uncredited barrier broadcast parked behind earlier emits (in-band
+/// ordering: the barrier must not overtake batches produced before the
+/// snapshot).
+enum Emit {
+    Batch(usize, Batch),
+    Barrier(u64),
+}
+
+/// In-flight barrier alignment.
+struct Alignment {
+    epoch: u64,
+    /// Upstreams whose barrier arrived.
+    seen: Vec<usize>,
+    /// Post-barrier batches from `seen` channels, held for the next epoch.
+    buffered: VecDeque<Batch>,
+    started: Time,
 }
 
 /// One slot-resident task: input queue + operator chain + credit flow.
 pub struct OperatorTask {
     params: TaskParams,
     chain: Vec<Box<dyn Operator>>,
+    /// Pristine per-operator state, captured at construction — the restore
+    /// point before any checkpoint completes.
+    initial: Vec<OpState>,
     inbox: VecDeque<Batch>,
-    /// Emits waiting for downstream credits.
-    pending_emits: VecDeque<(usize, Batch)>,
+    /// Emits waiting for downstream credits (and parked barriers).
+    pending_emits: VecDeque<Emit>,
     ledger: CreditLedger,
     busy: bool,
+    /// Recovery incarnation; stale-tagged messages are dropped.
+    inc: u64,
+    /// True between an injected fault and the restore — a dead process
+    /// ignores everything but `Restore`.
+    failed: bool,
+    /// Barriers with `epoch <= epoch_floor` are stale (completed or
+    /// aborted before the last restore).
+    epoch_floor: u64,
+    align: Option<Alignment>,
     registry: SharedRegistry,
     metrics: SharedMetrics,
     batches_processed: u64,
@@ -128,13 +185,19 @@ impl OperatorTask {
     ) -> Self {
         assert!(!chain.is_empty(), "a task needs at least one operator");
         let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        let initial = chain.iter().map(|op| op.snapshot()).collect();
         Self {
             params,
             chain,
+            initial,
             inbox: VecDeque::new(),
             pending_emits: VecDeque::new(),
             ledger,
             busy: false,
+            inc: 0,
+            failed: false,
+            epoch_floor: 0,
+            align: None,
             registry,
             metrics,
             batches_processed: 0,
@@ -147,6 +210,10 @@ impl OperatorTask {
             + self.params.cost.queue_hop_ns
     }
 
+    fn tick_period(&self) -> Time {
+        if self.params.tick_ns > 0 { self.params.tick_ns } else { SECOND }
+    }
+
     /// Start processing the head batch if idle and not emit-blocked.
     fn try_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
         if self.busy || !self.pending_emits.is_empty() {
@@ -155,24 +222,51 @@ impl OperatorTask {
         if let Some(batch) = self.inbox.front() {
             let cost = self.chain_cost(batch);
             self.busy = true;
-            ctx.send_self_in(cost, Msg::JobDone(0));
+            ctx.send_self_in(cost, Msg::JobDone(self.inc));
         }
     }
 
     fn flush_emits(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        while let Some((target, _)) = self.pending_emits.front() {
-            if !self.ledger.has(*target) {
-                return;
+        while let Some(head) = self.pending_emits.front() {
+            match head {
+                Emit::Barrier(_) => {
+                    let Some(Emit::Barrier(epoch)) = self.pending_emits.pop_front() else {
+                        unreachable!("peeked")
+                    };
+                    self.broadcast_barrier(epoch, ctx);
+                }
+                Emit::Batch(target, _) => {
+                    if !self.ledger.has(*target) {
+                        return;
+                    }
+                    let Some(Emit::Batch(target, batch)) = self.pending_emits.pop_front() else {
+                        unreachable!("peeked")
+                    };
+                    self.send_batch(target, batch, ctx);
+                }
             }
-            let (target, batch) = self.pending_emits.pop_front().expect("peeked");
-            self.send_batch(target, batch, ctx);
         }
     }
 
-    fn send_batch(&mut self, target: usize, batch: Batch, ctx: &mut Ctx<'_, Msg>) {
+    fn send_batch(&mut self, target: usize, mut batch: Batch, ctx: &mut Ctx<'_, Msg>) {
         self.ledger.spend(target);
+        batch.inc = self.inc;
         let actor = self.registry.borrow().actor_of(target);
         ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
+    }
+
+    /// Forward barrier `epoch` on every output channel (no credits: the
+    /// barrier carries no payload; same queue-hop delay keeps it in-band).
+    fn broadcast_barrier(&mut self, epoch: u64, ctx: &mut Ctx<'_, Msg>) {
+        let me = self.params.task_idx;
+        for &target in &self.params.downstream {
+            let actor = self.registry.borrow().actor_of(target);
+            ctx.send_in(
+                self.params.cost.queue_hop_ns,
+                actor,
+                Msg::Barrier { epoch, from_task: me },
+            );
+        }
     }
 
     fn route(&mut self, out: OpOutput, ctx: &mut Ctx<'_, Msg>) {
@@ -188,9 +282,90 @@ impl OperatorTask {
             if self.pending_emits.is_empty() && self.ledger.has(target) {
                 self.send_batch(target, batch, ctx);
             } else {
-                self.pending_emits.push_back((target, batch));
+                self.pending_emits.push_back(Emit::Batch(target, batch));
             }
         }
+    }
+
+    fn on_data(&mut self, batch: Batch, ctx: &mut Ctx<'_, Msg>) {
+        if let Some(a) = &mut self.align {
+            if a.seen.contains(&batch.from_task) {
+                // Post-barrier input on an already-barriered channel: it
+                // belongs to the next epoch — hold it until the snapshot.
+                a.buffered.push_back(batch);
+                return;
+            }
+        }
+        self.inbox.push_back(batch);
+        self.inbox_peak = self.inbox_peak.max(self.inbox.len());
+        self.try_start(ctx);
+    }
+
+    fn on_barrier(&mut self, epoch: u64, from_task: usize, ctx: &mut Ctx<'_, Msg>) {
+        if self.params.checkpoint.is_none() || epoch <= self.epoch_floor {
+            return; // checkpointing off, or a stale barrier from before a restore
+        }
+        match &mut self.align {
+            None => {
+                self.align = Some(Alignment {
+                    epoch,
+                    seen: vec![from_task],
+                    buffered: VecDeque::new(),
+                    started: ctx.now(),
+                });
+            }
+            Some(a) => {
+                if a.epoch != epoch {
+                    return; // barrier from an aborted earlier wave
+                }
+                if !a.seen.contains(&from_task) {
+                    a.seen.push(from_task);
+                }
+            }
+        }
+        self.try_complete_alignment(ctx);
+    }
+
+    /// Complete the alignment once every upstream's barrier arrived AND all
+    /// pre-barrier input drained — the snapshot must reflect exactly the
+    /// pre-barrier records.
+    fn try_complete_alignment(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let ready = match &self.align {
+            Some(a) => a.seen.len() >= self.params.upstream.len(),
+            None => false,
+        };
+        if !ready || !self.inbox.is_empty() || self.busy {
+            return;
+        }
+        let a = self.align.take().expect("checked above");
+        self.epoch_floor = a.epoch;
+        let snap = TaskSnapshot { ops: self.chain.iter().map(|op| op.snapshot()).collect() };
+        let cp = self.params.checkpoint.as_ref().expect("aligning implies checkpointing");
+        let coordinator = {
+            let mut c = cp.borrow_mut();
+            c.put_task(a.epoch, ctx.self_id(), snap);
+            c.note_alignment(ctx.now() - a.started);
+            c.coordinator
+        };
+        if let Some(coordinator) = coordinator {
+            ctx.send_in(
+                self.params.cost.notify_ns,
+                coordinator,
+                Msg::BarrierAck { epoch: a.epoch, from: ctx.self_id() },
+            );
+        }
+        // The barrier goes out behind everything already produced; output
+        // from the buffered (post-barrier) batches will follow it.
+        if self.pending_emits.is_empty() {
+            self.broadcast_barrier(a.epoch, ctx);
+        } else {
+            self.pending_emits.push_back(Emit::Barrier(a.epoch));
+        }
+        for batch in a.buffered {
+            self.inbox.push_back(batch);
+        }
+        self.inbox_peak = self.inbox_peak.max(self.inbox.len());
+        self.try_start(ctx);
     }
 
     fn on_done(&mut self, ctx: &mut Ctx<'_, Msg>) {
@@ -225,8 +400,82 @@ impl OperatorTask {
         self.route(out, ctx);
         // Return the credit to the upstream that sent the processed batch.
         let upstream_actor = self.registry.borrow().actor_of(from_upstream);
-        ctx.send(upstream_actor, Msg::Credit { to_upstream_task: self.params.task_idx });
+        ctx.send(
+            upstream_actor,
+            Msg::Credit { to_upstream_task: self.params.task_idx, inc: self.inc },
+        );
+        // The inbox may just have drained below an armed alignment.
+        self.try_complete_alignment(ctx);
         self.try_start(ctx);
+    }
+
+    /// An injected fault: the process dies. Volatile state is gone; the
+    /// failure detector (modelled as an instant local notice) alerts the
+    /// coordinator; everything but `Restore` is ignored until then.
+    fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.failed = true;
+        self.busy = false;
+        self.inbox.clear();
+        self.pending_emits.clear();
+        self.align = None;
+        let cp = self
+            .params
+            .checkpoint
+            .as_ref()
+            .unwrap_or_else(|| panic!("task {} faulted without checkpointing", self.params.task_idx));
+        let coordinator = cp.borrow().coordinator.expect("coordinator wired before faults");
+        ctx.send_in(
+            self.params.cost.notify_ns,
+            coordinator,
+            Msg::FailureDetected { from: ctx.self_id() },
+        );
+    }
+
+    /// Global rollback: adopt the new incarnation, reset volatile state,
+    /// restore the operator chain from the latest completed checkpoint
+    /// (or its pristine construction state) and resume.
+    fn on_restore(&mut self, inc: u64, epoch_floor: u64, ctx: &mut Ctx<'_, Msg>) {
+        self.inc = inc;
+        self.epoch_floor = self.epoch_floor.max(epoch_floor);
+        self.failed = false;
+        self.busy = false;
+        self.inbox.clear();
+        self.pending_emits.clear();
+        self.align = None;
+        self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
+        let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
+        let states = cp
+            .borrow()
+            .task_snapshot(ctx.self_id())
+            .map(|s| s.ops)
+            .unwrap_or_else(|| self.initial.clone());
+        assert_eq!(states.len(), self.chain.len(), "snapshot shape matches the chain");
+        for (op, state) in self.chain.iter_mut().zip(states.iter()) {
+            op.restore(state);
+        }
+        // Restart the tick chain under the new incarnation (the old chain's
+        // stale tags die on receipt).
+        if self.chain.iter().any(|op| op.wants_ticks()) {
+            ctx.send_self_in(self.tick_period(), Msg::Timer(self.inc));
+        }
+        let coordinator = cp.borrow().coordinator.expect("coordinator wired");
+        ctx.send_in(
+            self.params.cost.notify_ns,
+            coordinator,
+            Msg::RestoreAck { from: ctx.self_id() },
+        );
+    }
+
+    fn on_tick(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let mut out = OpOutput::default();
+        for op in self.chain.iter_mut() {
+            if op.wants_ticks() {
+                op.on_tick(&mut out)
+                    .unwrap_or_else(|e| panic!("task {} tick: {e:#}", self.params.task_idx));
+            }
+        }
+        self.route(out, ctx);
+        ctx.send_self_in(self.tick_period(), Msg::Timer(self.inc));
     }
 
     pub fn batches_processed(&self) -> u64 {
@@ -251,36 +500,47 @@ impl OperatorTask {
 impl Actor<Msg> for OperatorTask {
     fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
         if self.chain.iter().any(|op| op.wants_ticks()) {
-            let tick = if self.params.tick_ns > 0 { self.params.tick_ns } else { SECOND };
-            ctx.send_self_in(tick, Msg::Timer(0));
+            ctx.send_self_in(self.tick_period(), Msg::Timer(self.inc));
         }
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.failed {
+            // A dead process: only the restore resurrects it; everything
+            // else in flight is lost with the incarnation.
+            if let Msg::Restore { inc, epoch_floor } = msg {
+                self.on_restore(inc, epoch_floor, ctx);
+            }
+            return;
+        }
         match msg {
             Msg::Data(batch) => {
-                self.inbox.push_back(batch);
-                self.inbox_peak = self.inbox_peak.max(self.inbox.len());
-                self.try_start(ctx);
+                if batch.inc != self.inc {
+                    return; // in flight across a rollback: replayed from cursors
+                }
+                self.on_data(batch, ctx);
             }
-            Msg::JobDone(_) => self.on_done(ctx),
-            Msg::Credit { to_upstream_task } => {
+            Msg::JobDone(tag) => {
+                if tag == self.inc {
+                    self.on_done(ctx);
+                }
+            }
+            Msg::Credit { to_upstream_task, inc } => {
+                if inc != self.inc {
+                    return; // credit for a pre-rollback batch: ledger was reset
+                }
                 self.ledger.refund(to_upstream_task);
                 self.flush_emits(ctx);
                 self.try_start(ctx);
             }
-            Msg::Timer(_) => {
-                let mut out = OpOutput::default();
-                for op in self.chain.iter_mut() {
-                    if op.wants_ticks() {
-                        op.on_tick(&mut out)
-                            .unwrap_or_else(|e| panic!("task {} tick: {e:#}", self.params.task_idx));
-                    }
+            Msg::Timer(tag) => {
+                if tag == self.inc {
+                    self.on_tick(ctx);
                 }
-                self.route(out, ctx);
-                let tick = if self.params.tick_ns > 0 { self.params.tick_ns } else { SECOND };
-                ctx.send_self_in(tick, Msg::Timer(0));
             }
+            Msg::Barrier { epoch, from_task } => self.on_barrier(epoch, from_task, ctx),
+            Msg::Fault { .. } => self.on_fault(ctx),
+            Msg::Restore { inc, epoch_floor } => self.on_restore(inc, epoch_floor, ctx),
             other => panic!("task {}: unexpected {other:?}", self.params.task_idx),
         }
     }

@@ -26,7 +26,7 @@ impl crate::sim::Actor<Msg> for Feeder {
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
-        if let Msg::Credit { to_upstream_task } = msg {
+        if let Msg::Credit { to_upstream_task, .. } = msg {
             *self.credits_seen.borrow_mut() += 1;
             self.ledger.refund(to_upstream_task);
             self.pump(ctx);
@@ -48,6 +48,7 @@ impl Feeder {
                     bytes: self.tuples_per_batch * 100,
                     chunks: Vec::new(),
                     hist: None,
+                    inc: 0,
                 }),
             );
         }
@@ -93,8 +94,10 @@ fn rig(n_batches: u64, queue_cap: usize, per_batch_ns: Time) -> Rig {
             task_idx: 1,
             queue_cap,
             downstream: vec![],
+            upstream: vec![0],
             tick_ns: crate::sim::SECOND,
             cost: CostModel::default(),
+            checkpoint: None,
         },
         vec![Box::new(SlowOp { per_batch: per_batch_ns, seen: 0 })],
         registry.clone(),
@@ -193,8 +196,10 @@ fn chained_operators_share_one_task() {
             task_idx: 1,
             queue_cap: 4,
             downstream: vec![],
+            upstream: vec![0],
             tick_ns: crate::sim::SECOND,
             cost: CostModel::default(),
+            checkpoint: None,
         },
         vec![Box::new(CountOp::default()), Box::new(CountOp::default())],
         registry.clone(),
@@ -206,7 +211,14 @@ fn chained_operators_share_one_task() {
     engine.schedule(
         0,
         task,
-        Msg::Data(Batch { from_task: 0, tuples: 7, bytes: 700, chunks: vec![], hist: None }),
+        Msg::Data(Batch {
+            from_task: 0,
+            tuples: 7,
+            bytes: 700,
+            chunks: vec![],
+            hist: None,
+            inc: 0,
+        }),
     );
     engine.run_to_quiescence();
     let t = engine.actor_as::<OperatorTask>(task).unwrap();
@@ -218,4 +230,175 @@ fn chained_operators_share_one_task() {
 struct NullActor;
 impl crate::sim::Actor<Msg> for NullActor {
     fn on_event(&mut self, _m: Msg, _c: &mut Ctx<'_, Msg>) {}
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint barriers + fault/restore
+// ---------------------------------------------------------------------------
+
+use crate::checkpoint::{CheckpointControl, SharedCheckpoint};
+use crate::ops::OpState;
+use crate::sim::MICROS;
+
+/// Records every message it receives (stands in for the coordinator).
+struct Catcher {
+    seen: Rc<RefCell<Vec<Msg>>>,
+}
+
+impl crate::sim::Actor<Msg> for Catcher {
+    fn on_event(&mut self, m: Msg, _c: &mut Ctx<'_, Msg>) {
+        self.seen.borrow_mut().push(m);
+    }
+}
+
+struct CkptRig {
+    engine: Engine<Msg>,
+    task: ActorId,
+    control: SharedCheckpoint,
+    coord_seen: Rc<RefCell<Vec<Msg>>>,
+}
+
+/// One count task with two upstream channels (0 and 1) and a scripted
+/// coordinator stand-in.
+fn ckpt_rig() -> CkptRig {
+    let mut engine = Engine::new(1);
+    let metrics = MetricsHub::shared();
+    let registry = TaskRegistry::shared();
+    let control = CheckpointControl::shared();
+    let task = engine.add_actor(Box::new(OperatorTask::new(
+        TaskParams {
+            task_idx: 2,
+            queue_cap: 8,
+            downstream: vec![],
+            upstream: vec![0, 1],
+            tick_ns: crate::sim::SECOND,
+            cost: CostModel::default(),
+            checkpoint: Some(control.clone()),
+        },
+        vec![Box::new(CountOp::default())],
+        registry.clone(),
+        metrics,
+    )));
+    registry.borrow_mut().register(2, task);
+    for idx in [0usize, 1] {
+        let probe = engine.add_actor(Box::new(NullActor));
+        registry.borrow_mut().register(idx, probe);
+    }
+    let coord_seen = Rc::new(RefCell::new(Vec::new()));
+    let coordinator = engine.add_actor(Box::new(Catcher { seen: coord_seen.clone() }));
+    control.borrow_mut().coordinator = Some(coordinator);
+    CkptRig { engine, task, control, coord_seen }
+}
+
+fn data(from_task: usize, tuples: u64, inc: u64) -> Msg {
+    Msg::Data(Batch { from_task, tuples, bytes: tuples * 100, chunks: vec![], hist: None, inc })
+}
+
+#[test]
+fn barrier_aligns_over_both_upstream_channels() {
+    let mut r = ckpt_rig();
+    r.control.borrow_mut().begin(1);
+    // Channel 0: one pre-barrier batch, the barrier, one post-barrier batch
+    // (must be buffered until channel 1's barrier arrives). Channel 1: a
+    // pre-barrier batch, then its barrier.
+    r.engine.schedule(0, r.task, data(0, 5, 0));
+    r.engine.schedule(10 * MICROS, r.task, Msg::Barrier { epoch: 1, from_task: 0 });
+    r.engine.schedule(20 * MICROS, r.task, data(0, 7, 0));
+    r.engine.schedule(30 * MICROS, r.task, data(1, 9, 0));
+    r.engine.schedule(40 * MICROS, r.task, Msg::Barrier { epoch: 1, from_task: 1 });
+    r.engine.run_until(SECOND);
+    // The snapshot reflects exactly the pre-barrier batches (5 + 9), not
+    // the buffered post-barrier one.
+    {
+        let c = r.control.borrow();
+        assert_eq!(c.pending_epoch(), Some(1));
+        assert_eq!(c.align_spans, 1, "one task aligned once");
+        assert!(c.align_ns_max >= 30 * MICROS, "aligned across the barrier gap");
+    }
+    let snap = {
+        let mut c = r.control.borrow_mut();
+        c.complete(1);
+        c.task_snapshot(r.task).expect("task snapshotted")
+    };
+    assert_eq!(snap.ops, vec![OpState::Count { total: 14 }]);
+    // The coordinator got exactly one ack, for epoch 1.
+    let acks: Vec<u64> = r
+        .coord_seen
+        .borrow()
+        .iter()
+        .filter_map(|m| match m {
+            Msg::BarrierAck { epoch, .. } => Some(*epoch),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(acks, vec![1]);
+    // The buffered post-barrier batch was processed after the snapshot.
+    let t = r.engine.actor_as::<OperatorTask>(r.task).unwrap();
+    assert_eq!(t.batches_processed(), 3);
+    assert_eq!(t.op_as::<CountOp>(0).unwrap().total, 21);
+}
+
+#[test]
+fn stale_barriers_are_ignored() {
+    let mut r = ckpt_rig();
+    r.control.borrow_mut().begin(3);
+    // Epoch 2 is below the floor after a restore carrying epoch_floor=2.
+    r.engine.schedule(0, r.task, Msg::Restore { inc: 1, epoch_floor: 2 });
+    r.engine.schedule(10 * MICROS, r.task, Msg::Barrier { epoch: 2, from_task: 0 });
+    r.engine.schedule(20 * MICROS, r.task, Msg::Barrier { epoch: 2, from_task: 1 });
+    // Epoch 3 is live and must still align.
+    r.engine.schedule(30 * MICROS, r.task, Msg::Barrier { epoch: 3, from_task: 0 });
+    r.engine.schedule(40 * MICROS, r.task, Msg::Barrier { epoch: 3, from_task: 1 });
+    r.engine.run_until(SECOND);
+    let acks: Vec<u64> = r
+        .coord_seen
+        .borrow()
+        .iter()
+        .filter_map(|m| match m {
+            Msg::BarrierAck { epoch, .. } => Some(*epoch),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(acks, vec![3], "only the live epoch aligns");
+}
+
+#[test]
+fn fault_wipes_state_and_restore_rolls_back_to_the_snapshot() {
+    let mut r = ckpt_rig();
+    r.control.borrow_mut().begin(1);
+    // Pre-barrier work: 5 + 9 tuples land in the epoch-1 snapshot.
+    r.engine.schedule(0, r.task, data(0, 5, 0));
+    r.engine.schedule(0, r.task, data(1, 9, 0));
+    r.engine.schedule(10 * MICROS, r.task, Msg::Barrier { epoch: 1, from_task: 0 });
+    r.engine.schedule(10 * MICROS, r.task, Msg::Barrier { epoch: 1, from_task: 1 });
+    // Post-checkpoint work that the fault must lose.
+    r.engine.schedule(30 * MICROS, r.task, data(0, 100, 0));
+    r.engine.run_until(SECOND);
+    r.control.borrow_mut().complete(1);
+    {
+        let t = r.engine.actor_as::<OperatorTask>(r.task).unwrap();
+        assert_eq!(t.op_as::<CountOp>(0).unwrap().total, 114);
+    }
+    let now = r.engine.now();
+    r.engine.schedule(now, r.task, Msg::Fault { kind: crate::config::FaultKind::Worker });
+    // While dead: input is ignored entirely.
+    r.engine.schedule(now + 10 * MICROS, r.task, data(1, 50, 0));
+    r.engine.schedule(now + 20 * MICROS, r.task, Msg::Restore { inc: 1, epoch_floor: 1 });
+    // After the restore: old-incarnation batches are dropped, new ones run.
+    r.engine.schedule(now + 30 * MICROS, r.task, data(0, 40, 0)); // stale inc
+    r.engine.schedule(now + 40 * MICROS, r.task, data(1, 6, 1)); // current inc
+    r.engine.run_until(2 * SECOND);
+    let failure_reported = r
+        .coord_seen
+        .borrow()
+        .iter()
+        .any(|m| matches!(m, Msg::FailureDetected { .. }));
+    assert!(failure_reported, "the failure detector alerted the coordinator");
+    let restored_acked =
+        r.coord_seen.borrow().iter().any(|m| matches!(m, Msg::RestoreAck { .. }));
+    assert!(restored_acked);
+    let t = r.engine.actor_as::<OperatorTask>(r.task).unwrap();
+    // 14 from the snapshot + 6 post-restore; the 100 was rolled back, the
+    // 50 died with the process, the stale 40 was dropped.
+    assert_eq!(t.op_as::<CountOp>(0).unwrap().total, 20);
 }
