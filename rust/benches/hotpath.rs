@@ -1,79 +1,19 @@
 //! Hot-path micro-benchmarks: the profiling harness for the perf pass
-//! (EXPERIMENTS.md §Perf). Measures, in isolation:
+//! (EXPERIMENTS.md §Perf).
 //!
-//!   * DES engine event throughput (events/s) — the simulator's own cost;
-//!   * whole-cluster simulation speed (virtual-vs-wall ratio);
-//!   * the real compute path: native vs PJRT/XLA kernels, ns/record.
-
-mod common;
+//! The DES-side measurements (engine ping-pong, the cluster-sim target,
+//! and the full 4-source × 3-write sweep) live in
+//! `zettastream::experiments::hotpath`, shared with `zettastream bench
+//! hotpath`, and are recorded to `BENCH_hotpath.json` so the perf
+//! trajectory accumulates across runs. This binary adds the real compute
+//! path on top: native vs PJRT/XLA kernels, ns/record.
 
 use std::rc::Rc;
-use std::time::Instant;
 
-use zettastream::cluster::launch;
 use zettastream::compute::ComputeEngine;
-use zettastream::config::{parse_overrides, ExperimentConfig};
+use zettastream::experiments::hotpath;
 use zettastream::proto::Chunk;
-use zettastream::sim::{Actor, ActorId, Ctx, Engine};
 use zettastream::wikipedia::CorpusReader;
-
-struct PingPong {
-    peer: Option<ActorId>,
-    left: u64,
-}
-
-impl Actor<u32> for PingPong {
-    fn on_start(&mut self, ctx: &mut Ctx<'_, u32>) {
-        if self.peer.is_some() {
-            ctx.send_self_in(1, 0);
-        }
-    }
-    fn on_event(&mut self, _m: u32, ctx: &mut Ctx<'_, u32>) {
-        if self.left == 0 {
-            return;
-        }
-        self.left -= 1;
-        match self.peer {
-            Some(peer) => ctx.send_in(1, peer, 0),
-            None => ctx.send_self_in(1, 0),
-        }
-    }
-}
-
-fn bench_engine() {
-    const N: u64 = 2_000_000;
-    let mut engine: Engine<u32> = Engine::new(1);
-    let a = engine.add_actor(Box::new(PingPong { peer: None, left: N }));
-    let _b = engine.add_actor(Box::new(PingPong { peer: Some(a), left: N }));
-    let t0 = Instant::now();
-    engine.run_to_quiescence();
-    let dt = t0.elapsed();
-    let evps = engine.events_processed() as f64 / dt.as_secs_f64();
-    println!(
-        "engine: {} events in {:.2}s -> {:.1} M events/s ({:.0} ns/event)",
-        engine.events_processed(),
-        dt.as_secs_f64(),
-        evps / 1e6,
-        1e9 / evps
-    );
-}
-
-fn bench_cluster_speed(label: &str, overrides: &[&str]) {
-    let mut c = ExperimentConfig { duration_secs: 20, warmup_secs: 2, ..Default::default() };
-    c.apply(&parse_overrides(overrides.iter().copied()).unwrap()).unwrap();
-    let t0 = Instant::now();
-    let cluster = launch(&c, None);
-    let mut engine = cluster.engine;
-    engine.run_until(c.duration_secs * zettastream::sim::SECOND);
-    let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "cluster[{label}]: {}s virtual in {:.2}s wall ({:.1}x), {:.2} M events/s",
-        c.duration_secs,
-        wall,
-        c.duration_secs as f64 / wall,
-        engine.events_processed() as f64 / wall / 1e6,
-    );
-}
 
 fn bench_compute() {
     let mut reader = CorpusReader::new(2048, 64);
@@ -130,10 +70,7 @@ fn bench_compute() {
 }
 
 fn main() {
-    println!("== hotpath micro-benchmarks ==");
-    bench_engine();
-    bench_cluster_speed("pull-4x4", &["mode=pull", "np=4", "nc=4"]);
-    bench_cluster_speed("push-4x4", &["mode=push", "np=4", "nc=4"]);
-    bench_cluster_speed("wordcount", &["mode=push", "workload=wordcount", "recs=2048"]);
+    let quick = std::env::var_os("ZETTA_BENCH_QUICK").is_some();
+    hotpath::run_and_record(quick, std::path::Path::new("BENCH_hotpath.json"));
     bench_compute();
 }

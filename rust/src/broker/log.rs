@@ -107,25 +107,60 @@ impl PartitionLog {
         self.head.saturating_sub(offset.max(self.start))
     }
 
-    fn chunk_at(&self, offset: ChunkOffset) -> Option<&Chunk> {
-        if offset < self.start || offset >= self.head {
-            return None;
-        }
-        // Segments are contiguous; binary-search by base.
-        let idx = self
-            .segments
+    /// Index of the segment containing `offset` (one binary search; the
+    /// walk helpers then advance linearly — segments are contiguous).
+    fn segment_of(&self, offset: ChunkOffset) -> usize {
+        self.segments
             .partition_point(|seg| seg.end() <= offset)
-            .min(self.segments.len().saturating_sub(1));
-        let seg = self.segments.get(idx)?;
-        if offset < seg.base {
-            return None;
+            .min(self.segments.len().saturating_sub(1))
+    }
+
+    /// Walk consecutive resident chunks from `offset` under the byte
+    /// budget, calling `f(offset, chunk)` for each. One binary search, then
+    /// a single linear pass across segments — never a per-chunk search.
+    /// Always yields at least one chunk if any is available (the paper's
+    /// consumers always make progress). `offset` must be `>= self.start`.
+    fn walk_from(
+        &self,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        mut f: impl FnMut(ChunkOffset, &Chunk),
+    ) -> (u64, u64) {
+        debug_assert!(offset >= self.start);
+        if offset >= self.head {
+            return (0, 0);
         }
-        seg.chunks.get((offset - seg.base) as usize)
+        let mut seg_idx = self.segment_of(offset);
+        let mut at = offset;
+        let mut taken = 0u64;
+        let mut bytes = 0u64;
+        let mut budget = max_bytes;
+        while at < self.head {
+            let seg = &self.segments[seg_idx];
+            if at >= seg.end() {
+                seg_idx += 1;
+                continue;
+            }
+            let chunk = &seg.chunks[(at - seg.base) as usize];
+            let b = chunk.bytes();
+            if taken > 0 && b > budget {
+                break;
+            }
+            f(at, chunk);
+            taken += 1;
+            bytes += b;
+            budget = budget.saturating_sub(b);
+            at += 1;
+            if budget == 0 {
+                break;
+            }
+        }
+        (taken, bytes)
     }
 
     /// Read consecutive chunks from `offset`, stopping when the cumulative
     /// payload would exceed `max_bytes` (always returns at least one chunk
-    /// if any is available — the paper's consumers always make progress).
+    /// if any is available).
     ///
     /// Returns an error if `offset` was already trimmed (a slow consumer
     /// fell behind retention — surfaced, not papered over).
@@ -134,26 +169,34 @@ impl PartitionLog {
         offset: ChunkOffset,
         max_bytes: u64,
     ) -> Result<Vec<StampedChunk>, TrimmedError> {
+        let mut out = Vec::new();
+        self.read_into(offset, max_bytes, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`PartitionLog::read_from`] appending into a caller-owned vector —
+    /// the pull path's reply buffer. Two linear passes, each one segment
+    /// walk (never a per-chunk search): a clone-free peek that sizes the
+    /// reservation exactly (one `reserve` per partition read), then the
+    /// fill walk. Chunks are shared into the output (`Rc` payload bump),
+    /// the segment-resident bytes are never touched.
+    pub fn read_into(
+        &self,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        out: &mut Vec<StampedChunk>,
+    ) -> Result<u64, TrimmedError> {
         if offset < self.start {
             return Err(TrimmedError { requested: offset, start: self.start });
         }
-        let mut out = Vec::new();
-        let mut budget = max_bytes;
-        let mut at = offset;
-        while at < self.head {
-            let chunk = self.chunk_at(at).expect("offset in [start, head)");
-            let bytes = chunk.bytes();
-            if !out.is_empty() && bytes > budget {
-                break;
-            }
-            out.push(StampedChunk { partition: self.id, offset: at, chunk: chunk.clone() });
-            budget = budget.saturating_sub(bytes);
-            at += 1;
-            if budget == 0 {
-                break;
-            }
-        }
-        Ok(out)
+        let (chunks, _) = self.peek_from(offset, max_bytes);
+        out.reserve(chunks as usize);
+        let id = self.id;
+        let (taken, _) = self.walk_from(offset, max_bytes, |at, chunk| {
+            out.push(StampedChunk { partition: id, offset: at, chunk: chunk.clone() });
+        });
+        debug_assert_eq!(taken, chunks);
+        Ok(taken)
     }
 
     /// Cost-model peek: `(chunks, bytes)` a `read_from(offset, max_bytes)`
@@ -163,25 +206,7 @@ impl PartitionLog {
         if offset < self.start {
             return (0, 0);
         }
-        let mut chunks = 0u64;
-        let mut bytes = 0u64;
-        let mut budget = max_bytes;
-        let mut at = offset;
-        while at < self.head {
-            let chunk = self.chunk_at(at).expect("offset in [start, head)");
-            let b = chunk.bytes();
-            if chunks > 0 && b > budget {
-                break;
-            }
-            chunks += 1;
-            bytes += b;
-            budget = budget.saturating_sub(b);
-            at += 1;
-            if budget == 0 {
-                break;
-            }
-        }
-        (chunks, bytes)
+        self.walk_from(offset, max_bytes, |_, _| {})
     }
 
     /// Drop whole segments strictly below `watermark` (all consumers have

@@ -101,8 +101,9 @@ pub struct Broker {
     ctxs: HashMap<u64, RpcCtx>,
     fills: HashMap<u64, FillCtx>,
     next_ctx: u64,
-    /// Appends waiting for a backup ack: replicate-rpc-id -> append ctx id.
-    awaiting_backup: HashMap<RpcId, u64>,
+    /// Appends waiting for a backup ack: replicate-rpc-id -> (append ctx
+    /// id, shared object to release once durable — `Some` for held seals).
+    awaiting_backup: HashMap<RpcId, (u64, Option<ObjectId>)>,
     next_client_rpc: RpcId,
     /// Subscriptions in round-robin order for push scheduling.
     push_ring: Vec<SubId>,
@@ -239,8 +240,14 @@ impl Broker {
     /// per RPC kind keeps the frontend dispatch flat as kinds accumulate
     /// (the write path added two).
     fn on_worked(&mut self, id: u64, ctx: &mut Ctx<'_, Msg>) {
-        let rpc_ctx = self.ctxs.remove(&id).expect("ctx alive through work");
-        let kind = rpc_ctx.req.kind.clone();
+        let mut rpc_ctx = self.ctxs.remove(&id).expect("ctx alive through work");
+        // Take the kind by value — an Append's chunk vector must not be
+        // cloned per dispatch. The cheap placeholder left behind is never
+        // read again (held contexts track their object id separately).
+        let kind = std::mem::replace(
+            &mut rpc_ctx.req.kind,
+            RpcKind::Replicate { bytes: 0, chunks: 0 },
+        );
         match kind {
             RpcKind::Append { chunks } => self.finish_append(id, rpc_ctx, chunks, ctx),
             RpcKind::Pull { assignments, max_bytes } => {
@@ -379,14 +386,16 @@ impl Broker {
 
     /// The shared tail of every ingesting handler: with a backup, forward
     /// the payload as a nested Replicate RPC and hold the staged ack until
-    /// it round-trips; without one, ack immediately. Returns true when the
-    /// ack was held.
+    /// it round-trips; without one, ack immediately. `held_object` is the
+    /// shared object a held seal releases once durable. Returns true when
+    /// the ack was held.
     fn ack_after_replication(
         &mut self,
         id: u64,
         rpc_ctx: RpcCtx,
         bytes: u64,
         nchunks: u32,
+        held_object: Option<ObjectId>,
         ctx: &mut Ctx<'_, Msg>,
     ) -> bool {
         let Some((backup_actor, backup_node)) = self.params.backup else {
@@ -395,13 +404,13 @@ impl Broker {
         };
         let rid = self.next_client_rpc;
         self.next_client_rpc += 1;
-        self.awaiting_backup.insert(rid, id);
+        self.awaiting_backup.insert(rid, (id, held_object));
         self.ctxs.insert(id, rpc_ctx);
         let deliver = self.net.borrow_mut().send(ctx.now(), self.params.node, backup_node, bytes);
         ctx.send_at(
             deliver,
             backup_actor,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: rid,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -449,7 +458,7 @@ impl Broker {
                     .borrow_mut()
                     .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
                 rpc_ctx.staged = Some(RpcReply::SealAck { records, bytes });
-                if !self.ack_after_replication(id, rpc_ctx, bytes, nchunks, ctx) {
+                if !self.ack_after_replication(id, rpc_ctx, bytes, nchunks, Some(object), ctx) {
                     // No backup: the buffer is reusable right away. (With
                     // one, on_backup_ack releases it — the ack doubles as
                     // the durable-reuse signal.)
@@ -481,7 +490,7 @@ impl Broker {
                     .borrow_mut()
                     .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
                 rpc_ctx.staged = Some(RpcReply::AppendAck { records, bytes });
-                self.ack_after_replication(id, rpc_ctx, bytes, nchunks, ctx);
+                self.ack_after_replication(id, rpc_ctx, bytes, nchunks, None, ctx);
                 // New data may unblock push subscriptions.
                 self.schedule_push(ctx);
             }
@@ -503,8 +512,12 @@ impl Broker {
                 trims.push((p, log.start()));
                 continue;
             }
-            match log.read_from(off, max_bytes) {
-                Ok(mut chunks) => out.append(&mut chunks),
+            // One exactly-sized append per partition, straight into the
+            // reply vector: the log peeks (clone-free), reserves, then
+            // fills in a single linear walk, sharing the resident chunks
+            // (`Rc` payload bump, no byte work).
+            match log.read_into(off, max_bytes, &mut out) {
+                Ok(_) => {}
                 Err(e) => return RpcReply::Error { reason: e.to_string() },
             }
             // Progress watermark feeds retention trimming.
@@ -572,7 +585,7 @@ impl Broker {
         ctx.send_at(
             deliver,
             rpc_ctx.req.reply_to,
-            Msg::Reply(RpcEnvelope { id: rpc_ctx.req.id, reply }),
+            Msg::reply(RpcEnvelope { id: rpc_ctx.req.id, reply }),
         );
     }
 
@@ -581,12 +594,12 @@ impl Broker {
     /// reuse before replication would hand the producer a buffer whose
     /// data is not durable yet.
     fn on_backup_ack(&mut self, rid: RpcId, ctx: &mut Ctx<'_, Msg>) {
-        let id = self
+        let (id, held_object) = self
             .awaiting_backup
             .remove(&rid)
             .expect("replicate ack matches a held append");
         let rpc_ctx = self.ctxs.remove(&id).expect("held append ctx");
-        if let RpcKind::SealObject { id: object } = rpc_ctx.req.kind {
+        if let Some(object) = held_object {
             self.store.borrow_mut().release(object);
         }
         self.reply(rpc_ctx, ctx);
@@ -757,7 +770,7 @@ impl Broker {
 impl Actor<Msg> for Broker {
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
         match msg {
-            Msg::Rpc(req) => self.on_rpc(req, ctx),
+            Msg::Rpc(req) => self.on_rpc(*req, ctx),
             Msg::JobDone(tag) => {
                 let (id, phase) = (tag / 8, tag % 8);
                 match phase {

@@ -188,7 +188,7 @@ fn rig(params_fn: impl FnOnce(&mut BrokerParams)) -> Rig {
 }
 
 fn append_req(rig: &Rig, id: RpcId, parts: &[usize], records: u32, rec_size: u32) -> Msg {
-    Msg::Rpc(RpcRequest {
+    Msg::rpc(RpcRequest {
         id,
         reply_to: rig.probe,
         from_node: 1,
@@ -206,7 +206,7 @@ fn replies(inbox: &Inbox) -> Vec<(u64, RpcEnvelope)> {
         .borrow()
         .iter()
         .filter_map(|(t, m)| match m {
-            Msg::Reply(env) => Some((*t, env.clone())),
+            Msg::Reply(env) => Some((*t, (**env).clone())),
             _ => None,
         })
         .collect()
@@ -234,7 +234,7 @@ fn append_then_pull_round_trip() {
     r.engine.schedule(
         r.engine.now(),
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 2,
             reply_to: r.probe,
             from_node: 1,
@@ -263,7 +263,7 @@ fn pull_of_unknown_partition_errors() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 9,
             reply_to: r.probe,
             from_node: 1,
@@ -315,7 +315,7 @@ fn dispatcher_is_a_single_serial_core() {
         r.engine.schedule(
             0,
             r.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: i,
                 reply_to: r.probe,
                 from_node: 1,
@@ -384,7 +384,7 @@ fn replicated_append_waits_for_backup() {
     engine.schedule(
         0,
         primary,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1,
             reply_to: probe,
             from_node: 1,
@@ -415,7 +415,7 @@ fn push_subscription_fills_and_notifies() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1,
             reply_to: r.probe,
             from_node: 0,
@@ -458,7 +458,7 @@ fn push_respects_object_backpressure() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1,
             reply_to: r.probe,
             from_node: 0,
@@ -512,7 +512,7 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1,
             reply_to: r.probe,
             from_node: 0,
@@ -533,9 +533,10 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
         inbox
             .iter()
             .find_map(|(_, m)| match m {
-                Msg::Reply(RpcEnvelope { reply: RpcReply::SubscribeAck { sub }, .. }) => {
-                    Some(*sub)
-                }
+                Msg::Reply(env) => match &env.reply {
+                    RpcReply::SubscribeAck { sub } => Some(*sub),
+                    _ => None,
+                },
                 _ => None,
             })
             .expect("subscribed")
@@ -545,7 +546,7 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
     r.engine.schedule(
         now,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 3,
             reply_to: r.probe,
             from_node: 0,
@@ -558,9 +559,10 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
         inbox
             .iter()
             .find_map(|(_, m)| match m {
-                Msg::Reply(RpcEnvelope {
-                    reply: RpcReply::UnsubscribeAck { cursors, .. }, ..
-                }) => Some(cursors.clone()),
+                Msg::Reply(env) => match &env.reply {
+                    RpcReply::UnsubscribeAck { cursors, .. } => Some(cursors.clone()),
+                    _ => None,
+                },
                 _ => None,
             })
             .expect("unsubscribe acked")
@@ -578,7 +580,7 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
     r.engine.schedule(
         now,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 5,
             reply_to: r.probe,
             from_node: 0,
@@ -590,8 +592,9 @@ fn push_unsubscribe_returns_cursors_and_stops_fills() {
         .inbox
         .borrow()
         .iter()
-        .filter(|(_, m)| {
-            matches!(m, Msg::Reply(RpcEnvelope { reply: RpcReply::Error { .. }, .. }))
+        .filter(|(_, m)| match m {
+            Msg::Reply(env) => matches!(env.reply, RpcReply::Error { .. }),
+            _ => false,
         })
         .count();
     assert_eq!(errors, 1, "double unsubscribe is a client error");
@@ -607,7 +610,7 @@ fn push_object_batches_small_chunks() {
     r.engine.schedule(
         50 * MICROS, // subscribe after data landed
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 4,
             reply_to: r.probe,
             from_node: 0,
@@ -651,7 +654,7 @@ fn producer_bytes_metric_recorded() {
 // ---------------------------------------------------------------------------
 
 fn write_subscribe_req(r: &Rig, id: RpcId, parts: &[usize], objects: usize) -> Msg {
-    Msg::Rpc(RpcRequest {
+    Msg::rpc(RpcRequest {
         id,
         reply_to: r.probe,
         from_node: 0,
@@ -704,7 +707,7 @@ fn write_subscribe_of_unknown_partition_errors() {
 }
 
 fn seal_req(r: &Rig, id: RpcId, object: crate::proto::ObjectId) -> Msg {
-    Msg::Rpc(RpcRequest {
+    Msg::rpc(RpcRequest {
         id,
         reply_to: r.probe,
         from_node: 0,
@@ -870,7 +873,7 @@ fn replicated_seal_releases_only_after_backup_ack() {
     engine.schedule(
         0,
         primary,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1,
             reply_to: probe,
             from_node: 0,
@@ -905,7 +908,7 @@ fn replicated_seal_releases_only_after_backup_ack() {
     engine.schedule(
         20 * MICROS,
         primary,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 2,
             reply_to: probe,
             from_node: 0,
@@ -938,7 +941,7 @@ fn watermark_trim_leaves_laggards_behind() {
         r.engine.schedule(
             i * 10 * MICROS,
             r.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: i,
                 reply_to: r.probe,
                 from_node: 1,
@@ -954,7 +957,7 @@ fn watermark_trim_leaves_laggards_behind() {
         r.engine.schedule(
             (100 + i * 20) * MICROS,
             r.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: 100 + i,
                 reply_to: r.probe,
                 from_node: 1,
@@ -966,7 +969,7 @@ fn watermark_trim_leaves_laggards_behind() {
     r.engine.schedule(
         SECOND / 100,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 999,
             reply_to: r.probe,
             from_node: 1,
@@ -1003,7 +1006,7 @@ fn committed_checkpoint_floors_retention() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 1000,
             reply_to: r.probe,
             from_node: 0,
@@ -1014,7 +1017,7 @@ fn committed_checkpoint_floors_retention() {
         r.engine.schedule(
             (1 + i * 10) * MICROS,
             r.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: i,
                 reply_to: r.probe,
                 from_node: 1,
@@ -1028,7 +1031,7 @@ fn committed_checkpoint_floors_retention() {
         r.engine.schedule(
             (100 + i * 20) * MICROS,
             r.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: 100 + i,
                 reply_to: r.probe,
                 from_node: 1,
@@ -1064,7 +1067,7 @@ fn commit_for_an_unknown_partition_errors() {
     r.engine.schedule(
         0,
         r.broker,
-        Msg::Rpc(RpcRequest {
+        Msg::rpc(RpcRequest {
             id: 7,
             reply_to: r.probe,
             from_node: 0,

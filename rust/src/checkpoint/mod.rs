@@ -51,7 +51,7 @@ use std::rc::Rc;
 use crate::config::CostModel;
 use crate::net::{NodeId, SharedNetwork};
 use crate::ops::OpState;
-use crate::proto::{ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::proto::{ChunkOffset, Msg, PartitionId, RpcKind, RpcReply, RpcRequest};
 use crate::sim::{Actor, ActorId, Ctx, Time};
 
 /// A source's restart position: exclusive per-partition cursors covering
@@ -335,7 +335,7 @@ impl CheckpointCoordinator {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -446,7 +446,7 @@ impl Actor<Msg> for CheckpointCoordinator {
             Msg::BarrierAck { epoch, from } => self.on_barrier_ack(epoch, from, ctx),
             Msg::FailureDetected { .. } => self.on_failure(ctx),
             Msg::RestoreAck { from } => self.on_restore_ack(from, ctx),
-            Msg::Reply(RpcEnvelope { reply, .. }) => match reply {
+            Msg::Reply(env) => match env.reply {
                 RpcReply::CommitAck { .. } => self.stats.commits_acked += 1,
                 RpcReply::Error { reason } => {
                     panic!("checkpoint commit refused by the broker: {reason}")

@@ -94,7 +94,7 @@ impl Actor<Msg> for AckBroker {
         self.commits.borrow_mut().push((epoch, cursors));
         ctx.send(
             req.reply_to,
-            Msg::Reply(RpcEnvelope { id: req.id, reply: RpcReply::CommitAck { epoch } }),
+            Msg::reply(RpcEnvelope { id: req.id, reply: RpcReply::CommitAck { epoch } }),
         );
     }
 }

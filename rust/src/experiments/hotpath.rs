@@ -1,0 +1,289 @@
+//! The hot-path benchmark harness: how fast does the *simulator itself*
+//! run — the enabling metric for every figure sweep in this repo.
+//!
+//! Measures (wall-clock, so run on an idle machine):
+//!
+//! * raw DES engine event throughput (a two-actor ping-pong micro);
+//! * the **cluster-sim target**: virtual-vs-wall ratio and DES events/sec
+//!   of a canonical pull+sync count cluster — the number the perf
+//!   acceptance gate tracks;
+//! * the full design-space sweep: all four source modes × all three write
+//!   modes on the same workload and seed, each cell reporting events/sec,
+//!   virtual/wall speed and the run's cross-checkable totals.
+//!
+//! Results are written to `BENCH_hotpath.json` (machine-readable; CI
+//! uploads it as an artifact) so the perf trajectory has a recorded
+//! baseline: on every run, the previous file's `cluster_events_per_s` is
+//! scanned out first and reported as the baseline speedup. Totals are in
+//! the file too, so a perf regression hunt can immediately tell "slower"
+//! apart from "doing different work".
+
+use std::time::Instant;
+
+use crate::cluster::launch;
+use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
+use crate::sim::{Actor, ActorId, Ctx, Engine, SECOND};
+
+/// One (source mode × write mode) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct HotpathCell {
+    pub source: &'static str,
+    pub write: &'static str,
+    pub virtual_secs: u64,
+    pub events: u64,
+    pub wall_secs: f64,
+    pub events_per_s: f64,
+    /// Virtual seconds simulated per wall second.
+    pub virt_per_wall: f64,
+    pub records_produced: u64,
+    pub records_consumed: u64,
+    pub tuples_logged: u64,
+}
+
+/// The whole harness result.
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    /// Raw engine micro-benchmark (ping-pong), events/sec.
+    pub engine_events_per_s: f64,
+    /// The acceptance-gate number: DES events/sec of the canonical
+    /// cluster-sim target (pull source, sync writer, count workload).
+    pub cluster_events_per_s: f64,
+    /// Same target, virtual seconds per wall second.
+    pub cluster_virt_per_wall: f64,
+    /// Previous `cluster_events_per_s` scanned from the existing JSON
+    /// (the pre-run baseline), if any.
+    pub baseline_cluster_events_per_s: Option<f64>,
+    pub cells: Vec<HotpathCell>,
+}
+
+impl HotpathReport {
+    /// Speedup of the cluster-sim target vs the recorded baseline.
+    pub fn speedup_vs_baseline(&self) -> Option<f64> {
+        self.baseline_cluster_events_per_s
+            .filter(|&b| b > 0.0)
+            .map(|b| self.cluster_events_per_s / b)
+    }
+}
+
+struct PingPong {
+    peer: Option<ActorId>,
+    left: u64,
+}
+
+impl Actor<u32> for PingPong {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, u32>) {
+        if self.peer.is_some() {
+            ctx.send_self_in(1, 0);
+        }
+    }
+    fn on_event(&mut self, _m: u32, ctx: &mut Ctx<'_, u32>) {
+        if self.left == 0 {
+            return;
+        }
+        self.left -= 1;
+        match self.peer {
+            Some(peer) => ctx.send_in(1, peer, 0),
+            None => ctx.send_self_in(1, 0),
+        }
+    }
+}
+
+/// Raw engine throughput: a two-actor ping-pong, events/sec.
+pub fn bench_engine_events_per_s(events: u64) -> f64 {
+    let mut engine: Engine<u32> = Engine::new(1);
+    let a = engine.add_actor(Box::new(PingPong { peer: None, left: events }));
+    let _b = engine.add_actor(Box::new(PingPong { peer: Some(a), left: events }));
+    let t0 = Instant::now();
+    engine.run_to_quiescence();
+    engine.events_processed() as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The sweep's per-cell config: the Fig. 4-style count workload on a fixed
+/// seed — identical modelled work across every cell, so events/sec
+/// differences are simulator cost, not workload drift.
+fn cell_config(source: SourceMode, write: WriteMode, secs: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("hotpath-{}-{}", source.name(), write.name()),
+        np: 4,
+        nc: 4,
+        nmap: 8,
+        ns: 8,
+        broker_cores: 16,
+        mode: source,
+        write_mode: write,
+        workload: Workload::Count,
+        duration_secs: secs,
+        warmup_secs: 1,
+        ..Default::default()
+    }
+}
+
+fn run_cell(source: SourceMode, write: WriteMode, secs: u64) -> HotpathCell {
+    let config = cell_config(source, write, secs);
+    let mut cluster = launch(&config, None);
+    let t0 = Instant::now();
+    cluster.engine.run_until(secs * SECOND);
+    let wall = t0.elapsed().as_secs_f64();
+    let events = cluster.engine.events_processed();
+    let summary = cluster.finish();
+    HotpathCell {
+        source: source.name(),
+        write: write.name(),
+        virtual_secs: secs,
+        events,
+        wall_secs: wall,
+        events_per_s: events as f64 / wall,
+        virt_per_wall: secs as f64 / wall,
+        records_produced: summary.records_produced,
+        records_consumed: summary.records_consumed,
+        tuples_logged: summary.tuples_logged,
+    }
+}
+
+/// Run the whole harness: engine micro, cluster-sim target, 4×3 sweep.
+/// Prints the rows; returns the report (see [`write_json`]).
+pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
+    let secs = if quick { 4 } else { 12 };
+    let micro_events = if quick { 500_000 } else { 2_000_000 };
+    println!("== hotpath — simulator hot-path throughput (wall-clock)");
+    let engine_eps = bench_engine_events_per_s(micro_events);
+    println!(
+        "   engine[ping-pong]: {:.2} M events/s ({:.0} ns/event)",
+        engine_eps / 1e6,
+        1e9 / engine_eps
+    );
+    let mut cells = Vec::new();
+    let mut cluster_eps = 0.0;
+    let mut cluster_ratio = 0.0;
+    for &source in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let cell = run_cell(source, write, secs);
+            println!(
+                "   {:<8}x {:<10} {:>7.2} M events/s  {:>6.1}x virtual/wall  \
+                 events {:>10}  prod {:>9}  cons {:>9}",
+                cell.source,
+                cell.write,
+                cell.events_per_s / 1e6,
+                cell.virt_per_wall,
+                cell.events,
+                cell.records_produced,
+                cell.records_consumed,
+            );
+            // The acceptance-gate target: the paper's baseline ingestion
+            // design on the pull path.
+            if source == SourceMode::Pull && write == WriteMode::SyncRpc {
+                cluster_eps = cell.events_per_s;
+                cluster_ratio = cell.virt_per_wall;
+            }
+            cells.push(cell);
+        }
+    }
+    let report = HotpathReport {
+        engine_events_per_s: engine_eps,
+        cluster_events_per_s: cluster_eps,
+        cluster_virt_per_wall: cluster_ratio,
+        baseline_cluster_events_per_s: baseline,
+        cells,
+    };
+    match report.speedup_vs_baseline() {
+        Some(s) => println!(
+            "   cluster-sim target: {:.2} M events/s — {s:.2}x vs recorded baseline",
+            cluster_eps / 1e6
+        ),
+        None => println!(
+            "   cluster-sim target: {:.2} M events/s (no recorded baseline yet)",
+            cluster_eps / 1e6
+        ),
+    }
+    report
+}
+
+/// Scan a previous `BENCH_hotpath.json` for its `cluster_events_per_s`
+/// (tolerant string scan — the vendor set has no JSON parser; the field
+/// is written by [`write_json`] on one line).
+pub fn read_baseline(path: &std::path::Path) -> Option<f64> {
+    let body = std::fs::read_to_string(path).ok()?;
+    let key = "\"cluster_events_per_s\":";
+    let at = body.find(key)? + key.len();
+    let rest = body[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write the machine-readable trajectory file. Hand-rolled JSON — the
+/// offline vendor set has no serde; the schema is flat on purpose.
+pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"zettastream-bench-hotpath/v1\",\n");
+    s.push_str(&format!(
+        "  \"engine_events_per_s\": {},\n",
+        json_f64(report.engine_events_per_s)
+    ));
+    s.push_str(&format!(
+        "  \"cluster_events_per_s\": {},\n",
+        json_f64(report.cluster_events_per_s)
+    ));
+    s.push_str(&format!(
+        "  \"cluster_virt_per_wall\": {},\n",
+        json_f64(report.cluster_virt_per_wall)
+    ));
+    s.push_str(&format!(
+        "  \"baseline_cluster_events_per_s\": {},\n",
+        report
+            .baseline_cluster_events_per_s
+            .map(json_f64)
+            .unwrap_or_else(|| "null".to_string())
+    ));
+    s.push_str(&format!(
+        "  \"speedup_vs_baseline\": {},\n",
+        report
+            .speedup_vs_baseline()
+            .map(json_f64)
+            .unwrap_or_else(|| "null".to_string())
+    ));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"source\": \"{}\", \"write\": \"{}\", \"virtual_secs\": {}, \
+             \"events\": {}, \"wall_secs\": {}, \"events_per_s\": {}, \
+             \"virt_per_wall\": {}, \"records_produced\": {}, \
+             \"records_consumed\": {}, \"tuples_logged\": {}}}{}\n",
+            c.source,
+            c.write,
+            c.virtual_secs,
+            c.events,
+            json_f64(c.wall_secs),
+            json_f64(c.events_per_s),
+            json_f64(c.virt_per_wall),
+            c.records_produced,
+            c.records_consumed,
+            c.tuples_logged,
+            if i + 1 == report.cells.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+/// The CLI/bench entry point: read the old baseline, run, rewrite the
+/// file, print where it went.
+pub fn run_and_record(quick: bool, path: &std::path::Path) -> HotpathReport {
+    let baseline = read_baseline(path);
+    let report = run_hotpath(quick, baseline);
+    match write_json(path, &report) {
+        Ok(()) => println!("   wrote {}", path.display()),
+        Err(e) => eprintln!("   could not write {}: {e}", path.display()),
+    }
+    report
+}

@@ -57,6 +57,40 @@
 //! (exactly-once). [`experiments`] regenerates every figure of the paper's
 //! evaluation plus the pull/push/hybrid, write-path and
 //! checkpoint/recovery ablations.
+//!
+//! ## Data-plane memory discipline
+//!
+//! The paper's thesis is that streaming gets faster when storage and
+//! processing "handle streaming data through pointers to shared objects"
+//! instead of copying bytes per RPC — so the in-memory data path holds
+//! itself to an explicit sharing discipline (enforced by the zero-copy
+//! regression tests in `tests/zero_copy_parity.rs`):
+//!
+//! * **Payload bytes are materialised exactly once**, by the producer's
+//!   generator ([`proto::Chunk::real`], the only birthplace — it counts
+//!   materialisations). Every later hand-off shares the `Rc`d buffer:
+//!   broker log append moves the chunk in, pull replies and push-object
+//!   fills share segment-resident chunks out ([`broker::PartitionLog`]
+//!   serves reads by linear segment walk into an exactly-pre-sized reply,
+//!   never a per-chunk search), the plasma store seals pointers, and
+//!   sources hand the same chunk into the pipeline.
+//! * **A batch hop moves a pointer, not a `Vec`.** [`proto::Batch`]
+//!   carries its chunks as a [`proto::ChunkList`]: the dominant one-chunk
+//!   batch is stored inline (no allocation at all), multi-chunk batches
+//!   share an `Rc<[Chunk]>`, so the chained-operator passthrough clone is
+//!   a refcount bump.
+//! * **`Msg` stays ≤ 64 bytes** (compile-time assert in [`proto`]): every
+//!   event the DES engine queues and sifts is one `Msg` by value, so the
+//!   fat RPC envelopes are boxed ([`proto::Msg::rpc`]/[`proto::Msg::reply`]
+//!   — paid once per RPC, saved `O(log n)` times per heap sift) while the
+//!   hot dataflow variants stay inline within one cache line. The engine
+//!   itself serves same-timestamp events (credits, notifications) from an
+//!   O(1) FIFO now-queue in front of the heap, and operator tasks reuse
+//!   pooled output buffers/scratch ([`ops::OpOutput`]) so the steady-state
+//!   hot path allocates nothing per batch. `zettastream bench hotpath`
+//!   measures all of this (events/sec, virtual-vs-wall) across every
+//!   source × write mode and records the trajectory in
+//!   `BENCH_hotpath.json`.
 
 pub mod config;
 pub mod sim;

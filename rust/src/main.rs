@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
-//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|ablations|all> [--quick] [key=value ...]
+//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|hotpath|ablations|all> [--quick] [key=value ...]
 //! zettastream list                      the benchmark catalog (Table II)
 //! zettastream calibrate                 measure the real data plane, print
 //!                                       suggested cost-model overrides
@@ -123,6 +123,21 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let which = args.first().map(|s| s.as_str()).unwrap_or("all");
     let quick = args.iter().any(|a| a == "--quick");
+    if which == "hotpath" {
+        // Simulator hot-path throughput: 4 source × 3 write sweep, the
+        // cluster-sim acceptance target, and the recorded perf trajectory.
+        // The sweep config is fixed on purpose (identical modelled work in
+        // every cell, comparable across runs) — refuse overrides instead
+        // of silently dropping them.
+        if let Some(extra) = args.iter().skip(1).find(|a| *a != "--quick") {
+            return Err(format!(
+                "bench hotpath runs a fixed sweep config and takes no overrides (got `{extra}`)"
+            ));
+        }
+        let path = std::path::Path::new("BENCH_hotpath.json");
+        experiments::hotpath::run_and_record(quick, path);
+        return Ok(());
+    }
     let duration: u64 = if quick { 8 } else { 30 };
     let chunks: &[usize] = if quick { &[4, 32, 128] } else { &experiments::CHUNK_SIZES_KIB };
     let specs = match which {
@@ -155,7 +170,7 @@ fn cmd_list() -> Result<(), String> {
     println!("{}", experiments::table2());
     println!(
         "bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 hybrid writepath checkpoint \
-         ablations all"
+         hotpath ablations all"
     );
     Ok(())
 }

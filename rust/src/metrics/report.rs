@@ -15,20 +15,57 @@ pub struct SeriesStat {
 
 impl SeriesStat {
     pub fn from_series(series: &[u64]) -> Self {
+        Self::from_series_with(series, &mut Vec::new())
+    }
+
+    /// [`SeriesStat::from_series`] with a caller-owned scratch buffer.
+    ///
+    /// This runs per gauge at every report, so it selects the three ranks
+    /// with `select_nth_unstable` (expected O(n) each) on a reused scratch
+    /// copy instead of `to_vec()` + full sort per call. Selections run in
+    /// ascending rank order on narrowing subslices: after selecting rank
+    /// `r`, everything at `r..` is ≥ the pivot, so the next (higher) rank
+    /// is found inside `scratch[r..]` — each pass touches less data.
+    pub fn from_series_with(series: &[u64], scratch: &mut Vec<u64>) -> Self {
         if series.is_empty() {
             return SeriesStat { p50: 0.0, p10: 0.0, p90: 0.0, mean: 0.0, seconds: 0 };
         }
-        let mut sorted: Vec<u64> = series.to_vec();
-        sorted.sort_unstable();
-        let mean = sorted.iter().sum::<u64>() as f64 / sorted.len() as f64;
+        let mean = series.iter().sum::<u64>() as f64 / series.len() as f64;
+        scratch.clear();
+        scratch.extend_from_slice(series);
+        let mut ranks = [
+            (nearest_rank(series.len(), 10.0), 0u64),
+            (nearest_rank(series.len(), 50.0), 0u64),
+            (nearest_rank(series.len(), 90.0), 0u64),
+        ];
+        let mut base = 0usize; // scratch[..base] already below previous rank
+        let mut prev_rank = 0usize;
+        let mut prev_value = 0u64;
+        for (rank, value) in ranks.iter_mut() {
+            if base > 0 && *rank == prev_rank {
+                *value = prev_value; // same nearest rank: same element
+                continue;
+            }
+            let (_, &mut v, _) = scratch[base..].select_nth_unstable(*rank - base);
+            *value = v;
+            base = *rank;
+            prev_rank = *rank;
+            prev_value = v;
+        }
         SeriesStat {
-            p50: percentile(&sorted, 50.0),
-            p10: percentile(&sorted, 10.0),
-            p90: percentile(&sorted, 90.0),
+            p10: ranks[0].1 as f64,
+            p50: ranks[1].1 as f64,
+            p90: ranks[2].1 as f64,
             mean,
             seconds: series.len(),
         }
     }
+}
+
+/// Nearest rank of `pct` in a series of `len` (len > 0).
+fn nearest_rank(len: usize, pct: f64) -> usize {
+    let rank = ((pct / 100.0) * (len as f64 - 1.0)).round() as usize;
+    rank.min(len - 1)
 }
 
 /// Nearest-rank percentile of an ascending-sorted series.
@@ -36,8 +73,7 @@ pub fn percentile(sorted: &[u64], pct: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let rank = ((pct / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-    sorted[rank.min(sorted.len() - 1)] as f64
+    sorted[nearest_rank(sorted.len(), pct)] as f64
 }
 
 /// Everything one experiment run reports — one row of a figure's series.
@@ -61,8 +97,13 @@ pub struct ExperimentReport {
 impl ExperimentReport {
     /// Build from the hub over `[warmup, horizon)` seconds.
     pub fn from_hub(name: &str, hub: &MetricsHub, warmup_s: u64, horizon_s: u64) -> Self {
+        // One scratch buffer serves all six series selections.
+        let scratch = std::cell::RefCell::new(Vec::new());
         let stat = |class: Class| {
-            SeriesStat::from_series(&hub.per_second_totals(class, warmup_s, horizon_s))
+            SeriesStat::from_series_with(
+                &hub.per_second_totals(class, warmup_s, horizon_s),
+                &mut scratch.borrow_mut(),
+            )
         };
         ExperimentReport {
             name: name.to_string(),

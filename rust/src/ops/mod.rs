@@ -24,10 +24,16 @@ use anyhow::Result;
 
 use crate::compute::SharedCompute;
 use crate::config::CostModel;
-use crate::proto::Batch;
+use crate::proto::{Batch, ChunkList};
 use crate::sim::Time;
 
 /// What an operator produced from one batch.
+///
+/// Tasks keep ONE pooled `OpOutput` and hand it to every `apply`/`on_tick`
+/// (see `OperatorTask`): operators therefore **accumulate** into it
+/// (`tuples_logged +=`, `emits.push`) and never assume a fresh buffer —
+/// that is what lets the hot path run allocation-free once the emit
+/// vector has grown to its working size.
 #[derive(Debug, Default)]
 pub struct OpOutput {
     /// Batches routed downstream: `(destination task index, batch)`.
@@ -128,7 +134,7 @@ impl Operator for CountOp {
 
     fn apply(&mut self, batch: Batch, _from: usize, out: &mut OpOutput) -> Result<()> {
         self.total += batch.tuples;
-        out.tuples_logged = batch.tuples;
+        out.tuples_logged += batch.tuples;
         Ok(())
     }
 
@@ -181,7 +187,7 @@ impl Operator for FilterOp {
             }
         }
         self.total += batch.tuples;
-        out.tuples_logged = batch.tuples;
+        out.tuples_logged += batch.tuples;
         Ok(())
     }
 
@@ -209,12 +215,15 @@ pub struct TokenizerOp {
     /// Sim-plane tokens-per-record estimate (real plane counts exactly).
     pub tokens_per_record: u64,
     pub tokens_emitted: u64,
+    /// Pooled histogram accumulator (real plane): zeroed and refilled per
+    /// batch instead of reallocated. Scratch only — never checkpointed.
+    acc: Vec<i32>,
 }
 
 impl TokenizerOp {
     pub fn new(targets: Vec<usize>, compute: Option<SharedCompute>, tokens_per_record: u64) -> Self {
         assert!(!targets.is_empty());
-        Self { targets, compute, tokens_per_record, tokens_emitted: 0 }
+        Self { targets, compute, tokens_per_record, tokens_emitted: 0, acc: Vec::new() }
     }
 }
 
@@ -236,35 +245,35 @@ impl Operator for TokenizerOp {
     fn apply(&mut self, batch: Batch, from: usize, out: &mut OpOutput) -> Result<()> {
         let n = self.targets.len();
         if let Some(compute) = &self.compute {
-            // Real plane: kernel histogram, split by bucket range.
-            let mut acc: Option<Vec<i32>> = None;
+            // Real plane: kernel histogram accumulated into the pooled
+            // scratch (zeroed in place, grown once), split by bucket range.
+            self.acc.iter_mut().for_each(|v| *v = 0);
             for chunk in &batch.chunks {
                 let (hist, _) = compute.wordcount(chunk)?;
-                match &mut acc {
-                    None => acc = Some(hist),
-                    Some(a) => {
-                        for (x, y) in a.iter_mut().zip(hist.iter()) {
-                            *x += y;
-                        }
-                    }
+                if self.acc.len() < hist.len() {
+                    self.acc.resize(hist.len(), 0);
+                }
+                for (x, y) in self.acc.iter_mut().zip(hist.iter()) {
+                    *x += y;
                 }
             }
-            let hist = acc.unwrap_or_default();
-            let b = hist.len();
+            let b = self.acc.len();
             for (i, &target) in self.targets.iter().enumerate() {
-                let range = &hist[i * b / n..(i + 1) * b / n];
+                let range = &self.acc[i * b / n..(i + 1) * b / n];
                 let tuples: u64 = range.iter().map(|&v| v as u64).sum();
                 if tuples == 0 {
                     continue;
                 }
                 self.tokens_emitted += tuples;
+                // The per-target range is handed off by value: downstream
+                // keyed state owns it (an Rc the receivers share) — this
+                // is data transfer, not a hop copy.
                 out.emits.push((
                     target,
                     Batch {
                         from_task: from,
                         tuples,
-                        bytes: tuples * 8,
-                        chunks: Vec::new(),
+                        chunks: ChunkList::Empty,
                         hist: Some(std::rc::Rc::new(range.to_vec())),
                         inc: 0,
                     },
@@ -285,8 +294,7 @@ impl Operator for TokenizerOp {
                     Batch {
                         from_task: from,
                         tuples,
-                        bytes: tuples * 8,
-                        chunks: Vec::new(),
+                        chunks: ChunkList::Empty,
                         hist: None,
                         inc: 0,
                     },
@@ -357,7 +365,7 @@ impl Operator for KeyedSumOp {
             self.merge(hist);
         }
         self.total_tuples += batch.tuples;
-        out.tuples_logged = batch.tuples;
+        out.tuples_logged += batch.tuples;
         Ok(())
     }
 
@@ -384,6 +392,11 @@ pub struct WindowedSumOp {
     /// Ring of completed slides (newest last).
     slides: VecDeque<Vec<i32>>,
     current: Vec<i32>,
+    /// The slide vector recycled out of the ring: a slide expires every
+    /// tick and a fresh `current` is needed every tick, so one spare keeps
+    /// the ring allocation-free at steady state. Scratch — never
+    /// checkpointed.
+    spare: Vec<i32>,
     current_tuples: u64,
     pub total_tuples: u64,
     pub windows_fired: u64,
@@ -399,6 +412,7 @@ impl WindowedSumOp {
             compute,
             slides: VecDeque::new(),
             current: Vec::new(),
+            spare: Vec::new(),
             current_tuples: 0,
             total_tuples: 0,
             windows_fired: 0,
@@ -431,17 +445,21 @@ impl Operator for WindowedSumOp {
         }
         self.current_tuples += batch.tuples;
         self.total_tuples += batch.tuples;
-        out.tuples_logged = batch.tuples;
+        out.tuples_logged += batch.tuples;
         Ok(())
     }
 
     fn on_tick(&mut self, _out: &mut OpOutput) -> Result<()> {
-        // Close the current slide.
-        let slide = std::mem::take(&mut self.current);
+        // Close the current slide; the replacement reuses the capacity of
+        // the slide that expired last tick (`spare`).
+        let next = std::mem::take(&mut self.spare);
+        let slide = std::mem::replace(&mut self.current, next);
         self.slides.push_back(slide);
         self.current_tuples = 0;
         while self.slides.len() > self.window_slides {
-            self.slides.pop_front();
+            let mut expired = self.slides.pop_front().expect("len checked");
+            expired.clear();
+            self.spare = expired;
         }
         if self.slides.len() == self.window_slides {
             // Fire: aggregate the window through the window_sum artifact

@@ -6,7 +6,7 @@ use crate::proto::{Batch, Chunk};
 use std::rc::Rc;
 
 fn batch(tuples: u64) -> Batch {
-    Batch { from_task: 0, tuples, bytes: tuples * 100, chunks: Vec::new(), hist: None, inc: 0 }
+    Batch { from_task: 0, tuples, chunks: ChunkList::Empty, hist: None, inc: 0 }
 }
 
 fn cm() -> CostModel {
@@ -18,9 +18,11 @@ fn count_logs_and_accumulates() {
     let mut op = CountOp::default();
     let mut out = OpOutput::default();
     op.apply(batch(100), 0, &mut out).unwrap();
+    assert_eq!(out.tuples_logged, 100);
     op.apply(batch(50), 0, &mut out).unwrap();
     assert_eq!(op.total, 150);
-    assert_eq!(out.tuples_logged, 50, "per-apply logging");
+    // Operators accumulate into the task's pooled buffer (see OpOutput).
+    assert_eq!(out.tuples_logged, 150, "pooled buffers accumulate");
     assert!(out.emits.is_empty(), "RTLogger is terminal");
 }
 
@@ -43,7 +45,7 @@ fn filter_real_plane_counts_matches() {
     let mut data = vec![b'x'; 300];
     data[110..116].copy_from_slice(b"needle");
     let mut b = batch(3);
-    b.chunks = vec![Chunk::real(3, 100, Rc::new(data))];
+    b.chunks = ChunkList::One(Chunk::real(3, 100, Rc::new(data)));
     let mut out = OpOutput::default();
     f.apply(b, 0, &mut out).unwrap();
     assert_eq!(f.matches, 1);
@@ -73,7 +75,7 @@ fn tokenizer_real_plane_routes_by_bucket_range() {
     let mut data = vec![0u8; 64];
     data[..text.len()].copy_from_slice(text);
     let mut b = batch(1);
-    b.chunks = vec![Chunk::real(1, 64, Rc::new(data))];
+    b.chunks = ChunkList::One(Chunk::real(1, 64, Rc::new(data)));
     let mut out = OpOutput::default();
     t.apply(b, 0, &mut out).unwrap();
     let total: u64 = out.emits.iter().map(|(_, b)| b.tuples).sum();

@@ -186,7 +186,7 @@ impl PipelinedWriter {
         ctx.send_at(
             deliver,
             self.params.base.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.base.node,
@@ -268,7 +268,7 @@ impl Actor<Msg> for PipelinedWriter {
                 self.generating = false;
                 self.try_dispatch(ctx);
             }
-            Msg::Reply(env) => self.on_ack(env, ctx),
+            Msg::Reply(env) => self.on_ack(*env, ctx),
             Msg::Timer(rpc) => self.transmit(rpc, ctx),
             other => {
                 panic!("pipelined writer {}: unexpected {other:?}", self.params.base.entity)

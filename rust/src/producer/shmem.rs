@@ -123,7 +123,7 @@ impl SharedMemWriter {
         ctx.send_at(
             deliver,
             self.params.base.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.base.node,
@@ -198,7 +198,7 @@ impl SharedMemWriter {
         ctx.send_at(
             deliver,
             self.params.base.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.base.node,
@@ -281,7 +281,7 @@ impl Actor<Msg> for SharedMemWriter {
                 self.generating = false;
                 self.try_seal(true, ctx);
             }
-            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::Reply(env) => self.on_reply(*env, ctx),
             Msg::Timer(rpc) => self.notify_seal(rpc, ctx),
             other => {
                 panic!("sharedmem writer {}: unexpected {other:?}", self.params.base.entity)

@@ -97,7 +97,7 @@ impl Producer {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: inflight.rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -159,7 +159,7 @@ impl Actor<Msg> for Producer {
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
         match msg {
             Msg::GenDone(_) => self.send_append(ctx),
-            Msg::Reply(env) => self.on_ack(env, ctx),
+            Msg::Reply(env) => self.on_ack(*env, ctx),
             Msg::Timer(rpc) => {
                 debug_assert_eq!(self.inflight.as_ref().map(|i| i.rpc), Some(rpc));
                 self.transmit(ctx);

@@ -4,7 +4,32 @@
 //! generic, but the cluster instantiates `Engine<Msg>`. The data unit is the
 //! [`Chunk`]: the record-framed byte block a producer seals and appends, a
 //! pull RPC returns, and the push thread copies into a shared object.
+//!
+//! ## Memory discipline
+//!
+//! `Msg` is the hottest type in the simulator: every event the engine
+//! queues, sifts through the heap and delivers is one `Msg` by value. Two
+//! rules keep it within a single cache line (≤ 64 bytes, statically
+//! asserted below):
+//!
+//! * the fat RPC envelopes ([`RpcRequest`], [`RpcEnvelope`]) are **boxed**
+//!   — an RPC happens once per request, a heap sift happens `O(log n)`
+//!   times per event, so the indirection is paid exactly where it is
+//!   cheapest. Build them with [`Msg::rpc`] / [`Msg::reply`];
+//! * the dataflow [`Batch`] is **inline** (no per-hop box) but carries its
+//!   chunks as a [`ChunkList`]: the common one-chunk batch stores the
+//!   chunk in place, multi-chunk batches share an `Rc<[Chunk]>` — cloning
+//!   a batch at a chained-operator hop bumps a refcount instead of
+//!   cloning a `Vec`.
+//!
+//! Payload bytes themselves are always behind `Rc` ([`Payload::Real`]) and
+//! are *materialised* exactly once, by the producer's generator; every
+//! later hand-off (broker log append, segment-resident pull replies,
+//! plasma object fills, batch hops) shares the pointer. A debug-side
+//! counter ([`real_payload_allocs`]) counts materialisations so tests can
+//! assert the zero-copy invariant end to end.
 
+use std::cell::Cell;
 use std::rc::Rc;
 
 use crate::config::FaultKind;
@@ -38,6 +63,20 @@ pub struct ObjectId {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SubId(pub usize);
 
+thread_local! {
+    /// Count of real payload buffers materialised on this thread (every
+    /// [`Chunk::real`] call). The zero-copy regression tests compare this
+    /// against the number of chunks producers generated: consume paths and
+    /// operator hops must never add to it.
+    static REAL_PAYLOAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Real payload buffers materialised on this thread so far (see
+/// [`Chunk::real`]). Monotone; tests snapshot it before/after a run.
+pub fn real_payload_allocs() -> u64 {
+    REAL_PAYLOAD_ALLOCS.with(|c| c.get())
+}
+
 /// Chunk payload: real bytes or byte/record accounting (DESIGN.md §2.5).
 #[derive(Debug, Clone)]
 pub enum Payload {
@@ -52,6 +91,15 @@ pub enum Payload {
 impl Payload {
     pub fn is_real(&self) -> bool {
         matches!(self, Payload::Real(_))
+    }
+
+    /// The shared buffer, when real — for pointer-identity assertions
+    /// (`Rc::ptr_eq`) in the zero-copy tests.
+    pub fn buffer(&self) -> Option<&Rc<Vec<u8>>> {
+        match self {
+            Payload::Real(data) => Some(data),
+            Payload::Sim => None,
+        }
     }
 }
 
@@ -78,8 +126,13 @@ impl Chunk {
     }
 
     /// Real chunk; `data.len()` must equal `records * record_size`.
+    ///
+    /// This is the **only** place real payloads are born — every consumer
+    /// of a real chunk shares the `Rc`d buffer. The materialisation
+    /// counter ([`real_payload_allocs`]) backs the zero-copy tests.
     pub fn real(records: u32, record_size: u32, data: Rc<Vec<u8>>) -> Self {
         debug_assert_eq!(data.len() as u64, records as u64 * record_size as u64);
+        REAL_PAYLOAD_ALLOCS.with(|c| c.set(c.get() + 1));
         Chunk { records, record_size, payload: Payload::Real(data) }
     }
 }
@@ -187,7 +240,8 @@ pub enum RpcReply {
     Error { reason: String },
 }
 
-/// Full request envelope delivered to a broker dispatcher.
+/// Full request envelope delivered to a broker dispatcher. Boxed inside
+/// [`Msg::Rpc`] — build with [`Msg::rpc`].
 #[derive(Debug, Clone)]
 pub struct RpcRequest {
     pub id: RpcId,
@@ -198,7 +252,8 @@ pub struct RpcRequest {
     pub kind: RpcKind,
 }
 
-/// Full reply envelope.
+/// Full reply envelope. Boxed inside [`Msg::Reply`] — build with
+/// [`Msg::reply`].
 #[derive(Debug, Clone)]
 pub struct RpcEnvelope {
     pub id: RpcId,
@@ -209,18 +264,91 @@ pub struct RpcEnvelope {
 // Dataflow between worker tasks
 // ---------------------------------------------------------------------------
 
+/// The chunks a [`Batch`] carries. Batches between operator tasks are the
+/// hottest hand-off in the system; this list keeps that hand-off pointer-
+/// sized:
+///
+/// * [`ChunkList::Empty`] — accounting-only batches (keyed exchanges,
+///   sim-plane tokenizer output);
+/// * [`ChunkList::One`] — the dominant case: one source chunk per batch,
+///   stored inline (no heap allocation at all);
+/// * [`ChunkList::Shared`] — multi-chunk batches share one `Rc<[Chunk]>`,
+///   so cloning the batch is a refcount bump, never a `Vec` clone.
+#[derive(Debug, Clone, Default)]
+pub enum ChunkList {
+    #[default]
+    Empty,
+    One(Chunk),
+    Shared(Rc<[Chunk]>),
+}
+
+impl ChunkList {
+    /// View as a slice (zero-cost for all three representations).
+    pub fn as_slice(&self) -> &[Chunk] {
+        match self {
+            ChunkList::Empty => &[],
+            ChunkList::One(chunk) => std::slice::from_ref(chunk),
+            ChunkList::Shared(chunks) => chunks,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, ChunkList::Empty)
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Chunk> {
+        self.as_slice().iter()
+    }
+}
+
+impl std::ops::Deref for ChunkList {
+    type Target = [Chunk];
+
+    fn deref(&self) -> &[Chunk] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a ChunkList {
+    type Item = &'a Chunk;
+    type IntoIter = std::slice::Iter<'a, Chunk>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl From<Vec<Chunk>> for ChunkList {
+    /// One chunk stays inline; several share an `Rc<[Chunk]>`.
+    fn from(mut chunks: Vec<Chunk>) -> Self {
+        match chunks.len() {
+            0 => ChunkList::Empty,
+            1 => ChunkList::One(chunks.pop().expect("len checked")),
+            _ => ChunkList::Shared(chunks.into()),
+        }
+    }
+}
+
 /// A batch of tuples flowing between operator tasks (one source chunk or
 /// one shared object's worth, or a keyed sub-batch after an exchange).
+///
+/// Kept at 56 bytes so [`Msg::Data`] fits the 64-byte `Msg` budget: the
+/// chunks ride in a [`ChunkList`] (inline or shared, never a per-hop
+/// `Vec`), and there is deliberately no redundant byte count — batch
+/// payload bytes are derivable from the chunks ([`Batch::chunk_bytes`])
+/// and nothing on the hot path needs them.
 #[derive(Debug, Clone)]
 pub struct Batch {
     /// Upstream task index (for credit return).
     pub from_task: usize,
     /// Tuple count in the batch.
     pub tuples: u64,
-    /// Payload bytes represented (accounting).
-    pub bytes: u64,
     /// Real chunks, when the data plane is real.
-    pub chunks: Vec<Chunk>,
+    pub chunks: ChunkList,
     /// Keyed-histogram carry (real word-count path): bucket -> count.
     pub hist: Option<Rc<Vec<i32>>>,
     /// Sender's recovery incarnation. Stamped at send time (operators build
@@ -230,17 +358,29 @@ pub struct Batch {
     pub inc: u64,
 }
 
+impl Batch {
+    /// Payload bytes represented by the carried chunks (accounting only —
+    /// not stored, the hot path never reads it).
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunks.iter().map(Chunk::bytes).sum()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The engine message
 // ---------------------------------------------------------------------------
 
 /// Every event in the simulated cluster.
+///
+/// Size-critical: see the module docs. The RPC envelopes are boxed, the
+/// dataflow batch is inline; the compile-time assert below is the
+/// regression tripwire for both.
 #[derive(Debug, Clone)]
 pub enum Msg {
-    /// An RPC request arriving at a broker dispatcher.
-    Rpc(RpcRequest),
-    /// An RPC reply arriving back at the client.
-    Reply(RpcEnvelope),
+    /// An RPC request arriving at a broker dispatcher (see [`Msg::rpc`]).
+    Rpc(Box<RpcRequest>),
+    /// An RPC reply arriving back at the client (see [`Msg::reply`]).
+    Reply(Box<RpcEnvelope>),
     /// Core-pool job completion inside an actor (tag = owner-defined).
     JobDone(u64),
     /// Generic timer with owner-defined tag.
@@ -282,4 +422,93 @@ pub enum Msg {
     Restore { inc: u64, epoch_floor: u64 },
     /// Recovery: participant `from` finished restoring and resumed.
     RestoreAck { from: ActorId },
+}
+
+impl Msg {
+    /// Wrap a request for the engine queue (boxes it — see the module
+    /// docs on why the envelope is indirect).
+    pub fn rpc(req: RpcRequest) -> Msg {
+        Msg::Rpc(Box::new(req))
+    }
+
+    /// Wrap a reply for the engine queue.
+    pub fn reply(env: RpcEnvelope) -> Msg {
+        Msg::Reply(Box::new(env))
+    }
+}
+
+/// The compile-time regression assert: every event the engine moves is at
+/// most one cache line. Growing `Msg` (usually by growing [`Batch`]) slows
+/// every heap sift and every dispatch — shrink the new field or box it.
+const _: () = assert!(
+    std::mem::size_of::<Msg>() <= 64,
+    "Msg must stay within one cache line (64 bytes)"
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The named runtime twin of the compile-time assert (CI calls it out
+    /// explicitly so a budget regression reads as a test failure, not a
+    /// build error buried in a log).
+    #[test]
+    fn msg_size_fits_one_cache_line() {
+        assert!(
+            std::mem::size_of::<Msg>() <= 64,
+            "Msg is {} bytes — box the growth or shrink Batch",
+            std::mem::size_of::<Msg>()
+        );
+        // The dataflow batch is the inline variant that dominates the
+        // budget; RPC envelopes are boxed to a pointer.
+        let batch = std::mem::size_of::<Batch>();
+        assert!(batch <= 56, "Batch grew: {batch} bytes");
+        assert_eq!(std::mem::size_of::<Box<RpcRequest>>(), std::mem::size_of::<usize>());
+    }
+
+    #[test]
+    fn chunklist_representations() {
+        let empty: ChunkList = Vec::new().into();
+        assert!(empty.is_empty());
+        assert_eq!(empty.len(), 0);
+
+        let one: ChunkList = vec![Chunk::sim(3, 10)].into();
+        assert!(matches!(&one, ChunkList::One(_)), "single chunk stays inline");
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].records, 3);
+
+        let many: ChunkList = vec![Chunk::sim(1, 10), Chunk::sim(2, 10)].into();
+        assert!(matches!(&many, ChunkList::Shared(_)), "several chunks share a slice");
+        let records: u32 = many.iter().map(|c| c.records).sum();
+        assert_eq!(records, 3);
+        // Cloning the shared form bumps a refcount, not the chunks.
+        let ChunkList::Shared(rc) = &many else { unreachable!() };
+        assert_eq!(Rc::strong_count(rc), 1);
+        let clone = many.clone();
+        let ChunkList::Shared(rc2) = &clone else { unreachable!() };
+        assert!(Rc::ptr_eq(rc, rc2));
+    }
+
+    #[test]
+    fn real_payload_materialisations_are_counted() {
+        let before = real_payload_allocs();
+        let chunk = Chunk::real(2, 4, Rc::new(vec![0u8; 8]));
+        assert_eq!(real_payload_allocs(), before + 1);
+        // Sharing (what every hand-off does) does not count.
+        let _share = chunk.clone();
+        let _sim = Chunk::sim(10, 10);
+        assert_eq!(real_payload_allocs(), before + 1);
+    }
+
+    #[test]
+    fn batch_chunk_bytes_derives_from_the_chunks() {
+        let b = Batch {
+            from_task: 0,
+            tuples: 3,
+            chunks: vec![Chunk::sim(1, 100), Chunk::sim(2, 100)].into(),
+            hist: None,
+            inc: 0,
+        };
+        assert_eq!(b.chunk_bytes(), 300);
+    }
 }

@@ -1,7 +1,28 @@
 //! Event queue, actor registry and the run loop.
+//!
+//! ## Hot-path layout
+//!
+//! The queue is two-level (perf pass, EXPERIMENTS.md §Perf):
+//!
+//! * a FIFO **now-queue** for events scheduled at the *current* timestamp
+//!   — credit returns, store notifications and every other `send`-with-
+//!   zero-delay, which dominate a busy cluster. They enqueue and dequeue
+//!   in O(1) and never touch the heap;
+//! * the binary **heap** for everything in the future.
+//!
+//! The total delivery order is identical to a single heap ordered by
+//! `(time, seq)`: now-queue entries carry their timestamp and globally
+//! monotone sequence numbers, the clock never goes backwards, so the
+//! now-queue is always FIFO-sorted by `(time, seq)` and a two-way front
+//! comparison picks the global minimum. Determinism is bit-for-bit
+//! unchanged (see `sim/tests.rs` and the property tests).
+//!
+//! The per-event emit buffer is owned by the engine and reused across
+//! every dispatch and `run_until` call — a handler's sends go through a
+//! pre-grown `Vec` that is drained, never dropped.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::{Rng, Time};
 
@@ -98,7 +119,8 @@ impl<'a, M> Ctx<'a, M> {
     }
 
     /// Deliver `msg` to `target` "now" (ordered after already-queued events
-    /// at this timestamp).
+    /// at this timestamp). These are the events the engine's now-queue
+    /// serves without touching the heap.
     pub fn send(&mut self, target: ActorId, msg: M) {
         self.send_in(0, target, msg);
     }
@@ -124,8 +146,14 @@ impl<'a, M> Ctx<'a, M> {
 pub struct Engine<M> {
     clock: Time,
     seq: u64,
+    /// Future events, ordered by `(time, seq)`.
     queue: BinaryHeap<Reverse<Scheduled<M>>>,
+    /// Events at the current timestamp: FIFO == `(time, seq)` order
+    /// because seq is globally monotone and the clock never rewinds.
+    now_queue: VecDeque<Scheduled<M>>,
     actors: Vec<Box<dyn Actor<M>>>,
+    /// The handlers' emit buffer, reused across every dispatch.
+    emit_buf: Vec<(Time, ActorId, M)>,
     events_processed: u64,
     started: bool,
     rng: Rng,
@@ -137,7 +165,9 @@ impl<M> Engine<M> {
             clock: 0,
             seq: 0,
             queue: BinaryHeap::new(),
+            now_queue: VecDeque::new(),
             actors: Vec::new(),
+            emit_buf: Vec::new(),
             events_processed: 0,
             started: false,
             rng: Rng::new(seed),
@@ -165,28 +195,62 @@ impl<M> Engine<M> {
         self.events_processed
     }
 
-    /// Schedule an external (bootstrap) message.
-    pub fn schedule(&mut self, at: Time, target: ActorId, msg: M) {
-        assert!(target.0 < self.actors.len(), "unknown {target}");
+    /// Route one event into the right queue: current-timestamp events take
+    /// the O(1) FIFO fast path, future events the heap.
+    fn push_event(&mut self, time: Time, target: ActorId, msg: M) {
+        assert!(
+            target.0 < self.actors.len(),
+            "send to unregistered {target} at t={time}"
+        );
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Reverse(Scheduled { time: at.max(self.clock), seq, target, msg }));
+        let ev = Scheduled { time, seq, target, msg };
+        if time <= self.clock {
+            debug_assert!(time == self.clock, "scheduling into the past");
+            self.now_queue.push_back(ev);
+        } else {
+            self.queue.push(Reverse(ev));
+        }
+    }
+
+    /// Schedule an external (bootstrap) message.
+    pub fn schedule(&mut self, at: Time, target: ActorId, msg: M) {
+        self.push_event(at.max(self.clock), target, msg);
+    }
+
+    /// Earliest scheduled `(time)` across both queues, if any.
+    fn peek_time(&self) -> Option<Time> {
+        let now_t = self.now_queue.front().map(|s| s.time);
+        let heap_t = self.queue.peek().map(|Reverse(s)| s.time);
+        match (now_t, heap_t) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Pop the globally earliest event by `(time, seq)`.
+    fn pop_next(&mut self) -> Option<Scheduled<M>> {
+        let take_now = match (self.now_queue.front(), self.queue.peek()) {
+            (Some(nq), Some(Reverse(h))) => (nq.time, nq.seq) < (h.time, h.seq),
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return None,
+        };
+        if take_now {
+            self.now_queue.pop_front()
+        } else {
+            self.queue.pop().map(|Reverse(s)| s)
+        }
     }
 
     fn flush_emits(&mut self, emits: &mut Vec<(Time, ActorId, M)>) {
         for (time, target, msg) in emits.drain(..) {
-            assert!(
-                target.0 < self.actors.len(),
-                "send to unregistered {target} at t={time}"
-            );
-            let seq = self.seq;
-            self.seq += 1;
-            self.queue.push(Reverse(Scheduled { time, seq, target, msg }));
+            self.push_event(time, target, msg);
         }
     }
 
     fn start(&mut self) {
-        let mut emits = Vec::new();
+        let mut emits = std::mem::take(&mut self.emit_buf);
         let mut stop = false;
         for i in 0..self.actors.len() {
             let mut actor = std::mem::replace(&mut self.actors[i], Box::new(Nop));
@@ -201,8 +265,9 @@ impl<M> Engine<M> {
                 actor.on_start(&mut ctx);
             }
             self.actors[i] = actor;
+            self.flush_emits(&mut emits);
         }
-        self.flush_emits(&mut emits);
+        self.emit_buf = emits;
         self.started = true;
     }
 
@@ -212,18 +277,19 @@ impl<M> Engine<M> {
         if !self.started {
             self.start();
         }
-        let mut emits: Vec<(Time, ActorId, M)> = Vec::new();
+        let mut emits = std::mem::take(&mut self.emit_buf);
         let mut processed = 0;
         let mut stop = false;
-        while let Some(Reverse(head)) = self.queue.peek() {
-            if head.time > until {
+        while let Some(t) = self.peek_time() {
+            if t > until {
                 break;
             }
-            let Reverse(ev) = self.queue.pop().expect("peeked");
+            let ev = self.pop_next().expect("peeked");
             debug_assert!(ev.time >= self.clock, "time went backwards");
             self.clock = ev.time;
             // Temporarily take the actor out so it can freely use Ctx while
-            // the engine remains borrowable for the emit buffer.
+            // the engine remains borrowable for the emit buffer. `Nop` is a
+            // ZST, so the placeholder box never allocates.
             let mut actor = std::mem::replace(&mut self.actors[ev.target.0], Box::new(Nop));
             {
                 let mut ctx = Ctx {
@@ -243,8 +309,12 @@ impl<M> Engine<M> {
                 break;
             }
         }
+        self.emit_buf = emits;
         // Advance the clock to the horizon even if we idled out early.
-        if self.clock < until && self.queue.iter().all(|Reverse(s)| s.time > until) {
+        if self.clock < until
+            && self.now_queue.is_empty()
+            && self.queue.iter().all(|Reverse(s)| s.time > until)
+        {
             self.clock = until;
         }
         processed

@@ -256,7 +256,7 @@ impl HybridSource {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -340,11 +340,11 @@ impl HybridSource {
         self.last_delivery = ctx.now();
         for sc in chunks {
             self.records_consumed += sc.chunk.records as u64;
+            // One chunk per batch, inline — shared, never copied.
             self.pending.push_back(Batch {
                 from_task: self.params.task_idx,
                 tuples: sc.chunk.records as u64,
-                bytes: sc.chunk.bytes(),
-                chunks: vec![sc.chunk],
+                chunks: crate::proto::ChunkList::One(sc.chunk),
                 hist: None,
                 inc: self.inc,
             });
@@ -480,8 +480,7 @@ impl HybridSource {
                 self.pending.push_back(Batch {
                     from_task: self.params.task_idx,
                     tuples: sc.chunk.records as u64,
-                    bytes: sc.chunk.bytes(),
-                    chunks: vec![sc.chunk.clone()],
+                    chunks: crate::proto::ChunkList::One(sc.chunk.clone()),
                     hist: None,
                     inc: self.inc,
                 });
@@ -768,7 +767,7 @@ impl Actor<Msg> for HybridSource {
         }
         match msg {
             Msg::Reply(env) => {
-                let RpcEnvelope { id, reply } = env;
+                let RpcEnvelope { id, reply } = *env;
                 match reply {
                     RpcReply::PullData { chunks, trims } => {
                         self.on_pull_data(id, chunks, trims, ctx)

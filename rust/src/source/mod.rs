@@ -14,6 +14,11 @@
 //! deserialisation cost, hands batches to the mappers through credited
 //! queues, and — when a pull returns nothing — waits `pull_timeout` before
 //! polling again. Backpressure: no mapper credits → no further pulls.
+//! What the pull reply carries is still shared, not copied: the broker
+//! serves segment-resident chunks by `Rc` into a pre-sized reply, and the
+//! source forwards each chunk inline in its batch — the pull path's extra
+//! cost is the RPC + the modelled deserialisation, never a payload copy
+//! in the simulator itself.
 //!
 //! **Push** (`PushSourceGroup`, §IV-B): the paper's design. All push source
 //! tasks of a worker coordinate so *one* subscription RPC is issued (by the
@@ -21,10 +26,15 @@
 //! dedicated thread then fills shared-memory objects and notifies. The
 //! group's consume loop reads each sealed object **by pointer** — no fetch
 //! RPC, no deserialisation copy (`push_consume_record_ns` vs
-//! `engine_record_ns`) — routes batches to the mappers, and only then
-//! notifies the broker to reuse the buffer (Step 4): object-pool exhaustion
-//! *is* the backpressure. Resource footprint: 2 threads total (consume +
-//! broker push) versus 2 per pull consumer — the Fig. 4 claim.
+//! `engine_record_ns`) — and the hand-off into the pipeline keeps that
+//! property end to end: each sealed chunk rides a batch *inline* as
+//! [`crate::proto::ChunkList::One`], sharing the object's `Rc`d payload,
+//! so neither the consume step nor any operator hop ever touches the
+//! bytes (the zero-copy tests pin this). The loop routes batches to the
+//! mappers, and only then notifies the broker to reuse the buffer
+//! (Step 4): object-pool exhaustion *is* the backpressure. Resource
+//! footprint: 2 threads total (consume + broker push) versus 2 per pull
+//! consumer — the Fig. 4 claim.
 //!
 //! **Native** (`NativeConsumer`): the Fig. 7 baseline — the same pull loop
 //! without the streaming-engine overhead (C++-grade per-record cost),

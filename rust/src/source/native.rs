@@ -120,7 +120,7 @@ impl NativeConsumer {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -254,7 +254,7 @@ impl Actor<Msg> for NativeConsumer {
             return;
         }
         match msg {
-            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::Reply(env) => self.on_reply(*env, ctx),
             Msg::JobDone(tag) => {
                 if tag == self.inc {
                     self.on_processed(ctx);

@@ -135,7 +135,7 @@ impl PullSource {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -209,11 +209,12 @@ impl PullSource {
         };
         for sc in chunks {
             self.records_consumed += sc.chunk.records as u64;
+            // One batch per chunk, chunk inline — the fetched payload is
+            // shared into the pipeline, never copied (see `ChunkList`).
             self.pending.push_back(Batch {
                 from_task: self.params.task_idx,
                 tuples: sc.chunk.records as u64,
-                bytes: sc.chunk.bytes(),
-                chunks: vec![sc.chunk],
+                chunks: crate::proto::ChunkList::One(sc.chunk),
                 hist: None,
                 inc: self.inc,
             });
@@ -315,7 +316,7 @@ impl Actor<Msg> for PullSource {
             return;
         }
         match msg {
-            Msg::Reply(env) => self.on_reply(env, ctx),
+            Msg::Reply(env) => self.on_reply(*env, ctx),
             Msg::JobDone(tag) => {
                 if tag == self.inc {
                     self.on_processed(ctx);

@@ -171,7 +171,7 @@ impl PushSourceGroup {
         ctx.send_at(
             deliver,
             self.params.broker,
-            Msg::Rpc(RpcRequest {
+            Msg::rpc(RpcRequest {
                 id: 0,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
@@ -295,11 +295,14 @@ impl PushSourceGroup {
                         *off = (*off).max(sc.offset + 1);
                     }
                 }
+                // The paper's Step 3 hand-off: the sealed object's chunk is
+                // shared into the pipeline by pointer (`Rc` bump inline in
+                // the batch) — no fetch RPC, no deser copy, no batch-side
+                // allocation.
                 state.pending.push_back(Batch {
                     from_task,
                     tuples: sc.chunk.records as u64,
-                    bytes: sc.chunk.bytes(),
-                    chunks: vec![sc.chunk.clone()],
+                    chunks: crate::proto::ChunkList::One(sc.chunk.clone()),
                     hist: None,
                     inc,
                 });
@@ -542,7 +545,7 @@ impl Actor<Msg> for PushSourceGroup {
         }
         match msg {
             Msg::Reply(env) => {
-                let RpcEnvelope { reply, .. } = env;
+                let RpcEnvelope { reply, .. } = *env;
                 match reply {
                     RpcReply::SubscribeAck { sub } => self.on_subscribe_ack(sub, ctx),
                     RpcReply::UnsubscribeAck { sub, .. } => self.on_unsubscribed(sub, ctx),

@@ -389,7 +389,8 @@ impl TrimScriptBroker {
 impl crate::sim::Actor<Msg> for TrimScriptBroker {
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
         match msg {
-            Msg::Rpc(RpcRequest { id, reply_to, kind, .. }) => {
+            Msg::Rpc(req) => {
+                let RpcRequest { id, reply_to, kind, .. } = *req;
                 let reply = match kind {
                     RpcKind::Pull { assignments, .. } => {
                         self.pulls += 1;
@@ -440,7 +441,7 @@ impl crate::sim::Actor<Msg> for TrimScriptBroker {
                     }
                     other => panic!("trim script: unexpected rpc {other:?}"),
                 };
-                ctx.send(reply_to, Msg::Reply(RpcEnvelope { id, reply }));
+                ctx.send(reply_to, Msg::reply(RpcEnvelope { id, reply }));
             }
             Msg::ObjectFreed { id } => self.store.borrow_mut().release(id),
             other => panic!("trim script: unexpected {other:?}"),

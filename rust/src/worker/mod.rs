@@ -174,6 +174,10 @@ pub struct OperatorTask {
     batches_processed: u64,
     /// Peak input-queue depth (backpressure diagnostics).
     inbox_peak: usize,
+    /// Pooled operator output, reused across batches: `route` drains the
+    /// emit vector instead of dropping it, so steady state allocates
+    /// nothing per batch.
+    out_pool: OpOutput,
 }
 
 impl OperatorTask {
@@ -202,6 +206,7 @@ impl OperatorTask {
             metrics,
             batches_processed: 0,
             inbox_peak: 0,
+            out_pool: OpOutput::default(),
         }
     }
 
@@ -269,7 +274,9 @@ impl OperatorTask {
         }
     }
 
-    fn route(&mut self, out: OpOutput, ctx: &mut Ctx<'_, Msg>) {
+    /// Log + forward one batch's operator output, draining `out` in place
+    /// (the caller's buffer keeps its capacity for the next batch).
+    fn route(&mut self, out: &mut OpOutput, ctx: &mut Ctx<'_, Msg>) {
         if out.tuples_logged > 0 {
             self.metrics.borrow_mut().record(
                 Class::ConsumerTuples,
@@ -278,7 +285,8 @@ impl OperatorTask {
                 out.tuples_logged,
             );
         }
-        for (target, batch) in out.emits {
+        out.tuples_logged = 0;
+        for (target, batch) in out.emits.drain(..) {
             if self.pending_emits.is_empty() && self.ledger.has(target) {
                 self.send_batch(target, batch, ctx);
             } else {
@@ -374,22 +382,30 @@ impl OperatorTask {
         let batch = self.inbox.pop_front().expect("processing an inbox batch");
         let from_upstream = batch.from_task;
         let me = self.params.task_idx;
-        let mut out = OpOutput::default();
+        // The pooled output buffer: taken for the duration of the batch,
+        // returned (drained, capacity intact) after routing.
+        let mut out = std::mem::take(&mut self.out_pool);
+        debug_assert!(out.emits.is_empty() && out.tuples_logged == 0);
         let mut current = batch;
         let chain_len = self.chain.len();
         for (i, op) in self.chain.iter_mut().enumerate() {
+            if i + 1 == chain_len {
+                // The final (usually only) operator writes straight into
+                // the pooled buffer — no passthrough clone, no per-op
+                // scratch on the single-operator fast path.
+                op.apply(current, me, &mut out)
+                    .unwrap_or_else(|e| panic!("task {me} op {}: {e:#}", i));
+                break;
+            }
+            // Chained operators hand at most one batch to the next stage;
+            // pass-through loggers (count/filter) forward the input batch
+            // (a cheap clone: the chunks are shared, see `ChunkList`),
+            // multi-emit stages (keyBy exchanges) must end a chain.
             let mut step = OpOutput::default();
             let passthrough = current.clone();
             op.apply(current, me, &mut step)
                 .unwrap_or_else(|e| panic!("task {me} op {}: {e:#}", i));
             out.tuples_logged += step.tuples_logged;
-            if i + 1 == chain_len {
-                out.emits = step.emits;
-                break;
-            }
-            // Chained operators hand at most one batch to the next stage;
-            // pass-through loggers (count/filter) forward the input batch,
-            // multi-emit stages (keyBy exchanges) must end a chain.
             match step.emits.len() {
                 0 => current = passthrough,
                 1 => current = step.emits.pop().expect("len checked").1,
@@ -397,7 +413,8 @@ impl OperatorTask {
             }
         }
         self.batches_processed += 1;
-        self.route(out, ctx);
+        self.route(&mut out, ctx);
+        self.out_pool = out;
         // Return the credit to the upstream that sent the processed batch.
         let upstream_actor = self.registry.borrow().actor_of(from_upstream);
         ctx.send(
@@ -467,14 +484,15 @@ impl OperatorTask {
     }
 
     fn on_tick(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        let mut out = OpOutput::default();
+        let mut out = std::mem::take(&mut self.out_pool);
         for op in self.chain.iter_mut() {
             if op.wants_ticks() {
                 op.on_tick(&mut out)
                     .unwrap_or_else(|e| panic!("task {} tick: {e:#}", self.params.task_idx));
             }
         }
-        self.route(out, ctx);
+        self.route(&mut out, ctx);
+        self.out_pool = out;
         ctx.send_self_in(self.tick_period(), Msg::Timer(self.inc));
     }
 

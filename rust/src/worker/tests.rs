@@ -45,8 +45,7 @@ impl Feeder {
                 Msg::Data(Batch {
                     from_task: self.my_task,
                     tuples: self.tuples_per_batch,
-                    bytes: self.tuples_per_batch * 100,
-                    chunks: Vec::new(),
+                    chunks: crate::proto::ChunkList::Empty,
                     hist: None,
                     inc: 0,
                 }),
@@ -70,7 +69,7 @@ impl Operator for SlowOp {
     }
     fn apply(&mut self, b: Batch, _f: usize, out: &mut OpOutput) -> Result<(), anyhow::Error> {
         self.seen += 1;
-        out.tuples_logged = b.tuples;
+        out.tuples_logged += b.tuples;
         Ok(())
     }
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
@@ -214,8 +213,7 @@ fn chained_operators_share_one_task() {
         Msg::Data(Batch {
             from_task: 0,
             tuples: 7,
-            bytes: 700,
-            chunks: vec![],
+            chunks: crate::proto::ChunkList::Empty,
             hist: None,
             inc: 0,
         }),
@@ -291,7 +289,13 @@ fn ckpt_rig() -> CkptRig {
 }
 
 fn data(from_task: usize, tuples: u64, inc: u64) -> Msg {
-    Msg::Data(Batch { from_task, tuples, bytes: tuples * 100, chunks: vec![], hist: None, inc })
+    Msg::Data(Batch {
+        from_task,
+        tuples,
+        chunks: crate::proto::ChunkList::Empty,
+        hist: None,
+        inc,
+    })
 }
 
 #[test]
