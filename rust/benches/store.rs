@@ -1,0 +1,9 @@
+//! Regenerates the storage-tier ablation: the in-memory broker log vs the
+//! durable WAL + sorted-segment backend across the source x write design
+//! space. See experiments::ablation_store.
+mod common;
+
+fn main() {
+    let spec = zettastream::experiments::ablation_store(common::bench_duration());
+    common::run(&spec);
+}

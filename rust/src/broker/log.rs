@@ -55,13 +55,19 @@ pub struct PartitionLog {
 
 impl PartitionLog {
     pub fn new(id: PartitionId, segment_bytes: u64) -> Self {
+        Self::with_base(id, segment_bytes, 0)
+    }
+
+    /// A log whose first chunk will take offset `base` — how the durable
+    /// store rebuilds its hot tail above an existing cold tier on reopen.
+    pub(crate) fn with_base(id: PartitionId, segment_bytes: u64, base: ChunkOffset) -> Self {
         assert!(segment_bytes > 0);
         Self {
             id,
             segments: VecDeque::new(),
             segment_bytes,
-            start: 0,
-            head: 0,
+            start: base,
+            head: base,
             total_appended_bytes: 0,
             total_appended_records: 0,
             sealed_segments: 0,
@@ -120,7 +126,7 @@ impl PartitionLog {
     /// a single linear pass across segments — never a per-chunk search.
     /// Always yields at least one chunk if any is available (the paper's
     /// consumers always make progress). `offset` must be `>= self.start`.
-    fn walk_from(
+    pub(crate) fn walk_from(
         &self,
         offset: ChunkOffset,
         max_bytes: u64,
@@ -224,6 +230,19 @@ impl PartitionLog {
             }
         }
         reclaimed
+    }
+
+    /// The front segment when it is sealed (a younger segment exists
+    /// behind it): `(base, payload bytes, chunks)`. This is the durable
+    /// store's flush unit — it writes the run to a cold file, then trims
+    /// the tail below the unit's end.
+    pub(crate) fn front_sealed(&self) -> Option<(ChunkOffset, u64, &[Chunk])> {
+        if self.segments.len() > 1 {
+            let seg = self.segments.front().expect("len checked");
+            Some((seg.base, seg.bytes, &seg.chunks))
+        } else {
+            None
+        }
     }
 
     /// Bytes currently resident.

@@ -26,14 +26,19 @@
 //!   reaches the broker through plasma, never the wire.
 
 mod log;
+pub mod store;
 #[cfg(test)]
 mod tests;
 
 pub use log::{PartitionLog, TrimmedError, DEFAULT_SEGMENT_BYTES};
+pub use store::{
+    DurableStore, LogStore, LogView, MemoryStore, StoreFactory, StoreParams, StoreRegistry,
+    StoreStats, WalStats,
+};
 
 use std::collections::HashMap;
 
-use crate::config::CostModel;
+use crate::config::{CostModel, StoreMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
 use crate::plasma::SharedStore;
@@ -57,8 +62,8 @@ pub struct BrokerParams {
     pub worker_cores: usize,
     /// Dedicated push threads (0 in pull-only deployments; the paper uses 1).
     pub push_threads: usize,
-    /// Segment capacity (8 MiB in the paper).
-    pub segment_bytes: u64,
+    /// Log storage backend and its knobs (segment size, durable tier).
+    pub store: StoreParams,
     /// Partitions this broker hosts.
     pub partitions: Vec<PartitionId>,
     /// Backup broker's actor id (replication target), if replication = 2.
@@ -91,7 +96,8 @@ pub struct Broker {
     dispatcher: CorePool,
     workers: CorePool,
     push_pool: CorePool,
-    logs: HashMap<PartitionId, PartitionLog>,
+    /// Partition logs behind the pluggable storage backend.
+    logs: Box<dyn LogStore>,
     /// Consumer progress per partition (for retention trimming).
     watermarks: HashMap<PartitionId, ChunkOffset>,
     /// Last committed checkpoint cursors (`CommitCheckpoint`): once any
@@ -129,12 +135,27 @@ impl Broker {
         metrics: SharedMetrics,
         entity: usize,
     ) -> Self {
+        let logs = StoreRegistry::builtin()
+            .expect(params.store.mode)
+            .open(&params.store, &params.partitions)
+            .unwrap_or_else(|e| {
+                panic!("opening `{}` store failed: {e}", params.store.mode.name())
+            });
+        Self::with_store(params, logs, net, store, metrics, entity)
+    }
+
+    /// A broker over a pre-opened storage backend — what `launch_full`
+    /// uses with a caller-supplied [`StoreRegistry`], and what tests use
+    /// to hand in a rigged store.
+    pub fn with_store(
+        params: BrokerParams,
+        logs: Box<dyn LogStore>,
+        net: SharedNetwork,
+        store: SharedStore,
+        metrics: SharedMetrics,
+        entity: usize,
+    ) -> Self {
         assert!(params.worker_cores > 0, "broker needs at least one worker core");
-        let logs = params
-            .partitions
-            .iter()
-            .map(|&p| (p, PartitionLog::new(p, params.segment_bytes)))
-            .collect();
         Self {
             dispatcher: CorePool::new(1),
             workers: CorePool::new(params.worker_cores),
@@ -189,8 +210,8 @@ impl Broker {
                 let mut bytes = 0u64;
                 let mut chunks = 0u64;
                 for &(p, off) in assignments {
-                    if let Some(log) = self.logs.get(&p) {
-                        let (ch, by) = log.peek_from(off, *max_bytes);
+                    if self.logs.contains(p) {
+                        let (ch, by) = self.logs.peek_from(p, off, *max_bytes);
                         chunks += ch;
                         bytes += by;
                     }
@@ -324,7 +345,7 @@ impl Broker {
         cursors: &[(PartitionId, ChunkOffset)],
         ctx: &mut Ctx<'_, Msg>,
     ) {
-        if let Some((p, _)) = cursors.iter().find(|(p, _)| !self.logs.contains_key(p)) {
+        if let Some((p, _)) = cursors.iter().find(|(p, _)| !self.logs.contains(*p)) {
             rpc_ctx.staged = Some(RpcReply::Error { reason: format!("unknown partition {p}") });
             self.reply(rpc_ctx, ctx);
             return;
@@ -347,7 +368,7 @@ impl Broker {
         ctx: &mut Ctx<'_, Msg>,
     ) {
         for &p in &spec.partitions {
-            if !self.logs.contains_key(&p) {
+            if !self.logs.contains(p) {
                 rpc_ctx.staged = Some(RpcReply::Error { reason: format!("unknown partition {p}") });
                 self.reply(rpc_ctx, ctx);
                 return;
@@ -370,7 +391,7 @@ impl Broker {
         &mut self,
         chunks: Vec<(PartitionId, Chunk)>,
     ) -> Result<(u64, u64, u32), PartitionId> {
-        if let Some(bad) = chunks.iter().find(|(p, _)| !self.logs.contains_key(p)) {
+        if let Some(bad) = chunks.iter().find(|(p, _)| !self.logs.contains(*p)) {
             return Err(bad.0);
         }
         let mut records = 0u64;
@@ -379,7 +400,7 @@ impl Broker {
         for (p, chunk) in chunks {
             records += chunk.records as u64;
             bytes += chunk.bytes();
-            self.logs.get_mut(&p).expect("validated above").append(chunk);
+            self.logs.append(p, chunk);
         }
         Ok((records, bytes, nchunks))
     }
@@ -501,22 +522,23 @@ impl Broker {
         let mut out = Vec::new();
         let mut trims = Vec::new();
         for &(p, off) in assignments {
-            let Some(log) = self.logs.get(&p) else {
+            if !self.logs.contains(p) {
                 return RpcReply::Error { reason: format!("unknown partition {p}") };
-            };
-            if off < log.start() {
+            }
+            let start = self.logs.start(p);
+            if off < start {
                 // The consumer fell behind retention (a torn-down push
                 // subscription's cursors no longer pin it). Surface the
                 // trim floor so the client can skip forward and count the
                 // gap instead of wedging the partition.
-                trims.push((p, log.start()));
+                trims.push((p, start));
                 continue;
             }
             // One exactly-sized append per partition, straight into the
             // reply vector: the log peeks (clone-free), reserves, then
             // fills in a single linear walk, sharing the resident chunks
             // (`Rc` payload bump, no byte work).
-            match log.read_into(off, max_bytes, &mut out) {
+            match self.logs.read_into(p, off, max_bytes, &mut out) {
                 Ok(_) => {}
                 Err(e) => return RpcReply::Error { reason: e.to_string() },
             }
@@ -532,7 +554,7 @@ impl Broker {
         let mut first = None;
         for spec in sources {
             for &(p, _) in &spec.assignments {
-                if !self.logs.contains_key(&p) {
+                if !self.logs.contains(p) {
                     return RpcReply::Error { reason: format!("unknown partition {p}") };
                 }
             }
@@ -654,7 +676,8 @@ impl Broker {
             for j in 0..nparts {
                 let k = (rr0 + j) % nparts;
                 let (p, off) = store.subscription(sub).cursors[k];
-                let avail = self.logs.get(&p).map(|l| l.available_from(off)).unwrap_or(0);
+                let avail =
+                    if self.logs.contains(p) { self.logs.available_from(p, off) } else { 0 };
                 if avail > 0 {
                     chosen = Some((k, p, off));
                     break;
@@ -665,9 +688,7 @@ impl Broker {
             let capacity = store.capacity(object);
             let content = self
                 .logs
-                .get(&p)
-                .expect("partition hosted here")
-                .read_from(off, capacity)
+                .read_from(p, off, capacity)
                 .expect("cursor is broker-managed, never below retention");
             debug_assert!(!content.is_empty());
             // Advance the broker-managed cursor & rr pointers now: the next
@@ -714,16 +735,18 @@ impl Broker {
             return;
         }
         // Push cursors also hold back retention.
-        let store = self.store.borrow();
-        for (&p, log) in self.logs.iter_mut() {
+        for p in self.logs.partitions() {
             let mut watermark = *self.watermarks.get(&p).unwrap_or(&0);
-            for sub in store.subscriptions() {
-                if !sub.active {
-                    continue; // unsubscribed cursors no longer pin retention
-                }
-                for &(sp, off) in &sub.cursors {
-                    if sp == p {
-                        watermark = watermark.min(off);
+            {
+                let store = self.store.borrow();
+                for sub in store.subscriptions() {
+                    if !sub.active {
+                        continue; // unsubscribed cursors no longer pin retention
+                    }
+                    for &(sp, off) in &sub.cursors {
+                        if sp == p {
+                            watermark = watermark.min(off);
+                        }
                     }
                 }
             }
@@ -732,7 +755,7 @@ impl Broker {
                 // restorable point (the committed checkpoint's cursor).
                 watermark = watermark.min(self.committed.get(&p).copied().unwrap_or(0));
             }
-            self.trimmed_bytes += log.trim_below(watermark);
+            self.trimmed_bytes += self.logs.trim_below(p, watermark);
         }
     }
 
@@ -740,23 +763,32 @@ impl Broker {
     // Introspection for the launcher / tests
     // ---------------------------------------------------------------------
 
-    pub fn partition(&self, p: PartitionId) -> Option<&PartitionLog> {
-        self.logs.get(&p)
+    /// A read-only view of one hosted partition's log (any backend).
+    pub fn partition(&self, p: PartitionId) -> Option<LogView<'_>> {
+        self.logs.contains(p).then(|| LogView::new(self.logs.as_ref(), p))
+    }
+
+    /// The storage backend's counters.
+    pub fn store_stats(&self) -> StoreStats {
+        self.logs.stats()
     }
 
     pub fn resident_bytes(&self) -> u64 {
-        self.logs.values().map(|l| l.resident_bytes()).sum()
+        self.logs.resident_bytes()
     }
 
     pub fn trimmed_bytes(&self) -> u64 {
         self.trimmed_bytes
     }
 
-    /// End-of-run utilisation gauges.
+    /// End-of-run utilisation gauges (plus storage-tier gauges when the
+    /// durable backend is active).
     pub fn export_gauges(&mut self, now: Time, prefix: &str) {
         let d = self.dispatcher.utilization(now);
         let w = self.workers.utilization(now);
         let p = self.push_pool.utilization(now);
+        let stats = self.logs.stats();
+        let durable = self.logs.mode() == StoreMode::Durable;
         let mut m = self.metrics.borrow_mut();
         m.set_gauge(format!("{prefix}.dispatcher_util"), d);
         m.set_gauge(format!("{prefix}.worker_util"), w);
@@ -764,6 +796,27 @@ impl Broker {
             m.set_gauge(format!("{prefix}.push_util"), p);
         }
         m.set_gauge(format!("{prefix}.worker_queue_peak"), self.workers.queue_peak() as f64);
+        if durable {
+            m.set_gauge(format!("{prefix}.store_wal_records"), stats.wal.records as f64);
+            m.set_gauge(format!("{prefix}.store_wal_bytes"), stats.wal.bytes as f64);
+            m.set_gauge(
+                format!("{prefix}.store_wal_files"),
+                stats.wal.files_created as f64,
+            );
+            m.set_gauge(format!("{prefix}.store_wal_pruned"), stats.wal.files_pruned as f64);
+            m.set_gauge(
+                format!("{prefix}.store_segments_flushed"),
+                stats.segments_flushed as f64,
+            );
+            m.set_gauge(format!("{prefix}.store_compactions"), stats.compactions as f64);
+            m.set_gauge(format!("{prefix}.store_cold_segments"), stats.cold_segments as f64);
+            m.set_gauge(format!("{prefix}.store_cold_bytes"), stats.cold_bytes as f64);
+            m.set_gauge(format!("{prefix}.store_cold_loads"), stats.cold_loads as f64);
+            m.set_gauge(
+                format!("{prefix}.store_cold_cache_hits"),
+                stats.cold_cache_hits as f64,
+            );
+        }
     }
 }
 

@@ -1,0 +1,85 @@
+//! A plain bloom filter over chunk offsets, one per cold segment file.
+//!
+//! Sorted segment stores keep a bloom per file so point lookups can skip
+//! files that cannot contain the key. Our keys (chunk offsets) are dense
+//! within a segment's `[base, end)` range, so the range check alone is
+//! precise — the bloom's job here is the same one the footer checksum does
+//! for payload bytes: a cheap, independent consistency witness over the
+//! offset index that survives compaction rewrites, and the structural slot
+//! where a sparse-key store would do its real filtering. Lookups consult
+//! it before touching a file; a negative for an in-range offset means the
+//! file does not hold what its name claims.
+//!
+//! No external deps: double hashing over two FNV-1a style mixes,
+//! `k` probes into an `m`-bit array, sized at build time for ~1% false
+//! positives (10 bits/key, 7 probes).
+
+/// Bits per inserted key (≈1% false-positive rate with [`HASHES`] probes).
+const BITS_PER_KEY: u64 = 10;
+/// Probes per lookup (`k` ≈ 0.7 · bits/key).
+const HASHES: u32 = 7;
+
+/// A fixed-size bloom filter over `u64` keys.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bloom {
+    /// Bit array, 64 bits per word.
+    words: Vec<u64>,
+    /// Total bits (`m`); kept explicit so serialization round-trips.
+    bits: u32,
+    /// Probes per key (`k`).
+    hashes: u32,
+}
+
+/// 64-bit FNV-1a.
+fn fnv1a(seed: u64, key: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for byte in key.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Bloom {
+    /// An empty filter sized for `expected` keys.
+    pub fn with_capacity(expected: u64) -> Self {
+        let bits = (expected.max(1) * BITS_PER_KEY).min(u32::MAX as u64) as u32;
+        let bits = bits.max(64);
+        Self { words: vec![0; bits.div_ceil(64) as usize], bits, hashes: HASHES }
+    }
+
+    /// Rebuild from serialized parts (segment file footer).
+    pub fn from_parts(bits: u32, hashes: u32, words: Vec<u64>) -> Option<Self> {
+        if bits == 0 || hashes == 0 || words.len() != bits.div_ceil(64) as usize {
+            return None;
+        }
+        Some(Self { words, bits, hashes })
+    }
+
+    /// The serialized parts: `(bits, hashes, words)`.
+    pub fn parts(&self) -> (u32, u32, &[u64]) {
+        (self.bits, self.hashes, &self.words)
+    }
+
+    /// Double-hashed probe positions: `h1 + i·h2 mod m`.
+    fn probe(&self, key: u64, i: u32) -> usize {
+        let h1 = fnv1a(0, key);
+        let h2 = fnv1a(0x9e37_79b9_7f4a_7c15, key) | 1; // odd: full cycle
+        (h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.bits as u64) as usize
+    }
+
+    pub fn insert(&mut self, key: u64) {
+        for i in 0..self.hashes {
+            let bit = self.probe(key, i);
+            self.words[bit / 64] |= 1u64 << (bit % 64);
+        }
+    }
+
+    /// `false` means definitely absent; `true` means probably present.
+    pub fn might_contain(&self, key: u64) -> bool {
+        (0..self.hashes).all(|i| {
+            let bit = self.probe(key, i);
+            self.words[bit / 64] & (1u64 << (bit % 64)) != 0
+        })
+    }
+}

@@ -1,0 +1,567 @@
+//! The durable tiered backend: WAL ring + in-memory tail + cold segment
+//! files, presenting exactly the [`LogStore`] semantics of the in-memory
+//! backend.
+//!
+//! ## Data path
+//!
+//! * **Append** — the chunk is framed into the WAL first, then appended
+//!   to the in-memory tail (a plain `PartitionLog`). Whenever the tail
+//!   seals a segment, that segment's chunk run is flushed to an
+//!   immutable cold file and dropped from memory, the WAL ring prunes
+//!   files the cold tier now covers, and a compaction pass keeps the
+//!   cold file count bounded.
+//! * **Read** — one budget walk with the same always-make-progress rule
+//!   as `PartitionLog::walk_from`, serving the cold range from a small
+//!   FIFO cache of decoded segments (`Rc<Vec<Chunk>>` — loaded once,
+//!   shared by every reader) and continuing seamlessly into the tail.
+//! * **Trim** — logical *units* mirror the segment boundaries the memory
+//!   backend would have sealed, so `start` advances at identical points
+//!   regardless of how compaction has merged the physical files; cold
+//!   files wholly below the floor are deleted.
+//!
+//! ## Recovery
+//!
+//! [`DurableStore::open`] on a non-empty directory is broker crash
+//! recovery: scan the cold files (dropping torn flushes — the WAL still
+//! covers them), replay the WAL in write order (`TOTALS` snapshots set
+//! the lifetime counters, appends rebuild the tail and re-add, trims
+//! re-raise the floor), and start a fresh WAL file with a post-replay
+//! snapshot. Replayed real payloads are materialised once here — the
+//! recovery-path equivalent of the producer's single `Chunk::real`.
+//!
+//! I/O errors outside `open` panic: the simulator treats a failing disk
+//! under the store the way it treats OOM — not a modeled fault.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::StoreMode;
+use crate::proto::{Chunk, ChunkOffset, PartitionId, StampedChunk};
+
+use super::super::log::{PartitionLog, TrimmedError};
+use super::compaction::{self, CompactionConfig};
+use super::segment::{self, SegmentMeta};
+use super::wal::{WalRecord, WalRing};
+use super::{LogStore, StoreParams, StoreStats};
+
+/// Distinguishes sibling ephemeral stores within one process.
+static AUTO_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn auto_dir() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "zettastream-store-{}-{}",
+        std::process::id(),
+        AUTO_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// One logical flush unit: a sealed tail segment's `[base, end)` span
+/// and payload bytes. Trim advances over these — never over physical
+/// file boundaries, which compaction is free to merge.
+#[derive(Debug, Clone, Copy)]
+struct TrimUnit {
+    base: ChunkOffset,
+    end: ChunkOffset,
+    bytes: u64,
+}
+
+/// Per-partition durable state.
+#[derive(Debug)]
+struct DurablePartition {
+    /// Hot tail: the resident `PartitionLog` over `[cold_end, head)`.
+    tail: PartitionLog,
+    /// Untrimmed flush units covering `[start, cold_end)`, oldest first.
+    units: VecDeque<TrimUnit>,
+    /// Cold files sorted by base offset.
+    files: Vec<SegmentMeta>,
+    /// Logical retained start (the memory backend's `start` twin).
+    start: ChunkOffset,
+    /// Lifetime appended totals (restored from WAL snapshots on reopen).
+    total_bytes: u64,
+    total_records: u64,
+}
+
+impl DurablePartition {
+    /// First offset not yet flushed to a cold file.
+    fn cold_end(&self) -> ChunkOffset {
+        self.tail.start()
+    }
+
+    /// The memory backend's trim rule over units + tail: whole sealed
+    /// spans strictly below `watermark` go, but never the last resident
+    /// span. Returns bytes reclaimed (cold for units, memory for tail).
+    fn apply_trim(&mut self, watermark: ChunkOffset) -> u64 {
+        let mut reclaimed = 0;
+        while let Some(u) = self.units.front() {
+            if u.end <= watermark && self.units.len() + self.tail.resident_segments() > 1 {
+                self.start = u.end;
+                reclaimed += u.bytes;
+                self.units.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.units.is_empty() {
+            reclaimed += self.tail.trim_below(watermark);
+            self.start = self.start.max(self.tail.start());
+        }
+        reclaimed
+    }
+}
+
+/// FIFO cache of decoded cold segments, keyed by `(partition, base)`.
+#[derive(Debug)]
+struct ColdCache {
+    map: HashMap<(PartitionId, ChunkOffset), Rc<Vec<Chunk>>>,
+    order: VecDeque<(PartitionId, ChunkOffset)>,
+    cap: usize,
+}
+
+impl ColdCache {
+    fn new(cap: usize) -> Self {
+        ColdCache { map: HashMap::new(), order: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    fn get(&self, key: (PartitionId, ChunkOffset)) -> Option<Rc<Vec<Chunk>>> {
+        self.map.get(&key).cloned()
+    }
+
+    fn insert(&mut self, key: (PartitionId, ChunkOffset), chunks: Rc<Vec<Chunk>>) {
+        if self.map.insert(key, chunks).is_none() {
+            self.order.push_back(key);
+        }
+        while self.order.len() > self.cap {
+            let old = self.order.pop_front().expect("len checked");
+            self.map.remove(&old);
+        }
+    }
+
+    /// Drop every entry of `p` (its file set changed under us).
+    fn purge(&mut self, p: PartitionId) {
+        self.order.retain(|k| k.0 != p);
+        self.map.retain(|k, _| k.0 != p);
+    }
+}
+
+/// The durable tiered store (see module docs).
+#[derive(Debug)]
+pub struct DurableStore {
+    root: PathBuf,
+    seg_dir: PathBuf,
+    /// Auto temp dir: remove the tree on drop.
+    ephemeral: bool,
+    compaction: CompactionConfig,
+    wal: WalRing,
+    order: Vec<PartitionId>,
+    parts: HashMap<PartitionId, DurablePartition>,
+    cache: RefCell<ColdCache>,
+    stats: RefCell<StoreStats>,
+}
+
+/// Current lifetime-totals snapshot records, one per partition.
+fn totals_records(
+    order: &[PartitionId],
+    parts: &HashMap<PartitionId, DurablePartition>,
+) -> Vec<WalRecord> {
+    order
+        .iter()
+        .map(|&p| {
+            let d = &parts[&p];
+            WalRecord::Totals { partition: p, bytes: d.total_bytes, records: d.total_records }
+        })
+        .collect()
+}
+
+impl DurableStore {
+    /// Open (or create) the store under `params.dir` hosting
+    /// `partitions`. A non-empty directory is replayed — this is the
+    /// broker-restart recovery path; see the module docs.
+    pub fn open(params: &StoreParams, partitions: &[PartitionId]) -> io::Result<Self> {
+        let (root, ephemeral) = match &params.dir {
+            Some(dir) => (dir.clone(), false),
+            None => (auto_dir(), true),
+        };
+        let seg_dir = root.join("segments");
+        fs::create_dir_all(&seg_dir)?;
+
+        let mut stats = StoreStats::default();
+        let (metas, torn) = segment::scan_dir(&seg_dir)?;
+        stats.torn_segments = torn;
+
+        let (mut wal, replay) = WalRing::open(&root.join("wal"), params.wal_file_bytes)?;
+
+        let order: Vec<PartitionId> = partitions.to_vec();
+        let mut parts = HashMap::with_capacity(order.len());
+        for &p in &order {
+            // A crash mid-compaction can leave a merged file alongside the
+            // sources it subsumes; keep the widest cover, drop contained.
+            let mut files: Vec<SegmentMeta> = Vec::new();
+            for meta in metas.iter().filter(|m| m.partition == p) {
+                match files.last() {
+                    Some(prev) if meta.end <= prev.end => {
+                        fs::remove_file(&meta.path)?;
+                        stats.segments_compacted += 1;
+                    }
+                    _ => files.push(meta.clone()),
+                }
+            }
+            let cold_end = files.last().map_or(0, |m| m.end);
+            let start = files.first().map_or(cold_end, |m| m.base);
+            // Reopened units are the physical file boundaries — coarser
+            // than the lost in-memory seal points, which only means trim
+            // advances in bigger steps until fresh flushes take over.
+            let units = files
+                .iter()
+                .map(|m| TrimUnit { base: m.base, end: m.end, bytes: m.data_bytes })
+                .collect();
+            parts.insert(
+                p,
+                DurablePartition {
+                    tail: PartitionLog::with_base(p, params.segment_bytes, cold_end),
+                    units,
+                    files,
+                    start,
+                    total_bytes: 0,
+                    total_records: 0,
+                },
+            );
+        }
+
+        // Replay in write order: snapshots set, appends add + rebuild the
+        // tail, trims re-raise the floor. Appends the cold tier already
+        // covers still *count* (they postdate the last snapshot) but are
+        // skipped for the tail.
+        for rec in replay {
+            match rec {
+                WalRecord::Totals { partition, bytes, records } => {
+                    if let Some(d) = parts.get_mut(&partition) {
+                        d.total_bytes = bytes;
+                        d.total_records = records;
+                    }
+                }
+                WalRecord::Append { partition, offset, chunk } => {
+                    let Some(d) = parts.get_mut(&partition) else { continue };
+                    d.total_bytes += chunk.bytes();
+                    d.total_records += chunk.records as u64;
+                    let head = d.tail.head();
+                    if offset < head {
+                        wal.stats_mut().replayed_skipped += 1;
+                    } else if offset == head {
+                        d.tail.append(chunk);
+                    } else {
+                        panic!(
+                            "WAL gap replaying {partition}: record at {offset}, tail head {head}"
+                        );
+                    }
+                }
+                WalRecord::Trim { partition, floor } => {
+                    if let Some(d) = parts.get_mut(&partition) {
+                        d.apply_trim(floor);
+                    }
+                }
+            }
+        }
+
+        let mut store = DurableStore {
+            root,
+            seg_dir,
+            ephemeral,
+            compaction: CompactionConfig::with_min_segments(params.compact_min_segments),
+            wal,
+            order: order.clone(),
+            parts,
+            cache: RefCell::new(ColdCache::new(params.cold_cache_segments)),
+            stats: RefCell::new(stats),
+        };
+
+        // Anchor the fresh WAL file with a post-replay snapshot, then
+        // settle the tiers (flush replayed seals, prune, compact).
+        let snapshot = totals_records(&store.order, &store.parts);
+        for rec in &snapshot {
+            store.wal.append(rec, Vec::new)?;
+        }
+        for p in order {
+            store.flush_tail(p)?;
+            store.maintain(p)?;
+        }
+        Ok(store)
+    }
+
+    fn part(&self, p: PartitionId) -> &DurablePartition {
+        self.parts.get(&p).unwrap_or_else(|| panic!("partition {p} not hosted"))
+    }
+
+    /// Flush every sealed tail segment of `p` to a cold file (one file
+    /// per seal — the flush unit that trim parity is built on).
+    fn flush_tail(&mut self, p: PartitionId) -> io::Result<()> {
+        loop {
+            let (base, bytes, chunks) = {
+                let d = self.parts.get_mut(&p).expect("validated");
+                match d.tail.front_sealed() {
+                    // Rc-payload clones: the flush shares, never copies.
+                    Some((base, bytes, chunks)) => (base, bytes, chunks.to_vec()),
+                    None => return Ok(()),
+                }
+            };
+            let meta = segment::write_segment(&self.seg_dir, p, base, &chunks)?;
+            let end = base + chunks.len() as u64;
+            let d = self.parts.get_mut(&p).expect("validated");
+            d.files.push(meta);
+            d.units.push_back(TrimUnit { base, end, bytes });
+            d.tail.trim_below(end);
+            self.stats.borrow_mut().segments_flushed += 1;
+        }
+    }
+
+    /// Post-flush/post-trim housekeeping: prune WAL files the cold tier
+    /// covers, drop fully-trimmed cold files, merge old runs.
+    fn maintain(&mut self, p: PartitionId) -> io::Result<()> {
+        let flushed: HashMap<PartitionId, ChunkOffset> =
+            self.parts.iter().map(|(&q, d)| (q, d.cold_end())).collect();
+        self.wal.prune(&flushed)?;
+
+        let d = self.parts.get_mut(&p).expect("validated");
+        let before = d.files.len();
+        compaction::compact_partition(
+            &self.seg_dir,
+            &mut d.files,
+            d.start,
+            &self.compaction,
+            &mut self.stats.borrow_mut(),
+        )?;
+        if d.files.len() != before {
+            self.cache.borrow_mut().purge(p);
+        }
+        Ok(())
+    }
+
+    /// One cold chunk by offset: bloom-checked file lookup through the
+    /// decoded-segment cache. Panics on corruption (a bloom negative for
+    /// an in-range offset, or a missing file) — the WAL/scan layers are
+    /// supposed to have quarantined those.
+    fn cold_chunk(&self, d: &DurablePartition, at: ChunkOffset) -> Chunk {
+        let p = d.tail.id;
+        let idx = d.files.partition_point(|m| m.end <= at);
+        let meta = d
+            .files
+            .get(idx)
+            .filter(|m| m.holds(at))
+            .unwrap_or_else(|| panic!("no cold segment of {p} holds offset {at}"));
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.bloom_checks += 1;
+            if !meta.bloom.might_contain(at) {
+                stats.bloom_negatives += 1;
+                panic!(
+                    "bloom denies offset {at} inside segment {} — corrupt index",
+                    meta.path.display()
+                );
+            }
+        }
+        let key = (p, meta.base);
+        let cached = self.cache.borrow().get(key);
+        let chunks = match cached {
+            Some(chunks) => {
+                self.stats.borrow_mut().cold_cache_hits += 1;
+                chunks
+            }
+            None => {
+                let loaded = Rc::new(segment::load_chunks(meta).unwrap_or_else(|e| {
+                    panic!("cold segment load failed ({}): {e}", meta.path.display())
+                }));
+                self.stats.borrow_mut().cold_loads += 1;
+                self.cache.borrow_mut().insert(key, Rc::clone(&loaded));
+                loaded
+            }
+        };
+        chunks[(at - meta.base) as usize].clone()
+    }
+
+    /// The unified budget walk: cold range then tail, replicating
+    /// `PartitionLog::walk_from`'s rules exactly (always take the first
+    /// available chunk; stop when the next would bust the budget).
+    fn walk(
+        &self,
+        p: PartitionId,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        mut f: impl FnMut(ChunkOffset, &Chunk),
+    ) -> (u64, u64) {
+        let d = self.part(p);
+        let cold_end = d.cold_end();
+        let head = d.tail.head();
+        if offset >= head {
+            return (0, 0);
+        }
+        let mut at = offset;
+        let mut taken = 0u64;
+        let mut bytes = 0u64;
+        let mut budget = max_bytes;
+        while at < cold_end {
+            let chunk = self.cold_chunk(d, at);
+            let b = chunk.bytes();
+            if taken > 0 && b > budget {
+                return (taken, bytes);
+            }
+            f(at, &chunk);
+            taken += 1;
+            bytes += b;
+            budget = budget.saturating_sub(b);
+            at += 1;
+            if budget == 0 {
+                return (taken, bytes);
+            }
+        }
+        if at < head {
+            // Crossing into the tail: the at-least-one rule only applies
+            // if nothing was taken yet; otherwise the boundary chunk must
+            // fit like any mid-walk chunk would.
+            if taken > 0 {
+                let (_, first) = d.tail.peek_from(at, 1);
+                if first > budget {
+                    return (taken, bytes);
+                }
+            }
+            let (t, b) = d.tail.walk_from(at, budget, &mut f);
+            taken += t;
+            bytes += b;
+        }
+        (taken, bytes)
+    }
+}
+
+impl LogStore for DurableStore {
+    fn mode(&self) -> StoreMode {
+        StoreMode::Durable
+    }
+
+    fn partitions(&self) -> Vec<PartitionId> {
+        self.order.clone()
+    }
+
+    fn contains(&self, p: PartitionId) -> bool {
+        self.parts.contains_key(&p)
+    }
+
+    fn append(&mut self, p: PartitionId, chunk: Chunk) -> ChunkOffset {
+        let offset = self.part(p).tail.head();
+        let rec = WalRecord::Append { partition: p, offset, chunk: chunk.clone() };
+        // The rotation snapshot excludes the pending record (the WAL
+        // layer writes it after the snapshot in the fresh file).
+        let order = &self.order;
+        let parts = &self.parts;
+        self.wal
+            .append(&rec, || totals_records(order, parts))
+            .unwrap_or_else(|e| panic!("wal append failed for {p}: {e}"));
+
+        let d = self.parts.get_mut(&p).expect("validated");
+        d.total_bytes += chunk.bytes();
+        d.total_records += chunk.records as u64;
+        let assigned = d.tail.append(chunk);
+        debug_assert_eq!(assigned, offset);
+
+        self.flush_tail(p).unwrap_or_else(|e| panic!("segment flush failed for {p}: {e}"));
+        self.maintain(p).unwrap_or_else(|e| panic!("store maintenance failed for {p}: {e}"));
+        offset
+    }
+
+    fn head(&self, p: PartitionId) -> ChunkOffset {
+        self.part(p).tail.head()
+    }
+
+    fn start(&self, p: PartitionId) -> ChunkOffset {
+        self.part(p).start
+    }
+
+    fn available_from(&self, p: PartitionId, offset: ChunkOffset) -> u64 {
+        let d = self.part(p);
+        d.tail.head().saturating_sub(offset.max(d.start))
+    }
+
+    fn read_into(
+        &self,
+        p: PartitionId,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        out: &mut Vec<StampedChunk>,
+    ) -> Result<u64, TrimmedError> {
+        let start = self.part(p).start;
+        if offset < start {
+            return Err(TrimmedError { requested: offset, start });
+        }
+        let (chunks, _) = self.walk(p, offset, max_bytes, |_, _| {});
+        out.reserve(chunks as usize);
+        let (taken, _) = self.walk(p, offset, max_bytes, |at, chunk| {
+            out.push(StampedChunk { partition: p, offset: at, chunk: chunk.clone() });
+        });
+        debug_assert_eq!(taken, chunks);
+        Ok(taken)
+    }
+
+    fn peek_from(&self, p: PartitionId, offset: ChunkOffset, max_bytes: u64) -> (u64, u64) {
+        if offset < self.part(p).start {
+            return (0, 0);
+        }
+        self.walk(p, offset, max_bytes, |_, _| {})
+    }
+
+    fn trim_below(&mut self, p: PartitionId, watermark: ChunkOffset) -> u64 {
+        let d = self.parts.get_mut(&p).expect("validated");
+        let before = d.start;
+        let reclaimed = d.apply_trim(watermark);
+        let floor = d.start;
+        if floor > before {
+            let rec = WalRecord::Trim { partition: p, floor };
+            let order = &self.order;
+            let parts = &self.parts;
+            self.wal
+                .append(&rec, || totals_records(order, parts))
+                .unwrap_or_else(|e| panic!("wal trim failed for {p}: {e}"));
+            self.maintain(p)
+                .unwrap_or_else(|e| panic!("store maintenance failed for {p}: {e}"));
+        }
+        reclaimed
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.parts.values().map(|d| d.tail.resident_bytes()).sum()
+    }
+
+    fn total_appended_bytes(&self, p: PartitionId) -> u64 {
+        self.part(p).total_bytes
+    }
+
+    fn total_appended_records(&self, p: PartitionId) -> u64 {
+        self.part(p).total_records
+    }
+
+    fn stats(&self) -> StoreStats {
+        let mut stats = self.stats.borrow().clone();
+        stats.wal = self.wal.stats();
+        stats.cold_segments = self.parts.values().map(|d| d.files.len() as u64).sum();
+        stats.cold_bytes =
+            self.parts.values().flat_map(|d| d.files.iter().map(|m| m.data_bytes)).sum();
+        stats
+    }
+}
+
+impl Drop for DurableStore {
+    fn drop(&mut self) {
+        if self.ephemeral {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+/// Where this store keeps its files (tests point crash-recovery runs at
+/// the same directory).
+impl DurableStore {
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}

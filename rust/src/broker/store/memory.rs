@@ -1,0 +1,102 @@
+//! The in-memory backend: today's `PartitionLog` per partition, behind
+//! the [`LogStore`] trait. This is the sim default — no I/O, no extra
+//! state, byte-for-byte the pre-store-subsystem broker behavior.
+
+use std::collections::HashMap;
+
+use crate::config::StoreMode;
+use crate::proto::{Chunk, ChunkOffset, PartitionId, StampedChunk};
+
+use super::super::log::{PartitionLog, TrimmedError};
+use super::{LogStore, StoreStats};
+
+/// Pure in-memory partition logs (creation-ordered for determinism).
+#[derive(Debug)]
+pub struct MemoryStore {
+    order: Vec<PartitionId>,
+    logs: HashMap<PartitionId, PartitionLog>,
+}
+
+impl MemoryStore {
+    pub fn new(segment_bytes: u64, partitions: &[PartitionId]) -> Self {
+        let mut order = Vec::with_capacity(partitions.len());
+        let mut logs = HashMap::with_capacity(partitions.len());
+        for &p in partitions {
+            order.push(p);
+            logs.insert(p, PartitionLog::new(p, segment_bytes));
+        }
+        MemoryStore { order, logs }
+    }
+
+    fn log(&self, p: PartitionId) -> &PartitionLog {
+        self.logs.get(&p).unwrap_or_else(|| panic!("partition {p} not hosted"))
+    }
+
+    fn log_mut(&mut self, p: PartitionId) -> &mut PartitionLog {
+        self.logs.get_mut(&p).unwrap_or_else(|| panic!("partition {p} not hosted"))
+    }
+}
+
+impl LogStore for MemoryStore {
+    fn mode(&self) -> StoreMode {
+        StoreMode::Memory
+    }
+
+    fn partitions(&self) -> Vec<PartitionId> {
+        self.order.clone()
+    }
+
+    fn contains(&self, p: PartitionId) -> bool {
+        self.logs.contains_key(&p)
+    }
+
+    fn append(&mut self, p: PartitionId, chunk: Chunk) -> ChunkOffset {
+        self.log_mut(p).append(chunk)
+    }
+
+    fn head(&self, p: PartitionId) -> ChunkOffset {
+        self.log(p).head()
+    }
+
+    fn start(&self, p: PartitionId) -> ChunkOffset {
+        self.log(p).start()
+    }
+
+    fn available_from(&self, p: PartitionId, offset: ChunkOffset) -> u64 {
+        self.log(p).available_from(offset)
+    }
+
+    fn read_into(
+        &self,
+        p: PartitionId,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        out: &mut Vec<StampedChunk>,
+    ) -> Result<u64, TrimmedError> {
+        self.log(p).read_into(offset, max_bytes, out)
+    }
+
+    fn peek_from(&self, p: PartitionId, offset: ChunkOffset, max_bytes: u64) -> (u64, u64) {
+        self.log(p).peek_from(offset, max_bytes)
+    }
+
+    fn trim_below(&mut self, p: PartitionId, watermark: ChunkOffset) -> u64 {
+        self.log_mut(p).trim_below(watermark)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.logs.values().map(PartitionLog::resident_bytes).sum()
+    }
+
+    fn total_appended_bytes(&self, p: PartitionId) -> u64 {
+        self.log(p).total_appended_bytes()
+    }
+
+    fn total_appended_records(&self, p: PartitionId) -> u64 {
+        self.log(p).total_appended_records()
+    }
+
+    fn stats(&self) -> StoreStats {
+        StoreStats::default()
+    }
+}

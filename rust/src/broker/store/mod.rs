@@ -1,0 +1,288 @@
+//! Pluggable broker log storage: in-memory segments or a durable tier.
+//!
+//! The broker stores partition logs behind the [`LogStore`] trait and
+//! opens a backend through the [`StoreRegistry`] (the same pluggability
+//! pattern as `SourceRegistry`/`WriterRegistry`), selected by the
+//! `store_mode` config knob:
+//!
+//! * **`memory`** ([`MemoryStore`]) — today's pure in-memory
+//!   `PartitionLog` per partition, unchanged. The sim default: zero
+//!   behavior change, zero I/O, retention is the only footprint bound.
+//! * **`durable`** ([`DurableStore`]) — a tiered log under the same
+//!   semantics, built from three layers:
+//!
+//!   1. **WAL ring** ([`wal`]) — every append is framed into the active
+//!      write-ahead file *before* it lands in the in-memory tail, so a
+//!      broker crash loses nothing past the last intact frame. The ring
+//!      rotates at `store_wal_bytes` and prunes sealed files once the
+//!      cold tier holds their chunks.
+//!   2. **Sorted segments** ([`segment`]) — when the in-memory tail seals
+//!      a segment, its chunk run is flushed to an immutable, checksummed,
+//!      bloom-indexed cold file and dropped from memory. Laggard readers
+//!      (the hybrid source's pull-fallback, restarting consumers) serve
+//!      from these files through a small shared-chunk cache, so the
+//!      zero-copy discipline survives the disk hop: one materialisation
+//!      per chunk per segment load, `Rc`-shared to every reader after.
+//!   3. **Compaction** ([`compaction`]) — cold files wholly below the
+//!      retention floor are deleted, and once a partition accumulates
+//!      `store_compact_min_segments` files the oldest run is merged into
+//!      one (fresh bloom, one checksum), keeping file counts and lookup
+//!      fan-out bounded on long runs. Compaction is background
+//!      maintenance: it charges no simulated time, mirroring a broker
+//!      that compacts off the hot path.
+//!
+//! ## The retention-floor contract with checkpoints
+//!
+//! Trimming is driven by the broker exactly as before: the consumer
+//! progress watermark, clamped by active push-subscription cursors and —
+//! when a checkpoint coordinator is running — by the **committed-epoch
+//! floor** (`RpcKind::CommitCheckpoint` cursors). The store never trims
+//! or compacts past what the broker hands to [`LogStore::trim_below`],
+//! so committed epochs double as the compaction floor: a durable broker
+//! can always replay from the last committed checkpoint, and everything
+//! below it is reclaimable on *both* tiers (memory tail and cold files)
+//! plus the WAL ring.
+//!
+//! ## Trim-gap parity
+//!
+//! Both backends advance the retained `start` at the same points: the
+//! durable store tracks the *logical* segment boundaries the memory
+//! backend would have sealed (its flush units) and trims whole units,
+//! independent of how compaction has merged the physical files
+//! underneath. `TrimmedError` and the pull path's trim-gap recovery are
+//! therefore byte-identical across `store_mode` settings — the golden
+//! parity suite asserts exactly this.
+
+use std::path::PathBuf;
+
+use crate::config::{ExperimentConfig, StoreMode};
+use crate::proto::{Chunk, ChunkOffset, PartitionId, StampedChunk};
+
+use super::log::TrimmedError;
+
+pub mod bloom;
+mod codec;
+pub mod compaction;
+mod durable;
+mod memory;
+mod registry;
+mod segment;
+mod wal;
+#[cfg(test)]
+mod tests;
+
+pub use bloom::Bloom;
+pub use compaction::CompactionConfig;
+pub use durable::DurableStore;
+pub use memory::MemoryStore;
+pub use registry::{StoreFactory, StoreRegistry};
+pub use segment::SegmentMeta;
+pub use wal::WalStats;
+
+/// How a store backend is opened: which partitions it hosts and every
+/// knob the config exposes. `Debug + Clone` like every params struct in
+/// the crate (`BrokerParams`, writer/source params).
+#[derive(Debug, Clone)]
+pub struct StoreParams {
+    pub mode: StoreMode,
+    /// Durable root directory. `None` = an ephemeral per-process temp
+    /// directory, created on open and removed when the store drops —
+    /// what sweeps and tests want. Explicit paths persist across runs
+    /// (that is what crash-recovery opens).
+    pub dir: Option<PathBuf>,
+    /// In-memory tail segment capacity; also the cold flush unit.
+    pub segment_bytes: u64,
+    /// WAL ring rotation size.
+    pub wal_file_bytes: u64,
+    /// Cold files per partition that trigger a merge.
+    pub compact_min_segments: usize,
+    /// Cold segments kept decoded for readers (shared-chunk cache).
+    pub cold_cache_segments: usize,
+}
+
+impl StoreParams {
+    /// Pure in-memory backend (the default everywhere a config is not in
+    /// play: backup brokers, unit rigs).
+    pub fn memory(segment_bytes: u64) -> Self {
+        StoreParams {
+            mode: StoreMode::Memory,
+            dir: None,
+            segment_bytes,
+            wal_file_bytes: 64 << 20,
+            compact_min_segments: 4,
+            cold_cache_segments: 4,
+        }
+    }
+
+    /// The experiment config's `store_*` knobs, verbatim.
+    pub fn from_config(config: &ExperimentConfig) -> Self {
+        StoreParams {
+            mode: config.store_mode,
+            dir: if config.store_dir.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&config.store_dir))
+            },
+            segment_bytes: config.store_segment_bytes,
+            wal_file_bytes: config.store_wal_bytes,
+            compact_min_segments: config.store_compact_min_segments,
+            cold_cache_segments: config.store_cold_cache_segments,
+        }
+    }
+}
+
+/// Store-level counters, all zero for the memory backend. Exported as
+/// `broker.store_*` gauges after a run and printed by `bench store`.
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    /// WAL ring counters (durable only).
+    pub wal: WalStats,
+    /// Sealed tail segments flushed to cold files.
+    pub segments_flushed: u64,
+    /// Cold files merged away by compaction.
+    pub segments_compacted: u64,
+    /// Merge passes run.
+    pub compactions: u64,
+    /// Corrupt cold files dropped at open (torn flushes; WAL re-covers).
+    pub torn_segments: u64,
+    /// Cold files currently on disk.
+    pub cold_segments: u64,
+    /// Payload bytes currently in cold files.
+    pub cold_bytes: u64,
+    /// Segment loads that hit the decoded-chunk cache.
+    pub cold_cache_hits: u64,
+    /// Segment loads that went to disk.
+    pub cold_loads: u64,
+    /// Bloom filter consultations on the cold read path.
+    pub bloom_checks: u64,
+    /// Bloom negatives (in-range offset the file denies — corruption
+    /// tripwire; see [`bloom`]).
+    pub bloom_negatives: u64,
+}
+
+/// A partition-log storage backend.
+///
+/// Semantics are pinned to [`super::PartitionLog`]'s — offsets are dense
+/// chunk indices per partition, reads walk consecutive chunks under a
+/// byte budget and always yield at least one available chunk, reads
+/// below the retained `start` fail with [`TrimmedError`], and trimming
+/// advances in whole-segment units. The golden parity harness runs both
+/// backends over identical schedules and demands identical totals.
+///
+/// Read methods take `&self`: backends use interior mutability for
+/// caches and counters so the broker can consult the store while holding
+/// other borrows (cost model peeks, push-path gathers).
+///
+/// Partition-scoped methods panic on an unhosted partition — the broker
+/// validates with [`LogStore::contains`] at its RPC boundaries first,
+/// exactly as it did against the `HashMap` of logs.
+pub trait LogStore {
+    /// Which backend this is (registry echo, gauges).
+    fn mode(&self) -> StoreMode;
+
+    /// Hosted partitions, in deterministic (creation) order.
+    fn partitions(&self) -> Vec<PartitionId>;
+
+    /// Does this store host `p`?
+    fn contains(&self, p: PartitionId) -> bool;
+
+    /// Append one sealed chunk; returns its offset.
+    fn append(&mut self, p: PartitionId, chunk: Chunk) -> ChunkOffset;
+
+    /// Next offset to be written.
+    fn head(&self, p: PartitionId) -> ChunkOffset;
+
+    /// Oldest retained offset.
+    fn start(&self, p: PartitionId) -> ChunkOffset;
+
+    /// Chunks available at or past `offset`.
+    fn available_from(&self, p: PartitionId, offset: ChunkOffset) -> u64;
+
+    /// Read consecutive chunks from `offset` under `max_bytes` into
+    /// `out`; returns chunks taken. See `PartitionLog::read_into`.
+    fn read_into(
+        &self,
+        p: PartitionId,
+        offset: ChunkOffset,
+        max_bytes: u64,
+        out: &mut Vec<StampedChunk>,
+    ) -> Result<u64, TrimmedError>;
+
+    /// Cost-model peek: `(chunks, bytes)` a read would return.
+    fn peek_from(&self, p: PartitionId, offset: ChunkOffset, max_bytes: u64) -> (u64, u64);
+
+    /// Advance retention; returns bytes reclaimed (both tiers).
+    fn trim_below(&mut self, p: PartitionId, watermark: ChunkOffset) -> u64;
+
+    /// Bytes resident **in memory** across partitions (the footprint the
+    /// paper's retention bound is about; cold files are not counted).
+    fn resident_bytes(&self) -> u64;
+
+    /// Lifetime appended bytes (survives trimming and restarts).
+    fn total_appended_bytes(&self, p: PartitionId) -> u64;
+
+    /// Lifetime appended records (survives trimming and restarts).
+    fn total_appended_records(&self, p: PartitionId) -> u64;
+
+    /// Backend counters snapshot.
+    fn stats(&self) -> StoreStats;
+
+    /// [`LogStore::read_into`] into a fresh vector.
+    fn read_from(
+        &self,
+        p: PartitionId,
+        offset: ChunkOffset,
+        max_bytes: u64,
+    ) -> Result<Vec<StampedChunk>, TrimmedError> {
+        let mut out = Vec::new();
+        self.read_into(p, offset, max_bytes, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// A read-only view of one partition inside a [`LogStore`] — what
+/// `Broker::partition` hands to tests and examples, preserving the old
+/// `Option<&PartitionLog>` call shapes over the trait object.
+#[derive(Clone, Copy)]
+pub struct LogView<'a> {
+    store: &'a dyn LogStore,
+    p: PartitionId,
+}
+
+impl<'a> LogView<'a> {
+    pub(crate) fn new(store: &'a dyn LogStore, p: PartitionId) -> Self {
+        LogView { store, p }
+    }
+
+    pub fn head(&self) -> ChunkOffset {
+        self.store.head(self.p)
+    }
+
+    pub fn start(&self) -> ChunkOffset {
+        self.store.start(self.p)
+    }
+
+    pub fn available_from(&self, offset: ChunkOffset) -> u64 {
+        self.store.available_from(self.p, offset)
+    }
+
+    pub fn read_from(
+        &self,
+        offset: ChunkOffset,
+        max_bytes: u64,
+    ) -> Result<Vec<StampedChunk>, TrimmedError> {
+        self.store.read_from(self.p, offset, max_bytes)
+    }
+
+    pub fn peek_from(&self, offset: ChunkOffset, max_bytes: u64) -> (u64, u64) {
+        self.store.peek_from(self.p, offset, max_bytes)
+    }
+
+    pub fn total_appended_bytes(&self) -> u64 {
+        self.store.total_appended_bytes(self.p)
+    }
+
+    pub fn total_appended_records(&self) -> u64 {
+        self.store.total_appended_records(self.p)
+    }
+}

@@ -1,0 +1,109 @@
+//! Pluggable store construction, keyed by [`StoreMode`] — the storage
+//! twin of `SourceRegistry`/`WriterRegistry`: `cluster::launch` resolves
+//! the configured mode and never names a concrete backend type.
+
+use std::io;
+
+use crate::config::StoreMode;
+use crate::proto::PartitionId;
+
+use super::durable::DurableStore;
+use super::memory::MemoryStore;
+use super::{LogStore, StoreParams};
+
+/// Builds one [`LogStore`] backend for its mode.
+pub trait StoreFactory {
+    /// The mode this factory serves.
+    fn mode(&self) -> StoreMode;
+
+    /// Open the backend hosting `partitions`. Only the durable backend
+    /// can actually fail (directory I/O); memory is infallible.
+    fn open(
+        &self,
+        params: &StoreParams,
+        partitions: &[PartitionId],
+    ) -> io::Result<Box<dyn LogStore>>;
+}
+
+struct MemoryStoreFactory;
+
+impl StoreFactory for MemoryStoreFactory {
+    fn mode(&self) -> StoreMode {
+        StoreMode::Memory
+    }
+
+    fn open(
+        &self,
+        params: &StoreParams,
+        partitions: &[PartitionId],
+    ) -> io::Result<Box<dyn LogStore>> {
+        Ok(Box::new(MemoryStore::new(params.segment_bytes, partitions)))
+    }
+}
+
+struct DurableStoreFactory;
+
+impl StoreFactory for DurableStoreFactory {
+    fn mode(&self) -> StoreMode {
+        StoreMode::Durable
+    }
+
+    fn open(
+        &self,
+        params: &StoreParams,
+        partitions: &[PartitionId],
+    ) -> io::Result<Box<dyn LogStore>> {
+        Ok(Box::new(DurableStore::open(params, partitions)?))
+    }
+}
+
+/// The pluggable factory registry, keyed by [`StoreMode`].
+pub struct StoreRegistry {
+    factories: Vec<Box<dyn StoreFactory>>,
+}
+
+impl StoreRegistry {
+    /// An empty registry (plug in your own factories).
+    pub fn empty() -> Self {
+        Self { factories: Vec::new() }
+    }
+
+    /// The two built-in backends: memory, durable.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(Box::new(MemoryStoreFactory));
+        r.register(Box::new(DurableStoreFactory));
+        r
+    }
+
+    /// Register a factory; replaces any previous factory for the same mode.
+    pub fn register(&mut self, factory: Box<dyn StoreFactory>) {
+        if let Some(slot) = self.factories.iter_mut().find(|f| f.mode() == factory.mode()) {
+            *slot = factory;
+        } else {
+            self.factories.push(factory);
+        }
+    }
+
+    pub fn get(&self, mode: StoreMode) -> Option<&dyn StoreFactory> {
+        self.factories.iter().find(|f| f.mode() == mode).map(|b| b.as_ref())
+    }
+
+    /// Resolve a mode or die loudly — an unregistered mode is a config
+    /// error, not a silently storeless broker.
+    pub fn expect(&self, mode: StoreMode) -> &dyn StoreFactory {
+        self.get(mode)
+            .unwrap_or_else(|| panic!("no store factory registered for mode `{}`", mode.name()))
+    }
+
+    /// The modes currently registered (in registration order).
+    pub fn modes(&self) -> Vec<StoreMode> {
+        self.factories.iter().map(|f| f.mode()).collect()
+    }
+}
+
+impl Default for StoreRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}

@@ -1,0 +1,236 @@
+//! Immutable sorted segment files: the cold tier of the durable log.
+//!
+//! A segment file holds one contiguous, offset-sorted run of chunks
+//! `[base, end)` of a single partition — exactly one sealed in-memory
+//! segment at flush time, possibly a merged run after compaction. Files
+//! are written once and never modified; compaction replaces files, it
+//! never edits them. Each file embeds a [`Bloom`] over its chunk offsets
+//! (consulted before a cold load) and ends in an FNV-1a checksum over the
+//! whole image, so a torn flush is detected — and discarded — at scan
+//! time, while the WAL ring still holds every chunk the file lost.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic u32 | version u32 | partition u32 | base u64 | end u64 |
+//! data_bytes u64 | bloom: (hashes u32, bits u32, nwords u32, words...) |
+//! per chunk: records u32 | record_size u32 | payload_kind u8 | payload |
+//! fnv64 over everything above
+//! ```
+//!
+//! The chunk count is implicit: `end - base` (offsets are dense).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::proto::{Chunk, ChunkOffset, PartitionId, Payload};
+
+use super::bloom::Bloom;
+use super::codec::{fnv64, put_u32, put_u64, put_u8, Cursor};
+
+const MAGIC: u32 = 0x5A45_5347; // "ZSEG"
+const VERSION: u32 = 1;
+
+const PAYLOAD_SIM: u8 = 0;
+const PAYLOAD_REAL: u8 = 1;
+
+/// An open cold segment: everything but the chunks themselves, which are
+/// loaded (and cached) on demand by the read path.
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    pub partition: PartitionId,
+    /// Offset of the first chunk.
+    pub base: ChunkOffset,
+    /// One past the last chunk.
+    pub end: ChunkOffset,
+    /// Total payload bytes across the chunks.
+    pub data_bytes: u64,
+    /// Offset membership filter, checked before any cold load.
+    pub bloom: Bloom,
+    pub path: PathBuf,
+}
+
+impl SegmentMeta {
+    pub fn chunks(&self) -> u64 {
+        self.end - self.base
+    }
+
+    pub fn holds(&self, offset: ChunkOffset) -> bool {
+        self.base <= offset && offset < self.end
+    }
+}
+
+fn file_name(partition: PartitionId, base: ChunkOffset, end: ChunkOffset) -> String {
+    format!("seg-p{}-{base:016x}-{end:016x}.seg", partition.0)
+}
+
+fn encode_chunk(chunk: &Chunk, out: &mut Vec<u8>) {
+    put_u32(out, chunk.records);
+    put_u32(out, chunk.record_size);
+    match &chunk.payload {
+        Payload::Real(data) => {
+            put_u8(out, PAYLOAD_REAL);
+            out.extend_from_slice(data);
+        }
+        Payload::Sim => put_u8(out, PAYLOAD_SIM),
+    }
+}
+
+fn decode_chunk(cur: &mut Cursor<'_>) -> Option<Chunk> {
+    let records = cur.u32()?;
+    let record_size = cur.u32()?;
+    match cur.u8()? {
+        PAYLOAD_REAL => {
+            let data = cur.take(records as usize * record_size as usize)?.to_vec();
+            // The cold tier's single materialisation point: one buffer per
+            // chunk per segment load; every reader of the cached segment
+            // shares the `Rc` from here on.
+            Some(Chunk::real(records, record_size, Rc::new(data)))
+        }
+        PAYLOAD_SIM => Some(Chunk::sim(records, record_size)),
+        _ => None,
+    }
+}
+
+/// Write `chunks` (the run `[base, base + chunks.len())`) as one segment
+/// file under `dir`. Builds the bloom, frames every chunk, checksums the
+/// image and writes it in one shot.
+pub(crate) fn write_segment(
+    dir: &Path,
+    partition: PartitionId,
+    base: ChunkOffset,
+    chunks: &[Chunk],
+) -> io::Result<SegmentMeta> {
+    assert!(!chunks.is_empty(), "segments are never empty");
+    let end = base + chunks.len() as u64;
+    let data_bytes: u64 = chunks.iter().map(Chunk::bytes).sum();
+
+    let mut bloom = Bloom::with_capacity(chunks.len() as u64);
+    for off in base..end {
+        bloom.insert(off);
+    }
+
+    let mut image = Vec::new();
+    put_u32(&mut image, MAGIC);
+    put_u32(&mut image, VERSION);
+    put_u32(&mut image, partition.0 as u32);
+    put_u64(&mut image, base);
+    put_u64(&mut image, end);
+    put_u64(&mut image, data_bytes);
+    let (bits, hashes, words) = bloom.parts();
+    put_u32(&mut image, hashes);
+    put_u32(&mut image, bits);
+    put_u32(&mut image, words.len() as u32);
+    for &w in words {
+        put_u64(&mut image, w);
+    }
+    for chunk in chunks {
+        encode_chunk(chunk, &mut image);
+    }
+    let sum = fnv64(&image);
+    put_u64(&mut image, sum);
+
+    let path = dir.join(file_name(partition, base, end));
+    fs::write(&path, &image)?;
+    Ok(SegmentMeta { partition, base, end, data_bytes, bloom, path })
+}
+
+/// Parse a segment image's header + bloom; returns the meta and a cursor
+/// positioned at the first chunk. `None` on any structural mismatch.
+fn parse_header<'a>(bytes: &'a [u8], path: &Path) -> Option<(SegmentMeta, Cursor<'a>)> {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let (image, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let sum = u64::from_le_bytes(sum_bytes.try_into().expect("8 bytes"));
+    if fnv64(image) != sum {
+        return None;
+    }
+    let mut cur = Cursor::new(image);
+    if cur.u32()? != MAGIC || cur.u32()? != VERSION {
+        return None;
+    }
+    let partition = PartitionId(cur.u32()? as usize);
+    let base = cur.u64()?;
+    let end = cur.u64()?;
+    if end <= base {
+        return None;
+    }
+    let data_bytes = cur.u64()?;
+    let hashes = cur.u32()?;
+    let bits = cur.u32()?;
+    let nwords = cur.u32()? as usize;
+    let mut words = Vec::with_capacity(nwords);
+    for _ in 0..nwords {
+        words.push(cur.u64()?);
+    }
+    let bloom = Bloom::from_parts(bits, hashes, words)?;
+    let meta =
+        SegmentMeta { partition, base, end, data_bytes, bloom, path: path.to_path_buf() };
+    Some((meta, cur))
+}
+
+/// Open one segment file's metadata (header + bloom; checksum verified
+/// over the full image). `None` means torn/corrupt.
+fn open_segment(path: &Path) -> io::Result<Option<SegmentMeta>> {
+    let bytes = fs::read(path)?;
+    Ok(parse_header(&bytes, path).map(|(meta, _)| meta))
+}
+
+/// Scan `dir` for segment files. Corrupt files (a flush torn by a crash)
+/// are deleted — their chunks are still in the un-pruned WAL — and
+/// counted in the second return. Metas come back sorted by partition,
+/// then base offset.
+pub(crate) fn scan_dir(dir: &Path) -> io::Result<(Vec<SegmentMeta>, u64)> {
+    let mut metas = Vec::new();
+    let mut dropped = 0u64;
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with("seg-") || !name.ends_with(".seg") {
+            continue;
+        }
+        let path = entry.path();
+        match open_segment(&path)? {
+            Some(meta) => metas.push(meta),
+            None => {
+                fs::remove_file(&path)?;
+                dropped += 1;
+            }
+        }
+    }
+    // Widest file first among equal bases: a merged file shares its base
+    // with its first source, and the open-time containment dedup keeps
+    // whichever comes first.
+    metas.sort_by_key(|m| (m.partition, m.base, std::cmp::Reverse(m.end)));
+    Ok((metas, dropped))
+}
+
+/// Load a segment's chunks (the cold read path's cache-miss branch).
+/// Re-verifies the checksum — the file may have rotted since the scan.
+pub(crate) fn load_chunks(meta: &SegmentMeta) -> io::Result<Vec<Chunk>> {
+    let bytes = fs::read(&meta.path)?;
+    let Some((parsed, mut cur)) = parse_header(&bytes, &meta.path) else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("segment {} failed checksum on load", meta.path.display()),
+        ));
+    };
+    debug_assert_eq!(parsed.base, meta.base);
+    debug_assert_eq!(parsed.end, meta.end);
+    let n = parsed.chunks() as usize;
+    let mut chunks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let Some(chunk) = decode_chunk(&mut cur) else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("segment {} truncated chunk run", meta.path.display()),
+            ));
+        };
+        chunks.push(chunk);
+    }
+    Ok(chunks)
+}

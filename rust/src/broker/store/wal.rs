@@ -1,0 +1,365 @@
+//! Write-ahead log ring: the durability layer under the hot in-memory tail.
+//!
+//! Every append the durable store accepts is framed into the active WAL
+//! file *before* it lands in the in-memory tail, so a crash between the
+//! two loses nothing. The WAL is a **ring of files**: when the active file
+//! passes the configured size it is sealed and a fresh one started, and
+//! sealed files are pruned from the front as soon as every append they
+//! hold has been flushed into a cold segment file — the cold tier, not
+//! the WAL, is the long-term home of the data, so the ring stays within a
+//! few files of the rotation size regardless of run length.
+//!
+//! ## Record framing
+//!
+//! Each record is a little-endian frame `[len: u32][body][fnv64(body)]`.
+//! Three body kinds:
+//!
+//! * `APPEND` — partition, chunk offset, record framing, and the payload
+//!   bytes (real plane) or just the accounting (sim plane);
+//! * `TRIM` — a retention floor advanced past `floor`; best-effort (a lost
+//!   trim replays as conservative over-retention, never data loss);
+//! * `TOTALS` — a per-partition snapshot of lifetime appended bytes and
+//!   records, written at the head of every file after the first. Replay is
+//!   *set-then-add in file order*: the newest snapshot overrides whatever
+//!   older (possibly pruned) files contributed, which is what makes the
+//!   lifetime counters exact even though the ring drops history.
+//!
+//! A torn or checksum-failed record ends replay of its file cleanly — the
+//! partial tail of a crashed write is expected, counted
+//! ([`WalStats::torn_tails`]), and never propagates garbage.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::proto::{Chunk, ChunkOffset, PartitionId, Payload};
+
+use super::codec::{fnv64, put_u32, put_u64, put_u8, Cursor};
+
+const KIND_APPEND: u8 = 1;
+const KIND_TRIM: u8 = 2;
+const KIND_TOTALS: u8 = 3;
+
+const PAYLOAD_SIM: u8 = 0;
+const PAYLOAD_REAL: u8 = 1;
+
+/// Frame overhead around a record body: length prefix + checksum.
+#[cfg(test)]
+const FRAME_OVERHEAD: u64 = 4 + 8;
+
+/// WAL ring counters (exported through the broker's store gauges).
+#[derive(Debug, Clone, Default)]
+pub struct WalStats {
+    /// Append records written this incarnation.
+    pub records: u64,
+    /// Frame bytes written this incarnation (all record kinds).
+    pub bytes: u64,
+    /// Trim records written this incarnation.
+    pub trims: u64,
+    /// WAL files created (the first active file counts).
+    pub files_created: u64,
+    /// Sealed files pruned after their appends reached the cold tier.
+    pub files_pruned: u64,
+    /// Append records decoded during open-time replay.
+    pub replayed_records: u64,
+    /// Replayed appends skipped because a cold segment already held them.
+    pub replayed_skipped: u64,
+    /// Files whose replay ended at a torn or corrupt record.
+    pub torn_tails: u64,
+}
+
+/// One durable log record.
+#[derive(Debug, Clone)]
+pub(crate) enum WalRecord {
+    /// A chunk appended at `offset` of `partition`.
+    Append { partition: PartitionId, offset: ChunkOffset, chunk: Chunk },
+    /// Retention advanced: everything below `floor` is trimmable.
+    Trim { partition: PartitionId, floor: ChunkOffset },
+    /// Lifetime appended totals snapshot (see module docs on replay).
+    Totals { partition: PartitionId, bytes: u64, records: u64 },
+}
+
+fn encode_body(rec: &WalRecord, out: &mut Vec<u8>) {
+    match rec {
+        WalRecord::Append { partition, offset, chunk } => {
+            put_u8(out, KIND_APPEND);
+            put_u32(out, partition.0 as u32);
+            put_u64(out, *offset);
+            put_u32(out, chunk.records);
+            put_u32(out, chunk.record_size);
+            match &chunk.payload {
+                Payload::Real(data) => {
+                    put_u8(out, PAYLOAD_REAL);
+                    out.extend_from_slice(data);
+                }
+                Payload::Sim => put_u8(out, PAYLOAD_SIM),
+            }
+        }
+        WalRecord::Trim { partition, floor } => {
+            put_u8(out, KIND_TRIM);
+            put_u32(out, partition.0 as u32);
+            put_u64(out, *floor);
+        }
+        WalRecord::Totals { partition, bytes, records } => {
+            put_u8(out, KIND_TOTALS);
+            put_u32(out, partition.0 as u32);
+            put_u64(out, *bytes);
+            put_u64(out, *records);
+        }
+    }
+}
+
+fn decode_body(body: &[u8]) -> Option<WalRecord> {
+    let mut cur = Cursor::new(body);
+    match cur.u8()? {
+        KIND_APPEND => {
+            let partition = PartitionId(cur.u32()? as usize);
+            let offset = cur.u64()?;
+            let records = cur.u32()?;
+            let record_size = cur.u32()?;
+            let chunk = match cur.u8()? {
+                PAYLOAD_REAL => {
+                    let len = records as usize * record_size as usize;
+                    let data = cur.take(len)?.to_vec();
+                    // One materialisation per replayed real chunk — the
+                    // recovery-path counterpart of the producer's single
+                    // `Chunk::real`; everything downstream shares the `Rc`.
+                    Chunk::real(records, record_size, Rc::new(data))
+                }
+                PAYLOAD_SIM => Chunk::sim(records, record_size),
+                _ => return None,
+            };
+            if cur.remaining() != 0 {
+                return None;
+            }
+            Some(WalRecord::Append { partition, offset, chunk })
+        }
+        KIND_TRIM => {
+            let partition = PartitionId(cur.u32()? as usize);
+            let floor = cur.u64()?;
+            (cur.remaining() == 0).then_some(WalRecord::Trim { partition, floor })
+        }
+        KIND_TOTALS => {
+            let partition = PartitionId(cur.u32()? as usize);
+            let bytes = cur.u64()?;
+            let records = cur.u64()?;
+            (cur.remaining() == 0).then_some(WalRecord::Totals { partition, bytes, records })
+        }
+        _ => None,
+    }
+}
+
+/// Encode a full frame: `[len][body][checksum]`.
+fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let mut body = Vec::new();
+    encode_body(rec, &mut body);
+    let mut frame = Vec::with_capacity(4 + body.len() + 8);
+    put_u32(&mut frame, body.len() as u32);
+    frame.extend_from_slice(&body);
+    put_u64(&mut frame, fnv64(&body));
+    frame
+}
+
+/// Decode every intact frame in a file image. The bool is `true` when the
+/// file ended in a torn or corrupt record (decode stopped early).
+fn decode_file(bytes: &[u8]) -> (Vec<WalRecord>, bool) {
+    let mut out = Vec::new();
+    let mut cur = Cursor::new(bytes);
+    while cur.remaining() > 0 {
+        let Some(len) = cur.u32() else { return (out, true) };
+        let Some(body) = cur.take(len as usize) else { return (out, true) };
+        let Some(sum) = cur.u64() else { return (out, true) };
+        if fnv64(body) != sum {
+            return (out, true);
+        }
+        let Some(rec) = decode_body(body) else { return (out, true) };
+        out.push(rec);
+    }
+    (out, false)
+}
+
+fn file_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("wal-{seq:08}.log"))
+}
+
+/// Parse `wal-<seq>.log` back to its sequence number.
+fn parse_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("wal-")?.strip_suffix(".log")?.parse().ok()
+}
+
+/// A sealed (non-active) file still on disk, with the highest append
+/// offset it holds per partition — the prune condition's input.
+#[derive(Debug)]
+struct SealedWal {
+    seq: u64,
+    max_off: HashMap<PartitionId, ChunkOffset>,
+}
+
+/// The ring of WAL files: one active writer plus sealed predecessors
+/// awaiting prune. Writes are flushed to the file per append — the crash
+/// model is process death, matching the paper's node-failure experiments
+/// (per-record `fsync` group-commit tuning is out of scope for the sim).
+#[derive(Debug)]
+pub(crate) struct WalRing {
+    dir: PathBuf,
+    rotate_bytes: u64,
+    /// Sequence number of the active file.
+    seq: u64,
+    writer: BufWriter<File>,
+    active_bytes: u64,
+    /// Highest append offset per partition in the active file.
+    active_max: HashMap<PartitionId, ChunkOffset>,
+    sealed: VecDeque<SealedWal>,
+    stats: WalStats,
+}
+
+impl WalRing {
+    /// Open the ring under `dir`, replaying whatever files a previous
+    /// incarnation left. Returns the decoded records **in write order**
+    /// for the caller to apply (set-then-add for totals, rebuild for
+    /// appends), then starts a fresh active file — the caller should write
+    /// a post-replay totals snapshot into it next.
+    pub fn open(dir: &Path, rotate_bytes: u64) -> io::Result<(Self, Vec<WalRecord>)> {
+        assert!(rotate_bytes > 0, "wal rotation size must be positive");
+        fs::create_dir_all(dir)?;
+        let mut seqs: Vec<u64> = fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| parse_seq(e.file_name().to_str()?))
+            .collect();
+        seqs.sort_unstable();
+
+        let mut stats = WalStats::default();
+        let mut sealed = VecDeque::new();
+        let mut replay = Vec::new();
+        for &seq in &seqs {
+            let bytes = fs::read(file_path(dir, seq))?;
+            let (records, torn) = decode_file(&bytes);
+            if torn {
+                stats.torn_tails += 1;
+            }
+            let mut max_off = HashMap::new();
+            for rec in &records {
+                if let WalRecord::Append { partition, offset, .. } = rec {
+                    let e = max_off.entry(*partition).or_insert(*offset);
+                    *e = (*e).max(*offset);
+                    stats.replayed_records += 1;
+                }
+            }
+            sealed.push_back(SealedWal { seq, max_off });
+            replay.extend(records);
+        }
+
+        let seq = seqs.last().map_or(0, |s| s + 1);
+        let writer = BufWriter::new(File::create(file_path(dir, seq))?);
+        stats.files_created += 1;
+        let ring = WalRing {
+            dir: dir.to_path_buf(),
+            rotate_bytes,
+            seq,
+            writer,
+            active_bytes: 0,
+            active_max: HashMap::new(),
+            sealed,
+            stats,
+        };
+        Ok((ring, replay))
+    }
+
+    /// Write one record, rotating first when it would push the active file
+    /// past the rotation size. On rotation, `snapshot()` supplies the
+    /// totals records written at the head of the fresh file **before**
+    /// `rec` — the snapshot must therefore describe the state *excluding*
+    /// the pending record.
+    pub fn append(
+        &mut self,
+        rec: &WalRecord,
+        snapshot: impl FnOnce() -> Vec<WalRecord>,
+    ) -> io::Result<()> {
+        let frame = encode_frame(rec);
+        if self.active_bytes > 0 && self.active_bytes + frame.len() as u64 > self.rotate_bytes {
+            self.rotate()?;
+            for snap in snapshot() {
+                let f = encode_frame(&snap);
+                self.write_frame(&f, &snap)?;
+            }
+        }
+        self.write_frame(&frame, rec)?;
+        self.writer.flush()
+    }
+
+    fn write_frame(&mut self, frame: &[u8], rec: &WalRecord) -> io::Result<()> {
+        self.writer.write_all(frame)?;
+        self.active_bytes += frame.len() as u64;
+        self.stats.bytes += frame.len() as u64;
+        match rec {
+            WalRecord::Append { partition, offset, .. } => {
+                self.stats.records += 1;
+                let e = self.active_max.entry(*partition).or_insert(*offset);
+                *e = (*e).max(*offset);
+            }
+            WalRecord::Trim { .. } => self.stats.trims += 1,
+            WalRecord::Totals { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Seal the active file and start the next one.
+    fn rotate(&mut self) -> io::Result<()> {
+        self.writer.flush()?;
+        self.sealed.push_back(SealedWal {
+            seq: self.seq,
+            max_off: std::mem::take(&mut self.active_max),
+        });
+        self.seq += 1;
+        self.writer = BufWriter::new(File::create(file_path(&self.dir, self.seq))?);
+        self.active_bytes = 0;
+        self.stats.files_created += 1;
+        Ok(())
+    }
+
+    /// Drop sealed files from the front of the ring whose every append
+    /// now lives in a cold segment. `flushed` maps each partition to its
+    /// cold-tier end (first offset *not* yet flushed); a file goes when
+    /// all its per-partition maxima sit strictly below those floors.
+    /// Returns the number of files removed.
+    pub fn prune(&mut self, flushed: &HashMap<PartitionId, ChunkOffset>) -> io::Result<u64> {
+        let mut pruned = 0;
+        while let Some(front) = self.sealed.front() {
+            let covered = front
+                .max_off
+                .iter()
+                .all(|(p, &off)| flushed.get(p).is_some_and(|&floor| off < floor));
+            if !covered {
+                break;
+            }
+            let seq = front.seq;
+            fs::remove_file(file_path(&self.dir, seq))?;
+            self.sealed.pop_front();
+            pruned += 1;
+        }
+        self.stats.files_pruned += pruned;
+        Ok(pruned)
+    }
+
+    /// Files on disk (sealed + active).
+    pub fn files_retained(&self) -> usize {
+        self.sealed.len() + 1
+    }
+
+    /// An upper bound on a frame for `chunk` (sizing heuristics in tests).
+    #[cfg(test)]
+    pub fn frame_bytes(chunk: &Chunk) -> u64 {
+        let payload = if chunk.payload.is_real() { chunk.bytes() } else { 0 };
+        FRAME_OVERHEAD + 1 + 4 + 8 + 4 + 4 + 1 + payload
+    }
+
+    pub fn stats(&self) -> WalStats {
+        self.stats.clone()
+    }
+
+    pub fn stats_mut(&mut self) -> &mut WalStats {
+        &mut self.stats
+    }
+}

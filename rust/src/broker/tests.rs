@@ -168,7 +168,7 @@ fn rig(params_fn: impl FnOnce(&mut BrokerParams)) -> Rig {
         node: 0,
         worker_cores: 4,
         push_threads: 1,
-        segment_bytes: 8 * 1024 * 1024,
+        store: StoreParams::memory(8 * 1024 * 1024),
         partitions: (0..4).map(PartitionId).collect(),
         backup: None,
         is_backup: false,
@@ -348,7 +348,7 @@ fn replicated_append_waits_for_backup() {
         node: 2,
         worker_cores: 4,
         push_threads: 0,
-        segment_bytes: 8 << 20,
+        store: StoreParams::memory(8 << 20),
         partitions: vec![],
         backup: None,
         is_backup: true,
@@ -365,7 +365,7 @@ fn replicated_append_waits_for_backup() {
         node: 0,
         worker_cores: 4,
         push_threads: 0,
-        segment_bytes: 8 << 20,
+        store: StoreParams::memory(8 << 20),
         partitions: vec![PartitionId(0)],
         backup: Some((backup, 2)),
         is_backup: false,
@@ -841,7 +841,7 @@ fn replicated_seal_releases_only_after_backup_ack() {
             node: 2,
             worker_cores: 4,
             push_threads: 0,
-            segment_bytes: 8 << 20,
+            store: StoreParams::memory(8 << 20),
             partitions: vec![],
             backup: None,
             is_backup: true,
@@ -857,7 +857,7 @@ fn replicated_seal_releases_only_after_backup_ack() {
             node: 0,
             worker_cores: 4,
             push_threads: 0,
-            segment_bytes: 8 << 20,
+            store: StoreParams::memory(8 << 20),
             partitions: vec![PartitionId(0)],
             backup: Some((backup, 2)),
             is_backup: false,
@@ -935,7 +935,7 @@ fn watermark_trim_leaves_laggards_behind() {
     // sealed segments; the throttled trim (every 64 reads) then drops
     // them, and a pull from offset 0 afterwards reports the trim instead
     // of silently rereading.
-    let mut r = rig(|p| p.segment_bytes = 1000);
+    let mut r = rig(|p| p.store.segment_bytes = 1000);
     // 200 chunks on partition 0, appended in 4 RPCs of 50 chunks each.
     for i in 0..4u64 {
         r.engine.schedule(
@@ -1002,7 +1002,7 @@ fn committed_checkpoint_floors_retention() {
     // Same layout as the laggard test, but a checkpoint commit at offset
     // 100 pins retention below the fast consumer's watermark (150): the
     // replay data in [100, 150) must survive trimming.
-    let mut r = rig(|p| p.segment_bytes = 1000);
+    let mut r = rig(|p| p.store.segment_bytes = 1000);
     r.engine.schedule(
         0,
         r.broker,

@@ -11,17 +11,19 @@
 //! workload (Listings 1 & 2), wires credits, registers everything in the
 //! task registry and returns a [`Cluster`] ready to `run`.
 //!
-//! Sources are built through the [`SourceRegistry`] and producers through
-//! the [`WriterRegistry`]: the launcher resolves `config.mode` to a
-//! [`crate::source::SourceFactory`] and `config.write_mode` to a
-//! [`crate::producer::WriterFactory`], and never names a concrete source
-//! or producer type — plug a new ingestion mechanism in by registering a
-//! factory and launching with [`launch_with`].
+//! Sources are built through the [`SourceRegistry`], producers through
+//! the [`WriterRegistry`], and the broker's log storage through the
+//! [`StoreRegistry`]: the launcher resolves `config.mode` to a
+//! [`crate::source::SourceFactory`], `config.write_mode` to a
+//! [`crate::producer::WriterFactory`] and `config.store_mode` to a
+//! [`crate::broker::StoreFactory`], and never names a concrete source,
+//! producer or storage type — plug a new mechanism in by registering a
+//! factory and launching with [`launch_with`] / [`launch_full`].
 
 #[cfg(test)]
 mod tests;
 
-use crate::broker::{Broker, BrokerParams, DEFAULT_SEGMENT_BYTES};
+use crate::broker::{Broker, BrokerParams, StoreParams, StoreRegistry, DEFAULT_SEGMENT_BYTES};
 use crate::checkpoint::{
     CheckpointControl, CheckpointCoordinator, CheckpointStats, CoordinatorParams,
 };
@@ -103,12 +105,30 @@ pub fn launch(config: &ExperimentConfig, compute: Option<SharedCompute>) -> Clus
     launch_with(&SourceRegistry::builtin(), &WriterRegistry::builtin(), config, compute)
 }
 
-/// Build a cluster resolving `config.mode` / `config.write_mode` against
-/// caller-supplied registries — the pluggable path for out-of-tree source
-/// or writer modes.
+/// [`launch_full`] with the built-in store backends — the pluggable path
+/// for out-of-tree source or writer modes.
 pub fn launch_with(
     source_registry: &SourceRegistry,
     writer_registry: &WriterRegistry,
+    config: &ExperimentConfig,
+    compute: Option<SharedCompute>,
+) -> Cluster {
+    launch_full(
+        source_registry,
+        writer_registry,
+        &StoreRegistry::builtin(),
+        config,
+        compute,
+    )
+}
+
+/// Build a cluster resolving `config.mode` / `config.write_mode` /
+/// `config.store_mode` against caller-supplied registries — the fully
+/// pluggable path.
+pub fn launch_full(
+    source_registry: &SourceRegistry,
+    writer_registry: &WriterRegistry,
+    store_registry: &StoreRegistry,
     config: &ExperimentConfig,
     compute: Option<SharedCompute>,
 ) -> Cluster {
@@ -127,13 +147,16 @@ pub fn launch_with(
     let checkpoint = (config.checkpoint_interval_ms > 0).then(CheckpointControl::shared);
 
     // ---- brokers -------------------------------------------------------
+    // The backup holds only the replication mirror — an in-memory log
+    // regardless of the primary's backend (the paper replicates for
+    // availability; durability is the primary store's job).
     let backup = (config.replication == 2).then(|| {
         engine.add_actor(Box::new(Broker::new(
             BrokerParams {
                 node: NODE_BACKUP,
                 worker_cores: config.broker_cores,
                 push_threads: 0,
-                segment_bytes: DEFAULT_SEGMENT_BYTES,
+                store: StoreParams::memory(DEFAULT_SEGMENT_BYTES),
                 partitions: Vec::new(),
                 backup: None,
                 is_backup: true,
@@ -147,17 +170,23 @@ pub fn launch_with(
     });
     let push_threads = factory.broker_push_threads();
     let worker_cores = (config.broker_cores - push_threads).max(1);
-    let broker = engine.add_actor(Box::new(Broker::new(
+    let store_params = StoreParams::from_config(config);
+    let log_store = store_registry
+        .expect(store_params.mode)
+        .open(&store_params, &partitions)
+        .unwrap_or_else(|e| panic!("opening `{}` store failed: {e}", store_params.mode.name()));
+    let broker = engine.add_actor(Box::new(Broker::with_store(
         BrokerParams {
             node: NODE_COLOCATED,
             worker_cores,
             push_threads,
-            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            store: store_params,
             partitions: partitions.clone(),
             backup: backup.map(|b| (b, NODE_BACKUP)),
             is_backup: false,
             cost: config.cost.clone(),
         },
+        log_store,
         net.clone(),
         store.clone(),
         metrics.clone(),

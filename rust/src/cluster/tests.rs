@@ -112,6 +112,60 @@ fn unregistered_write_mode_is_a_hard_error() {
 }
 
 #[test]
+#[should_panic(expected = "no store factory registered")]
+fn unregistered_store_mode_is_a_hard_error() {
+    let config = cfg(&["mode=push", "np=1", "nc=1", "ns=2", "store_mode=durable"]);
+    launch_full(
+        &SourceRegistry::builtin(),
+        &WriterRegistry::builtin(),
+        &StoreRegistry::empty(),
+        &config,
+        None,
+    );
+}
+
+#[test]
+fn durable_store_cluster_runs_and_exports_gauges() {
+    let summary = launch(
+        &cfg(&[
+            "mode=pull",
+            "np=2",
+            "nc=2",
+            "ns=4",
+            "store_mode=durable",
+            "store_segment_bytes=256KiB",
+        ]),
+        None,
+    )
+    .run();
+    assert!(summary.records_consumed > 0);
+    let wal = summary.report.gauge("broker.store_wal_records").expect("durable gauges on");
+    assert!(wal > 0.0, "every append hit the WAL");
+    assert!(
+        summary.report.gauge("broker.store_segments_flushed").expect("gauge") > 0.0,
+        "sealed segments reached the cold tier"
+    );
+}
+
+#[test]
+fn durable_store_matches_memory_on_bounded_totals() {
+    // The cluster-level golden check (one cell; the full source × write
+    // matrix lives in tests/durable_store.rs): identical bounded totals
+    // whichever backend holds the log.
+    let mk = |store_kv: &str| {
+        let mut c = cfg(&["mode=push", "np=2", "nc=2", "ns=4", store_kv]);
+        c.corpus_records = 10_000;
+        c.duration_secs = 20;
+        c
+    };
+    let mem = launch(&mk("store_mode=memory"), None).run();
+    let dur = launch(&mk("store_mode=durable"), None).run();
+    assert_eq!(mem.records_produced, dur.records_produced, "producers unaffected");
+    assert_eq!(mem.records_consumed, dur.records_consumed, "consumers unaffected");
+    assert_eq!(dur.records_consumed, dur.records_produced, "bounded stream drains");
+}
+
+#[test]
 fn all_builtin_write_modes_run_through_the_registry() {
     for wmode in WriteMode::ALL {
         let kv = format!("write_mode={}", wmode.name());

@@ -181,6 +181,36 @@ impl DataPlane {
     }
 }
 
+/// Which log-storage backend the broker opens (see `broker::store`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StoreMode {
+    /// Pure in-memory partition logs — the sim default (pre-subsystem
+    /// behavior, retention is the only footprint bound).
+    Memory,
+    /// Durable tiered log: WAL ring + in-memory tail + cold segment
+    /// files with background compaction. Survives broker restarts.
+    Durable,
+}
+
+impl StoreMode {
+    pub const ALL: [StoreMode; 2] = [Self::Memory, Self::Durable];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "memory" | "mem" => Some(Self::Memory),
+            "durable" | "disk" | "tiered" => Some(Self::Durable),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Memory => "memory",
+            Self::Durable => "durable",
+        }
+    }
+}
+
 /// One experiment = the full Table I vector + run controls.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -270,6 +300,21 @@ pub struct ExperimentConfig {
     pub fault_at_secs: u64,
     /// Fault injection: what the fault kills.
     pub fault_kind: FaultKind,
+    /// Broker log storage backend.
+    pub store_mode: StoreMode,
+    /// Durable store root directory; empty = an ephemeral per-process
+    /// temp directory (removed when the run ends). Point it somewhere
+    /// real to survive restarts (the crash-recovery tests do).
+    pub store_dir: String,
+    /// Log segment capacity (bytes): the in-memory segment size for both
+    /// backends, and the durable store's cold flush unit.
+    pub store_segment_bytes: u64,
+    /// Durable: WAL ring file rotation size (bytes).
+    pub store_wal_bytes: u64,
+    /// Durable: cold files per partition that trigger a compaction merge.
+    pub store_compact_min_segments: usize,
+    /// Durable: decoded cold segments cached for readers.
+    pub store_cold_cache_segments: usize,
     /// RNG seed.
     pub seed: u64,
     /// Cost model.
@@ -315,6 +360,12 @@ impl Default for ExperimentConfig {
             checkpoint_interval_ms: 0,
             fault_at_secs: 0,
             fault_kind: FaultKind::Worker,
+            store_mode: StoreMode::Memory,
+            store_dir: String::new(),
+            store_segment_bytes: 8 << 20,
+            store_wal_bytes: 64 << 20,
+            store_compact_min_segments: 4,
+            store_cold_cache_segments: 4,
             seed: 0x5E77A_57F3A,
             cost: CostModel::default(),
         }
@@ -409,6 +460,21 @@ impl ExperimentConfig {
                     "fault_at_secs={} must fall inside the run (duration {} s)",
                     self.fault_at_secs, self.duration_secs
                 ));
+            }
+        }
+        if self.store_segment_bytes == 0 {
+            return Err("store_segment_bytes must be positive".into());
+        }
+        if self.store_mode == StoreMode::Durable {
+            if self.store_wal_bytes == 0 {
+                return Err("store_wal_bytes must be positive".into());
+            }
+            if self.store_compact_min_segments < 2 {
+                return Err("store_compact_min_segments must be >= 2 (a merge needs two files)"
+                    .into());
+            }
+            if self.store_cold_cache_segments == 0 {
+                return Err("store_cold_cache_segments must be positive".into());
             }
         }
         Ok(())
@@ -516,6 +582,24 @@ impl ExperimentConfig {
             }
             "fault_kind" => {
                 self.fault_kind = FaultKind::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "store_mode" => {
+                self.store_mode = StoreMode::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "store_dir" => self.store_dir = value.to_string(),
+            "store_segment_bytes" => {
+                self.store_segment_bytes =
+                    parse::parse_size(value).ok_or_else(|| bad(key, value))? as u64
+            }
+            "store_wal_bytes" => {
+                self.store_wal_bytes =
+                    parse::parse_size(value).ok_or_else(|| bad(key, value))? as u64
+            }
+            "store_compact_min_segments" => {
+                self.store_compact_min_segments = value.parse().map_err(|_| bad(key, value))?
+            }
+            "store_cold_cache_segments" => {
+                self.store_cold_cache_segments = value.parse().map_err(|_| bad(key, value))?
             }
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             _ if key.starts_with("cost.") => self.cost.apply_one(&key[5..], value)?,

@@ -261,6 +261,64 @@ mod experiment {
     }
 
     #[test]
+    fn store_config_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.store_mode, StoreMode::Memory, "memory is the sim default");
+        assert!(cfg.store_dir.is_empty(), "ephemeral dir is the default");
+        let kv = parse_overrides([
+            "store_mode=durable",
+            "store_dir=/tmp/zs-store",
+            "store_segment_bytes=1m",
+            "store_wal_bytes=8m",
+            "store_compact_min_segments=6",
+            "store_cold_cache_segments=2",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.store_mode, StoreMode::Durable);
+        assert_eq!(cfg.store_dir, "/tmp/zs-store");
+        assert_eq!(cfg.store_segment_bytes, 1 << 20);
+        assert_eq!(cfg.store_wal_bytes, 8 << 20);
+        assert_eq!(cfg.store_compact_min_segments, 6);
+        assert_eq!(cfg.store_cold_cache_segments, 2);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn store_mode_names_round_trip() {
+        for mode in StoreMode::ALL {
+            assert_eq!(StoreMode::parse(mode.name()), Some(mode), "{}", mode.name());
+        }
+        assert_eq!(StoreMode::parse("mem"), Some(StoreMode::Memory));
+        assert_eq!(StoreMode::parse("disk"), Some(StoreMode::Durable));
+        assert_eq!(StoreMode::parse("tiered"), Some(StoreMode::Durable));
+        assert_eq!(StoreMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_store_params() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.store_segment_bytes = 0;
+        assert!(cfg.validate().is_err(), "segment size applies to both backends");
+
+        // The durable-only knobs are not validated under memory mode…
+        let mut cfg = ExperimentConfig::default();
+        cfg.store_wal_bytes = 0;
+        cfg.store_compact_min_segments = 1;
+        cfg.store_cold_cache_segments = 0;
+        cfg.validate().unwrap();
+        // …but reject once the durable backend is selected.
+        cfg.store_mode = StoreMode::Durable;
+        assert!(cfg.validate().is_err());
+        cfg.store_wal_bytes = 8 << 20;
+        assert!(cfg.validate().is_err(), "compact_min_segments < 2 rejected");
+        cfg.store_compact_min_segments = 2;
+        assert!(cfg.validate().is_err(), "zero cold cache rejected");
+        cfg.store_cold_cache_segments = 1;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn unknown_key_is_error() {
         let mut cfg = ExperimentConfig::default();
         let kv = parse_overrides(["bogus=1"]).unwrap();

@@ -8,7 +8,9 @@
 //!   of a canonical pull+sync count cluster — the number the perf
 //!   acceptance gate tracks;
 //! * the full design-space sweep: all four source modes × all three write
-//!   modes on the same workload and seed, each cell reporting events/sec,
+//!   modes on the same workload and seed (plus one `store_mode=durable`
+//!   cell on the acceptance-gate configuration, so disk-path regressions
+//!   show up in the artifact), each cell reporting events/sec,
 //!   virtual/wall speed and the run's cross-checkable totals.
 //!
 //! Results are written to `BENCH_hotpath.json` (machine-readable; CI
@@ -21,7 +23,7 @@
 use std::time::Instant;
 
 use crate::cluster::launch;
-use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
+use crate::config::{ExperimentConfig, SourceMode, StoreMode, Workload, WriteMode};
 use crate::sim::{Actor, ActorId, Ctx, Engine, SECOND};
 
 /// One (source mode × write mode) cell of the sweep.
@@ -29,6 +31,7 @@ use crate::sim::{Actor, ActorId, Ctx, Engine, SECOND};
 pub struct HotpathCell {
     pub source: &'static str,
     pub write: &'static str,
+    pub store: &'static str,
     pub virtual_secs: u64,
     pub events: u64,
     pub wall_secs: f64,
@@ -101,9 +104,14 @@ pub fn bench_engine_events_per_s(events: u64) -> f64 {
 /// The sweep's per-cell config: the Fig. 4-style count workload on a fixed
 /// seed — identical modelled work across every cell, so events/sec
 /// differences are simulator cost, not workload drift.
-fn cell_config(source: SourceMode, write: WriteMode, secs: u64) -> ExperimentConfig {
+fn cell_config(
+    source: SourceMode,
+    write: WriteMode,
+    store: StoreMode,
+    secs: u64,
+) -> ExperimentConfig {
     ExperimentConfig {
-        name: format!("hotpath-{}-{}", source.name(), write.name()),
+        name: format!("hotpath-{}-{}-{}", source.name(), write.name(), store.name()),
         np: 4,
         nc: 4,
         nmap: 8,
@@ -111,6 +119,7 @@ fn cell_config(source: SourceMode, write: WriteMode, secs: u64) -> ExperimentCon
         broker_cores: 16,
         mode: source,
         write_mode: write,
+        store_mode: store,
         workload: Workload::Count,
         duration_secs: secs,
         warmup_secs: 1,
@@ -118,8 +127,8 @@ fn cell_config(source: SourceMode, write: WriteMode, secs: u64) -> ExperimentCon
     }
 }
 
-fn run_cell(source: SourceMode, write: WriteMode, secs: u64) -> HotpathCell {
-    let config = cell_config(source, write, secs);
+fn run_cell(source: SourceMode, write: WriteMode, store: StoreMode, secs: u64) -> HotpathCell {
+    let config = cell_config(source, write, store, secs);
     let mut cluster = launch(&config, None);
     let t0 = Instant::now();
     cluster.engine.run_until(secs * SECOND);
@@ -129,6 +138,7 @@ fn run_cell(source: SourceMode, write: WriteMode, secs: u64) -> HotpathCell {
     HotpathCell {
         source: source.name(),
         write: write.name(),
+        store: store.name(),
         virtual_secs: secs,
         events,
         wall_secs: wall,
@@ -155,20 +165,24 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
     let mut cells = Vec::new();
     let mut cluster_eps = 0.0;
     let mut cluster_ratio = 0.0;
+    let print_cell = |cell: &HotpathCell| {
+        println!(
+            "   {:<8}x {:<10}x {:<8} {:>7.2} M events/s  {:>6.1}x virtual/wall  \
+             events {:>10}  prod {:>9}  cons {:>9}",
+            cell.source,
+            cell.write,
+            cell.store,
+            cell.events_per_s / 1e6,
+            cell.virt_per_wall,
+            cell.events,
+            cell.records_produced,
+            cell.records_consumed,
+        );
+    };
     for &source in &SourceMode::ALL {
         for &write in &WriteMode::ALL {
-            let cell = run_cell(source, write, secs);
-            println!(
-                "   {:<8}x {:<10} {:>7.2} M events/s  {:>6.1}x virtual/wall  \
-                 events {:>10}  prod {:>9}  cons {:>9}",
-                cell.source,
-                cell.write,
-                cell.events_per_s / 1e6,
-                cell.virt_per_wall,
-                cell.events,
-                cell.records_produced,
-                cell.records_consumed,
-            );
+            let cell = run_cell(source, write, StoreMode::Memory, secs);
+            print_cell(&cell);
             // The acceptance-gate target: the paper's baseline ingestion
             // design on the pull path.
             if source == SourceMode::Pull && write == WriteMode::SyncRpc {
@@ -178,6 +192,11 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
             cells.push(cell);
         }
     }
+    // One durable-store cell on the acceptance-gate configuration, so the
+    // bench artifact tracks the disk path's simulator cost too.
+    let cell = run_cell(SourceMode::Pull, WriteMode::SyncRpc, StoreMode::Durable, secs);
+    print_cell(&cell);
+    cells.push(cell);
     let report = HotpathReport {
         engine_events_per_s: engine_eps,
         cluster_events_per_s: cluster_eps,
@@ -206,10 +225,16 @@ pub fn read_baseline(path: &std::path::Path) -> Option<f64> {
     let key = "\"cluster_events_per_s\":";
     let at = body.find(key)? + key.len();
     let rest = body[at..].trim_start();
+    // The seed file (and any run that never measured the target) records
+    // the field as `null`: that is "no recorded baseline", not a number
+    // to compute a speedup against.
+    if rest.starts_with("null") {
+        return None;
+    }
     let end = rest
         .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
         .unwrap_or(rest.len());
-    rest[..end].parse().ok()
+    rest[..end].parse().ok().filter(|v: &f64| v.is_finite() && *v > 0.0)
 }
 
 fn json_f64(v: f64) -> String {
@@ -255,12 +280,14 @@ pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Re
     s.push_str("  \"cells\": [\n");
     for (i, c) in report.cells.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"source\": \"{}\", \"write\": \"{}\", \"virtual_secs\": {}, \
+            "    {{\"source\": \"{}\", \"write\": \"{}\", \"store\": \"{}\", \
+             \"virtual_secs\": {}, \
              \"events\": {}, \"wall_secs\": {}, \"events_per_s\": {}, \
              \"virt_per_wall\": {}, \"records_produced\": {}, \
              \"records_consumed\": {}, \"tuples_logged\": {}}}{}\n",
             c.source,
             c.write,
+            c.store,
             c.virtual_secs,
             c.events,
             json_f64(c.wall_secs),

@@ -11,7 +11,7 @@ pub mod hotpath;
 mod tests;
 
 use crate::cluster::{launch, RunSummary};
-use crate::config::{ExperimentConfig, FaultKind, SourceMode, Workload, WriteMode};
+use crate::config::{ExperimentConfig, FaultKind, SourceMode, StoreMode, Workload, WriteMode};
 
 /// Chunk sizes the paper sweeps (KiB): "values=1,2,4,8,16,32,64,128".
 pub const CHUNK_SIZES_KIB: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
@@ -402,6 +402,51 @@ pub fn ablation_checkpoint(duration: u64) -> FigureSpec {
     }
 }
 
+/// Ablation — the storage tier: the durable WAL + sorted-segment backend
+/// against the in-memory default, across the whole source × write design
+/// space on the Fig. 4-style count workload. Every durable row runs with
+/// 1 MiB segments so a short run still seals, flushes and compacts cold
+/// files instead of living entirely in the WAL tail. The question the
+/// paper leaves open (§VI colocation): what does real log durability cost
+/// the pull and push read paths, and does the zero-copy discipline survive
+/// the disk hop (cold reads re-enter the spine as shared payloads)?
+pub fn ablation_store(duration: u64) -> FigureSpec {
+    let mut rows = Vec::new();
+    for &store in &StoreMode::ALL {
+        for &wmode in &WriteMode::ALL {
+            for &smode in &SourceMode::ALL {
+                let mut c = base(duration);
+                c.np = 4;
+                c.nc = 4;
+                c.nmap = 8;
+                c.ns = 8;
+                c.producer_chunk = 16 * 1024;
+                c.consumer_chunk = 128 * 1024;
+                c.record_size = 100;
+                c.broker_cores = 16;
+                c.mode = smode;
+                c.write_mode = wmode;
+                c.store_mode = store;
+                if store == StoreMode::Durable {
+                    c.store_segment_bytes = 1 << 20;
+                }
+                c.workload = Workload::Count;
+                c.name = format!("{}+{}+{}", store.name(), smode.name(), wmode.name());
+                rows.push((c.name.clone(), c));
+            }
+        }
+    }
+    FigureSpec {
+        id: "ablation-store",
+        title: "Storage tier (memory vs durable WAL+segments) x sources x writers, \
+                count workload",
+        expectation: "durable rows pay the WAL append on the write path but keep \
+                      read-path totals identical to memory; flushes and compaction \
+                      run in the background without stalling consumers",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
@@ -414,6 +459,9 @@ pub fn ablations(duration: u64) -> Vec<FigureSpec> {
 
     // (0c) checkpoint & recovery across the source/write design space.
     specs.push(ablation_checkpoint(duration));
+
+    // (0d) the storage tier: in-memory vs durable WAL + cold segments.
+    specs.push(ablation_store(duration));
 
     // (a) push backpressure window: objects per source.
     let mut rows = Vec::new();
@@ -538,6 +586,22 @@ pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
                 summary.report.gauge("write_append_latency_us").unwrap_or(0.0),
                 summary.writers.appends_acked,
                 summary.writers.extra(crate::producer::WriteStatKey::Errors),
+            );
+        }
+        if spec.id == "ablation-store" && config.store_mode == StoreMode::Durable {
+            let g = |k| summary.report.gauge(k).unwrap_or(0.0);
+            println!(
+                "      store[durable]: wal {:>9.0} recs {:>7.1} MiB ({:.0} files, \
+                 {:.0} pruned)  flushed {:>4.0} segs  compactions {:>3.0}  \
+                 cold loads {:>4.0} (cache hits {:>4.0})",
+                g("broker.store_wal_records"),
+                g("broker.store_wal_bytes") / (1024.0 * 1024.0),
+                g("broker.store_wal_files"),
+                g("broker.store_wal_pruned"),
+                g("broker.store_segments_flushed"),
+                g("broker.store_compactions"),
+                g("broker.store_cold_loads"),
+                g("broker.store_cold_cache_hits"),
             );
         }
         if spec.id == "ablation-checkpoint" && config.checkpoint_interval_ms > 0 {

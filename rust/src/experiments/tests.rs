@@ -186,6 +186,76 @@ fn checkpoint_ablation_reports_recovery_gauges() {
 }
 
 #[test]
+fn store_ablation_sweeps_both_backends_across_the_design_space() {
+    let spec = ablation_store(10);
+    // 2 store modes x 3 write modes x 4 source modes.
+    assert_eq!(spec.rows.len(), 2 * 3 * 4);
+    let stores: std::collections::HashSet<&str> =
+        spec.rows.iter().map(|(_, c)| c.store_mode.name()).collect();
+    assert_eq!(stores.len(), 2, "both backends swept");
+    for (label, c) in &spec.rows {
+        c.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        if c.store_mode == StoreMode::Durable {
+            assert_eq!(c.store_segment_bytes, 1 << 20, "{label}: small segments seal cold files");
+            assert!(c.store_dir.is_empty(), "{label}: ephemeral tempdir store");
+        }
+    }
+    assert!(spec.rows.iter().any(|(l, _)| l == "memory+pull+sync"));
+    assert!(spec.rows.iter().any(|(l, _)| l == "durable+native+sharedmem"));
+}
+
+#[test]
+fn store_ablation_durable_row_matches_memory_and_reports_gauges() {
+    let mut spec = ablation_store(4);
+    spec.rows.retain(|(l, _)| l == "memory+pull+sync" || l == "durable+pull+sync");
+    assert_eq!(spec.rows.len(), 2);
+    let summaries = run_figure(&spec);
+    let (memory, durable) = (&summaries[0], &summaries[1]);
+    assert!(
+        memory.report.gauge("broker.store_wal_records").is_none(),
+        "memory rows export no store gauges"
+    );
+    assert!(durable.report.gauge("broker.store_wal_records").unwrap() > 0.0);
+    assert!(durable.report.gauge("broker.store_segments_flushed").unwrap() > 0.0);
+    // Same seed, same modelled work: the backend must not change totals.
+    assert_eq!(memory.records_produced, durable.records_produced);
+    assert_eq!(memory.records_consumed, durable.records_consumed);
+}
+
+#[test]
+fn hotpath_null_or_zero_baseline_scans_as_absent() {
+    let dir = std::env::temp_dir().join(format!("zs-hotpath-baseline-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.json");
+    // The committed seed shape: field present but never measured.
+    std::fs::write(&path, "{\n  \"cluster_events_per_s\": null,\n  \"cells\": []\n}\n").unwrap();
+    assert_eq!(hotpath::read_baseline(&path), None, "null is not a baseline");
+    std::fs::write(&path, "{ \"cluster_events_per_s\": 0.000 }").unwrap();
+    assert_eq!(hotpath::read_baseline(&path), None, "zero is not a baseline");
+    std::fs::write(&path, "{ \"cluster_events_per_s\": 123456.789 }").unwrap();
+    assert_eq!(hotpath::read_baseline(&path), Some(123456.789));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hotpath_json_roundtrips_the_gate_number() {
+    let report = hotpath::HotpathReport {
+        engine_events_per_s: 1e6,
+        cluster_events_per_s: 2_500_000.0,
+        cluster_virt_per_wall: 10.0,
+        baseline_cluster_events_per_s: None,
+        cells: Vec::new(),
+    };
+    assert!(report.speedup_vs_baseline().is_none(), "no baseline, no speedup");
+    let dir = std::env::temp_dir().join(format!("zs-hotpath-roundtrip-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.json");
+    hotpath::write_json(&path, &report).unwrap();
+    assert_eq!(hotpath::read_baseline(&path), Some(2_500_000.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn table2_lists_all_benchmarks() {
     let t = table2();
     for fig in ["Fig.4", "Fig.5", "Fig.6", "Fig.7", "Fig.8", "Fig.9"] {

@@ -55,8 +55,31 @@
 //! completed checkpoint and replays — a faulted run reports identical
 //! record/window totals to the fault-free run on the same seed
 //! (exactly-once). [`experiments`] regenerates every figure of the paper's
-//! evaluation plus the pull/push/hybrid, write-path and
-//! checkpoint/recovery ablations.
+//! evaluation plus the pull/push/hybrid, write-path, checkpoint/recovery
+//! and storage-tier ablations.
+//!
+//! ## The storage tier
+//!
+//! The broker's partition logs live behind the [`broker::LogStore`] trait,
+//! built through the [`broker::StoreRegistry`] and keyed by
+//! `config.store_mode` — the storage mirror of the source and writer
+//! registries. [`config::StoreMode::Memory`] is today's in-memory
+//! segmented log (the sim default, zero behavioural change).
+//! [`config::StoreMode::Durable`] is a tiered disk backend
+//! ([`broker::DurableStore`], module [`broker::store`]): every append is
+//! framed and checksummed into a rotating **write-ahead-log ring** before
+//! it lands in the in-memory tail, sealed tail segments are flushed to
+//! immutable **sorted segment files** with per-file bloom filters, and
+//! **background compaction** merges cold files and drops trimmed
+//! prefixes. Checkpoint-committed cursors floor the broker's watermark
+//! trimming exactly as in memory mode, so the compaction floor is the
+//! last restorable epoch; a broker restart replays the WAL into a
+//! consistent tail and resumes byte-identically (crash-recovery tests in
+//! `tests/durable_store.rs`). Cold reads decode a segment file once and
+//! re-enter the data spine as shared `Rc` payloads, keeping the zero-copy
+//! discipline below intact across the disk hop. `TrimmedError` and
+//! trim-gap semantics are identical across both backends, so sources and
+//! checkpoint recovery never know which one is underneath.
 //!
 //! ## Data-plane memory discipline
 //!

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
-//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|hotpath|ablations|all> [--quick] [key=value ...]
+//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|hotpath|ablations|all> [--quick] [key=value ...]
 //! zettastream list                      the benchmark catalog (Table II)
 //! zettastream calibrate                 measure the real data plane, print
 //!                                       suggested cost-model overrides
@@ -151,6 +151,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         "hybrid" => vec![experiments::ablation_hybrid(duration, chunks)],
         "writepath" => vec![experiments::ablation_writepath(duration, chunks)],
         "checkpoint" => vec![experiments::ablation_checkpoint(duration)],
+        "store" => vec![experiments::ablation_store(duration)],
         "ablations" => experiments::ablations(duration),
         "all" => {
             let mut v = experiments::all_figures(duration, chunks);
@@ -170,7 +171,7 @@ fn cmd_list() -> Result<(), String> {
     println!("{}", experiments::table2());
     println!(
         "bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 hybrid writepath checkpoint \
-         hotpath ablations all"
+         store hotpath ablations all"
     );
     Ok(())
 }

@@ -2,7 +2,7 @@
 //! pipelined window, the shared-memory path, and rejected-append handling.
 
 use super::*;
-use crate::broker::{Broker, BrokerParams};
+use crate::broker::{Broker, BrokerParams, StoreParams};
 use crate::config::{NetworkProfile, WriteMode};
 use crate::metrics::{Class, MetricsHub, SharedMetrics};
 use crate::net::{Network, SharedNetwork};
@@ -32,7 +32,7 @@ fn base_rig(ns: usize) -> Rig {
             node: 0,
             worker_cores: 8,
             push_threads: 0,
-            segment_bytes: 8 << 20,
+            store: StoreParams::memory(8 << 20),
             partitions: (0..ns).map(PartitionId).collect(),
             backup: None,
             is_backup: false,

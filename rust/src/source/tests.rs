@@ -3,7 +3,7 @@
 //! [`SourceActor`] — so every test also exercises the trait API.
 
 use super::*;
-use crate::broker::{Broker, BrokerParams};
+use crate::broker::{Broker, BrokerParams, StoreParams};
 use crate::config::{CostModel, NetworkProfile};
 use crate::metrics::{Class, MetricsHub, SharedMetrics};
 use crate::net::Network;
@@ -51,7 +51,7 @@ fn rig_opts(
             node: 0,
             worker_cores: 4,
             push_threads: if push { 1 } else { 0 },
-            segment_bytes: 8 << 20,
+            store: StoreParams::memory(8 << 20),
             partitions: parts.clone(),
             backup: None,
             is_backup: false,

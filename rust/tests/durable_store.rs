@@ -1,0 +1,287 @@
+//! Durable-store integration suite: the tiered WAL + sorted-segment
+//! backend under the whole cluster, plus crash recovery.
+//!
+//! Three invariants guard the storage tier:
+//!
+//! 1. **Golden totals parity.** `store_mode=durable` reports the same
+//!    closed-form bounded totals (`Np × corpus_records`, produced ==
+//!    consumed == logged) as the in-memory backend across every source
+//!    mode × write mode cell — the backend must be invisible to the
+//!    dataflow.
+//! 2. **Crash recovery.** Killing the broker mid-run (dropping the
+//!    cluster without a clean finish) and reopening the store directory
+//!    recovers the retained log byte-identically from WAL + cold
+//!    segments, with compaction enabled — and an injected fault + rollback
+//!    on the durable backend still lands on the exactly-once totals of an
+//!    uninterrupted in-memory run on the same seed.
+//! 3. **Laggard reads.** A reader starting at the retained `start` is
+//!    served entirely from compacted cold segment files, and the chunks
+//!    it gets re-enter the spine as shared payloads.
+
+use std::path::PathBuf;
+
+use zettastream::broker::{Broker, LogStore, StoreParams, StoreRegistry};
+use zettastream::cluster::launch;
+use zettastream::config::{
+    ExperimentConfig, FaultKind, SourceMode, StoreMode, Workload, WriteMode,
+};
+use zettastream::proto::{Chunk, ChunkOffset, PartitionId};
+
+/// A fresh per-test directory under the system tempdir (integration tests
+/// run in their own process, so the pid + tag is collision-free).
+fn test_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zs-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bounded sim-plane config on the durable backend: the
+/// `zero_copy_parity` parity cell plus `store_*` knobs small enough that
+/// a run seals, flushes and compacts cold files instead of living in the
+/// WAL tail.
+fn durable_config(mode: SourceMode, write: WriteMode) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("durable-{}-{}", mode.name(), write.name()),
+        np: 2,
+        nc: 2,
+        nmap: 4,
+        ns: 4,
+        producer_chunk: 4 * 1024,
+        consumer_chunk: 16 * 1024,
+        record_size: 100,
+        broker_cores: 8,
+        mode,
+        write_mode: write,
+        workload: Workload::Count,
+        corpus_records: 2_000, // per producer; drains long before the horizon
+        duration_secs: 10,
+        warmup_secs: 1,
+        seed: 0xC0FFEE,
+        store_mode: StoreMode::Durable,
+        store_segment_bytes: 16 * 1024,
+        store_wal_bytes: 256 * 1024,
+        store_compact_min_segments: 2,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Golden totals parity across the whole source × write design space
+// ---------------------------------------------------------------------------
+
+#[test]
+fn durable_totals_identical_across_all_source_and_write_modes() {
+    let expect = 2 * 2_000u64; // Np × corpus_records — the memory golden
+    for &mode in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let config = durable_config(mode, write);
+            let summary = launch(&config, None).run();
+            let cell = format!("{}/{}", mode.name(), write.name());
+            assert_eq!(summary.records_produced, expect, "{cell}: produced");
+            assert_eq!(
+                summary.records_consumed, expect,
+                "{cell}: consumed == produced (exactly once, fully drained)"
+            );
+            assert_eq!(summary.tuples_logged, expect, "{cell}: every record logged once");
+            // The run actually exercised the tiers, not just the tail.
+            assert!(
+                summary.report.gauge("broker.store_wal_records").unwrap() > 0.0,
+                "{cell}: appends hit the WAL"
+            );
+            assert!(
+                summary.report.gauge("broker.store_segments_flushed").unwrap() > 0.0,
+                "{cell}: sealed segments reached the cold tier"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2a. Fault + rollback on durable == uninterrupted run on memory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_durable_run_matches_uninterrupted_memory_run() {
+    for &mode in &[SourceMode::Pull, SourceMode::Push] {
+        let mk = |store: StoreMode, fault: bool| {
+            let mut c = durable_config(mode, WriteMode::SyncRpc);
+            c.store_mode = store;
+            c.corpus_records = 5_000;
+            c.duration_secs = 30; // long horizon: drains even after recovery
+            c.checkpoint_interval_ms = 200;
+            if fault {
+                c.fault_at_secs = 2;
+                c.fault_kind = FaultKind::Worker;
+            }
+            c
+        };
+        let golden = launch(&mk(StoreMode::Memory, false), None).run();
+        let faulted = launch(&mk(StoreMode::Durable, true), None).run();
+        let expect = 2 * 5_000u64;
+        assert_eq!(golden.records_consumed, expect, "{}: golden drains", mode.name());
+        assert_eq!(
+            faulted.checkpoints.recoveries, 1,
+            "{}: the injected fault recovered",
+            mode.name()
+        );
+        assert_eq!(
+            faulted.records_produced, golden.records_produced,
+            "{}: produced parity across backends and faults",
+            mode.name()
+        );
+        assert_eq!(
+            faulted.records_consumed, golden.records_consumed,
+            "{}: exactly-once totals survive rollback on the durable backend",
+            mode.name()
+        );
+        assert_eq!(faulted.tuples_logged, golden.tuples_logged, "{}: logged", mode.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2b. Broker crash-restart: reopen the directory, recover byte-identically
+// ---------------------------------------------------------------------------
+
+/// The shape of one retained chunk — everything a sim-plane chunk is.
+type ChunkShape = (ChunkOffset, u32, u32);
+
+fn retained_window(view: &zettastream::broker::LogView<'_>) -> Vec<ChunkShape> {
+    if view.head() == view.start() {
+        return Vec::new();
+    }
+    view.read_from(view.start(), u64::MAX)
+        .expect("reads at start never trim")
+        .into_iter()
+        .map(|s| (s.offset, s.chunk.records, s.chunk.record_size))
+        .collect()
+}
+
+#[test]
+fn broker_crash_restart_recovers_the_log_from_wal_and_segments() {
+    let dir = test_dir("crash");
+    let mut config = durable_config(SourceMode::Pull, WriteMode::SyncRpc);
+    config.store_dir = dir.to_string_lossy().into_owned();
+    config.corpus_records = 4_000;
+    config.checkpoint_interval_ms = 200; // committed epochs floor the trims
+    let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+
+    // Run past several committed epochs, then kill the broker: drop the
+    // cluster without a clean finish, exactly like a process crash as far
+    // as the store directory is concerned (no shutdown hook writes state).
+    let mut snapshot = Vec::new();
+    {
+        let mut cluster = launch(&config, None);
+        cluster.engine.run_until(4 * zettastream::sim::SECOND);
+        let broker =
+            cluster.engine.actor_as::<Broker>(cluster.broker).expect("broker actor");
+        let stats = broker.store_stats();
+        assert!(stats.wal.records > 0, "appends hit the WAL before the crash");
+        assert!(stats.segments_flushed > 0, "cold files exist before the crash");
+        assert!(stats.compactions > 0, "compaction ran before the crash");
+        for &p in &partitions {
+            let view = broker.partition(p).expect("hosted");
+            snapshot.push((
+                p,
+                view.head(),
+                view.start(),
+                view.total_appended_bytes(),
+                view.total_appended_records(),
+                retained_window(&view),
+            ));
+        }
+    } // <- the crash
+
+    // Reopen the directory with the same knobs the cluster derived.
+    let registry = StoreRegistry::builtin();
+    let params = StoreParams::from_config(&config);
+    let mut store = registry
+        .expect(StoreMode::Durable)
+        .open(&params, &partitions)
+        .expect("reopen after crash");
+    for (p, head, start, bytes, records, window) in &snapshot {
+        assert_eq!(store.head(*p), *head, "{p:?}: head recovered");
+        assert_eq!(store.start(*p), *start, "{p:?}: retained start recovered");
+        assert_eq!(store.total_appended_bytes(*p), *bytes, "{p:?}: byte totals recovered");
+        assert_eq!(store.total_appended_records(*p), *records, "{p:?}: record totals");
+        let reopened: Vec<ChunkShape> = if head == start {
+            Vec::new()
+        } else {
+            store
+                .read_from(*p, *start, u64::MAX)
+                .expect("recovered window readable")
+                .into_iter()
+                .map(|s| (s.offset, s.chunk.records, s.chunk.record_size))
+                .collect()
+        };
+        assert_eq!(&reopened, window, "{p:?}: retained window byte-identical");
+    }
+
+    // The recovered log is live: appends resume exactly at the old head.
+    let p = partitions[0];
+    let head = store.head(p);
+    assert_eq!(store.append(p, Chunk::sim(10, 100)), head);
+    assert_eq!(store.head(p), head + 1);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Laggard reader: served entirely from compacted cold segments
+// ---------------------------------------------------------------------------
+
+#[test]
+fn laggard_reads_come_entirely_from_compacted_cold_segments() {
+    let dir = test_dir("laggard");
+    let params = StoreParams {
+        mode: StoreMode::Durable,
+        dir: Some(dir.clone()),
+        segment_bytes: 4 * 400, // 4 chunks per segment
+        wal_file_bytes: 64 * 1024,
+        compact_min_segments: 2,
+        // Big enough to hold every decoded segment: the second laggard
+        // pass below must find pass 1's buffers still cached.
+        cold_cache_segments: 16,
+    };
+    let p = PartitionId(0);
+    let registry = StoreRegistry::builtin();
+    let mut store =
+        registry.expect(StoreMode::Durable).open(&params, &[p]).expect("open");
+    // 64 chunks → 16 segments; flushing keeps one resident in the tail,
+    // compaction merges the cold files behind it.
+    for i in 0..64u32 {
+        let fill = i as u8;
+        let data = std::rc::Rc::new(vec![fill; 400]);
+        store.append(p, Chunk::real(4, 100, data));
+    }
+    let stats = store.stats();
+    assert!(stats.segments_flushed >= 15, "cold tier holds nearly everything");
+    assert!(stats.compactions > 0, "cold files were merged");
+
+    // The laggard starts at offset 0 and walks the whole log. Everything
+    // below the resident tail segment must come from cold files.
+    let got = store.read_from(p, 0, u64::MAX).expect("nothing trimmed");
+    assert_eq!(got.len(), 64, "every chunk served");
+    for (i, s) in got.iter().enumerate() {
+        assert_eq!(s.offset, i as u64);
+        let buf = s.chunk.payload.buffer().expect("cold chunks rematerialise as real");
+        assert!(buf.iter().all(|&b| b == i as u8), "chunk {i}: payload intact");
+    }
+    let stats = store.stats();
+    assert!(stats.cold_loads > 0, "the walk decoded cold segment files");
+    assert_eq!(stats.bloom_negatives, 0, "every in-range offset was found");
+
+    // A second laggard pass rides the decoded-chunk cache and shares the
+    // very same buffers (one materialisation per chunk per load).
+    let hits_before = stats.cold_cache_hits;
+    let again = store.read_from(p, 0, u64::MAX).expect("still nothing trimmed");
+    let cached = (0..again.len()).take_while(|&i| {
+        std::rc::Rc::ptr_eq(
+            got[i].chunk.payload.buffer().unwrap(),
+            again[i].chunk.payload.buffer().unwrap(),
+        )
+    });
+    assert!(cached.count() > 0, "cached cold chunks are Rc-shared, not re-read");
+    assert!(store.stats().cold_cache_hits > hits_before, "the cache served the re-read");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
