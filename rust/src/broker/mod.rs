@@ -198,7 +198,7 @@ impl Broker {
     fn work_cost(&self, kind: &RpcKind) -> Time {
         let c = &self.params.cost;
         match kind {
-            RpcKind::Append { chunks } => {
+            RpcKind::Append { chunks, .. } => {
                 let bytes: u64 = chunks.iter().map(|(_, ch)| ch.bytes()).sum();
                 c.rpc_base_ns + chunks.len() as Time * c.append_chunk_ns
                     + (bytes as f64 / c.append_bw_bps * 1e9) as Time
@@ -223,7 +223,7 @@ impl Broker {
             }
             RpcKind::PushUnsubscribe { .. } => c.rpc_base_ns,
             RpcKind::CommitCheckpoint { .. } => c.rpc_base_ns,
-            RpcKind::SealObject { id } => {
+            RpcKind::SealObject { id, .. } => {
                 // Appending a sealed object is charged like the equivalent
                 // Append RPC: the payload still has to reach the log — what
                 // the shared-memory path saves is the wire transfer and the
@@ -270,7 +270,9 @@ impl Broker {
             RpcKind::Replicate { bytes: 0, chunks: 0 },
         );
         match kind {
-            RpcKind::Append { chunks } => self.finish_append(id, rpc_ctx, chunks, ctx),
+            RpcKind::Append { chunks, produced_at } => {
+                self.finish_append(id, rpc_ctx, chunks, produced_at, ctx)
+            }
             RpcKind::Pull { assignments, max_bytes } => {
                 self.finish_pull(rpc_ctx, &assignments, max_bytes, ctx)
             }
@@ -284,7 +286,9 @@ impl Broker {
             RpcKind::WriteSubscribe { producer } => {
                 self.finish_write_subscribe(rpc_ctx, &producer, ctx)
             }
-            RpcKind::SealObject { id: object } => self.finish_seal(id, rpc_ctx, object, ctx),
+            RpcKind::SealObject { id: object, produced_at } => {
+                self.finish_seal(id, rpc_ctx, object, produced_at, ctx)
+            }
             RpcKind::Replicate { .. } => self.finish_replicate(rpc_ctx, ctx),
         }
     }
@@ -390,6 +394,8 @@ impl Broker {
     fn append_chunks(
         &mut self,
         chunks: Vec<(PartitionId, Chunk)>,
+        produced_at: Option<Time>,
+        now: Time,
     ) -> Result<(u64, u64, u32), PartitionId> {
         if let Some(bad) = chunks.iter().find(|(p, _)| !self.logs.contains(*p)) {
             return Err(bad.0);
@@ -400,7 +406,12 @@ impl Broker {
         for (p, chunk) in chunks {
             records += chunk.records as u64;
             bytes += chunk.bytes();
-            self.logs.append(p, chunk);
+            let off = self.logs.append(p, chunk);
+            // `produced_at` is only ever Some when the tracer sampled this
+            // request — the hot untraced path takes no borrow here.
+            if let Some(produced) = produced_at {
+                self.metrics.borrow_mut().tracer.on_append(p.0, off, produced, now);
+            }
         }
         Ok((records, bytes, nchunks))
     }
@@ -449,6 +460,7 @@ impl Broker {
         id: u64,
         mut rpc_ctx: RpcCtx,
         object: ObjectId,
+        produced_at: Option<Time>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
         // A duplicate or stale notification (object unknown, already
@@ -466,7 +478,7 @@ impl Broker {
             .iter()
             .map(|sc| (sc.partition, sc.chunk.clone()))
             .collect();
-        match self.append_chunks(chunks) {
+        match self.append_chunks(chunks, produced_at, ctx.now()) {
             Err(p) => {
                 // The object stays sealed: the producer owns the retry (or
                 // reclaims the buffer after bounded retries).
@@ -498,9 +510,10 @@ impl Broker {
         id: u64,
         mut rpc_ctx: RpcCtx,
         chunks: Vec<(PartitionId, Chunk)>,
+        produced_at: Option<Time>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
-        match self.append_chunks(chunks) {
+        match self.append_chunks(chunks, produced_at, ctx.now()) {
             Err(p) => {
                 rpc_ctx.staged =
                     Some(RpcReply::Error { reason: format!("unknown partition {p}") });

@@ -197,6 +197,7 @@ fn append_req(rig: &Rig, id: RpcId, parts: &[usize], records: u32, rec_size: u32
                 .iter()
                 .map(|&p| (PartitionId(p), Chunk::sim(records, rec_size)))
                 .collect(),
+            produced_at: None,
         },
     })
 }
@@ -388,7 +389,10 @@ fn replicated_append_waits_for_backup() {
             id: 1,
             reply_to: probe,
             from_node: 1,
-            kind: RpcKind::Append { chunks: vec![(PartitionId(0), Chunk::sim(1000, 100))] },
+            kind: RpcKind::Append {
+                chunks: vec![(PartitionId(0), Chunk::sim(1000, 100))],
+                produced_at: None,
+            },
         }),
     );
     engine.run_until(SECOND);
@@ -711,7 +715,7 @@ fn seal_req(r: &Rig, id: RpcId, object: crate::proto::ObjectId) -> Msg {
         id,
         reply_to: r.probe,
         from_node: 0,
-        kind: RpcKind::SealObject { id: object },
+        kind: RpcKind::SealObject { id: object, produced_at: None },
     })
 }
 
@@ -912,7 +916,7 @@ fn replicated_seal_releases_only_after_backup_ack() {
             id: 2,
             reply_to: probe,
             from_node: 0,
-            kind: RpcKind::SealObject { id: object },
+            kind: RpcKind::SealObject { id: object, produced_at: None },
         }),
     );
     engine.run_until(SECOND);
@@ -947,6 +951,7 @@ fn watermark_trim_leaves_laggards_behind() {
                 from_node: 1,
                 kind: RpcKind::Append {
                     chunks: (0..50).map(|_| (PartitionId(0), Chunk::sim(1, 100))).collect(),
+                    produced_at: None,
                 },
             }),
         );
@@ -1023,6 +1028,7 @@ fn committed_checkpoint_floors_retention() {
                 from_node: 1,
                 kind: RpcKind::Append {
                     chunks: (0..50).map(|_| (PartitionId(0), Chunk::sim(1, 100))).collect(),
+                    produced_at: None,
                 },
             }),
         );

@@ -49,6 +49,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::config::CostModel;
+use crate::metrics::SharedMetrics;
 use crate::net::{NodeId, SharedNetwork};
 use crate::ops::OpState;
 use crate::proto::{ChunkOffset, Msg, PartitionId, RpcKind, RpcReply, RpcRequest};
@@ -283,6 +284,9 @@ pub struct CheckpointCoordinator {
     params: CoordinatorParams,
     control: SharedCheckpoint,
     net: SharedNetwork,
+    /// Hub handle for the tracer's structured event stream (epoch spans,
+    /// fault/restore marks) — see [`crate::obs`].
+    metrics: SharedMetrics,
     /// Next epoch number (epochs are 1-based; 0 is the genesis commit).
     next_epoch: u64,
     /// Current recovery incarnation (bumped per recovery).
@@ -294,13 +298,19 @@ pub struct CheckpointCoordinator {
 }
 
 impl CheckpointCoordinator {
-    pub fn new(params: CoordinatorParams, control: SharedCheckpoint, net: SharedNetwork) -> Self {
+    pub fn new(
+        params: CoordinatorParams,
+        control: SharedCheckpoint,
+        net: SharedNetwork,
+        metrics: SharedMetrics,
+    ) -> Self {
         assert!(params.interval_ns > 0, "coordinator needs a positive interval");
         assert!(!params.sources.is_empty(), "checkpointing needs sources");
         Self {
             params,
             control,
             net,
+            metrics,
             next_epoch: 1,
             inc: 0,
             pending: None,
@@ -385,6 +395,7 @@ impl CheckpointCoordinator {
         self.stats.epochs_completed += 1;
         self.stats.epoch_ns_total += span;
         self.stats.epoch_ns_max = self.stats.epoch_ns_max.max(span);
+        self.metrics.borrow_mut().tracer.note_epoch(p.epoch, ctx.now(), span);
         self.commit(p.epoch, cursors, ctx);
     }
 
@@ -393,6 +404,10 @@ impl CheckpointCoordinator {
             return; // already rolling back; the restore covers this victim
         }
         self.stats.recoveries += 1;
+        // Mark the fault in the trace stream and drop in-flight spans: the
+        // rollback replays those records under a new incarnation, so their
+        // half-open spans would otherwise report bogus latencies.
+        self.metrics.borrow_mut().tracer.note_fault("process", ctx.now());
         if self.pending.take().is_some() {
             self.control.borrow_mut().abort();
             self.stats.epochs_aborted += 1;
@@ -418,6 +433,7 @@ impl CheckpointCoordinator {
         }
         let r = self.recovering.take().expect("checked above");
         self.stats.last_recovery_ns = ctx.now() - r.started;
+        self.metrics.borrow_mut().tracer.note_restore(ctx.now(), self.stats.last_recovery_ns);
         // The old timer chain died with the old incarnation tag; resume
         // checkpointing on the new one.
         ctx.send_self_in(self.params.interval_ns, Msg::Timer(self.inc));

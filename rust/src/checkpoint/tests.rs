@@ -194,6 +194,7 @@ fn rig(cooperative_task: bool) -> Rig {
         },
         control.clone(),
         net,
+        crate::metrics::MetricsHub::shared(),
     )));
     control.borrow_mut().coordinator = Some(coordinator);
     Rig { engine, coordinator, source, commits, restores, control }

@@ -96,6 +96,9 @@ pub struct RunSummary {
     pub writers: WriteStats,
     /// Checkpoint/recovery accounting (all zero when checkpointing is off).
     pub checkpoints: CheckpointStats,
+    /// Per-stage latency percentiles from the tracing plane (empty when
+    /// `trace_sample_permille = 0`) — see [`crate::obs`].
+    pub latency: crate::obs::LatencyReport,
 }
 
 /// Build a cluster from a config with the built-in source and write modes.
@@ -140,6 +143,10 @@ pub fn launch_full(
     let writer_factory = writer_registry.expect(config.write_mode);
     let mut engine = Engine::new(config.seed);
     let metrics = MetricsHub::shared();
+    metrics
+        .borrow_mut()
+        .tracer
+        .configure(config.trace_sample_permille, &config.trace_out);
     let net = Network::shared(config.cost.network, config.cost.loopback);
     let store = ObjectStore::shared();
     let registry = TaskRegistry::shared();
@@ -284,6 +291,7 @@ pub fn launch_full(
             },
             cp.clone(),
             net.clone(),
+            metrics.clone(),
         )));
         // Sources and tasks were built first; close the loop so their
         // barrier/failure acks can address the coordinator.
@@ -448,7 +456,16 @@ impl Cluster {
                 m.set_gauge("compute_wall_ns", st.wall_ns as f64);
                 m.set_gauge("compute_records", st.records_processed as f64);
             }
+            // Tracing-plane gauges (queue pressure, poll efficiency, append
+            // RTT) — empty when the tracer is off.
+            for (name, value) in m.tracer.gauges(self.config.duration_secs) {
+                m.set_gauge(name, value);
+            }
+            if let Err(e) = m.tracer.write_sink() {
+                eprintln!("warning: trace sink write failed: {e}");
+            }
         }
+        let latency = self.metrics.borrow().tracer.report();
         let metrics = self.metrics.borrow();
         let report = ExperimentReport::from_hub(
             &self.config.name,
@@ -470,6 +487,7 @@ impl Cluster {
             sources: source_stats,
             writers: writer_stats,
             checkpoints,
+            latency,
         }
     }
 }

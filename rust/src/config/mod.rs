@@ -315,6 +315,15 @@ pub struct ExperimentConfig {
     pub store_compact_min_segments: usize,
     /// Durable: decoded cold segments cached for readers.
     pub store_cold_cache_segments: usize,
+    /// Observability: per-record span sampling rate in permille
+    /// (0..=1000). 0 disables the tracing plane entirely — the zero-copy
+    /// hot path takes no tracer calls (see the `obs` module's sampling
+    /// contract); 1000 traces every request.
+    pub trace_sample_permille: u32,
+    /// Observability: JSONL trace/event sink path (spans, checkpoint
+    /// epochs, hybrid switch-overs, fault/restore events). Empty = no
+    /// file is written; events are still buffered when tracing is on.
+    pub trace_out: String,
     /// RNG seed.
     pub seed: u64,
     /// Cost model.
@@ -366,6 +375,8 @@ impl Default for ExperimentConfig {
             store_wal_bytes: 64 << 20,
             store_compact_min_segments: 4,
             store_cold_cache_segments: 4,
+            trace_sample_permille: 0,
+            trace_out: String::new(),
             seed: 0x5E77A_57F3A,
             cost: CostModel::default(),
         }
@@ -464,6 +475,12 @@ impl ExperimentConfig {
         }
         if self.store_segment_bytes == 0 {
             return Err("store_segment_bytes must be positive".into());
+        }
+        if self.trace_sample_permille > 1000 {
+            return Err(format!(
+                "trace_sample_permille={} must be a permille (0..=1000)",
+                self.trace_sample_permille
+            ));
         }
         if self.store_mode == StoreMode::Durable {
             if self.store_wal_bytes == 0 {
@@ -601,6 +618,10 @@ impl ExperimentConfig {
             "store_cold_cache_segments" => {
                 self.store_cold_cache_segments = value.parse().map_err(|_| bad(key, value))?
             }
+            "trace_sample_permille" | "trace" => {
+                self.trace_sample_permille = value.parse().map_err(|_| bad(key, value))?
+            }
+            "trace_out" => self.trace_out = value.to_string(),
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             _ if key.starts_with("cost.") => self.cost.apply_one(&key[5..], value)?,
             _ => return Err(format!("unknown config key `{key}`")),

@@ -1,0 +1,175 @@
+//! The latency ablation: per-stage end-to-end latency across the whole
+//! source × write design space, measured by the tracing plane.
+//!
+//! The paper's evaluation (§V) compares pull and push on *throughput*;
+//! its central latency claim — push "avoids the consume path" so a
+//! record reaches the operator sooner, while pull pays the poll
+//! round-trip — is asserted, never measured. This harness measures it:
+//! every cell runs the same count workload with the tracer fully on
+//! (`trace_sample_permille = 1000`), so every record's produce → append
+//! → deliver → consume → operate life lands in the per-stage histograms
+//! ([`crate::obs`]), and the cell reports p50/p95/p99/p999 per stage
+//! plus the end-to-end span.
+//!
+//! Results go to `BENCH_latency.json` (hand-rolled JSON, same idiom as
+//! [`super::hotpath`]) so CI can upload the latency surface as an
+//! artifact and regressions in either tail are diffable run-over-run.
+
+use crate::cluster::launch;
+use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
+use crate::obs::{LatencyReport, Stage};
+
+/// One (source mode × write mode) cell: the latency report plus the
+/// totals that make a latency diff interpretable ("slower" vs "doing
+/// different work").
+#[derive(Debug, Clone)]
+pub struct LatencyCell {
+    pub source: &'static str,
+    pub write: &'static str,
+    pub virtual_secs: u64,
+    pub records_consumed: u64,
+    pub latency: LatencyReport,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone)]
+pub struct LatencyBenchReport {
+    pub cells: Vec<LatencyCell>,
+}
+
+/// The per-cell config: the Fig. 4-style count workload on a fixed seed
+/// with the tracer sampling every record. Identical modelled work across
+/// cells, so latency differences are design differences.
+fn cell_config(source: SourceMode, write: WriteMode, secs: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("latency-{}-{}", source.name(), write.name()),
+        np: 4,
+        nc: 4,
+        nmap: 8,
+        ns: 8,
+        producer_chunk: 16 * 1024,
+        consumer_chunk: 128 * 1024,
+        record_size: 100,
+        broker_cores: 16,
+        mode: source,
+        write_mode: write,
+        workload: Workload::Count,
+        duration_secs: secs,
+        warmup_secs: 1,
+        trace_sample_permille: 1000,
+        ..Default::default()
+    }
+}
+
+fn run_cell(source: SourceMode, write: WriteMode, secs: u64) -> LatencyCell {
+    let config = cell_config(source, write, secs);
+    let summary = launch(&config, None).run();
+    LatencyCell {
+        source: source.name(),
+        write: write.name(),
+        virtual_secs: secs,
+        records_consumed: summary.records_consumed,
+        latency: summary.latency,
+    }
+}
+
+fn fmt_us(ns: u64) -> f64 {
+    ns as f64 / 1e3
+}
+
+fn print_cell(cell: &LatencyCell) {
+    let e2e = cell.latency.stage(Stage::EndToEnd);
+    let (p50, p99) = e2e.map(|s| (s.p50_ns, s.p99_ns)).unwrap_or((0, 0));
+    println!(
+        "   {:<8}x {:<10} e2e p50 {:>9.1} us  p99 {:>9.1} us  spans {:>8}  \
+         dropped {:>5}  cons {:>9}",
+        cell.source,
+        cell.write,
+        fmt_us(p50),
+        fmt_us(p99),
+        cell.latency.spans_completed,
+        cell.latency.spans_dropped,
+        cell.records_consumed,
+    );
+    for s in &cell.latency.stages {
+        if s.stage == Stage::EndToEnd {
+            continue;
+        }
+        println!(
+            "      {:<8} n {:>8}  p50 {:>9.1} us  p95 {:>9.1} us  p99 {:>9.1} us  \
+             p999 {:>9.1} us",
+            s.stage.name(),
+            s.count,
+            fmt_us(s.p50_ns),
+            fmt_us(s.p95_ns),
+            fmt_us(s.p99_ns),
+            fmt_us(s.p999_ns),
+        );
+    }
+}
+
+/// Run the full 4 sources × 3 writers sweep and print the surface.
+pub fn run_latency(quick: bool) -> LatencyBenchReport {
+    let secs = if quick { 4 } else { 12 };
+    println!("== latency — per-stage end-to-end latency, sources x writers (traced)");
+    let mut cells = Vec::new();
+    for &source in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let cell = run_cell(source, write, secs);
+            print_cell(&cell);
+            cells.push(cell);
+        }
+    }
+    LatencyBenchReport { cells }
+}
+
+/// Write `BENCH_latency.json`. Hand-rolled JSON — the offline vendor set
+/// has no serde; one object per cell, one object per stage.
+pub fn write_json(path: &std::path::Path, report: &LatencyBenchReport) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"zettastream-bench-latency/v1\",\n");
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"source\": \"{}\", \"write\": \"{}\", \"virtual_secs\": {}, \
+             \"records_consumed\": {}, \"spans_completed\": {}, \"spans_dropped\": {}, \
+             \"stages\": [",
+            c.source,
+            c.write,
+            c.virtual_secs,
+            c.records_consumed,
+            c.latency.spans_completed,
+            c.latency.spans_dropped,
+        ));
+        for (j, st) in c.latency.stages.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"stage\": \"{}\", \"count\": {}, \"p50_ns\": {}, \"p95_ns\": {}, \
+                 \"p99_ns\": {}, \"p999_ns\": {}}}{}",
+                st.stage.name(),
+                st.count,
+                st.p50_ns,
+                st.p95_ns,
+                st.p99_ns,
+                st.p999_ns,
+                if j + 1 == c.latency.stages.len() { "" } else { ", " },
+            ));
+        }
+        s.push_str(&format!(
+            "]}}{}\n",
+            if i + 1 == report.cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+/// The CLI/bench entry point: run the sweep and record the artifact.
+pub fn run_and_record(quick: bool, path: &std::path::Path) -> LatencyBenchReport {
+    let report = run_latency(quick);
+    match write_json(path, &report) {
+        Ok(()) => println!("   wrote {}", path.display()),
+        Err(e) => eprintln!("   could not write {}: {e}", path.display()),
+    }
+    report
+}

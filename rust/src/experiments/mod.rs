@@ -7,6 +7,7 @@
 //! both run these specs and print the rows.
 
 pub mod hotpath;
+pub mod latency;
 #[cfg(test)]
 mod tests;
 
@@ -447,12 +448,58 @@ pub fn ablation_store(duration: u64) -> FigureSpec {
     }
 }
 
+/// Ablation — per-stage latency across sources × writers, with the
+/// tracing plane sampling every record. The question the paper asserts
+/// but never measures (§II-B, §VI): how much sooner does a pushed record
+/// reach its operator than a pulled one, and which stage pays for it?
+/// The full design-space surface (with the JSON artifact) lives in
+/// [`latency::run_and_record`]; this spec is the figure-style cut: all
+/// four source modes on the sync writer, pull vs push on the other two.
+pub fn ablation_latency(duration: u64) -> FigureSpec {
+    let mut rows = Vec::new();
+    let mut push_row = |smode: SourceMode, wmode: WriteMode| {
+        let mut c = base(duration);
+        c.np = 4;
+        c.nc = 4;
+        c.nmap = 8;
+        c.ns = 8;
+        c.producer_chunk = 16 * 1024;
+        c.consumer_chunk = 128 * 1024;
+        c.record_size = 100;
+        c.broker_cores = 16;
+        c.mode = smode;
+        c.write_mode = wmode;
+        c.workload = Workload::Count;
+        c.trace_sample_permille = 1000;
+        c.name = format!("{}+{}", smode.name(), wmode.name());
+        rows.push((c.name.clone(), c));
+    };
+    for &smode in &SourceMode::ALL {
+        push_row(smode, WriteMode::SyncRpc);
+    }
+    for &wmode in &[WriteMode::Pipelined, WriteMode::SharedMem] {
+        push_row(SourceMode::Pull, wmode);
+        push_row(SourceMode::Push, wmode);
+    }
+    FigureSpec {
+        id: "ablation-latency",
+        title: "Per-stage latency (traced): sources x writers, count workload",
+        expectation: "push's deliver stage (seal/notify) beats pull's poll round-trip \
+                      at p50 and p99; native closes spans at the source (no operate \
+                      stage); sharedmem cuts the append stage to the seal notify",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
 
     // (0) the hybrid mode against its parents (quick chunk sweep).
     specs.push(ablation_hybrid(duration, &[4, 32, 128]));
+
+    // (0a) per-stage latency through the tracing plane.
+    specs.push(ablation_latency(duration));
 
     // (0b) the write-path modes against the source modes (quick sweep).
     specs.push(ablation_writepath(duration, &[4, 128]));
@@ -602,6 +649,24 @@ pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
                 g("broker.store_compactions"),
                 g("broker.store_cold_loads"),
                 g("broker.store_cold_cache_hits"),
+            );
+        }
+        if spec.id == "ablation-latency" {
+            let lat = &summary.latency;
+            for s in &lat.stages {
+                println!(
+                    "      lat[{:<10}] n {:>8}  p50 {:>9.1} us  p99 {:>9.1} us  \
+                     p999 {:>9.1} us",
+                    s.stage.name(),
+                    s.count,
+                    s.p50_ns as f64 / 1e3,
+                    s.p99_ns as f64 / 1e3,
+                    s.p999_ns as f64 / 1e3,
+                );
+            }
+            println!(
+                "      spans: {} completed, {} dropped",
+                lat.spans_completed, lat.spans_dropped
             );
         }
         if spec.id == "ablation-checkpoint" && config.checkpoint_interval_ms > 0 {

@@ -114,6 +114,27 @@
 //!   measures all of this (events/sec, virtual-vs-wall) across every
 //!   source × write mode and records the trajectory in
 //!   `BENCH_hotpath.json`.
+//!
+//! ## Observability
+//!
+//! The paper's latency claim finally has an instrument: the [`obs`]
+//! module traces sampled records through produce → append (incl. the
+//! durable store's WAL cost) → seal/notify or pull-reply → consume
+//! hand-off → operator emit, folding each stage delta into log2-bucketed
+//! histograms ([`obs::LatencyHistogram`]) that report per-stage and
+//! end-to-end p50/p95/p99/p999, merged exactly across entities. The
+//! [`obs::Tracer`] lives inside the [`metrics::MetricsHub`] blackboard
+//! every actor already holds; `trace_sample_permille` picks spans
+//! deterministically and **0 keeps the zero-copy hot path untouched**
+//! (the parity suite pins byte-identical totals and payload-allocation
+//! counters). `trace_out` streams spans, checkpoint epochs, hybrid
+//! switch-overs and fault/restore events to a JSONL sink that replays
+//! byte-identically on a fixed seed, and the tracer's per-second series
+//! (empty polls, credit stalls, append latency) plus `obs.*` gauges are
+//! the controller inputs the elastic-runtime roadmap item needs.
+//! `zettastream bench latency` sweeps all 4 source × 3 write modes and
+//! records the per-stage breakdown in `BENCH_latency.json` — the
+//! pull-vs-push latency question, answered with numbers.
 
 pub mod config;
 pub mod sim;
@@ -121,6 +142,7 @@ pub mod broker;
 pub mod checkpoint;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod plasma;
 pub mod proto;
 pub mod compute;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
-//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|hotpath|ablations|all> [--quick] [key=value ...]
+//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|hotpath|latency|ablations|all> [--quick] [key=value ...]
 //! zettastream list                      the benchmark catalog (Table II)
 //! zettastream calibrate                 measure the real data plane, print
 //!                                       suggested cost-model overrides
@@ -138,6 +138,19 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         experiments::hotpath::run_and_record(quick, path);
         return Ok(());
     }
+    if which == "latency" {
+        // The traced latency surface: every (source × write) cell with the
+        // tracer sampling every record, per-stage percentiles to
+        // BENCH_latency.json. Fixed config for the same reason as hotpath.
+        if let Some(extra) = args.iter().skip(1).find(|a| *a != "--quick") {
+            return Err(format!(
+                "bench latency runs a fixed sweep config and takes no overrides (got `{extra}`)"
+            ));
+        }
+        let path = std::path::Path::new("BENCH_latency.json");
+        experiments::latency::run_and_record(quick, path);
+        return Ok(());
+    }
     let duration: u64 = if quick { 8 } else { 30 };
     let chunks: &[usize] = if quick { &[4, 32, 128] } else { &experiments::CHUNK_SIZES_KIB };
     let specs = match which {
@@ -152,6 +165,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         "writepath" => vec![experiments::ablation_writepath(duration, chunks)],
         "checkpoint" => vec![experiments::ablation_checkpoint(duration)],
         "store" => vec![experiments::ablation_store(duration)],
+        "latency-fig" => vec![experiments::ablation_latency(duration)],
         "ablations" => experiments::ablations(duration),
         "all" => {
             let mut v = experiments::all_figures(duration, chunks);
@@ -171,7 +185,7 @@ fn cmd_list() -> Result<(), String> {
     println!("{}", experiments::table2());
     println!(
         "bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 hybrid writepath checkpoint \
-         store hotpath ablations all"
+         store hotpath latency latency-fig ablations all"
     );
     Ok(())
 }

@@ -47,11 +47,19 @@ impl Class {
 
 /// Per-(class, entity) counters bucketed by virtual second, plus end-of-run
 /// gauges (utilisation, thread counts) set by the launcher.
+///
+/// The hub also hosts the observability plane: [`crate::obs::Tracer`]
+/// rides along as a public field, so every actor that already holds a
+/// [`SharedMetrics`] handle can trace spans without any rewiring. The
+/// tracer is inert (all calls gated on [`crate::obs::Tracer::enabled`])
+/// until the launcher configures `trace_sample_permille > 0`.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     // (class, entity) -> per-second counts, indexed by second.
     series: HashMap<(Class, usize), Vec<u64>>,
     gauges: Vec<(String, f64)>,
+    /// The latency-tracing plane (spans, histograms, event sink).
+    pub tracer: crate::obs::Tracer,
 }
 
 /// Shared handle actors hold.

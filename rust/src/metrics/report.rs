@@ -9,6 +9,11 @@ pub struct SeriesStat {
     pub p50: f64,
     pub p10: f64,
     pub p90: f64,
+    /// Tail percentiles (nearest rank; on short series they collapse onto
+    /// the max second — the rank math, not an estimate).
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
     pub mean: f64,
     pub seconds: usize,
 }
@@ -20,15 +25,26 @@ impl SeriesStat {
 
     /// [`SeriesStat::from_series`] with a caller-owned scratch buffer.
     ///
-    /// This runs per gauge at every report, so it selects the three ranks
-    /// with `select_nth_unstable` (expected O(n) each) on a reused scratch
-    /// copy instead of `to_vec()` + full sort per call. Selections run in
-    /// ascending rank order on narrowing subslices: after selecting rank
-    /// `r`, everything at `r..` is ≥ the pivot, so the next (higher) rank
-    /// is found inside `scratch[r..]` — each pass touches less data.
+    /// This runs per gauge at every report, so it selects the six ranks
+    /// (p10/p50/p90/p95/p99/p999) with `select_nth_unstable` (expected
+    /// O(n) each) on a reused scratch copy instead of `to_vec()` + full
+    /// sort per call. Selections run in ascending rank order on narrowing
+    /// subslices: after selecting rank `r`, everything at `r..` is ≥ the
+    /// pivot, so the next (higher) rank is found inside `scratch[r..]` —
+    /// each pass touches less data, and duplicate nearest ranks (common
+    /// for the tail on short series) reuse the previous selection.
     pub fn from_series_with(series: &[u64], scratch: &mut Vec<u64>) -> Self {
         if series.is_empty() {
-            return SeriesStat { p50: 0.0, p10: 0.0, p90: 0.0, mean: 0.0, seconds: 0 };
+            return SeriesStat {
+                p50: 0.0,
+                p10: 0.0,
+                p90: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+                mean: 0.0,
+                seconds: 0,
+            };
         }
         let mean = series.iter().sum::<u64>() as f64 / series.len() as f64;
         scratch.clear();
@@ -37,6 +53,9 @@ impl SeriesStat {
             (nearest_rank(series.len(), 10.0), 0u64),
             (nearest_rank(series.len(), 50.0), 0u64),
             (nearest_rank(series.len(), 90.0), 0u64),
+            (nearest_rank(series.len(), 95.0), 0u64),
+            (nearest_rank(series.len(), 99.0), 0u64),
+            (nearest_rank(series.len(), 99.9), 0u64),
         ];
         let mut base = 0usize; // scratch[..base] already below previous rank
         let mut prev_rank = 0usize;
@@ -56,6 +75,9 @@ impl SeriesStat {
             p10: ranks[0].1 as f64,
             p50: ranks[1].1 as f64,
             p90: ranks[2].1 as f64,
+            p95: ranks[3].1 as f64,
+            p99: ranks[4].1 as f64,
+            p999: ranks[5].1 as f64,
             mean,
             seconds: series.len(),
         }
@@ -126,14 +148,20 @@ impl ExperimentReport {
         (self.producers.p50 + self.consumers.p50) / 1e6
     }
 
-    /// One aligned table row (figure harnesses print these).
+    /// One aligned table row (figure harnesses print these). Alongside the
+    /// paper's p50 statistic the row carries the consumer tail
+    /// (p95/p99/p999 per-second throughput) so a run whose median looks
+    /// healthy but whose worst seconds crater is visible at a glance.
     pub fn row(&self) -> String {
         format!(
-            "{:<34} prod(p50) {:>9.3} Mrec/s  cons(p50) {:>9.3} Mtup/s  cluster {:>9.3} M/s  pullRPC/s {:>9.0}  objs/s {:>7.0}",
+            "{:<34} prod(p50) {:>9.3} Mrec/s  cons(p50) {:>9.3} Mtup/s  cluster {:>9.3} M/s  cons(p95/p99/p999) {:>7.3}/{:>7.3}/{:>7.3}  pullRPC/s {:>9.0}  objs/s {:>7.0}",
             self.name,
             self.producers.p50 / 1e6,
             self.consumers.p50 / 1e6,
             self.cluster_mrec_s(),
+            self.consumers.p95 / 1e6,
+            self.consumers.p99 / 1e6,
+            self.consumers.p999 / 1e6,
             self.pull_rpcs.p50,
             self.objects_filled.p50,
         )

@@ -95,6 +95,27 @@ mod stats {
         assert_eq!(stat.mean, 7.0);
         assert_eq!(stat.p10, 7.0);
         assert_eq!(stat.p90, 7.0);
+        assert_eq!(stat.p95, 7.0);
+        assert_eq!(stat.p99, 7.0);
+        assert_eq!(stat.p999, 7.0);
+    }
+
+    #[test]
+    fn tail_percentiles_pick_the_worst_seconds() {
+        // 0..1000: nearest ranks are exact, and the tail orders correctly.
+        let series: Vec<u64> = (0..1000).collect();
+        let stat = SeriesStat::from_series(&series);
+        assert_eq!(stat.p50, 500.0);
+        assert_eq!(stat.p90, 899.0);
+        assert_eq!(stat.p95, 949.0);
+        assert_eq!(stat.p99, 989.0);
+        assert_eq!(stat.p999, 998.0);
+        // On a short series the tail collapses onto the max — the rank
+        // math, not a special case.
+        let stat = SeriesStat::from_series(&[10, 30, 20]);
+        assert_eq!(stat.p95, 30.0);
+        assert_eq!(stat.p99, 30.0);
+        assert_eq!(stat.p999, 30.0);
     }
 
     #[test]

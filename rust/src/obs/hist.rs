@@ -1,0 +1,141 @@
+//! Log2-bucketed latency histograms — the fixed-footprint aggregation the
+//! tracer folds every stage delta into.
+//!
+//! A histogram is 64 buckets: bucket 0 holds exact zeros, bucket `i`
+//! (1..=63) holds values in `[2^(i-1), 2^i)` nanoseconds. Recording is a
+//! leading-zeros computation and one increment — no allocation, no
+//! per-sample storage — so per-record tracing stays cheap even at
+//! `trace_sample_permille=1000`. Percentiles are nearest-rank over the
+//! cumulative bucket counts and report the *inclusive upper bound* of the
+//! selected bucket (at most 2x the true sample, exact at bucket edges);
+//! the resolution trade is deliberate: a tail estimate that never
+//! under-reports, from 512 bytes of state.
+//!
+//! Histograms from different entities (sources, partitions, tasks) merge
+//! by elementwise bucket addition ([`LatencyHistogram::merge`]), which is
+//! exact — merging loses nothing, unlike percentile-of-percentiles.
+
+/// Number of log2 buckets: bucket 0 + one per bit of a `u64` delta.
+pub const BUCKETS: usize = 64;
+
+/// A fixed-size log2 histogram of nanosecond deltas.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: [0; BUCKETS], count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bucket a delta lands in: 0 for 0, else `64 - leading_zeros`
+    /// capped to the last bucket — bucket `i` covers `[2^(i-1), 2^i)`.
+    pub fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            (64 - ns.leading_zeros() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of a bucket (what percentiles report).
+    pub fn bucket_upper(bucket: usize) -> u64 {
+        if bucket == 0 {
+            0
+        } else if bucket >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << bucket) - 1
+        }
+    }
+
+    /// Record one delta.
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+    }
+
+    /// Samples recorded (including merged-in ones).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Fold another histogram in — exact (bucketwise addition).
+    pub fn merge(&mut self, other: &Self) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+    }
+
+    /// Nearest-rank percentile (`pct` in 0..=100), as the inclusive upper
+    /// bound of the bucket holding that rank. 0 on an empty histogram.
+    pub fn percentile(&self, pct: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((pct / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let rank = rank.min(self.count - 1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if b > 0 && seen > rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+}
+
+/// Percentile summary of one stage, merged across entities.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub stage: super::Stage,
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+}
+
+impl StageStat {
+    pub fn from_hist(stage: super::Stage, h: &LatencyHistogram) -> Self {
+        StageStat {
+            stage,
+            count: h.count(),
+            p50_ns: h.percentile(50.0),
+            p95_ns: h.percentile(95.0),
+            p99_ns: h.percentile(99.0),
+            p999_ns: h.percentile(99.9),
+        }
+    }
+}
+
+/// The end-of-run latency summary carried in `RunSummary` — one
+/// [`StageStat`] per stage that recorded any sample.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyReport {
+    pub stages: Vec<StageStat>,
+    /// Spans that completed the full produce → emit life.
+    pub spans_completed: u64,
+    /// Spans opened but still in flight (or dropped by a fault) at the end.
+    pub spans_dropped: u64,
+}
+
+impl LatencyReport {
+    pub fn stage(&self, stage: super::Stage) -> Option<&StageStat> {
+        self.stages.iter().find(|s| s.stage == stage)
+    }
+}

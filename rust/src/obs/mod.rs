@@ -1,0 +1,477 @@
+//! Observability: per-record latency spans, log2 histograms, controller
+//! gauges, and the JSONL trace/event sink.
+//!
+//! The paper's headline claim is that the push-based source *reduces
+//! processing latency*; the figure harnesses only ever measured p50
+//! throughput. This module closes that gap: it traces a sampled subset of
+//! records through their whole life across the zero-copy spine and folds
+//! each stage delta into fixed-footprint log2 histograms ([`hist`]),
+//! giving every experiment per-stage p50/p95/p99/p999 — and gives the
+//! ROADMAP's elastic-runtime direction the controller inputs it needs
+//! (queue depths, credit-starvation and empty-poll rates, append-latency
+//! time series).
+//!
+//! ## Span lifecycle
+//!
+//! A span is five timestamps riding *beside* the `Chunk`/`Batch` spine
+//! (never inside it — `Msg` has a 64-byte budget the data variants fill):
+//!
+//! ```text
+//! produced ── Append ──> appended ── Deliver ──> notified
+//!          ── Consume ──> handoff ── Operate ──> emitted
+//! ```
+//!
+//! * **produced**: the writer stamps its request at staging time and sends
+//!   the timestamp in the (boxed, budget-free) `Append`/`SealObject` RPC
+//!   envelope.
+//! * **appended**: the broker finishes the append — after dispatch, queue
+//!   and worker-phase service, so the `Append` stage delta includes the
+//!   durable store's WAL cost. The broker keys the span by
+//!   `(partition, chunk offset)`, the identity the spine already carries.
+//! * **notified**: the source first observes the chunk's offsets — the
+//!   pull reply (`on_reply`), the push object consume, or the native
+//!   reply. The `Deliver` stage is the storage→source hand-off the paper
+//!   argues about.
+//! * **handoff**: the source emits the chunk's batch into the pipeline.
+//!   Offsets are gone from `Batch`, so the tracer bridges the hop with a
+//!   per-channel marker FIFO (below).
+//! * **emitted**: the first operator task finishes processing the batch;
+//!   `Operate` is queue wait + operator service, and `EndToEnd` closes
+//!   produced → emitted. Engine-less sources (native) emit at the source,
+//!   with a zero `Operate` stage.
+//!
+//! ## The marker-FIFO bridge
+//!
+//! `Batch` is exactly at its size budget, so spans cannot ride it across
+//! the source→operator hop. Instead the tracer exploits a DES invariant:
+//! delivery on one (sender, receiver) channel is FIFO (same constant
+//! queue-hop latency, deterministic tie order). While tracing is enabled,
+//! a source pushes one marker per batch it sends on a channel —
+//! `Some(span)` for sampled batches, `None` otherwise — and the operator
+//! pops one marker per batch it processes from that channel. Order
+//! matches exactly; a fault/rollback clears the in-flight markers (the
+//! dropped spans are counted, never mis-joined, and replayed chunks
+//! re-enter cleanly because their spans were already retired).
+//!
+//! ## Sampling contract
+//!
+//! `trace_sample_permille` picks spans deterministically (a shared
+//! counter, `counter % 1000 < permille` — the DES makes this
+//! reproducible): 1000 traces every request, 0 turns the plane **off
+//! completely**. Off means off: writers, sources and operators gate every
+//! tracer call on [`Tracer::enabled`], the RPC field stays `None`, no
+//! histogram, FIFO or event buffer is ever touched — the zero-copy parity
+//! suite pins that a traced-off run is byte-identical (same totals, same
+//! `proto::real_payload_allocs`) to one that never knew about tracing.
+//!
+//! Histograms are kept per (stage, entity) and merged exactly across
+//! entities at report time ([`LatencyReport`]); the per-virtual-second
+//! dimension lives in the controller-input series (empty polls, credit
+//! stalls, append latency), which zero-fill idle seconds like the
+//! metrics hub.
+
+mod hist;
+mod sink;
+#[cfg(test)]
+mod tests;
+
+use std::collections::{HashMap, VecDeque};
+
+pub use hist::{LatencyHistogram, LatencyReport, StageStat, BUCKETS};
+pub use sink::{write_jsonl, TraceEvent};
+
+use crate::sim::{Time, SECOND};
+
+/// A span stage — one hop of the produce → emit life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// produced → appended: writer staging to broker log append (includes
+    /// the RPC/seal path and the durable store's WAL cost).
+    Append,
+    /// appended → notified: log append to the source observing the chunk
+    /// (pull reply / push consume) — the paper's contested hop.
+    Deliver,
+    /// notified → handoff: source-side processing until the batch enters
+    /// the pipeline.
+    Consume,
+    /// handoff → emitted: queue wait + first operator service.
+    Operate,
+    /// produced → emitted.
+    EndToEnd,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] =
+        [Stage::Append, Stage::Deliver, Stage::Consume, Stage::Operate, Stage::EndToEnd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Append => "append",
+            Stage::Deliver => "deliver",
+            Stage::Consume => "consume",
+            Stage::Operate => "operate",
+            Stage::EndToEnd => "end_to_end",
+        }
+    }
+}
+
+/// Span state after the broker append.
+#[derive(Debug, Clone, Copy)]
+struct Opened {
+    produced: Time,
+    appended: Time,
+}
+
+/// Span state after the source observed the chunk.
+#[derive(Debug, Clone, Copy)]
+struct Notified {
+    produced: Time,
+    appended: Time,
+    notified: Time,
+}
+
+/// Span state travelling the marker FIFO into the pipeline.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    partition: u64,
+    offset: u64,
+    source: usize,
+    produced: Time,
+    appended: Time,
+    notified: Time,
+    handoff: Time,
+}
+
+/// The tracing plane. One instance lives inside the [`crate::metrics::MetricsHub`]
+/// blackboard every actor already holds, so no actor needed rewiring.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    permille: u32,
+    out: String,
+    sample_counter: u64,
+    /// Spans between append and source notify, keyed (partition, offset).
+    opened: HashMap<(usize, u64), Opened>,
+    /// Spans between notify and pipeline hand-off, keyed (partition, offset).
+    notified: HashMap<(usize, u64), Notified>,
+    /// Marker FIFOs keyed (from_task, to_task): one entry per batch sent on
+    /// the channel while tracing, `Some` only for sampled batches.
+    handoff: HashMap<(usize, usize), VecDeque<Option<InFlight>>>,
+    /// Per-(stage, entity) histograms; merged exactly at report time.
+    hists: HashMap<(Stage, usize), LatencyHistogram>,
+    events: Vec<TraceEvent>,
+    // Controller-input series (ROADMAP item 4), per virtual second.
+    empty_polls: Vec<u64>,
+    credit_stalls: Vec<u64>,
+    append_ns_sum: Vec<u64>,
+    append_acks: Vec<u64>,
+    spans_completed: u64,
+    spans_dropped: u64,
+}
+
+fn bump(series: &mut Vec<u64>, now: Time, n: u64) {
+    let sec = (now / SECOND) as usize;
+    if series.len() <= sec {
+        series.resize(sec + 1, 0);
+    }
+    series[sec] += n;
+}
+
+impl Tracer {
+    /// Install the run's knobs. Called once by the launcher before any
+    /// actor is built.
+    pub fn configure(&mut self, permille: u32, out: &str) {
+        self.permille = permille.min(1000);
+        self.out = out.to_string();
+    }
+
+    /// The hot-path gate: every caller checks this before touching the
+    /// tracer. `false` means the whole plane is inert.
+    pub fn enabled(&self) -> bool {
+        self.permille > 0
+    }
+
+    /// Whether rare events (epochs, switches, faults) should be buffered:
+    /// tracing is on, or a sink path wants the event stream.
+    pub fn events_on(&self) -> bool {
+        self.permille > 0 || !self.out.is_empty()
+    }
+
+    // ---- span lifecycle ---------------------------------------------------
+
+    /// Writer staging: deterministically decide whether this request is
+    /// sampled; `Some(now)` becomes the RPC's `produced_at`.
+    pub fn sample_produced(&mut self, now: Time) -> Option<Time> {
+        if self.permille == 0 {
+            return None;
+        }
+        let pick = self.sample_counter % 1000 < self.permille as u64;
+        self.sample_counter += 1;
+        pick.then_some(now)
+    }
+
+    /// Broker log append of a sampled chunk: open the span.
+    pub fn on_append(&mut self, partition: usize, offset: u64, produced: Time, now: Time) {
+        self.hist(Stage::Append, partition).record(now.saturating_sub(produced));
+        self.opened.insert((partition, offset), Opened { produced, appended: now });
+    }
+
+    /// Source observed the chunk (pull reply / push consume): close the
+    /// Deliver stage. No-op for unsampled or already-retired chunks (e.g.
+    /// replay after a fault).
+    pub fn on_notify(&mut self, partition: usize, offset: u64, now: Time) {
+        if let Some(o) = self.opened.remove(&(partition, offset)) {
+            self.hist(Stage::Deliver, partition).record(now.saturating_sub(o.appended));
+            self.notified.insert(
+                (partition, offset),
+                Notified { produced: o.produced, appended: o.appended, notified: now },
+            );
+        }
+    }
+
+    /// Source sends one batch on channel (from → to). Call once **per
+    /// batch sent** while tracing; `key` is the chunk identity for sampled
+    /// batches, `None` otherwise. Closes Consume and queues the marker.
+    pub fn on_handoff(
+        &mut self,
+        key: Option<(usize, u64)>,
+        from: usize,
+        to: usize,
+        now: Time,
+    ) {
+        let mut marker = None;
+        if let Some((partition, offset)) = key {
+            if let Some(n) = self.notified.remove(&(partition, offset)) {
+                self.hist(Stage::Consume, from).record(now.saturating_sub(n.notified));
+                marker = Some(InFlight {
+                    partition: partition as u64,
+                    offset,
+                    source: from,
+                    produced: n.produced,
+                    appended: n.appended,
+                    notified: n.notified,
+                    handoff: now,
+                });
+            }
+        }
+        self.handoff.entry((from, to)).or_default().push_back(marker);
+    }
+
+    /// Operator task finished one batch from channel (from → to). Call
+    /// once **per batch processed** while tracing; closes Operate and
+    /// EndToEnd for sampled batches.
+    pub fn on_emit(&mut self, from: usize, to: usize, now: Time) {
+        let Some(fifo) = self.handoff.get_mut(&(from, to)) else { return };
+        let Some(marker) = fifo.pop_front() else { return };
+        if let Some(s) = marker {
+            self.hist(Stage::Operate, to).record(now.saturating_sub(s.handoff));
+            self.hist(Stage::EndToEnd, to).record(now.saturating_sub(s.produced));
+            self.spans_completed += 1;
+            if self.events_on() {
+                self.events.push(TraceEvent::Span {
+                    partition: s.partition,
+                    offset: s.offset,
+                    source: s.source,
+                    task: to,
+                    produced: s.produced,
+                    appended: s.appended,
+                    notified: s.notified,
+                    handoff: s.handoff,
+                    emitted: now,
+                });
+            }
+        }
+    }
+
+    /// Engine-less finalisation (the native source has no pipeline):
+    /// Consume closes at `now`, Operate is zero, EndToEnd closes.
+    pub fn finalize_at_source(&mut self, partition: usize, offset: u64, source: usize, now: Time) {
+        if let Some(n) = self.notified.remove(&(partition, offset)) {
+            self.hist(Stage::Consume, source).record(now.saturating_sub(n.notified));
+            self.hist(Stage::Operate, source).record(0);
+            self.hist(Stage::EndToEnd, source).record(now.saturating_sub(n.produced));
+            self.spans_completed += 1;
+            if self.events_on() {
+                self.events.push(TraceEvent::Span {
+                    partition: partition as u64,
+                    offset,
+                    source,
+                    task: source,
+                    produced: n.produced,
+                    appended: n.appended,
+                    notified: n.notified,
+                    handoff: now,
+                    emitted: now,
+                });
+            }
+        }
+    }
+
+    fn hist(&mut self, stage: Stage, entity: usize) -> &mut LatencyHistogram {
+        self.hists.entry((stage, entity)).or_default()
+    }
+
+    // ---- controller-input series -----------------------------------------
+
+    /// A pull/native poll returned no data.
+    pub fn note_empty_poll(&mut self, now: Time) {
+        bump(&mut self.empty_polls, now, 1);
+    }
+
+    /// A source exhausted its downstream credits and blocked.
+    pub fn note_credit_stall(&mut self, now: Time) {
+        bump(&mut self.credit_stalls, now, 1);
+    }
+
+    /// A writer's append round-trip completed (ack received).
+    pub fn note_append_latency(&mut self, now: Time, rtt_ns: u64) {
+        bump(&mut self.append_ns_sum, now, rtt_ns);
+        bump(&mut self.append_acks, now, 1);
+    }
+
+    /// Append-latency time series: mean RTT (ns) per virtual second over
+    /// `[0, horizon_s)`, zero-filled like the metrics hub's series.
+    pub fn append_latency_per_s(&self, horizon_s: u64) -> Vec<u64> {
+        (0..horizon_s as usize)
+            .map(|s| {
+                let acks = self.append_acks.get(s).copied().unwrap_or(0);
+                if acks == 0 {
+                    0
+                } else {
+                    self.append_ns_sum.get(s).copied().unwrap_or(0) / acks
+                }
+            })
+            .collect()
+    }
+
+    /// A per-second series, zero-filled to the horizon.
+    pub fn series_per_s(series: &[u64], horizon_s: u64) -> Vec<u64> {
+        (0..horizon_s as usize).map(|s| series.get(s).copied().unwrap_or(0)).collect()
+    }
+
+    pub fn empty_polls_per_s(&self, horizon_s: u64) -> Vec<u64> {
+        Self::series_per_s(&self.empty_polls, horizon_s)
+    }
+
+    pub fn credit_stalls_per_s(&self, horizon_s: u64) -> Vec<u64> {
+        Self::series_per_s(&self.credit_stalls, horizon_s)
+    }
+
+    // ---- rare events ------------------------------------------------------
+
+    /// A checkpoint epoch completed.
+    pub fn note_epoch(&mut self, epoch: u64, at: Time, span_ns: u64) {
+        if self.events_on() {
+            self.events.push(TraceEvent::Epoch { epoch, at, span_ns });
+        }
+    }
+
+    /// The hybrid source switched mechanisms.
+    pub fn note_switch(&mut self, task: usize, to_push: bool, at: Time) {
+        if self.events_on() {
+            self.events.push(TraceEvent::Switch { task, to_push, at });
+        }
+    }
+
+    /// Fault injection fired: drop all in-flight span state — the channel
+    /// FIFOs are about to be rebuilt by replay, and a mis-joined marker
+    /// would be worse than a dropped span.
+    pub fn note_fault(&mut self, kind: &'static str, at: Time) {
+        if self.events_on() {
+            self.events.push(TraceEvent::Fault { kind, at });
+        }
+        self.drop_in_flight();
+    }
+
+    /// Recovery completed.
+    pub fn note_restore(&mut self, at: Time, recovery_ns: u64) {
+        if self.events_on() {
+            self.events.push(TraceEvent::Restore { at, recovery_ns });
+        }
+    }
+
+    fn drop_in_flight(&mut self) {
+        self.spans_dropped += self.opened.len() as u64 + self.notified.len() as u64;
+        self.opened.clear();
+        self.notified.clear();
+        for fifo in self.handoff.values_mut() {
+            self.spans_dropped += fifo.iter().filter(|m| m.is_some()).count() as u64;
+            fifo.clear();
+        }
+    }
+
+    // ---- end-of-run reporting --------------------------------------------
+
+    /// Merge the per-entity histograms into one [`StageStat`] per stage.
+    pub fn report(&self) -> LatencyReport {
+        let mut stages = Vec::new();
+        for &stage in &Stage::ALL {
+            let mut merged = LatencyHistogram::new();
+            for ((s, _), h) in &self.hists {
+                if *s == stage {
+                    merged.merge(h);
+                }
+            }
+            if !merged.is_empty() {
+                stages.push(StageStat::from_hist(stage, &merged));
+            }
+        }
+        let in_flight = self.opened.len() as u64
+            + self.notified.len() as u64
+            + self
+                .handoff
+                .values()
+                .map(|f| f.iter().filter(|m| m.is_some()).count() as u64)
+                .sum::<u64>();
+        LatencyReport {
+            stages,
+            spans_completed: self.spans_completed,
+            spans_dropped: self.spans_dropped + in_flight,
+        }
+    }
+
+    /// The controller-input gauges the launcher exports at finish.
+    pub fn gauges(&self, horizon_s: u64) -> Vec<(String, f64)> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let mean = |s: &[u64]| {
+            if horizon_s == 0 {
+                0.0
+            } else {
+                s.iter().take(horizon_s as usize).sum::<u64>() as f64 / horizon_s as f64
+            }
+        };
+        let report = self.report();
+        let mut g = vec![
+            ("obs.spans_completed".to_string(), self.spans_completed as f64),
+            ("obs.spans_dropped".to_string(), report.spans_dropped as f64),
+            ("obs.empty_polls_per_s".to_string(), mean(&self.empty_polls)),
+            ("obs.credit_stalls_per_s".to_string(), mean(&self.credit_stalls)),
+            (
+                "obs.append_latency_us_mean".to_string(),
+                mean(&self.append_latency_per_s(horizon_s)) / 1e3,
+            ),
+        ];
+        for st in &report.stages {
+            g.push((format!("obs.{}_p50_us", st.stage.name()), st.p50_ns as f64 / 1e3));
+            g.push((format!("obs.{}_p99_us", st.stage.name()), st.p99_ns as f64 / 1e3));
+        }
+        g
+    }
+
+    /// Buffered events, in DES order (the JSONL sink's content).
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Flush the event buffer to `trace_out` as JSONL; `Ok(None)` when no
+    /// sink path is configured.
+    pub fn write_sink(&self) -> std::io::Result<Option<String>> {
+        if self.out.is_empty() {
+            return Ok(None);
+        }
+        let path = std::path::PathBuf::from(&self.out);
+        write_jsonl(&path, &self.events)?;
+        Ok(Some(self.out.clone()))
+    }
+}

@@ -1,0 +1,85 @@
+//! The structured JSONL trace/event sink.
+//!
+//! Every traced happening — a completed span, a checkpoint epoch, a hybrid
+//! switch-over, a fault or a restore — is buffered as a [`TraceEvent`] in
+//! DES order and flushed to `trace_out` as one JSON object per line when
+//! the run finishes. The JSON is hand-rolled like `BENCH_hotpath.json`
+//! (the offline vendor set has no serde) and every field is an integer or
+//! a short literal string, so the file is byte-deterministic on a fixed
+//! seed: two runs of the same config diff empty — the replay contract the
+//! trace tests pin.
+
+use crate::sim::Time;
+
+/// One line of the JSONL sink, in the order the simulation produced it.
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// A sampled record batch completed its life. Timestamps are virtual
+    /// nanoseconds; `source`/`task` are logical task indices.
+    Span {
+        partition: u64,
+        offset: u64,
+        source: usize,
+        task: usize,
+        produced: Time,
+        appended: Time,
+        notified: Time,
+        handoff: Time,
+        emitted: Time,
+    },
+    /// An aligned checkpoint epoch completed.
+    Epoch { epoch: u64, at: Time, span_ns: u64 },
+    /// The hybrid source switched mechanisms.
+    Switch { task: usize, to_push: bool, at: Time },
+    /// Fault injection killed a victim.
+    Fault { kind: &'static str, at: Time },
+    /// Recovery completed (rollback + replay ready).
+    Restore { at: Time, recovery_ns: u64 },
+}
+
+impl TraceEvent {
+    /// One JSON object, no trailing newline.
+    pub fn to_json(&self) -> String {
+        match self {
+            TraceEvent::Span {
+                partition,
+                offset,
+                source,
+                task,
+                produced,
+                appended,
+                notified,
+                handoff,
+                emitted,
+            } => format!(
+                "{{\"type\":\"span\",\"partition\":{partition},\"offset\":{offset},\
+                 \"source\":{source},\"task\":{task},\"produced\":{produced},\
+                 \"appended\":{appended},\"notified\":{notified},\
+                 \"handoff\":{handoff},\"emitted\":{emitted}}}"
+            ),
+            TraceEvent::Epoch { epoch, at, span_ns } => format!(
+                "{{\"type\":\"epoch\",\"epoch\":{epoch},\"at\":{at},\"span_ns\":{span_ns}}}"
+            ),
+            TraceEvent::Switch { task, to_push, at } => format!(
+                "{{\"type\":\"switch\",\"task\":{task},\"to\":\"{}\",\"at\":{at}}}",
+                if *to_push { "push" } else { "pull" }
+            ),
+            TraceEvent::Fault { kind, at } => {
+                format!("{{\"type\":\"fault\",\"kind\":\"{kind}\",\"at\":{at}}}")
+            }
+            TraceEvent::Restore { at, recovery_ns } => format!(
+                "{{\"type\":\"restore\",\"at\":{at},\"recovery_ns\":{recovery_ns}}}"
+            ),
+        }
+    }
+}
+
+/// Write the buffered events as JSONL (one object per line).
+pub fn write_jsonl(path: &std::path::Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut body = String::with_capacity(events.len() * 96);
+    for e in events {
+        body.push_str(&e.to_json());
+        body.push('\n');
+    }
+    std::fs::write(path, body)
+}

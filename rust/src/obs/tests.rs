@@ -1,0 +1,219 @@
+//! Unit tests for the observability plane: histogram bucket boundaries,
+//! exact cross-entity merging, zero-filled series, the span lifecycle and
+//! the sampling contract.
+
+use super::*;
+
+// ---- histogram -----------------------------------------------------------
+
+#[test]
+fn bucket_boundaries_are_powers_of_two() {
+    // Bucket 0 is the exact-zero bucket; bucket i covers [2^(i-1), 2^i).
+    assert_eq!(LatencyHistogram::bucket_of(0), 0);
+    assert_eq!(LatencyHistogram::bucket_of(1), 1);
+    assert_eq!(LatencyHistogram::bucket_of(2), 2);
+    assert_eq!(LatencyHistogram::bucket_of(3), 2);
+    assert_eq!(LatencyHistogram::bucket_of(4), 3);
+    assert_eq!(LatencyHistogram::bucket_of(1023), 10);
+    assert_eq!(LatencyHistogram::bucket_of(1024), 11);
+    assert_eq!(LatencyHistogram::bucket_of(u64::MAX), BUCKETS - 1);
+    // Upper bounds are inclusive and one-less-than-a-power-of-two.
+    assert_eq!(LatencyHistogram::bucket_upper(0), 0);
+    assert_eq!(LatencyHistogram::bucket_upper(1), 1);
+    assert_eq!(LatencyHistogram::bucket_upper(11), 2047);
+    assert_eq!(LatencyHistogram::bucket_upper(BUCKETS - 1), u64::MAX);
+}
+
+#[test]
+fn percentiles_report_the_bucket_upper_bound() {
+    let mut h = LatencyHistogram::new();
+    assert_eq!(h.percentile(50.0), 0, "empty histogram reports 0");
+    for v in [100u64, 100, 100, 100, 100, 100, 100, 100, 100, 4000] {
+        h.record(v);
+    }
+    assert_eq!(h.count(), 10);
+    // 100 lives in [64, 128) -> upper bound 127; 4000 in [2048, 4096).
+    assert_eq!(h.percentile(50.0), 127);
+    assert_eq!(h.percentile(0.0), 127);
+    assert_eq!(h.percentile(100.0), 4095);
+    // The p99 nearest rank of 10 samples is the last one.
+    assert_eq!(h.percentile(99.0), 4095);
+}
+
+#[test]
+fn merge_is_exact_bucketwise_addition() {
+    // Per-entity histograms merged must equal one histogram fed everything.
+    let mut a = LatencyHistogram::new();
+    let mut b = LatencyHistogram::new();
+    let mut whole = LatencyHistogram::new();
+    for v in [1u64, 50, 999, 12_345] {
+        a.record(v);
+        whole.record(v);
+    }
+    for v in [7u64, 7, 1_000_000] {
+        b.record(v);
+        whole.record(v);
+    }
+    a.merge(&b);
+    assert_eq!(a.count(), whole.count());
+    for pct in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+        assert_eq!(a.percentile(pct), whole.percentile(pct), "pct {pct}");
+    }
+}
+
+// ---- per-second series ---------------------------------------------------
+
+#[test]
+fn controller_series_zero_fill_empty_seconds() {
+    let mut t = Tracer::default();
+    t.configure(1000, "");
+    t.note_empty_poll(0);
+    t.note_empty_poll(3 * SECOND + 1);
+    t.note_empty_poll(3 * SECOND + 2);
+    // Seconds 1, 2 and 4 saw nothing: they must read as explicit zeros.
+    assert_eq!(t.empty_polls_per_s(5), vec![1, 0, 0, 2, 0]);
+    t.note_append_latency(SECOND, 1_000);
+    t.note_append_latency(SECOND, 3_000);
+    assert_eq!(t.append_latency_per_s(3), vec![0, 2_000, 0]);
+    assert_eq!(t.credit_stalls_per_s(2), vec![0, 0]);
+}
+
+// ---- span lifecycle ------------------------------------------------------
+
+#[test]
+fn span_walks_every_stage_through_the_marker_fifo() {
+    let mut t = Tracer::default();
+    t.configure(1000, "");
+    let produced = t.sample_produced(100).expect("permille=1000 samples everything");
+    t.on_append(2, 7, produced, 600); // Append = 500
+    t.on_notify(2, 7, 1_600); // Deliver = 1000
+    t.on_handoff(Some((2, 7)), 0, 4, 3_600); // Consume = 2000
+    t.on_emit(0, 4, 7_600); // Operate = 4000, EndToEnd = 7500
+    let r = t.report();
+    assert_eq!(r.spans_completed, 1);
+    assert_eq!(r.spans_dropped, 0);
+    for (stage, upper) in [
+        (Stage::Append, 511),   // 500 in [256, 512)
+        (Stage::Deliver, 1023), // 1000 in [512, 1024)
+        (Stage::Consume, 2047),
+        (Stage::Operate, 4095),
+        (Stage::EndToEnd, 8191), // 7500 in [4096, 8192)
+    ] {
+        let s = r.stage(stage).unwrap_or_else(|| panic!("{} recorded", stage.name()));
+        assert_eq!(s.count, 1, "{}", stage.name());
+        assert_eq!(s.p50_ns, upper, "{}", stage.name());
+    }
+    // The span event carries all five timestamps.
+    assert_eq!(t.events().len(), 1);
+    let json = t.events()[0].to_json();
+    for needle in [
+        "\"type\":\"span\"",
+        "\"partition\":2",
+        "\"offset\":7",
+        "\"produced\":100",
+        "\"appended\":600",
+        "\"notified\":1600",
+        "\"handoff\":3600",
+        "\"emitted\":7600",
+    ] {
+        assert!(json.contains(needle), "{json} lacks {needle}");
+    }
+}
+
+#[test]
+fn unsampled_markers_keep_the_fifo_aligned() {
+    // Channel order: unsampled, sampled, unsampled. The operator pops one
+    // marker per batch; the sampled span must land on the middle pop.
+    let mut t = Tracer::default();
+    t.configure(1000, "");
+    t.on_append(0, 1, 0, 10);
+    t.on_notify(0, 1, 20);
+    t.on_handoff(None, 0, 4, 30);
+    t.on_handoff(Some((0, 1)), 0, 4, 30);
+    t.on_handoff(None, 0, 4, 30);
+    t.on_emit(0, 4, 40);
+    assert_eq!(t.report().spans_completed, 0, "first pop is the unsampled marker");
+    t.on_emit(0, 4, 50);
+    assert_eq!(t.report().spans_completed, 1, "second pop completes the span");
+    t.on_emit(0, 4, 60);
+    assert_eq!(t.report().spans_completed, 1);
+    // A pop on a channel that never queued markers is a no-op.
+    t.on_emit(9, 4, 70);
+    assert_eq!(t.report().spans_completed, 1);
+}
+
+#[test]
+fn native_finalize_closes_with_zero_operate() {
+    let mut t = Tracer::default();
+    t.configure(1000, "");
+    t.on_append(1, 0, 0, 100);
+    t.on_notify(1, 0, 200);
+    t.finalize_at_source(1, 0, 3, 300);
+    let r = t.report();
+    assert_eq!(r.spans_completed, 1);
+    assert_eq!(r.stage(Stage::Operate).unwrap().p50_ns, 0, "zero lands in bucket 0");
+    assert!(r.stage(Stage::EndToEnd).unwrap().p50_ns >= 300 - 1);
+}
+
+#[test]
+fn sampling_permille_is_deterministic_and_proportional() {
+    let mut t = Tracer::default();
+    t.configure(250, "");
+    let picks: Vec<bool> = (0..4000).map(|i| t.sample_produced(i).is_some()).collect();
+    assert_eq!(picks.iter().filter(|&&p| p).count(), 1000, "250/1000 of 4000");
+    // Same config, same call order -> identical decisions.
+    let mut t2 = Tracer::default();
+    t2.configure(250, "");
+    let picks2: Vec<bool> = (0..4000).map(|i| t2.sample_produced(i).is_some()).collect();
+    assert_eq!(picks, picks2);
+}
+
+#[test]
+fn disabled_tracer_is_inert() {
+    let mut t = Tracer::default();
+    t.configure(0, "");
+    assert!(!t.enabled());
+    assert!(t.sample_produced(123).is_none());
+    assert!(t.gauges(10).is_empty());
+    assert!(t.report().stages.is_empty());
+    assert!(t.events().is_empty());
+}
+
+#[test]
+fn fault_drops_in_flight_spans_without_misjoining() {
+    let mut t = Tracer::default();
+    t.configure(1000, "");
+    t.on_append(0, 0, 0, 10);
+    t.on_notify(0, 0, 20);
+    t.on_handoff(Some((0, 0)), 0, 4, 30);
+    t.on_append(0, 1, 0, 40); // still in `opened`
+    t.note_fault("worker", 50);
+    // Both spans are gone; a later pop finds an empty FIFO.
+    t.on_emit(0, 4, 60);
+    let r = t.report();
+    assert_eq!(r.spans_completed, 0);
+    assert_eq!(r.spans_dropped, 2);
+    // Replayed chunks re-notify without a span: a clean no-op.
+    t.on_notify(0, 0, 70);
+    assert_eq!(t.report().spans_completed, 0);
+}
+
+#[test]
+fn event_json_is_one_object_per_line() {
+    let mut t = Tracer::default();
+    t.configure(0, "/dev/null"); // events_on via sink path, tracing off
+    assert!(t.events_on());
+    t.note_epoch(3, 1_000, 500);
+    t.note_switch(2, true, 2_000);
+    t.note_fault("source", 3_000);
+    t.note_restore(4_000, 900);
+    let lines: Vec<String> = t.events().iter().map(|e| e.to_json()).collect();
+    assert_eq!(lines.len(), 4);
+    assert!(lines[0].contains("\"type\":\"epoch\"") && lines[0].contains("\"epoch\":3"));
+    assert!(lines[1].contains("\"to\":\"push\""));
+    assert!(lines[2].contains("\"kind\":\"source\""));
+    assert!(lines[3].contains("\"recovery_ns\":900"));
+    for l in &lines {
+        assert!(l.starts_with('{') && l.ends_with('}') && !l.contains('\n'));
+    }
+}

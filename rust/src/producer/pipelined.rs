@@ -47,6 +47,8 @@ struct Inflight {
     seqs: Vec<(PartitionId, u64)>,
     sent_at: Time,
     attempts: u32,
+    /// Generation stamp when the latency tracer sampled this request.
+    produced_at: Option<Time>,
 }
 
 /// Per-partition ack sequencing: acks may arrive out of order; the log
@@ -157,8 +159,13 @@ impl PipelinedWriter {
         if !self.generating {
             if let Some((rpc, chunks, seqs)) = self.ready.take() {
                 if self.inflight.len() < self.params.inflight_window {
-                    self.inflight
-                        .insert(rpc, Inflight { chunks, seqs, sent_at: ctx.now(), attempts: 1 });
+                    // None whenever tracing is off (sample_produced self-gates).
+                    let produced_at =
+                        self.metrics.borrow_mut().tracer.sample_produced(ctx.now());
+                    self.inflight.insert(
+                        rpc,
+                        Inflight { chunks, seqs, sent_at: ctx.now(), attempts: 1, produced_at },
+                    );
                     self.inflight_peak = self.inflight_peak.max(self.inflight.len());
                     self.transmit(rpc, ctx);
                 } else {
@@ -190,7 +197,10 @@ impl PipelinedWriter {
                 id: rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.base.node,
-                kind: RpcKind::Append { chunks: inflight.chunks.clone() },
+                kind: RpcKind::Append {
+                    chunks: inflight.chunks.clone(),
+                    produced_at: inflight.produced_at,
+                },
             }),
         );
     }
@@ -211,13 +221,13 @@ impl PipelinedWriter {
                 let inflight =
                     self.inflight.remove(&env.id).expect("ack matches an in-flight append");
                 self.sequence_ack(&inflight.seqs);
-                self.acct.on_acked(records, bytes, ctx.now() - inflight.sent_at);
-                self.metrics.borrow_mut().record(
-                    Class::ProducerRecords,
-                    self.params.base.entity,
-                    ctx.now(),
-                    records,
-                );
+                let rtt = ctx.now() - inflight.sent_at;
+                self.acct.on_acked(records, bytes, rtt);
+                let mut m = self.metrics.borrow_mut();
+                m.record(Class::ProducerRecords, self.params.base.entity, ctx.now(), records);
+                if m.tracer.enabled() {
+                    m.tracer.note_append_latency(ctx.now(), rtt);
+                }
             }
             RpcReply::Error { reason } => {
                 let attempts = self

@@ -55,6 +55,8 @@ struct SealInflight {
     object: ObjectId,
     sent_at: Time,
     attempts: u32,
+    /// Generation stamp when the latency tracer sampled this seal.
+    produced_at: Option<Time>,
 }
 
 /// The colocated shared-memory producer actor.
@@ -177,7 +179,12 @@ impl SharedMemWriter {
             self.objects_sealed += 1;
             let rpc = self.next_rpc;
             self.next_rpc += 1;
-            self.seals.insert(rpc, SealInflight { object, sent_at: ctx.now(), attempts: 1 });
+            // None whenever tracing is off (sample_produced self-gates).
+            let produced_at = self.metrics.borrow_mut().tracer.sample_produced(ctx.now());
+            self.seals.insert(
+                rpc,
+                SealInflight { object, sent_at: ctx.now(), attempts: 1, produced_at },
+            );
             self.notify_seal(rpc, ctx);
         }
         if self.parked.is_none() && !self.generating && !self.done {
@@ -202,7 +209,7 @@ impl SharedMemWriter {
                 id: rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.base.node,
-                kind: RpcKind::SealObject { id: seal.object },
+                kind: RpcKind::SealObject { id: seal.object, produced_at: seal.produced_at },
             }),
         );
     }
@@ -215,13 +222,15 @@ impl SharedMemWriter {
             }
             RpcReply::SealAck { records, bytes } => {
                 let seal = self.seals.remove(&env.id).expect("ack matches an in-flight seal");
-                self.acct.on_acked(records, bytes, ctx.now() - seal.sent_at);
-                self.metrics.borrow_mut().record(
-                    Class::ProducerRecords,
-                    self.params.base.entity,
-                    ctx.now(),
-                    records,
-                );
+                let rtt = ctx.now() - seal.sent_at;
+                self.acct.on_acked(records, bytes, rtt);
+                {
+                    let mut m = self.metrics.borrow_mut();
+                    m.record(Class::ProducerRecords, self.params.base.entity, ctx.now(), records);
+                    if m.tracer.enabled() {
+                        m.tracer.note_append_latency(ctx.now(), rtt);
+                    }
+                }
                 // The broker released the object before acking: a parked
                 // batch can seal immediately.
                 self.try_seal(false, ctx);

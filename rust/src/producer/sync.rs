@@ -22,6 +22,8 @@ struct Inflight {
     chunks: Vec<(PartitionId, Chunk)>,
     sent_at: Time,
     attempts: u32,
+    /// Generation stamp when the latency tracer sampled this request.
+    produced_at: Option<Time>,
 }
 
 /// The synchronous producer actor: a serial generate → append → ack loop.
@@ -80,7 +82,10 @@ impl Producer {
         let chunks = std::mem::take(&mut self.staged);
         let rpc = self.next_rpc;
         self.next_rpc += 1;
-        self.inflight = Some(Inflight { rpc, chunks, sent_at: ctx.now(), attempts: 1 });
+        // None whenever tracing is off (sample_produced self-gates).
+        let produced_at = self.metrics.borrow_mut().tracer.sample_produced(ctx.now());
+        self.inflight =
+            Some(Inflight { rpc, chunks, sent_at: ctx.now(), attempts: 1, produced_at });
         self.transmit(ctx);
     }
 
@@ -101,7 +106,10 @@ impl Producer {
                 id: inflight.rpc,
                 reply_to: ctx.self_id(),
                 from_node: self.params.node,
-                kind: RpcKind::Append { chunks: inflight.chunks.clone() },
+                kind: RpcKind::Append {
+                    chunks: inflight.chunks.clone(),
+                    produced_at: inflight.produced_at,
+                },
             }),
         );
     }
@@ -111,13 +119,13 @@ impl Producer {
             RpcReply::AppendAck { records, bytes } => {
                 let inflight = self.inflight.take().expect("ack matches the in-flight append");
                 debug_assert_eq!(inflight.rpc, env.id);
-                self.acct.on_acked(records, bytes, ctx.now() - inflight.sent_at);
-                self.metrics.borrow_mut().record(
-                    Class::ProducerRecords,
-                    self.params.entity,
-                    ctx.now(),
-                    records,
-                );
+                let rtt = ctx.now() - inflight.sent_at;
+                self.acct.on_acked(records, bytes, rtt);
+                let mut m = self.metrics.borrow_mut();
+                m.record(Class::ProducerRecords, self.params.entity, ctx.now(), records);
+                if m.tracer.enabled() {
+                    m.tracer.note_append_latency(ctx.now(), rtt);
+                }
             }
             RpcReply::Error { reason } => {
                 let attempts =

@@ -33,7 +33,7 @@ use std::cell::Cell;
 use std::rc::Rc;
 
 use crate::config::FaultKind;
-use crate::sim::ActorId;
+use crate::sim::{ActorId, Time};
 
 /// Global partition index within the (single) stream topic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -156,7 +156,11 @@ pub type RpcId = u64;
 #[derive(Debug, Clone)]
 pub enum RpcKind {
     /// Producer append: one sealed chunk per partition (`ReqS` total).
-    Append { chunks: Vec<(PartitionId, Chunk)> },
+    /// `produced_at` stamps the request's generation time when the latency
+    /// tracer sampled it ([`crate::obs::Tracer::sample_produced`]); `None`
+    /// whenever tracing is off — the envelope is boxed, so the field costs
+    /// nothing on the `Msg` budget.
+    Append { chunks: Vec<(PartitionId, Chunk)>, produced_at: Option<Time> },
     /// Pull-based consumer read: per-partition resume offsets, up to
     /// `max_bytes` (the consumer `CS`) returned **per partition**.
     Pull { assignments: Vec<(PartitionId, ChunkOffset)>, max_bytes: u64 },
@@ -178,8 +182,9 @@ pub enum RpcKind {
     CommitCheckpoint { epoch: u64, cursors: Vec<(PartitionId, ChunkOffset)> },
     /// A colocated producer sealed shared object `id`: append its chunks to
     /// the partition logs and release the buffer. The payload never crosses
-    /// the dispatcher — only this control notification does.
-    SealObject { id: ObjectId },
+    /// the dispatcher — only this control notification does. `produced_at`
+    /// is the sampled generation stamp (see [`RpcKind::Append`]).
+    SealObject { id: ObjectId, produced_at: Option<Time> },
     /// Primary -> backup replication of one append (Replication = 2).
     Replicate { bytes: u64, chunks: u32 },
 }

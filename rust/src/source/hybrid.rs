@@ -145,6 +145,9 @@ pub struct HybridSource {
     inflight_since: Time,
     /// Batches awaiting mapper credits (shared by both paths).
     pending: VecDeque<Batch>,
+    /// Mirror of `pending` while tracing: each batch's chunk identity for
+    /// the tracer's marker FIFO. Stays empty when tracing is off.
+    trace_keys: VecDeque<Option<(usize, u64)>>,
     /// Sliding window of completed pulls: (was_empty, round_trip).
     poll_window: VecDeque<(bool, Time)>,
     /// Sealed objects awaiting the consume thread.
@@ -216,6 +219,7 @@ impl HybridSource {
             next_rpc: 0,
             inflight_since: 0,
             pending: VecDeque::new(),
+            trace_keys: VecDeque::new(),
             poll_window: VecDeque::new(),
             ready: VecDeque::new(),
             consuming: None,
@@ -307,6 +311,9 @@ impl HybridSource {
         self.poll_window.push_back((chunks.is_empty(), latency));
         if chunks.is_empty() {
             self.empty_pulls += 1;
+            if self.metrics.borrow().tracer.enabled() {
+                self.metrics.borrow_mut().tracer.note_empty_poll(ctx.now());
+            }
             self.maybe_checkpoint(ctx);
             if self.should_switch_to_push(ctx.now()) {
                 self.begin_subscribe(ctx);
@@ -321,6 +328,12 @@ impl HybridSource {
                 if *p == sc.partition {
                     *off = (*off).max(sc.offset + 1);
                 }
+            }
+        }
+        if self.metrics.borrow().tracer.enabled() {
+            let mut m = self.metrics.borrow_mut();
+            for sc in &chunks {
+                m.tracer.on_notify(sc.partition.0, sc.offset, ctx.now());
             }
         }
         let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
@@ -338,8 +351,12 @@ impl HybridSource {
             panic!("hybrid source {}: JobDone outside PullProcessing", self.params.task_idx)
         };
         self.last_delivery = ctx.now();
+        let tracing = self.metrics.borrow().tracer.enabled();
         for sc in chunks {
             self.records_consumed += sc.chunk.records as u64;
+            if tracing {
+                self.trace_keys.push_back(Some((sc.partition.0, sc.offset)));
+            }
             // One chunk per batch, inline — shared, never copied.
             self.pending.push_back(Batch {
                 from_task: self.params.task_idx,
@@ -407,6 +424,7 @@ impl HybridSource {
         };
         self.rpc(RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
         self.switches_to_push += 1;
+        self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, true, ctx.now());
         self.last_switch = ctx.now();
         self.poll_window.clear();
         self.phase = Phase::Subscribing;
@@ -467,6 +485,7 @@ impl HybridSource {
         let id = self.consuming.take().expect("JobDone only while consuming");
         self.last_delivery = ctx.now();
         {
+            let tracing = self.metrics.borrow().tracer.enabled();
             let store = self.store.borrow();
             for sc in store.read(id) {
                 self.records_consumed += sc.chunk.records as u64;
@@ -476,6 +495,14 @@ impl HybridSource {
                     if *p == sc.partition {
                         *off = (*off).max(sc.offset + 1);
                     }
+                }
+                if tracing {
+                    self.metrics.borrow_mut().tracer.on_notify(
+                        sc.partition.0,
+                        sc.offset,
+                        ctx.now(),
+                    );
+                    self.trace_keys.push_back(Some((sc.partition.0, sc.offset)));
                 }
                 self.pending.push_back(Batch {
                     from_task: self.params.task_idx,
@@ -512,6 +539,7 @@ impl HybridSource {
         if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
             self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
             self.switches_to_pull += 1;
+            self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, now);
             self.last_switch = now;
             self.phase = Phase::Unsubscribing;
         } else {
@@ -649,6 +677,7 @@ impl HybridSource {
             self.discard_stale(id, ctx);
         }
         self.pending.clear();
+        self.trace_keys.clear();
         self.pending_epoch = None;
         self.poll_window.clear();
         self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
@@ -674,18 +703,31 @@ impl HybridSource {
     /// Send pending batches while credits allow; once drained, resume the
     /// active loop (free the object / next pull / switch).
     fn flush(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let tracing = self.metrics.borrow().tracer.enabled();
         while !self.pending.is_empty() {
             let n = self.params.downstream.len();
             let Some(k) = (0..n)
                 .map(|i| (self.rr + i) % n)
                 .find(|&k| self.ledger.has(self.params.downstream[k]))
             else {
+                if tracing {
+                    self.metrics.borrow_mut().tracer.note_credit_stall(ctx.now());
+                }
                 return; // blocked (phase stays PullBlocked / object stays held)
             };
             let target = self.params.downstream[k];
             self.rr = k + 1;
             self.ledger.spend(target);
             let batch = self.pending.pop_front().expect("checked non-empty");
+            if tracing {
+                let key = self.trace_keys.pop_front().flatten();
+                self.metrics.borrow_mut().tracer.on_handoff(
+                    key,
+                    self.params.task_idx,
+                    target,
+                    ctx.now(),
+                );
+            }
             let actor = self.registry.borrow().actor_of(target);
             ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
         }

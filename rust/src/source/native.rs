@@ -155,6 +155,9 @@ impl NativeConsumer {
         self.trim_gap_chunks += super::api::apply_trims(&mut self.offsets, &trims);
         if chunks.is_empty() {
             self.empty_pulls += 1;
+            if self.metrics.borrow().tracer.enabled() {
+                self.metrics.borrow_mut().tracer.note_empty_poll(ctx.now());
+            }
             self.maybe_checkpoint(ctx);
             ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
             return;
@@ -164,6 +167,12 @@ impl NativeConsumer {
                 if *p == sc.partition {
                     *off = (*off).max(sc.offset + 1);
                 }
+            }
+        }
+        if self.metrics.borrow().tracer.enabled() {
+            let mut m = self.metrics.borrow_mut();
+            for sc in &chunks {
+                m.tracer.on_notify(sc.partition.0, sc.offset, ctx.now());
             }
         }
         let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
@@ -185,12 +194,21 @@ impl NativeConsumer {
             }
         }
         self.records_consumed += records;
-        self.metrics.borrow_mut().record(
-            Class::ConsumerTuples,
-            self.params.entity,
-            ctx.now(),
-            records,
-        );
+        let mut m = self.metrics.borrow_mut();
+        m.record(Class::ConsumerTuples, self.params.entity, ctx.now(), records);
+        if m.tracer.enabled() {
+            // No pipeline downstream: spans close here with a zero Operate
+            // stage (the native baseline's whole point).
+            for sc in &chunks {
+                m.tracer.finalize_at_source(
+                    sc.partition.0,
+                    sc.offset,
+                    self.params.entity,
+                    ctx.now(),
+                );
+            }
+        }
+        drop(m);
         self.issue_pull(ctx);
     }
 

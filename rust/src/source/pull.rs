@@ -67,6 +67,10 @@ pub struct PullSource {
     rr: usize,
     next_rpc: u64,
     pending: VecDeque<Batch>,
+    /// Mirror of `pending` while tracing: each batch's chunk identity
+    /// `(partition, offset)`, handed to the tracer's marker FIFO at send
+    /// time. Stays empty when tracing is off.
+    trace_keys: VecDeque<Option<(usize, u64)>>,
     /// Barrier waiting for the next clean point of the fetch loop.
     pending_epoch: Option<u64>,
     /// Recovery incarnation; stale-tagged messages are dropped.
@@ -106,6 +110,7 @@ impl PullSource {
             rr: 0,
             next_rpc: 0,
             pending: VecDeque::new(),
+            trace_keys: VecDeque::new(),
             pending_epoch: None,
             inc: 0,
             failed: false,
@@ -181,6 +186,9 @@ impl PullSource {
         self.trim_gap_chunks += super::api::apply_trims(&mut self.offsets, &trims);
         if chunks.is_empty() {
             self.empty_pulls += 1;
+            if self.metrics.borrow().tracer.enabled() {
+                self.metrics.borrow_mut().tracer.note_empty_poll(ctx.now());
+            }
             self.maybe_checkpoint(ctx);
             self.state = State::Idle;
             ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
@@ -192,6 +200,12 @@ impl PullSource {
                 if *p == sc.partition {
                     *off = (*off).max(sc.offset + 1);
                 }
+            }
+        }
+        if self.metrics.borrow().tracer.enabled() {
+            let mut m = self.metrics.borrow_mut();
+            for sc in &chunks {
+                m.tracer.on_notify(sc.partition.0, sc.offset, ctx.now());
             }
         }
         let records: u64 = chunks.iter().map(|c| c.chunk.records as u64).sum();
@@ -207,8 +221,12 @@ impl PullSource {
         let State::Processing(chunks) = std::mem::replace(&mut self.state, State::Blocked) else {
             panic!("pull source {}: JobDone outside Processing", self.params.task_idx)
         };
+        let tracing = self.metrics.borrow().tracer.enabled();
         for sc in chunks {
             self.records_consumed += sc.chunk.records as u64;
+            if tracing {
+                self.trace_keys.push_back(Some((sc.partition.0, sc.offset)));
+            }
             // One batch per chunk, chunk inline — the fetched payload is
             // shared into the pipeline, never copied (see `ChunkList`).
             self.pending.push_back(Batch {
@@ -225,6 +243,7 @@ impl PullSource {
     /// Send pending batches while credits allow; when drained, loop back to
     /// the next pull.
     fn flush(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let tracing = self.metrics.borrow().tracer.enabled();
         while !self.pending.is_empty() {
             // Round-robin over the mappers, skipping credit-exhausted ones.
             let n = self.params.downstream.len();
@@ -233,12 +252,24 @@ impl PullSource {
                 .find(|&k| self.ledger.has(self.params.downstream[k]))
             else {
                 self.state = State::Blocked;
+                if tracing {
+                    self.metrics.borrow_mut().tracer.note_credit_stall(ctx.now());
+                }
                 return;
             };
             let target = self.params.downstream[k];
             self.rr = k + 1;
             self.ledger.spend(target);
             let batch = self.pending.pop_front().expect("checked non-empty");
+            if tracing {
+                let key = self.trace_keys.pop_front().flatten();
+                self.metrics.borrow_mut().tracer.on_handoff(
+                    key,
+                    self.params.task_idx,
+                    target,
+                    ctx.now(),
+                );
+            }
             let actor = self.registry.borrow().actor_of(target);
             ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
         }
@@ -250,6 +281,7 @@ impl PullSource {
     fn on_fault(&mut self, ctx: &mut Ctx<'_, Msg>) {
         self.failed = true;
         self.pending.clear();
+        self.trace_keys.clear();
         self.pending_epoch = None;
         let cp = self.params.checkpoint.as_ref().unwrap_or_else(|| {
             panic!("pull source {} faulted without checkpointing", self.params.task_idx)
@@ -264,6 +296,7 @@ impl PullSource {
         self.inc = inc;
         self.failed = false;
         self.pending.clear();
+        self.trace_keys.clear();
         self.pending_epoch = None;
         self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
         self.rr = 0;

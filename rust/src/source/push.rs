@@ -15,6 +15,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::checkpoint::{SharedCheckpoint, SourceSnapshot};
 use crate::config::{CostModel, SourceMode};
+use crate::metrics::SharedMetrics;
 use crate::net::{NodeId, SharedNetwork};
 use crate::proto::{
     Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
@@ -72,6 +73,9 @@ struct MemberState {
     /// Batches awaiting mapper credits; the object is freed only after
     /// they drain (backpressure propagates to the broker's push thread).
     pending: VecDeque<Batch>,
+    /// Mirror of `pending` while tracing: each batch's chunk identity for
+    /// the tracer's marker FIFO. Stays empty when tracing is off.
+    trace_keys: VecDeque<Option<(usize, u64)>>,
     pending_free: Option<ObjectId>,
     /// Exclusive consumed floor per owned partition: offsets of everything
     /// this member materialised and handed downstream — the member's
@@ -119,6 +123,7 @@ pub struct PushSourceGroup {
     resub_floor: usize,
     replayed: u64,
     rr: usize,
+    metrics: SharedMetrics,
     net: SharedNetwork,
     store: crate::plasma::SharedStore,
     registry: SharedRegistry,
@@ -127,6 +132,7 @@ pub struct PushSourceGroup {
 impl PushSourceGroup {
     pub fn new(
         params: PushGroupParams,
+        metrics: SharedMetrics,
         net: SharedNetwork,
         store: crate::plasma::SharedStore,
         registry: SharedRegistry,
@@ -157,6 +163,7 @@ impl PushSourceGroup {
             resub_floor: usize::MAX,
             replayed: 0,
             rr: 0,
+            metrics,
             net,
             store,
             registry,
@@ -285,6 +292,7 @@ impl PushSourceGroup {
         };
         let from_task = self.params.members[m].task_idx;
         let inc = self.inc;
+        let tracing = self.metrics.borrow().tracer.enabled();
         {
             let store = self.store.borrow();
             let state = &mut self.members[m];
@@ -294,6 +302,16 @@ impl PushSourceGroup {
                     if *p == sc.partition {
                         *off = (*off).max(sc.offset + 1);
                     }
+                }
+                if tracing {
+                    // "Notified" = the source first observes the chunk's
+                    // offsets — for push, the object-consume moment.
+                    self.metrics.borrow_mut().tracer.on_notify(
+                        sc.partition.0,
+                        sc.offset,
+                        ctx.now(),
+                    );
+                    state.trace_keys.push_back(Some((sc.partition.0, sc.offset)));
                 }
                 // The paper's Step 3 hand-off: the sealed object's chunk is
                 // shared into the pipeline by pointer (`Rc` bump inline in
@@ -316,6 +334,7 @@ impl PushSourceGroup {
     /// Forward the member's batches under credits; once drained, notify the
     /// broker (Step 4) so the buffer is reused, then serve its next object.
     fn flush(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        let tracing = self.metrics.borrow().tracer.enabled();
         loop {
             let Some(batch) = ({
                 let state = &mut self.members[m];
@@ -330,11 +349,23 @@ impl PushSourceGroup {
                 .find(|&k| self.ledger.has(self.params.downstream[k]))
             else {
                 self.members[m].pending.push_front(batch);
+                if tracing {
+                    self.metrics.borrow_mut().tracer.note_credit_stall(ctx.now());
+                }
                 return; // blocked: object stays held -> broker stalls
             };
             let target = self.params.downstream[k];
             self.rr = k + 1;
             self.ledger.spend(target);
+            if tracing {
+                let key = self.members[m].trace_keys.pop_front().flatten();
+                self.metrics.borrow_mut().tracer.on_handoff(
+                    key,
+                    batch.from_task,
+                    target,
+                    ctx.now(),
+                );
+            }
             let actor = self.registry.borrow().actor_of(target);
             ctx.send_in(self.params.cost.queue_hop_ns, actor, Msg::Data(batch));
         }
@@ -416,6 +447,7 @@ impl PushSourceGroup {
             let ids: Vec<ObjectId> = {
                 let s = &mut self.members[m];
                 s.pending.clear();
+                s.trace_keys.clear();
                 s.ready
                     .drain(..)
                     .chain(s.consuming.take())
@@ -657,6 +689,7 @@ impl SourceFactory for PushSourceFactory {
                 checkpoint: w.checkpoint.clone(),
                 cost: c.cost.clone(),
             },
+            w.metrics.clone(),
             w.net.clone(),
             w.store.clone(),
             w.registry.clone(),

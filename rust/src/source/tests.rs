@@ -136,6 +136,7 @@ fn rig_opts(
                 checkpoint: None,
                 cost: CostModel::default(),
             },
+            metrics.clone(),
             net.clone(),
             store.clone(),
             registry.clone(),

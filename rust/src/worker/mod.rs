@@ -415,6 +415,11 @@ impl OperatorTask {
         self.batches_processed += 1;
         self.route(&mut out, ctx);
         self.out_pool = out;
+        if self.metrics.borrow().tracer.enabled() {
+            // Closes the span the upstream source opened for this batch's
+            // chunk (marker FIFO keyed by the (from, to) channel).
+            self.metrics.borrow_mut().tracer.on_emit(from_upstream, me, ctx.now());
+        }
         // Return the credit to the upstream that sent the processed batch.
         let upstream_actor = self.registry.borrow().actor_of(from_upstream);
         ctx.send(

@@ -1,0 +1,151 @@
+//! Tracing-plane integration tests: per-stage histograms across every
+//! source mode, the deterministic JSONL replay contract, and the obs
+//! gauges the launcher exports into the experiment report.
+//!
+//! The replay contract is the load-bearing one: the sink buffers events
+//! in DES order and every field is virtual time or a logical index, so
+//! two runs of the same config and seed must produce byte-identical
+//! JSONL. Any nondeterminism that creeps into the spine (hash-order
+//! iteration, wall-clock leakage) breaks this before it breaks a figure.
+
+use zettastream::cluster::launch;
+use zettastream::config::{ExperimentConfig, FaultKind, SourceMode, Workload, WriteMode};
+use zettastream::obs::Stage;
+
+/// Bounded sim-plane config with the tracer sampling every record.
+fn traced_config(mode: SourceMode, tag: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("obs-{tag}-{}", mode.name()),
+        np: 2,
+        nc: 2,
+        nmap: 4,
+        ns: 4,
+        producer_chunk: 4 * 1024,
+        consumer_chunk: 16 * 1024,
+        record_size: 100,
+        broker_cores: 8,
+        mode,
+        workload: Workload::Count,
+        corpus_records: 2_000, // per producer; drains long before the horizon
+        duration_secs: 10,
+        warmup_secs: 1,
+        seed: 0xC0FFEE,
+        trace_sample_permille: 1000,
+        ..Default::default()
+    }
+}
+
+fn sink_path(tag: &str) -> std::path::PathBuf {
+    // Unique per test process so parallel `cargo test` invocations never
+    // collide; the two same-seed runs inside one test use distinct tags.
+    std::env::temp_dir().join(format!("zs_trace_{}_{tag}.jsonl", std::process::id()))
+}
+
+#[test]
+fn stage_histograms_populate_for_every_source_mode() {
+    for &mode in &SourceMode::ALL {
+        let summary = launch(&traced_config(mode, "stages"), None).run();
+        let lat = &summary.latency;
+        assert!(
+            lat.spans_completed > 0,
+            "{}: sampled spans completed end to end",
+            mode.name()
+        );
+        for stage in [Stage::Append, Stage::Deliver, Stage::Consume, Stage::Operate, Stage::EndToEnd]
+        {
+            let st = lat.stage(stage).unwrap_or_else(|| {
+                panic!("{}: stage {} recorded no samples", mode.name(), stage.name())
+            });
+            assert!(st.count > 0, "{}: {} count", mode.name(), stage.name());
+            assert!(
+                st.p50_ns <= st.p99_ns && st.p99_ns <= st.p999_ns,
+                "{}: {} percentiles ordered",
+                mode.name(),
+                stage.name()
+            );
+        }
+        // End-to-end contains the append hop, so its tail cannot sit
+        // below the append median (loose on purpose: the two stats rank
+        // over slightly different sample sets).
+        let e2e = lat.stage(Stage::EndToEnd).expect("checked above");
+        let append = lat.stage(Stage::Append).expect("checked above");
+        assert!(
+            e2e.p99_ns >= append.p50_ns,
+            "{}: e2e p99 {} >= append p50 {}",
+            mode.name(),
+            e2e.p99_ns,
+            append.p50_ns
+        );
+    }
+}
+
+#[test]
+fn jsonl_sink_replays_byte_identical_on_a_fixed_seed() {
+    let path_a = sink_path("replay_a");
+    let path_b = sink_path("replay_b");
+    let mut run = |path: &std::path::Path| {
+        let mut config = traced_config(SourceMode::Pull, "replay");
+        config.trace_out = path.to_string_lossy().into_owned();
+        launch(&config, None).run()
+    };
+    let a = run(&path_a);
+    let b = run(&path_b);
+    assert_eq!(a.latency.spans_completed, b.latency.spans_completed);
+    let body_a = std::fs::read_to_string(&path_a).expect("sink A written");
+    let body_b = std::fs::read_to_string(&path_b).expect("sink B written");
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+    assert!(!body_a.is_empty(), "the sink captured events");
+    assert!(body_a.contains("\"type\":\"span\""), "span lines present");
+    assert_eq!(body_a, body_b, "same seed, same config: byte-identical JSONL");
+    // Every line is one well-formed-enough object: starts '{', ends '}'.
+    for line in body_a.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'), "JSONL shape: {line}");
+    }
+}
+
+#[test]
+fn checkpoint_and_fault_events_land_in_the_sink() {
+    let path = sink_path("fault");
+    let mut config = traced_config(SourceMode::Pull, "fault");
+    config.write_mode = WriteMode::SyncRpc;
+    config.checkpoint_interval_ms = 500;
+    config.fault_at_secs = 5;
+    config.fault_kind = FaultKind::Worker;
+    config.trace_out = path.to_string_lossy().into_owned();
+    let summary = launch(&config, None).run();
+    let body = std::fs::read_to_string(&path).expect("sink written");
+    let _ = std::fs::remove_file(&path);
+    assert!(body.contains("\"type\":\"epoch\""), "completed epochs recorded");
+    assert!(body.contains("\"type\":\"fault\""), "the injected fault recorded");
+    assert!(body.contains("\"type\":\"restore\""), "the recovery recorded");
+    // Exactly-once survives with tracing on: the bounded corpus still
+    // drains to its closed-form total across the rollback.
+    assert_eq!(summary.records_consumed, 2 * 2_000, "exactly-once under tracing");
+}
+
+#[test]
+fn obs_gauges_export_into_the_experiment_report() {
+    let summary = launch(&traced_config(SourceMode::Pull, "gauges"), None).run();
+    let spans = summary.report.gauge("obs.spans_completed").expect("spans gauge");
+    assert!(spans > 0.0, "spans_completed gauge populated");
+    assert!(
+        summary.report.gauge("obs.end_to_end_p50_us").expect("e2e gauge") > 0.0,
+        "end-to-end p50 gauge populated"
+    );
+    assert!(
+        summary.report.gauge("obs.append_latency_us_mean").is_some(),
+        "append RTT series exported"
+    );
+    // Tracing off: no obs gauges at all (the zero-overhead contract's
+    // reporting half; the totals half lives in zero_copy_parity).
+    let mut config = traced_config(SourceMode::Pull, "gauges-off");
+    config.trace_sample_permille = 0;
+    let summary = launch(&config, None).run();
+    assert!(
+        summary.report.gauge("obs.spans_completed").is_none(),
+        "tracer off exports nothing"
+    );
+    assert_eq!(summary.latency.spans_completed, 0);
+    assert!(summary.latency.stages.is_empty());
+}

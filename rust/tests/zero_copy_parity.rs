@@ -263,6 +263,90 @@ fn windowed_totals_identical_across_pipeline_modes_and_writers() {
 }
 
 // ---------------------------------------------------------------------------
+// Tracing plane: zero overhead off, zero copies and identical totals on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_at_full_rate_changes_no_totals_and_copies_no_payloads() {
+    // The tracing plane observes the spine, it must never touch it: a run
+    // with every record sampled reports byte-identical totals and the
+    // exact same payload-materialisation count as the untraced run.
+    for &mode in &[SourceMode::Pull, SourceMode::Push] {
+        let config_off = real_config(mode);
+        let before = real_payload_allocs();
+        let summary_off = launch(&config_off, Some(ComputeEngine::native())).run();
+        let allocs_off = real_payload_allocs() - before;
+
+        let mut config_on = real_config(mode);
+        config_on.trace_sample_permille = 1000;
+        let before = real_payload_allocs();
+        let summary_on = launch(&config_on, Some(ComputeEngine::native())).run();
+        let allocs_on = real_payload_allocs() - before;
+
+        assert_eq!(
+            summary_off.records_consumed, summary_on.records_consumed,
+            "{mode:?}: tracing changed the consumed total"
+        );
+        assert_eq!(
+            summary_off.tuples_logged, summary_on.tuples_logged,
+            "{mode:?}: tracing changed the logged total"
+        );
+        assert_eq!(
+            allocs_off, allocs_on,
+            "{mode:?}: tracing materialised payloads ({allocs_on} vs {allocs_off})"
+        );
+        assert!(
+            summary_on.latency.spans_completed > 0,
+            "{mode:?}: the traced run completed spans"
+        );
+        assert!(
+            summary_off.latency.spans_completed == 0 && summary_off.latency.stages.is_empty(),
+            "{mode:?}: the untraced run recorded nothing"
+        );
+    }
+}
+
+#[test]
+fn traced_golden_totals_identical_across_all_source_and_write_modes() {
+    // The permille=1000 rerun of the golden-totals sweep: the marker FIFOs
+    // and span bookkeeping must not drop, clone or reorder a single batch
+    // in any (source × write) cell.
+    let expect = 2 * 2_000u64; // Np × corpus_records
+    for &mode in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let mut config = parity_config(mode, write, Workload::Count);
+            config.name = format!("parity-traced-{}-{}", mode.name(), write.name());
+            config.trace_sample_permille = 1000;
+            let summary = launch(&config, None).run();
+            assert_eq!(
+                summary.records_produced, expect,
+                "{}/{} traced: produced",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                summary.records_consumed, expect,
+                "{}/{} traced: consumed == produced",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                summary.tuples_logged, expect,
+                "{}/{} traced: every record logged exactly once",
+                mode.name(),
+                write.name()
+            );
+            assert!(
+                summary.latency.spans_completed > 0,
+                "{}/{} traced: spans completed",
+                mode.name(),
+                write.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Plant-ratio parity (real plane, synthetic generator)
 // ---------------------------------------------------------------------------
 
