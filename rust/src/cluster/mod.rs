@@ -44,9 +44,12 @@ use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
 // historic re-export keeps the public path alive.
 pub use crate::producer::{FILTER_NEEDLE, PLANT_PERMILLE};
 
-const NODE_COLOCATED: usize = 0;
-const NODE_PRODUCERS: usize = 1;
-const NODE_BACKUP: usize = 2;
+/// Node 0: broker + worker + plasma store (the colocated premise).
+pub const NODE_COLOCATED: usize = 0;
+/// Node 1: producers (deployed separately, except the sharedmem writers).
+pub const NODE_PRODUCERS: usize = 1;
+/// Node 2: backup broker when `Replication = 2`.
+pub const NODE_BACKUP: usize = 2;
 
 /// A built cluster, ready to run.
 pub struct Cluster {
@@ -154,51 +157,16 @@ pub fn launch_full(
     let checkpoint = (config.checkpoint_interval_ms > 0).then(CheckpointControl::shared);
 
     // ---- brokers -------------------------------------------------------
-    // The backup holds only the replication mirror — an in-memory log
-    // regardless of the primary's backend (the paper replicates for
-    // availability; durability is the primary store's job).
-    let backup = (config.replication == 2).then(|| {
-        engine.add_actor(Box::new(Broker::new(
-            BrokerParams {
-                node: NODE_BACKUP,
-                worker_cores: config.broker_cores,
-                push_threads: 0,
-                store: StoreParams::memory(DEFAULT_SEGMENT_BYTES),
-                partitions: Vec::new(),
-                backup: None,
-                is_backup: true,
-                cost: config.cost.clone(),
-            },
-            net.clone(),
-            store.clone(),
-            metrics.clone(),
-            1,
-        )))
-    });
-    let push_threads = factory.broker_push_threads();
-    let worker_cores = (config.broker_cores - push_threads).max(1);
-    let store_params = StoreParams::from_config(config);
-    let log_store = store_registry
-        .expect(store_params.mode)
-        .open(&store_params, &partitions)
-        .unwrap_or_else(|e| panic!("opening `{}` store failed: {e}", store_params.mode.name()));
-    let broker = engine.add_actor(Box::new(Broker::with_store(
-        BrokerParams {
-            node: NODE_COLOCATED,
-            worker_cores,
-            push_threads,
-            store: store_params,
-            partitions: partitions.clone(),
-            backup: backup.map(|b| (b, NODE_BACKUP)),
-            is_backup: false,
-            cost: config.cost.clone(),
-        },
-        log_store,
-        net.clone(),
-        store.clone(),
-        metrics.clone(),
-        0,
-    )));
+    let (broker, backup) = build_brokers(
+        &mut engine,
+        config,
+        store_registry,
+        factory.broker_push_threads(),
+        &partitions,
+        &net,
+        &store,
+        &metrics,
+    );
 
     // ---- producers (one generic path through the writer registry) -------
     let writer_wiring = WriterWiring {
@@ -214,53 +182,20 @@ pub fn launch_full(
     let producers = writer_factory.build(&writer_wiring, &mut engine);
 
     // ---- pipeline tasks (not for engine-less modes) ---------------------
-    let mut tasks = Vec::new();
     let pipeline = factory
         .uses_pipeline()
         .then(|| Pipeline::for_workload(config.workload, config.nc, config.nmap));
-    let mut stage_task_idxs: Vec<Vec<usize>> = Vec::new();
-    if let Some(p) = &pipeline {
-        let mut next_idx = config.nc;
-        for stage in &p.stages {
-            let idxs: Vec<usize> = (0..stage.parallelism).map(|k| next_idx + k).collect();
-            next_idx += stage.parallelism;
-            stage_task_idxs.push(idxs);
-        }
-        for (si, stage) in p.stages.iter().enumerate() {
-            let downstream: Vec<usize> = stage_task_idxs.get(si + 1).cloned().unwrap_or_default();
-            // Stage 0 is fed by the logical source tasks (indices 0..Nc);
-            // later stages by the previous stage — the channel set a
-            // checkpoint barrier aligns over.
-            let upstream: Vec<usize> = if si == 0 {
-                (0..config.nc).collect()
-            } else {
-                stage_task_idxs[si - 1].clone()
-            };
-            for &task_idx in &stage_task_idxs[si] {
-                let op = make_op(stage.op, config, &downstream, &compute);
-                let task = OperatorTask::new(
-                    TaskParams {
-                        task_idx,
-                        queue_cap: config.queue_cap,
-                        downstream: downstream.clone(),
-                        upstream: upstream.clone(),
-                        tick_ns: config.window_slide_secs * SECOND,
-                        cost: config.cost.clone(),
-                        checkpoint: checkpoint.clone(),
-                    },
-                    vec![op],
-                    registry.clone(),
-                    metrics.clone(),
-                );
-                let id = engine.add_actor(Box::new(task));
-                registry.borrow_mut().register(task_idx, id);
-                tasks.push(id);
-            }
-        }
-    }
+    let (tasks, stage0) = build_pipeline_tasks(
+        &mut engine,
+        config,
+        &pipeline,
+        &registry,
+        &metrics,
+        &checkpoint,
+        &compute,
+    );
 
     // ---- sources (one generic path through the factory registry) --------
-    let stage0: Vec<usize> = stage_task_idxs.first().cloned().unwrap_or_default();
     let wiring = SourceWiring {
         config,
         node: NODE_COLOCATED,
@@ -327,6 +262,131 @@ pub fn launch_full(
         pipeline,
         coordinator,
     }
+}
+
+/// Build the backup (when `Replication = 2`) and primary broker actors
+/// into `engine`, resolving the log backend through `store_registry`.
+/// Returns `(primary, backup)`.
+///
+/// Shared by [`launch_full`] and the real-plane node builders
+/// (`crate::real`) — one broker construction path, two execution planes.
+#[allow(clippy::too_many_arguments)]
+pub fn build_brokers(
+    engine: &mut Engine<Msg>,
+    config: &ExperimentConfig,
+    store_registry: &StoreRegistry,
+    push_threads: usize,
+    partitions: &[PartitionId],
+    net: &SharedNetwork,
+    store: &SharedStore,
+    metrics: &SharedMetrics,
+) -> (ActorId, Option<ActorId>) {
+    // The backup holds only the replication mirror — an in-memory log
+    // regardless of the primary's backend (the paper replicates for
+    // availability; durability is the primary store's job).
+    let backup = (config.replication == 2).then(|| {
+        engine.add_actor(Box::new(Broker::new(
+            BrokerParams {
+                node: NODE_BACKUP,
+                worker_cores: config.broker_cores,
+                push_threads: 0,
+                store: StoreParams::memory(DEFAULT_SEGMENT_BYTES),
+                partitions: Vec::new(),
+                backup: None,
+                is_backup: true,
+                cost: config.cost.clone(),
+            },
+            net.clone(),
+            store.clone(),
+            metrics.clone(),
+            1,
+        )))
+    });
+    let worker_cores = (config.broker_cores - push_threads).max(1);
+    let store_params = StoreParams::from_config(config);
+    let log_store = store_registry
+        .expect(store_params.mode)
+        .open(&store_params, partitions)
+        .unwrap_or_else(|e| panic!("opening `{}` store failed: {e}", store_params.mode.name()));
+    let broker = engine.add_actor(Box::new(Broker::with_store(
+        BrokerParams {
+            node: NODE_COLOCATED,
+            worker_cores,
+            push_threads,
+            store: store_params,
+            partitions: partitions.to_vec(),
+            backup: backup.map(|b| (b, NODE_BACKUP)),
+            is_backup: false,
+            cost: config.cost.clone(),
+        },
+        log_store,
+        net.clone(),
+        store.clone(),
+        metrics.clone(),
+        0,
+    )));
+    (broker, backup)
+}
+
+/// Build the configured workload's operator tasks into `engine` and
+/// register them. Returns `(task actor ids, stage-0 task indices)` — the
+/// stage-0 indices are what sources feed.
+///
+/// Shared by [`launch_full`] and the real-plane node builders
+/// (`crate::real`) — one pipeline construction path, two execution
+/// planes. `pipeline` is `None` for engine-less source modes (native).
+pub fn build_pipeline_tasks(
+    engine: &mut Engine<Msg>,
+    config: &ExperimentConfig,
+    pipeline: &Option<Pipeline>,
+    registry: &crate::worker::SharedRegistry,
+    metrics: &SharedMetrics,
+    checkpoint: &Option<crate::checkpoint::SharedCheckpoint>,
+    compute: &Option<SharedCompute>,
+) -> (Vec<ActorId>, Vec<usize>) {
+    let mut tasks = Vec::new();
+    let mut stage_task_idxs: Vec<Vec<usize>> = Vec::new();
+    if let Some(p) = pipeline {
+        let mut next_idx = config.nc;
+        for stage in &p.stages {
+            let idxs: Vec<usize> = (0..stage.parallelism).map(|k| next_idx + k).collect();
+            next_idx += stage.parallelism;
+            stage_task_idxs.push(idxs);
+        }
+        for (si, stage) in p.stages.iter().enumerate() {
+            let downstream: Vec<usize> = stage_task_idxs.get(si + 1).cloned().unwrap_or_default();
+            // Stage 0 is fed by the logical source tasks (indices 0..Nc);
+            // later stages by the previous stage — the channel set a
+            // checkpoint barrier aligns over.
+            let upstream: Vec<usize> = if si == 0 {
+                (0..config.nc).collect()
+            } else {
+                stage_task_idxs[si - 1].clone()
+            };
+            for &task_idx in &stage_task_idxs[si] {
+                let op = make_op(stage.op, config, &downstream, compute);
+                let task = OperatorTask::new(
+                    TaskParams {
+                        task_idx,
+                        queue_cap: config.queue_cap,
+                        downstream: downstream.clone(),
+                        upstream: upstream.clone(),
+                        tick_ns: config.window_slide_secs * SECOND,
+                        cost: config.cost.clone(),
+                        checkpoint: checkpoint.clone(),
+                    },
+                    vec![op],
+                    registry.clone(),
+                    metrics.clone(),
+                );
+                let id = engine.add_actor(Box::new(task));
+                registry.borrow_mut().register(task_idx, id);
+                tasks.push(id);
+            }
+        }
+    }
+    let stage0: Vec<usize> = stage_task_idxs.first().cloned().unwrap_or_default();
+    (tasks, stage0)
 }
 
 fn make_op(

@@ -162,6 +162,38 @@ impl Workload {
     }
 }
 
+/// Which execution plane runs the cluster (`plane=` knob).
+///
+/// Orthogonal to [`DataPlane`]: the data plane decides what a chunk
+/// payload *is* (accounting vs real bytes through the kernels), the
+/// execution plane decides what delivers the messages — the DES engine's
+/// virtual clock, or OS threads with the RPC layer over localhost TCP
+/// (`crate::real`). Same actors, same protocol, either plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPlane {
+    /// Single-threaded discrete-event simulation (the default).
+    Sim,
+    /// OS threads + TCP RPCs; plasma stays in-process shared memory.
+    Real,
+}
+
+impl ExecPlane {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Some(Self::Sim),
+            "real" => Some(Self::Real),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Real => "real",
+        }
+    }
+}
+
 /// How chunk payloads flow through the system (DESIGN.md §2, substitution 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DataPlane {
@@ -258,6 +290,8 @@ pub struct ExperimentConfig {
     pub warmup_secs: u64,
     /// Payload handling.
     pub data_plane: DataPlane,
+    /// Execution plane: DES engine (`sim`) or OS threads + TCP (`real`).
+    pub plane: ExecPlane,
     /// Shared objects per push source (backpressure window).
     pub push_objects_per_source: usize,
     /// Pull poll timeout (µs) — the source waits at most this long before
@@ -354,6 +388,7 @@ impl Default for ExperimentConfig {
             duration_secs: 60,
             warmup_secs: 5,
             data_plane: DataPlane::Sim,
+            plane: ExecPlane::Sim,
             push_objects_per_source: 4,
             pull_timeout_us: 100,
             seal_timeout_us: 1000,
@@ -482,6 +517,46 @@ impl ExperimentConfig {
                 self.trace_sample_permille
             ));
         }
+        if self.plane == ExecPlane::Real {
+            // The real plane terminates at quiescence (every produced
+            // record consumed), not at a virtual horizon — it needs a
+            // bounded workload, and the v1 scope keeps the coordinator
+            // planes (checkpoint barriers, fault injection, tracing) and
+            // the XLA data plane on the simulator.
+            if self.corpus_records == 0 {
+                return Err(
+                    "plane=real needs a bounded workload (corpus_records > 0): real runs \
+                     stop at quiescence, not at a virtual horizon"
+                        .into(),
+                );
+            }
+            if self.checkpoint_interval_ms > 0 || self.fault_at_secs > 0 {
+                return Err(
+                    "plane=real does not run the checkpoint/fault coordinator yet; set \
+                     checkpoint_interval_ms=0 and fault_at_secs=0"
+                        .into(),
+                );
+            }
+            if self.trace_sample_permille > 0 {
+                return Err(
+                    "plane=real does not run the latency tracer yet; set trace_sample_permille=0"
+                        .into(),
+                );
+            }
+            if self.data_plane == DataPlane::Real {
+                return Err(
+                    "plane=real currently runs the accounting data plane; set data_plane=sim \
+                     (the XLA kernels are loaded per-thread in a later revision)"
+                        .into(),
+                );
+            }
+            if self.replication != 1 {
+                return Err(
+                    "plane=real keeps replication in-engine and only supports replication=1"
+                        .into(),
+                );
+            }
+        }
         if self.store_mode == StoreMode::Durable {
             if self.store_wal_bytes == 0 {
                 return Err("store_wal_bytes must be positive".into());
@@ -557,6 +632,7 @@ impl ExperimentConfig {
             "data_plane" => {
                 self.data_plane = DataPlane::parse(value).ok_or_else(|| bad(key, value))?
             }
+            "plane" => self.plane = ExecPlane::parse(value).ok_or_else(|| bad(key, value))?,
             "push_objects_per_source" => {
                 self.push_objects_per_source = value.parse().map_err(|_| bad(key, value))?
             }

@@ -11,7 +11,12 @@
 //!   modes on the same workload and seed (plus one `store_mode=durable`
 //!   cell on the acceptance-gate configuration, so disk-path regressions
 //!   show up in the artifact), each cell reporting events/sec,
-//!   virtual/wall speed and the run's cross-checkable totals.
+//!   virtual/wall speed and the run's cross-checkable totals;
+//! * two **real-plane** cells (`plane=real`: OS threads + TCP, bounded
+//!   corpus to quiescence) — the paper's pull+sync baseline and its
+//!   push+sharedmem thesis design — reporting wall-clock events/sec so the
+//!   artifact tracks what the actual execution plane sustains, not just
+//!   the simulator.
 //!
 //! Results are written to `BENCH_hotpath.json` (machine-readable; CI
 //! uploads it as an artifact) so the perf trajectory has a recorded
@@ -23,15 +28,20 @@
 use std::time::Instant;
 
 use crate::cluster::launch;
-use crate::config::{ExperimentConfig, SourceMode, StoreMode, Workload, WriteMode};
+use crate::config::{ExecPlane, ExperimentConfig, SourceMode, StoreMode, Workload, WriteMode};
 use crate::sim::{Actor, ActorId, Ctx, Engine, SECOND};
 
 /// One (source mode × write mode) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct HotpathCell {
+    /// Which execution plane ran this cell: `"sim"` (DES engine, virtual
+    /// clock) or `"real"` (OS threads + TCP, wall clock, bounded corpus).
+    pub plane: &'static str,
     pub source: &'static str,
     pub write: &'static str,
     pub store: &'static str,
+    /// Virtual horizon for sim cells; 0 for real cells (they run a bounded
+    /// corpus to quiescence instead of a virtual horizon).
     pub virtual_secs: u64,
     pub events: u64,
     pub wall_secs: f64,
@@ -136,6 +146,7 @@ fn run_cell(source: SourceMode, write: WriteMode, store: StoreMode, secs: u64) -
     let events = cluster.engine.events_processed();
     let summary = cluster.finish();
     HotpathCell {
+        plane: "sim",
         source: source.name(),
         write: write.name(),
         store: store.name(),
@@ -144,6 +155,36 @@ fn run_cell(source: SourceMode, write: WriteMode, store: StoreMode, secs: u64) -
         wall_secs: wall,
         events_per_s: events as f64 / wall,
         virt_per_wall: secs as f64 / wall,
+        records_produced: summary.records_produced,
+        records_consumed: summary.records_consumed,
+        tuples_logged: summary.tuples_logged,
+    }
+}
+
+/// One real-plane cell: the same config shape, but `plane=real` with a
+/// bounded corpus — OS threads, TCP appends (unless sharedmem), wall-clock
+/// throughput. There is no virtual clock, so `virt_per_wall` is null in
+/// the artifact and `events_per_s` means *real* engine events per wall
+/// second across all node threads.
+fn run_real_cell(source: SourceMode, write: WriteMode, corpus_records: u64) -> HotpathCell {
+    // The virtual horizon is unused on the real plane (bounded corpus
+    // decides termination), but validation still wants duration > warmup.
+    let mut config = cell_config(source, write, StoreMode::Memory, 2);
+    config.name = format!("hotpath-real-{}-{}", source.name(), write.name());
+    config.plane = ExecPlane::Real;
+    config.corpus_records = corpus_records;
+    let summary = crate::real::run_cluster(&config)
+        .unwrap_or_else(|e| panic!("real-plane hotpath cell {}: {e}", config.name));
+    HotpathCell {
+        plane: "real",
+        source: source.name(),
+        write: write.name(),
+        store: StoreMode::Memory.name(),
+        virtual_secs: 0,
+        events: summary.events_processed,
+        wall_secs: summary.wall_secs,
+        events_per_s: summary.events_processed as f64 / summary.wall_secs.max(1e-9),
+        virt_per_wall: f64::NAN,
         records_produced: summary.records_produced,
         records_consumed: summary.records_consumed,
         tuples_logged: summary.tuples_logged,
@@ -166,14 +207,19 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
     let mut cluster_eps = 0.0;
     let mut cluster_ratio = 0.0;
     let print_cell = |cell: &HotpathCell| {
+        let ratio = if cell.virt_per_wall.is_finite() {
+            format!("{:>6.1}x virtual/wall", cell.virt_per_wall)
+        } else {
+            "  wall-clock      ".to_string()
+        };
         println!(
-            "   {:<8}x {:<10}x {:<8} {:>7.2} M events/s  {:>6.1}x virtual/wall  \
+            "   {:<4} {:<8}x {:<10}x {:<8} {:>7.2} M events/s  {ratio}  \
              events {:>10}  prod {:>9}  cons {:>9}",
+            cell.plane,
             cell.source,
             cell.write,
             cell.store,
             cell.events_per_s / 1e6,
-            cell.virt_per_wall,
             cell.events,
             cell.records_produced,
             cell.records_consumed,
@@ -197,6 +243,18 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
     let cell = run_cell(SourceMode::Pull, WriteMode::SyncRpc, StoreMode::Durable, secs);
     print_cell(&cell);
     cells.push(cell);
+    // Real-plane cells: the paper's baseline (pull + sync RPC, everything
+    // over the wire) and its thesis design (push + shared memory, nothing
+    // over the wire) on actual OS threads + TCP — wall-clock events/sec,
+    // comparable run to run on the same host.
+    let corpus = if quick { 20_000 } else { 100_000 };
+    let real_cells =
+        [(SourceMode::Pull, WriteMode::SyncRpc), (SourceMode::Push, WriteMode::SharedMem)];
+    for (source, write) in real_cells {
+        let cell = run_real_cell(source, write, corpus);
+        print_cell(&cell);
+        cells.push(cell);
+    }
     let report = HotpathReport {
         engine_events_per_s: engine_eps,
         cluster_events_per_s: cluster_eps,
@@ -250,7 +308,7 @@ fn json_f64(v: f64) -> String {
 pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Result<()> {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"zettastream-bench-hotpath/v1\",\n");
+    s.push_str("  \"schema\": \"zettastream-bench-hotpath/v2\",\n");
     s.push_str(&format!(
         "  \"engine_events_per_s\": {},\n",
         json_f64(report.engine_events_per_s)
@@ -280,11 +338,12 @@ pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Re
     s.push_str("  \"cells\": [\n");
     for (i, c) in report.cells.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"source\": \"{}\", \"write\": \"{}\", \"store\": \"{}\", \
-             \"virtual_secs\": {}, \
+            "    {{\"plane\": \"{}\", \"source\": \"{}\", \"write\": \"{}\", \
+             \"store\": \"{}\", \"virtual_secs\": {}, \
              \"events\": {}, \"wall_secs\": {}, \"events_per_s\": {}, \
              \"virt_per_wall\": {}, \"records_produced\": {}, \
              \"records_consumed\": {}, \"tuples_logged\": {}}}{}\n",
+            c.plane,
             c.source,
             c.write,
             c.store,

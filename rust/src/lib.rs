@@ -135,6 +135,32 @@
 //! `zettastream bench latency` sweeps all 4 source × 3 write modes and
 //! records the per-stage breakdown in `BENCH_latency.json` — the
 //! pull-vs-push latency question, answered with numbers.
+//!
+//! ## Execution planes
+//!
+//! Everything above runs on either of two execution planes, selected by
+//! `config.plane` ([`config::ExecPlane`]):
+//!
+//! * **`plane=sim`** (default) — one deterministic DES engine drives the
+//!   whole cluster on a virtual clock; every figure and test above runs
+//!   here.
+//! * **`plane=real`** ([`real`]) — the *same actors, same protocol, same
+//!   construction paths* run on OS threads with RPCs as length-prefixed
+//!   frames over localhost TCP. The seam is the [`transport::Transport`]
+//!   trait with two implementations: [`transport::SimTransport`] (the DES
+//!   network blackboard) and [`transport::TcpTransport`] (real sockets,
+//!   per-connection reader/writer threads, hand-rolled codec in
+//!   [`transport::wire`] — no serde). Cluster topology matches the paper's
+//!   node split: the broker, pipeline, sources and plasma store share the
+//!   colocated node thread (push notifications and shared-memory writes
+//!   never touch a socket — that *is* the colocation premise), while
+//!   sync/pipelined producers live on a producer node thread and append
+//!   over TCP. Bounded runs drain to quiescence and report golden totals
+//!   that match the sim plane byte for byte on the same seed
+//!   (`tests/real_plane.rs`); `zettastream broker --listen` serves a
+//!   standalone broker that external clients drive over the wire
+//!   (`tests/broker_contract.rs`), and `zettastream bench hotpath` reports
+//!   both planes side by side with a `plane` key per cell.
 
 pub mod config;
 pub mod sim;
@@ -152,6 +178,8 @@ pub mod wikipedia;
 pub mod cluster;
 pub mod ops;
 pub mod pipeline;
+pub mod real;
 pub mod source;
+pub mod transport;
 pub mod worker;
 pub mod experiments;

@@ -3,6 +3,8 @@
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
 //! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|hotpath|latency|ablations|all> [--quick] [key=value ...]
+//! zettastream broker --listen <addr> [key=value ...]
+//!                                       standalone broker node on real TCP
 //! zettastream list                      the benchmark catalog (Table II)
 //! zettastream calibrate                 measure the real data plane, print
 //!                                       suggested cost-model overrides
@@ -12,14 +14,15 @@
 //! Keys are `ExperimentConfig::apply` keys (Table I names: np, nc, nmap,
 //! ns, cs, recs, replication, nbc, nfs, mode, workload, ...) plus
 //! `cost.*` overrides. `run --data_plane=real` loads the AOT artifacts
-//! and executes the Layer-1 kernels on the hot path.
+//! and executes the Layer-1 kernels on the hot path; `run plane=real`
+//! runs the cluster on OS threads with RPCs over localhost TCP.
 
 use std::process::ExitCode;
 use std::rc::Rc;
 
 use zettastream::cluster::{launch, RunSummary};
 use zettastream::compute::ComputeEngine;
-use zettastream::config::{parse_kv_file, parse_overrides, DataPlane, ExperimentConfig};
+use zettastream::config::{parse_kv_file, parse_overrides, DataPlane, ExecPlane, ExperimentConfig};
 use zettastream::experiments;
 use zettastream::proto::Chunk;
 use zettastream::wikipedia::CorpusReader;
@@ -31,6 +34,7 @@ fn main() -> ExitCode {
     let result = match cmd {
         "run" => cmd_run(rest),
         "bench" => cmd_bench(rest),
+        "broker" => cmd_broker(rest),
         "list" => cmd_list(),
         "calibrate" => cmd_calibrate(),
         "config" => cmd_config(rest),
@@ -101,6 +105,38 @@ fn print_summary(s: &RunSummary) {
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let config = build_config(args)?;
+    if config.plane == ExecPlane::Real {
+        println!(
+            "running `{}` on the real plane: Np={} Nc={} Ns={} CS={}B mode={} write={} \
+             workload={} corpus={} recs/producer",
+            config.name,
+            config.np,
+            config.nc,
+            config.ns,
+            config.producer_chunk,
+            config.mode.name(),
+            config.write_mode.name(),
+            config.workload.name(),
+            config.corpus_records,
+        );
+        let s = zettastream::real::run_cluster(&config)?;
+        println!(
+            "  totals: produced {} consumed {} logged {} pullRPCs {} objects {}",
+            s.records_produced, s.records_consumed, s.tuples_logged, s.pull_rpcs, s.objects_filled
+        );
+        if s.planted > 0 || s.matches > 0 {
+            println!("  filter: planted {} matched {}", s.planted, s.matches);
+        }
+        println!(
+            "  wall: {:.3}s  events {}  ({:.0} events/s)  threads spawned {} joined {}",
+            s.wall_secs,
+            s.events_processed,
+            s.events_processed as f64 / s.wall_secs.max(1e-9),
+            s.threads.spawned,
+            s.threads.joined,
+        );
+        return Ok(());
+    }
     let compute = make_compute(&config)?;
     println!(
         "running `{}`: Np={} Nc={} Ns={} CS={}B mode={} workload={} NBc={} repl={} plane={:?}",
@@ -118,6 +154,25 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let summary = launch(&config, compute).run();
     print_summary(&summary);
     Ok(())
+}
+
+/// `zettastream broker --listen <addr> [key=value ...]` — a standalone
+/// broker node on real TCP, driven by external wire clients (the contract
+/// harness in `tests/broker_contract.rs` is the reference client).
+fn cmd_broker(args: &[String]) -> Result<(), String> {
+    let mut listen: Option<String> = None;
+    let mut config_args = Vec::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--listen" {
+            listen = Some(it.next().ok_or("--listen needs an address")?.clone());
+        } else {
+            config_args.push(arg.clone());
+        }
+    }
+    let listen = listen.ok_or("broker needs --listen <host:port> (port 0 = ephemeral)")?;
+    let config = build_config(&config_args)?;
+    zettastream::real::run_broker_server(&listen, &config)
 }
 
 fn cmd_bench(args: &[String]) -> Result<(), String> {

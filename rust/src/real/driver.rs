@@ -1,0 +1,349 @@
+//! The per-node event loop of the real plane: one DES engine pumped as a
+//! plain event loop, one [`Transport`], and the glue that turns frames
+//! into engine messages and staged messages into frames.
+//!
+//! # The pump
+//!
+//! Each [`NodeDriver::step`] does three things, in order:
+//!
+//! 1. `transport.poll(wait)` — collect inbound frames and connection
+//!    events, injecting them into the engine queue at the node's *current
+//!    virtual time*;
+//! 2. `engine.run_until(now + PUMP_SLICE)` — advance the node's virtual
+//!    clock by one bounded slice, executing whatever the actors queued;
+//! 3. flush the [`Outbox`] — every frame the link actors staged goes out
+//!    through the transport.
+//!
+//! The slice is *bounded* on purpose. A node's actors are allowed to be
+//! self-sustaining (a pull source's empty-poll timer loop re-arms itself
+//! forever), so "run the engine dry" would never return; a bounded slice
+//! interleaves local progress with socket progress no matter what the
+//! actors do. Virtual time still means what it means on the sim plane —
+//! costs, timeouts and per-second metric buckets all keep their shape —
+//! it just advances in 1 ms hops gated on real I/O instead of in one
+//! uninterrupted sweep.
+//!
+//! # Trust and actor-id rewriting
+//!
+//! Requests carry engine-local actor ids inside their specs
+//! ([`crate::proto::PushSourceSpec::source_actor`],
+//! [`crate::proto::WriteProducerSpec::producer_actor`]). Those ids are
+//! only meaningful inside the *sender's* engine. A driver serving a
+//! connection therefore rewrites them to the connection's [`ServerLink`]
+//! unless the peer proved same-cluster membership (its
+//! [`WireMsg::Hello`] cookie matched and the driver was built with
+//! `trust_cookie`); rewritten notifications and acks then route back over
+//! the wire instead of into a foreign actor table. Cluster nodes built by
+//! [`crate::real::run_cluster`] share a per-run cookie; the standalone
+//! `zettastream broker` server trusts nobody.
+
+use std::collections::HashMap;
+
+use crate::proto::{Msg, RpcEnvelope, RpcKind, RpcRequest};
+use crate::sim::{ActorId, Engine, Time, MILLIS};
+use crate::transport::{
+    wire::msg_label, ConnId, FrameError, Transport, TransportEvent, WireEvent, WireMsg,
+    WIRE_VERSION,
+};
+
+use super::links::{ClientLink, Outbox, ServerLink};
+
+/// Virtual time one pump step advances the node's engine: long enough to
+/// complete whole local request/reply cascades (costs are µs-scale), short
+/// enough that cross-node round trips gate on sockets, not on virtual
+/// sweeps.
+pub const PUMP_SLICE: Time = MILLIS;
+
+/// Things a pump step observed that the caller may want to act on or log
+/// (the server turns these into its JSONL event stream; the cluster
+/// orchestrator watches for `ShutdownRequested` and abnormal closes).
+#[derive(Debug)]
+pub enum Notable {
+    /// A peer connected (a [`ServerLink`] now serves the connection).
+    Accepted { conn: ConnId },
+    /// A request frame was dispatched to the local broker.
+    Req { conn: ConnId, wire_id: u64, label: &'static str },
+    /// A staged frame was handed to the transport.
+    Sent { conn: ConnId, label: &'static str },
+    /// A server-initiated notification arrived (client side).
+    Event { conn: ConnId, event: WireEvent },
+    /// The peer asked this node to drain and close.
+    ShutdownRequested { conn: ConnId },
+    /// The peer's final frame of a graceful drain.
+    Bye { conn: ConnId, replies_sent: u64 },
+    /// A connection ended; `error` is `None` on a clean close.
+    Closed { conn: ConnId, error: Option<FrameError> },
+    /// A frame could not be handed to the transport.
+    SendFailed { conn: ConnId, error: FrameError },
+    /// A peer spoke an incompatible protocol version; connection dropped.
+    BadHello { conn: ConnId, version: u32 },
+    /// A reply arrived for a wire id we never sent; frame dropped.
+    OrphanReply { conn: ConnId, wire_id: u64 },
+}
+
+/// What one [`NodeDriver::step`] did — the hot/idle pacing signal.
+#[derive(Debug)]
+pub struct StepReport {
+    /// Transport events handled (frames + connection lifecycle).
+    pub received: usize,
+    /// Engine events executed in this step's slice.
+    pub processed: u64,
+    /// Frames flushed from the outbox.
+    pub flushed: usize,
+    /// Observations for the caller (see [`Notable`]).
+    pub notables: Vec<Notable>,
+}
+
+impl StepReport {
+    /// Nothing moved: no inbound, no engine work, nothing to flush.
+    pub fn is_idle(&self) -> bool {
+        self.received == 0 && self.processed == 0 && self.flushed == 0
+    }
+}
+
+/// One real-plane node: engine + transport + link bookkeeping.
+pub struct NodeDriver<T: Transport> {
+    pub engine: Engine<Msg>,
+    transport: T,
+    outbox: Outbox,
+    /// Local broker that serves requests from accepted connections
+    /// (`None` on nodes that only originate requests).
+    broker: Option<ActorId>,
+    cookie: u64,
+    /// Whether a matching cookie lets a peer's spec actor ids through
+    /// un-rewritten (same-cluster nodes only).
+    trust_cookie: bool,
+    /// Outbound connections: conn -> the [`ClientLink`] proxying it.
+    clients: HashMap<ConnId, ActorId>,
+    /// Accepted connections: conn -> ([`ServerLink`], peer trusted?).
+    servers: HashMap<ConnId, (ActorId, bool)>,
+}
+
+impl<T: Transport> NodeDriver<T> {
+    /// `trust_cookie = true` is for nodes of one [`crate::real::run_cluster`]
+    /// sharing a per-run secret; standalone servers pass `false` and treat
+    /// every peer's actor ids as foreign.
+    pub fn new(engine: Engine<Msg>, transport: T, cookie: u64, trust_cookie: bool) -> Self {
+        Self {
+            engine,
+            transport,
+            outbox: Outbox::default(),
+            broker: None,
+            cookie,
+            trust_cookie,
+            clients: HashMap::new(),
+            servers: HashMap::new(),
+        }
+    }
+
+    /// Serve inbound requests with `broker` (built into this engine).
+    pub fn serve(&mut self, broker: ActorId) {
+        self.broker = Some(broker);
+    }
+
+    /// The outbox link actors stage frames on.
+    pub fn outbox(&self) -> Outbox {
+        self.outbox.clone()
+    }
+
+    /// Dial `addr`, introduce ourselves, and return the connection plus
+    /// the [`ClientLink`] actor standing in for the remote broker.
+    pub fn connect(&mut self, addr: &str, node: u32) -> Result<(ConnId, ActorId), FrameError> {
+        let conn = self.transport.connect(addr)?;
+        self.transport.send(
+            conn,
+            &WireMsg::Hello { version: WIRE_VERSION, node, cookie: self.cookie },
+        )?;
+        let link = self.engine.add_actor(Box::new(ClientLink::new(conn, self.outbox.clone())));
+        self.clients.insert(conn, link);
+        Ok((conn, link))
+    }
+
+    /// Accepted connections and their [`ServerLink`] actors.
+    pub fn server_links(&self) -> Vec<(ConnId, ActorId)> {
+        let mut v: Vec<_> = self.servers.iter().map(|(&c, &(l, _))| (c, l)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Unanswered requests across every outbound connection.
+    pub fn pending_replies(&mut self) -> usize {
+        let links: Vec<ActorId> = self.clients.values().copied().collect();
+        links
+            .into_iter()
+            .filter_map(|l| self.engine.actor_as::<ClientLink>(l).map(|c| c.pending_len()))
+            .sum()
+    }
+
+    /// Stage one frame directly (driver-originated traffic: `Shutdown`,
+    /// `Bye`); it goes out with the next flush.
+    pub fn stage(&mut self, conn: ConnId, msg: WireMsg) {
+        self.outbox.borrow_mut().push((conn, msg));
+    }
+
+    /// One pump step: poll (waiting up to `wait_ms` for the first event),
+    /// advance the engine by [`PUMP_SLICE`], flush the outbox.
+    pub fn step(&mut self, wait_ms: u64) -> StepReport {
+        let mut notables = Vec::new();
+        let events = self.transport.poll(wait_ms);
+        let received = events.len();
+        for ev in events {
+            self.handle(ev, &mut notables);
+        }
+        let horizon = self.engine.now() + PUMP_SLICE;
+        let processed = self.engine.run_until(horizon);
+        let flushed = self.flush(&mut notables);
+        StepReport { received, processed, flushed, notables }
+    }
+
+    /// Pump until `idle_rounds` consecutive steps move nothing — the
+    /// graceful drain. Only sound on nodes whose actors quiesce (the
+    /// broker is purely reactive; pull sources are not). Returns the
+    /// notables observed while draining.
+    pub fn settle(&mut self, idle_rounds: u32, max_steps: u32) -> Vec<Notable> {
+        let mut notables = Vec::new();
+        let mut idle = 0;
+        for _ in 0..max_steps {
+            let mut r = self.step(1);
+            notables.append(&mut r.notables);
+            idle = if r.is_idle() { idle + 1 } else { 0 };
+            if idle >= idle_rounds {
+                break;
+            }
+        }
+        notables
+    }
+
+    /// Hand back the engine and the transport (end of run: the caller
+    /// reads actor stats from the engine and shuts the transport down).
+    pub fn into_parts(self) -> (Engine<Msg>, T) {
+        (self.engine, self.transport)
+    }
+
+    fn flush(&mut self, notables: &mut Vec<Notable>) -> usize {
+        let staged: Vec<(ConnId, WireMsg)> =
+            self.outbox.borrow_mut().drain(..).collect();
+        let flushed = staged.len();
+        for (conn, msg) in staged {
+            let label = msg_label(&msg);
+            match self.transport.send(conn, &msg) {
+                Ok(()) => notables.push(Notable::Sent { conn, label }),
+                Err(error) => notables.push(Notable::SendFailed { conn, error }),
+            }
+        }
+        flushed
+    }
+
+    fn handle(&mut self, ev: TransportEvent, notables: &mut Vec<Notable>) {
+        match ev {
+            TransportEvent::Accepted { conn } => {
+                let link =
+                    self.engine.add_actor(Box::new(ServerLink::new(conn, self.outbox.clone())));
+                self.servers.insert(conn, (link, false));
+                notables.push(Notable::Accepted { conn });
+            }
+            TransportEvent::Frame { conn, msg } => self.on_frame(conn, msg, notables),
+            TransportEvent::Closed { conn, error } => {
+                self.clients.remove(&conn);
+                self.servers.remove(&conn);
+                notables.push(Notable::Closed { conn, error });
+            }
+        }
+    }
+
+    fn on_frame(&mut self, conn: ConnId, msg: WireMsg, notables: &mut Vec<Notable>) {
+        match msg {
+            WireMsg::Hello { version, node: _, cookie } => {
+                if version != WIRE_VERSION {
+                    self.transport.close_conn(conn);
+                    notables.push(Notable::BadHello { conn, version });
+                    return;
+                }
+                if let Some(entry) = self.servers.get_mut(&conn) {
+                    entry.1 = self.trust_cookie && cookie == self.cookie;
+                }
+            }
+            WireMsg::Req { wire_id, from_node, mut kind } => {
+                let Some(&(link, trusted)) = self.servers.get(&conn) else {
+                    return;
+                };
+                let Some(broker) = self.broker else {
+                    return;
+                };
+                if !trusted {
+                    rewrite_spec_actors(&mut kind, link);
+                }
+                let label = kind_label(&kind);
+                notables.push(Notable::Req { conn, wire_id, label });
+                let now = self.engine.now();
+                self.engine.schedule(
+                    now,
+                    broker,
+                    Msg::rpc(RpcRequest {
+                        id: wire_id,
+                        reply_to: link,
+                        from_node: from_node as usize,
+                        kind,
+                    }),
+                );
+            }
+            WireMsg::Rep { wire_id, reply } => {
+                let Some(&link) = self.clients.get(&conn) else {
+                    return;
+                };
+                let routed = self
+                    .engine
+                    .actor_as::<ClientLink>(link)
+                    .and_then(|l| l.take_pending(wire_id));
+                match routed {
+                    Some((id, reply_to)) => {
+                        let now = self.engine.now();
+                        self.engine.schedule(
+                            now,
+                            reply_to,
+                            Msg::reply(RpcEnvelope { id, reply }),
+                        );
+                    }
+                    None => notables.push(Notable::OrphanReply { conn, wire_id }),
+                }
+            }
+            // Push subscriptions only exist colocated (the paper's shared-
+            // memory asymmetry), so cluster nodes never need an `Evt`
+            // re-injected into their engine — surfacing it is enough for
+            // external clients (the contract harness reads these raw).
+            WireMsg::Evt { event } => notables.push(Notable::Event { conn, event }),
+            WireMsg::Shutdown => notables.push(Notable::ShutdownRequested { conn }),
+            WireMsg::Bye { replies_sent } => {
+                notables.push(Notable::Bye { conn, replies_sent });
+            }
+        }
+    }
+}
+
+/// Replace engine-local actor ids in subscription specs with the
+/// connection's [`ServerLink`], so notifications and acks route back over
+/// the wire instead of into this engine's unrelated actors.
+fn rewrite_spec_actors(kind: &mut RpcKind, link: ActorId) {
+    match kind {
+        RpcKind::PushSubscribe { sources } => {
+            for s in sources {
+                s.source_actor = link;
+            }
+        }
+        RpcKind::WriteSubscribe { producer } => producer.producer_actor = link,
+        _ => {}
+    }
+}
+
+fn kind_label(kind: &RpcKind) -> &'static str {
+    match kind {
+        RpcKind::Append { .. } => "append",
+        RpcKind::Pull { .. } => "pull",
+        RpcKind::PushSubscribe { .. } => "push_subscribe",
+        RpcKind::PushUnsubscribe { .. } => "push_unsubscribe",
+        RpcKind::WriteSubscribe { .. } => "write_subscribe",
+        RpcKind::CommitCheckpoint { .. } => "commit_checkpoint",
+        RpcKind::SealObject { .. } => "seal_object",
+        RpcKind::Replicate { .. } => "replicate",
+    }
+}

@@ -1,0 +1,145 @@
+//! The proxy actors that splice a [`crate::transport::Transport`]
+//! connection into a node's local engine.
+//!
+//! On the real plane every node runs its own single-threaded DES engine as
+//! a plain event loop; the only things that cross node (thread) boundaries
+//! are encoded frames. These two actors are the splice points:
+//!
+//! * [`ClientLink`] stands in for a *remote broker*: a producer addresses
+//!   its `Msg::Rpc` at the link exactly as it would address a local broker
+//!   actor, and the link turns it into a [`WireMsg::Req`] staged on the
+//!   shared [`Outbox`]. When the reply frame lands, the node driver asks
+//!   the link to translate the connection-scoped wire id back into the
+//!   original `(RpcId, reply_to)` pair and re-injects a `Msg::Reply`.
+//! * [`ServerLink`] stands in for a *remote client*: the broker addresses
+//!   replies and `ObjectReady` notifications at the link exactly as it
+//!   would address a local producer or source, and the link stages the
+//!   corresponding `Rep`/`Evt` frames.
+//!
+//! Neither link touches a socket — they only stage `(ConnId, WireMsg)`
+//! pairs on the outbox; the [`crate::real::NodeDriver`] flushes the outbox
+//! through the transport after every engine pump. That keeps the actors
+//! single-threaded and panic-free while the transport owns all blocking.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::proto::{Msg, RpcId};
+use crate::sim::{Actor, ActorId, Ctx};
+use crate::transport::{ConnId, WireEvent, WireMsg};
+
+/// Frames staged by link actors for the node driver to flush. Engine-local
+/// (`Rc`), like every other piece of node state on the real plane.
+pub type Outbox = Rc<RefCell<Vec<(ConnId, WireMsg)>>>;
+
+/// Local stand-in for a broker that lives on another node.
+pub struct ClientLink {
+    conn: ConnId,
+    outbox: Outbox,
+    next_wire: u64,
+    /// wire id -> the original request identity to restore on reply.
+    pending: HashMap<u64, (RpcId, ActorId)>,
+}
+
+impl ClientLink {
+    pub fn new(conn: ConnId, outbox: Outbox) -> Self {
+        Self { conn, outbox, next_wire: 1, pending: HashMap::new() }
+    }
+
+    /// Resolve a reply frame's wire id back to `(client RpcId, reply_to)`.
+    /// `None` means the peer replied to something we never sent — the
+    /// driver drops the frame (and reports it) instead of corrupting an
+    /// unrelated client's state.
+    pub fn take_pending(&mut self, wire_id: u64) -> Option<(RpcId, ActorId)> {
+        self.pending.remove(&wire_id)
+    }
+
+    /// Requests sent but not yet answered (drain / shutdown accounting).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+impl Actor<Msg> for ClientLink {
+    fn on_event(&mut self, msg: Msg, _ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Rpc(req) => {
+                let req = *req;
+                let wire_id = self.next_wire;
+                self.next_wire += 1;
+                self.pending.insert(wire_id, (req.id, req.reply_to));
+                self.outbox.borrow_mut().push((
+                    self.conn,
+                    WireMsg::Req {
+                        wire_id,
+                        from_node: req.from_node as u32,
+                        kind: req.kind,
+                    },
+                ));
+            }
+            other => panic!("client link got non-RPC message {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("client-link(conn#{})", self.conn)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+/// Local stand-in for a producer/source that lives on another node.
+pub struct ServerLink {
+    conn: ConnId,
+    outbox: Outbox,
+    replies_sent: u64,
+}
+
+impl ServerLink {
+    pub fn new(conn: ConnId, outbox: Outbox) -> Self {
+        Self { conn, outbox, replies_sent: 0 }
+    }
+
+    /// Replies staged over this connection's lifetime — reported in the
+    /// graceful-shutdown [`WireMsg::Bye`] so clients can cross-check that
+    /// no ack was dropped in the drain.
+    pub fn replies_sent(&self) -> u64 {
+        self.replies_sent
+    }
+}
+
+impl Actor<Msg> for ServerLink {
+    fn on_event(&mut self, msg: Msg, _ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Reply(env) => {
+                self.replies_sent += 1;
+                self.outbox
+                    .borrow_mut()
+                    .push((self.conn, WireMsg::Rep { wire_id: env.id, reply: env.reply }));
+            }
+            Msg::ObjectReady { id } => {
+                self.outbox.borrow_mut().push((
+                    self.conn,
+                    WireMsg::Evt {
+                        event: WireEvent::ObjectReady {
+                            sub: id.sub.0 as u64,
+                            slot: id.slot as u64,
+                        },
+                    },
+                ));
+            }
+            other => panic!("server link got unexpected message {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("server-link(conn#{})", self.conn)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -1,0 +1,486 @@
+//! The real execution plane: the cluster on OS threads + localhost TCP.
+//!
+//! Same actors, same protocol, same construction paths as the sim plane —
+//! [`crate::cluster::build_brokers`] and
+//! [`crate::cluster::build_pipeline_tasks`] are shared verbatim — but the
+//! messages that cross node boundaries travel as length-prefixed frames
+//! over real sockets ([`crate::transport`]) instead of through one global
+//! event queue. What stays in-process is exactly what the paper colocates:
+//! the plasma store, the push notification path and the shared-memory
+//! write path never touch a socket.
+//!
+//! # Topology
+//!
+//! * **Colocated node thread** (`zs-colo`): broker + operator pipeline +
+//!   sources, plus the shared-memory writers when
+//!   `write_mode = sharedmem` (they must live with the plasma store —
+//!   that *is* the colocated premise). Owns the TCP listener.
+//! * **Producer node thread** (`zs-prod`): the sync/pipelined writers,
+//!   "deployed separately from the streaming architecture". Their appends
+//!   are the only RPCs that cross TCP in a cluster run, matching the
+//!   paper's node split (producers remote, processing colocated).
+//!
+//! Each node thread owns a full private engine + blackboards (metrics,
+//! network model, object store); nothing engine-local is `Send`, so
+//! construction happens inside the thread and only encoded frames and
+//! plain counters cross.
+//!
+//! # Termination
+//!
+//! A real run has no virtual horizon: it runs a *bounded* workload
+//! (`corpus_records > 0`, enforced by config validation) to quiescence.
+//! The orchestrator polls per-node counters and declares the run complete
+//! when every produced record was acked, consumed, and the logged-tuple
+//! total has stopped moving; then it stops the nodes, drains them, and
+//! joins every thread (transport reader/writer threads included — the
+//! [`ThreadReport`]s in the summary prove it).
+
+pub mod driver;
+pub mod links;
+pub mod server;
+
+pub use driver::{NodeDriver, Notable, StepReport, PUMP_SLICE};
+pub use links::{ClientLink, Outbox, ServerLink};
+pub use server::run_broker_server;
+
+use std::sync::mpsc::{self, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::broker::StoreRegistry;
+use crate::cluster::{build_brokers, build_pipeline_tasks, NODE_COLOCATED, NODE_PRODUCERS};
+use crate::config::{ExperimentConfig, WriteMode};
+use crate::metrics::{Class, MetricsHub, SharedMetrics};
+use crate::net::Network;
+use crate::ops::FilterOp;
+use crate::pipeline::Pipeline;
+use crate::plasma::ObjectStore;
+use crate::producer::{WriteStats, WriterActor, WriterRegistry, WriterWiring};
+use crate::proto::{Msg, PartitionId};
+use crate::sim::{ActorId, Engine};
+use crate::source::{SourceActor, SourceRegistry, SourceStats, SourceWiring, StatKey};
+use crate::transport::{TcpTransport, ThreadReport, Transport};
+use crate::worker::{OperatorTask, TaskRegistry};
+
+/// Wall-clock cap on one cluster run — a stuck run returns an error with
+/// the nodes stopped and joined, never a hung process.
+const RUN_TIMEOUT_SECS: u64 = 180;
+
+/// Orchestrator poll period while waiting for quiescence.
+const POLL_MS: u64 = 20;
+
+/// Consecutive stable polls of the logged-tuple total (after production
+/// and consumption hit their targets) before the run is declared drained.
+const STABLE_POLLS: u32 = 5;
+
+/// End-of-run summary of a real-plane cluster run. The golden totals
+/// (`records_produced`, `records_consumed`, `tuples_logged`, `planted`,
+/// `matches`) are timing-independent for a bounded workload and must match
+/// the sim plane byte for byte on the same config — `tests/real_plane.rs`
+/// holds that line. Poll-shaped counters (`pull_rpcs`) depend on wall-clock
+/// interleaving and are reported, not compared.
+#[derive(Debug, Clone)]
+pub struct RealRunSummary {
+    pub records_produced: u64,
+    pub records_consumed: u64,
+    pub tuples_logged: u64,
+    pub planted: u64,
+    pub matches: u64,
+    pub pull_rpcs: u64,
+    pub objects_filled: u64,
+    /// Engine events executed across every node.
+    pub events_processed: u64,
+    /// Wall-clock run time (spawn to last join), seconds.
+    pub wall_secs: f64,
+    /// Thread accounting: node threads + every transport reader/writer.
+    /// `spawned == joined` or the run leaked.
+    pub threads: ThreadReport,
+    pub writers: WriteStats,
+    pub sources: SourceStats,
+}
+
+/// Per-node progress counters the orchestrator polls. Plain data behind a
+/// mutex — the only state shared across node threads.
+#[derive(Debug, Default, Clone, Copy)]
+struct NodeStatus {
+    produced: u64,
+    consumed: u64,
+    logged: u64,
+}
+
+/// What a node thread hands back when it stops. `Send` by construction:
+/// all engine-local state dies inside the thread.
+struct NodeOutcome {
+    writers: WriteStats,
+    sources: SourceStats,
+    op_matches: u64,
+    pull_rpcs: u64,
+    objects_filled: u64,
+    tuples_logged: u64,
+    events_processed: u64,
+    threads: ThreadReport,
+}
+
+/// Run `config` on the real plane: spawn the node threads, wait for the
+/// bounded workload to drain, stop and join everything, and summarise.
+pub fn run_cluster(config: &ExperimentConfig) -> Result<RealRunSummary, String> {
+    config.validate()?;
+    if config.corpus_records == 0 {
+        return Err("real-plane runs need corpus_records > 0".into());
+    }
+    let listener = TcpTransport::listen("127.0.0.1:0")
+        .map_err(|e| format!("real plane: listen failed: {e}"))?;
+    let addr = listener.local_addr().expect("listener has an address");
+    // Per-run cluster membership secret (see the driver's trust docs).
+    let cookie = config.seed ^ 0xC1u64.rotate_left(32) ^ 0x5EED;
+    let remote_writers = config.write_mode != WriteMode::SharedMem;
+    let target = (config.np as u64) * config.corpus_records;
+
+    let colo_status = Arc::new(Mutex::new(NodeStatus::default()));
+    let prod_status = Arc::new(Mutex::new(NodeStatus::default()));
+    let (colo_stop_tx, colo_stop_rx) = mpsc::channel::<()>();
+    let (prod_stop_tx, prod_stop_rx) = mpsc::channel::<()>();
+
+    let started = Instant::now();
+    let mut node_threads = 0usize;
+
+    let colo = {
+        let config = config.clone();
+        let status = colo_status.clone();
+        thread::Builder::new()
+            .name("zs-colo".into())
+            .spawn(move || colo_node_main(config, listener, cookie, status, colo_stop_rx))
+            .map_err(|e| format!("spawning colo node: {e}"))?
+    };
+    node_threads += 1;
+    let prod = if remote_writers {
+        let config = config.clone();
+        let status = prod_status.clone();
+        let handle = thread::Builder::new()
+            .name("zs-prod".into())
+            .spawn(move || producer_node_main(config, addr, cookie, status, prod_stop_rx))
+            .map_err(|e| format!("spawning producer node: {e}"))?;
+        node_threads += 1;
+        Some(handle)
+    } else {
+        None
+    };
+
+    // ---- wait for quiescence -------------------------------------------
+    let deadline = started + Duration::from_secs(RUN_TIMEOUT_SECS);
+    let mut stable = 0u32;
+    let mut last_logged = u64::MAX;
+    let timed_out = loop {
+        thread::sleep(Duration::from_millis(POLL_MS));
+        if colo.is_finished() || prod.as_ref().is_some_and(|h| h.is_finished()) {
+            // A node died early (panic); stop the rest and surface it.
+            break false;
+        }
+        let c = *colo_status.lock().unwrap();
+        let produced = if remote_writers {
+            prod_status.lock().unwrap().produced
+        } else {
+            c.produced
+        };
+        if produced >= target && c.consumed >= target {
+            if c.logged == last_logged {
+                stable += 1;
+            } else {
+                stable = 0;
+                last_logged = c.logged;
+            }
+            if stable >= STABLE_POLLS {
+                break false;
+            }
+        } else {
+            stable = 0;
+            last_logged = u64::MAX;
+        }
+        if Instant::now() > deadline {
+            break true;
+        }
+    };
+
+    // ---- stop, drain, join ---------------------------------------------
+    // Producers first: their transport shutdown closes the append
+    // connection at a frame boundary, which the colo node observes as a
+    // clean close before its own stop.
+    let _ = prod_stop_tx.send(());
+    let prod_outcome = match prod {
+        Some(h) => Some(h.join().map_err(|_| "producer node panicked".to_string())?),
+        None => None,
+    };
+    let _ = colo_stop_tx.send(());
+    let colo_outcome = colo.join().map_err(|_| "colo node panicked".to_string())?;
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    if timed_out {
+        return Err(format!(
+            "real-plane run timed out after {RUN_TIMEOUT_SECS}s \
+             (produced target {target}, see node counters)"
+        ));
+    }
+
+    // ---- merge ----------------------------------------------------------
+    let mut writers = colo_outcome.writers.clone();
+    let mut sources = colo_outcome.sources.clone();
+    let mut threads = ThreadReport {
+        spawned: colo_outcome.threads.spawned + node_threads,
+        joined: colo_outcome.threads.joined + node_threads,
+    };
+    let mut events_processed = colo_outcome.events_processed;
+    let mut pull_rpcs = colo_outcome.pull_rpcs;
+    let mut objects_filled = colo_outcome.objects_filled;
+    if let Some(p) = prod_outcome {
+        writers.merge(&p.writers);
+        sources.merge(&p.sources);
+        threads.spawned += p.threads.spawned;
+        threads.joined += p.threads.joined;
+        events_processed += p.events_processed;
+        pull_rpcs += p.pull_rpcs;
+        objects_filled += p.objects_filled;
+    }
+    Ok(RealRunSummary {
+        records_produced: writers.records_sent,
+        records_consumed: sources.records_consumed,
+        tuples_logged: colo_outcome.tuples_logged,
+        planted: writers.planted,
+        matches: sources.extra(StatKey::Matches) + colo_outcome.op_matches,
+        pull_rpcs,
+        objects_filled,
+        events_processed,
+        wall_secs,
+        threads,
+        writers,
+        sources,
+    })
+}
+
+/// The colocated node: broker + pipeline + sources (+ sharedmem writers),
+/// serving the TCP listener.
+fn colo_node_main(
+    config: ExperimentConfig,
+    listener: TcpTransport,
+    cookie: u64,
+    status: Arc<Mutex<NodeStatus>>,
+    stop: mpsc::Receiver<()>,
+) -> NodeOutcome {
+    let source_registry = SourceRegistry::builtin();
+    let writer_registry = WriterRegistry::builtin();
+    let factory = source_registry.expect(config.mode);
+    let mut engine = Engine::new(config.seed);
+    let metrics = MetricsHub::shared();
+    let net = Network::shared(config.cost.network, config.cost.loopback);
+    let store = ObjectStore::shared();
+    let registry = TaskRegistry::shared();
+    let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+
+    let (broker, _backup) = build_brokers(
+        &mut engine,
+        &config,
+        &StoreRegistry::builtin(),
+        factory.broker_push_threads(),
+        &partitions,
+        &net,
+        &store,
+        &metrics,
+    );
+    // Shared-memory writers are colocated by definition (they fill plasma
+    // objects in-process); every other write mode runs on the producer
+    // node thread instead.
+    let producers = if config.write_mode == WriteMode::SharedMem {
+        writer_registry.expect(config.write_mode).build(
+            &WriterWiring {
+                config: &config,
+                producer_node: NODE_PRODUCERS,
+                broker,
+                broker_node: NODE_COLOCATED,
+                partitions: partitions.clone(),
+                metrics: metrics.clone(),
+                net: net.clone(),
+                store: store.clone(),
+            },
+            &mut engine,
+        )
+    } else {
+        Vec::new()
+    };
+    let pipeline = factory
+        .uses_pipeline()
+        .then(|| Pipeline::for_workload(config.workload, config.nc, config.nmap));
+    let (tasks, stage0) =
+        build_pipeline_tasks(&mut engine, &config, &pipeline, &registry, &metrics, &None, &None);
+    let wiring = SourceWiring {
+        config: &config,
+        node: NODE_COLOCATED,
+        broker,
+        broker_node: NODE_COLOCATED,
+        downstream: stage0,
+        metrics: metrics.clone(),
+        net: net.clone(),
+        store: store.clone(),
+        registry: registry.clone(),
+        compute: None,
+        checkpoint: None,
+    };
+    let sources = factory.build(&wiring, &mut engine);
+
+    let mut driver = NodeDriver::new(engine, listener, cookie, true);
+    driver.serve(broker);
+
+    let mut wait = 0u64;
+    let mut tick = 0u32;
+    loop {
+        match stop.try_recv() {
+            Err(TryRecvError::Empty) => {}
+            Ok(()) | Err(TryRecvError::Disconnected) => break,
+        }
+        let r = driver.step(wait);
+        wait = if r.is_idle() { 2 } else { 0 };
+        tick = tick.wrapping_add(1);
+        if r.is_idle() || tick % 8 == 0 {
+            publish(&status, &mut driver.engine, &producers, &sources, &metrics);
+        }
+    }
+    // Final flush: push out any staged acks so a stopping peer never loses
+    // one. Bounded by max_steps, not idleness — pull sources re-arm their
+    // poll timers forever, so this node never reads as idle.
+    driver.settle(3, 50);
+    publish(&status, &mut driver.engine, &producers, &sources, &metrics);
+
+    let (mut engine, transport) = driver.into_parts();
+    let writers = collect_writer_stats(&mut engine, &producers);
+    let source_stats = collect_source_stats(&mut engine, &sources);
+    let mut op_matches = 0;
+    for &tid in &tasks {
+        if let Some(t) = engine.actor_as::<OperatorTask>(tid) {
+            if let Some(f) = t.op_as::<FilterOp>(0) {
+                op_matches += f.matches;
+            }
+        }
+    }
+    let m = metrics.borrow();
+    NodeOutcome {
+        writers,
+        sources: source_stats,
+        op_matches,
+        pull_rpcs: m.total(Class::PullRpcs),
+        objects_filled: m.total(Class::ObjectsFilled),
+        tuples_logged: m.total(Class::ConsumerTuples),
+        events_processed: engine.events_processed(),
+        threads: transport.shutdown(),
+    }
+}
+
+/// The producer node: sync/pipelined writers appending to the colo node's
+/// broker through a [`ClientLink`] over TCP.
+fn producer_node_main(
+    config: ExperimentConfig,
+    addr: String,
+    cookie: u64,
+    status: Arc<Mutex<NodeStatus>>,
+    stop: mpsc::Receiver<()>,
+) -> NodeOutcome {
+    let writer_registry = WriterRegistry::builtin();
+    let engine = Engine::new(config.seed);
+    let metrics = MetricsHub::shared();
+    let net = Network::shared(config.cost.network, config.cost.loopback);
+    let store = ObjectStore::shared();
+    let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+
+    let mut driver = NodeDriver::new(engine, TcpTransport::client(), cookie, true);
+    let (_conn, link) = driver
+        .connect(&addr, NODE_PRODUCERS as u32)
+        .unwrap_or_else(|e| panic!("producer node: connecting to {addr}: {e}"));
+    // Same factory, same wiring shape as the sim plane — the broker is
+    // simply the link actor, so every append the writer issues becomes a
+    // `Req` frame instead of a local engine message. The writer code
+    // cannot tell the difference.
+    let producers = writer_registry.expect(config.write_mode).build(
+        &WriterWiring {
+            config: &config,
+            producer_node: NODE_PRODUCERS,
+            broker: link,
+            broker_node: NODE_COLOCATED,
+            partitions,
+            metrics: metrics.clone(),
+            net: net.clone(),
+            store: store.clone(),
+        },
+        &mut driver.engine,
+    );
+
+    let mut wait = 0u64;
+    let mut tick = 0u32;
+    loop {
+        match stop.try_recv() {
+            Err(TryRecvError::Empty) => {}
+            Ok(()) | Err(TryRecvError::Disconnected) => break,
+        }
+        let r = driver.step(wait);
+        wait = if r.is_idle() { 2 } else { 0 };
+        tick = tick.wrapping_add(1);
+        if r.is_idle() || tick % 8 == 0 {
+            publish(&status, &mut driver.engine, &producers, &[], &metrics);
+        }
+    }
+    // Drain: no new requests originate after generation finished, so a few
+    // idle rounds mean every in-flight ack has landed.
+    driver.settle(3, 500);
+    publish(&status, &mut driver.engine, &producers, &[], &metrics);
+
+    let (mut engine, transport) = driver.into_parts();
+    let writers = collect_writer_stats(&mut engine, &producers);
+    let m = metrics.borrow();
+    NodeOutcome {
+        writers,
+        sources: SourceStats::default(),
+        op_matches: 0,
+        pull_rpcs: m.total(Class::PullRpcs),
+        objects_filled: m.total(Class::ObjectsFilled),
+        tuples_logged: 0,
+        events_processed: engine.events_processed(),
+        threads: transport.shutdown(),
+    }
+}
+
+fn publish(
+    status: &Arc<Mutex<NodeStatus>>,
+    engine: &mut Engine<Msg>,
+    producers: &[ActorId],
+    sources: &[ActorId],
+    metrics: &SharedMetrics,
+) {
+    let produced = collect_writer_stats(engine, producers).records_sent;
+    let consumed = collect_source_stats(engine, sources).records_consumed;
+    let logged = metrics.borrow().total(Class::ConsumerTuples);
+    if let Ok(mut s) = status.lock() {
+        *s = NodeStatus { produced, consumed, logged };
+    }
+}
+
+/// Same extraction contract as `Cluster::finish`: a producer that is not a
+/// registry-built [`WriterActor`] is a hard error, not dropped totals.
+fn collect_writer_stats(engine: &mut Engine<Msg>, producers: &[ActorId]) -> WriteStats {
+    let mut stats = WriteStats::default();
+    for &pid in producers {
+        let actor = engine.actor_as::<WriterActor>(pid).unwrap_or_else(|| {
+            panic!("producer {pid} was not built through the WriterFactory registry")
+        });
+        stats.merge(&actor.stats());
+    }
+    stats
+}
+
+/// Same extraction contract as `Cluster::finish` for sources.
+fn collect_source_stats(engine: &mut Engine<Msg>, sources: &[ActorId]) -> SourceStats {
+    let mut stats = SourceStats::default();
+    for &sid in sources {
+        let actor = engine.actor_as::<SourceActor>(sid).unwrap_or_else(|| {
+            panic!("source {sid} was not built through the SourceFactory registry")
+        });
+        stats.merge(&actor.stats());
+    }
+    stats
+}

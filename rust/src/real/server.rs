@@ -1,0 +1,176 @@
+//! The standalone broker server behind `zettastream broker --listen`.
+//!
+//! A broker-only node driven over real TCP by external clients — the
+//! spawned-binary contract harness (`tests/broker_contract.rs`) exercises
+//! the full RPC surface against it and asserts on this module's structured
+//! output. Two output contracts:
+//!
+//! * one flushed plain-text ready line,
+//!   `ZETTASTREAM-BROKER ready addr=<host:port>`, so a harness that
+//!   listened on port 0 can learn the ephemeral port;
+//! * one JSON object per line afterwards (`{"event":...}`): connection
+//!   lifecycle, every request dispatched, every frame sent, and a final
+//!   `shutdown` record with the transport thread accounting.
+//!
+//! The server trusts nobody: every subscription spec's actor ids are
+//! rewritten to the connection's [`ServerLink`], so `ObjectReady`
+//! notifications and acks travel back over the wire as frames (see the
+//! driver's trust docs). A [`WireMsg::Shutdown`] frame triggers the
+//! graceful drain: pump until quiescent, send each connection a
+//! [`WireMsg::Bye`] carrying its reply count, flush, join every thread.
+
+use std::io::Write as _;
+
+use crate::broker::StoreRegistry;
+use crate::cluster::build_brokers;
+use crate::config::ExperimentConfig;
+use crate::metrics::MetricsHub;
+use crate::net::Network;
+use crate::plasma::ObjectStore;
+use crate::proto::PartitionId;
+use crate::sim::Engine;
+use crate::transport::{TcpTransport, Transport, WireMsg};
+
+use super::driver::{NodeDriver, Notable};
+use super::links::ServerLink;
+
+/// Escape a value for embedding inside a JSON string literal.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn jline(line: String) {
+    println!("{line}");
+}
+
+/// Run a broker-only node on `listen` until a client sends `Shutdown`.
+pub fn run_broker_server(listen: &str, config: &ExperimentConfig) -> Result<(), String> {
+    let listener = TcpTransport::listen(listen)
+        .map_err(|e| format!("broker: listening on {listen}: {e}"))?;
+    let addr = listener.local_addr().expect("listener has an address");
+
+    let mut engine = Engine::new(config.seed);
+    let metrics = MetricsHub::shared();
+    let net = Network::shared(config.cost.network, config.cost.loopback);
+    let store = ObjectStore::shared();
+    let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
+    // Always keep one push thread: external clients may PushSubscribe, and
+    // fills must complete so ObjectReady events flow back as frames.
+    let (broker, _backup) = build_brokers(
+        &mut engine,
+        config,
+        &StoreRegistry::builtin(),
+        1,
+        &partitions,
+        &net,
+        &store,
+        &metrics,
+    );
+
+    let mut driver = NodeDriver::new(engine, listener, 0, false);
+    driver.serve(broker);
+
+    println!("ZETTASTREAM-BROKER ready addr={addr}");
+    std::io::stdout().flush().map_err(|e| format!("flushing ready line: {e}"))?;
+
+    let mut shutdown_requested = false;
+    let mut wait = 0u64;
+    loop {
+        let r = driver.step(wait);
+        wait = if r.is_idle() { 5 } else { 0 };
+        for n in &r.notables {
+            emit(n);
+        }
+        if r.notables.iter().any(|n| matches!(n, Notable::ShutdownRequested { .. })) {
+            shutdown_requested = true;
+        }
+        if shutdown_requested && r.is_idle() {
+            break;
+        }
+    }
+
+    // Drain whatever the shutdown race left in flight, then say goodbye on
+    // every live connection with its reply count (the no-lost-acks proof).
+    for n in driver.settle(3, 2000) {
+        emit(&n);
+    }
+    let links = driver.server_links();
+    for &(conn, link) in &links {
+        let replies_sent = driver
+            .engine
+            .actor_as::<ServerLink>(link)
+            .map(|l| l.replies_sent())
+            .unwrap_or(0);
+        driver.stage(conn, WireMsg::Bye { replies_sent });
+    }
+    let r = driver.step(0);
+    for n in &r.notables {
+        emit(n);
+    }
+
+    let (_engine, transport) = driver.into_parts();
+    let report = transport.shutdown();
+    jline(format!(
+        "{{\"event\":\"shutdown\",\"threads_spawned\":{},\"threads_joined\":{}}}",
+        report.spawned, report.joined
+    ));
+    std::io::stdout().flush().map_err(|e| format!("flushing shutdown line: {e}"))?;
+    if report.spawned != report.joined {
+        return Err(format!(
+            "transport leaked threads: spawned {} joined {}",
+            report.spawned, report.joined
+        ));
+    }
+    Ok(())
+}
+
+fn emit(n: &Notable) {
+    match n {
+        Notable::Accepted { conn } => {
+            jline(format!("{{\"event\":\"accepted\",\"conn\":{conn}}}"));
+        }
+        Notable::Req { conn, wire_id, label } => {
+            jline(format!(
+                "{{\"event\":\"req\",\"conn\":{conn},\"wire_id\":{wire_id},\"kind\":\"{label}\"}}"
+            ));
+        }
+        Notable::Sent { conn, label } => {
+            jline(format!("{{\"event\":\"sent\",\"conn\":{conn},\"kind\":\"{label}\"}}"));
+        }
+        Notable::Event { conn, event } => {
+            jline(format!(
+                "{{\"event\":\"notify\",\"conn\":{conn},\"detail\":\"{}\"}}",
+                json_escape(&format!("{event:?}"))
+            ));
+        }
+        Notable::ShutdownRequested { conn } => {
+            jline(format!("{{\"event\":\"shutdown_requested\",\"conn\":{conn}}}"));
+        }
+        Notable::Bye { conn, replies_sent } => {
+            jline(format!(
+                "{{\"event\":\"bye\",\"conn\":{conn},\"replies_sent\":{replies_sent}}}"
+            ));
+        }
+        Notable::Closed { conn, error } => match error {
+            None => jline(format!("{{\"event\":\"closed\",\"conn\":{conn}}}")),
+            Some(e) => jline(format!(
+                "{{\"event\":\"closed\",\"conn\":{conn},\"error\":\"{}\"}}",
+                json_escape(&format!("{e:?}"))
+            )),
+        },
+        Notable::SendFailed { conn, error } => {
+            jline(format!(
+                "{{\"event\":\"send_failed\",\"conn\":{conn},\"error\":\"{}\"}}",
+                json_escape(&format!("{error:?}"))
+            ));
+        }
+        Notable::BadHello { conn, version } => {
+            jline(format!("{{\"event\":\"bad_hello\",\"conn\":{conn},\"version\":{version}}}"));
+        }
+        Notable::OrphanReply { conn, wire_id } => {
+            jline(format!(
+                "{{\"event\":\"orphan_reply\",\"conn\":{conn},\"wire_id\":{wire_id}}}"
+            ));
+        }
+    }
+}

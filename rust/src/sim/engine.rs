@@ -274,6 +274,28 @@ impl<M> Engine<M> {
     /// Run until the queue drains or virtual time would pass `until`.
     /// Returns the number of events processed by this call.
     pub fn run_until(&mut self, until: Time) -> u64 {
+        let processed = self.run_events(until);
+        // Advance the clock to the horizon even if we idled out early.
+        if self.clock < until
+            && self.now_queue.is_empty()
+            && self.queue.iter().all(|Reverse(s)| s.time > until)
+        {
+            self.clock = until;
+        }
+        processed
+    }
+
+    /// Process every queued event and stop with the clock at the LAST
+    /// delivered event's time — never saturated to a horizon. This is the
+    /// real plane's pump: between socket polls the node drains whatever
+    /// its actors have queued, and the virtual clock must stay meaningful
+    /// (per-second metric buckets, timer deltas) across an arbitrary
+    /// number of pump calls.
+    pub fn drain(&mut self) -> u64 {
+        self.run_events(Time::MAX)
+    }
+
+    fn run_events(&mut self, until: Time) -> u64 {
         if !self.started {
             self.start();
         }
@@ -310,13 +332,6 @@ impl<M> Engine<M> {
             }
         }
         self.emit_buf = emits;
-        // Advance the clock to the horizon even if we idled out early.
-        if self.clock < until
-            && self.now_queue.is_empty()
-            && self.queue.iter().all(|Reverse(s)| s.time > until)
-        {
-            self.clock = until;
-        }
         processed
     }
 

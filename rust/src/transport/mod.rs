@@ -1,0 +1,237 @@
+//! The transport seam between the two execution planes.
+//!
+//! Everything above this layer — brokers, sources, producers, the operator
+//! pipeline, the plasma store — is ONE codebase speaking [`WireMsg`]s. A
+//! [`Transport`] moves those messages between endpoints; the crate ships
+//! two implementations:
+//!
+//! * [`SimTransport`] — backed by the DES [`crate::net::Network`]
+//!   blackboard: sends are charged through the same serialisation-horizon
+//!   link model the sim plane's actors use, delivery is in-memory, and the
+//!   virtual clock orders everything. This is the existing plane, exposed
+//!   through the seam so its ordering contract is testable side by side
+//!   with the real one.
+//! * [`TcpTransport`] — real `std::net::TcpStream` connections on
+//!   localhost with per-connection reader/writer OS threads, length-
+//!   prefixed frames ([`frame`]) and the hand-rolled codec ([`wire`]).
+//!
+//! # Ordering contract
+//!
+//! Implementations MUST provide, and callers may only assume:
+//!
+//! 1. **Per-connection FIFO, both directions.** Messages sent on one
+//!    connection are delivered to that connection's peer in send order,
+//!    without loss or duplication, up to the point of connection failure.
+//! 2. **No cross-connection ordering.** Messages on different connections
+//!    are delivered in an unspecified interleaving, even between the same
+//!    pair of endpoints.
+//! 3. **Connection events are ordered with data.** `Accepted` precedes any
+//!    `Frame` from that connection; `Closed` follows the last `Frame` and
+//!    is delivered exactly once, carrying `Some(error)` iff the connection
+//!    died abnormally (a peer vanishing mid-frame is
+//!    [`FrameError::EofMidFrame`], never a panic).
+//!
+//! # Backpressure
+//!
+//! [`Transport::send`] may block the calling thread when the connection's
+//! bounded write queue is full (TCP: `sync_channel` of encoded frames per
+//! connection; kernel socket buffers behind it). Receive never blocks
+//! beyond the `poll` timeout: inbound frames are buffered unbounded in the
+//! process, which is safe because every protocol above this layer is
+//! request/reply or credit-windowed — the peer cannot have more frames in
+//! flight than its own windows allow.
+//!
+//! # Error surface
+//!
+//! All failures are typed [`FrameError`]s: framing violations
+//! (`Oversized`, `Truncated`, `UnknownTag`), abnormal stream end
+//! (`EofMidFrame`), socket failures (`Io`) and use-after-close
+//! (`Closed`). None of them panic; a decode failure on a connection
+//! surfaces as a `Closed` event for exactly that connection.
+
+pub mod frame;
+pub mod tcp;
+pub mod wire;
+
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::net::{NodeId, SharedNetwork};
+use crate::sim::Time;
+pub use frame::{FrameDecoder, FrameError, MAX_FRAME_BYTES};
+pub use tcp::{TcpTransport, ThreadReport};
+pub use wire::{WireEvent, WireMsg, WIRE_VERSION};
+
+/// Endpoint-scoped connection handle. Stable for the life of the
+/// transport; never reused after `Closed`.
+pub type ConnId = usize;
+
+/// What `poll` yields.
+#[derive(Debug)]
+pub enum TransportEvent {
+    /// A peer connected to this endpoint's listener.
+    Accepted { conn: ConnId },
+    /// One decoded message from `conn` (per-connection FIFO).
+    Frame { conn: ConnId, msg: WireMsg },
+    /// `conn` is gone; `error` is `None` on a clean close at a frame
+    /// boundary, `Some` otherwise. Delivered exactly once per connection.
+    Closed { conn: ConnId, error: Option<FrameError> },
+}
+
+/// Message movement between endpoints — the seam the two execution planes
+/// share. See the module docs for the ordering/backpressure/error
+/// contract; both implementations are tested against it side by side
+/// (`tests/transport_parity.rs`).
+pub trait Transport {
+    /// Open a connection to `addr`. The peer observes `Accepted`.
+    fn connect(&mut self, addr: &str) -> Result<ConnId, FrameError>;
+
+    /// Queue one message on `conn`. May block on the connection's bounded
+    /// write queue (backpressure); fails fast with [`FrameError::Closed`]
+    /// if the connection is gone.
+    fn send(&mut self, conn: ConnId, msg: &WireMsg) -> Result<(), FrameError>;
+
+    /// Deliver pending events, waiting up to `max_wait_ms` for the first
+    /// one. Returns an empty vec on timeout.
+    fn poll(&mut self, max_wait_ms: u64) -> Vec<TransportEvent>;
+
+    /// Close one connection (the peer observes `Closed`).
+    fn close_conn(&mut self, conn: ConnId);
+
+    /// The listen address, if this endpoint accepts connections.
+    fn local_addr(&self) -> Option<String>;
+}
+
+// ---------------------------------------------------------------------------
+// SimTransport
+// ---------------------------------------------------------------------------
+
+/// The DES plane behind the [`Transport`] seam.
+///
+/// Both endpoints of a [`SimTransport::pair`] share one fabric: a virtual
+/// clock plus per-connection, per-direction FIFO queues. Every send is
+/// charged through the shared [`crate::net::Network`] (the same
+/// serialisation-horizon model the sim cluster's actors pay), so message
+/// order is exactly what the DES plane would deliver; the message itself
+/// round-trips through the real codec (`encode` then `decode`) so the sim
+/// seam exercises byte-level compatibility, not just semantics.
+pub struct SimTransport {
+    fabric: Rc<RefCell<SimFabric>>,
+    /// 0 = the "listener" endpoint, 1 = the "client" endpoint.
+    side: usize,
+}
+
+struct SimFabric {
+    net: SharedNetwork,
+    /// Node index of side 0 / side 1 in the network model.
+    nodes: [NodeId; 2],
+    clock: Time,
+    conns: Vec<SimConn>,
+}
+
+struct SimConn {
+    /// Inbound queue per side: `inbox[s]` holds what side `s` will read.
+    inbox: [VecDeque<WireMsg>; 2],
+    /// Accepted event not yet delivered to side 0.
+    pending_accept: bool,
+    /// Closed-by flags per side (a close by one side surfaces once at the
+    /// other).
+    closed_by: [bool; 2],
+    close_delivered: [bool; 2],
+}
+
+impl SimTransport {
+    /// A connected pair of endpoints over `net`, between `node_listener`
+    /// and `node_client`. Returns `(listener_side, client_side)`.
+    pub fn pair(
+        net: SharedNetwork,
+        node_listener: NodeId,
+        node_client: NodeId,
+    ) -> (SimTransport, SimTransport) {
+        let fabric = Rc::new(RefCell::new(SimFabric {
+            net,
+            nodes: [node_listener, node_client],
+            clock: 0,
+            conns: Vec::new(),
+        }));
+        (SimTransport { fabric: fabric.clone(), side: 0 }, SimTransport { fabric, side: 1 })
+    }
+
+    fn peer(side: usize) -> usize {
+        1 - side
+    }
+}
+
+impl Transport for SimTransport {
+    fn connect(&mut self, _addr: &str) -> Result<ConnId, FrameError> {
+        let mut f = self.fabric.borrow_mut();
+        f.conns.push(SimConn {
+            inbox: [VecDeque::new(), VecDeque::new()],
+            // Only the listener side observes Accepted, mirroring TCP.
+            pending_accept: self.side == 1,
+            closed_by: [false, false],
+            close_delivered: [false, false],
+        });
+        Ok(f.conns.len() - 1)
+    }
+
+    fn send(&mut self, conn: ConnId, msg: &WireMsg) -> Result<(), FrameError> {
+        let mut f = self.fabric.borrow_mut();
+        let side = self.side;
+        let (from, to) = (f.nodes[side], f.nodes[Self::peer(side)]);
+        // Round-trip through the codec: the sim seam must reject exactly
+        // what the real seam would reject, and deliver an equal message.
+        let body = wire::encode_msg(msg);
+        if body.len() > MAX_FRAME_BYTES {
+            return Err(FrameError::Oversized { len: body.len(), max: MAX_FRAME_BYTES });
+        }
+        let decoded = wire::decode_msg(&body)?;
+        let now = f.clock;
+        // Charge the DES link model; its serialisation horizon is what
+        // orders concurrent senders on the sim plane.
+        let deliver = f.net.borrow_mut().send(now, from, to, 4 + body.len() as u64);
+        f.clock = f.clock.max(deliver);
+        let c = f.conns.get_mut(conn).ok_or(FrameError::Closed)?;
+        if c.closed_by.iter().any(|&b| b) {
+            return Err(FrameError::Closed);
+        }
+        c.inbox[Self::peer(side)].push_back(decoded);
+        Ok(())
+    }
+
+    fn poll(&mut self, _max_wait_ms: u64) -> Vec<TransportEvent> {
+        let mut f = self.fabric.borrow_mut();
+        let side = self.side;
+        let mut out = Vec::new();
+        for (id, c) in f.conns.iter_mut().enumerate() {
+            if side == 0 && c.pending_accept {
+                c.pending_accept = false;
+                out.push(TransportEvent::Accepted { conn: id });
+            }
+            while let Some(msg) = c.inbox[side].pop_front() {
+                out.push(TransportEvent::Frame { conn: id, msg });
+            }
+            // A close by the peer surfaces after its last queued frame.
+            if c.closed_by[Self::peer(side)] && !c.close_delivered[side] {
+                c.close_delivered[side] = true;
+                out.push(TransportEvent::Closed { conn: id, error: None });
+            }
+        }
+        out
+    }
+
+    fn close_conn(&mut self, conn: ConnId) {
+        let mut f = self.fabric.borrow_mut();
+        if let Some(c) = f.conns.get_mut(conn) {
+            c.closed_by[self.side] = true;
+        }
+    }
+
+    fn local_addr(&self) -> Option<String> {
+        (self.side == 0).then(|| "sim:0".to_string())
+    }
+}

@@ -1,0 +1,336 @@
+//! Real transport: localhost TCP with per-connection reader/writer threads.
+//!
+//! Thread model (per [`TcpTransport`] endpoint):
+//!
+//! * the **owner thread** calls [`TcpTransport::poll`] / `send` — it is the
+//!   only place [`WireMsg`]s exist (they hold `Rc`s and are not `Send`;
+//!   only encoded byte buffers cross threads);
+//! * one **reader thread** per connection: blocking reads into a
+//!   [`FrameDecoder`], complete frame *bodies* (raw `Vec<u8>`) go to the
+//!   owner's unbounded inbox. Unbounded on purpose — the reader never
+//!   stalls, so kernel receive buffers always drain and a peer's writer
+//!   can never deadlock against ours (the protocols above are
+//!   request/reply or credit-windowed, bounding what a peer can have in
+//!   flight);
+//! * one **writer thread** per connection: drains a **bounded**
+//!   `sync_channel` of encoded frames into `write_all` — the bound is the
+//!   send-side backpressure the trait contract documents.
+//!
+//! Shutdown: closing a connection drops its writer channel — the writer
+//! finishes its queue, then sends the FIN itself, so queued frames always
+//! reach the wire — and shuts the read half down (the blocking reader
+//! wakes with EOF). [`TcpTransport::shutdown`] closes everything and joins
+//! every thread it ever spawned, returning the accounting a
+//! no-thread-leak test can assert on.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::frame::{encode_frame, FrameDecoder, FrameError};
+use super::wire::{decode_msg, encode_msg, WireMsg};
+use super::{ConnId, Transport, TransportEvent};
+
+/// Encoded frames queued per connection before `send` blocks (the bounded
+/// write window).
+const WRITE_QUEUE_FRAMES: usize = 64;
+
+/// Thread accounting returned by [`TcpTransport::shutdown`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadReport {
+    pub spawned: usize,
+    pub joined: usize,
+}
+
+/// What reader threads push to the owner (bytes only — never a decoded
+/// message, which would not be `Send`).
+enum Inbound {
+    Frame { conn: ConnId, body: Vec<u8> },
+    Closed { conn: ConnId, error: Option<FrameError> },
+}
+
+struct TcpConn {
+    /// Encoded frames to the writer thread; dropping it closes the writer.
+    writer_tx: Option<SyncSender<Vec<u8>>>,
+    /// Own handle for `shutdown(2)` (reader/writer hold clones).
+    stream: TcpStream,
+}
+
+/// The TCP implementation of the transport seam. See the module docs for
+/// the thread model and `super` for the ordering contract.
+pub struct TcpTransport {
+    listener: Option<TcpListener>,
+    conns: HashMap<ConnId, TcpConn>,
+    next_conn: ConnId,
+    inbox_rx: Receiver<Inbound>,
+    inbox_tx: Sender<Inbound>,
+    threads: Vec<JoinHandle<()>>,
+    /// Connections whose `Closed` event has been delivered (guards the
+    /// exactly-once contract when a reader error races a local close).
+    closed_delivered: HashMap<ConnId, bool>,
+}
+
+impl TcpTransport {
+    /// A connect-only endpoint (no listener).
+    pub fn client() -> Self {
+        let (inbox_tx, inbox_rx) = channel();
+        TcpTransport {
+            listener: None,
+            conns: HashMap::new(),
+            next_conn: 0,
+            inbox_rx,
+            inbox_tx,
+            threads: Vec::new(),
+            closed_delivered: HashMap::new(),
+        }
+    }
+
+    /// An accepting endpoint bound to `addr` (use port 0 for ephemeral;
+    /// read the outcome back via [`TcpTransport::local_addr`]).
+    pub fn listen(addr: &str) -> Result<Self, FrameError> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let mut t = Self::client();
+        t.listener = Some(listener);
+        Ok(t)
+    }
+
+    /// Threads spawned so far (readers + writers).
+    pub fn threads_spawned(&self) -> usize {
+        self.threads.len()
+    }
+
+    fn register(&mut self, stream: TcpStream) -> Result<ConnId, FrameError> {
+        stream.set_nodelay(true)?;
+        let conn = self.next_conn;
+        self.next_conn += 1;
+
+        let read_stream = stream.try_clone()?;
+        let write_stream = stream.try_clone()?;
+        let inbox = self.inbox_tx.clone();
+        let (writer_tx, writer_rx) = sync_channel::<Vec<u8>>(WRITE_QUEUE_FRAMES);
+
+        self.threads.push(
+            std::thread::Builder::new()
+                .name(format!("zs-read-{conn}"))
+                .spawn(move || reader_main(conn, read_stream, inbox))
+                .map_err(|e| FrameError::Io(e.to_string()))?,
+        );
+        self.threads.push(
+            std::thread::Builder::new()
+                .name(format!("zs-write-{conn}"))
+                .spawn(move || writer_main(write_stream, writer_rx))
+                .map_err(|e| FrameError::Io(e.to_string()))?,
+        );
+
+        self.conns.insert(conn, TcpConn { writer_tx: Some(writer_tx), stream });
+        self.closed_delivered.insert(conn, false);
+        Ok(conn)
+    }
+
+    fn accept_pending(&mut self, out: &mut Vec<TransportEvent>) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => match l.accept() {
+                    Ok((stream, _peer)) => Some(stream),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => None,
+                    Err(_) => None,
+                },
+                None => None,
+            };
+            match accepted {
+                Some(stream) => match self.register(stream) {
+                    Ok(conn) => out.push(TransportEvent::Accepted { conn }),
+                    Err(_) => {}
+                },
+                None => break,
+            }
+        }
+    }
+
+    fn inbound_to_event(&mut self, inb: Inbound) -> Option<TransportEvent> {
+        match inb {
+            Inbound::Frame { conn, body } => match decode_msg(&body) {
+                Ok(msg) => Some(TransportEvent::Frame { conn, msg }),
+                // A protocol violation kills exactly that connection,
+                // surfacing as its (typed) Closed event.
+                Err(e) => {
+                    self.close_conn(conn);
+                    self.deliver_closed(conn, Some(e))
+                }
+            },
+            Inbound::Closed { conn, error } => self.deliver_closed(conn, error),
+        }
+    }
+
+    fn deliver_closed(&mut self, conn: ConnId, error: Option<FrameError>) -> Option<TransportEvent> {
+        match self.closed_delivered.get_mut(&conn) {
+            Some(done) if !*done => {
+                *done = true;
+                Some(TransportEvent::Closed { conn, error })
+            }
+            _ => None,
+        }
+    }
+
+    /// Close every connection, stop listening, and join every thread this
+    /// endpoint ever spawned. The report's `spawned == joined` is the
+    /// no-thread-leak invariant tests assert.
+    pub fn shutdown(mut self) -> ThreadReport {
+        self.listener = None;
+        let ids: Vec<ConnId> = self.conns.keys().copied().collect();
+        for conn in ids {
+            self.close_conn(conn);
+        }
+        let spawned = self.threads.len();
+        let mut joined = 0;
+        for h in self.threads.drain(..) {
+            if h.join().is_ok() {
+                joined += 1;
+            }
+        }
+        ThreadReport { spawned, joined }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn connect(&mut self, addr: &str) -> Result<ConnId, FrameError> {
+        let stream = TcpStream::connect(addr)?;
+        self.register(stream)
+    }
+
+    fn send(&mut self, conn: ConnId, msg: &WireMsg) -> Result<(), FrameError> {
+        let c = self.conns.get(&conn).ok_or(FrameError::Closed)?;
+        let tx = c.writer_tx.as_ref().ok_or(FrameError::Closed)?;
+        let framed = encode_frame(&encode_msg(msg));
+        // Blocks when WRITE_QUEUE_FRAMES are already queued: this is the
+        // documented send-side backpressure.
+        tx.send(framed).map_err(|_| FrameError::Closed)
+    }
+
+    fn poll(&mut self, max_wait_ms: u64) -> Vec<TransportEvent> {
+        let mut out = Vec::new();
+        self.accept_pending(&mut out);
+
+        // Wait (in short slices, so new connections keep being accepted)
+        // for the first inbound item, then drain without waiting.
+        if out.is_empty() && max_wait_ms > 0 {
+            let mut waited = 0;
+            while waited < max_wait_ms {
+                let slice = (max_wait_ms - waited).min(5);
+                match self.inbox_rx.recv_timeout(Duration::from_millis(slice)) {
+                    Ok(inb) => {
+                        if let Some(ev) = self.inbound_to_event(inb) {
+                            out.push(ev);
+                        }
+                        break;
+                    }
+                    Err(_) => {
+                        waited += slice;
+                        self.accept_pending(&mut out);
+                        if !out.is_empty() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        loop {
+            match self.inbox_rx.try_recv() {
+                Ok(inb) => {
+                    if let Some(ev) = self.inbound_to_event(inb) {
+                        out.push(ev);
+                    }
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        self.accept_pending(&mut out);
+        out
+    }
+
+    fn close_conn(&mut self, conn: ConnId) {
+        if let Some(c) = self.conns.get_mut(&conn) {
+            // Writer: channel drop ends it after the queue drains; the
+            // writer sends the FIN itself once everything is flushed, so a
+            // close can never cut off frames already handed to `send`
+            // (e.g. the graceful-shutdown `Bye`).
+            c.writer_tx = None;
+            // Reader: shutting down only the read half wakes its blocking
+            // read with EOF without touching the in-flight write queue.
+            let _ = c.stream.shutdown(std::net::Shutdown::Read);
+        }
+        self.conns.remove(&conn);
+    }
+
+    fn local_addr(&self) -> Option<String> {
+        self.listener.as_ref().and_then(|l| l.local_addr().ok()).map(|a| a.to_string())
+    }
+}
+
+fn reader_main(conn: ConnId, mut stream: TcpStream, inbox: Sender<Inbound>) {
+    let mut decoder = FrameDecoder::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                // Clean EOF — an error only if it lands mid-frame.
+                let _ = inbox.send(Inbound::Closed { conn, error: decoder.finish().err() });
+                return;
+            }
+            Ok(n) => {
+                decoder.push(&buf[..n]);
+                loop {
+                    match decoder.next_frame() {
+                        Ok(Some(body)) => {
+                            if inbox.send(Inbound::Frame { conn, body }).is_err() {
+                                return; // owner gone
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            let _ = inbox.send(Inbound::Closed { conn, error: Some(e) });
+                            let _ = stream.shutdown(std::net::Shutdown::Both);
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                // A local close (shutdown(2) racing the blocking read)
+                // surfaces as ConnectionReset/NotConnected — report it as
+                // a plain close, not a failure.
+                let error = match e.kind() {
+                    ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::NotConnected => None,
+                    _ => Some(FrameError::Io(e.to_string())),
+                };
+                let _ = inbox.send(Inbound::Closed { conn, error });
+                return;
+            }
+        }
+    }
+}
+
+fn writer_main(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+    // Drain until the owner drops the sender; any write error ends the
+    // thread (the peer's reader reports the broken stream on its side).
+    while let Ok(framed) = rx.recv() {
+        if stream.write_all(&framed).is_err() {
+            // Keep draining so a blocked `send` on the owner side cannot
+            // wedge; bytes go nowhere.
+            while rx.recv().is_ok() {}
+            return;
+        }
+    }
+    let _ = stream.flush();
+    // The owner dropped the sender (graceful close): everything queued is
+    // on the wire — send the FIN so the peer observes a clean EOF at a
+    // frame boundary.
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}

@@ -1,0 +1,246 @@
+//! Socket-level tests of the TCP transport against the trait contract:
+//! connection lifecycle ordering, typed errors for torn streams and
+//! protocol garbage, and the thread-accounting invariant behind the
+//! graceful-shutdown satellite.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use super::tcp::TcpTransport;
+use super::wire::{WireMsg, WIRE_VERSION};
+use super::{FrameError, Transport, TransportEvent};
+
+fn hello(node: u32) -> WireMsg {
+    WireMsg::Hello { version: WIRE_VERSION, node, cookie: 7 }
+}
+
+/// Poll `t` until `pred` picks an event or the deadline passes.
+fn poll_for<T>(
+    t: &mut TcpTransport,
+    mut pred: impl FnMut(TransportEvent) -> Option<T>,
+    what: &str,
+) -> T {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while std::time::Instant::now() < deadline {
+        for ev in t.poll(50) {
+            if let Some(v) = pred(ev) {
+                return v;
+            }
+        }
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn accept_precedes_frames_and_fifo_holds() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let mut client = TcpTransport::client();
+    let conn = client.connect(&addr).unwrap();
+    for node in 0..20 {
+        client.send(conn, &hello(node)).unwrap();
+    }
+
+    let mut accepted = false;
+    let mut nodes = Vec::new();
+    let sconn = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Accepted { .. } => {
+                assert!(nodes.is_empty(), "Accepted must precede any Frame");
+                accepted = true;
+                None
+            }
+            TransportEvent::Frame { conn, msg: WireMsg::Hello { node, .. } } => {
+                assert!(accepted, "frame before Accepted");
+                nodes.push(node);
+                (nodes.len() == 20).then_some(conn)
+            }
+            other => panic!("unexpected {other:?}"),
+        },
+        "20 hello frames",
+    );
+    assert_eq!(nodes, (0..20).collect::<Vec<_>>(), "per-connection FIFO");
+
+    // Bidirectional: the server replies on the accepted conn.
+    server.send(sconn, &WireMsg::Bye { replies_sent: 20 }).unwrap();
+    let n = poll_for(
+        &mut client,
+        |ev| match ev {
+            TransportEvent::Frame { msg: WireMsg::Bye { replies_sent }, .. } => Some(replies_sent),
+            _ => None,
+        },
+        "bye",
+    );
+    assert_eq!(n, 20);
+
+    let s = server.shutdown();
+    assert_eq!(s.spawned, s.joined, "server leaked threads");
+    let c = client.shutdown();
+    assert_eq!(c.spawned, c.joined, "client leaked threads");
+}
+
+#[test]
+fn peer_drop_mid_frame_is_typed_eof_not_panic() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+
+    // A raw socket writes half a frame (valid prefix, torn body) and drops.
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&(100u32).to_le_bytes()).unwrap();
+    raw.write_all(&[1, 2, 3]).unwrap();
+    drop(raw);
+
+    let err = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Accepted { .. } => None,
+            TransportEvent::Closed { error, .. } => Some(error),
+            other => panic!("unexpected {other:?}"),
+        },
+        "closed event",
+    );
+    assert_eq!(err, Some(FrameError::EofMidFrame { buffered: 7 }));
+    let s = server.shutdown();
+    assert_eq!(s.spawned, s.joined);
+}
+
+#[test]
+fn clean_peer_close_has_no_error() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let mut client = TcpTransport::client();
+    let conn = client.connect(&addr).unwrap();
+    client.send(conn, &hello(1)).unwrap();
+    // Wait until the frame arrived, then close from the client side.
+    poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Frame { .. } => Some(()),
+            _ => None,
+        },
+        "hello",
+    );
+    client.close_conn(conn);
+    let err = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Closed { error, .. } => Some(error),
+            _ => None,
+        },
+        "clean close",
+    );
+    assert_eq!(err, None, "boundary-aligned close is clean");
+    server.shutdown();
+    client.shutdown();
+}
+
+#[test]
+fn protocol_garbage_closes_exactly_that_connection_with_typed_error() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+
+    // Conn A: a well-formed frame with an unknown message tag.
+    let mut bad = TcpStream::connect(&addr).unwrap();
+    bad.write_all(&(1u32).to_le_bytes()).unwrap();
+    bad.write_all(&[251]).unwrap();
+    bad.flush().unwrap();
+
+    // Conn B (healthy) through the transport proper.
+    let mut client = TcpTransport::client();
+    let conn_b = client.connect(&addr).unwrap();
+    client.send(conn_b, &hello(9)).unwrap();
+
+    let mut saw_healthy = false;
+    let err = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Closed { error: Some(e), .. } => Some(e),
+            TransportEvent::Frame { msg: WireMsg::Hello { node: 9, .. }, .. } => {
+                saw_healthy = true;
+                None
+            }
+            _ => None,
+        },
+        "typed close",
+    );
+    assert_eq!(err, FrameError::UnknownTag { what: "message", tag: 251 });
+    if !saw_healthy {
+        poll_for(
+            &mut server,
+            |ev| match ev {
+                TransportEvent::Frame { msg: WireMsg::Hello { node: 9, .. }, .. } => Some(()),
+                _ => None,
+            },
+            "healthy conn still alive",
+        );
+    }
+    drop(bad);
+    server.shutdown();
+    client.shutdown();
+}
+
+#[test]
+fn oversized_frame_closes_with_typed_error() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    // Prefix claims ~4 GiB; the decoder must refuse from the prefix alone.
+    raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    raw.flush().unwrap();
+    let err = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Closed { error: Some(e), .. } => Some(e),
+            _ => None,
+        },
+        "oversized close",
+    );
+    assert!(matches!(err, FrameError::Oversized { .. }), "{err:?}");
+    drop(raw);
+    let s = server.shutdown();
+    assert_eq!(s.spawned, s.joined);
+}
+
+#[test]
+fn send_after_close_is_typed_closed() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let mut client = TcpTransport::client();
+    let conn = client.connect(&addr).unwrap();
+    client.close_conn(conn);
+    assert_eq!(client.send(conn, &hello(0)), Err(FrameError::Closed));
+    client.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_joins_every_thread_across_many_connections() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let mut client = TcpTransport::client();
+    let mut conns = Vec::new();
+    for i in 0..8 {
+        let c = client.connect(&addr).unwrap();
+        client.send(c, &hello(i)).unwrap();
+        conns.push(c);
+    }
+    // Reader + writer per connection on the client side.
+    assert_eq!(client.threads_spawned(), 16);
+    let mut frames = 0;
+    poll_for(
+        &mut server,
+        |ev| {
+            if let TransportEvent::Frame { .. } = ev {
+                frames += 1;
+            }
+            (frames == 8).then_some(())
+        },
+        "all hellos",
+    );
+    let c = client.shutdown();
+    assert_eq!(c, super::ThreadReport { spawned: 16, joined: 16 });
+    let s = server.shutdown();
+    assert_eq!(s.spawned, s.joined);
+    assert_eq!(s.spawned, 16, "server spawned reader+writer per accepted conn");
+}

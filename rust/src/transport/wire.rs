@@ -1,0 +1,731 @@
+//! Wire messages and their byte-level codec.
+//!
+//! [`WireMsg`] is the complete vocabulary of a real-plane connection. The
+//! RPC payloads are the **same** [`RpcKind`] / [`RpcReply`] types the DES
+//! plane delivers in-process — one protocol codebase, two transports. The
+//! codec is hand-rolled little-endian (no serde): each message is one
+//! frame body, `[u8 tag][fields...]`, framed by [`super::frame`].
+//!
+//! ## Payload fidelity
+//!
+//! [`Payload::Sim`] chunks encode as a tag byte and decode back to
+//! `Payload::Sim` *without* touching [`Chunk::real`] — accounting-only
+//! runs stay accounting-only across the wire, and the zero-copy
+//! materialisation counter stays honest. [`Payload::Real`] chunks ship
+//! their bytes and are re-materialised through [`Chunk::real`] on the
+//! receiving side: that copy **is** the real deserialisation cost of a
+//! pull-style RPC, which the shared-memory path avoids by never crossing
+//! the wire at all.
+//!
+//! ## Identity rewriting
+//!
+//! Actor ids inside specs ([`PushSourceSpec::source_actor`],
+//! [`WriteProducerSpec::producer_actor`]) are engine-local. They are
+//! carried verbatim and only meaningful on connections whose HELLO proved
+//! cluster membership (the cookie); an untrusted peer's spec ids are
+//! rewritten by the server to its connection proxy before they reach the
+//! broker (see `crate::real`).
+
+use std::rc::Rc;
+
+use crate::proto::{
+    Chunk, ObjectId, PartitionId, Payload, PushSourceSpec, RpcKind, RpcReply, StampedChunk, SubId,
+    WriteProducerSpec,
+};
+use crate::sim::Time;
+use crate::transport::frame::{
+    put_len_bytes, put_u32, put_u64, put_u8, FrameError, FrameReader,
+};
+
+/// Protocol version carried in HELLO. Bumped on any codec change.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Everything that can travel on a real-plane connection.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    /// First frame in each direction. `cookie` proves cluster membership:
+    /// a server only trusts engine-local actor ids inside specs when the
+    /// cookie matches its own (standalone `zettastream broker` servers
+    /// trust nobody).
+    Hello { version: u32, node: u32, cookie: u64 },
+    /// An RPC request. `wire_id` is connection-scoped (the client proxy
+    /// maps it back to the original client-side id when the reply lands).
+    Req { wire_id: u64, from_node: u32, kind: RpcKind },
+    /// The reply to `Req { wire_id }` on the same connection.
+    Rep { wire_id: u64, reply: RpcReply },
+    /// Server-initiated notification (no request pairing).
+    Evt { event: WireEvent },
+    /// Client asks the server to drain in-flight work and close.
+    Shutdown,
+    /// Server's final frame after a graceful drain: how many replies it
+    /// sent on this connection over its lifetime.
+    Bye { replies_sent: u64 },
+}
+
+/// Server-initiated notifications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireEvent {
+    /// A plasma object filled for one of the peer's push subscriptions.
+    /// Carries only the identity — the object's payload lives in shared
+    /// memory and is readable only colocated (the paper's asymmetry).
+    ObjectReady { sub: u64, slot: u64 },
+}
+
+// Message tags.
+const TAG_HELLO: u8 = 1;
+const TAG_REQ: u8 = 2;
+const TAG_REP: u8 = 3;
+const TAG_EVT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_BYE: u8 = 6;
+
+// RpcKind tags.
+const K_APPEND: u8 = 0;
+const K_PULL: u8 = 1;
+const K_PUSH_SUBSCRIBE: u8 = 2;
+const K_PUSH_UNSUBSCRIBE: u8 = 3;
+const K_WRITE_SUBSCRIBE: u8 = 4;
+const K_COMMIT_CHECKPOINT: u8 = 5;
+const K_SEAL_OBJECT: u8 = 6;
+const K_REPLICATE: u8 = 7;
+
+// RpcReply tags.
+const R_APPEND_ACK: u8 = 0;
+const R_PULL_DATA: u8 = 1;
+const R_SUBSCRIBE_ACK: u8 = 2;
+const R_UNSUBSCRIBE_ACK: u8 = 3;
+const R_WRITE_SUBSCRIBE_ACK: u8 = 4;
+const R_SEAL_ACK: u8 = 5;
+const R_REPLICATE_ACK: u8 = 6;
+const R_COMMIT_ACK: u8 = 7;
+const R_ERROR: u8 = 8;
+
+// Payload tags.
+const P_SIM: u8 = 0;
+const P_REAL: u8 = 1;
+
+/// Encode a message to a frame body (no length prefix — see
+/// [`super::frame::encode_frame`]).
+pub fn encode_msg(msg: &WireMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    match msg {
+        WireMsg::Hello { version, node, cookie } => {
+            put_u8(&mut out, TAG_HELLO);
+            put_u32(&mut out, *version);
+            put_u32(&mut out, *node);
+            put_u64(&mut out, *cookie);
+        }
+        WireMsg::Req { wire_id, from_node, kind } => {
+            put_u8(&mut out, TAG_REQ);
+            put_u64(&mut out, *wire_id);
+            put_u32(&mut out, *from_node);
+            encode_kind(&mut out, kind);
+        }
+        WireMsg::Rep { wire_id, reply } => {
+            put_u8(&mut out, TAG_REP);
+            put_u64(&mut out, *wire_id);
+            encode_reply(&mut out, reply);
+        }
+        WireMsg::Evt { event } => {
+            put_u8(&mut out, TAG_EVT);
+            match event {
+                WireEvent::ObjectReady { sub, slot } => {
+                    put_u8(&mut out, 0);
+                    put_u64(&mut out, *sub);
+                    put_u64(&mut out, *slot);
+                }
+            }
+        }
+        WireMsg::Shutdown => put_u8(&mut out, TAG_SHUTDOWN),
+        WireMsg::Bye { replies_sent } => {
+            put_u8(&mut out, TAG_BYE);
+            put_u64(&mut out, *replies_sent);
+        }
+    }
+    out
+}
+
+/// Decode one frame body back to a message.
+pub fn decode_msg(body: &[u8]) -> Result<WireMsg, FrameError> {
+    let mut r = FrameReader::new(body);
+    let tag = r.u8("message tag")?;
+    match tag {
+        TAG_HELLO => Ok(WireMsg::Hello {
+            version: r.u32("hello.version")?,
+            node: r.u32("hello.node")?,
+            cookie: r.u64("hello.cookie")?,
+        }),
+        TAG_REQ => Ok(WireMsg::Req {
+            wire_id: r.u64("req.wire_id")?,
+            from_node: r.u32("req.from_node")?,
+            kind: decode_kind(&mut r)?,
+        }),
+        TAG_REP => {
+            Ok(WireMsg::Rep { wire_id: r.u64("rep.wire_id")?, reply: decode_reply(&mut r)? })
+        }
+        TAG_EVT => {
+            let etag = r.u8("event tag")?;
+            match etag {
+                0 => Ok(WireMsg::Evt {
+                    event: WireEvent::ObjectReady {
+                        sub: r.u64("evt.sub")?,
+                        slot: r.u64("evt.slot")?,
+                    },
+                }),
+                t => Err(FrameError::UnknownTag { what: "event", tag: t }),
+            }
+        }
+        TAG_SHUTDOWN => Ok(WireMsg::Shutdown),
+        TAG_BYE => Ok(WireMsg::Bye { replies_sent: r.u64("bye.replies_sent")? }),
+        t => Err(FrameError::UnknownTag { what: "message", tag: t }),
+    }
+}
+
+fn encode_chunk(out: &mut Vec<u8>, chunk: &Chunk) {
+    put_u32(out, chunk.records);
+    put_u32(out, chunk.record_size);
+    match &chunk.payload {
+        Payload::Sim => put_u8(out, P_SIM),
+        Payload::Real(data) => {
+            put_u8(out, P_REAL);
+            put_len_bytes(out, data);
+        }
+    }
+}
+
+fn decode_chunk(r: &mut FrameReader<'_>) -> Result<Chunk, FrameError> {
+    let records = r.u32("chunk.records")?;
+    let record_size = r.u32("chunk.record_size")?;
+    match r.u8("chunk.payload tag")? {
+        P_SIM => Ok(Chunk::sim(records, record_size)),
+        P_REAL => {
+            let data = r.len_bytes("chunk.payload")?;
+            if data.len() as u64 != records as u64 * record_size as u64 {
+                return Err(FrameError::Truncated { what: "chunk.payload framing" });
+            }
+            // The one honest copy of the pull path: deserialising a real
+            // payload off the wire is a materialisation and is counted as
+            // such (Chunk::real bumps the zero-copy counter).
+            Ok(Chunk::real(records, record_size, Rc::new(data.to_vec())))
+        }
+        t => Err(FrameError::UnknownTag { what: "payload", tag: t }),
+    }
+}
+
+fn encode_assignments(out: &mut Vec<u8>, assignments: &[(PartitionId, u64)]) {
+    put_u32(out, assignments.len() as u32);
+    for (p, off) in assignments {
+        put_u64(out, p.0 as u64);
+        put_u64(out, *off);
+    }
+}
+
+fn decode_assignments(
+    r: &mut FrameReader<'_>,
+    what: &'static str,
+) -> Result<Vec<(PartitionId, u64)>, FrameError> {
+    let n = r.u32(what)? as usize;
+    let mut v = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let p = r.u64(what)? as usize;
+        let off = r.u64(what)?;
+        v.push((PartitionId(p), off));
+    }
+    Ok(v)
+}
+
+fn encode_opt_time(out: &mut Vec<u8>, t: &Option<Time>) {
+    match t {
+        None => put_u8(out, 0),
+        Some(v) => {
+            put_u8(out, 1);
+            put_u64(out, *v);
+        }
+    }
+}
+
+fn decode_opt_time(r: &mut FrameReader<'_>, what: &'static str) -> Result<Option<Time>, FrameError> {
+    match r.u8(what)? {
+        0 => Ok(None),
+        1 => Ok(Some(r.u64(what)?)),
+        t => Err(FrameError::UnknownTag { what, tag: t }),
+    }
+}
+
+fn encode_kind(out: &mut Vec<u8>, kind: &RpcKind) {
+    match kind {
+        RpcKind::Append { chunks, produced_at } => {
+            put_u8(out, K_APPEND);
+            put_u32(out, chunks.len() as u32);
+            for (p, chunk) in chunks {
+                put_u64(out, p.0 as u64);
+                encode_chunk(out, chunk);
+            }
+            encode_opt_time(out, produced_at);
+        }
+        RpcKind::Pull { assignments, max_bytes } => {
+            put_u8(out, K_PULL);
+            encode_assignments(out, assignments);
+            put_u64(out, *max_bytes);
+        }
+        RpcKind::PushSubscribe { sources } => {
+            put_u8(out, K_PUSH_SUBSCRIBE);
+            put_u32(out, sources.len() as u32);
+            for s in sources {
+                put_u64(out, s.source_actor.0 as u64);
+                encode_assignments(out, &s.assignments);
+                put_u64(out, s.objects as u64);
+                put_u64(out, s.object_bytes);
+            }
+        }
+        RpcKind::PushUnsubscribe { sub } => {
+            put_u8(out, K_PUSH_UNSUBSCRIBE);
+            put_u64(out, sub.0 as u64);
+        }
+        RpcKind::WriteSubscribe { producer } => {
+            put_u8(out, K_WRITE_SUBSCRIBE);
+            put_u64(out, producer.producer_actor.0 as u64);
+            put_u32(out, producer.partitions.len() as u32);
+            for p in &producer.partitions {
+                put_u64(out, p.0 as u64);
+            }
+            put_u64(out, producer.objects as u64);
+            put_u64(out, producer.object_bytes);
+        }
+        RpcKind::CommitCheckpoint { epoch, cursors } => {
+            put_u8(out, K_COMMIT_CHECKPOINT);
+            put_u64(out, *epoch);
+            encode_assignments(out, cursors);
+        }
+        RpcKind::SealObject { id, produced_at } => {
+            put_u8(out, K_SEAL_OBJECT);
+            put_u64(out, id.sub.0 as u64);
+            put_u64(out, id.slot as u64);
+            encode_opt_time(out, produced_at);
+        }
+        RpcKind::Replicate { bytes, chunks } => {
+            put_u8(out, K_REPLICATE);
+            put_u64(out, *bytes);
+            put_u32(out, *chunks);
+        }
+    }
+}
+
+fn decode_kind(r: &mut FrameReader<'_>) -> Result<RpcKind, FrameError> {
+    use crate::sim::ActorId;
+    match r.u8("kind tag")? {
+        K_APPEND => {
+            let n = r.u32("append.chunks")? as usize;
+            let mut chunks = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let p = r.u64("append.partition")? as usize;
+                chunks.push((PartitionId(p), decode_chunk(r)?));
+            }
+            let produced_at = decode_opt_time(r, "append.produced_at")?;
+            Ok(RpcKind::Append { chunks, produced_at })
+        }
+        K_PULL => Ok(RpcKind::Pull {
+            assignments: decode_assignments(r, "pull.assignments")?,
+            max_bytes: r.u64("pull.max_bytes")?,
+        }),
+        K_PUSH_SUBSCRIBE => {
+            let n = r.u32("subscribe.sources")? as usize;
+            let mut sources = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let source_actor = ActorId(r.u64("subscribe.source_actor")? as usize);
+                let assignments = decode_assignments(r, "subscribe.assignments")?;
+                let objects = r.u64("subscribe.objects")? as usize;
+                let object_bytes = r.u64("subscribe.object_bytes")?;
+                sources.push(PushSourceSpec { source_actor, assignments, objects, object_bytes });
+            }
+            Ok(RpcKind::PushSubscribe { sources })
+        }
+        K_PUSH_UNSUBSCRIBE => {
+            Ok(RpcKind::PushUnsubscribe { sub: SubId(r.u64("unsubscribe.sub")? as usize) })
+        }
+        K_WRITE_SUBSCRIBE => {
+            let producer_actor = ActorId(r.u64("write_subscribe.producer_actor")? as usize);
+            let n = r.u32("write_subscribe.partitions")? as usize;
+            let mut partitions = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                partitions.push(PartitionId(r.u64("write_subscribe.partition")? as usize));
+            }
+            let objects = r.u64("write_subscribe.objects")? as usize;
+            let object_bytes = r.u64("write_subscribe.object_bytes")?;
+            Ok(RpcKind::WriteSubscribe {
+                producer: WriteProducerSpec { producer_actor, partitions, objects, object_bytes },
+            })
+        }
+        K_COMMIT_CHECKPOINT => Ok(RpcKind::CommitCheckpoint {
+            epoch: r.u64("commit.epoch")?,
+            cursors: decode_assignments(r, "commit.cursors")?,
+        }),
+        K_SEAL_OBJECT => Ok(RpcKind::SealObject {
+            id: ObjectId {
+                sub: SubId(r.u64("seal.sub")? as usize),
+                slot: r.u64("seal.slot")? as usize,
+            },
+            produced_at: decode_opt_time(r, "seal.produced_at")?,
+        }),
+        K_REPLICATE => Ok(RpcKind::Replicate {
+            bytes: r.u64("replicate.bytes")?,
+            chunks: r.u32("replicate.chunks")?,
+        }),
+        t => Err(FrameError::UnknownTag { what: "kind", tag: t }),
+    }
+}
+
+fn encode_reply(out: &mut Vec<u8>, reply: &RpcReply) {
+    match reply {
+        RpcReply::AppendAck { records, bytes } => {
+            put_u8(out, R_APPEND_ACK);
+            put_u64(out, *records);
+            put_u64(out, *bytes);
+        }
+        RpcReply::PullData { chunks, trims } => {
+            put_u8(out, R_PULL_DATA);
+            put_u32(out, chunks.len() as u32);
+            for sc in chunks {
+                put_u64(out, sc.partition.0 as u64);
+                put_u64(out, sc.offset);
+                encode_chunk(out, &sc.chunk);
+            }
+            encode_assignments(out, trims);
+        }
+        RpcReply::SubscribeAck { sub } => {
+            put_u8(out, R_SUBSCRIBE_ACK);
+            put_u64(out, sub.0 as u64);
+        }
+        RpcReply::UnsubscribeAck { sub, cursors } => {
+            put_u8(out, R_UNSUBSCRIBE_ACK);
+            put_u64(out, sub.0 as u64);
+            encode_assignments(out, cursors);
+        }
+        RpcReply::WriteSubscribeAck { sub } => {
+            put_u8(out, R_WRITE_SUBSCRIBE_ACK);
+            put_u64(out, sub.0 as u64);
+        }
+        RpcReply::SealAck { records, bytes } => {
+            put_u8(out, R_SEAL_ACK);
+            put_u64(out, *records);
+            put_u64(out, *bytes);
+        }
+        RpcReply::ReplicateAck => put_u8(out, R_REPLICATE_ACK),
+        RpcReply::CommitAck { epoch } => {
+            put_u8(out, R_COMMIT_ACK);
+            put_u64(out, *epoch);
+        }
+        RpcReply::Error { reason } => {
+            put_u8(out, R_ERROR);
+            put_len_bytes(out, reason.as_bytes());
+        }
+    }
+}
+
+fn decode_reply(r: &mut FrameReader<'_>) -> Result<RpcReply, FrameError> {
+    match r.u8("reply tag")? {
+        R_APPEND_ACK => Ok(RpcReply::AppendAck {
+            records: r.u64("append_ack.records")?,
+            bytes: r.u64("append_ack.bytes")?,
+        }),
+        R_PULL_DATA => {
+            let n = r.u32("pull_data.chunks")? as usize;
+            let mut chunks = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let partition = PartitionId(r.u64("pull_data.partition")? as usize);
+                let offset = r.u64("pull_data.offset")?;
+                chunks.push(StampedChunk { partition, offset, chunk: decode_chunk(r)? });
+            }
+            let trims = decode_assignments(r, "pull_data.trims")?;
+            Ok(RpcReply::PullData { chunks, trims })
+        }
+        R_SUBSCRIBE_ACK => {
+            Ok(RpcReply::SubscribeAck { sub: SubId(r.u64("subscribe_ack.sub")? as usize) })
+        }
+        R_UNSUBSCRIBE_ACK => Ok(RpcReply::UnsubscribeAck {
+            sub: SubId(r.u64("unsubscribe_ack.sub")? as usize),
+            cursors: decode_assignments(r, "unsubscribe_ack.cursors")?,
+        }),
+        R_WRITE_SUBSCRIBE_ACK => Ok(RpcReply::WriteSubscribeAck {
+            sub: SubId(r.u64("write_subscribe_ack.sub")? as usize),
+        }),
+        R_SEAL_ACK => Ok(RpcReply::SealAck {
+            records: r.u64("seal_ack.records")?,
+            bytes: r.u64("seal_ack.bytes")?,
+        }),
+        R_REPLICATE_ACK => Ok(RpcReply::ReplicateAck),
+        R_COMMIT_ACK => Ok(RpcReply::CommitAck { epoch: r.u64("commit_ack.epoch")? }),
+        R_ERROR => {
+            let reason = String::from_utf8_lossy(r.len_bytes("error.reason")?).into_owned();
+            Ok(RpcReply::Error { reason })
+        }
+        t => Err(FrameError::UnknownTag { what: "reply", tag: t }),
+    }
+}
+
+/// A human-readable label for event logs (the broker server mode's
+/// structured output names each message it handles).
+pub fn msg_label(msg: &WireMsg) -> &'static str {
+    match msg {
+        WireMsg::Hello { .. } => "hello",
+        WireMsg::Req { kind, .. } => match kind {
+            RpcKind::Append { .. } => "append",
+            RpcKind::Pull { .. } => "pull",
+            RpcKind::PushSubscribe { .. } => "push_subscribe",
+            RpcKind::PushUnsubscribe { .. } => "push_unsubscribe",
+            RpcKind::WriteSubscribe { .. } => "write_subscribe",
+            RpcKind::CommitCheckpoint { .. } => "commit_checkpoint",
+            RpcKind::SealObject { .. } => "seal_object",
+            RpcKind::Replicate { .. } => "replicate",
+        },
+        WireMsg::Rep { reply, .. } => match reply {
+            RpcReply::AppendAck { .. } => "append_ack",
+            RpcReply::PullData { .. } => "pull_data",
+            RpcReply::SubscribeAck { .. } => "subscribe_ack",
+            RpcReply::UnsubscribeAck { .. } => "unsubscribe_ack",
+            RpcReply::WriteSubscribeAck { .. } => "write_subscribe_ack",
+            RpcReply::SealAck { .. } => "seal_ack",
+            RpcReply::ReplicateAck => "replicate_ack",
+            RpcReply::CommitAck { .. } => "commit_ack",
+            RpcReply::Error { .. } => "error",
+        },
+        WireMsg::Evt { .. } => "object_ready",
+        WireMsg::Shutdown => "shutdown",
+        WireMsg::Bye { .. } => "bye",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::real_payload_allocs;
+    use crate::sim::ActorId;
+
+    fn roundtrip(msg: &WireMsg) -> WireMsg {
+        decode_msg(&encode_msg(msg)).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn hello_shutdown_bye_roundtrip() {
+        match roundtrip(&WireMsg::Hello { version: WIRE_VERSION, node: 1, cookie: 0xC0FFEE }) {
+            WireMsg::Hello { version, node, cookie } => {
+                assert_eq!((version, node, cookie), (WIRE_VERSION, 1, 0xC0FFEE));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(roundtrip(&WireMsg::Shutdown), WireMsg::Shutdown));
+        match roundtrip(&WireMsg::Bye { replies_sent: 42 }) {
+            WireMsg::Bye { replies_sent } => assert_eq!(replies_sent, 42),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn evt_roundtrip() {
+        match roundtrip(&WireMsg::Evt { event: WireEvent::ObjectReady { sub: 3, slot: 9 } }) {
+            WireMsg::Evt { event } => {
+                assert_eq!(event, WireEvent::ObjectReady { sub: 3, slot: 9 });
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn append_real_payload_roundtrips_and_counts_one_materialisation() {
+        let data: Vec<u8> = (0..200u32).map(|i| (i % 251) as u8).collect();
+        let kind = RpcKind::Append {
+            chunks: vec![(PartitionId(2), Chunk::real(2, 100, Rc::new(data.clone())))],
+            produced_at: Some(12_345),
+        };
+        let before = real_payload_allocs();
+        let msg = roundtrip(&WireMsg::Req { wire_id: 7, from_node: 1, kind });
+        assert_eq!(real_payload_allocs(), before + 1, "decode materialises exactly once");
+        let WireMsg::Req { wire_id, from_node, kind } = msg else { panic!() };
+        assert_eq!((wire_id, from_node), (7, 1));
+        let RpcKind::Append { chunks, produced_at } = kind else { panic!() };
+        assert_eq!(produced_at, Some(12_345));
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].0, PartitionId(2));
+        assert_eq!(chunks[0].1.records, 2);
+        assert_eq!(chunks[0].1.payload.buffer().unwrap().as_slice(), data.as_slice());
+    }
+
+    #[test]
+    fn append_sim_payload_stays_sim_and_counts_nothing() {
+        let kind = RpcKind::Append {
+            chunks: vec![(PartitionId(0), Chunk::sim(160, 100))],
+            produced_at: None,
+        };
+        let before = real_payload_allocs();
+        let msg = roundtrip(&WireMsg::Req { wire_id: 1, from_node: 1, kind });
+        assert_eq!(real_payload_allocs(), before, "sim payloads never materialise");
+        let WireMsg::Req { kind: RpcKind::Append { chunks, produced_at }, .. } = msg else {
+            panic!()
+        };
+        assert_eq!(produced_at, None);
+        assert!(matches!(chunks[0].1.payload, Payload::Sim));
+        assert_eq!(chunks[0].1.records, 160);
+    }
+
+    #[test]
+    fn pull_and_pull_data_roundtrip() {
+        let req = WireMsg::Req {
+            wire_id: 9,
+            from_node: 0,
+            kind: RpcKind::Pull {
+                assignments: vec![(PartitionId(0), 5), (PartitionId(3), 0)],
+                max_bytes: 1 << 17,
+            },
+        };
+        let WireMsg::Req { kind: RpcKind::Pull { assignments, max_bytes }, .. } = roundtrip(&req)
+        else {
+            panic!()
+        };
+        assert_eq!(assignments, vec![(PartitionId(0), 5), (PartitionId(3), 0)]);
+        assert_eq!(max_bytes, 1 << 17);
+
+        let rep = WireMsg::Rep {
+            wire_id: 9,
+            reply: RpcReply::PullData {
+                chunks: vec![StampedChunk {
+                    partition: PartitionId(3),
+                    offset: 11,
+                    chunk: Chunk::sim(4, 25),
+                }],
+                trims: vec![(PartitionId(0), 7)],
+            },
+        };
+        let WireMsg::Rep { wire_id, reply: RpcReply::PullData { chunks, trims } } = roundtrip(&rep)
+        else {
+            panic!()
+        };
+        assert_eq!(wire_id, 9);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!((chunks[0].partition, chunks[0].offset), (PartitionId(3), 11));
+        assert_eq!(trims, vec![(PartitionId(0), 7)]);
+    }
+
+    #[test]
+    fn subscribe_specs_roundtrip() {
+        let req = WireMsg::Req {
+            wire_id: 2,
+            from_node: 0,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: ActorId(12),
+                    assignments: vec![(PartitionId(1), 3)],
+                    objects: 4,
+                    object_bytes: 1 << 16,
+                }],
+            },
+        };
+        let WireMsg::Req { kind: RpcKind::PushSubscribe { sources }, .. } = roundtrip(&req) else {
+            panic!()
+        };
+        assert_eq!(sources.len(), 1);
+        assert_eq!(sources[0].source_actor, ActorId(12));
+        assert_eq!(sources[0].assignments, vec![(PartitionId(1), 3)]);
+        assert_eq!((sources[0].objects, sources[0].object_bytes), (4, 1 << 16));
+
+        let req = WireMsg::Req {
+            wire_id: 3,
+            from_node: 1,
+            kind: RpcKind::WriteSubscribe {
+                producer: WriteProducerSpec {
+                    producer_actor: ActorId(5),
+                    partitions: vec![PartitionId(0), PartitionId(1)],
+                    objects: 2,
+                    object_bytes: 4096,
+                },
+            },
+        };
+        let WireMsg::Req { kind: RpcKind::WriteSubscribe { producer }, .. } = roundtrip(&req)
+        else {
+            panic!()
+        };
+        assert_eq!(producer.producer_actor, ActorId(5));
+        assert_eq!(producer.partitions, vec![PartitionId(0), PartitionId(1)]);
+    }
+
+    #[test]
+    fn remaining_kinds_and_replies_roundtrip() {
+        let kinds = [
+            RpcKind::PushUnsubscribe { sub: SubId(4) },
+            RpcKind::CommitCheckpoint { epoch: 8, cursors: vec![(PartitionId(2), 20)] },
+            RpcKind::SealObject { id: ObjectId { sub: SubId(1), slot: 3 }, produced_at: None },
+            RpcKind::Replicate { bytes: 4096, chunks: 4 },
+        ];
+        for kind in kinds {
+            let label_before = msg_label(&WireMsg::Req {
+                wire_id: 0,
+                from_node: 0,
+                kind: kind.clone(),
+            });
+            let WireMsg::Req { kind: back, .. } =
+                roundtrip(&WireMsg::Req { wire_id: 0, from_node: 0, kind })
+            else {
+                panic!()
+            };
+            let label_after = msg_label(&WireMsg::Req { wire_id: 0, from_node: 0, kind: back });
+            assert_eq!(label_before, label_after);
+        }
+        let replies = [
+            RpcReply::AppendAck { records: 10, bytes: 1000 },
+            RpcReply::SubscribeAck { sub: SubId(0) },
+            RpcReply::UnsubscribeAck { sub: SubId(0), cursors: vec![(PartitionId(0), 1)] },
+            RpcReply::WriteSubscribeAck { sub: SubId(2) },
+            RpcReply::SealAck { records: 5, bytes: 500 },
+            RpcReply::ReplicateAck,
+            RpcReply::CommitAck { epoch: 3 },
+            RpcReply::Error { reason: "object p0 is not sealed".into() },
+        ];
+        for reply in replies {
+            let before = msg_label(&WireMsg::Rep { wire_id: 1, reply: reply.clone() });
+            let WireMsg::Rep { reply: back, .. } =
+                roundtrip(&WireMsg::Rep { wire_id: 1, reply })
+            else {
+                panic!()
+            };
+            assert_eq!(before, msg_label(&WireMsg::Rep { wire_id: 1, reply: back }));
+        }
+    }
+
+    #[test]
+    fn error_reason_text_survives() {
+        let WireMsg::Rep { reply: RpcReply::Error { reason }, .. } = roundtrip(&WireMsg::Rep {
+            wire_id: 1,
+            reply: RpcReply::Error { reason: "unknown partition p9".into() },
+        }) else {
+            panic!()
+        };
+        assert_eq!(reason, "unknown partition p9");
+    }
+
+    #[test]
+    fn truncated_body_is_typed_not_panic() {
+        let full = encode_msg(&WireMsg::Req {
+            wire_id: 1,
+            from_node: 0,
+            kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 0)], max_bytes: 64 },
+        });
+        // Chop the body at every prefix length: decode must return a typed
+        // error (or succeed only on the full body), never panic.
+        for cut in 0..full.len() {
+            match decode_msg(&full[..cut]) {
+                Err(FrameError::Truncated { .. }) | Err(FrameError::UnknownTag { .. }) => {}
+                Ok(_) => panic!("decode succeeded on truncated body (cut {cut})"),
+                Err(e) => panic!("unexpected error {e:?}"),
+            }
+        }
+        assert!(decode_msg(&full).is_ok());
+    }
+
+    #[test]
+    fn unknown_message_tag_is_typed() {
+        assert!(matches!(
+            decode_msg(&[250]),
+            Err(FrameError::UnknownTag { what: "message", tag: 250 })
+        ));
+        assert!(matches!(decode_msg(&[]), Err(FrameError::Truncated { what: "message tag" })));
+    }
+}

@@ -1,0 +1,345 @@
+//! Spawned-binary contract harness for `zettastream broker --listen`.
+//!
+//! Spawns the real binary, drives it over a raw `TcpStream` with frames
+//! built by the library's own codec (`encode_frame` + `encode_msg`), and
+//! asserts on both the wire responses and the server's structured JSONL
+//! output. This is the closest thing to a foreign client the repo has: if
+//! a codec or dispatch change breaks the wire contract, it breaks here —
+//! in a different process from the broker.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use zettastream::proto::{
+    Chunk, ObjectId, PartitionId, PushSourceSpec, RpcKind, RpcReply, WriteProducerSpec,
+};
+use zettastream::sim::ActorId;
+use zettastream::transport::{
+    frame::encode_frame,
+    wire::{decode_msg, encode_msg},
+    FrameDecoder, WireMsg, WIRE_VERSION,
+};
+
+/// Kill the child on panic/early return so a failed assertion never leaks
+/// a listening broker process into the test runner.
+struct KillGuard(Option<Child>);
+
+impl KillGuard {
+    fn child(&mut self) -> &mut Child {
+        self.0.as_mut().expect("child still owned")
+    }
+    /// Hand the child back for a clean `wait` at the end of the test.
+    fn disarm(&mut self) -> Child {
+        self.0.take().expect("child still owned")
+    }
+}
+
+impl Drop for KillGuard {
+    fn drop(&mut self) {
+        if let Some(child) = &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn send(stream: &mut TcpStream, msg: &WireMsg) {
+    let frame = encode_frame(&encode_msg(msg));
+    stream.write_all(&frame).expect("write frame");
+}
+
+/// Receive the next message, polling the socket until `deadline`.
+fn recv(stream: &mut TcpStream, decoder: &mut FrameDecoder, deadline: Instant) -> WireMsg {
+    loop {
+        if let Some(body) = decoder.next_frame().expect("well-formed frame") {
+            return decode_msg(&body).expect("decodable message");
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for a frame");
+        let mut buf = [0u8; 4096];
+        match stream.read(&mut buf) {
+            Ok(0) => panic!("broker closed the connection mid-conversation"),
+            Ok(n) => decoder.push(&buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("socket read: {e}"),
+        }
+    }
+}
+
+fn expect_rep(
+    stream: &mut TcpStream,
+    decoder: &mut FrameDecoder,
+    deadline: Instant,
+) -> (u64, RpcReply) {
+    match recv(stream, decoder, deadline) {
+        WireMsg::Rep { wire_id, reply } => (wire_id, reply),
+        other => panic!("expected a Rep frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn broker_binary_serves_the_full_rpc_surface_over_tcp() {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut guard = KillGuard(Some(
+        Command::new(env!("CARGO_BIN_EXE_zettastream"))
+            .args(["broker", "--listen", "127.0.0.1:0", "ns=4"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn zettastream broker"),
+    ));
+
+    // Collect the server's stdout lines on a thread (the ready line first,
+    // JSONL afterwards).
+    let lines: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let reader = {
+        let stdout = guard.child().stdout.take().expect("piped stdout");
+        let lines = lines.clone();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines().map_while(Result::ok) {
+                lines.lock().unwrap().push(line);
+            }
+        })
+    };
+
+    // Wait for the flushed ready line and scan out the ephemeral address.
+    let addr = loop {
+        assert!(Instant::now() < deadline, "broker never printed its ready line");
+        let found = lines.lock().unwrap().iter().find_map(|l| {
+            l.strip_prefix("ZETTASTREAM-BROKER ready addr=").map(str::to_string)
+        });
+        match found {
+            Some(a) => break a,
+            None => std::thread::sleep(Duration::from_millis(10)),
+        }
+    };
+
+    let mut stream = TcpStream::connect(&addr).expect("connect to broker");
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut decoder = FrameDecoder::new();
+    let mut reps_received = 0u64;
+
+    send(&mut stream, &WireMsg::Hello { version: WIRE_VERSION, node: 9, cookie: 0 });
+
+    // 1: Append 10 records x 100 B to p0.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 1,
+            from_node: 9,
+            kind: RpcKind::Append {
+                chunks: vec![(PartitionId(0), Chunk::sim(10, 100))],
+                produced_at: None,
+            },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 1);
+    assert!(
+        matches!(reply, RpcReply::AppendAck { records: 10, .. }),
+        "append ack for 10 records, got {reply:?}"
+    );
+
+    // 2: Pull p0 from offset 0 — the appended chunk comes back.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 2,
+            from_node: 9,
+            kind: RpcKind::Pull { assignments: vec![(PartitionId(0), 0)], max_bytes: 1 << 20 },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 2);
+    match reply {
+        RpcReply::PullData { chunks, trims } => {
+            assert_eq!(chunks.len(), 1, "one appended chunk to pull");
+            assert_eq!(chunks[0].chunk.records, 10);
+            assert!(trims.is_empty());
+        }
+        other => panic!("expected PullData, got {other:?}"),
+    }
+
+    // 3: WriteSubscribe — the spec's actor id is garbage on purpose; the
+    // server must rewrite it to the connection link, never dereference it.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 3,
+            from_node: 9,
+            kind: RpcKind::WriteSubscribe {
+                producer: WriteProducerSpec {
+                    producer_actor: ActorId(999),
+                    partitions: vec![PartitionId(0)],
+                    objects: 2,
+                    object_bytes: 1 << 20,
+                },
+            },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 3);
+    let write_sub = match reply {
+        RpcReply::WriteSubscribeAck { sub } => sub,
+        other => panic!("expected WriteSubscribeAck, got {other:?}"),
+    };
+
+    // 4: Seal an object nobody filled — a protocol error must come back as
+    // an Error reply on this connection, not a broker panic.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 4,
+            from_node: 9,
+            kind: RpcKind::SealObject {
+                id: ObjectId { sub: write_sub, slot: 0 },
+                produced_at: None,
+            },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 4);
+    assert!(
+        matches!(&reply, RpcReply::Error { reason } if reason.contains("not sealed")),
+        "sealing an unfilled object must fail cleanly, got {reply:?}"
+    );
+
+    // 5: PushSubscribe on p1 (again with a garbage actor id to rewrite).
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 5,
+            from_node: 9,
+            kind: RpcKind::PushSubscribe {
+                sources: vec![PushSourceSpec {
+                    source_actor: ActorId(7),
+                    assignments: vec![(PartitionId(1), 0)],
+                    objects: 2,
+                    object_bytes: 1 << 20,
+                }],
+            },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 5);
+    let push_sub = match reply {
+        RpcReply::SubscribeAck { sub } => sub,
+        other => panic!("expected SubscribeAck, got {other:?}"),
+    };
+
+    // 6: Append to p1 — the push thread gathers it into an object and the
+    // ObjectReady notification must travel back to us as an Evt frame.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 6,
+            from_node: 9,
+            kind: RpcKind::Append {
+                chunks: vec![(PartitionId(1), Chunk::sim(10, 100))],
+                produced_at: None,
+            },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 6);
+    assert!(matches!(reply, RpcReply::AppendAck { records: 10, .. }));
+    match recv(&mut stream, &mut decoder, deadline) {
+        WireMsg::Evt { event } => {
+            let zettastream::transport::WireEvent::ObjectReady { sub, .. } = event;
+            assert_eq!(sub, push_sub.0 as u64, "notification for our subscription");
+        }
+        other => panic!("expected an ObjectReady Evt frame, got {other:?}"),
+    }
+
+    // 7: PushUnsubscribe tears the subscription down.
+    send(
+        &mut stream,
+        &WireMsg::Req {
+            wire_id: 7,
+            from_node: 9,
+            kind: RpcKind::PushUnsubscribe { sub: push_sub },
+        },
+    );
+    let (id, reply) = expect_rep(&mut stream, &mut decoder, deadline);
+    reps_received += 1;
+    assert_eq!(id, 7);
+    assert!(
+        matches!(reply, RpcReply::UnsubscribeAck { sub, .. } if sub == push_sub),
+        "expected UnsubscribeAck for {push_sub:?}, got {reply:?}"
+    );
+
+    // Graceful shutdown: the server drains, says Bye with its reply count
+    // (the no-lost-acks cross-check), and closes at a frame boundary.
+    send(&mut stream, &WireMsg::Shutdown);
+    match recv(&mut stream, &mut decoder, deadline) {
+        WireMsg::Bye { replies_sent } => {
+            assert_eq!(
+                replies_sent, reps_received,
+                "server reply count disagrees with what the client observed"
+            );
+        }
+        other => panic!("expected Bye, got {other:?}"),
+    }
+    // EOF at a frame boundary follows the Bye.
+    let mut tail = Vec::new();
+    loop {
+        assert!(Instant::now() < deadline, "timed out waiting for EOF");
+        let mut buf = [0u8; 1024];
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => tail.extend_from_slice(&buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break, // reset after close is also an end
+        }
+    }
+    decoder.push(&tail);
+    while let Some(body) = decoder.next_frame().expect("tail frames well-formed") {
+        decode_msg(&body).expect("tail frames decodable");
+    }
+    decoder.finish().expect("connection ended at a frame boundary");
+
+    // The process exits cleanly and its JSONL log tells the same story.
+    let mut child = guard.disarm();
+    let status = child.wait().expect("broker exit status");
+    assert!(status.success(), "broker exited with {status:?}");
+    reader.join().expect("stdout reader");
+
+    let lines = lines.lock().unwrap();
+    let has = |needle: &str| lines.iter().any(|l| l.contains(needle));
+    assert!(has("\"event\":\"accepted\""), "missing accepted event:\n{lines:#?}");
+    assert!(
+        has("\"kind\":\"append\"") && has("\"kind\":\"pull\"") && has("\"kind\":\"push_subscribe\""),
+        "missing dispatched-request events:\n{lines:#?}"
+    );
+    assert!(has("\"event\":\"shutdown_requested\""), "missing shutdown_requested:\n{lines:#?}");
+    let shutdown = lines
+        .iter()
+        .find(|l| l.contains("\"event\":\"shutdown\""))
+        .unwrap_or_else(|| panic!("missing final shutdown record:\n{lines:#?}"));
+    let spawned = scan_u64(shutdown, "\"threads_spawned\":");
+    let joined = scan_u64(shutdown, "\"threads_joined\":");
+    assert!(spawned > 0, "transport spawned no threads? {shutdown}");
+    assert_eq!(spawned, joined, "broker leaked transport threads: {shutdown}");
+}
+
+/// Scan `"key": <u64>` out of a JSONL line (no JSON parser in the vendor
+/// set; the server writes these fields on one line).
+fn scan_u64(line: &str, key: &str) -> u64 {
+    let at = line.find(key).unwrap_or_else(|| panic!("`{key}` not in {line}")) + key.len();
+    let rest = &line[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|_| panic!("bad number after `{key}` in {line}"))
+}
