@@ -36,12 +36,13 @@ pub use store::{
     StoreStats, WalStats,
 };
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::config::{CostModel, StoreMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
 use crate::plasma::SharedStore;
+use crate::shard::BrokerShard;
 use crate::proto::{
     Chunk, ChunkOffset, Msg, ObjectId, PartitionId, RpcEnvelope, RpcId, RpcKind, RpcReply,
     RpcRequest, StampedChunk, SubId,
@@ -90,6 +91,16 @@ struct FillCtx {
     content: Vec<StampedChunk>,
 }
 
+/// An ingest held for shard-quorum acks (generalises the backup pair's
+/// single held ack to `replication_factor - 1` peers, majority commit).
+#[derive(Debug)]
+struct QuorumCtx {
+    /// Peer acks still needed before the producer ack goes out.
+    need: usize,
+    /// Shared object a held seal releases once the quorum commits.
+    held_object: Option<ObjectId>,
+}
+
 /// The broker actor.
 pub struct Broker {
     params: BrokerParams,
@@ -111,6 +122,23 @@ pub struct Broker {
     /// id, shared object to release once durable — `Some` for held seals).
     awaiting_backup: HashMap<RpcId, (u64, Option<ObjectId>)>,
     next_client_rpc: RpcId,
+    /// Sharded-topology state, installed by the launcher post-build when
+    /// `broker_count > 1`. `None` = classic single-broker topology,
+    /// bit-identical to the pre-shard behaviour. See [`crate::shard`] for
+    /// the assignment-epoch contract this broker enforces.
+    shard: Option<BrokerShard>,
+    /// Sharded ingests held for quorum: append ctx id -> quorum state.
+    quorum: HashMap<u64, QuorumCtx>,
+    /// Outstanding `ShardReplicate` rpcs -> append ctx id. Empty means
+    /// every accepted write is fully replicated — the freeze drain gate.
+    replicate_rids: HashMap<RpcId, u64>,
+    /// A `ShardFreeze` whose ack waits for `replicate_rids` to drain.
+    pending_freeze: Option<(RpcCtx, u64)>,
+    /// Replica-side reorder buffers: replicated chunks that arrived ahead
+    /// of the log head, keyed by their primary-assigned offset. Applying
+    /// in offset order keeps every replica log byte-identical to the
+    /// primary's regardless of worker-completion order.
+    reorder: HashMap<PartitionId, BTreeMap<ChunkOffset, Chunk>>,
     /// Subscriptions in round-robin order for push scheduling.
     push_ring: Vec<SubId>,
     push_rr: usize,
@@ -169,6 +197,11 @@ impl Broker {
             next_ctx: 0,
             awaiting_backup: HashMap::new(),
             next_client_rpc: 0,
+            shard: None,
+            quorum: HashMap::new(),
+            replicate_rids: HashMap::new(),
+            pending_freeze: None,
+            reorder: HashMap::new(),
             push_ring: Vec::new(),
             push_rr: 0,
             net,
@@ -243,6 +276,14 @@ impl Broker {
                 c.rpc_base_ns + *chunks as Time * c.append_chunk_ns
                     + (*bytes as f64 / c.append_bw_bps * 1e9) as Time
             }
+            // A shard replica pays the same append work the primary did —
+            // the quorum write really lands on every peer's log.
+            RpcKind::ShardReplicate { chunks } => {
+                let bytes: u64 = chunks.iter().map(|s| s.chunk.bytes()).sum();
+                c.rpc_base_ns + chunks.len() as Time * c.append_chunk_ns
+                    + (bytes as f64 / c.append_bw_bps * 1e9) as Time
+            }
+            RpcKind::ShardFreeze { .. } | RpcKind::ShardPromote { .. } => c.rpc_base_ns,
         }
     }
 
@@ -290,7 +331,285 @@ impl Broker {
                 self.finish_seal(id, rpc_ctx, object, produced_at, ctx)
             }
             RpcKind::Replicate { .. } => self.finish_replicate(rpc_ctx, ctx),
+            RpcKind::ShardReplicate { chunks } => {
+                self.finish_shard_replicate(rpc_ctx, chunks, ctx)
+            }
+            RpcKind::ShardFreeze { epoch, partitions } => {
+                self.finish_shard_freeze(rpc_ctx, epoch, &partitions, ctx)
+            }
+            RpcKind::ShardPromote { epoch, partitions } => {
+                self.finish_shard_promote(rpc_ctx, epoch, &partitions, ctx)
+            }
         }
+    }
+
+    // ---------------------------------------------------------------------
+    // Sharded topology: routing authority, quorum replication, hand-off
+    // ---------------------------------------------------------------------
+
+    /// Install the sharded-topology state (launcher, post-build).
+    pub fn set_shard(&mut self, shard: BrokerShard) {
+        self.shard = Some(shard);
+    }
+
+    pub fn shard(&self) -> Option<&BrokerShard> {
+        self.shard.as_ref()
+    }
+
+    /// Is this broker the routing authority (current primary) for `p`?
+    /// Without shard state every hosted partition qualifies.
+    fn serves(&self, p: PartitionId) -> bool {
+        match &self.shard {
+            Some(s) => s.is_primary(p),
+            None => true,
+        }
+    }
+
+    /// The refusal a stale-routed request gets instead of service. The
+    /// epoch lets the client tell "broker ahead of my table" from a
+    /// repeat of what it already knows.
+    fn wrong_shard(&self) -> RpcReply {
+        RpcReply::WrongShard { epoch: self.shard.as_ref().map_or(0, |s| s.epoch) }
+    }
+
+    /// Whole-batch routing check, before anything is appended: a refused
+    /// batch must land nowhere (the retry at the new primary is the only
+    /// copy — zero duplication).
+    fn shard_refusal(&self, mut parts: impl Iterator<Item = PartitionId>) -> Option<RpcReply> {
+        if self.shard.is_none() {
+            return None;
+        }
+        parts.any(|p| !self.serves(p)).then(|| self.wrong_shard())
+    }
+
+    /// Does the ingest tail fan out to quorum peers?
+    fn shard_replicates(&self) -> bool {
+        self.shard.as_ref().is_some_and(|s| s.table.replication() >= 2)
+    }
+
+    /// Validate-then-append like `append_chunks`, additionally returning
+    /// the appended chunks stamped with their assigned offsets — the
+    /// replication fan-out payload (`Rc` clones of resident payloads, no
+    /// byte copies).
+    fn append_chunks_stamped(
+        &mut self,
+        chunks: Vec<(PartitionId, Chunk)>,
+        produced_at: Option<Time>,
+        now: Time,
+    ) -> Result<(u64, u64, Vec<StampedChunk>), PartitionId> {
+        if let Some(bad) = chunks.iter().find(|(p, _)| !self.logs.contains(*p)) {
+            return Err(bad.0);
+        }
+        let mut records = 0u64;
+        let mut bytes = 0u64;
+        let mut stamped = Vec::with_capacity(chunks.len());
+        for (p, chunk) in chunks {
+            records += chunk.records as u64;
+            bytes += chunk.bytes();
+            let offset = self.logs.append(p, chunk.clone());
+            if let Some(produced) = produced_at {
+                self.metrics.borrow_mut().tracer.on_append(p.0, offset, produced, now);
+            }
+            stamped.push(StampedChunk { partition: p, offset, chunk });
+        }
+        Ok((records, bytes, stamped))
+    }
+
+    /// The sharded ingest tail shared by Append and SealObject: append at
+    /// primary-assigned offsets, fan the stamped chunks out to every
+    /// standing replica, and hold the producer ack until a majority of
+    /// the replica set (this append included) holds the data.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_ingest_sharded(
+        &mut self,
+        id: u64,
+        mut rpc_ctx: RpcCtx,
+        chunks: Vec<(PartitionId, Chunk)>,
+        produced_at: Option<Time>,
+        held_object: Option<ObjectId>,
+        is_seal: bool,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        match self.append_chunks_stamped(chunks, produced_at, ctx.now()) {
+            Err(p) => {
+                rpc_ctx.staged =
+                    Some(RpcReply::Error { reason: format!("unknown partition {p}") });
+                self.reply(rpc_ctx, ctx);
+            }
+            Ok((records, bytes, stamped)) => {
+                self.metrics
+                    .borrow_mut()
+                    .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
+                rpc_ctx.staged = Some(if is_seal {
+                    RpcReply::SealAck { records, bytes }
+                } else {
+                    RpcReply::AppendAck { records, bytes }
+                });
+                // Group the fan-out by replica peer. Batches stay within
+                // one primary's range, so in practice every chunk shares
+                // one peer set; the grouping keeps mixed batches correct.
+                let shard = self.shard.as_ref().expect("sharded ingest tail");
+                let need = shard.needed_peer_acks();
+                let mut by_peer: Vec<((ActorId, NodeId), Vec<StampedChunk>)> = Vec::new();
+                for sc in stamped {
+                    for peer in shard.replica_peers(sc.partition) {
+                        match by_peer.iter_mut().find(|(to, _)| *to == peer) {
+                            Some((_, list)) => list.push(sc.clone()),
+                            None => by_peer.push((peer, vec![sc.clone()])),
+                        }
+                    }
+                }
+                self.quorum.insert(id, QuorumCtx { need, held_object });
+                self.ctxs.insert(id, rpc_ctx);
+                for ((peer, peer_node), list) in by_peer {
+                    let peer_bytes: u64 = list.iter().map(|s| s.chunk.bytes()).sum();
+                    let rid = self.next_client_rpc;
+                    self.next_client_rpc += 1;
+                    self.replicate_rids.insert(rid, id);
+                    let deliver = self.net.borrow_mut().send(
+                        ctx.now(),
+                        self.params.node,
+                        peer_node,
+                        peer_bytes,
+                    );
+                    ctx.send_at(
+                        deliver,
+                        peer,
+                        Msg::rpc(RpcRequest {
+                            id: rid,
+                            reply_to: ctx.self_id(),
+                            from_node: self.params.node,
+                            kind: RpcKind::ShardReplicate { chunks: list },
+                        }),
+                    );
+                }
+                self.schedule_push(ctx);
+            }
+        }
+    }
+
+    /// Replica side of the quorum: apply primary-stamped chunks in offset
+    /// order (the reorder buffer absorbs out-of-order arrivals), then ack.
+    fn finish_shard_replicate(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        chunks: Vec<StampedChunk>,
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        for sc in chunks {
+            debug_assert!(self.logs.contains(sc.partition), "replicas host every partition");
+            let head = self.logs.head(sc.partition);
+            if sc.offset < head {
+                continue; // duplicate delivery; the log already has it
+            }
+            if sc.offset > head {
+                self.reorder.entry(sc.partition).or_default().insert(sc.offset, sc.chunk);
+                continue;
+            }
+            let p = sc.partition;
+            self.logs.append(p, sc.chunk);
+            let mut next = sc.offset + 1;
+            if let Some(buf) = self.reorder.get_mut(&p) {
+                while let Some(chunk) = buf.remove(&next) {
+                    self.logs.append(p, chunk);
+                    next += 1;
+                }
+            }
+        }
+        rpc_ctx.staged = Some(RpcReply::ReplicateAck);
+        self.reply(rpc_ctx, ctx);
+    }
+
+    /// Hand-off step 1 (drain): stop serving the named partitions — stale
+    /// routes now bounce with `WrongShard` — and ack once every in-flight
+    /// quorum replication has drained, so the gaining replica holds every
+    /// byte this primary ever acked.
+    fn finish_shard_freeze(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        epoch: u64,
+        partitions: &[PartitionId],
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        let Some(shard) = self.shard.as_mut() else {
+            rpc_ctx.staged =
+                Some(RpcReply::Error { reason: "freeze on an unsharded broker".into() });
+            self.reply(rpc_ctx, ctx);
+            return;
+        };
+        for p in partitions {
+            shard.primaries.remove(p);
+        }
+        shard.epoch = shard.epoch.max(epoch);
+        if self.replicate_rids.is_empty() {
+            rpc_ctx.staged = Some(RpcReply::FreezeAck { epoch });
+            self.reply(rpc_ctx, ctx);
+        } else {
+            assert!(self.pending_freeze.is_none(), "one hand-off at a time");
+            self.pending_freeze = Some((rpc_ctx, epoch));
+        }
+    }
+
+    /// Hand-off step 2 (resume): start serving the named partitions. The
+    /// coordinator only promotes after every losing primary's drain, so
+    /// this broker's log head equals the old primary's — cursors carry
+    /// over unchanged.
+    fn finish_shard_promote(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        epoch: u64,
+        partitions: &[PartitionId],
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        for p in partitions {
+            debug_assert!(
+                self.reorder.get(p).map_or(true, |b| b.is_empty()),
+                "promotion with undrained replication for {p}"
+            );
+        }
+        let Some(shard) = self.shard.as_mut() else {
+            rpc_ctx.staged =
+                Some(RpcReply::Error { reason: "promote on an unsharded broker".into() });
+            self.reply(rpc_ctx, ctx);
+            return;
+        };
+        for &p in partitions {
+            shard.primaries.insert(p);
+        }
+        shard.epoch = shard.epoch.max(epoch);
+        rpc_ctx.staged = Some(RpcReply::PromoteAck { epoch });
+        self.reply(rpc_ctx, ctx);
+        self.schedule_push(ctx);
+    }
+
+    /// A freeze acks only once every outstanding `ShardReplicate` has
+    /// drained — checked at freeze time and after each peer ack.
+    fn maybe_finish_freeze(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if !self.replicate_rids.is_empty() {
+            return;
+        }
+        if let Some((mut rpc_ctx, epoch)) = self.pending_freeze.take() {
+            rpc_ctx.staged = Some(RpcReply::FreezeAck { epoch });
+            self.reply(rpc_ctx, ctx);
+        }
+    }
+
+    /// A quorum peer acked a `ShardReplicate`: one less vote needed. The
+    /// producer ack (and any held seal object) releases at majority; the
+    /// remaining acks only retire their rpc ids (the freeze drain gate).
+    fn on_shard_replicate_ack(&mut self, ctx_id: u64, ctx: &mut Ctx<'_, Msg>) {
+        if let Some(q) = self.quorum.get_mut(&ctx_id) {
+            q.need -= 1;
+            if q.need == 0 {
+                let q = self.quorum.remove(&ctx_id).expect("just seen");
+                let rpc_ctx = self.ctxs.remove(&ctx_id).expect("held sharded ingest ctx");
+                if let Some(object) = q.held_object {
+                    self.store.borrow_mut().release(object);
+                }
+                self.reply(rpc_ctx, ctx);
+            }
+        }
+        self.maybe_finish_freeze(ctx);
     }
 
     fn finish_pull(
@@ -377,6 +696,11 @@ impl Broker {
                 self.reply(rpc_ctx, ctx);
                 return;
             }
+        }
+        if let Some(reply) = self.shard_refusal(spec.partitions.iter().copied()) {
+            rpc_ctx.staged = Some(reply);
+            self.reply(rpc_ctx, ctx);
+            return;
         }
         let sub = self.store.borrow_mut().create_subscription(
             spec.producer_actor,
@@ -478,6 +802,18 @@ impl Broker {
             .iter()
             .map(|sc| (sc.partition, sc.chunk.clone()))
             .collect();
+        // Routing check first: on WrongShard the object stays sealed and
+        // the producer re-notifies the new primary (the plasma store is
+        // node-global, so the buffer itself needs no hand-off).
+        if let Some(reply) = self.shard_refusal(chunks.iter().map(|(p, _)| *p)) {
+            rpc_ctx.staged = Some(reply);
+            self.reply(rpc_ctx, ctx);
+            return;
+        }
+        if self.shard_replicates() {
+            return self
+                .finish_ingest_sharded(id, rpc_ctx, chunks, produced_at, Some(object), true, ctx);
+        }
         match self.append_chunks(chunks, produced_at, ctx.now()) {
             Err(p) => {
                 // The object stays sealed: the producer owns the retry (or
@@ -513,6 +849,17 @@ impl Broker {
         produced_at: Option<Time>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
+        // Routing check before anything lands: a batch refused with
+        // WrongShard must append nothing — the retry at the new primary
+        // is the only copy.
+        if let Some(reply) = self.shard_refusal(chunks.iter().map(|(p, _)| *p)) {
+            rpc_ctx.staged = Some(reply);
+            self.reply(rpc_ctx, ctx);
+            return;
+        }
+        if self.shard_replicates() {
+            return self.finish_ingest_sharded(id, rpc_ctx, chunks, produced_at, None, false, ctx);
+        }
         match self.append_chunks(chunks, produced_at, ctx.now()) {
             Err(p) => {
                 rpc_ctx.staged =
@@ -537,6 +884,11 @@ impl Broker {
         for &(p, off) in assignments {
             if !self.logs.contains(p) {
                 return RpcReply::Error { reason: format!("unknown partition {p}") };
+            }
+            if !self.serves(p) {
+                // Reads only ever come off the current primary — serving
+                // them from a frozen log would race the hand-off.
+                return self.wrong_shard();
             }
             let start = self.logs.start(p);
             if off < start {
@@ -569,6 +921,9 @@ impl Broker {
             for &(p, _) in &spec.assignments {
                 if !self.logs.contains(p) {
                     return RpcReply::Error { reason: format!("unknown partition {p}") };
+                }
+                if !self.serves(p) {
+                    return self.wrong_shard();
                 }
             }
             let sub = self.store.borrow_mut().create_subscription(
@@ -689,8 +1044,13 @@ impl Broker {
             for j in 0..nparts {
                 let k = (rr0 + j) % nparts;
                 let (p, off) = store.subscription(sub).cursors[k];
-                let avail =
-                    if self.logs.contains(p) { self.logs.available_from(p, off) } else { 0 };
+                // A frozen partition stops filling mid-hand-off; its
+                // subscription resumes at the new primary.
+                let avail = if self.logs.contains(p) && self.serves(p) {
+                    self.logs.available_from(p, off)
+                } else {
+                    0
+                };
                 if avail > 0 {
                     chosen = Some((k, p, off));
                     break;
@@ -749,6 +1109,17 @@ impl Broker {
         }
         // Push cursors also hold back retention.
         for p in self.logs.partitions() {
+            if !self.serves(p) {
+                // A standing replica's consumers read at the primary, so
+                // its own watermarks say nothing; only the committed
+                // checkpoint floor may trim it (the replica log must stay
+                // byte-identical and promotable).
+                if !self.committed.is_empty() {
+                    let floor = self.committed.get(&p).copied().unwrap_or(0);
+                    self.trimmed_bytes += self.logs.trim_below(p, floor);
+                }
+                continue;
+            }
             let mut watermark = *self.watermarks.get(&p).unwrap_or(&0);
             {
                 let store = self.store.borrow();
@@ -862,7 +1233,22 @@ impl Actor<Msg> for Broker {
                     _ => unreachable!("unknown phase {phase}"),
                 }
             }
-            Msg::Reply(env) => self.on_backup_ack(env.id, ctx),
+            Msg::Reply(env) => {
+                // Two nested-rpc ack streams share this seam: quorum
+                // ShardReplicate acks and the legacy backup pair's.
+                if let Some(ctx_id) = self.replicate_rids.remove(&env.id) {
+                    match env.reply {
+                        RpcReply::ReplicateAck => {}
+                        other => panic!(
+                            "broker {}: shard replicate refused: {other:?}",
+                            self.entity
+                        ),
+                    }
+                    self.on_shard_replicate_ack(ctx_id, ctx);
+                } else {
+                    self.on_backup_ack(env.id, ctx);
+                }
+            }
             // Step 4: a source released an object — its buffer is free again.
             Msg::ObjectFreed { id } => {
                 self.store.borrow_mut().release(id);

@@ -252,8 +252,11 @@ pub struct CoordinatorParams {
     pub interval_ns: Time,
     /// Node the coordinator runs on (the colocated worker node).
     pub node: NodeId,
-    pub broker: ActorId,
-    pub broker_node: NodeId,
+    /// Every broker hosting a shard of the stream (one entry at
+    /// `broker_count=1`). Commits fan out to all of them: each broker
+    /// floors retention for every partition it holds a replica of, so the
+    /// committed epoch is a per-shard floor that survives a hand-off.
+    pub brokers: Vec<(ActorId, NodeId)>,
     /// Source actors (barrier injection targets + snapshot participants).
     pub sources: Vec<ActorId>,
     /// Operator task actors (snapshot participants).
@@ -306,6 +309,7 @@ impl CheckpointCoordinator {
     ) -> Self {
         assert!(params.interval_ns > 0, "coordinator needs a positive interval");
         assert!(!params.sources.is_empty(), "checkpointing needs sources");
+        assert!(!params.brokers.is_empty(), "commits need at least one broker");
         Self {
             params,
             control,
@@ -336,22 +340,22 @@ impl CheckpointCoordinator {
     }
 
     fn commit(&mut self, epoch: u64, cursors: Vec<(PartitionId, ChunkOffset)>, ctx: &mut Ctx<'_, Msg>) {
-        let id = self.next_rpc;
-        self.next_rpc += 1;
-        let deliver = self
-            .net
-            .borrow_mut()
-            .send_control(ctx.now(), self.params.node, self.params.broker_node);
-        ctx.send_at(
-            deliver,
-            self.params.broker,
-            Msg::rpc(RpcRequest {
-                id,
-                reply_to: ctx.self_id(),
-                from_node: self.params.node,
-                kind: RpcKind::CommitCheckpoint { epoch, cursors },
-            }),
-        );
+        for &(broker, broker_node) in &self.params.brokers.clone() {
+            let id = self.next_rpc;
+            self.next_rpc += 1;
+            let deliver =
+                self.net.borrow_mut().send_control(ctx.now(), self.params.node, broker_node);
+            ctx.send_at(
+                deliver,
+                broker,
+                Msg::rpc(RpcRequest {
+                    id,
+                    reply_to: ctx.self_id(),
+                    from_node: self.params.node,
+                    kind: RpcKind::CommitCheckpoint { epoch, cursors: cursors.clone() },
+                }),
+            );
+        }
     }
 
     fn trigger_epoch(&mut self, ctx: &mut Ctx<'_, Msg>) {

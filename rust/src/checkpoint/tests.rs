@@ -185,8 +185,7 @@ fn rig(cooperative_task: bool) -> Rig {
         CoordinatorParams {
             interval_ns: 100 * MILLIS,
             node: 0,
-            broker,
-            broker_node: 0,
+            brokers: vec![(broker, 0)],
             sources: vec![source],
             tasks: vec![task],
             partitions: vec![PartitionId(0), PartitionId(1)],

@@ -35,7 +35,11 @@ use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedS
 use crate::pipeline::{OpKind, Pipeline};
 use crate::plasma::{ObjectStore, SharedStore};
 use crate::producer::{WriteStats, WriterActor, WriterRegistry, WriterWiring};
+use crate::net::NodeId;
 use crate::proto::{Msg, PartitionId};
+use crate::shard::{
+    BrokerShard, ShardCoordinator, ShardCoordinatorParams, ShardState, ShardTable, SharedShard,
+};
 use crate::sim::{ActorId, Engine, MILLIS, SECOND};
 use crate::source::{SourceActor, SourceRegistry, SourceStats, SourceWiring, StatKey};
 use crate::worker::{OperatorTask, TaskParams, TaskRegistry};
@@ -59,7 +63,11 @@ pub struct Cluster {
     pub net: SharedNetwork,
     pub store: SharedStore,
     pub compute: Option<SharedCompute>,
+    /// The first (at `broker_count = 1`: only) broker — kept for the
+    /// single-broker call sites and tests.
     pub broker: ActorId,
+    /// Every shard broker, by table index (`vec![broker]` when unsharded).
+    pub brokers: Vec<ActorId>,
     pub backup: Option<ActorId>,
     pub producers: Vec<ActorId>,
     pub sources: Vec<ActorId>,
@@ -67,6 +75,10 @@ pub struct Cluster {
     pub pipeline: Option<Pipeline>,
     /// The checkpoint coordinator, when `checkpoint_interval_ms > 0`.
     pub coordinator: Option<ActorId>,
+    /// The published shard view, when `broker_count > 1`.
+    pub shard: Option<SharedShard>,
+    /// The shard coordinator actor, when `broker_count > 1`.
+    pub shard_coordinator: Option<ActorId>,
 }
 
 /// End-of-run summary: the report plus cross-checkable totals.
@@ -157,16 +169,46 @@ pub fn launch_full(
     let checkpoint = (config.checkpoint_interval_ms > 0).then(CheckpointControl::shared);
 
     // ---- brokers -------------------------------------------------------
-    let (broker, backup) = build_brokers(
-        &mut engine,
-        config,
-        store_registry,
-        factory.broker_push_threads(),
-        &partitions,
-        &net,
-        &store,
-        &metrics,
-    );
+    // `broker_count = 1` takes the classic single-broker (+ optional
+    // backup pair) path unchanged; `broker_count > 1` builds the sharded
+    // fleet under an assignment table (see `crate::shard`).
+    let shard = (config.broker_count > 1).then(|| {
+        ShardState::shared(ShardTable::build(
+            config.ns,
+            config.broker_count,
+            config.replication_factor,
+            config.seed,
+        ))
+    });
+    let (broker, brokers, backup) = match &shard {
+        None => {
+            let (broker, backup) = build_brokers(
+                &mut engine,
+                config,
+                store_registry,
+                factory.broker_push_threads(),
+                &partitions,
+                &net,
+                &store,
+                &metrics,
+            );
+            (broker, vec![broker], backup)
+        }
+        Some(sh) => {
+            let brokers = build_shard_brokers(
+                &mut engine,
+                config,
+                store_registry,
+                factory.broker_push_threads(),
+                &partitions,
+                sh,
+                &net,
+                &store,
+                &metrics,
+            );
+            (brokers[0], brokers, None)
+        }
+    };
 
     // ---- producers (one generic path through the writer registry) -------
     let writer_wiring = WriterWiring {
@@ -178,6 +220,7 @@ pub fn launch_full(
         metrics: metrics.clone(),
         net: net.clone(),
         store: store.clone(),
+        shard: shard.clone(),
     };
     let producers = writer_factory.build(&writer_wiring, &mut engine);
 
@@ -208,8 +251,23 @@ pub fn launch_full(
         registry: registry.clone(),
         compute: compute.clone(),
         checkpoint: checkpoint.clone(),
+        shard: shard.clone(),
     };
     let sources = factory.build(&wiring, &mut engine);
+
+    // ---- shard coordinator (owns the table's lifecycle) ------------------
+    let shard_coordinator = shard.as_ref().map(|sh| {
+        engine.add_actor(Box::new(ShardCoordinator::new(
+            ShardCoordinatorParams {
+                node: NODE_COLOCATED,
+                rebalance_at: config.rebalance_at_secs * SECOND,
+                sources: sources.clone(),
+                cost: config.cost.clone(),
+            },
+            sh.clone(),
+            net.clone(),
+        )))
+    });
 
     // ---- checkpoint coordinator + fault injection ------------------------
     let coordinator = checkpoint.as_ref().map(|cp| {
@@ -217,8 +275,9 @@ pub fn launch_full(
             CoordinatorParams {
                 interval_ns: config.checkpoint_interval_ms * MILLIS,
                 node: NODE_COLOCATED,
-                broker,
-                broker_node: NODE_COLOCATED,
+                // Commit floors fan out to every broker: a partition's
+                // floor must survive its log changing primaries.
+                brokers: brokers.iter().map(|&b| (b, NODE_COLOCATED)).collect(),
                 sources: sources.clone(),
                 tasks: tasks.clone(),
                 partitions: partitions.clone(),
@@ -255,13 +314,78 @@ pub fn launch_full(
         store,
         compute,
         broker,
+        brokers,
         backup,
         producers,
         sources,
         tasks,
         pipeline,
         coordinator,
+        shard,
+        shard_coordinator,
     }
+}
+
+/// Build the `broker_count` shard brokers (all on the colocated node),
+/// fill the shared shard view's roster, and install each broker's
+/// [`BrokerShard`]. Every broker hosts every partition in its log store —
+/// the table decides which it *serves* as primary; the rest it only
+/// mirrors as a standing replica.
+#[allow(clippy::too_many_arguments)]
+fn build_shard_brokers(
+    engine: &mut Engine<Msg>,
+    config: &ExperimentConfig,
+    store_registry: &StoreRegistry,
+    push_threads: usize,
+    partitions: &[PartitionId],
+    shard: &SharedShard,
+    net: &SharedNetwork,
+    store: &SharedStore,
+    metrics: &SharedMetrics,
+) -> Vec<ActorId> {
+    let worker_cores = (config.broker_cores - push_threads).max(1);
+    let mut ids = Vec::with_capacity(config.broker_count);
+    for b in 0..config.broker_count {
+        let mut store_params = StoreParams::from_config(config);
+        if let Some(dir) = store_params.dir.take() {
+            // A durable fleet needs per-broker roots — N WALs in one
+            // directory would clobber each other.
+            store_params.dir = Some(dir.join(format!("broker{b}")));
+        }
+        let log_store = store_registry
+            .expect(store_params.mode)
+            .open(&store_params, partitions)
+            .unwrap_or_else(|e| {
+                panic!("opening `{}` store failed: {e}", store_params.mode.name())
+            });
+        ids.push(engine.add_actor(Box::new(Broker::with_store(
+            BrokerParams {
+                node: NODE_COLOCATED,
+                worker_cores,
+                push_threads,
+                store: store_params,
+                partitions: partitions.to_vec(),
+                backup: None,
+                is_backup: false,
+                cost: config.cost.clone(),
+            },
+            log_store,
+            net.clone(),
+            store.clone(),
+            metrics.clone(),
+            b,
+        ))));
+    }
+    let peers: Vec<(ActorId, NodeId)> = ids.iter().map(|&id| (id, NODE_COLOCATED)).collect();
+    shard.borrow_mut().brokers = peers.clone();
+    let table = shard.borrow().table.clone();
+    for (b, &id) in ids.iter().enumerate() {
+        engine
+            .actor_as::<Broker>(id)
+            .expect("just built")
+            .set_shard(BrokerShard::new(b, table.clone(), peers.clone()));
+    }
+    ids
 }
 
 /// Build the backup (when `Replication = 2`) and primary broker actors
@@ -427,11 +551,16 @@ impl Cluster {
         // Broker utilisation gauges. A broker actor that fails the
         // downcast is a hard error — silently skipping the export would
         // strip the utilisation gauges every figure reads, the same
-        // corruption rationale as the source-stats panic below.
-        self.engine
-            .actor_as::<Broker>(self.broker)
-            .unwrap_or_else(|| panic!("broker {} is not a Broker actor", self.broker))
-            .export_gauges(now, "broker");
+        // corruption rationale as the source-stats panic below. Shard
+        // broker `i > 0` exports under `broker{i}`; broker 0 keeps the
+        // bare `broker` prefix every existing figure reads.
+        for (i, &bid) in self.brokers.clone().iter().enumerate() {
+            let prefix = if i == 0 { "broker".to_string() } else { format!("broker{i}") };
+            self.engine
+                .actor_as::<Broker>(bid)
+                .unwrap_or_else(|| panic!("broker {bid} is not a Broker actor"))
+                .export_gauges(now, &prefix);
+        }
         if let Some(backup) = self.backup {
             self.engine
                 .actor_as::<Broker>(backup)
@@ -485,6 +614,13 @@ impl Cluster {
             checkpoints = c.stats();
         }
         checkpoints.records_replayed = source_stats.extra(StatKey::RecordsReplayed);
+        // Shard hand-off accounting, through the shard coordinator.
+        let shard_stats = self.shard_coordinator.map(|scid| {
+            self.engine
+                .actor_as::<ShardCoordinator>(scid)
+                .unwrap_or_else(|| panic!("shard coordinator {scid} has the wrong actor type"))
+                .stats()
+        });
         {
             let mut m = self.metrics.borrow_mut();
             m.set_gauge("source_threads", source_threads as f64);
@@ -499,6 +635,12 @@ impl Cluster {
             );
             m.set_gauge("store_reserved_bytes", self.store.borrow().reserved_bytes() as f64);
             m.set_gauge("cross_node_bytes", self.net.borrow().cross_node_bytes() as f64);
+            if let Some(ref ss) = shard_stats {
+                m.set_gauge("shard.brokers", self.config.broker_count as f64);
+                m.set_gauge("shard.rebalances", ss.rebalances as f64);
+                m.set_gauge("shard.partitions_moved", ss.partitions_moved as f64);
+                m.set_gauge("shard.handoff_ms", ss.handoff_ns as f64 / 1e6);
+            }
             if self.coordinator.is_some() {
                 m.set_gauge("checkpoint.epochs", checkpoints.epochs_completed as f64);
                 m.set_gauge("checkpoint.epochs_skipped", checkpoints.epochs_skipped as f64);

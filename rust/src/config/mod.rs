@@ -243,6 +243,50 @@ impl StoreMode {
     }
 }
 
+/// Typed validation failures for the shard-topology gates.
+///
+/// The shard subsystem's callers (the CLI, the cluster launcher, the
+/// rebalance tests) match on these; every other cross-field invariant
+/// still reports through [`ConfigError::Invalid`]'s message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `Ns` does not divide evenly across `broker_count`: range
+    /// assignment would leave brokers with ragged shard sizes.
+    PartitionsNotDivisible { partitions: usize, brokers: usize },
+    /// `Nc` does not divide evenly across `broker_count`: a consumer's
+    /// contiguous partition range would straddle two brokers.
+    ConsumersNotDivisible { consumers: usize, brokers: usize },
+    /// `replication_factor` outside `1..=broker_count`.
+    BadReplicationFactor { factor: usize, brokers: usize },
+    /// Any other invariant violation, with the human-readable reason.
+    Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::PartitionsNotDivisible { partitions, brokers } => write!(
+                f,
+                "Ns={partitions} must divide evenly across broker_count={brokers} \
+                 (range assignment gives every broker Ns/broker_count partitions)"
+            ),
+            Self::ConsumersNotDivisible { consumers, brokers } => write!(
+                f,
+                "Nc={consumers} must divide evenly across broker_count={brokers} \
+                 (each consumer's contiguous partition range must map to one broker)"
+            ),
+            Self::BadReplicationFactor { factor, brokers } => write!(
+                f,
+                "replication_factor={factor} must be in 1..=broker_count={brokers} \
+                 (a replica set cannot outnumber the brokers)"
+            ),
+            Self::Invalid(reason) => f.write_str(reason),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// One experiment = the full Table I vector + run controls.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -265,6 +309,21 @@ pub struct ExperimentConfig {
     pub record_size: usize,
     /// `Replication` — 1 (no backup) or 2 (one backup broker on another node).
     pub replication: usize,
+    /// Shard brokers the partitions are spread across (1 = the classic
+    /// single-broker topology). `>1` enables the shard subsystem: a
+    /// coordinator-owned versioned assignment table routes every producer
+    /// and source by partition range (see `crate::shard`).
+    pub broker_count: usize,
+    /// Per-shard replica-set size, in `1..=broker_count`: each partition's
+    /// log lives on this many brokers and appends commit on a majority
+    /// quorum of replica acks. Generalises the legacy `Replication=2`
+    /// single-backup pair (which stays available at `broker_count=1`).
+    pub replication_factor: usize,
+    /// Shard rebalancing: force one live partition hand-off (drain →
+    /// checkpoint cursors → reassign → resume) at this virtual second;
+    /// 0 = never. Needs `replication_factor >= 2` so every partition has
+    /// a standing replica to promote.
+    pub rebalance_at_secs: u64,
     /// `NBc` — broker working cores.
     pub broker_cores: usize,
     /// `NFs` — processing worker slots.
@@ -376,6 +435,9 @@ impl Default for ExperimentConfig {
             consumer_chunk: 128 * 1024,
             record_size: 100,
             replication: 1,
+            broker_count: 1,
+            replication_factor: 1,
+            rebalance_at_secs: 0,
             broker_cores: 16,
             worker_slots: 16,
             mode: SourceMode::Pull,
@@ -438,7 +500,80 @@ impl ExperimentConfig {
     }
 
     /// Validate the cross-field invariants before launching.
+    ///
+    /// String-typed convenience wrapper over [`Self::validate_typed`] for
+    /// callers that only print the failure.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_typed().map_err(|e| e.to_string())
+    }
+
+    /// Validate with typed errors: shard-topology gates report as matchable
+    /// [`ConfigError`] variants, everything else as [`ConfigError::Invalid`].
+    pub fn validate_typed(&self) -> Result<(), ConfigError> {
+        self.validate_shards()?;
+        self.validate_rest().map_err(ConfigError::Invalid)
+    }
+
+    /// The shard-topology gates (`broker_count` / `replication_factor` /
+    /// `rebalance_at_secs` cross-field invariants).
+    fn validate_shards(&self) -> Result<(), ConfigError> {
+        if self.broker_count == 0 {
+            return Err(ConfigError::Invalid("broker_count must be positive".into()));
+        }
+        if self.replication_factor == 0 || self.replication_factor > self.broker_count {
+            return Err(ConfigError::BadReplicationFactor {
+                factor: self.replication_factor,
+                brokers: self.broker_count,
+            });
+        }
+        if self.broker_count > 1 {
+            if self.ns % self.broker_count != 0 {
+                return Err(ConfigError::PartitionsNotDivisible {
+                    partitions: self.ns,
+                    brokers: self.broker_count,
+                });
+            }
+            if self.nc % self.broker_count != 0 {
+                return Err(ConfigError::ConsumersNotDivisible {
+                    consumers: self.nc,
+                    brokers: self.broker_count,
+                });
+            }
+            if self.replication != 1 {
+                return Err(ConfigError::Invalid(
+                    "broker_count>1 replaces the legacy backup pair; set replication=1 \
+                     and use replication_factor for per-shard replica sets"
+                        .into(),
+                ));
+            }
+            if self.plane == ExecPlane::Real {
+                return Err(ConfigError::Invalid(
+                    "plane=real runs the single-broker topology; set broker_count=1 \
+                     (sharded brokers over TCP are a later revision)"
+                        .into(),
+                ));
+            }
+        }
+        if self.rebalance_at_secs > 0 {
+            if self.replication_factor < 2 {
+                return Err(ConfigError::Invalid(
+                    "rebalance_at_secs needs replication_factor >= 2: the hand-off \
+                     promotes each partition's standing replica"
+                        .into(),
+                ));
+            }
+            if self.rebalance_at_secs >= self.duration_secs {
+                return Err(ConfigError::Invalid(format!(
+                    "rebalance_at_secs={} must fall inside the run (duration {} s)",
+                    self.rebalance_at_secs, self.duration_secs
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Every non-shard invariant (the original string-reporting checks).
+    fn validate_rest(&self) -> Result<(), String> {
         if self.np == 0 || self.ns == 0 {
             return Err("Np and Ns must be positive".into());
         }
@@ -520,9 +655,12 @@ impl ExperimentConfig {
         if self.plane == ExecPlane::Real {
             // The real plane terminates at quiescence (every produced
             // record consumed), not at a virtual horizon — it needs a
-            // bounded workload, and the v1 scope keeps the coordinator
-            // planes (checkpoint barriers, fault injection, tracing) and
-            // the XLA data plane on the simulator.
+            // bounded workload, and the current scope keeps the
+            // checkpoint/fault coordinator and the XLA data plane on the
+            // simulator. The latency tracer DOES run here: span
+            // timestamps come from a process-wide wall clock (see
+            // `obs::Tracer::set_wall_clock`), comparable across node
+            // threads.
             if self.corpus_records == 0 {
                 return Err(
                     "plane=real needs a bounded workload (corpus_records > 0): real runs \
@@ -534,12 +672,6 @@ impl ExperimentConfig {
                 return Err(
                     "plane=real does not run the checkpoint/fault coordinator yet; set \
                      checkpoint_interval_ms=0 and fault_at_secs=0"
-                        .into(),
-                );
-            }
-            if self.trace_sample_permille > 0 {
-                return Err(
-                    "plane=real does not run the latency tracer yet; set trace_sample_permille=0"
                         .into(),
                 );
             }
@@ -598,6 +730,15 @@ impl ExperimentConfig {
                 self.record_size = parse::parse_size(value).ok_or_else(|| bad(key, value))?
             }
             "replication" => self.replication = value.parse().map_err(|_| bad(key, value))?,
+            "broker_count" | "brokers" => {
+                self.broker_count = value.parse().map_err(|_| bad(key, value))?
+            }
+            "replication_factor" | "rf" => {
+                self.replication_factor = value.parse().map_err(|_| bad(key, value))?
+            }
+            "rebalance_at_secs" | "rebalance_at" => {
+                self.rebalance_at_secs = value.parse().map_err(|_| bad(key, value))?
+            }
             "broker_cores" | "nbc" => {
                 self.broker_cores = value.parse().map_err(|_| bad(key, value))?
             }

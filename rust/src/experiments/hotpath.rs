@@ -40,6 +40,9 @@ pub struct HotpathCell {
     pub source: &'static str,
     pub write: &'static str,
     pub store: &'static str,
+    /// Broker count the cell ran with (1 everywhere except the sharded
+    /// scale-out cell).
+    pub brokers: usize,
     /// Virtual horizon for sim cells; 0 for real cells (they run a bounded
     /// corpus to quiescence instead of a virtual horizon).
     pub virtual_secs: u64,
@@ -138,7 +141,22 @@ fn cell_config(
 }
 
 fn run_cell(source: SourceMode, write: WriteMode, store: StoreMode, secs: u64) -> HotpathCell {
-    let config = cell_config(source, write, store, secs);
+    run_cell_with(cell_config(source, write, store, secs), secs)
+}
+
+/// The sharded scale-out cell: the acceptance-gate shape dealt across
+/// three brokers (partitions/consumers bumped to 6 so the table divides
+/// evenly — see `crate::shard`).
+fn run_sharded_cell(secs: u64) -> HotpathCell {
+    let mut config = cell_config(SourceMode::Pull, WriteMode::SyncRpc, StoreMode::Memory, secs);
+    config.name = "hotpath-pull-sync-bc3".to_string();
+    config.ns = 6;
+    config.nc = 6;
+    config.broker_count = 3;
+    run_cell_with(config, secs)
+}
+
+fn run_cell_with(config: ExperimentConfig, secs: u64) -> HotpathCell {
     let mut cluster = launch(&config, None);
     let t0 = Instant::now();
     cluster.engine.run_until(secs * SECOND);
@@ -147,9 +165,10 @@ fn run_cell(source: SourceMode, write: WriteMode, store: StoreMode, secs: u64) -
     let summary = cluster.finish();
     HotpathCell {
         plane: "sim",
-        source: source.name(),
-        write: write.name(),
-        store: store.name(),
+        source: config.mode.name(),
+        write: config.write_mode.name(),
+        store: config.store_mode.name(),
+        brokers: config.broker_count,
         virtual_secs: secs,
         events,
         wall_secs: wall,
@@ -180,6 +199,7 @@ fn run_real_cell(source: SourceMode, write: WriteMode, corpus_records: u64) -> H
         source: source.name(),
         write: write.name(),
         store: StoreMode::Memory.name(),
+        brokers: 1,
         virtual_secs: 0,
         events: summary.events_processed,
         wall_secs: summary.wall_secs,
@@ -213,12 +233,13 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
             "  wall-clock      ".to_string()
         };
         println!(
-            "   {:<4} {:<8}x {:<10}x {:<8} {:>7.2} M events/s  {ratio}  \
+            "   {:<4} {:<8}x {:<10}x {:<8} bc{} {:>7.2} M events/s  {ratio}  \
              events {:>10}  prod {:>9}  cons {:>9}",
             cell.plane,
             cell.source,
             cell.write,
             cell.store,
+            cell.brokers,
             cell.events_per_s / 1e6,
             cell.events,
             cell.records_produced,
@@ -241,6 +262,12 @@ pub fn run_hotpath(quick: bool, baseline: Option<f64>) -> HotpathReport {
     // One durable-store cell on the acceptance-gate configuration, so the
     // bench artifact tracks the disk path's simulator cost too.
     let cell = run_cell(SourceMode::Pull, WriteMode::SyncRpc, StoreMode::Durable, secs);
+    print_cell(&cell);
+    cells.push(cell);
+    // One sharded cell (broker_count=3) so the scale-out plane's simulator
+    // cost — three broker actors, replica fan-out, shard routing — is on
+    // the trajectory too.
+    let cell = run_sharded_cell(secs);
     print_cell(&cell);
     cells.push(cell);
     // Real-plane cells: the paper's baseline (pull + sync RPC, everything
@@ -308,7 +335,7 @@ fn json_f64(v: f64) -> String {
 pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Result<()> {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"zettastream-bench-hotpath/v2\",\n");
+    s.push_str("  \"schema\": \"zettastream-bench-hotpath/v3\",\n");
     s.push_str(&format!(
         "  \"engine_events_per_s\": {},\n",
         json_f64(report.engine_events_per_s)
@@ -339,7 +366,7 @@ pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Re
     for (i, c) in report.cells.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"plane\": \"{}\", \"source\": \"{}\", \"write\": \"{}\", \
-             \"store\": \"{}\", \"virtual_secs\": {}, \
+             \"store\": \"{}\", \"brokers\": {}, \"virtual_secs\": {}, \
              \"events\": {}, \"wall_secs\": {}, \"events_per_s\": {}, \
              \"virt_per_wall\": {}, \"records_produced\": {}, \
              \"records_consumed\": {}, \"tuples_logged\": {}}}{}\n",
@@ -347,6 +374,7 @@ pub fn write_json(path: &std::path::Path, report: &HotpathReport) -> std::io::Re
             c.source,
             c.write,
             c.store,
+            c.brokers,
             c.virtual_secs,
             c.events,
             json_f64(c.wall_secs),

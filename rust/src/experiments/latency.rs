@@ -16,7 +16,7 @@
 //! artifact and regressions in either tail are diffable run-over-run.
 
 use crate::cluster::launch;
-use crate::config::{ExperimentConfig, SourceMode, Workload, WriteMode};
+use crate::config::{ExecPlane, ExperimentConfig, SourceMode, Workload, WriteMode};
 use crate::obs::{LatencyReport, Stage};
 
 /// One (source mode × write mode) cell: the latency report plus the
@@ -24,8 +24,12 @@ use crate::obs::{LatencyReport, Stage};
 /// different work").
 #[derive(Debug, Clone)]
 pub struct LatencyCell {
+    /// `"sim"` (virtual-clock spans, cost-model deltas) or `"real"`
+    /// (wall-clock spans on OS threads + TCP — see `Tracer::set_wall_clock`).
+    pub plane: &'static str,
     pub source: &'static str,
     pub write: &'static str,
+    /// Virtual horizon for sim cells; 0 for real cells (bounded corpus).
     pub virtual_secs: u64,
     pub records_consumed: u64,
     pub latency: LatencyReport,
@@ -65,9 +69,32 @@ fn run_cell(source: SourceMode, write: WriteMode, secs: u64) -> LatencyCell {
     let config = cell_config(source, write, secs);
     let summary = launch(&config, None).run();
     LatencyCell {
+        plane: "sim",
         source: source.name(),
         write: write.name(),
         virtual_secs: secs,
+        records_consumed: summary.records_consumed,
+        latency: summary.latency,
+    }
+}
+
+/// One real-plane cell: the same config shape on OS threads + TCP with a
+/// bounded corpus. Spans are wall-clock against a process-wide epoch, so
+/// these numbers are what the actual execution plane delivers (scheduler
+/// noise and all) — comparable run to run on the same host, not to the
+/// sim cells' cost-model deltas.
+fn run_real_cell(source: SourceMode, write: WriteMode, corpus_records: u64) -> LatencyCell {
+    let mut config = cell_config(source, write, 2);
+    config.name = format!("latency-real-{}-{}", source.name(), write.name());
+    config.plane = ExecPlane::Real;
+    config.corpus_records = corpus_records;
+    let summary = crate::real::run_cluster(&config)
+        .unwrap_or_else(|e| panic!("real-plane latency cell {}: {e}", config.name));
+    LatencyCell {
+        plane: "real",
+        source: source.name(),
+        write: write.name(),
+        virtual_secs: 0,
         records_consumed: summary.records_consumed,
         latency: summary.latency,
     }
@@ -81,8 +108,9 @@ fn print_cell(cell: &LatencyCell) {
     let e2e = cell.latency.stage(Stage::EndToEnd);
     let (p50, p99) = e2e.map(|s| (s.p50_ns, s.p99_ns)).unwrap_or((0, 0));
     println!(
-        "   {:<8}x {:<10} e2e p50 {:>9.1} us  p99 {:>9.1} us  spans {:>8}  \
+        "   {:<4} {:<8}x {:<10} e2e p50 {:>9.1} us  p99 {:>9.1} us  spans {:>8}  \
          dropped {:>5}  cons {:>9}",
+        cell.plane,
         cell.source,
         cell.write,
         fmt_us(p50),
@@ -108,7 +136,9 @@ fn print_cell(cell: &LatencyCell) {
     }
 }
 
-/// Run the full 4 sources × 3 writers sweep and print the surface.
+/// Run the full 4 sources × 3 writers sim sweep, then the two real-plane
+/// anchor cells (the paper's baseline and its thesis design, wall-clock),
+/// and print the surface.
 pub fn run_latency(quick: bool) -> LatencyBenchReport {
     let secs = if quick { 4 } else { 12 };
     println!("== latency — per-stage end-to-end latency, sources x writers (traced)");
@@ -120,6 +150,14 @@ pub fn run_latency(quick: bool) -> LatencyBenchReport {
             cells.push(cell);
         }
     }
+    let corpus = if quick { 20_000 } else { 100_000 };
+    let real_cells =
+        [(SourceMode::Pull, WriteMode::SyncRpc), (SourceMode::Push, WriteMode::SharedMem)];
+    for (source, write) in real_cells {
+        let cell = run_real_cell(source, write, corpus);
+        print_cell(&cell);
+        cells.push(cell);
+    }
     LatencyBenchReport { cells }
 }
 
@@ -128,13 +166,15 @@ pub fn run_latency(quick: bool) -> LatencyBenchReport {
 pub fn write_json(path: &std::path::Path, report: &LatencyBenchReport) -> std::io::Result<()> {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"zettastream-bench-latency/v1\",\n");
+    s.push_str("  \"schema\": \"zettastream-bench-latency/v2\",\n");
     s.push_str("  \"cells\": [\n");
     for (i, c) in report.cells.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"source\": \"{}\", \"write\": \"{}\", \"virtual_secs\": {}, \
+            "    {{\"plane\": \"{}\", \"source\": \"{}\", \"write\": \"{}\", \
+             \"virtual_secs\": {}, \
              \"records_consumed\": {}, \"spans_completed\": {}, \"spans_dropped\": {}, \
              \"stages\": [",
+            c.plane,
             c.source,
             c.write,
             c.virtual_secs,

@@ -491,6 +491,62 @@ pub fn ablation_latency(duration: u64) -> FigureSpec {
     }
 }
 
+/// Ablation — multi-broker scale-out: the same count workload on 1, 2 and
+/// 3 brokers, pull vs push, plus rebalance rows that force a live
+/// partition hand-off (freeze → promote → publish) mid-run. The question
+/// §VI's colocation argument raises but the paper never tests: does the
+/// pull/push contrast survive sharding the log across brokers, and what
+/// does a live ownership change cost each read path? Partitions and
+/// consumers are chosen divisible by every broker count (the shard table
+/// deals whole consumer spans, so each source keeps a single home
+/// broker); rebalance rows run replica sets at `replication_factor = 2`
+/// so the incoming primary already holds the bytes it must serve.
+pub fn ablation_shard(duration: u64) -> FigureSpec {
+    let mut rows = Vec::new();
+    let mut push_row = |brokers: usize, smode: SourceMode, rebalance: bool| {
+        let mut c = base(duration);
+        c.np = 4;
+        c.nc = 6;
+        c.nmap = 8;
+        c.ns = 6;
+        c.producer_chunk = 16 * 1024;
+        c.consumer_chunk = 128 * 1024;
+        c.record_size = 100;
+        c.broker_cores = 16;
+        c.mode = smode;
+        c.workload = Workload::Count;
+        c.broker_count = brokers;
+        if rebalance {
+            c.replication_factor = 2;
+            c.rebalance_at_secs = (duration / 2).max(1);
+        }
+        c.name = format!(
+            "bc{}{}+{}",
+            brokers,
+            if rebalance { "-rebal" } else { "" },
+            smode.name()
+        );
+        rows.push((c.name.clone(), c));
+    };
+    for &brokers in &[1usize, 2, 3] {
+        for &smode in &[SourceMode::Pull, SourceMode::Push] {
+            push_row(brokers, smode, false);
+        }
+    }
+    for &smode in &[SourceMode::Pull, SourceMode::Push] {
+        push_row(3, smode, true);
+    }
+    FigureSpec {
+        id: "ablation-shard",
+        title: "Multi-broker scale-out: broker_count ∈ {1,2,3}, pull vs push, \
+                with live-rebalance rows (rf=2)",
+        expectation: "totals identical across broker counts (sharding only spreads \
+                      the log); per-broker write contention drops with bc; rebalance \
+                      rows report a short hand-off and sources re-home without loss",
+        rows,
+    }
+}
+
 /// Ablations beyond the paper's figures (DESIGN.md §4).
 pub fn ablations(duration: u64) -> Vec<FigureSpec> {
     let mut specs = Vec::new();
@@ -509,6 +565,9 @@ pub fn ablations(duration: u64) -> Vec<FigureSpec> {
 
     // (0d) the storage tier: in-memory vs durable WAL + cold segments.
     specs.push(ablation_store(duration));
+
+    // (0e) multi-broker scale-out with live rebalancing.
+    specs.push(ablation_shard(duration));
 
     // (a) push backpressure window: objects per source.
     let mut rows = Vec::new();
@@ -667,6 +726,17 @@ pub fn run_figure(spec: &FigureSpec) -> Vec<RunSummary> {
             println!(
                 "      spans: {} completed, {} dropped",
                 lat.spans_completed, lat.spans_dropped
+            );
+        }
+        if spec.id == "ablation-shard" && config.broker_count > 1 {
+            let g = |k| summary.report.gauge(k).unwrap_or(0.0);
+            println!(
+                "      shard: brokers {:>2.0}  rebalances {:>2.0}  \
+                 partitions moved {:>2.0}  handoff {:>7.3} ms",
+                g("shard.brokers"),
+                g("shard.rebalances"),
+                g("shard.partitions_moved"),
+                g("shard.handoff_ms"),
             );
         }
         if spec.id == "ablation-checkpoint" && config.checkpoint_interval_ms > 0 {

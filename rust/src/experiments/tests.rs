@@ -223,6 +223,29 @@ fn store_ablation_durable_row_matches_memory_and_reports_gauges() {
 }
 
 #[test]
+fn shard_ablation_sweeps_broker_counts_with_live_rebalance_rows() {
+    let spec = ablation_shard(10);
+    // 3 broker counts x {pull, push} + 2 rebalance rows at bc=3.
+    assert_eq!(spec.rows.len(), 3 * 2 + 2);
+    for (label, c) in &spec.rows {
+        c.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(c.ns % c.broker_count, 0, "{label}: partitions split evenly");
+        assert_eq!(c.nc % c.broker_count, 0, "{label}: consumer spans stay on one broker");
+    }
+    let counts: std::collections::HashSet<usize> =
+        spec.rows.iter().map(|(_, c)| c.broker_count).collect();
+    assert_eq!(counts, [1, 2, 3].into_iter().collect());
+    for (label, c) in spec.rows.iter().filter(|(l, _)| l.contains("rebal")) {
+        assert_eq!(c.broker_count, 3, "{label}");
+        assert_eq!(c.replication_factor, 2, "{label}: hand-off needs a live backup");
+        assert!(
+            c.rebalance_at_secs > 0 && c.rebalance_at_secs < c.duration_secs,
+            "{label}: rebalance lands mid-run"
+        );
+    }
+}
+
+#[test]
 fn hotpath_null_or_zero_baseline_scans_as_absent() {
     let dir = std::env::temp_dir().join(format!("zs-hotpath-baseline-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

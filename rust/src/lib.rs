@@ -81,6 +81,30 @@
 //! trim-gap semantics are identical across both backends, so sources and
 //! checkpoint recovery never know which one is underneath.
 //!
+//! ## Multi-broker scale-out
+//!
+//! The paper's KerA lineage is a *sharded* store — so the broker tier
+//! scales out behind the [`shard`] module. `broker_count > 1` builds N
+//! broker actors that each host only their assigned slice of the
+//! partition space, under a [`shard::ShardCoordinator`] that owns the
+//! **versioned assignment table** ([`shard::ShardTable`]): partitions map
+//! to per-shard **replica sets** of `replication_factor` brokers, appends
+//! replicate primary → backups and ack on a **commit quorum**, and every
+//! producer and source routes each RPC through a cached
+//! [`shard::ShardClient`] epoch — a request that lands on a broker that no
+//! longer serves the partition is refused with `WrongShard`, the client
+//! refreshes its table and retries (counted, never panicking).
+//! `rebalance_at_secs` exercises the control loop live: the coordinator
+//! **freezes** the moving partitions at the old primary (drain in-flight
+//! fills, checkpoint replica cursors), **promotes** a backup to primary,
+//! then publishes the new epoch to every routing client — push
+//! subscriptions migrate by resubscribing at their consumed floor, hybrid
+//! sources fall back to pull across the hand-off, and golden-totals
+//! parity across all 4 source × 3 write modes with a mid-run rebalance is
+//! pinned by `tests/shard_rebalance.rs` (zero loss, zero duplication).
+//! `zettastream bench shard` sweeps `broker_count` 1→3 with and without a
+//! live rebalance and reports the `shard.*` hand-off gauges.
+//!
 //! ## Data-plane memory discipline
 //!
 //! The paper's thesis is that streaming gets faster when storage and
@@ -179,6 +203,7 @@ pub mod cluster;
 pub mod ops;
 pub mod pipeline;
 pub mod real;
+pub mod shard;
 pub mod source;
 pub mod transport;
 pub mod worker;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
-//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|hotpath|latency|ablations|all> [--quick] [key=value ...]
+//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|shard|hotpath|latency|ablations|all> [--quick] [key=value ...]
 //! zettastream broker --listen <addr> [key=value ...]
 //!                                       standalone broker node on real TCP
 //! zettastream list                      the benchmark catalog (Table II)
@@ -220,6 +220,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         "writepath" => vec![experiments::ablation_writepath(duration, chunks)],
         "checkpoint" => vec![experiments::ablation_checkpoint(duration)],
         "store" => vec![experiments::ablation_store(duration)],
+        "shard" => vec![experiments::ablation_shard(duration)],
         "latency-fig" => vec![experiments::ablation_latency(duration)],
         "ablations" => experiments::ablations(duration),
         "all" => {
@@ -240,7 +241,7 @@ fn cmd_list() -> Result<(), String> {
     println!("{}", experiments::table2());
     println!(
         "bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 hybrid writepath checkpoint \
-         store hotpath latency latency-fig ablations all"
+         store shard hotpath latency latency-fig ablations all"
     );
     Ok(())
 }

@@ -76,11 +76,20 @@ mod sink;
 mod tests;
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 pub use hist::{LatencyHistogram, LatencyReport, StageStat, BUCKETS};
 pub use sink::{write_jsonl, TraceEvent};
 
 use crate::sim::{Time, SECOND};
+
+/// Process-wide epoch for wall-clock tracing on the real plane. One
+/// `Instant` shared by every node thread's tracer, so a producer-node
+/// `produced_at` stamp and the colo node's stage closes live on the same
+/// axis — each node's *engine* clock is private to its thread and not
+/// comparable across the TCP boundary.
+static WALL_EPOCH: OnceLock<Instant> = OnceLock::new();
 
 /// A span stage — one hop of the produce → emit life.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -148,6 +157,12 @@ struct InFlight {
 pub struct Tracer {
     permille: u32,
     out: String,
+    /// Wall-clock mode (real plane): every `now` argument is replaced
+    /// with nanoseconds since [`WALL_EPOCH`] at method entry, so span
+    /// deltas measure real elapsed time instead of a node-local engine
+    /// clock. Off (the default) on the sim plane, where the virtual
+    /// clock is the ground truth.
+    wall_clock: bool,
     sample_counter: u64,
     /// Spans between append and source notify, keyed (partition, offset).
     opened: HashMap<(usize, u64), Opened>,
@@ -184,6 +199,25 @@ impl Tracer {
         self.out = out.to_string();
     }
 
+    /// Switch this tracer to wall-clock timestamps (real plane). Called by
+    /// each node thread before its actors are built; the first caller
+    /// pins the process-wide epoch.
+    pub fn set_wall_clock(&mut self) {
+        WALL_EPOCH.get_or_init(Instant::now);
+        self.wall_clock = true;
+    }
+
+    /// The timestamp every public method actually records: the caller's
+    /// engine clock on the sim plane, nanoseconds since the shared epoch
+    /// in wall-clock mode.
+    fn clock(&self, now: Time) -> Time {
+        if self.wall_clock {
+            WALL_EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as Time
+        } else {
+            now
+        }
+    }
+
     /// The hot-path gate: every caller checks this before touching the
     /// tracer. `false` means the whole plane is inert.
     pub fn enabled(&self) -> bool {
@@ -206,11 +240,14 @@ impl Tracer {
         }
         let pick = self.sample_counter % 1000 < self.permille as u64;
         self.sample_counter += 1;
-        pick.then_some(now)
+        pick.then_some(self.clock(now))
     }
 
-    /// Broker log append of a sampled chunk: open the span.
+    /// Broker log append of a sampled chunk: open the span. `produced`
+    /// came through the RPC from the writer's tracer and is already on
+    /// the right clock.
     pub fn on_append(&mut self, partition: usize, offset: u64, produced: Time, now: Time) {
+        let now = self.clock(now);
         self.hist(Stage::Append, partition).record(now.saturating_sub(produced));
         self.opened.insert((partition, offset), Opened { produced, appended: now });
     }
@@ -219,6 +256,7 @@ impl Tracer {
     /// Deliver stage. No-op for unsampled or already-retired chunks (e.g.
     /// replay after a fault).
     pub fn on_notify(&mut self, partition: usize, offset: u64, now: Time) {
+        let now = self.clock(now);
         if let Some(o) = self.opened.remove(&(partition, offset)) {
             self.hist(Stage::Deliver, partition).record(now.saturating_sub(o.appended));
             self.notified.insert(
@@ -238,6 +276,7 @@ impl Tracer {
         to: usize,
         now: Time,
     ) {
+        let now = self.clock(now);
         let mut marker = None;
         if let Some((partition, offset)) = key {
             if let Some(n) = self.notified.remove(&(partition, offset)) {
@@ -260,6 +299,7 @@ impl Tracer {
     /// once **per batch processed** while tracing; closes Operate and
     /// EndToEnd for sampled batches.
     pub fn on_emit(&mut self, from: usize, to: usize, now: Time) {
+        let now = self.clock(now);
         let Some(fifo) = self.handoff.get_mut(&(from, to)) else { return };
         let Some(marker) = fifo.pop_front() else { return };
         if let Some(s) = marker {
@@ -285,6 +325,7 @@ impl Tracer {
     /// Engine-less finalisation (the native source has no pipeline):
     /// Consume closes at `now`, Operate is zero, EndToEnd closes.
     pub fn finalize_at_source(&mut self, partition: usize, offset: u64, source: usize, now: Time) {
+        let now = self.clock(now);
         if let Some(n) = self.notified.remove(&(partition, offset)) {
             self.hist(Stage::Consume, source).record(now.saturating_sub(n.notified));
             self.hist(Stage::Operate, source).record(0);
@@ -314,16 +355,19 @@ impl Tracer {
 
     /// A pull/native poll returned no data.
     pub fn note_empty_poll(&mut self, now: Time) {
+        let now = self.clock(now);
         bump(&mut self.empty_polls, now, 1);
     }
 
     /// A source exhausted its downstream credits and blocked.
     pub fn note_credit_stall(&mut self, now: Time) {
+        let now = self.clock(now);
         bump(&mut self.credit_stalls, now, 1);
     }
 
     /// A writer's append round-trip completed (ack received).
     pub fn note_append_latency(&mut self, now: Time, rtt_ns: u64) {
+        let now = self.clock(now);
         bump(&mut self.append_ns_sum, now, rtt_ns);
         bump(&mut self.append_acks, now, 1);
     }
@@ -361,6 +405,7 @@ impl Tracer {
     /// A checkpoint epoch completed.
     pub fn note_epoch(&mut self, epoch: u64, at: Time, span_ns: u64) {
         if self.events_on() {
+            let at = self.clock(at);
             self.events.push(TraceEvent::Epoch { epoch, at, span_ns });
         }
     }
@@ -368,6 +413,7 @@ impl Tracer {
     /// The hybrid source switched mechanisms.
     pub fn note_switch(&mut self, task: usize, to_push: bool, at: Time) {
         if self.events_on() {
+            let at = self.clock(at);
             self.events.push(TraceEvent::Switch { task, to_push, at });
         }
     }
@@ -377,6 +423,7 @@ impl Tracer {
     /// would be worse than a dropped span.
     pub fn note_fault(&mut self, kind: &'static str, at: Time) {
         if self.events_on() {
+            let at = self.clock(at);
             self.events.push(TraceEvent::Fault { kind, at });
         }
         self.drop_in_flight();
@@ -385,6 +432,7 @@ impl Tracer {
     /// Recovery completed.
     pub fn note_restore(&mut self, at: Time, recovery_ns: u64) {
         if self.events_on() {
+            let at = self.clock(at);
             self.events.push(TraceEvent::Restore { at, recovery_ns });
         }
     }

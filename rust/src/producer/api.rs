@@ -45,6 +45,10 @@ pub enum WriteStatKey {
     /// Generation stalls on object exhaustion — the shared-memory
     /// backpressure signal (shared-mem mode).
     ObjectStalls,
+    /// Appends re-routed after a `WrongShard` refusal (sharded runs).
+    /// Unlike `Retries` these are unbounded: the coordinator always
+    /// publishes the new table, so the retry loop terminates.
+    ShardRetries,
 }
 
 impl WriteStatKey {
@@ -57,6 +61,7 @@ impl WriteStatKey {
             Self::ObjectsSealed => "objects_sealed",
             Self::Subscribed => "subscribed",
             Self::ObjectStalls => "object_stalls",
+            Self::ShardRetries => "shard_retries",
         }
     }
 }
@@ -73,6 +78,10 @@ pub enum WriteError {
     Rejected { reason: String, attempts: u32 },
     /// The write-subscription handshake failed (shared-mem mode).
     SubscribeFailed { reason: String },
+    /// The broker stopped serving the partition (sharded runs) and no
+    /// shard client was wired to re-route — surfaced typed instead of
+    /// panicking the producer.
+    WrongShard { epoch: u64 },
 }
 
 impl std::fmt::Display for WriteError {
@@ -82,6 +91,9 @@ impl std::fmt::Display for WriteError {
                 write!(f, "append rejected after {attempts} attempt(s): {reason}")
             }
             Self::SubscribeFailed { reason } => write!(f, "write subscribe failed: {reason}"),
+            Self::WrongShard { epoch } => {
+                write!(f, "broker no longer serves the partition (assignment epoch {epoch})")
+            }
         }
     }
 }
@@ -313,6 +325,10 @@ pub struct WriterWiring<'a> {
     pub metrics: SharedMetrics,
     pub net: SharedNetwork,
     pub store: SharedStore,
+    /// The published shard view when `broker_count > 1`; writers route
+    /// per-partition through a [`crate::shard::ShardClient`] instead of
+    /// the single `broker` above.
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 /// The construction loop shared by the built-in factories: one writer per

@@ -24,10 +24,11 @@ use crate::config::WriteMode;
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::SharedNetwork;
 use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 
 use super::api::{
-    WriteAccounting, WritePath, WriteStatKey, WriteStats, WriterFactory, WriterWiring,
+    WriteAccounting, WriteError, WritePath, WriteStatKey, WriteStats, WriterFactory, WriterWiring,
 };
 use super::{ProducerParams, RecordGen};
 
@@ -94,6 +95,12 @@ pub struct PipelinedWriter {
     inflight_peak: usize,
     metrics: SharedMetrics,
     net: SharedNetwork,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
+    /// Which broker group the next request stages (round-robin).
+    group_rr: usize,
+    /// Appends re-routed after a `WrongShard` refusal.
+    shard_retries: u64,
 }
 
 impl PipelinedWriter {
@@ -106,6 +113,7 @@ impl PipelinedWriter {
         assert!(!params.base.partitions.is_empty());
         assert!(params.base.chunk_bytes >= params.base.record_size);
         assert!(params.inflight_window >= 1, "pipelining needs a window of at least 1");
+        let shard = params.base.shard.as_ref().map(ShardClient::new);
         Self {
             params,
             gen,
@@ -121,6 +129,9 @@ impl PipelinedWriter {
             inflight_peak: 0,
             metrics,
             net,
+            shard,
+            group_rr: 0,
+            shard_retries: 0,
         }
     }
 
@@ -130,9 +141,19 @@ impl PipelinedWriter {
         debug_assert!(self.ready.is_none(), "one staged request at a time");
         let rpc = self.next_rpc;
         self.next_rpc += 1;
-        let Some((chunks, total_records)) =
-            super::stage_request(&mut self.gen, &self.params.base)
-        else {
+        let staged = match &self.shard {
+            None => super::stage_request(&mut self.gen, &self.params.base),
+            Some(client) => {
+                // Rotate over broker groups: a request stays within one
+                // primary's range so it has a single destination broker.
+                let brokers = client.table().brokers();
+                let group = self.group_rr % brokers;
+                self.group_rr = (self.group_rr + 1) % brokers;
+                let parts = client.table().primaries_of(group);
+                super::stage_request_for(&mut self.gen, &self.params.base, &parts)
+            }
+        };
+        let Some((chunks, total_records)) = staged else {
             self.done = true;
             return;
         };
@@ -183,16 +204,17 @@ impl PipelinedWriter {
         let inflight = self.inflight.get_mut(&rpc).expect("transmit of a live append");
         inflight.sent_at = ctx.now();
         let bytes: u64 = inflight.chunks.iter().map(|(_, c)| c.bytes()).sum();
+        // Destination from the cached shard table (re-resolved on every
+        // transmit, so a WrongShard retry lands at the new primary).
+        let (to, to_node) = match &self.shard {
+            Some(client) => client.broker_for(inflight.chunks[0].0),
+            None => (self.params.base.broker, self.params.base.broker_node),
+        };
         self.acct.on_issued();
-        let deliver = self.net.borrow_mut().send(
-            ctx.now(),
-            self.params.base.node,
-            self.params.base.broker_node,
-            bytes,
-        );
+        let deliver = self.net.borrow_mut().send(ctx.now(), self.params.base.node, to_node, bytes);
         ctx.send_at(
             deliver,
-            self.params.base.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
@@ -246,6 +268,30 @@ impl PipelinedWriter {
                 let dropped = self.inflight.remove(&env.id).expect("just checked");
                 self.sequence_ack(&dropped.seqs);
             }
+            RpcReply::WrongShard { epoch } => match self.shard.as_mut() {
+                Some(client) => {
+                    // Stale route: refresh the cached table and resend the
+                    // same slot after backoff. Unbounded (the coordinator
+                    // always publishes the new table), counted separately
+                    // from genuine rejections.
+                    client.refresh();
+                    self.shard_retries += 1;
+                    self.inflight
+                        .get_mut(&env.id)
+                        .expect("refusal matches an in-flight append")
+                        .attempts += 1;
+                    ctx.send_self_in(self.params.base.retry.backoff_ns, Msg::Timer(env.id));
+                    return; // slot stays occupied until the retry resolves
+                }
+                None => {
+                    // No routing view to refresh: surface the typed error
+                    // instead of panicking, free the slot.
+                    self.acct.errors += 1;
+                    self.acct.last_error = Some(WriteError::WrongShard { epoch });
+                    let dropped = self.inflight.remove(&env.id).expect("refusal matches a slot");
+                    self.sequence_ack(&dropped.seqs);
+                }
+            },
             other => {
                 panic!("pipelined writer {}: unexpected reply {other:?}", self.params.base.entity)
             }
@@ -304,6 +350,9 @@ impl WritePath for PipelinedWriter {
         let mut extras = super::api::WriteStatExtras::new();
         extras.insert(WriteStatKey::AcksReordered, self.reordered);
         extras.insert(WriteStatKey::InflightPeak, self.inflight_peak as u64);
+        if self.shard_retries > 0 {
+            extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
         // Generation thread + async completion thread.
         self.acct.stats(self.gen.planted(), 2, extras)
     }

@@ -33,6 +33,7 @@ use crate::proto::{
     Chunk, Msg, ObjectId, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest, StampedChunk,
     SubId, WriteProducerSpec,
 };
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 
 use super::api::{
@@ -53,6 +54,9 @@ pub struct SharedMemParams {
 #[derive(Debug, Clone, Copy)]
 struct SealInflight {
     object: ObjectId,
+    /// First chunk's partition — the routing key under sharding (a seal
+    /// retry after `WrongShard` re-resolves the primary from it).
+    partition: PartitionId,
     sent_at: Time,
     attempts: u32,
     /// Generation stamp when the latency tracer sampled this seal.
@@ -63,10 +67,16 @@ struct SealInflight {
 pub struct SharedMemWriter {
     params: SharedMemParams,
     gen: RecordGen,
-    sub: Option<SubId>,
+    /// One object pool per broker group (one entry when unsharded) —
+    /// each group's primary hosts the registration, but the pools all
+    /// live in the node-global plasma store.
+    group_subs: Vec<Option<SubId>>,
+    /// Outstanding `WriteSubscribe` rpc → broker group it registers.
+    sub_rpcs: HashMap<u64, usize>,
     next_rpc: u64,
-    /// A generated batch parked until an object frees up (at most one).
-    parked: Option<Vec<(PartitionId, Chunk)>>,
+    /// A generated batch parked until an object frees up (at most one),
+    /// tagged with the broker group it was staged for.
+    parked: Option<(usize, Vec<(PartitionId, Chunk)>)>,
     generating: bool,
     seals: HashMap<u64, SealInflight>,
     done: bool,
@@ -76,6 +86,12 @@ pub struct SharedMemWriter {
     metrics: SharedMetrics,
     net: SharedNetwork,
     store: SharedStore,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
+    /// Which broker group the next batch stages (round-robin).
+    group_rr: usize,
+    /// Seals re-routed after a `WrongShard` refusal.
+    shard_retries: u64,
 }
 
 impl SharedMemWriter {
@@ -89,10 +105,13 @@ impl SharedMemWriter {
         assert!(!params.base.partitions.is_empty());
         assert!(params.base.chunk_bytes >= params.base.record_size);
         assert!(params.objects >= 1, "the write pool needs at least one object");
+        let shard = params.base.shard.as_ref().map(ShardClient::new);
+        let groups = shard.as_ref().map_or(1, |c| c.table().brokers());
         Self {
             params,
             gen,
-            sub: None,
+            group_subs: vec![None; groups],
+            sub_rpcs: HashMap::new(),
             next_rpc: 0,
             parked: None,
             generating: false,
@@ -104,27 +123,42 @@ impl SharedMemWriter {
             metrics,
             net,
             store,
+            shard,
+            group_rr: 0,
+            shard_retries: 0,
         }
     }
 
-    /// One producer request worth of object capacity (`ReqS`).
-    fn object_bytes(&self) -> u64 {
-        (self.params.base.chunk_bytes * self.params.base.partitions.len()) as u64
+    /// The partition set one broker group's pool covers (all partitions
+    /// when unsharded).
+    fn group_partitions(&self, group: usize) -> Vec<PartitionId> {
+        match &self.shard {
+            Some(client) => client.table().primaries_of(group),
+            None => self.params.base.partitions.clone(),
+        }
     }
 
-    /// Step 1: the single registration RPC (control-sized; carries no
-    /// payload).
-    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+    /// True once every broker group's registration has acked.
+    fn subscribed(&self) -> bool {
+        self.group_subs.iter().all(Option::is_some)
+    }
+
+    /// Step 1: the registration RPC (control-sized; carries no payload) —
+    /// one per broker group, sized for that group's request span.
+    fn subscribe_group(&mut self, group: usize, ctx: &mut Ctx<'_, Msg>) {
+        let partitions = self.group_partitions(group);
+        let object_bytes = (self.params.base.chunk_bytes * partitions.len()) as u64;
+        let (to, to_node) = match &self.shard {
+            Some(client) => client.broker_for(partitions[0]),
+            None => (self.params.base.broker, self.params.base.broker_node),
+        };
         let rpc = self.next_rpc;
         self.next_rpc += 1;
-        let deliver = self.net.borrow_mut().send_control(
-            ctx.now(),
-            self.params.base.node,
-            self.params.base.broker_node,
-        );
+        self.sub_rpcs.insert(rpc, group);
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.base.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.base.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
@@ -132,9 +166,9 @@ impl SharedMemWriter {
                 kind: RpcKind::WriteSubscribe {
                     producer: WriteProducerSpec {
                         producer_actor: ctx.self_id(),
-                        partitions: self.params.base.partitions.clone(),
+                        partitions,
                         objects: self.params.objects,
-                        object_bytes: self.object_bytes(),
+                        object_bytes,
                     },
                 },
             }),
@@ -144,16 +178,26 @@ impl SharedMemWriter {
     /// Generate the next batch; `GenDone` fires after the per-record cost.
     fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
         debug_assert!(self.parked.is_none(), "one parked batch at a time");
-        let Some((chunks, total_records)) =
-            super::stage_request(&mut self.gen, &self.params.base)
-        else {
+        let (group, staged) = match &self.shard {
+            None => (0, super::stage_request(&mut self.gen, &self.params.base)),
+            Some(client) => {
+                // Rotate over broker groups: a batch stays within one
+                // primary's range so its seal has a single destination.
+                let brokers = client.table().brokers();
+                let group = self.group_rr % brokers;
+                self.group_rr = (self.group_rr + 1) % brokers;
+                let parts = client.table().primaries_of(group);
+                (group, super::stage_request_for(&mut self.gen, &self.params.base, &parts))
+            }
+        };
+        let Some((chunks, total_records)) = staged else {
             self.done = true;
             return;
         };
         self.generating = true;
         let cost = total_records * self.params.base.cost.producer_record_ns;
         ctx.send_self_in(cost as Time, Msg::GenDone(0));
-        self.parked = Some(chunks);
+        self.parked = Some((group, chunks));
     }
 
     /// Seal the parked batch into a free object and notify the broker;
@@ -162,15 +206,16 @@ impl SharedMemWriter {
         if self.generating {
             return; // the batch is still being generated
         }
-        if let Some(chunks) = self.parked.take() {
-            let sub = self.sub.expect("subscribed before sealing");
+        if let Some((group, chunks)) = self.parked.take() {
+            let sub = self.group_subs[group].expect("subscribed before sealing");
             let Some(object) = self.store.borrow_mut().acquire(sub) else {
-                self.parked = Some(chunks);
+                self.parked = Some((group, chunks));
                 if from_generation {
                     self.object_stalls += 1;
                 }
                 return; // pool exhausted: resume on the next SealAck
             };
+            let partition = chunks[0].0;
             let content: Vec<StampedChunk> = chunks
                 .into_iter()
                 .map(|(p, chunk)| StampedChunk { partition: p, offset: 0, chunk })
@@ -183,7 +228,7 @@ impl SharedMemWriter {
             let produced_at = self.metrics.borrow_mut().tracer.sample_produced(ctx.now());
             self.seals.insert(
                 rpc,
-                SealInflight { object, sent_at: ctx.now(), attempts: 1, produced_at },
+                SealInflight { object, partition, sent_at: ctx.now(), attempts: 1, produced_at },
             );
             self.notify_seal(rpc, ctx);
         }
@@ -193,18 +238,21 @@ impl SharedMemWriter {
     }
 
     /// Send the `SealObject` control notification (first send or retry).
+    /// The destination is re-resolved from the seal's partition on every
+    /// send, so a `WrongShard` retry notifies the new primary.
     fn notify_seal(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
         let seal = self.seals.get_mut(&rpc).expect("notify of a live seal");
         seal.sent_at = ctx.now();
+        let seal = *seal;
+        let (to, to_node) = match &self.shard {
+            Some(client) => client.broker_for(seal.partition),
+            None => (self.params.base.broker, self.params.base.broker_node),
+        };
         self.acct.on_issued();
-        let deliver = self.net.borrow_mut().send_control(
-            ctx.now(),
-            self.params.base.node,
-            self.params.base.broker_node,
-        );
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.base.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.base.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id: rpc,
                 reply_to: ctx.self_id(),
@@ -217,8 +265,13 @@ impl SharedMemWriter {
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
         match env.reply {
             RpcReply::WriteSubscribeAck { sub } => {
-                self.sub = Some(sub);
-                self.start_generation(ctx);
+                let group =
+                    self.sub_rpcs.remove(&env.id).expect("ack matches a pending registration");
+                self.group_subs[group] = Some(sub);
+                // Generation starts once every group's pool is registered.
+                if self.subscribed() {
+                    self.start_generation(ctx);
+                }
             }
             RpcReply::SealAck { records, bytes } => {
                 let seal = self.seals.remove(&env.id).expect("ack matches an in-flight seal");
@@ -235,8 +288,9 @@ impl SharedMemWriter {
                 // batch can seal immediately.
                 self.try_seal(false, ctx);
             }
-            RpcReply::Error { reason } if self.sub.is_none() => {
+            RpcReply::Error { reason } if self.sub_rpcs.contains_key(&env.id) => {
                 // The registration itself failed: nothing to retry into.
+                self.sub_rpcs.remove(&env.id);
                 self.acct.last_error = Some(WriteError::SubscribeFailed { reason });
                 self.acct.errors += 1;
                 self.done = true;
@@ -255,6 +309,36 @@ impl SharedMemWriter {
                 self.store.borrow_mut().release(dropped.object);
                 self.try_seal(false, ctx);
             }
+            RpcReply::WrongShard { epoch } => match self.shard.as_mut() {
+                Some(client) => {
+                    // Stale route: refresh the cached table and re-notify
+                    // after backoff — the object stays sealed and the retry
+                    // lands at the new primary. Registrations that raced a
+                    // rebalance re-register the same way (Timer re-issues
+                    // the WriteSubscribe with the refreshed partition set).
+                    client.refresh();
+                    self.shard_retries += 1;
+                    if let Some(seal) = self.seals.get_mut(&env.id) {
+                        seal.attempts += 1;
+                    } else {
+                        assert!(
+                            self.sub_rpcs.contains_key(&env.id),
+                            "refusal matches a seal or a registration"
+                        );
+                    }
+                    ctx.send_self_in(self.params.base.retry.backoff_ns, Msg::Timer(env.id));
+                    return;
+                }
+                None => {
+                    // No routing view to refresh: surface the typed error,
+                    // reclaim the object, keep producing.
+                    self.acct.errors += 1;
+                    self.acct.last_error = Some(WriteError::WrongShard { epoch });
+                    let dropped = self.seals.remove(&env.id).expect("refusal matches a seal");
+                    self.store.borrow_mut().release(dropped.object);
+                    self.try_seal(false, ctx);
+                }
+            },
             other => {
                 panic!("sharedmem writer {}: unexpected reply {other:?}", self.params.base.entity)
             }
@@ -270,7 +354,7 @@ impl SharedMemWriter {
     }
 
     pub fn is_subscribed(&self) -> bool {
-        self.sub.is_some()
+        self.subscribed()
     }
 
     /// Generation stalls on object exhaustion so far.
@@ -281,7 +365,9 @@ impl SharedMemWriter {
 
 impl Actor<Msg> for SharedMemWriter {
     fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        self.subscribe(ctx);
+        for group in 0..self.group_subs.len() {
+            self.subscribe_group(group, ctx);
+        }
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
@@ -291,7 +377,15 @@ impl Actor<Msg> for SharedMemWriter {
                 self.try_seal(true, ctx);
             }
             Msg::Reply(env) => self.on_reply(*env, ctx),
-            Msg::Timer(rpc) => self.notify_seal(rpc, ctx),
+            Msg::Timer(rpc) => {
+                // A backed-off registration retry re-issues the subscribe
+                // with the refreshed table; everything else is a seal.
+                if let Some(group) = self.sub_rpcs.remove(&rpc) {
+                    self.subscribe_group(group, ctx);
+                } else {
+                    self.notify_seal(rpc, ctx);
+                }
+            }
             other => {
                 panic!("sharedmem writer {}: unexpected {other:?}", self.params.base.entity)
             }
@@ -315,8 +409,11 @@ impl WritePath for SharedMemWriter {
     fn stats(&self) -> WriteStats {
         let mut extras = super::api::WriteStatExtras::new();
         extras.insert(WriteStatKey::ObjectsSealed, self.objects_sealed);
-        extras.insert(WriteStatKey::Subscribed, self.sub.is_some() as u64);
+        extras.insert(WriteStatKey::Subscribed, self.subscribed() as u64);
         extras.insert(WriteStatKey::ObjectStalls, self.object_stalls);
+        if self.shard_retries > 0 {
+            extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
         // One fill thread; acks arrive as notifications.
         self.acct.stats(self.gen.planted(), 1, extras)
     }

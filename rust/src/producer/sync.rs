@@ -10,9 +10,12 @@ use crate::config::WriteMode;
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::SharedNetwork;
 use crate::proto::{Chunk, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest};
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 
-use super::api::{WriteAccounting, WritePath, WriteStats, WriterFactory, WriterWiring};
+use super::api::{
+    WriteAccounting, WriteError, WritePath, WriteStatKey, WriteStats, WriterFactory, WriterWiring,
+};
 use super::{ProducerParams, RecordGen};
 
 /// One append's retry state: what to resend and how often we tried.
@@ -40,6 +43,12 @@ pub struct Producer {
     acct: WriteAccounting,
     metrics: SharedMetrics,
     net: SharedNetwork,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
+    /// Which broker group the next request stages (round-robin).
+    group_rr: usize,
+    /// Appends re-routed after a `WrongShard` refusal.
+    shard_retries: u64,
 }
 
 impl Producer {
@@ -51,6 +60,7 @@ impl Producer {
     ) -> Self {
         assert!(!params.partitions.is_empty());
         assert!(params.chunk_bytes >= params.record_size);
+        let shard = params.shard.as_ref().map(ShardClient::new);
         Self {
             params,
             gen,
@@ -61,6 +71,9 @@ impl Producer {
             acct: WriteAccounting::default(),
             metrics,
             net,
+            shard,
+            group_rr: 0,
+            shard_retries: 0,
         }
     }
 
@@ -68,8 +81,19 @@ impl Producer {
     /// then `GenDone` fires and the RPC goes out.
     fn start_generation(&mut self, ctx: &mut Ctx<'_, Msg>) {
         let rpc = self.next_rpc;
-        let Some((chunks, total_records)) = super::stage_request(&mut self.gen, &self.params)
-        else {
+        let staged = match &self.shard {
+            None => super::stage_request(&mut self.gen, &self.params),
+            Some(client) => {
+                // Rotate over broker groups: a request stays within one
+                // primary's range so it has a single destination broker.
+                let brokers = client.table().brokers();
+                let group = self.group_rr % brokers;
+                self.group_rr = (self.group_rr + 1) % brokers;
+                let parts = client.table().primaries_of(group);
+                super::stage_request_for(&mut self.gen, &self.params, &parts)
+            }
+        };
+        let Some((chunks, total_records)) = staged else {
             self.done = true;
             return;
         };
@@ -94,14 +118,17 @@ impl Producer {
         let inflight = self.inflight.as_mut().expect("transmit with an append staged");
         inflight.sent_at = ctx.now();
         let bytes: u64 = inflight.chunks.iter().map(|(_, c)| c.bytes()).sum();
+        // Destination from the cached shard table (re-resolved on every
+        // transmit, so a WrongShard retry lands at the new primary).
+        let (to, to_node) = match &self.shard {
+            Some(client) => client.broker_for(inflight.chunks[0].0),
+            None => (self.params.broker, self.params.broker_node),
+        };
         self.acct.on_issued();
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send(ctx.now(), self.params.node, self.params.broker_node, bytes);
+        let deliver = self.net.borrow_mut().send(ctx.now(), self.params.node, to_node, bytes);
         ctx.send_at(
             deliver,
-            self.params.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id: inflight.rpc,
                 reply_to: ctx.self_id(),
@@ -142,6 +169,28 @@ impl Producer {
                 // overload experiments must not abort the sim.
                 self.inflight = None;
             }
+            RpcReply::WrongShard { epoch } => match self.shard.as_mut() {
+                Some(client) => {
+                    // Stale route: refresh the cached table and resend the
+                    // same chunks after backoff. Unbounded (the coordinator
+                    // always publishes the new table), counted separately
+                    // from genuine rejections.
+                    client.refresh();
+                    self.shard_retries += 1;
+                    let inflight =
+                        self.inflight.as_mut().expect("refusal matches the in-flight append");
+                    inflight.attempts += 1;
+                    ctx.send_self_in(self.params.retry.backoff_ns, Msg::Timer(inflight.rpc));
+                    return;
+                }
+                None => {
+                    // No routing view to refresh: surface the typed error
+                    // instead of panicking and move on.
+                    self.acct.errors += 1;
+                    self.acct.last_error = Some(WriteError::WrongShard { epoch });
+                    self.inflight = None;
+                }
+            },
             other => panic!("producer {}: unexpected reply {other:?}", self.params.entity),
         }
         if !self.done {
@@ -191,8 +240,12 @@ impl WritePath for Producer {
     }
 
     fn stats(&self) -> WriteStats {
+        let mut extras = super::api::WriteStatExtras::new();
+        if self.shard_retries > 0 {
+            extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
         // One client thread generates and waits in turn.
-        self.acct.stats(self.gen.planted(), 1, super::api::WriteStatExtras::new())
+        self.acct.stats(self.gen.planted(), 1, extras)
     }
 }
 

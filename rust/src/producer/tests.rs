@@ -66,6 +66,7 @@ fn params(
         retry: RetryPolicy { max_retries: 3, backoff_ns: 10 * MICROS },
         cost: Default::default(),
         data_plane: crate::config::DataPlane::Sim,
+        shard: None,
     }
 }
 

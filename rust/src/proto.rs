@@ -187,6 +187,20 @@ pub enum RpcKind {
     SealObject { id: ObjectId, produced_at: Option<Time> },
     /// Primary -> backup replication of one append (Replication = 2).
     Replicate { bytes: u64, chunks: u32 },
+    /// Shard primary -> replica replication of one append: the full
+    /// stamped chunks with **primary-assigned offsets**, so every replica
+    /// log is byte-identical regardless of its own worker-pool completion
+    /// order (replicas apply through a per-partition reorder buffer).
+    ShardReplicate { chunks: Vec<StampedChunk> },
+    /// Coordinator -> broker: stop serving `partitions` as primary under
+    /// the table that will carry `epoch`. The broker acks only once every
+    /// in-flight replication for those partitions has been acknowledged —
+    /// the drain half of the hand-off.
+    ShardFreeze { epoch: u64, partitions: Vec<PartitionId> },
+    /// Coordinator -> broker: start serving `partitions` as primary at
+    /// assignment `epoch` — the resume half of the hand-off. The new
+    /// primary's log is already complete (it was a replica).
+    ShardPromote { epoch: u64, partitions: Vec<PartitionId> },
 }
 
 /// One colocated producer's write-side registration.
@@ -240,6 +254,16 @@ pub enum RpcReply {
     ReplicateAck,
     /// Checkpoint epoch recorded as the new retention floor.
     CommitAck { epoch: u64 },
+    /// The broker is not (or no longer) the primary for a partition the
+    /// request touched: the client's cached assignment table is stale.
+    /// `epoch` is the broker's current assignment epoch — the client
+    /// refreshes from the coordinator's published table and retries.
+    WrongShard { epoch: u64 },
+    /// Drain complete: the broker stopped serving the frozen partitions
+    /// and every in-flight replication for them is acknowledged.
+    FreezeAck { epoch: u64 },
+    /// The broker now serves the promoted partitions at `epoch`.
+    PromoteAck { epoch: u64 },
     /// Request refused (unknown partition, bad offset...). Carried instead
     /// of panicking so fault-injection tests can exercise client handling.
     Error { reason: String },
@@ -427,6 +451,10 @@ pub enum Msg {
     Restore { inc: u64, epoch_floor: u64 },
     /// Recovery: participant `from` finished restoring and resumed.
     RestoreAck { from: ActorId },
+    /// Sharding: the coordinator published assignment table `epoch` —
+    /// cached routing tables are stale; refresh from the shared view
+    /// before the next request. Inline (two words), never boxed.
+    ShardEpoch { epoch: u64 },
 }
 
 impl Msg {

@@ -345,5 +345,8 @@ fn kind_label(kind: &RpcKind) -> &'static str {
         RpcKind::CommitCheckpoint { .. } => "commit_checkpoint",
         RpcKind::SealObject { .. } => "seal_object",
         RpcKind::Replicate { .. } => "replicate",
+        RpcKind::ShardReplicate { .. } => "shard_replicate",
+        RpcKind::ShardFreeze { .. } => "shard_freeze",
+        RpcKind::ShardPromote { .. } => "shard_promote",
     }
 }

@@ -53,6 +53,7 @@ use crate::cluster::{build_brokers, build_pipeline_tasks, NODE_COLOCATED, NODE_P
 use crate::config::{ExperimentConfig, WriteMode};
 use crate::metrics::{Class, MetricsHub, SharedMetrics};
 use crate::net::Network;
+use crate::obs::LatencyReport;
 use crate::ops::FilterOp;
 use crate::pipeline::Pipeline;
 use crate::plasma::ObjectStore;
@@ -98,6 +99,11 @@ pub struct RealRunSummary {
     pub threads: ThreadReport,
     pub writers: WriteStats,
     pub sources: SourceStats,
+    /// Per-stage latency when tracing was on (`trace_sample_permille > 0`)
+    /// — wall-clock spans against a process-wide epoch, so producer-node
+    /// `produced_at` stamps and colo-node stage closes are comparable.
+    /// Empty when tracing was off.
+    pub latency: LatencyReport,
 }
 
 /// Per-node progress counters the orchestrator polls. Plain data behind a
@@ -120,6 +126,20 @@ struct NodeOutcome {
     tuples_logged: u64,
     events_processed: u64,
     threads: ThreadReport,
+    /// The node's merged latency histograms (spans close on the colo
+    /// node, so the producer node's report is empty).
+    latency: LatencyReport,
+}
+
+/// Arm a node thread's tracer for the real plane: the configured sampling
+/// rate with wall-clock timestamps (node-local engine clocks are not
+/// comparable across threads).
+fn configure_tracer(metrics: &SharedMetrics, config: &ExperimentConfig) {
+    if config.trace_sample_permille > 0 {
+        let mut m = metrics.borrow_mut();
+        m.tracer.configure(config.trace_sample_permille, &config.trace_out);
+        m.tracer.set_wall_clock();
+    }
 }
 
 /// Run `config` on the real plane: spawn the node threads, wait for the
@@ -254,6 +274,7 @@ pub fn run_cluster(config: &ExperimentConfig) -> Result<RealRunSummary, String> 
         threads,
         writers,
         sources,
+        latency: colo_outcome.latency,
     })
 }
 
@@ -271,6 +292,7 @@ fn colo_node_main(
     let factory = source_registry.expect(config.mode);
     let mut engine = Engine::new(config.seed);
     let metrics = MetricsHub::shared();
+    configure_tracer(&metrics, &config);
     let net = Network::shared(config.cost.network, config.cost.loopback);
     let store = ObjectStore::shared();
     let registry = TaskRegistry::shared();
@@ -300,6 +322,7 @@ fn colo_node_main(
                 metrics: metrics.clone(),
                 net: net.clone(),
                 store: store.clone(),
+                shard: None,
             },
             &mut engine,
         )
@@ -323,6 +346,7 @@ fn colo_node_main(
         registry: registry.clone(),
         compute: None,
         checkpoint: None,
+        shard: None,
     };
     let sources = factory.build(&wiring, &mut engine);
 
@@ -370,6 +394,7 @@ fn colo_node_main(
         tuples_logged: m.total(Class::ConsumerTuples),
         events_processed: engine.events_processed(),
         threads: transport.shutdown(),
+        latency: m.tracer.report(),
     }
 }
 
@@ -385,6 +410,7 @@ fn producer_node_main(
     let writer_registry = WriterRegistry::builtin();
     let engine = Engine::new(config.seed);
     let metrics = MetricsHub::shared();
+    configure_tracer(&metrics, &config);
     let net = Network::shared(config.cost.network, config.cost.loopback);
     let store = ObjectStore::shared();
     let partitions: Vec<PartitionId> = (0..config.ns).map(PartitionId).collect();
@@ -407,6 +433,7 @@ fn producer_node_main(
             metrics: metrics.clone(),
             net: net.clone(),
             store: store.clone(),
+            shard: None,
         },
         &mut driver.engine,
     );
@@ -442,6 +469,7 @@ fn producer_node_main(
         tuples_logged: 0,
         events_processed: engine.events_processed(),
         threads: transport.shutdown(),
+        latency: LatencyReport::default(),
     }
 }
 

@@ -1,0 +1,679 @@
+//! Sharding: partitions spread across N brokers, replica sets, rebalance.
+//!
+//! Everything before this subsystem funnelled through one broker actor
+//! (plus one optional backup). Serving real traffic means partitions
+//! **sharded** across many brokers with replicated, rebalance-able
+//! ownership — the topology the Uber real-time-infrastructure paper
+//! describes, operated through the coordinator/broker split of Isah &
+//! Zulkernine's ingestion framework. This module is that control plane:
+//!
+//! * [`ShardTable`] — the versioned partition → replica-set assignment
+//!   table. Range-based: each broker owns a contiguous run of `Ns /
+//!   broker_count` partitions (seed-rotated so broker 0 is not special),
+//!   and partition `p`'s replica set is the `replication_factor` brokers
+//!   starting at its primary. Pure function of `(Ns, broker_count,
+//!   replication_factor, seed)` — same inputs, same table, on every node.
+//! * [`ShardState`] / [`SharedShard`] — the shared blackboard (same
+//!   `Rc<RefCell>` idiom as the plasma store) holding the **published**
+//!   table plus the broker actor roster. Only the coordinator writes it.
+//! * [`ShardClient`] — the cached routing view producers and sources hold:
+//!   a table snapshot plus its epoch. Routing decisions use the cache;
+//!   [`ShardClient::refresh`] re-snapshots after a
+//!   [`crate::proto::RpcReply::WrongShard`] reply or a
+//!   [`crate::proto::Msg::ShardEpoch`] notification.
+//! * [`BrokerShard`] — the broker-side view: this broker's index, the
+//!   partitions it currently serves as primary (mutated by freeze /
+//!   promote), and each partition's replica peers.
+//! * [`ShardCoordinator`] — the actor that owns the table's lifecycle and
+//!   drives live rebalancing.
+//!
+//! ## The assignment-epoch contract
+//!
+//! The table carries a monotonically increasing `epoch`. The rules that
+//! make cached routing safe:
+//!
+//! 1. **Clients route on a cached epoch.** A producer or source resolves
+//!    `partition → broker` from its snapshot and never blocks on the
+//!    coordinator.
+//! 2. **Brokers are the authority.** Every data-path request against a
+//!    partition the broker does not currently serve as primary is refused
+//!    with `WrongShard { epoch }` — never silently served, never panicked.
+//!    A quorum-committed append is still acked even if the partition froze
+//!    while the acks were in flight (the data is on the replicas; the
+//!    hand-off waits for exactly those acks).
+//! 3. **Stale clients converge.** On `WrongShard` (or `ShardEpoch`) the
+//!    client refreshes its snapshot and retries. Because the coordinator
+//!    always publishes the new table after a hand-off, the retry loop
+//!    terminates; retries are therefore *unbounded* (counted, backed off)
+//!    rather than budgeted like genuine rejections.
+//! 4. **Hand-off is drain → checkpoint cursors → reassign → resume.**
+//!    Freeze stops the old primary and drains its in-flight replication;
+//!    push sources checkpoint their cursors through `PushUnsubscribe`
+//!    (the same `SourceSnapshot` cursor primitive checkpointing uses);
+//!    promote turns the standing replica into the new primary; publishing
+//!    the table resumes routing. Replica logs apply appends at
+//!    **primary-assigned offsets**, so the new primary's log is
+//!    byte-identical to the old one's and cursors carry over unchanged —
+//!    zero loss, zero duplication.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::config::CostModel;
+use crate::net::{NodeId, SharedNetwork};
+use crate::proto::{Msg, PartitionId, RpcKind, RpcReply, RpcRequest};
+use crate::sim::{Actor, ActorId, Ctx, Time};
+
+// ---------------------------------------------------------------------------
+// The assignment table
+// ---------------------------------------------------------------------------
+
+/// The versioned partition → replica-set assignment table.
+///
+/// `replicas[p][0]` is partition `p`'s primary; the rest of the row are
+/// its standing replicas. See the module docs for the epoch contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTable {
+    /// Monotone version; bumped by every reassignment.
+    pub epoch: u64,
+    /// Broker count the table spans.
+    brokers: usize,
+    /// Replica-set size (`replication_factor`).
+    replication: usize,
+    /// Per-partition replica sets, primary first.
+    replicas: Vec<Vec<usize>>,
+}
+
+impl ShardTable {
+    /// Build the initial table: contiguous ranges of `partitions /
+    /// brokers` partitions, the range→broker mapping rotated by the seed,
+    /// replica `j` of a partition on `(primary + j) % brokers`. Pure —
+    /// every node building with the same inputs gets the same table.
+    pub fn build(partitions: usize, brokers: usize, replication: usize, seed: u64) -> Self {
+        assert!(brokers > 0 && partitions > 0, "shard table needs brokers and partitions");
+        assert!(
+            partitions % brokers == 0,
+            "Ns={partitions} must divide across broker_count={brokers}"
+        );
+        assert!(
+            (1..=brokers).contains(&replication),
+            "replication_factor={replication} must be in 1..=broker_count={brokers}"
+        );
+        let span = partitions / brokers;
+        let offset = (seed % brokers as u64) as usize;
+        let replicas = (0..partitions)
+            .map(|p| {
+                let primary = (p / span + offset) % brokers;
+                (0..replication).map(|j| (primary + j) % brokers).collect()
+            })
+            .collect();
+        ShardTable { epoch: 0, brokers, replication, replicas }
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn brokers(&self) -> usize {
+        self.brokers
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// The broker currently serving `p` as primary.
+    pub fn primary(&self, p: PartitionId) -> usize {
+        self.replicas[p.0][0]
+    }
+
+    /// `p`'s full replica set, primary first.
+    pub fn replica_set(&self, p: PartitionId) -> &[usize] {
+        &self.replicas[p.0]
+    }
+
+    /// Does broker `b` hold a replica (primary or standing) of `p`?
+    pub fn hosts(&self, p: PartitionId, b: usize) -> bool {
+        self.replicas[p.0].contains(&b)
+    }
+
+    /// Acks (including the primary's own append) that commit a write:
+    /// a majority of the replica set.
+    pub fn quorum(&self) -> usize {
+        self.replication / 2 + 1
+    }
+
+    /// The partitions broker `b` currently serves as primary, ascending.
+    pub fn primaries_of(&self, b: usize) -> Vec<PartitionId> {
+        (0..self.replicas.len())
+            .map(PartitionId)
+            .filter(|&p| self.primary(p) == b)
+            .collect()
+    }
+
+    /// The rebalanced table the coordinator hands off to: every replica
+    /// set rotated left, so each partition's standing first replica
+    /// becomes its primary. Requires `replication_factor >= 2` (with one
+    /// replica there is nothing to promote).
+    pub fn rotated(&self) -> ShardTable {
+        assert!(self.replication >= 2, "rotation promotes the standing replica");
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|set| {
+                let mut s = set.clone();
+                s.rotate_left(1);
+                s
+            })
+            .collect();
+        ShardTable {
+            epoch: self.epoch + 1,
+            brokers: self.brokers,
+            replication: self.replication,
+            replicas,
+        }
+    }
+
+    /// Grow the fleet by one broker with minimal movement: the new broker
+    /// takes `ceil(P / (N+1))` partitions, stolen one at a time from
+    /// whichever broker is most loaded; everything else stays put. The
+    /// stability property the tests pin: adding a broker never moves more
+    /// than `ceil(P / N_new)` primaries.
+    pub fn grown(&self) -> ShardTable {
+        let new_brokers = self.brokers + 1;
+        let p_total = self.replicas.len();
+        let target = p_total.div_ceil(new_brokers);
+        let mut primaries: Vec<usize> = (0..p_total).map(|p| self.replicas[p][0]).collect();
+        let mut load = vec![0usize; new_brokers];
+        for &b in &primaries {
+            load[b] += 1;
+        }
+        for _ in 0..target {
+            let donor = (0..self.brokers).max_by_key(|&b| load[b]).expect("brokers > 0");
+            if load[donor] == 0 {
+                break;
+            }
+            let victim = (0..p_total)
+                .rev()
+                .find(|&p| primaries[p] == donor)
+                .expect("donor has load");
+            primaries[victim] = self.brokers;
+            load[donor] -= 1;
+            load[self.brokers] += 1;
+        }
+        let replicas = primaries
+            .iter()
+            .map(|&primary| (0..self.replication).map(|j| (primary + j) % new_brokers).collect())
+            .collect();
+        ShardTable {
+            epoch: self.epoch + 1,
+            brokers: new_brokers,
+            replication: self.replication,
+            replicas,
+        }
+    }
+
+    /// How many partitions changed primary between two tables.
+    pub fn moved_primaries(&self, other: &ShardTable) -> usize {
+        assert_eq!(self.replicas.len(), other.replicas.len(), "comparable tables");
+        (0..self.replicas.len())
+            .filter(|&p| self.replicas[p][0] != other.replicas[p][0])
+            .count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared state + client cache
+// ---------------------------------------------------------------------------
+
+/// The published shard view: the current table plus the broker roster.
+/// Written only by the [`ShardCoordinator`] (after a complete hand-off);
+/// read by every [`ShardClient`] refresh.
+#[derive(Debug)]
+pub struct ShardState {
+    pub table: ShardTable,
+    /// Broker actors by table index.
+    pub brokers: Vec<(ActorId, NodeId)>,
+}
+
+/// Shared handle (same idiom as the plasma store blackboard).
+pub type SharedShard = Rc<RefCell<ShardState>>;
+
+impl ShardState {
+    pub fn shared(table: ShardTable) -> SharedShard {
+        Rc::new(RefCell::new(ShardState { table, brokers: Vec::new() }))
+    }
+}
+
+/// A client's cached routing view (producers and sources hold one each).
+/// Routing never touches the shared state; [`ShardClient::refresh`]
+/// re-snapshots after a staleness signal.
+#[derive(Debug, Clone)]
+pub struct ShardClient {
+    shard: SharedShard,
+    table: ShardTable,
+    brokers: Vec<(ActorId, NodeId)>,
+}
+
+impl ShardClient {
+    pub fn new(shard: &SharedShard) -> Self {
+        let s = shard.borrow();
+        ShardClient { shard: shard.clone(), table: s.table.clone(), brokers: s.brokers.clone() }
+    }
+
+    /// The cached assignment epoch.
+    pub fn epoch(&self) -> u64 {
+        self.table.epoch
+    }
+
+    /// Resolve `p`'s primary broker under the cached table.
+    pub fn broker_for(&self, p: PartitionId) -> (ActorId, NodeId) {
+        self.brokers[self.table.primary(p)]
+    }
+
+    /// The cached table (for grouping partitions by destination).
+    pub fn table(&self) -> &ShardTable {
+        &self.table
+    }
+
+    /// Re-snapshot the published view; `true` if the epoch advanced.
+    pub fn refresh(&mut self) -> bool {
+        let s = self.shard.borrow();
+        let advanced = s.table.epoch > self.table.epoch;
+        if advanced {
+            self.table = s.table.clone();
+            self.brokers = s.brokers.clone();
+        }
+        advanced
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Broker-side view
+// ---------------------------------------------------------------------------
+
+/// What a shard broker knows about its place in the table: its index, the
+/// partitions it currently serves as primary (freeze removes, promote
+/// adds), and each partition's replica peers for quorum fan-out.
+#[derive(Debug)]
+pub struct BrokerShard {
+    /// This broker's index in the table.
+    pub index: usize,
+    /// The assignment epoch this broker last heard (freeze/promote carry
+    /// it forward; `WrongShard` replies report it).
+    pub epoch: u64,
+    /// Partitions currently served as primary.
+    pub primaries: HashSet<PartitionId>,
+    /// The build-time table (replica-set membership is stable across
+    /// rotations, so peers stay valid across hand-offs).
+    pub table: ShardTable,
+    /// Broker roster by table index (includes self at `index`).
+    pub peers: Vec<(ActorId, NodeId)>,
+}
+
+impl BrokerShard {
+    pub fn new(index: usize, table: ShardTable, peers: Vec<(ActorId, NodeId)>) -> Self {
+        let primaries = table.primaries_of(index).into_iter().collect();
+        BrokerShard { index, epoch: table.epoch, primaries, table, peers }
+    }
+
+    /// Is this broker the current primary for `p`?
+    pub fn is_primary(&self, p: PartitionId) -> bool {
+        self.primaries.contains(&p)
+    }
+
+    /// The non-self replica peers of `p`, for replication fan-out.
+    pub fn replica_peers(&self, p: PartitionId) -> Vec<(ActorId, NodeId)> {
+        self.table
+            .replica_set(p)
+            .iter()
+            .filter(|&&b| b != self.index)
+            .map(|&b| self.peers[b])
+            .collect()
+    }
+
+    /// Peer acks needed before a write commits (the primary's own append
+    /// is the first quorum vote).
+    pub fn needed_peer_acks(&self) -> usize {
+        self.table.quorum() - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator actor
+// ---------------------------------------------------------------------------
+
+/// Static coordinator wiring.
+#[derive(Debug, Clone)]
+pub struct ShardCoordinatorParams {
+    /// Node the coordinator runs on (the colocated worker node).
+    pub node: NodeId,
+    /// Force one live rebalance (table rotation) at this virtual time;
+    /// 0 = own the table but never move it.
+    pub rebalance_at: Time,
+    /// Source actors to notify when a new table publishes.
+    pub sources: Vec<ActorId>,
+    pub cost: CostModel,
+}
+
+/// End-of-run rebalance accounting (exported as gauges by the launcher).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Completed hand-offs.
+    pub rebalances: u64,
+    /// Primaries moved across all hand-offs.
+    pub partitions_moved: u64,
+    /// Freeze-trigger → table-publish span of the last hand-off (ns).
+    pub handoff_ns: u64,
+}
+
+/// The hand-off state machine: freeze the losing primaries, wait for
+/// their drains, promote the gaining replicas, publish.
+enum Handoff {
+    Idle,
+    Freezing { table: ShardTable, acks: usize, expect: usize, started: Time },
+    Promoting { table: ShardTable, acks: usize, expect: usize, started: Time },
+}
+
+/// The actor that owns the assignment table's lifecycle: it publishes the
+/// initial table (built by the launcher), and on `rebalance_at` drives
+/// the live hand-off protocol — drain (freeze) → reassign (promote) →
+/// resume (publish + notify sources). Producers need no notification:
+/// their next `WrongShard` retry refreshes against the published table.
+pub struct ShardCoordinator {
+    params: ShardCoordinatorParams,
+    shard: SharedShard,
+    net: SharedNetwork,
+    handoff: Handoff,
+    next_rpc: u64,
+    stats: ShardStats,
+}
+
+impl ShardCoordinator {
+    pub fn new(params: ShardCoordinatorParams, shard: SharedShard, net: SharedNetwork) -> Self {
+        Self { params, shard, net, handoff: Handoff::Idle, next_rpc: 0, stats: ShardStats::default() }
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        self.stats.clone()
+    }
+
+    fn rpc(&mut self, to: (ActorId, NodeId), kind: RpcKind, ctx: &mut Ctx<'_, Msg>) {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to.1);
+        ctx.send_at(
+            deliver,
+            to.0,
+            Msg::rpc(RpcRequest {
+                id,
+                reply_to: ctx.self_id(),
+                from_node: self.params.node,
+                kind,
+            }),
+        );
+    }
+
+    /// Start the hand-off: compute the rotated table and freeze every
+    /// broker that loses a primary under it.
+    fn begin_rebalance(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let (old, brokers) = {
+            let s = self.shard.borrow();
+            (s.table.clone(), s.brokers.clone())
+        };
+        let table = old.rotated();
+        self.stats.partitions_moved += old.moved_primaries(&table) as u64;
+        let mut expect = 0;
+        for (b, &peer) in brokers.iter().enumerate() {
+            let lost: Vec<PartitionId> = old
+                .primaries_of(b)
+                .into_iter()
+                .filter(|&p| table.primary(p) != b)
+                .collect();
+            if !lost.is_empty() {
+                self.rpc(peer, RpcKind::ShardFreeze { epoch: table.epoch, partitions: lost }, ctx);
+                expect += 1;
+            }
+        }
+        if expect == 0 {
+            self.publish(table, ctx);
+        } else {
+            self.handoff = Handoff::Freezing { table, acks: 0, expect, started: ctx.now() };
+        }
+    }
+
+    /// All drains complete: promote every broker that gains a primary.
+    fn begin_promote(&mut self, table: ShardTable, started: Time, ctx: &mut Ctx<'_, Msg>) {
+        let (old, brokers) = {
+            let s = self.shard.borrow();
+            (s.table.clone(), s.brokers.clone())
+        };
+        let mut expect = 0;
+        for (b, &peer) in brokers.iter().enumerate() {
+            let gained: Vec<PartitionId> = table
+                .primaries_of(b)
+                .into_iter()
+                .filter(|&p| old.primary(p) != b)
+                .collect();
+            if !gained.is_empty() {
+                self.rpc(
+                    peer,
+                    RpcKind::ShardPromote { epoch: table.epoch, partitions: gained },
+                    ctx,
+                );
+                expect += 1;
+            }
+        }
+        assert!(expect > 0, "a hand-off that froze primaries must promote them somewhere");
+        self.handoff = Handoff::Promoting { table, acks: 0, expect, started };
+    }
+
+    /// Resume: publish the new table and nudge the sources (producers
+    /// converge through WrongShard retries on their own).
+    fn publish(&mut self, table: ShardTable, ctx: &mut Ctx<'_, Msg>) {
+        let epoch = table.epoch;
+        self.shard.borrow_mut().table = table;
+        for &s in &self.params.sources {
+            ctx.send_in(self.params.cost.notify_ns, s, Msg::ShardEpoch { epoch });
+        }
+        self.stats.rebalances += 1;
+        self.handoff = Handoff::Idle;
+    }
+
+    fn on_reply(&mut self, reply: RpcReply, ctx: &mut Ctx<'_, Msg>) {
+        match reply {
+            RpcReply::FreezeAck { .. } => {
+                let done = match &mut self.handoff {
+                    Handoff::Freezing { acks, expect, .. } => {
+                        *acks += 1;
+                        *acks == *expect
+                    }
+                    _ => panic!("shard coordinator: freeze ack outside a freeze phase"),
+                };
+                if !done {
+                    return;
+                }
+                let Handoff::Freezing { table, started, .. } =
+                    std::mem::replace(&mut self.handoff, Handoff::Idle)
+                else {
+                    unreachable!()
+                };
+                self.begin_promote(table, started, ctx);
+            }
+            RpcReply::PromoteAck { .. } => {
+                let done = match &mut self.handoff {
+                    Handoff::Promoting { acks, expect, .. } => {
+                        *acks += 1;
+                        *acks == *expect
+                    }
+                    _ => panic!("shard coordinator: promote ack outside a promote phase"),
+                };
+                if !done {
+                    return;
+                }
+                let Handoff::Promoting { table, started, .. } =
+                    std::mem::replace(&mut self.handoff, Handoff::Idle)
+                else {
+                    unreachable!()
+                };
+                self.stats.handoff_ns = ctx.now() - started;
+                self.publish(table, ctx);
+            }
+            RpcReply::Error { reason } => {
+                panic!("shard coordinator: broker refused a hand-off step: {reason}")
+            }
+            other => panic!("shard coordinator: unexpected reply {other:?}"),
+        }
+    }
+}
+
+impl Actor<Msg> for ShardCoordinator {
+    fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.params.rebalance_at > 0 {
+            ctx.send_self_in(self.params.rebalance_at, Msg::Timer(0));
+        }
+    }
+
+    fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Timer(_) => {
+                assert!(
+                    matches!(self.handoff, Handoff::Idle),
+                    "rebalance trigger while a hand-off is in flight"
+                );
+                self.begin_rebalance(ctx);
+            }
+            Msg::Reply(env) => self.on_reply(env.reply, ctx),
+            other => panic!("shard coordinator: unexpected {other:?}"),
+        }
+    }
+
+    fn label(&self) -> String {
+        "shard-coordinator".into()
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table property tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::proptest::forall;
+
+    #[test]
+    fn build_is_deterministic_in_its_inputs() {
+        forall(200, |rng| {
+            let brokers = rng.range(1, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(1, brokers as u64) as usize;
+            let seed = rng.next_u64();
+            let a = ShardTable::build(partitions, brokers, replication, seed);
+            let b = ShardTable::build(partitions, brokers, replication, seed);
+            assert_eq!(a, b, "same inputs, same table");
+        });
+    }
+
+    #[test]
+    fn every_partition_has_a_distinct_full_replica_set() {
+        forall(200, |rng| {
+            let brokers = rng.range(1, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(1, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            for p in (0..partitions).map(PartitionId) {
+                let set = t.replica_set(p);
+                assert_eq!(set.len(), replication);
+                let distinct: HashSet<_> = set.iter().collect();
+                assert_eq!(distinct.len(), replication, "replicas land on distinct brokers");
+                assert!(t.hosts(p, t.primary(p)));
+            }
+        });
+    }
+
+    #[test]
+    fn ranges_balance_exactly() {
+        forall(200, |rng| {
+            let brokers = rng.range(1, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let t = ShardTable::build(partitions, brokers, 1, rng.next_u64());
+            for b in 0..brokers {
+                assert_eq!(t.primaries_of(b).len(), partitions / brokers);
+            }
+        });
+    }
+
+    #[test]
+    fn growing_the_fleet_moves_at_most_a_fair_share() {
+        forall(300, |rng| {
+            let brokers = rng.range(1, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(1, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            let g = t.grown();
+            assert_eq!(g.brokers(), brokers + 1);
+            assert_eq!(g.epoch, t.epoch + 1);
+            let moved = t.moved_primaries(&g);
+            let bound = partitions.div_ceil(brokers + 1);
+            assert!(
+                moved <= bound,
+                "grow moved {moved} primaries, bound ceil({partitions}/{}) = {bound}",
+                brokers + 1
+            );
+            // Everything that moved landed on the new broker.
+            assert_eq!(g.primaries_of(brokers).len(), moved);
+        });
+    }
+
+    #[test]
+    fn rotation_promotes_the_standing_replica_everywhere() {
+        forall(200, |rng| {
+            let brokers = rng.range(2, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(2, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            let r = t.rotated();
+            assert_eq!(r.epoch, t.epoch + 1);
+            for p in (0..partitions).map(PartitionId) {
+                assert_eq!(r.primary(p), t.replica_set(p)[1], "first replica promoted");
+                let old: HashSet<_> = t.replica_set(p).iter().collect();
+                let new: HashSet<_> = r.replica_set(p).iter().collect();
+                assert_eq!(old, new, "rotation keeps replica-set membership");
+            }
+        });
+    }
+
+    #[test]
+    fn quorum_is_a_majority() {
+        assert_eq!(ShardTable::build(4, 2, 1, 0).quorum(), 1);
+        assert_eq!(ShardTable::build(4, 2, 2, 0).quorum(), 2);
+        assert_eq!(ShardTable::build(6, 3, 3, 0).quorum(), 2);
+        assert_eq!(ShardTable::build(8, 4, 4, 0).quorum(), 3);
+    }
+
+    #[test]
+    fn client_cache_refreshes_only_on_epoch_advance() {
+        let table = ShardTable::build(4, 2, 2, 7);
+        let shard = ShardState::shared(table.clone());
+        shard.borrow_mut().brokers =
+            vec![(ActorId(10), 0), (ActorId(11), 0)];
+        let mut client = ShardClient::new(&shard);
+        assert_eq!(client.epoch(), 0);
+        assert!(!client.refresh(), "no publish, no change");
+        let rotated = table.rotated();
+        shard.borrow_mut().table = rotated.clone();
+        assert_eq!(client.epoch(), 0, "cache is stale until refreshed");
+        assert!(client.refresh());
+        assert_eq!(client.epoch(), 1);
+        assert_eq!(
+            client.broker_for(PartitionId(0)).0,
+            shard.borrow().brokers[rotated.primary(PartitionId(0))].0
+        );
+    }
+}

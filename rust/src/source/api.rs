@@ -248,6 +248,11 @@ pub struct SourceWiring<'a> {
     /// hand it to their sources so barrier snapshots and restores work
     /// identically across modes.
     pub checkpoint: Option<SharedCheckpoint>,
+    /// The published shard view when `broker_count > 1`: sources route
+    /// per-partition through a cached [`crate::shard::ShardClient`]
+    /// instead of the single `broker` above, refresh on the coordinator's
+    /// `ShardEpoch` notification, and retry `WrongShard` refusals.
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 impl SourceWiring<'_> {

@@ -45,6 +45,7 @@ use crate::proto::{
     Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
     RpcReply, RpcRequest, StampedChunk, SubId,
 };
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 use crate::worker::{CreditLedger, SharedRegistry};
 
@@ -111,6 +112,11 @@ pub struct HybridParams {
     /// Checkpoint blackboard (`None` = checkpointing disabled).
     pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
+    /// The published shard view when `broker_count > 1`: the span's home
+    /// broker is re-resolved per RPC, `WrongShard` refusals are retried,
+    /// and a rebalance that moves the span away from a live subscription
+    /// forces the push→pull fallback.
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 /// Where the control loop currently is. The push consumption machinery
@@ -183,6 +189,13 @@ pub struct HybridSource {
     /// was never learned): their objects are freed, never consumed —
     /// consuming one would jump the cursors past unreplayed data.
     stale_sub_floor: usize,
+    /// Cached shard view (`None` = single broker, route to `params`).
+    shard: Option<ShardClient>,
+    /// The broker the current (or last) push subscription was issued at:
+    /// unsubscribes and object frees are pinned here even after a
+    /// rebalance re-homes the span — the old primary still owns the
+    /// subscription's fill pump and pool slots.
+    push_home: (ActorId, NodeId),
     replayed: u64,
     trim_gap_chunks: u64,
     pulls_issued: u64,
@@ -210,6 +223,8 @@ impl HybridSource {
         assert!(params.tuning.window_polls > 0);
         let offsets = params.assignments.clone();
         let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        let shard = params.shard.as_ref().map(ShardClient::new);
+        let push_home = (params.broker, params.broker_node);
         Self {
             params,
             offsets,
@@ -235,6 +250,8 @@ impl HybridSource {
             orphan_unsub_acks: 0,
             orphaned: Vec::new(),
             stale_sub_floor: 0,
+            shard,
+            push_home,
             replayed: 0,
             trim_gap_chunks: 0,
             pulls_issued: 0,
@@ -250,16 +267,13 @@ impl HybridSource {
         }
     }
 
-    fn rpc(&mut self, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) -> u64 {
+    fn rpc_to(&mut self, to: ActorId, to_node: NodeId, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) -> u64 {
         let id = self.next_rpc;
         self.next_rpc += 1;
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
@@ -268,6 +282,17 @@ impl HybridSource {
             }),
         );
         id
+    }
+
+    /// The primary broker for this source's span. A hybrid source's
+    /// contiguous span always lives on exactly one primary (see the
+    /// divisibility invariants in [`crate::shard`]), so one destination
+    /// covers every partition.
+    fn home(&self) -> (ActorId, NodeId) {
+        match &self.shard {
+            Some(client) => client.broker_for(self.offsets[0].0),
+            None => (self.params.broker, self.params.broker_node),
+        }
     }
 
     // -------------------------------------------------------------- pull --
@@ -281,7 +306,8 @@ impl HybridSource {
             assignments: self.offsets.clone(),
             max_bytes: self.params.max_bytes,
         };
-        self.rpc(kind, ctx);
+        let (to, to_node) = self.home();
+        self.rpc_to(to, to_node, kind, ctx);
         self.phase = Phase::PullFetching;
     }
 
@@ -412,17 +438,27 @@ impl HybridSource {
 
     // -------------------------------------------------------------- push --
 
-    /// The single subscription RPC, issued at the pull loop's current
-    /// offsets (pending is empty and no pull is in flight here).
-    fn begin_subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        debug_assert!(self.pending.is_empty());
+    /// The subscription RPC itself, aimed at the span's current home
+    /// broker (re-resolved here so a `WrongShard` retry lands at the new
+    /// primary). `push_home` pins that destination for the rest of the
+    /// subscription's life.
+    fn send_subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
         let spec = PushSourceSpec {
             source_actor: ctx.self_id(),
             assignments: self.offsets.clone(),
             objects: self.params.objects,
             object_bytes: self.params.max_bytes,
         };
-        self.rpc(RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
+        let (to, to_node) = self.home();
+        self.push_home = (to, to_node);
+        self.rpc_to(to, to_node, RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
+    }
+
+    /// The single subscription RPC, issued at the pull loop's current
+    /// offsets (pending is empty and no pull is in flight here).
+    fn begin_subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        debug_assert!(self.pending.is_empty());
+        self.send_subscribe(ctx);
         self.switches_to_push += 1;
         self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, true, ctx.now());
         self.last_switch = ctx.now();
@@ -439,7 +475,8 @@ impl HybridSource {
             self.orphan_subs -= 1;
             self.orphaned.push(sub);
             self.stale_sub_floor = self.stale_sub_floor.max(sub.0 + 1);
-            self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
+            let (to, to_node) = self.push_home;
+            self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
             return;
         }
         assert!(
@@ -455,6 +492,34 @@ impl HybridSource {
             Msg::Timer(TAG_IDLE_BASE + self.idle_gen),
         );
         self.maybe_checkpoint(ctx);
+        // The grant may have raced a rebalance (subscribe accepted just
+        // before the freeze, epoch published before the ack landed): check
+        // the span's home immediately rather than waiting to starve.
+        self.maybe_migrate(ctx);
+    }
+
+    /// Forced push→pull fallback when a rebalance moved this span away
+    /// from the broker holding its live subscription. The old primary
+    /// still answers the unsubscribe for its frozen partitions, its
+    /// resume cursors cover every sealed fill (residual objects drain
+    /// through `ready`/`consuming` as usual), and the next pull
+    /// re-resolves to the new primary — the same no-loss/no-duplication
+    /// path as a starvation fallback, minus the cooldown (a frozen
+    /// primary never delivers again, so waiting it out is pure stall).
+    fn maybe_migrate(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let sub = match &self.phase {
+            Phase::Push { sub } => *sub,
+            _ => return,
+        };
+        if self.home() == self.push_home {
+            return;
+        }
+        let (to, to_node) = self.push_home;
+        self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
+        self.switches_to_pull += 1;
+        self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, ctx.now());
+        self.last_switch = ctx.now();
+        self.phase = Phase::Unsubscribing;
     }
 
     /// Start the consume thread on the next sealed object, if free. Runs in
@@ -537,7 +602,8 @@ impl HybridSource {
             && self.pending.is_empty();
         let starved = drained && now.saturating_sub(self.last_delivery) >= t.idle_timeout_ns;
         if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
-            self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
+            let (to, to_node) = self.push_home;
+            self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
             self.switches_to_pull += 1;
             self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, now);
             self.last_switch = now;
@@ -629,7 +695,9 @@ impl HybridSource {
     /// no sweep coming, so those are freed now.
     fn discard_stale(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
         if !self.store.borrow().subscription(id.sub).active {
-            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+            // `push_home`, not the wiring default: the broker that granted
+            // the subscription owns its pool slots and fill pump.
+            ctx.send_in(self.params.cost.notify_ns, self.push_home.0, Msg::ObjectFreed { id });
         }
     }
 
@@ -655,7 +723,8 @@ impl HybridSource {
                 // any late object notifications are recognised through
                 // `orphaned`.
                 self.orphaned.push(sub);
-                self.rpc(RpcKind::PushUnsubscribe { sub }, ctx);
+                let (to, to_node) = self.push_home;
+                self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
             }
             Phase::Subscribing => self.orphan_subs += 1,
             // A normal-fallback unsubscribe is in flight; its ack cannot
@@ -735,9 +804,10 @@ impl HybridSource {
     }
 
     fn after_drain(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        // Step 4: the drained object's buffer returns to the broker pool.
+        // Step 4: the drained object's buffer returns to the pool of the
+        // broker that filled it (its fill pump wakes on the free).
         if let Some(id) = self.pending_free.take() {
-            ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+            ctx.send_in(self.params.cost.notify_ns, self.push_home.0, Msg::ObjectFreed { id });
         }
         self.maybe_checkpoint(ctx);
         self.try_consume(ctx);
@@ -803,6 +873,13 @@ impl Actor<Msg> for HybridSource {
                 // (sealed until the recovery sweep) also pauses the
                 // broker's fill pump via pool exhaustion.
                 Msg::ObjectReady { id } => self.discard_stale(id, ctx),
+                // Keep the shard view fresh so the restore's first pull
+                // goes to the right primary.
+                Msg::ShardEpoch { .. } => {
+                    if let Some(client) = self.shard.as_mut() {
+                        client.refresh();
+                    }
+                }
                 _ => {}
             }
             return;
@@ -817,6 +894,40 @@ impl Actor<Msg> for HybridSource {
                     RpcReply::SubscribeAck { sub } => self.on_subscribed(sub, ctx),
                     RpcReply::UnsubscribeAck { sub, cursors } => {
                         self.on_unsubscribed(sub, cursors, ctx)
+                    }
+                    RpcReply::WrongShard { .. } => {
+                        if let Some(client) = self.shard.as_mut() {
+                            client.refresh();
+                        }
+                        if id < self.rpc_floor {
+                            // A restored-over subscribe refused by a frozen
+                            // primary: no subscription was ever granted, so
+                            // the orphaned handshake resolves here (a dead
+                            // pull's refusal needs nothing at all — at most
+                            // one RPC was in flight when the restore hit).
+                            self.orphan_subs = self.orphan_subs.saturating_sub(1);
+                            return;
+                        }
+                        match self.phase {
+                            Phase::PullFetching => {
+                                // Cursors untouched: retry after the poll
+                                // backoff, exactly like an empty poll.
+                                self.maybe_checkpoint(ctx);
+                                self.phase = Phase::PullIdle;
+                                ctx.send_self_in(
+                                    self.params.pull_timeout,
+                                    Msg::Timer(TAG_POLL),
+                                );
+                            }
+                            // The subscribe raced a rebalance: re-issue at
+                            // the span's new home.
+                            Phase::Subscribing => self.send_subscribe(ctx),
+                            // Unsubscribes are never shard-gated.
+                            _ => panic!(
+                                "hybrid source {}: WrongShard outside a routed phase",
+                                self.params.task_idx
+                            ),
+                        }
                     }
                     RpcReply::Error { reason } => {
                         panic!("hybrid source {}: {reason}", self.params.task_idx)
@@ -872,6 +983,12 @@ impl Actor<Msg> for HybridSource {
             Msg::BarrierInject { epoch } => {
                 self.pending_epoch = Some(epoch);
                 self.maybe_checkpoint(ctx);
+            }
+            Msg::ShardEpoch { .. } => {
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+                self.maybe_migrate(ctx);
             }
             Msg::Fault { .. } => self.on_fault(ctx),
             Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
@@ -964,6 +1081,7 @@ impl SourceFactory for HybridSourceFactory {
                         tuning: HybridTuning::from_config(c),
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
+                        shard: w.shard.clone(),
                     },
                     w.metrics.clone(),
                     w.net.clone(),

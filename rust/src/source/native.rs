@@ -15,6 +15,7 @@ use crate::net::{NodeId, SharedNetwork};
 use crate::proto::{
     ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest, StampedChunk,
 };
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 
 use super::api::{SourceActor, SourceFactory, SourceStats, SourceWiring, StatKey, StreamSource};
@@ -39,6 +40,8 @@ pub struct NativeParams {
     /// Checkpoint blackboard (`None` = checkpointing disabled).
     pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
+    /// The published shard view when `broker_count > 1`.
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 // Not derived: `ComputeEngine` holds a PJRT client with no Debug impl.
@@ -82,11 +85,14 @@ pub struct NativeConsumer {
     trim_gap_chunks: u64,
     metrics: SharedMetrics,
     net: SharedNetwork,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
 }
 
 impl NativeConsumer {
     pub fn new(params: NativeParams, metrics: SharedMetrics, net: SharedNetwork) -> Self {
         let offsets = params.assignments.clone();
+        let shard = params.shard.as_ref().map(ShardClient::new);
         Self {
             params,
             offsets,
@@ -104,6 +110,7 @@ impl NativeConsumer {
             trim_gap_chunks: 0,
             metrics,
             net,
+            shard,
         }
     }
 
@@ -113,13 +120,15 @@ impl NativeConsumer {
         self.next_rpc += 1;
         self.pulls_issued += 1;
         self.metrics.borrow_mut().record(Class::PullRpcs, self.params.entity, ctx.now(), 1);
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        // The broker serving this consumer's span (re-resolved per pull).
+        let (to, to_node) = match &self.shard {
+            Some(client) => client.broker_for(self.offsets[0].0),
+            None => (self.params.broker, self.params.broker_node),
+        };
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
@@ -149,6 +158,16 @@ impl NativeConsumer {
         }
         let (chunks, trims) = match env.reply {
             RpcReply::PullData { chunks, trims } => (chunks, trims),
+            RpcReply::WrongShard { .. } => {
+                // The span moved mid-flight: refresh and re-poll after the
+                // timeout; the next pull re-resolves the primary.
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+                self.maybe_checkpoint(ctx);
+                ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
+                return;
+            }
             RpcReply::Error { reason } => panic!("native consumer: {reason}"),
             other => panic!("native consumer: unexpected reply {other:?}"),
         };
@@ -289,6 +308,11 @@ impl Actor<Msg> for NativeConsumer {
                     self.maybe_checkpoint(ctx);
                 }
             }
+            Msg::ShardEpoch { .. } => {
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+            }
             Msg::Fault { .. } => self.on_fault(ctx),
             Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
             other => panic!("native consumer: unexpected {other:?}"),
@@ -370,6 +394,7 @@ impl SourceFactory for NativeSourceFactory {
                         }),
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
+                        shard: w.shard.clone(),
                     },
                     w.metrics.clone(),
                     w.net.clone(),

@@ -16,6 +16,7 @@ use crate::proto::{
     Batch, ChunkOffset, Msg, PartitionId, RpcEnvelope, RpcKind, RpcReply, RpcRequest,
     StampedChunk,
 };
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine, Time};
 use std::collections::VecDeque;
 
@@ -45,6 +46,10 @@ pub struct PullParams {
     /// Checkpoint blackboard (`None` = checkpointing disabled).
     pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
+    /// The published shard view when `broker_count > 1` (a consumer's
+    /// contiguous span always lives on one primary, so each pull has a
+    /// single destination).
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 enum State {
@@ -89,6 +94,8 @@ pub struct PullSource {
     metrics: SharedMetrics,
     net: SharedNetwork,
     registry: SharedRegistry,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
 }
 
 impl PullSource {
@@ -102,6 +109,7 @@ impl PullSource {
         assert!(!params.downstream.is_empty());
         let offsets = params.assignments.clone();
         let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
+        let shard = params.shard.as_ref().map(ShardClient::new);
         Self {
             params,
             offsets,
@@ -123,6 +131,16 @@ impl PullSource {
             metrics,
             net,
             registry,
+            shard,
+        }
+    }
+
+    /// The broker serving this source's span (re-resolved per pull, so a
+    /// refreshed table re-routes the next fetch).
+    fn home(&self) -> (ActorId, NodeId) {
+        match &self.shard {
+            Some(client) => client.broker_for(self.offsets[0].0),
+            None => (self.params.broker, self.params.broker_node),
         }
     }
 
@@ -132,14 +150,12 @@ impl PullSource {
         self.next_rpc += 1;
         self.pulls_issued += 1;
         self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
+        let (to, to_node) = self.home();
         // The request itself is a control message (tiny payload).
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.broker,
+            to,
             Msg::rpc(RpcRequest {
                 id,
                 reply_to: ctx.self_id(),
@@ -178,6 +194,18 @@ impl PullSource {
         }
         let (chunks, trims) = match env.reply {
             RpcReply::PullData { chunks, trims } => (chunks, trims),
+            RpcReply::WrongShard { .. } => {
+                // The span moved mid-flight: refresh the cached table and
+                // re-poll after the timeout — the next pull re-resolves the
+                // primary. Cursors are untouched, so nothing is lost.
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+                self.maybe_checkpoint(ctx);
+                self.state = State::Idle;
+                ctx.send_self_in(self.params.pull_timeout, Msg::Timer(self.inc));
+                return;
+            }
             RpcReply::Error { reason } => {
                 panic!("pull source {}: {reason}", self.params.task_idx)
             }
@@ -377,6 +405,13 @@ impl Actor<Msg> for PullSource {
                     self.maybe_checkpoint(ctx);
                 }
             }
+            Msg::ShardEpoch { .. } => {
+                // Coordinator published a new table: refresh eagerly so the
+                // next pull routes to the new primary without a refusal.
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+            }
             Msg::Fault { .. } => self.on_fault(ctx),
             Msg::Restore { inc, .. } => self.on_restore(inc, ctx),
             other => panic!("pull source {}: unexpected {other:?}", self.params.task_idx),
@@ -448,6 +483,7 @@ impl SourceFactory for PullSourceFactory {
                         queue_cap: c.queue_cap,
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
+                        shard: w.shard.clone(),
                     },
                     w.metrics.clone(),
                     w.net.clone(),

@@ -21,6 +21,7 @@ use crate::proto::{
     Batch, ChunkOffset, Msg, ObjectId, PartitionId, PushSourceSpec, RpcEnvelope, RpcKind,
     RpcReply, RpcRequest, SubId,
 };
+use crate::shard::ShardClient;
 use crate::sim::{Actor, ActorId, Ctx, Engine};
 use crate::worker::{CreditLedger, SharedRegistry};
 
@@ -61,6 +62,11 @@ pub struct PushGroupParams {
     /// Checkpoint blackboard (`None` = checkpointing disabled).
     pub checkpoint: Option<SharedCheckpoint>,
     pub cost: CostModel,
+    /// The published shard view when `broker_count > 1`: members subscribe
+    /// at their span's primary, and a rebalance migrates each moved member
+    /// (drain → unsubscribe old primary → resubscribe at the consumed
+    /// floor on the new one).
+    pub shard: Option<crate::shard::SharedShard>,
 }
 
 /// Per-member consume state: each member's slot thread materialises tuples
@@ -93,13 +99,18 @@ pub struct PushSourceGroup {
     params: PushGroupParams,
     ledger: CreditLedger,
     members: Vec<MemberState>,
-    /// SubId -> member index, resolved from the subscribe ack (the broker
-    /// assigns consecutive sub ids in spec order).
+    /// SubId -> member index, filled from subscribe acks (the broker
+    /// assigns consecutive sub ids in spec order per request).
     sub_to_member: HashMap<SubId, usize>,
-    base_sub: Option<SubId>,
+    /// Each member's granted subscription and the broker holding it.
+    member_sub: Vec<Option<(SubId, ActorId, NodeId)>>,
+    /// Outstanding subscribe RPCs: rpc id -> (broker, members covered).
+    pending_subs: HashMap<u64, (ActorId, NodeId, Vec<usize>)>,
+    /// Members draining towards a hand-off unsubscribe (rebalance).
+    migrating: Vec<bool>,
+    next_rpc: u64,
     /// Notifications that raced ahead of the subscribe ack.
     early: Vec<ObjectId>,
-    subscribed: bool,
     /// Barrier waiting for every member to reach its quiesce point.
     pending_epoch: Option<u64>,
     /// Recovery incarnation; stale-tagged messages are dropped.
@@ -127,6 +138,8 @@ pub struct PushSourceGroup {
     net: SharedNetwork,
     store: crate::plasma::SharedStore,
     registry: SharedRegistry,
+    /// Cached shard routing when `broker_count > 1`.
+    shard: Option<ShardClient>,
 }
 
 impl PushSourceGroup {
@@ -140,19 +153,23 @@ impl PushSourceGroup {
         assert!(!params.members.is_empty());
         assert!(!params.downstream.is_empty());
         let ledger = CreditLedger::new(&params.downstream, params.queue_cap);
-        let members = params
+        let members: Vec<MemberState> = params
             .members
             .iter()
             .map(|m| MemberState { consumed: m.assignments.clone(), ..Default::default() })
             .collect();
+        let n = members.len();
+        let shard = params.shard.as_ref().map(ShardClient::new);
         Self {
             params,
             ledger,
             members,
             sub_to_member: HashMap::new(),
-            base_sub: None,
+            member_sub: vec![None; n],
+            pending_subs: HashMap::new(),
+            migrating: vec![false; n],
+            next_rpc: 0,
             early: Vec::new(),
-            subscribed: false,
             pending_epoch: None,
             inc: 0,
             failed: false,
@@ -167,58 +184,77 @@ impl PushSourceGroup {
             net,
             store,
             registry,
+            shard,
         }
     }
 
-    fn rpc(&mut self, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) {
-        let deliver =
-            self.net
-                .borrow_mut()
-                .send_control(ctx.now(), self.params.node, self.params.broker_node);
+    /// True once every member holds a granted subscription.
+    fn all_subscribed(&self) -> bool {
+        self.pending_subs.is_empty() && self.member_sub.iter().all(Option::is_some)
+    }
+
+    /// The broker serving a member's span (the single `broker` when
+    /// unsharded; re-resolved from the cached table when sharded).
+    fn member_home(&self, m: usize) -> (ActorId, NodeId) {
+        match &self.shard {
+            Some(client) => client.broker_for(self.members[m].consumed[0].0),
+            None => (self.params.broker, self.params.broker_node),
+        }
+    }
+
+    fn rpc_to(&mut self, to: ActorId, to_node: NodeId, kind: RpcKind, ctx: &mut Ctx<'_, Msg>) -> u64 {
+        let id = self.next_rpc;
+        self.next_rpc += 1;
+        let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to_node);
         ctx.send_at(
             deliver,
-            self.params.broker,
-            Msg::rpc(RpcRequest {
-                id: 0,
-                reply_to: ctx.self_id(),
-                from_node: self.params.node,
-                kind,
-            }),
+            to,
+            Msg::rpc(RpcRequest { id, reply_to: ctx.self_id(), from_node: self.params.node, kind }),
         );
+        id
     }
 
-    /// Step 1: the single subscription RPC, issued by the leader on behalf
-    /// of every member — at the members' current consumed cursors, so the
-    /// same call serves both the initial subscribe and the post-restore
-    /// resubscribe.
-    fn subscribe(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        let sources = self
-            .params
-            .members
-            .iter()
-            .zip(self.members.iter())
-            .map(|(m, state)| PushSourceSpec {
-                source_actor: ctx.self_id(),
-                assignments: state.consumed.clone(),
-                objects: m.objects,
-                object_bytes: m.object_bytes,
-            })
-            .collect();
-        self.rpc(RpcKind::PushSubscribe { sources }, ctx);
+    /// Step 1: the subscription RPCs, issued by the leader on behalf of
+    /// the given members — at their current consumed cursors, so the same
+    /// call serves the initial subscribe, the post-restore resubscribe and
+    /// the per-member rebalance hand-off. One RPC per destination broker
+    /// (a single RPC for the whole group when unsharded).
+    fn subscribe_members(&mut self, ms: &[usize], ctx: &mut Ctx<'_, Msg>) {
+        // Group by home broker, preserving member order within a group.
+        let mut groups: Vec<(ActorId, NodeId, Vec<usize>)> = Vec::new();
+        for &m in ms {
+            let (home, home_node) = self.member_home(m);
+            match groups.iter_mut().find(|(h, _, _)| *h == home) {
+                Some((_, _, list)) => list.push(m),
+                None => groups.push((home, home_node, vec![m])),
+            }
+        }
+        for (home, home_node, list) in groups {
+            let sources: Vec<PushSourceSpec> = list
+                .iter()
+                .map(|&m| PushSourceSpec {
+                    source_actor: ctx.self_id(),
+                    assignments: self.members[m].consumed.clone(),
+                    objects: self.params.members[m].objects,
+                    object_bytes: self.params.members[m].object_bytes,
+                })
+                .collect();
+            let rpc = self.rpc_to(home, home_node, RpcKind::PushSubscribe { sources }, ctx);
+            self.pending_subs.insert(rpc, (home, home_node, list));
+        }
     }
 
-    fn member_of(&mut self, id: ObjectId) -> usize {
-        let base = self.base_sub.expect("subscribed before notifications").0;
-        let idx = id.sub.0 - base;
-        debug_assert!(idx < self.members.len(), "sub {:?} not ours", id.sub);
-        self.sub_to_member.entry(id.sub).or_insert(idx);
-        idx
-    }
-
-    /// Return an object's buffer to the broker without consuming it (stale
-    /// notifications of torn-down subscriptions).
+    /// Return an object's buffer to the broker. Routed to the broker that
+    /// granted the subscription — it owns the sub's pool slots and its
+    /// fill pump wakes on the free. Dead subs fall back to the wiring
+    /// default: the release itself is node-global and nothing refills.
     fn free_object(&mut self, id: ObjectId, ctx: &mut Ctx<'_, Msg>) {
-        ctx.send_in(self.params.cost.notify_ns, self.params.broker, Msg::ObjectFreed { id });
+        let to = self
+            .sub_to_member
+            .get(&id.sub)
+            .and_then(|&m| self.member_sub[m])
+            .map_or(self.params.broker, |(_, home, _)| home);
+        ctx.send_in(self.params.cost.notify_ns, to, Msg::ObjectFreed { id });
     }
 
     /// Discard a fill a dead/torn-down consumer cannot use. For a still
@@ -254,11 +290,23 @@ impl PushSourceGroup {
             self.discard_stale(id, ctx);
             return;
         }
-        if !self.subscribed {
-            self.early.push(id);
+        let Some(&m) = self.sub_to_member.get(&id.sub) else {
+            // Our fill, but the granting ack is still in flight — or a
+            // straggler of an already-unsubscribed hand-off sub, whose
+            // sweep reclaims the slot.
+            if self.store.borrow().subscription(id.sub).active {
+                self.early.push(id);
+            } else {
+                self.discard_stale(id, ctx);
+            }
+            return;
+        };
+        if self.migrating[m] {
+            // Mid-hand-off: the new primary re-pushes everything past the
+            // consumed floor, so this fill stays sealed for the
+            // unsubscribe sweep (freeing it would ping-pong a refill).
             return;
         }
-        let m = self.member_of(id);
         self.members[m].ready.push_back(id);
         self.try_consume(m, ctx);
     }
@@ -267,6 +315,9 @@ impl PushSourceGroup {
     fn try_consume(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
         if self.pending_epoch.is_some() {
             return; // a barrier is waiting for the group to quiesce
+        }
+        if self.migrating[m] {
+            return; // draining towards the hand-off unsubscribe
         }
         let state = &mut self.members[m];
         if state.consuming.is_some()
@@ -373,7 +424,48 @@ impl PushSourceGroup {
             self.free_object(id, ctx);
         }
         self.maybe_checkpoint(ctx);
+        self.maybe_unsubscribe(m, ctx);
         self.try_consume(m, ctx);
+    }
+
+    // -------------------------------------------------------- rebalance --
+
+    /// The coordinator published a new assignment table: refresh the
+    /// cached view and hand off every member whose primary moved — drain
+    /// in-flight work, unsubscribe at the old primary, resubscribe at the
+    /// consumed floor on the new one (the new primary re-pushes everything
+    /// past it, so nothing is lost and nothing repeats).
+    fn on_shard_epoch(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let Some(client) = self.shard.as_mut() else { return };
+        client.refresh();
+        if self.recovering || self.failed {
+            return; // the recovery resubscribe re-resolves homes itself
+        }
+        for m in 0..self.members.len() {
+            let Some((_, home, _)) = self.member_sub[m] else { continue };
+            if self.migrating[m] || self.member_home(m).0 == home {
+                continue;
+            }
+            self.migrating[m] = true;
+            // Unconsumed fills stay sealed for the unsubscribe sweep; the
+            // new subscription re-pushes them from the consumed floor.
+            self.members[m].ready.clear();
+            self.maybe_unsubscribe(m, ctx);
+        }
+    }
+
+    /// Issue the hand-off unsubscribe once the migrating member drained
+    /// (nothing consuming, nothing pending, nothing held for free).
+    fn maybe_unsubscribe(&mut self, m: usize, ctx: &mut Ctx<'_, Msg>) {
+        if !self.migrating[m] {
+            return;
+        }
+        let s = &self.members[m];
+        if s.consuming.is_some() || !s.pending.is_empty() || s.pending_free.is_some() {
+            return;
+        }
+        let Some((sub, home, home_node)) = self.member_sub[m].take() else { return };
+        self.rpc_to(home, home_node, RpcKind::PushUnsubscribe { sub }, ctx);
     }
 
     // ------------------------------------------------------- checkpoint --
@@ -430,13 +522,14 @@ impl PushSourceGroup {
     /// down every member's subscription, sweep its objects, then
     /// resubscribe at the snapshot cursors and replay.
     fn begin_restore(&mut self, inc: u64, ctx: &mut Ctx<'_, Msg>) {
-        let Some(base) = self.base_sub else {
-            // The initial subscribe is still in flight: finish the
-            // handshake first (the ack completes it), then restore.
+        if !self.all_subscribed() {
+            // A subscribe (initial, or a hand-off's) is still in flight:
+            // finish the handshake first (the ack completes it), then
+            // restore.
             self.deferred_restore = Some(inc);
             self.failed = false;
             return;
-        };
+        }
         self.inc = inc;
         self.failed = false;
         self.recovering = true;
@@ -489,48 +582,73 @@ impl PushSourceGroup {
         }
         let rolled_back: u64 = self.members.iter().map(|s| s.records_consumed).sum();
         self.replayed += consumed_total.saturating_sub(rolled_back);
-        // Tear down the old subscriptions; the acks gate the resubscribe.
-        self.subscribed = false;
+        // Tear down the old subscriptions (each at the broker holding it);
+        // the acks gate the resubscribe. In-flight hand-offs fold in: the
+        // recovery resubscribe re-resolves every member's home anyway.
         self.sub_to_member.clear();
+        self.migrating.iter_mut().for_each(|f| *f = false);
         self.unsubs_pending = self.members.len();
-        for k in 0..self.members.len() {
-            self.rpc(RpcKind::PushUnsubscribe { sub: SubId(base.0 + k) }, ctx);
+        for m in 0..self.members.len() {
+            let (sub, home, home_node) =
+                self.member_sub[m].take().expect("restore starts fully subscribed");
+            self.rpc_to(home, home_node, RpcKind::PushUnsubscribe { sub }, ctx);
         }
     }
 
     fn on_unsubscribed(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
-        assert!(self.recovering, "push group only unsubscribes during recovery");
-        // Sweep: a crashed incarnation lost its ObjectReady notifications,
-        // so still-sealed slots would otherwise never return to the pool.
+        // Sweep: slots sealed after the drain (or lost by a crashed
+        // incarnation) would otherwise never return to the pool.
         self.store.borrow_mut().release_sealed(sub);
-        self.unsubs_pending -= 1;
-        if self.unsubs_pending == 0 {
-            // Resubscribe at the restored cursors. Sub ids granted from
-            // here on are the new incarnation's: their fills are replay
-            // data, never freed.
-            self.resub_floor = self.store.borrow().next_sub_id();
-            self.subscribe(ctx);
+        if self.recovering {
+            self.unsubs_pending -= 1;
+            if self.unsubs_pending == 0 {
+                // Resubscribe at the restored cursors. Sub ids granted from
+                // here on are the new incarnation's: their fills are replay
+                // data, never freed.
+                self.resub_floor = self.store.borrow().next_sub_id();
+                let all: Vec<usize> = (0..self.members.len()).collect();
+                self.subscribe_members(&all, ctx);
+            }
+            return;
         }
+        // A hand-off unsubscribe: resubscribe the member at its consumed
+        // floor on the new primary.
+        let m = self.sub_to_member.remove(&sub).expect("hand-off of a mapped member");
+        debug_assert!(self.migrating[m], "only migrating members unsubscribe live");
+        self.subscribe_members(&[m], ctx);
     }
 
-    fn on_subscribe_ack(&mut self, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
-        self.base_sub = Some(sub);
-        self.subscribed = true;
-        self.stale_floor = sub.0;
-        let was_recovering = std::mem::take(&mut self.recovering);
-        if was_recovering {
-            self.resub_floor = usize::MAX;
-            let cp = self.params.checkpoint.as_ref().expect("recovering implies checkpointing");
-            super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
+    fn on_subscribe_ack(&mut self, rpc: u64, sub: SubId, ctx: &mut Ctx<'_, Msg>) {
+        let (home, home_node, list) =
+            self.pending_subs.remove(&rpc).expect("ack matches a pending subscribe");
+        for (k, &m) in list.iter().enumerate() {
+            let granted = SubId(sub.0 + k);
+            self.sub_to_member.insert(granted, m);
+            self.member_sub[m] = Some((granted, home, home_node));
+            self.migrating[m] = false;
+        }
+        if self.all_subscribed() {
+            let was_recovering = std::mem::take(&mut self.recovering);
+            if was_recovering {
+                self.stale_floor = self.resub_floor;
+                self.resub_floor = usize::MAX;
+                let cp =
+                    self.params.checkpoint.as_ref().expect("recovering implies checkpointing");
+                super::api::ack_restore(cp, self.params.cost.notify_ns, ctx);
+            }
         }
         // Deliver fills that raced ahead of this ack (including replay
         // fills queued during the recovery resubscribe).
-        let early = std::mem::take(&mut self.early);
-        for id in early {
-            self.on_ready(id, ctx);
+        if !self.recovering {
+            let early = std::mem::take(&mut self.early);
+            for id in early {
+                self.on_ready(id, ctx);
+            }
         }
-        if let Some(inc) = self.deferred_restore.take() {
-            self.begin_restore(inc, ctx);
+        if self.all_subscribed() {
+            if let Some(inc) = self.deferred_restore.take() {
+                self.begin_restore(inc, ctx);
+            }
         }
     }
 
@@ -550,7 +668,7 @@ impl PushSourceGroup {
     }
 
     pub fn is_subscribed(&self) -> bool {
-        self.subscribed
+        self.all_subscribed()
     }
 
     pub fn records_replayed(&self) -> u64 {
@@ -560,7 +678,8 @@ impl PushSourceGroup {
 
 impl Actor<Msg> for PushSourceGroup {
     fn on_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
-        self.subscribe(ctx);
+        let all: Vec<usize> = (0..self.members.len()).collect();
+        self.subscribe_members(&all, ctx);
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
@@ -577,10 +696,23 @@ impl Actor<Msg> for PushSourceGroup {
         }
         match msg {
             Msg::Reply(env) => {
-                let RpcEnvelope { reply, .. } = *env;
+                let RpcEnvelope { id, reply } = *env;
                 match reply {
-                    RpcReply::SubscribeAck { sub } => self.on_subscribe_ack(sub, ctx),
+                    RpcReply::SubscribeAck { sub } => self.on_subscribe_ack(id, sub, ctx),
                     RpcReply::UnsubscribeAck { sub, .. } => self.on_unsubscribed(sub, ctx),
+                    RpcReply::WrongShard { .. } => {
+                        // The subscribe raced a rebalance: refresh and
+                        // re-issue for the members it covered (homes are
+                        // re-resolved against the fresh table).
+                        if let Some(client) = self.shard.as_mut() {
+                            client.refresh();
+                        }
+                        let (_, _, list) = self
+                            .pending_subs
+                            .remove(&id)
+                            .expect("refusal matches a pending subscribe");
+                        self.subscribe_members(&list, ctx);
+                    }
                     RpcReply::Error { reason } => panic!(
                         "push group {}: subscribe failed: {reason}",
                         self.params.leader_task_idx
@@ -588,6 +720,7 @@ impl Actor<Msg> for PushSourceGroup {
                     other => panic!("push group: unexpected reply {other:?}"),
                 }
             }
+            Msg::ShardEpoch { .. } => self.on_shard_epoch(ctx),
             // Step 3: the broker sealed an object for one of our members.
             Msg::ObjectReady { id } => self.on_ready(id, ctx),
             Msg::JobDone(tag) => {
@@ -631,7 +764,7 @@ impl StreamSource for PushSourceGroup {
     fn stats(&self) -> SourceStats {
         let mut extras = super::api::StatExtras::new();
         extras.insert(StatKey::ObjectsConsumed, self.objects_consumed());
-        extras.insert(StatKey::Subscribed, self.subscribed as u64);
+        extras.insert(StatKey::Subscribed, self.all_subscribed() as u64);
         if self.replayed > 0 {
             extras.insert(StatKey::RecordsReplayed, self.replayed);
         }
@@ -688,6 +821,7 @@ impl SourceFactory for PushSourceFactory {
                 queue_cap: c.queue_cap,
                 checkpoint: w.checkpoint.clone(),
                 cost: c.cost.clone(),
+                shard: w.shard.clone(),
             },
             w.metrics.clone(),
             w.net.clone(),

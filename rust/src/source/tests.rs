@@ -75,6 +75,7 @@ fn rig_opts(
                 retry: crate::producer::RetryPolicy::default(),
                 cost: CostModel::default(),
                 data_plane: crate::config::DataPlane::Sim,
+                shard: None,
             },
             RecordGen::Sim,
             metrics.clone(),
@@ -114,6 +115,7 @@ fn rig_opts(
                 queue_cap: 8,
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),
@@ -135,6 +137,7 @@ fn rig_opts(
                 queue_cap: 8,
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),
@@ -154,6 +157,7 @@ fn rig_opts(
                 compute: None,
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),
@@ -179,6 +183,7 @@ fn rig_opts(
                 }),
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),
@@ -492,6 +497,7 @@ fn trim_rig(mode: &str, tuning: Option<HybridTuning>) -> Rig {
                 queue_cap: 8,
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),
@@ -512,6 +518,7 @@ fn trim_rig(mode: &str, tuning: Option<HybridTuning>) -> Rig {
                 tuning: tuning.expect("hybrid needs tuning"),
                 checkpoint: None,
                 cost: CostModel::default(),
+                shard: None,
             },
             metrics.clone(),
             net.clone(),

@@ -38,7 +38,9 @@ use crate::transport::frame::{
 };
 
 /// Protocol version carried in HELLO. Bumped on any codec change.
-pub const WIRE_VERSION: u32 = 1;
+/// v2 added the shard vocabulary (ShardReplicate/Freeze/Promote,
+/// WrongShard/FreezeAck/PromoteAck).
+pub const WIRE_VERSION: u32 = 2;
 
 /// Everything that can travel on a real-plane connection.
 #[derive(Debug, Clone)]
@@ -88,6 +90,9 @@ const K_WRITE_SUBSCRIBE: u8 = 4;
 const K_COMMIT_CHECKPOINT: u8 = 5;
 const K_SEAL_OBJECT: u8 = 6;
 const K_REPLICATE: u8 = 7;
+const K_SHARD_REPLICATE: u8 = 8;
+const K_SHARD_FREEZE: u8 = 9;
+const K_SHARD_PROMOTE: u8 = 10;
 
 // RpcReply tags.
 const R_APPEND_ACK: u8 = 0;
@@ -99,6 +104,9 @@ const R_SEAL_ACK: u8 = 5;
 const R_REPLICATE_ACK: u8 = 6;
 const R_COMMIT_ACK: u8 = 7;
 const R_ERROR: u8 = 8;
+const R_WRONG_SHARD: u8 = 9;
+const R_FREEZE_ACK: u8 = 10;
+const R_PROMOTE_ACK: u8 = 11;
 
 // Payload tags.
 const P_SIM: u8 = 0;
@@ -308,7 +316,45 @@ fn encode_kind(out: &mut Vec<u8>, kind: &RpcKind) {
             put_u64(out, *bytes);
             put_u32(out, *chunks);
         }
+        RpcKind::ShardReplicate { chunks } => {
+            put_u8(out, K_SHARD_REPLICATE);
+            put_u32(out, chunks.len() as u32);
+            for sc in chunks {
+                put_u64(out, sc.partition.0 as u64);
+                put_u64(out, sc.offset);
+                encode_chunk(out, &sc.chunk);
+            }
+        }
+        RpcKind::ShardFreeze { epoch, partitions } => {
+            put_u8(out, K_SHARD_FREEZE);
+            put_u64(out, *epoch);
+            encode_partitions(out, partitions);
+        }
+        RpcKind::ShardPromote { epoch, partitions } => {
+            put_u8(out, K_SHARD_PROMOTE);
+            put_u64(out, *epoch);
+            encode_partitions(out, partitions);
+        }
     }
+}
+
+fn encode_partitions(out: &mut Vec<u8>, partitions: &[PartitionId]) {
+    put_u32(out, partitions.len() as u32);
+    for p in partitions {
+        put_u64(out, p.0 as u64);
+    }
+}
+
+fn decode_partitions(
+    r: &mut FrameReader<'_>,
+    what: &'static str,
+) -> Result<Vec<PartitionId>, FrameError> {
+    let n = r.u32(what)? as usize;
+    let mut v = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        v.push(PartitionId(r.u64(what)? as usize));
+    }
+    Ok(v)
 }
 
 fn decode_kind(r: &mut FrameReader<'_>) -> Result<RpcKind, FrameError> {
@@ -371,6 +417,24 @@ fn decode_kind(r: &mut FrameReader<'_>) -> Result<RpcKind, FrameError> {
             bytes: r.u64("replicate.bytes")?,
             chunks: r.u32("replicate.chunks")?,
         }),
+        K_SHARD_REPLICATE => {
+            let n = r.u32("shard_replicate.chunks")? as usize;
+            let mut chunks = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let partition = PartitionId(r.u64("shard_replicate.partition")? as usize);
+                let offset = r.u64("shard_replicate.offset")?;
+                chunks.push(StampedChunk { partition, offset, chunk: decode_chunk(r)? });
+            }
+            Ok(RpcKind::ShardReplicate { chunks })
+        }
+        K_SHARD_FREEZE => Ok(RpcKind::ShardFreeze {
+            epoch: r.u64("shard_freeze.epoch")?,
+            partitions: decode_partitions(r, "shard_freeze.partitions")?,
+        }),
+        K_SHARD_PROMOTE => Ok(RpcKind::ShardPromote {
+            epoch: r.u64("shard_promote.epoch")?,
+            partitions: decode_partitions(r, "shard_promote.partitions")?,
+        }),
         t => Err(FrameError::UnknownTag { what: "kind", tag: t }),
     }
 }
@@ -419,6 +483,18 @@ fn encode_reply(out: &mut Vec<u8>, reply: &RpcReply) {
             put_u8(out, R_ERROR);
             put_len_bytes(out, reason.as_bytes());
         }
+        RpcReply::WrongShard { epoch } => {
+            put_u8(out, R_WRONG_SHARD);
+            put_u64(out, *epoch);
+        }
+        RpcReply::FreezeAck { epoch } => {
+            put_u8(out, R_FREEZE_ACK);
+            put_u64(out, *epoch);
+        }
+        RpcReply::PromoteAck { epoch } => {
+            put_u8(out, R_PROMOTE_ACK);
+            put_u64(out, *epoch);
+        }
     }
 }
 
@@ -459,6 +535,9 @@ fn decode_reply(r: &mut FrameReader<'_>) -> Result<RpcReply, FrameError> {
             let reason = String::from_utf8_lossy(r.len_bytes("error.reason")?).into_owned();
             Ok(RpcReply::Error { reason })
         }
+        R_WRONG_SHARD => Ok(RpcReply::WrongShard { epoch: r.u64("wrong_shard.epoch")? }),
+        R_FREEZE_ACK => Ok(RpcReply::FreezeAck { epoch: r.u64("freeze_ack.epoch")? }),
+        R_PROMOTE_ACK => Ok(RpcReply::PromoteAck { epoch: r.u64("promote_ack.epoch")? }),
         t => Err(FrameError::UnknownTag { what: "reply", tag: t }),
     }
 }
@@ -477,6 +556,9 @@ pub fn msg_label(msg: &WireMsg) -> &'static str {
             RpcKind::CommitCheckpoint { .. } => "commit_checkpoint",
             RpcKind::SealObject { .. } => "seal_object",
             RpcKind::Replicate { .. } => "replicate",
+            RpcKind::ShardReplicate { .. } => "shard_replicate",
+            RpcKind::ShardFreeze { .. } => "shard_freeze",
+            RpcKind::ShardPromote { .. } => "shard_promote",
         },
         WireMsg::Rep { reply, .. } => match reply {
             RpcReply::AppendAck { .. } => "append_ack",
@@ -488,6 +570,9 @@ pub fn msg_label(msg: &WireMsg) -> &'static str {
             RpcReply::ReplicateAck => "replicate_ack",
             RpcReply::CommitAck { .. } => "commit_ack",
             RpcReply::Error { .. } => "error",
+            RpcReply::WrongShard { .. } => "wrong_shard",
+            RpcReply::FreezeAck { .. } => "freeze_ack",
+            RpcReply::PromoteAck { .. } => "promote_ack",
         },
         WireMsg::Evt { .. } => "object_ready",
         WireMsg::Shutdown => "shutdown",
@@ -654,6 +739,15 @@ mod tests {
             RpcKind::CommitCheckpoint { epoch: 8, cursors: vec![(PartitionId(2), 20)] },
             RpcKind::SealObject { id: ObjectId { sub: SubId(1), slot: 3 }, produced_at: None },
             RpcKind::Replicate { bytes: 4096, chunks: 4 },
+            RpcKind::ShardReplicate {
+                chunks: vec![StampedChunk {
+                    partition: PartitionId(5),
+                    offset: 17,
+                    chunk: Chunk::sim(8, 64),
+                }],
+            },
+            RpcKind::ShardFreeze { epoch: 2, partitions: vec![PartitionId(0), PartitionId(1)] },
+            RpcKind::ShardPromote { epoch: 2, partitions: vec![PartitionId(0)] },
         ];
         for kind in kinds {
             let label_before = msg_label(&WireMsg::Req {
@@ -678,6 +772,9 @@ mod tests {
             RpcReply::ReplicateAck,
             RpcReply::CommitAck { epoch: 3 },
             RpcReply::Error { reason: "object p0 is not sealed".into() },
+            RpcReply::WrongShard { epoch: 4 },
+            RpcReply::FreezeAck { epoch: 4 },
+            RpcReply::PromoteAck { epoch: 4 },
         ];
         for reply in replies {
             let before = msg_label(&WireMsg::Rep { wire_id: 1, reply: reply.clone() });

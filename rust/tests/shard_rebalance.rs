@@ -1,0 +1,161 @@
+//! Multi-broker golden parity: sharding and live rebalancing must be
+//! invisible in the totals.
+//!
+//! Three invariants guard the scale-out subsystem:
+//!
+//! 1. **Sharding only spreads the log.** On a fixed seed with bounded
+//!    generators, every source mode × write mode cell reports the same
+//!    closed-form totals (`Np × corpus_records`) at `broker_count = 3`
+//!    with per-shard replica sets (`rf = 2`) **and a forced mid-run
+//!    rebalance** as the single-broker run on the same seed — zero loss,
+//!    zero duplication across the hand-off.
+//! 2. **The hand-off actually happens.** The rebalance cells report the
+//!    `shard.*` gauges: one rebalance, a positive primary-move count, a
+//!    bounded hand-off time.
+//! 3. **A laggard reader survives the hand-off.** A pull consumer
+//!    throttled far behind the producers still holds a backlog on the old
+//!    primary when the freeze→promote→publish sequence runs; its next
+//!    pulls are refused with `WrongShard`, it refreshes the table and
+//!    drains the full corpus from the new primary.
+//!
+//! Producers are throttled (`cost.producer_record_ns`) so the corpus is
+//! still being written when the rebalance fires at virtual second 1 —
+//! without it the sim drains the bounded corpus in virtual milliseconds
+//! and the hand-off would freeze an idle partition.
+
+use zettastream::cluster::launch;
+use zettastream::config::{DataPlane, ExperimentConfig, SourceMode, Workload, WriteMode};
+
+const NP: u64 = 2;
+const CORPUS: u64 = 2_000;
+
+/// One sharded cell: bc=3, rf=2, rebalance mid-production. The producer
+/// throttle stretches the 2 000-record corpus over ~2 virtual seconds so
+/// the rebalance at t=1 s lands on live traffic.
+fn sharded_config(mode: SourceMode, write: WriteMode) -> ExperimentConfig {
+    let mut c = ExperimentConfig {
+        name: format!("shard-{}-{}", mode.name(), write.name()),
+        np: NP as usize,
+        nc: 3,
+        nmap: 4,
+        ns: 6,
+        producer_chunk: 4 * 1024,
+        consumer_chunk: 16 * 1024,
+        record_size: 100,
+        broker_cores: 8,
+        mode,
+        write_mode: write,
+        workload: Workload::Count,
+        data_plane: DataPlane::Sim,
+        corpus_records: CORPUS,
+        duration_secs: 12,
+        warmup_secs: 1,
+        seed: 0xC0FFEE,
+        broker_count: 3,
+        replication_factor: 2,
+        rebalance_at_secs: 1,
+        ..Default::default()
+    };
+    c.cost.producer_record_ns = 1_000_000; // 1 ms/record: ~2 s of production
+    c
+}
+
+/// The same cell on one broker: same seed, same generators, same totals.
+fn single_broker_config(mode: SourceMode, write: WriteMode) -> ExperimentConfig {
+    let mut c = sharded_config(mode, write);
+    c.name = format!("shard-base-{}-{}", mode.name(), write.name());
+    c.broker_count = 1;
+    c.replication_factor = 1;
+    c.rebalance_at_secs = 0;
+    c
+}
+
+#[test]
+fn golden_totals_survive_sharding_and_a_live_rebalance() {
+    let expect = NP * CORPUS;
+    for &mode in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let sharded = launch(&sharded_config(mode, write), None).run();
+            assert_eq!(
+                sharded.records_produced,
+                expect,
+                "{}/{} bc3: bounded corpus fully produced",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                sharded.records_consumed,
+                expect,
+                "{}/{} bc3: consumed == produced across the hand-off \
+                 (exactly once, fully drained)",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                sharded.tuples_logged,
+                expect,
+                "{}/{} bc3: every record logged exactly once",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                sharded.report.gauge("shard.rebalances"),
+                Some(1.0),
+                "{}/{}: the forced rebalance ran",
+                mode.name(),
+                write.name()
+            );
+
+            let single = launch(&single_broker_config(mode, write), None).run();
+            assert_eq!(
+                (single.records_produced, single.records_consumed, single.tuples_logged),
+                (sharded.records_produced, sharded.records_consumed, sharded.tuples_logged),
+                "{}/{}: bc=1 and bc=3+rebalance must agree on every total",
+                mode.name(),
+                write.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn rebalance_reports_the_handoff_gauges() {
+    let summary = launch(&sharded_config(SourceMode::Pull, WriteMode::SyncRpc), None).run();
+    assert_eq!(summary.report.gauge("shard.brokers"), Some(3.0));
+    assert_eq!(summary.report.gauge("shard.rebalances"), Some(1.0));
+    assert!(
+        summary.report.gauge("shard.partitions_moved").unwrap_or(0.0) > 0.0,
+        "the rebalance moved at least one primary"
+    );
+    assert!(
+        summary.report.gauge("shard.handoff_ms").is_some(),
+        "hand-off time reported"
+    );
+    // The single-broker topology exports none of this.
+    let single =
+        launch(&single_broker_config(SourceMode::Pull, WriteMode::SyncRpc), None).run();
+    assert!(single.report.gauge("shard.rebalances").is_none());
+}
+
+#[test]
+fn laggard_pull_reader_crosses_the_handoff_without_loss() {
+    // Fast producers, slow consumers: the whole corpus is on the brokers
+    // long before the readers catch up, so the rebalance freezes
+    // partitions the laggards still need history from. Their post-publish
+    // pulls hit WrongShard on the old primary, refresh, and resume on the
+    // promoted backup — the drain must still be exact.
+    let mut c = sharded_config(SourceMode::Pull, WriteMode::SyncRpc);
+    c.name = "shard-laggard-pull".into();
+    c.cost.producer_record_ns = 0; // corpus lands in virtual milliseconds
+    c.cost.engine_record_ns = 1_000_000; // 1 ms/record consume: ~1.3 s behind
+    let summary = launch(&c, None).run();
+    let expect = NP * CORPUS;
+    assert_eq!(summary.records_produced, expect, "bounded corpus fully produced");
+    assert_eq!(
+        summary.records_consumed, expect,
+        "the laggard drained the full corpus across the hand-off"
+    );
+    assert_eq!(summary.tuples_logged, expect);
+    assert_eq!(summary.report.gauge("shard.rebalances"), Some(1.0));
+    assert!(summary.pull_rpcs > 0, "the reader kept pulling after the move");
+}
