@@ -38,11 +38,11 @@ pub use store::{
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::config::{CostModel, StoreMode};
+use crate::config::{CostModel, FaultKind, StoreMode};
 use crate::metrics::{Class, SharedMetrics};
 use crate::net::{NodeId, SharedNetwork};
 use crate::plasma::SharedStore;
-use crate::shard::BrokerShard;
+use crate::shard::{BrokerShard, ShardTable};
 use crate::proto::{
     Chunk, ChunkOffset, Msg, ObjectId, PartitionId, RpcEnvelope, RpcId, RpcKind, RpcReply,
     RpcRequest, StampedChunk, SubId,
@@ -53,6 +53,11 @@ use crate::sim::{Actor, ActorId, CorePool, Ctx, Job, Time};
 const PH_DISPATCH: u64 = 0;
 const PH_WORK: u64 = 1;
 const PH_PUSH: u64 = 2;
+
+/// Idempotence-table entries retained per writer. Writers have at most a
+/// handful of appends in flight, so 64 covers every live rpc id with a wide
+/// margin while keeping the table O(writers), not O(run length).
+const APPLIED_PER_CLIENT: usize = 64;
 
 /// Static broker wiring.
 #[derive(Debug, Clone)]
@@ -129,9 +134,18 @@ pub struct Broker {
     shard: Option<BrokerShard>,
     /// Sharded ingests held for quorum: append ctx id -> quorum state.
     quorum: HashMap<u64, QuorumCtx>,
-    /// Outstanding `ShardReplicate` rpcs -> append ctx id. Empty means
-    /// every accepted write is fully replicated — the freeze drain gate.
-    replicate_rids: HashMap<RpcId, u64>,
+    /// Outstanding `ShardReplicate` rpcs -> (append ctx id, peer broker
+    /// index). Empty means every accepted write is fully replicated — the
+    /// freeze drain gate. The peer index lets a fail-over purge exactly
+    /// the acks a dead peer will never send.
+    replicate_rids: HashMap<RpcId, (u64, usize)>,
+    /// Exactly-once dedup across fail-over: writer-origin (actor, rpc id)
+    /// -> the (records, bytes) totals its append landed with. Recorded at
+    /// the primary when the append lands AND at every replica when the
+    /// `ShardReplicate` applies (the origin rides on the fan-out), so a
+    /// promoted replica re-acks a retransmitted append instead of
+    /// appending it twice. Pruned to [`APPLIED_PER_CLIENT`] per writer.
+    applied: HashMap<ActorId, BTreeMap<RpcId, (u64, u64)>>,
     /// A `ShardFreeze` whose ack waits for `replicate_rids` to drain.
     pending_freeze: Option<(RpcCtx, u64)>,
     /// Replica-side reorder buffers: replicated chunks that arrived ahead
@@ -153,6 +167,10 @@ pub struct Broker {
     /// scanning on each read is pure overhead (perf pass, EXPERIMENTS.md
     /// §Perf).
     trim_tick: u32,
+    /// Killed by the fault injector (`fault_kind=broker`): a dead broker
+    /// silently drops every subsequent event — requests, replicate acks,
+    /// heartbeats, its own job completions. Nothing escapes a corpse.
+    dead: bool,
 }
 
 impl Broker {
@@ -200,6 +218,7 @@ impl Broker {
             shard: None,
             quorum: HashMap::new(),
             replicate_rids: HashMap::new(),
+            applied: HashMap::new(),
             pending_freeze: None,
             reorder: HashMap::new(),
             push_ring: Vec::new(),
@@ -210,6 +229,7 @@ impl Broker {
             entity,
             trimmed_bytes: 0,
             trim_tick: 0,
+            dead: false,
             params,
         }
     }
@@ -278,12 +298,15 @@ impl Broker {
             }
             // A shard replica pays the same append work the primary did —
             // the quorum write really lands on every peer's log.
-            RpcKind::ShardReplicate { chunks } => {
+            RpcKind::ShardReplicate { chunks, .. } => {
                 let bytes: u64 = chunks.iter().map(|s| s.chunk.bytes()).sum();
                 c.rpc_base_ns + chunks.len() as Time * c.append_chunk_ns
                     + (bytes as f64 / c.append_bw_bps * 1e9) as Time
             }
-            RpcKind::ShardFreeze { .. } | RpcKind::ShardPromote { .. } => c.rpc_base_ns,
+            RpcKind::ShardFreeze { .. }
+            | RpcKind::ShardPromote { .. }
+            | RpcKind::ShardFailover { .. }
+            | RpcKind::Heartbeat => c.rpc_base_ns,
         }
     }
 
@@ -331,8 +354,8 @@ impl Broker {
                 self.finish_seal(id, rpc_ctx, object, produced_at, ctx)
             }
             RpcKind::Replicate { .. } => self.finish_replicate(rpc_ctx, ctx),
-            RpcKind::ShardReplicate { chunks } => {
-                self.finish_shard_replicate(rpc_ctx, chunks, ctx)
+            RpcKind::ShardReplicate { chunks, origin } => {
+                self.finish_shard_replicate(rpc_ctx, chunks, origin, ctx)
             }
             RpcKind::ShardFreeze { epoch, partitions } => {
                 self.finish_shard_freeze(rpc_ctx, epoch, &partitions, ctx)
@@ -340,6 +363,10 @@ impl Broker {
             RpcKind::ShardPromote { epoch, partitions } => {
                 self.finish_shard_promote(rpc_ctx, epoch, &partitions, ctx)
             }
+            RpcKind::ShardFailover { epoch, dead, table, gained } => {
+                self.finish_shard_failover(rpc_ctx, epoch, dead, table, &gained, ctx)
+            }
+            RpcKind::Heartbeat => self.finish_heartbeat(rpc_ctx, ctx),
         }
     }
 
@@ -440,6 +467,12 @@ impl Broker {
                 self.metrics
                     .borrow_mut()
                     .record(Class::ProducerBytes, self.entity, ctx.now(), bytes);
+                // Record the landed totals under the writer's (actor, rpc)
+                // origin: a retransmit of this exact request — at this
+                // broker or at the replica a fail-over promotes — re-acks
+                // instead of appending twice.
+                let origin = (rpc_ctx.req.reply_to, rpc_ctx.req.id);
+                self.record_applied(origin.0, origin.1, records, bytes);
                 rpc_ctx.staged = Some(if is_seal {
                     RpcReply::SealAck { records, bytes }
                 } else {
@@ -448,9 +481,16 @@ impl Broker {
                 // Group the fan-out by replica peer. Batches stay within
                 // one primary's range, so in practice every chunk shares
                 // one peer set; the grouping keeps mixed batches correct.
+                // After a fail-over rows are ragged, so the quorum need is
+                // the strictest (largest) of the batch's partitions.
                 let shard = self.shard.as_ref().expect("sharded ingest tail");
-                let need = shard.needed_peer_acks();
-                let mut by_peer: Vec<((ActorId, NodeId), Vec<StampedChunk>)> = Vec::new();
+                let need = stamped
+                    .iter()
+                    .map(|sc| shard.needed_peer_acks(sc.partition))
+                    .max()
+                    .unwrap_or(0);
+                let mut by_peer: Vec<((usize, (ActorId, NodeId)), Vec<StampedChunk>)> =
+                    Vec::new();
                 for sc in stamped {
                     for peer in shard.replica_peers(sc.partition) {
                         match by_peer.iter_mut().find(|(to, _)| *to == peer) {
@@ -459,13 +499,25 @@ impl Broker {
                         }
                     }
                 }
+                if need == 0 {
+                    // One-survivor replica set: the primary alone is the
+                    // whole quorum — ack right away (still replicated as
+                    // well as the shrunk set allows).
+                    debug_assert!(by_peer.is_empty(), "no quorum need but standing peers");
+                    if let Some(object) = held_object {
+                        self.store.borrow_mut().release(object);
+                    }
+                    self.reply(rpc_ctx, ctx);
+                    self.schedule_push(ctx);
+                    return;
+                }
                 self.quorum.insert(id, QuorumCtx { need, held_object });
                 self.ctxs.insert(id, rpc_ctx);
-                for ((peer, peer_node), list) in by_peer {
+                for ((peer_idx, (peer, peer_node)), list) in by_peer {
                     let peer_bytes: u64 = list.iter().map(|s| s.chunk.bytes()).sum();
                     let rid = self.next_client_rpc;
                     self.next_client_rpc += 1;
-                    self.replicate_rids.insert(rid, id);
+                    self.replicate_rids.insert(rid, (id, peer_idx));
                     let deliver = self.net.borrow_mut().send(
                         ctx.now(),
                         self.params.node,
@@ -479,7 +531,10 @@ impl Broker {
                             id: rid,
                             reply_to: ctx.self_id(),
                             from_node: self.params.node,
-                            kind: RpcKind::ShardReplicate { chunks: list },
+                            kind: RpcKind::ShardReplicate {
+                                chunks: list,
+                                origin: Some(origin),
+                            },
                         }),
                     );
                 }
@@ -488,14 +543,42 @@ impl Broker {
         }
     }
 
+    /// Look up a writer-origin (actor, rpc) in the idempotence table.
+    fn applied_lookup(&self, actor: ActorId, rid: RpcId) -> Option<(u64, u64)> {
+        self.applied.get(&actor).and_then(|per| per.get(&rid)).copied()
+    }
+
+    /// Record an applied append's totals under its writer origin, pruning
+    /// the oldest entries past the per-client cap (rpc ids are issued in
+    /// order, so `pop_first` evicts the longest-settled requests — far
+    /// behind anything a writer could still retransmit).
+    fn record_applied(&mut self, actor: ActorId, rid: RpcId, records: u64, bytes: u64) {
+        let per = self.applied.entry(actor).or_default();
+        per.insert(rid, (records, bytes));
+        while per.len() > APPLIED_PER_CLIENT {
+            per.pop_first();
+        }
+    }
+
     /// Replica side of the quorum: apply primary-stamped chunks in offset
     /// order (the reorder buffer absorbs out-of-order arrivals), then ack.
+    /// The writer origin riding along is recorded in the idempotence table
+    /// — sound to do here, before quorum commit, because the primary's
+    /// fan-out is atomic with its own append and the fabric never drops:
+    /// whatever this replica applies, the primary acked or would ack with
+    /// exactly these totals.
     fn finish_shard_replicate(
         &mut self,
         mut rpc_ctx: RpcCtx,
         chunks: Vec<StampedChunk>,
+        origin: Option<(ActorId, RpcId)>,
         ctx: &mut Ctx<'_, Msg>,
     ) {
+        if let Some((actor, rid)) = origin {
+            let records: u64 = chunks.iter().map(|s| s.chunk.records as u64).sum();
+            let bytes: u64 = chunks.iter().map(|s| s.chunk.bytes()).sum();
+            self.record_applied(actor, rid, records, bytes);
+        }
         for sc in chunks {
             debug_assert!(self.logs.contains(sc.partition), "replicas host every partition");
             let head = self.logs.head(sc.partition);
@@ -579,6 +662,78 @@ impl Broker {
         shard.epoch = shard.epoch.max(epoch);
         rpc_ctx.staged = Some(RpcReply::PromoteAck { epoch });
         self.reply(rpc_ctx, ctx);
+        self.schedule_push(ctx);
+    }
+
+    /// Failure-detector probe: a live broker acks with its epoch; a dead
+    /// one never gets here (the `dead` gate drops the event), and that
+    /// silence is the detection signal.
+    fn finish_heartbeat(&mut self, mut rpc_ctx: RpcCtx, ctx: &mut Ctx<'_, Msg>) {
+        let epoch = self.shard.as_ref().map_or(0, |s| s.epoch);
+        rpc_ctx.staged = Some(RpcReply::HeartbeatAck { epoch });
+        self.reply(rpc_ctx, ctx);
+    }
+
+    /// The emergency epoch, survivor side: the coordinator declared `dead`
+    /// dead and rebuilt the table. Unlike the planned hand-off there is no
+    /// freeze/drain phase — by declaration time (a full lease after the
+    /// death, orders of magnitude above any delivery delay) everything the
+    /// corpse ever fanned out has long been applied here. Three steps:
+    /// purge replication held on the corpse (its acks will never come, and
+    /// the shrunk replica sets no longer count it toward quorum), install
+    /// the rebuilt table wholesale, and start serving the gained
+    /// partitions after draining any contiguous reordered replication.
+    fn finish_shard_failover(
+        &mut self,
+        mut rpc_ctx: RpcCtx,
+        epoch: u64,
+        dead: usize,
+        table: ShardTable,
+        gained: &[PartitionId],
+        ctx: &mut Ctx<'_, Msg>,
+    ) {
+        if self.shard.is_none() {
+            rpc_ctx.staged =
+                Some(RpcReply::Error { reason: "fail-over on an unsharded broker".into() });
+            self.reply(rpc_ctx, ctx);
+            return;
+        }
+        // 1. Purge: every replicate rid held on the dead peer releases
+        // exactly like an ack — the new quorum arithmetic excludes it.
+        let dead_rids: Vec<RpcId> = self
+            .replicate_rids
+            .iter()
+            .filter(|&(_, &(_, peer))| peer == dead)
+            .map(|(&rid, _)| rid)
+            .collect();
+        for rid in dead_rids {
+            let (ctx_id, _) = self.replicate_rids.remove(&rid).expect("just listed");
+            self.on_shard_replicate_ack(ctx_id, ctx);
+        }
+        // 2. Install the rebuilt assignment; primaries derive from it.
+        let shard = self.shard.as_mut().expect("checked above");
+        shard.table = table;
+        shard.epoch = shard.epoch.max(epoch);
+        shard.primaries = shard.table.primaries_of(shard.index).into_iter().collect();
+        // 3. Promote the gained partitions on the spot: drain contiguous
+        // reordered replication, then nothing may remain buffered — a gap
+        // would mean the lease was shorter than a delivery delay.
+        for &p in gained {
+            if let Some(buf) = self.reorder.get_mut(&p) {
+                let mut next = self.logs.head(p);
+                while let Some(chunk) = buf.remove(&next) {
+                    self.logs.append(p, chunk);
+                    next += 1;
+                }
+                assert!(
+                    buf.is_empty(),
+                    "promoted {p} with a gap in replicated data (lease too short?)"
+                );
+            }
+        }
+        rpc_ctx.staged = Some(RpcReply::FailoverAck { epoch });
+        self.reply(rpc_ctx, ctx);
+        // Gained primaries may unblock push subscriptions re-homing here.
         self.schedule_push(ctx);
     }
 
@@ -811,6 +966,19 @@ impl Broker {
             return;
         }
         if self.shard_replicates() {
+            // Fail-over retransmit dedup: if this exact seal already landed
+            // (here, or at the dead primary whose replication reached us),
+            // re-ack the recorded totals and free the buffer — appending
+            // again would double the records.
+            if let Some((records, bytes)) =
+                self.applied_lookup(rpc_ctx.req.reply_to, rpc_ctx.req.id)
+            {
+                self.store.borrow_mut().release(object);
+                rpc_ctx.staged = Some(RpcReply::SealAck { records, bytes });
+                self.reply(rpc_ctx, ctx);
+                self.schedule_push(ctx);
+                return;
+            }
             return self
                 .finish_ingest_sharded(id, rpc_ctx, chunks, produced_at, Some(object), true, ctx);
         }
@@ -858,6 +1026,17 @@ impl Broker {
             return;
         }
         if self.shard_replicates() {
+            // Fail-over retransmit dedup: an append that already landed
+            // (at this broker, or at the dead primary whose replication
+            // fan-out reached us before it died) re-acks its recorded
+            // totals instead of landing twice.
+            if let Some((records, bytes)) =
+                self.applied_lookup(rpc_ctx.req.reply_to, rpc_ctx.req.id)
+            {
+                rpc_ctx.staged = Some(RpcReply::AppendAck { records, bytes });
+                self.reply(rpc_ctx, ctx);
+                return;
+            }
             return self.finish_ingest_sharded(id, rpc_ctx, chunks, produced_at, None, false, ctx);
         }
         match self.append_chunks(chunks, produced_at, ctx.now()) {
@@ -1206,6 +1385,18 @@ impl Broker {
 
 impl Actor<Msg> for Broker {
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if self.dead {
+            // A killed broker is a black hole: requests, nested-rpc acks
+            // and its own queued job completions all vanish. Clients see
+            // silence (their deadline path), the coordinator sees missed
+            // heartbeats (its lease path).
+            return;
+        }
+        if let Msg::Fault { kind } = msg {
+            assert_eq!(kind, FaultKind::Broker, "brokers only die of broker faults");
+            self.dead = true;
+            return;
+        }
         match msg {
             Msg::Rpc(req) => self.on_rpc(*req, ctx),
             Msg::JobDone(tag) => {
@@ -1236,7 +1427,7 @@ impl Actor<Msg> for Broker {
             Msg::Reply(env) => {
                 // Two nested-rpc ack streams share this seam: quorum
                 // ShardReplicate acks and the legacy backup pair's.
-                if let Some(ctx_id) = self.replicate_rids.remove(&env.id) {
+                if let Some((ctx_id, _peer)) = self.replicate_rids.remove(&env.id) {
                     match env.reply {
                         RpcReply::ReplicateAck => {}
                         other => panic!(
@@ -1245,6 +1436,11 @@ impl Actor<Msg> for Broker {
                         ),
                     }
                     self.on_shard_replicate_ack(ctx_id, ctx);
+                } else if self.shard.is_some() {
+                    // A replicate ack whose rid a fail-over already purged
+                    // (the peer was declared dead with the ack still in
+                    // flight): the quorum it voted in has been settled by
+                    // the purge — drop it.
                 } else {
                     self.on_backup_ack(env.id, ctx);
                 }

@@ -340,6 +340,12 @@ impl CheckpointCoordinator {
     }
 
     fn commit(&mut self, epoch: u64, cursors: Vec<(PartitionId, ChunkOffset)>, ctx: &mut Ctx<'_, Msg>) {
+        // Fire-and-forget on purpose: a broker that died mid-run drops its
+        // commit silently (no ack, no error), and that is safe — epoch
+        // progression is timer-driven, the survivors (including any
+        // promoted replica, which holds the partition's full log) still
+        // floor their retention, and the only visible effect is a smaller
+        // `commits_acked` count.
         for &(broker, broker_node) in &self.params.brokers.clone() {
             let id = self.next_rpc;
             self.next_rpc += 1;

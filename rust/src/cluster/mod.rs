@@ -34,7 +34,7 @@ use crate::net::{Network, SharedNetwork};
 use crate::ops::{CountOp, FilterOp, KeyedSumOp, Operator, TokenizerOp, WindowedSumOp};
 use crate::pipeline::{OpKind, Pipeline};
 use crate::plasma::{ObjectStore, SharedStore};
-use crate::producer::{WriteStats, WriterActor, WriterRegistry, WriterWiring};
+use crate::producer::{WriteStatKey, WriteStats, WriterActor, WriterRegistry, WriterWiring};
 use crate::net::NodeId;
 use crate::proto::{Msg, PartitionId};
 use crate::shard::{
@@ -261,6 +261,20 @@ pub fn launch_full(
             ShardCoordinatorParams {
                 node: NODE_COLOCATED,
                 rebalance_at: config.rebalance_at_secs * SECOND,
+                // The failure detector arms only when a death is
+                // survivable: rf >= 2 leaves a standing replica to
+                // promote. At rf = 1 a declaration could only strand the
+                // dead primary's partitions, so the probes stay off.
+                heartbeat: if config.replication_factor >= 2 {
+                    config.shard_heartbeat_ms * MILLIS
+                } else {
+                    0
+                },
+                lease: if config.replication_factor >= 2 {
+                    config.shard_lease_ms * MILLIS
+                } else {
+                    0
+                },
                 sources: sources.clone(),
                 cost: config.cost.clone(),
             },
@@ -298,6 +312,11 @@ pub fn launch_full(
             // falls back to a source so every mode stays faultable.
             FaultKind::Worker => tasks.first().copied().unwrap_or(sources[0]),
             FaultKind::Source => sources[0],
+            // Kill the *last* shard broker: broker 0 doubles as the
+            // default wiring home, so the last one exercises the
+            // re-routing paths without also perturbing the defaults.
+            // Validation guarantees broker_count > 1 here.
+            FaultKind::Broker => *brokers.last().expect("validate: broker_count > 1"),
         };
         engine.schedule(
             config.fault_at_secs * SECOND,
@@ -640,6 +659,17 @@ impl Cluster {
                 m.set_gauge("shard.rebalances", ss.rebalances as f64);
                 m.set_gauge("shard.partitions_moved", ss.partitions_moved as f64);
                 m.set_gauge("shard.handoff_ms", ss.handoff_ns as f64 / 1e6);
+                m.set_gauge("shard.failovers", ss.failovers as f64);
+                m.set_gauge("shard.promotions", ss.promotions as f64);
+                m.set_gauge("shard.detection_ms", ss.detection_ns as f64 / 1e6);
+                m.set_gauge(
+                    "write_broker_down_retries",
+                    writer_stats.extra(WriteStatKey::BrokerDownRetries) as f64,
+                );
+                m.set_gauge(
+                    "source_broker_down_retries",
+                    source_stats.extra(StatKey::BrokerDownRetries) as f64,
+                );
             }
             if self.coordinator.is_some() {
                 m.set_gauge("checkpoint.epochs", checkpoints.epochs_completed as f64);

@@ -104,6 +104,12 @@ pub enum FaultKind {
     Worker,
     /// Kill a source reader.
     Source,
+    /// Kill a live shard broker mid-run. Recovery is *not* a checkpoint
+    /// rollback: the shard coordinator's failure detector declares the
+    /// broker dead on a missed lease and promotes each of its partitions'
+    /// standing replicas (see `crate::shard`). Requires `broker_count > 1`
+    /// and `replication_factor >= 2` so every partition survives the loss.
+    Broker,
 }
 
 impl FaultKind {
@@ -111,6 +117,7 @@ impl FaultKind {
         match s.to_ascii_lowercase().as_str() {
             "worker" | "task" => Some(Self::Worker),
             "source" | "reader" => Some(Self::Source),
+            "broker" | "shard" => Some(Self::Broker),
             _ => None,
         }
     }
@@ -119,6 +126,7 @@ impl FaultKind {
         match self {
             Self::Worker => "worker",
             Self::Source => "source",
+            Self::Broker => "broker",
         }
     }
 }
@@ -258,6 +266,10 @@ pub enum ConfigError {
     ConsumersNotDivisible { consumers: usize, brokers: usize },
     /// `replication_factor` outside `1..=broker_count`.
     BadReplicationFactor { factor: usize, brokers: usize },
+    /// `fault_kind=broker` on a topology that cannot survive the loss:
+    /// killing a broker needs `broker_count > 1` (someone left to promote)
+    /// and `replication_factor >= 2` (a standing replica per partition).
+    BrokerFaultNeedsReplicas { brokers: usize, factor: usize },
     /// Any other invariant violation, with the human-readable reason.
     Invalid(String),
 }
@@ -279,6 +291,12 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "replication_factor={factor} must be in 1..=broker_count={brokers} \
                  (a replica set cannot outnumber the brokers)"
+            ),
+            Self::BrokerFaultNeedsReplicas { brokers, factor } => write!(
+                f,
+                "fault_kind=broker needs broker_count>1 and replication_factor>=2 \
+                 (got broker_count={brokers}, replication_factor={factor}): fail-over \
+                 promotes each dead partition's standing replica on a surviving broker"
             ),
             Self::Invalid(reason) => f.write_str(reason),
         }
@@ -324,6 +342,21 @@ pub struct ExperimentConfig {
     /// 0 = never. Needs `replication_factor >= 2` so every partition has
     /// a standing replica to promote.
     pub rebalance_at_secs: u64,
+    /// Failure detector: coordinator → broker heartbeat period (ms). The
+    /// detector only runs when the topology can act on a death
+    /// (`broker_count > 1` and `replication_factor >= 2`).
+    pub shard_heartbeat_ms: u64,
+    /// Failure detector: a broker whose last heartbeat ack is older than
+    /// this lease (ms) is declared dead and failed over. Must be at least
+    /// one heartbeat period; keep it generous — it races only against a
+    /// wedged cluster, never against correctness.
+    pub shard_lease_ms: u64,
+    /// Sharded writers and sources: per-RPC deadline (ms) before a reply
+    /// is presumed lost to a dead broker. The deadline grows exponentially
+    /// (capped) across retransmits of the same request; retransmits keep
+    /// their RPC id so the broker's idempotence table can re-ack
+    /// duplicates (`BrokerDownRetries` counts each one).
+    pub rpc_deadline_ms: u64,
     /// `NBc` — broker working cores.
     pub broker_cores: usize,
     /// `NFs` — processing worker slots.
@@ -438,6 +471,9 @@ impl Default for ExperimentConfig {
             broker_count: 1,
             replication_factor: 1,
             rebalance_at_secs: 0,
+            shard_heartbeat_ms: 100,
+            shard_lease_ms: 500,
+            rpc_deadline_ms: 250,
             broker_cores: 16,
             worker_slots: 16,
             mode: SourceMode::Pull,
@@ -569,6 +605,38 @@ impl ExperimentConfig {
                 )));
             }
         }
+        if self.fault_at_secs > 0
+            && self.fault_kind == FaultKind::Broker
+            && (self.broker_count < 2 || self.replication_factor < 2)
+        {
+            return Err(ConfigError::BrokerFaultNeedsReplicas {
+                brokers: self.broker_count,
+                factor: self.replication_factor,
+            });
+        }
+        if self.broker_count > 1 && self.replication_factor >= 2 {
+            if self.shard_heartbeat_ms == 0 {
+                return Err(ConfigError::Invalid(
+                    "shard_heartbeat_ms must be positive (the failure detector's probe \
+                     period; raise shard_lease_ms instead to slow detection)"
+                        .into(),
+                ));
+            }
+            if self.shard_lease_ms < self.shard_heartbeat_ms {
+                return Err(ConfigError::Invalid(format!(
+                    "shard_lease_ms={} must be >= shard_heartbeat_ms={} (a lease shorter \
+                     than one probe period declares every broker dead)",
+                    self.shard_lease_ms, self.shard_heartbeat_ms
+                )));
+            }
+            if self.rpc_deadline_ms == 0 {
+                return Err(ConfigError::Invalid(
+                    "rpc_deadline_ms must be positive when replica fail-over is armed \
+                     (writers and sources need a deadline to escape a dead broker)"
+                        .into(),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -629,7 +697,12 @@ impl ExperimentConfig {
             return Err("hybrid_idle_ms must be positive".into());
         }
         if self.fault_at_secs > 0 {
-            if self.checkpoint_interval_ms == 0 {
+            // Worker/source faults recover by checkpoint rollback + replay,
+            // so they need a committed floor protecting the log. A broker
+            // fault recovers by replica promotion instead — the quorum
+            // replica already holds every acked byte — so checkpointing
+            // stays optional there.
+            if self.checkpoint_interval_ms == 0 && self.fault_kind != FaultKind::Broker {
                 return Err(
                     "fault injection needs checkpointing (checkpoint_interval_ms > 0): \
                      without a committed floor, retention may trim the replay data"
@@ -738,6 +811,15 @@ impl ExperimentConfig {
             }
             "rebalance_at_secs" | "rebalance_at" => {
                 self.rebalance_at_secs = value.parse().map_err(|_| bad(key, value))?
+            }
+            "shard_heartbeat_ms" | "heartbeat_ms" => {
+                self.shard_heartbeat_ms = value.parse().map_err(|_| bad(key, value))?
+            }
+            "shard_lease_ms" | "lease_ms" => {
+                self.shard_lease_ms = value.parse().map_err(|_| bad(key, value))?
+            }
+            "rpc_deadline_ms" | "deadline_ms" => {
+                self.rpc_deadline_ms = value.parse().map_err(|_| bad(key, value))?
             }
             "broker_cores" | "nbc" => {
                 self.broker_cores = value.parse().map_err(|_| bad(key, value))?

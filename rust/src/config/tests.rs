@@ -233,12 +233,94 @@ mod experiment {
 
     #[test]
     fn fault_kind_names_round_trip() {
-        for kind in [FaultKind::Worker, FaultKind::Source] {
+        for kind in [FaultKind::Worker, FaultKind::Source, FaultKind::Broker] {
             assert_eq!(FaultKind::parse(kind.name()), Some(kind), "{}", kind.name());
         }
         assert_eq!(FaultKind::parse("task"), Some(FaultKind::Worker));
         assert_eq!(FaultKind::parse("reader"), Some(FaultKind::Source));
+        assert_eq!(FaultKind::parse("shard"), Some(FaultKind::Broker));
         assert_eq!(FaultKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn broker_fault_config_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.shard_heartbeat_ms, 100, "detector probes every 100 ms by default");
+        assert_eq!(cfg.shard_lease_ms, 500, "five missed probes declare a broker dead");
+        assert_eq!(cfg.rpc_deadline_ms, 250, "RPC deadline armed by default");
+        let kv = parse_overrides([
+            "broker_count=3",
+            "replication_factor=2",
+            "fault_at_secs=5",
+            "fault_kind=broker",
+            "shard_heartbeat_ms=50",
+            "shard_lease_ms=300",
+            "rpc_deadline_ms=100",
+        ])
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.fault_kind, FaultKind::Broker);
+        assert_eq!(cfg.shard_heartbeat_ms, 50);
+        assert_eq!(cfg.shard_lease_ms, 300);
+        assert_eq!(cfg.rpc_deadline_ms, 100);
+        // A broker fault recovers by replica promotion, not checkpoint
+        // rollback — no checkpoint_interval_ms required.
+        assert_eq!(cfg.checkpoint_interval_ms, 0);
+        cfg.validate().unwrap();
+        // And through the file parser, with the shorthand keys and alias.
+        let kv = parse_kv_file(
+            "broker_count = 2\nreplication_factor = 2\nfault_at = 3\nfault_kind = shard\n\
+             heartbeat_ms = 20\nlease_ms = 80\ndeadline_ms = 40\n",
+        )
+        .unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply(&kv).unwrap();
+        assert_eq!(cfg2.fault_kind, FaultKind::Broker);
+        assert_eq!(cfg2.shard_heartbeat_ms, 20);
+        assert_eq!(cfg2.shard_lease_ms, 80);
+        assert_eq!(cfg2.rpc_deadline_ms, 40);
+        cfg2.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_broker_fault_without_replicas() {
+        // A lone broker has nobody to promote.
+        let mut cfg = ExperimentConfig::default();
+        cfg.fault_at_secs = 5;
+        cfg.fault_kind = FaultKind::Broker;
+        assert_eq!(
+            cfg.validate(),
+            Err(ConfigError::BrokerFaultNeedsReplicas { brokers: 1, factor: 1 })
+        );
+        // Sharded but unreplicated: the dead primary's log dies with it.
+        cfg.broker_count = 3;
+        assert_eq!(
+            cfg.validate(),
+            Err(ConfigError::BrokerFaultNeedsReplicas { brokers: 3, factor: 1 })
+        );
+        cfg.replication_factor = 2;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_detector_params() {
+        // The detector knobs only bind once fail-over is armed
+        // (broker_count > 1 and replication_factor >= 2)…
+        let mut cfg = ExperimentConfig::default();
+        cfg.shard_heartbeat_ms = 0;
+        cfg.shard_lease_ms = 0;
+        cfg.rpc_deadline_ms = 0;
+        cfg.validate().unwrap();
+        // …and then every one of them must hold.
+        cfg.broker_count = 2;
+        cfg.replication_factor = 2;
+        assert!(cfg.validate().is_err(), "zero heartbeat rejected");
+        cfg.shard_heartbeat_ms = 100;
+        assert!(cfg.validate().is_err(), "lease shorter than one probe rejected");
+        cfg.shard_lease_ms = 500;
+        assert!(cfg.validate().is_err(), "zero rpc deadline rejected");
+        cfg.rpc_deadline_ms = 250;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! The chaos harness: scripted broker kills across the whole
+//! source × write design space, with golden-totals parity as the pass
+//! criterion.
+//!
+//! The fail-over subsystem ([`crate::shard`]) promises that a broker
+//! death at `replication_factor >= 2` is invisible in the totals: the
+//! coordinator's heartbeat detector declares the corpse, promotes each
+//! orphaned partition's standing replica in an emergency epoch, and every
+//! writer and source re-routes — bounded retries on the write path,
+//! reissued pulls / re-homed subscriptions on the read path. This harness
+//! *measures* that promise instead of trusting it: every cell runs a
+//! bounded count workload twice on the same seed — once fault-free, once
+//! with a scripted mid-run broker kill — and the two runs must agree on
+//! every total (produced, consumed, logged) and on the closed form
+//! `Np × corpus_records`. Zero loss, zero duplication, or the harness
+//! panics.
+//!
+//! Two kill schedules bracket the interesting timing space:
+//!
+//! * `mid-write` — throttled producers stretch the corpus over ~2 virtual
+//!   seconds; the kill at t=1 s lands while appends (and their quorum
+//!   replication) are in flight, exercising the write-path deadline retry
+//!   and the append dedup table on the promoted primary.
+//! * `mid-drain` — fast producers, slow consumers: the corpus is fully
+//!   durable before the kill, but the readers still need history from the
+//!   dead primary, exercising the read-path re-route (reissued pulls,
+//!   push re-homes at the consumed floor, hybrid forced-pull fallback).
+//!
+//! Results go to `BENCH_chaos.json` (hand-rolled JSON, same idiom as
+//! [`super::latency`]) so CI can diff detection time and retry counts
+//! run-over-run.
+
+use crate::cluster::launch;
+use crate::config::{ExperimentConfig, FaultKind, SourceMode, Workload, WriteMode};
+
+const NP: u64 = 2;
+const CORPUS: u64 = 2_000;
+const SEED: u64 = 0xC0FFEE;
+
+/// One scripted kill: when the broker dies and how the record costs shape
+/// the run around it (who is still busy when the kill lands).
+#[derive(Debug, Clone, Copy)]
+pub struct KillSchedule {
+    pub label: &'static str,
+    /// Virtual second the victim broker drops dead.
+    pub fault_at_secs: u64,
+    /// Producer throttle (ns/record); 1 ms stretches the corpus past the
+    /// kill so appends cross the fail-over.
+    pub producer_record_ns: u64,
+    /// Consumer throttle (ns/record); 1 ms leaves the readers holding a
+    /// backlog on the corpse.
+    pub engine_record_ns: u64,
+}
+
+/// The scripted schedules, slowest-path first.
+pub const SCHEDULES: [KillSchedule; 2] = [
+    KillSchedule {
+        label: "mid-write",
+        fault_at_secs: 1,
+        producer_record_ns: 1_000_000,
+        engine_record_ns: 0,
+    },
+    KillSchedule {
+        label: "mid-drain",
+        fault_at_secs: 1,
+        producer_record_ns: 0,
+        engine_record_ns: 1_000_000,
+    },
+];
+
+/// One (schedule × source × write) cell's outcome.
+#[derive(Debug, Clone)]
+pub struct ChaosCell {
+    pub schedule: &'static str,
+    pub source: &'static str,
+    pub write: &'static str,
+    pub produced: u64,
+    pub consumed: u64,
+    pub logged: u64,
+    /// The closed form: `Np × corpus_records`.
+    pub expect: u64,
+    pub failovers: f64,
+    pub promotions: f64,
+    pub detection_ms: f64,
+    pub write_retries: f64,
+    pub source_retries: f64,
+    /// Faulted totals == fault-free totals == closed form.
+    pub parity: bool,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone)]
+pub struct ChaosBenchReport {
+    pub cells: Vec<ChaosCell>,
+}
+
+impl ChaosBenchReport {
+    /// Every cell held parity (the harness's pass criterion).
+    pub fn all_pass(&self) -> bool {
+        self.cells.iter().all(|c| c.parity)
+    }
+}
+
+/// The faulted cell: bc=3, rf=2, one broker killed mid-run. The shape
+/// mirrors `tests/shard_rebalance.rs` so the rebalance and fail-over
+/// suites cover the same topology.
+pub fn chaos_config(
+    source: SourceMode,
+    write: WriteMode,
+    schedule: &KillSchedule,
+) -> ExperimentConfig {
+    let mut c = ExperimentConfig {
+        name: format!("chaos-{}-{}-{}", schedule.label, source.name(), write.name()),
+        np: NP as usize,
+        nc: 3,
+        nmap: 4,
+        ns: 6,
+        producer_chunk: 4 * 1024,
+        consumer_chunk: 16 * 1024,
+        record_size: 100,
+        broker_cores: 8,
+        mode: source,
+        write_mode: write,
+        workload: Workload::Count,
+        corpus_records: CORPUS,
+        duration_secs: 12,
+        warmup_secs: 1,
+        seed: SEED,
+        broker_count: 3,
+        replication_factor: 2,
+        fault_at_secs: schedule.fault_at_secs,
+        fault_kind: FaultKind::Broker,
+        ..Default::default()
+    };
+    c.cost.producer_record_ns = schedule.producer_record_ns;
+    c.cost.engine_record_ns = schedule.engine_record_ns;
+    c
+}
+
+/// The same cell with the kill disarmed: same seed, same topology, same
+/// generators — the golden run the faulted totals must match.
+fn baseline_config(
+    source: SourceMode,
+    write: WriteMode,
+    schedule: &KillSchedule,
+) -> ExperimentConfig {
+    let mut c = chaos_config(source, write, schedule);
+    c.name = format!("chaos-base-{}-{}-{}", schedule.label, source.name(), write.name());
+    c.fault_at_secs = 0;
+    c
+}
+
+fn run_cell(source: SourceMode, write: WriteMode, schedule: &KillSchedule) -> ChaosCell {
+    let faulted = launch(&chaos_config(source, write, schedule), None).run();
+    let golden = launch(&baseline_config(source, write, schedule), None).run();
+    let expect = NP * CORPUS;
+    let g = |k| faulted.report.gauge(k).unwrap_or(0.0);
+    let parity = faulted.records_produced == expect
+        && faulted.records_consumed == expect
+        && faulted.tuples_logged == expect
+        && golden.records_produced == faulted.records_produced
+        && golden.records_consumed == faulted.records_consumed
+        && golden.tuples_logged == faulted.tuples_logged;
+    ChaosCell {
+        schedule: schedule.label,
+        source: source.name(),
+        write: write.name(),
+        produced: faulted.records_produced,
+        consumed: faulted.records_consumed,
+        logged: faulted.tuples_logged,
+        expect,
+        failovers: g("shard.failovers"),
+        promotions: g("shard.promotions"),
+        detection_ms: g("shard.detection_ms"),
+        write_retries: g("write_broker_down_retries"),
+        source_retries: g("source_broker_down_retries"),
+        parity,
+    }
+}
+
+fn print_cell(cell: &ChaosCell) {
+    println!(
+        "   {:<9} {:<8}x {:<10} {}  produced {:>6}  consumed {:>6}  logged {:>6} \
+         (expect {})  failovers {:>2.0}  promoted {:>2.0}  detect {:>7.1} ms  \
+         retries w{:>3.0}/r{:>3.0}",
+        cell.schedule,
+        cell.source,
+        cell.write,
+        if cell.parity { "OK  " } else { "FAIL" },
+        cell.produced,
+        cell.consumed,
+        cell.logged,
+        cell.expect,
+        cell.failovers,
+        cell.promotions,
+        cell.detection_ms,
+        cell.write_retries,
+        cell.source_retries,
+    );
+}
+
+/// Run the sweep: every source × write cell under each scripted kill
+/// (quick mode runs only the `mid-write` schedule). Panics if any cell
+/// loses parity — the harness is an assertion, not a survey.
+pub fn run_chaos(quick: bool) -> ChaosBenchReport {
+    println!(
+        "== chaos — broker kill mid-run, sources x writers, golden-totals parity \
+         (bc=3, rf=2)"
+    );
+    let schedules: &[KillSchedule] = if quick { &SCHEDULES[..1] } else { &SCHEDULES };
+    let mut cells = Vec::new();
+    for schedule in schedules {
+        for &source in &SourceMode::ALL {
+            for &write in &WriteMode::ALL {
+                let cell = run_cell(source, write, schedule);
+                print_cell(&cell);
+                cells.push(cell);
+            }
+        }
+    }
+    let report = ChaosBenchReport { cells };
+    assert!(
+        report.all_pass(),
+        "chaos parity violated: a broker death changed the totals (see FAIL rows)"
+    );
+    report
+}
+
+/// Write `BENCH_chaos.json`. Hand-rolled JSON — the offline vendor set
+/// has no serde.
+pub fn write_json(path: &std::path::Path, report: &ChaosBenchReport) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"zettastream-bench-chaos/v1\",\n");
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"schedule\": \"{}\", \"source\": \"{}\", \"write\": \"{}\", \
+             \"produced\": {}, \"consumed\": {}, \"logged\": {}, \"expect\": {}, \
+             \"failovers\": {}, \"promotions\": {}, \"detection_ms\": {:.3}, \
+             \"write_broker_down_retries\": {}, \"source_broker_down_retries\": {}, \
+             \"parity\": {}}}{}\n",
+            c.schedule,
+            c.source,
+            c.write,
+            c.produced,
+            c.consumed,
+            c.logged,
+            c.expect,
+            c.failovers,
+            c.promotions,
+            c.detection_ms,
+            c.write_retries,
+            c.source_retries,
+            c.parity,
+            if i + 1 == report.cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+/// The CLI/bench entry point: run the sweep and record the artifact.
+pub fn run_and_record(quick: bool, path: &std::path::Path) -> ChaosBenchReport {
+    let report = run_chaos(quick);
+    match write_json(path, &report) {
+        Ok(()) => println!("   wrote {}", path.display()),
+        Err(e) => eprintln!("   could not write {}: {e}", path.display()),
+    }
+    report
+}

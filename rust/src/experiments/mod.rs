@@ -6,6 +6,7 @@
 //! harnesses (`rust/benches/figN_*.rs`) and the CLI (`zettastream bench`)
 //! both run these specs and print the rows.
 
+pub mod chaos;
 pub mod hotpath;
 pub mod latency;
 #[cfg(test)]

@@ -50,13 +50,15 @@
 //! modes checkpoint identically. Completed epochs are committed to the
 //! broker (`CommitCheckpoint`), whose cursors become the floor for
 //! watermark log trimming: retention can never pass the last restorable
-//! point. `fault_at_secs`/`fault_kind` inject a worker- or source-kill on
-//! the sim plane; recovery rolls the whole dataflow back to the last
-//! completed checkpoint and replays — a faulted run reports identical
-//! record/window totals to the fault-free run on the same seed
-//! (exactly-once). [`experiments`] regenerates every figure of the paper's
-//! evaluation plus the pull/push/hybrid, write-path, checkpoint/recovery
-//! and storage-tier ablations.
+//! point. `fault_at_secs`/`fault_kind` inject a worker-, source- or
+//! broker-kill on the sim plane; a worker or source kill recovers by
+//! rolling the whole dataflow back to the last completed checkpoint and
+//! replaying, while a **broker** kill recovers by *replica promotion*
+//! instead (see the fail-over paragraph below) — either way, a faulted
+//! run reports identical record/window totals to the fault-free run on
+//! the same seed (exactly-once). [`experiments`] regenerates every figure
+//! of the paper's evaluation plus the pull/push/hybrid, write-path,
+//! checkpoint/recovery and storage-tier ablations.
 //!
 //! ## The storage tier
 //!
@@ -104,6 +106,25 @@
 //! pinned by `tests/shard_rebalance.rs` (zero loss, zero duplication).
 //! `zettastream bench shard` sweeps `broker_count` 1→3 with and without a
 //! live rebalance and reports the `shard.*` hand-off gauges.
+//!
+//! Scale-out's other half is **fail-over**: at `replication_factor >= 2`
+//! the coordinator runs a heartbeat failure detector
+//! (`shard_heartbeat_ms` probes, a `shard_lease_ms` lease) and a broker
+//! silent past its lease is declared dead — no freeze, no drain; an
+//! **emergency epoch** promotes each orphaned partition's standing
+//! replica (which already holds every quorum-acked byte) and shrinks the
+//! survivors' replica sets. Clients escape the corpse by *deadline*, not
+//! by reply: every sharded writer and source arms a per-RPC
+//! `rpc_deadline_ms` timer with exponential backoff, and on expiry
+//! consults the published down-mask — writers retransmit to the promoted
+//! primary under the broker's append-idempotence table, pull sources
+//! reissue at their cursors, push groups tear down locally and
+//! resubscribe at their consumed floor, hybrids force the pull fallback
+//! across the outage. `fault_kind=broker` injects the kill,
+//! `tests/broker_failover.rs` pins golden-totals parity across all
+//! 12 source × write cells, and `zettastream bench chaos` runs the
+//! scripted kill schedules and records detection time, promotions and
+//! per-path retry counts in `BENCH_chaos.json`.
 //!
 //! ## Data-plane memory discipline
 //!

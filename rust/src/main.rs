@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! zettastream run [key=value ...]       one experiment, report to stdout
-//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|shard|hotpath|latency|ablations|all> [--quick] [key=value ...]
+//! zettastream bench <fig3..fig9|hybrid|writepath|checkpoint|store|shard|chaos|hotpath|latency|ablations|all> [--quick] [key=value ...]
 //! zettastream broker --listen <addr> [key=value ...]
 //!                                       standalone broker node on real TCP
 //! zettastream list                      the benchmark catalog (Table II)
@@ -206,6 +206,20 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         experiments::latency::run_and_record(quick, path);
         return Ok(());
     }
+    if which == "chaos" {
+        // The fail-over chaos harness: scripted broker kills across every
+        // (source × write) cell at bc=3/rf=2, golden-totals parity against
+        // the same-seed fault-free run, results to BENCH_chaos.json.
+        // Fixed config for the same reason as hotpath.
+        if let Some(extra) = args.iter().skip(1).find(|a| *a != "--quick") {
+            return Err(format!(
+                "bench chaos runs a fixed sweep config and takes no overrides (got `{extra}`)"
+            ));
+        }
+        let path = std::path::Path::new("BENCH_chaos.json");
+        experiments::chaos::run_and_record(quick, path);
+        return Ok(());
+    }
     let duration: u64 = if quick { 8 } else { 30 };
     let chunks: &[usize] = if quick { &[4, 32, 128] } else { &experiments::CHUNK_SIZES_KIB };
     let specs = match which {
@@ -241,7 +255,7 @@ fn cmd_list() -> Result<(), String> {
     println!("{}", experiments::table2());
     println!(
         "bench targets: fig3 fig4 fig5 fig6 fig7 fig8 fig9 hybrid writepath checkpoint \
-         store shard hotpath latency latency-fig ablations all"
+         store shard chaos hotpath latency latency-fig ablations all"
     );
     Ok(())
 }

@@ -49,6 +49,12 @@ pub enum WriteStatKey {
     /// Unlike `Retries` these are unbounded: the coordinator always
     /// publishes the new table, so the retry loop terminates.
     ShardRetries,
+    /// Appends retransmitted after their per-RPC deadline expired against
+    /// a broker the coordinator declared dead (sharded runs,
+    /// `fault_kind=broker`). Unbounded like `ShardRetries`: the fail-over
+    /// always promotes a live primary, so the loop terminates — and the
+    /// broker-side idempotence table makes the retransmit exactly-once.
+    BrokerDownRetries,
 }
 
 impl WriteStatKey {
@@ -62,6 +68,7 @@ impl WriteStatKey {
             Self::Subscribed => "subscribed",
             Self::ObjectStalls => "object_stalls",
             Self::ShardRetries => "shard_retries",
+            Self::BrokerDownRetries => "broker_down_retries",
         }
     }
 }

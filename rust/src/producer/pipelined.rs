@@ -101,6 +101,9 @@ pub struct PipelinedWriter {
     group_rr: usize,
     /// Appends re-routed after a `WrongShard` refusal.
     shard_retries: u64,
+    /// Appends retransmitted after a deadline expiry against a broker the
+    /// coordinator declared dead.
+    broker_down_retries: u64,
 }
 
 impl PipelinedWriter {
@@ -132,7 +135,14 @@ impl PipelinedWriter {
             shard,
             group_rr: 0,
             shard_retries: 0,
+            broker_down_retries: 0,
         }
+    }
+
+    /// Exponential per-attempt deadline, capped at 64× the base (see the
+    /// sync writer's twin).
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.base.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
     }
 
     /// Generate the next request's chunks; `GenDone` fires after the
@@ -144,12 +154,20 @@ impl PipelinedWriter {
         let staged = match &self.shard {
             None => super::stage_request(&mut self.gen, &self.params.base),
             Some(client) => {
-                // Rotate over broker groups: a request stays within one
+                // Rotate over broker groups, skipping any a fail-over left
+                // without primaries (an empty group must not read as "the
+                // generator is exhausted"). A request stays within one
                 // primary's range so it has a single destination broker.
                 let brokers = client.table().brokers();
-                let group = self.group_rr % brokers;
-                self.group_rr = (self.group_rr + 1) % brokers;
-                let parts = client.table().primaries_of(group);
+                let mut parts = Vec::new();
+                for _ in 0..brokers {
+                    let group = self.group_rr % brokers;
+                    self.group_rr = (self.group_rr + 1) % brokers;
+                    parts = client.table().primaries_of(group);
+                    if !parts.is_empty() {
+                        break;
+                    }
+                }
                 super::stage_request_for(&mut self.gen, &self.params.base, &parts)
             }
         };
@@ -225,6 +243,36 @@ impl PipelinedWriter {
                 },
             }),
         );
+        // Sharded runs race every window slot against its own deadline
+        // (the broker-death path; see the sync writer's twin).
+        if self.shard.is_some() && self.params.base.rpc_deadline_ns > 0 {
+            let attempts = self.inflight[&rpc].attempts;
+            let d = self.deadline_for(attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | super::DEADLINE_TAG));
+        }
+    }
+
+    /// A per-RPC deadline fired for one window slot. No-op unless it
+    /// genuinely expired the slot's current attempt; on expiry against a
+    /// declared-dead broker, refresh the route and retransmit (the
+    /// broker-side idempotence table dedups a request that already landed
+    /// before the crash), otherwise re-arm.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        let Some(inflight) = self.inflight.get(&rpc) else { return };
+        if ctx.now() < inflight.sent_at + self.deadline_for(inflight.attempts) {
+            return;
+        }
+        let Some(client) = self.shard.as_mut() else { return };
+        let (home, _) = client.broker_for(inflight.chunks[0].0);
+        if client.actor_down(home) {
+            client.refresh();
+            self.broker_down_retries += 1;
+            self.inflight.get_mut(&rpc).expect("checked above").attempts += 1;
+            self.transmit(rpc, ctx);
+        } else {
+            let d = self.deadline_for(inflight.attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | super::DEADLINE_TAG));
+        }
     }
 
     /// Feed a completed (or abandoned) request through the per-partition
@@ -325,6 +373,9 @@ impl Actor<Msg> for PipelinedWriter {
                 self.try_dispatch(ctx);
             }
             Msg::Reply(env) => self.on_ack(*env, ctx),
+            Msg::Timer(tag) if tag & super::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !super::DEADLINE_TAG, ctx)
+            }
             Msg::Timer(rpc) => self.transmit(rpc, ctx),
             other => {
                 panic!("pipelined writer {}: unexpected {other:?}", self.params.base.entity)
@@ -352,6 +403,9 @@ impl WritePath for PipelinedWriter {
         extras.insert(WriteStatKey::InflightPeak, self.inflight_peak as u64);
         if self.shard_retries > 0 {
             extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(WriteStatKey::BrokerDownRetries, self.broker_down_retries);
         }
         // Generation thread + async completion thread.
         self.acct.stats(self.gen.planted(), 2, extras)

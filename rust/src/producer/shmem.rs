@@ -92,6 +92,9 @@ pub struct SharedMemWriter {
     group_rr: usize,
     /// Seals re-routed after a `WrongShard` refusal.
     shard_retries: u64,
+    /// Notifications retransmitted after a deadline expiry against a
+    /// broker the coordinator declared dead.
+    broker_down_retries: u64,
 }
 
 impl SharedMemWriter {
@@ -126,7 +129,14 @@ impl SharedMemWriter {
             shard,
             group_rr: 0,
             shard_retries: 0,
+            broker_down_retries: 0,
         }
+    }
+
+    /// Exponential per-attempt deadline, capped at 64× the base (see the
+    /// sync writer's twin).
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.base.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
     }
 
     /// The partition set one broker group's pool covers (all partitions
@@ -138,9 +148,14 @@ impl SharedMemWriter {
         }
     }
 
-    /// True once every broker group's registration has acked.
+    /// True once every broker group's registration has acked. A group a
+    /// fail-over emptied of partitions counts vacuously: nothing will
+    /// ever stage for it, so its registration can't (and needn't) land.
     fn subscribed(&self) -> bool {
-        self.group_subs.iter().all(Option::is_some)
+        self.group_subs
+            .iter()
+            .enumerate()
+            .all(|(g, s)| s.is_some() || self.group_partitions(g).is_empty())
     }
 
     /// Step 1: the registration RPC (control-sized; carries no payload) —
@@ -173,6 +188,14 @@ impl SharedMemWriter {
                 },
             }),
         );
+        // Race the handshake against a deadline too: a broker dying before
+        // its WriteSubscribeAck must not wedge the writer forever.
+        if self.shard.is_some() && self.params.base.rpc_deadline_ns > 0 {
+            ctx.send_self_in(
+                self.params.base.rpc_deadline_ns,
+                Msg::Timer(rpc | super::DEADLINE_TAG),
+            );
+        }
     }
 
     /// Generate the next batch; `GenDone` fires after the per-record cost.
@@ -181,12 +204,21 @@ impl SharedMemWriter {
         let (group, staged) = match &self.shard {
             None => (0, super::stage_request(&mut self.gen, &self.params.base)),
             Some(client) => {
-                // Rotate over broker groups: a batch stays within one
+                // Rotate over broker groups, skipping any a fail-over left
+                // without primaries — an empty group must not read as "the
+                // generator is exhausted". A batch stays within one
                 // primary's range so its seal has a single destination.
                 let brokers = client.table().brokers();
-                let group = self.group_rr % brokers;
-                self.group_rr = (self.group_rr + 1) % brokers;
-                let parts = client.table().primaries_of(group);
+                let mut group = self.group_rr % brokers;
+                let mut parts = Vec::new();
+                for _ in 0..brokers {
+                    group = self.group_rr % brokers;
+                    self.group_rr = (self.group_rr + 1) % brokers;
+                    parts = client.table().primaries_of(group);
+                    if !parts.is_empty() {
+                        break;
+                    }
+                }
                 (group, super::stage_request_for(&mut self.gen, &self.params.base, &parts))
             }
         };
@@ -260,6 +292,67 @@ impl SharedMemWriter {
                 kind: RpcKind::SealObject { id: seal.object, produced_at: seal.produced_at },
             }),
         );
+        // Sharded runs race every notification against a deadline (the
+        // broker-death path; see the sync writer's twin).
+        if self.shard.is_some() && self.params.base.rpc_deadline_ns > 0 {
+            let d = self.deadline_for(seal.attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | super::DEADLINE_TAG));
+        }
+    }
+
+    /// A per-RPC deadline fired — for a pending registration or an
+    /// in-flight seal. No-op unless the request is still outstanding and
+    /// genuinely expired; on expiry against a declared-dead broker the
+    /// route refreshes and the request retransmits (the broker-side
+    /// idempotence table dedups a seal that already landed before the
+    /// crash), otherwise it re-arms.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        if let Some(&group) = self.sub_rpcs.get(&rpc) {
+            let parts = self.group_partitions(group);
+            if parts.is_empty() {
+                // A fail-over emptied the group mid-handshake: nothing
+                // will ever stage for it — resolve vacuously.
+                self.sub_rpcs.remove(&rpc);
+                if self.subscribed() && !self.generating && self.parked.is_none() && !self.done {
+                    self.start_generation(ctx);
+                }
+                return;
+            }
+            let down = self
+                .shard
+                .as_ref()
+                .is_some_and(|c| c.actor_down(c.broker_for(parts[0]).0));
+            if down {
+                if let Some(client) = self.shard.as_mut() {
+                    client.refresh();
+                }
+                self.broker_down_retries += 1;
+                self.sub_rpcs.remove(&rpc);
+                self.subscribe_group(group, ctx);
+            } else {
+                ctx.send_self_in(
+                    self.params.base.rpc_deadline_ns,
+                    Msg::Timer(rpc | super::DEADLINE_TAG),
+                );
+            }
+            return;
+        }
+        let Some(seal) = self.seals.get(&rpc) else { return };
+        if ctx.now() < seal.sent_at + self.deadline_for(seal.attempts) {
+            return;
+        }
+        let partition = seal.partition;
+        let Some(client) = self.shard.as_mut() else { return };
+        let (home, _) = client.broker_for(partition);
+        if client.actor_down(home) {
+            client.refresh();
+            self.broker_down_retries += 1;
+            self.seals.get_mut(&rpc).expect("checked above").attempts += 1;
+            self.notify_seal(rpc, ctx);
+        } else {
+            let d = self.deadline_for(self.seals[&rpc].attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | super::DEADLINE_TAG));
+        }
     }
 
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
@@ -377,6 +470,9 @@ impl Actor<Msg> for SharedMemWriter {
                 self.try_seal(true, ctx);
             }
             Msg::Reply(env) => self.on_reply(*env, ctx),
+            Msg::Timer(tag) if tag & super::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !super::DEADLINE_TAG, ctx)
+            }
             Msg::Timer(rpc) => {
                 // A backed-off registration retry re-issues the subscribe
                 // with the refreshed table; everything else is a seal.
@@ -413,6 +509,9 @@ impl WritePath for SharedMemWriter {
         extras.insert(WriteStatKey::ObjectStalls, self.object_stalls);
         if self.shard_retries > 0 {
             extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(WriteStatKey::BrokerDownRetries, self.broker_down_retries);
         }
         // One fill thread; acks arrive as notifications.
         self.acct.stats(self.gen.planted(), 1, extras)

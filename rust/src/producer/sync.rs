@@ -49,6 +49,9 @@ pub struct Producer {
     group_rr: usize,
     /// Appends re-routed after a `WrongShard` refusal.
     shard_retries: u64,
+    /// Appends retransmitted after a deadline expiry against a broker the
+    /// coordinator declared dead.
+    broker_down_retries: u64,
 }
 
 impl Producer {
@@ -74,7 +77,15 @@ impl Producer {
             shard,
             group_rr: 0,
             shard_retries: 0,
+            broker_down_retries: 0,
         }
+    }
+
+    /// The deadline for the in-flight request's `attempts`-th try:
+    /// exponential growth from `rpc_deadline_ms`, capped at 64× so the
+    /// probe cadence never collapses entirely.
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
     }
 
     /// Start generating the next request: busy for `records × gen cost`,
@@ -84,12 +95,20 @@ impl Producer {
         let staged = match &self.shard {
             None => super::stage_request(&mut self.gen, &self.params),
             Some(client) => {
-                // Rotate over broker groups: a request stays within one
+                // Rotate over broker groups, skipping any a fail-over left
+                // without primaries (an empty group must not read as "the
+                // generator is exhausted"). A request stays within one
                 // primary's range so it has a single destination broker.
                 let brokers = client.table().brokers();
-                let group = self.group_rr % brokers;
-                self.group_rr = (self.group_rr + 1) % brokers;
-                let parts = client.table().primaries_of(group);
+                let mut parts = Vec::new();
+                for _ in 0..brokers {
+                    let group = self.group_rr % brokers;
+                    self.group_rr = (self.group_rr + 1) % brokers;
+                    parts = client.table().primaries_of(group);
+                    if !parts.is_empty() {
+                        break;
+                    }
+                }
                 super::stage_request_for(&mut self.gen, &self.params, &parts)
             }
         };
@@ -139,6 +158,42 @@ impl Producer {
                 },
             }),
         );
+        // Sharded runs race every transmit against a deadline: if the
+        // broker goes silent (broker fault), the expiry checks the down
+        // mask and eventually re-routes to the promoted replica.
+        if self.shard.is_some() && self.params.rpc_deadline_ns > 0 {
+            let inflight = self.inflight.as_ref().expect("just transmitted");
+            let d = self.deadline_for(inflight.attempts);
+            ctx.send_self_in(d, Msg::Timer(inflight.rpc | super::DEADLINE_TAG));
+        }
+    }
+
+    /// A per-RPC deadline fired. Ignore it unless it genuinely expired the
+    /// *current* attempt of the *current* in-flight request (acks and
+    /// retransmits both strand old timers). On a genuine expiry against a
+    /// broker the coordinator declared dead, refresh the route and
+    /// retransmit — the broker-side idempotence table makes the resend
+    /// exactly-once even if the original landed before the crash. Against
+    /// a slow-but-live (or not-yet-declared) broker, just re-arm: a
+    /// retransmit now could race the original in its queue.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        let Some(inflight) = self.inflight.as_ref() else { return };
+        if inflight.rpc != rpc
+            || ctx.now() < inflight.sent_at + self.deadline_for(inflight.attempts)
+        {
+            return;
+        }
+        let Some(client) = self.shard.as_mut() else { return };
+        let (home, _) = client.broker_for(inflight.chunks[0].0);
+        if client.actor_down(home) {
+            client.refresh();
+            self.broker_down_retries += 1;
+            self.inflight.as_mut().expect("checked above").attempts += 1;
+            self.transmit(ctx);
+        } else {
+            let d = self.deadline_for(inflight.attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | super::DEADLINE_TAG));
+        }
     }
 
     fn on_ack(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
@@ -217,6 +272,9 @@ impl Actor<Msg> for Producer {
         match msg {
             Msg::GenDone(_) => self.send_append(ctx),
             Msg::Reply(env) => self.on_ack(*env, ctx),
+            Msg::Timer(tag) if tag & super::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !super::DEADLINE_TAG, ctx)
+            }
             Msg::Timer(rpc) => {
                 debug_assert_eq!(self.inflight.as_ref().map(|i| i.rpc), Some(rpc));
                 self.transmit(ctx);
@@ -243,6 +301,9 @@ impl WritePath for Producer {
         let mut extras = super::api::WriteStatExtras::new();
         if self.shard_retries > 0 {
             extras.insert(WriteStatKey::ShardRetries, self.shard_retries);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(WriteStatKey::BrokerDownRetries, self.broker_down_retries);
         }
         // One client thread generates and waits in turn.
         self.acct.stats(self.gen.planted(), 1, extras)

@@ -67,6 +67,7 @@ fn params(
         cost: Default::default(),
         data_plane: crate::config::DataPlane::Sim,
         shard: None,
+        rpc_deadline_ns: 0,
     }
 }
 

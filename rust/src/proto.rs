@@ -191,7 +191,11 @@ pub enum RpcKind {
     /// stamped chunks with **primary-assigned offsets**, so every replica
     /// log is byte-identical regardless of its own worker-pool completion
     /// order (replicas apply through a per-partition reorder buffer).
-    ShardReplicate { chunks: Vec<StampedChunk> },
+    /// `origin` carries the producing client's identity (`reply_to`, rpc
+    /// id) so the replica records the append in its idempotence table —
+    /// if the primary dies and the producer retransmits the same rpc id
+    /// to the promoted replica, it is re-acked, never re-appended.
+    ShardReplicate { chunks: Vec<StampedChunk>, origin: Option<(ActorId, RpcId)> },
     /// Coordinator -> broker: stop serving `partitions` as primary under
     /// the table that will carry `epoch`. The broker acks only once every
     /// in-flight replication for those partitions has been acknowledged —
@@ -201,6 +205,22 @@ pub enum RpcKind {
     /// assignment `epoch` — the resume half of the hand-off. The new
     /// primary's log is already complete (it was a replica).
     ShardPromote { epoch: u64, partitions: Vec<PartitionId> },
+    /// Coordinator -> broker: failure-detector liveness probe. A live
+    /// broker acks immediately ([`RpcReply::HeartbeatAck`]); a dead one
+    /// drops it, and the missed lease is the detection signal.
+    Heartbeat,
+    /// Coordinator -> surviving broker: broker `dead` was declared dead;
+    /// `table` is the rebuilt assignment (epoch bumped once, every replica
+    /// set shrunk past the corpse) and `gained` the partitions this broker
+    /// now serves as primary (often empty — every survivor still gets the
+    /// roster so it purges in-flight replication held on the dead peer and
+    /// shrinks its quorum arithmetic). See `crate::shard`'s fail-over docs.
+    ShardFailover {
+        epoch: u64,
+        dead: usize,
+        table: crate::shard::ShardTable,
+        gained: Vec<PartitionId>,
+    },
 }
 
 /// One colocated producer's write-side registration.
@@ -264,6 +284,12 @@ pub enum RpcReply {
     FreezeAck { epoch: u64 },
     /// The broker now serves the promoted partitions at `epoch`.
     PromoteAck { epoch: u64 },
+    /// Liveness probe answered (the broker's current assignment epoch
+    /// rides along for the coordinator's sanity checks).
+    HeartbeatAck { epoch: u64 },
+    /// Fail-over roster installed: dead peer purged, held quorums
+    /// released, gained partitions now served at `epoch`.
+    FailoverAck { epoch: u64 },
     /// Request refused (unknown partition, bad offset...). Carried instead
     /// of panicking so fault-injection tests can exercise client handling.
     Error { reason: String },

@@ -348,5 +348,7 @@ fn kind_label(kind: &RpcKind) -> &'static str {
         RpcKind::ShardReplicate { .. } => "shard_replicate",
         RpcKind::ShardFreeze { .. } => "shard_freeze",
         RpcKind::ShardPromote { .. } => "shard_promote",
+        RpcKind::ShardFailover { .. } => "shard_failover",
+        RpcKind::Heartbeat => "heartbeat",
     }
 }

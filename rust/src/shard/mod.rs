@@ -55,6 +55,43 @@
 //!    **primary-assigned offsets**, so the new primary's log is
 //!    byte-identical to the old one's and cursors carry over unchanged —
 //!    zero loss, zero duplication.
+//!
+//! ## Fail-over: the emergency epoch
+//!
+//! Rebalancing is the *cooperative* hand-off; broker death is the
+//! *emergency* one. The coordinator doubles as the failure detector: it
+//! probes every broker with a heartbeat RPC each `shard_heartbeat_ms`,
+//! records the last ack per broker, and declares a broker **dead** when
+//! its silence exceeds the `shard_lease_ms` lease. The declaration drives
+//! a one-round fail-over, the planned hand-off minus the participant that
+//! can no longer cooperate:
+//!
+//! 1. **Rebuild.** [`ShardTable::failed_over`] removes the corpse from
+//!    every replica set and promotes the first surviving replica of each
+//!    dead-primary partition — one epoch bump, no other movement. Rows
+//!    that contained the dead broker shrink, so quorum arithmetic is
+//!    per-partition from here on ([`ShardTable::quorum_of`]).
+//! 2. **Notify every survivor** (`ShardFailover` RPC, carrying the new
+//!    table and the partitions that broker gains). Survivors install the
+//!    roster, purge in-flight replication held on the dead peer —
+//!    releasing producer acks wedged on a quorum vote that will never
+//!    arrive — and start serving their gained partitions. There is no
+//!    freeze phase: the dead primary cannot serve anyway, and by
+//!    detection time (a lease, orders of magnitude above any delivery
+//!    delay) everything it ever replicated has long been applied.
+//! 3. **Publish + mark down.** The down mask in [`ShardState`] is set at
+//!    declaration time so clients can distinguish *dead broker* from
+//!    *slow broker* ([`ShardClient::actor_down`]); the table publishes
+//!    after every survivor acks, and sources get the usual `ShardEpoch`
+//!    nudge.
+//!
+//! No committed record is lost at `replication_factor >= 2`: a quorum ack
+//! implies a surviving replica holds every acked byte, and replication
+//! fan-out is atomic with the primary append, so even *unacked* appends
+//! reach the survivor. Exactly-once across the death is the broker-side
+//! idempotence table's job: producers retransmit a deadline-expired RPC
+//! under the **same id**, and whichever broker now owns the partition
+//! re-acks recorded totals instead of re-appending (see `crate::broker`).
 
 use std::cell::RefCell;
 use std::collections::HashSet;
@@ -139,9 +176,18 @@ impl ShardTable {
     }
 
     /// Acks (including the primary's own append) that commit a write:
-    /// a majority of the replica set.
+    /// a majority of the **configured** replica-set size. Build-time
+    /// uniform; after a fail-over shrinks individual rows, use
+    /// [`Self::quorum_of`] for the partition actually written.
     pub fn quorum(&self) -> usize {
         self.replication / 2 + 1
+    }
+
+    /// The majority quorum of `p`'s *current* replica set. Equal to
+    /// [`Self::quorum`] until a fail-over removes a dead broker from the
+    /// row — then the survivors' shrunken majority commits the write.
+    pub fn quorum_of(&self, p: PartitionId) -> usize {
+        self.replicas[p.0].len() / 2 + 1
     }
 
     /// The partitions broker `b` currently serves as primary, ascending.
@@ -214,6 +260,44 @@ impl ShardTable {
         }
     }
 
+    /// The emergency table after broker `dead` is declared dead: the
+    /// corpse is removed from every replica set, which promotes the first
+    /// surviving replica of each partition it served as primary. Exactly
+    /// one epoch bump; no other primary moves. Requires every affected
+    /// partition to keep at least one live replica (`replication_factor
+    /// >= 2` guarantees it for a single death).
+    pub fn failed_over(&self, dead: usize) -> ShardTable {
+        assert!(dead < self.brokers, "dead broker index out of range");
+        assert!(self.replication >= 2, "fail-over promotes the standing replica");
+        let replicas: Vec<Vec<usize>> = self
+            .replicas
+            .iter()
+            .map(|set| {
+                let s: Vec<usize> = set.iter().copied().filter(|&b| b != dead).collect();
+                assert!(!s.is_empty(), "partition lost its last replica");
+                s
+            })
+            .collect();
+        ShardTable {
+            epoch: self.epoch + 1,
+            brokers: self.brokers,
+            replication: self.replication,
+            replicas,
+        }
+    }
+
+    /// Reassemble a table from raw parts (the real-plane wire codec's
+    /// decode side; everything else builds through [`Self::build`] and
+    /// the transition methods).
+    pub fn from_parts(
+        epoch: u64,
+        brokers: usize,
+        replication: usize,
+        replicas: Vec<Vec<usize>>,
+    ) -> Self {
+        ShardTable { epoch, brokers, replication, replicas }
+    }
+
     /// How many partitions changed primary between two tables.
     pub fn moved_primaries(&self, other: &ShardTable) -> usize {
         assert_eq!(self.replicas.len(), other.replicas.len(), "comparable tables");
@@ -235,6 +319,11 @@ pub struct ShardState {
     pub table: ShardTable,
     /// Broker actors by table index.
     pub brokers: Vec<(ActorId, NodeId)>,
+    /// Liveness mask by table index, set by the coordinator at the moment
+    /// a broker is *declared* dead — before the rebuilt table publishes —
+    /// so deadline-expired clients can tell a dead destination from a
+    /// merely slow one. Empty until the first declaration.
+    pub down: Vec<bool>,
 }
 
 /// Shared handle (same idiom as the plasma store blackboard).
@@ -242,7 +331,12 @@ pub type SharedShard = Rc<RefCell<ShardState>>;
 
 impl ShardState {
     pub fn shared(table: ShardTable) -> SharedShard {
-        Rc::new(RefCell::new(ShardState { table, brokers: Vec::new() }))
+        Rc::new(RefCell::new(ShardState { table, brokers: Vec::new(), down: Vec::new() }))
+    }
+
+    /// Is the broker at table index `b` declared dead?
+    pub fn is_down(&self, b: usize) -> bool {
+        self.down.get(b).copied().unwrap_or(false)
     }
 }
 
@@ -287,6 +381,16 @@ impl ShardClient {
         }
         advanced
     }
+
+    /// Has the coordinator declared broker actor `a` dead? Reads the
+    /// **live** shared view, not the cache: the down mask is set at
+    /// declaration time, possibly before the rebuilt table publishes, and
+    /// a deadline-expired client needs the freshest answer to decide
+    /// between "retransmit now" and "wait for the next epoch".
+    pub fn actor_down(&self, a: ActorId) -> bool {
+        let s = self.shard.borrow();
+        s.brokers.iter().enumerate().any(|(b, &(id, _))| id == a && s.is_down(b))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -305,10 +409,13 @@ pub struct BrokerShard {
     pub epoch: u64,
     /// Partitions currently served as primary.
     pub primaries: HashSet<PartitionId>,
-    /// The build-time table (replica-set membership is stable across
-    /// rotations, so peers stay valid across hand-offs).
+    /// The replica-membership view this broker fans quorum writes by.
+    /// Build-time membership is stable across *rotations*; a fail-over
+    /// replaces it wholesale (the `ShardFailover` RPC carries the rebuilt
+    /// table with the dead peer filtered out of every row).
     pub table: ShardTable,
-    /// Broker roster by table index (includes self at `index`).
+    /// Broker roster by table index (includes self at `index`). Stable —
+    /// a dead peer keeps its slot, the table just stops referencing it.
     pub peers: Vec<(ActorId, NodeId)>,
 }
 
@@ -323,20 +430,24 @@ impl BrokerShard {
         self.primaries.contains(&p)
     }
 
-    /// The non-self replica peers of `p`, for replication fan-out.
-    pub fn replica_peers(&self, p: PartitionId) -> Vec<(ActorId, NodeId)> {
+    /// The non-self replica peers of `p` with their table indices, for
+    /// replication fan-out (the index is remembered per in-flight
+    /// replicate so a fail-over can purge exactly the rids held on the
+    /// dead peer).
+    pub fn replica_peers(&self, p: PartitionId) -> Vec<(usize, (ActorId, NodeId))> {
         self.table
             .replica_set(p)
             .iter()
             .filter(|&&b| b != self.index)
-            .map(|&b| self.peers[b])
+            .map(|&b| (b, self.peers[b]))
             .collect()
     }
 
-    /// Peer acks needed before a write commits (the primary's own append
-    /// is the first quorum vote).
-    pub fn needed_peer_acks(&self) -> usize {
-        self.table.quorum() - 1
+    /// Peer acks needed before a write to `p` commits (the primary's own
+    /// append is the first quorum vote). Per-partition: rows shrink after
+    /// a fail-over, and a one-survivor row commits on the primary alone.
+    pub fn needed_peer_acks(&self, p: PartitionId) -> usize {
+        self.table.quorum_of(p) - 1
     }
 }
 
@@ -352,6 +463,12 @@ pub struct ShardCoordinatorParams {
     /// Force one live rebalance (table rotation) at this virtual time;
     /// 0 = own the table but never move it.
     pub rebalance_at: Time,
+    /// Failure detector: heartbeat probe period (ns); 0 = detector off
+    /// (the launcher arms it whenever the topology could act on a death).
+    pub heartbeat: Time,
+    /// Failure detector: a broker silent for longer than this lease (ns)
+    /// is declared dead and failed over.
+    pub lease: Time,
     /// Source actors to notify when a new table publishes.
     pub sources: Vec<ActorId>,
     pub cost: CostModel,
@@ -360,20 +477,31 @@ pub struct ShardCoordinatorParams {
 /// End-of-run rebalance accounting (exported as gauges by the launcher).
 #[derive(Debug, Clone, Default)]
 pub struct ShardStats {
-    /// Completed hand-offs.
+    /// Completed cooperative hand-offs (rebalances — fail-overs count
+    /// separately).
     pub rebalances: u64,
-    /// Primaries moved across all hand-offs.
+    /// Primaries moved across all cooperative hand-offs.
     pub partitions_moved: u64,
     /// Freeze-trigger → table-publish span of the last hand-off (ns).
     pub handoff_ns: u64,
+    /// Completed emergency fail-overs (brokers declared dead).
+    pub failovers: u64,
+    /// Partitions promoted onto survivors across all fail-overs.
+    pub promotions: u64,
+    /// Last-ack → declaration span of the last fail-over (ns): how long
+    /// the detector took to notice the silence.
+    pub detection_ns: u64,
 }
 
 /// The hand-off state machine: freeze the losing primaries, wait for
-/// their drains, promote the gaining replicas, publish.
+/// their drains, promote the gaining replicas, publish. The emergency
+/// flavor (`FailingOver`) skips the freeze — the dead primary cannot
+/// drain — and promotes in the same round that installs the roster.
 enum Handoff {
     Idle,
     Freezing { table: ShardTable, acks: usize, expect: usize, started: Time },
     Promoting { table: ShardTable, acks: usize, expect: usize, started: Time },
+    FailingOver { table: ShardTable, acks: usize, expect: usize, started: Time },
 }
 
 /// The actor that owns the assignment table's lifecycle: it publishes the
@@ -388,11 +516,28 @@ pub struct ShardCoordinator {
     handoff: Handoff,
     next_rpc: u64,
     stats: ShardStats,
+    /// Failure detector: last heartbeat ack per broker (table index).
+    last_ack: Vec<Time>,
+    /// Local mirror of the published down mask.
+    down: Vec<bool>,
+    /// In-flight heartbeat rpc id → broker index (acks from a broker
+    /// declared dead in the meantime are dropped by the mask check).
+    hb_rids: std::collections::HashMap<u64, usize>,
 }
 
 impl ShardCoordinator {
     pub fn new(params: ShardCoordinatorParams, shard: SharedShard, net: SharedNetwork) -> Self {
-        Self { params, shard, net, handoff: Handoff::Idle, next_rpc: 0, stats: ShardStats::default() }
+        Self {
+            params,
+            shard,
+            net,
+            handoff: Handoff::Idle,
+            next_rpc: 0,
+            stats: ShardStats::default(),
+            last_ack: Vec::new(),
+            down: Vec::new(),
+            hb_rids: std::collections::HashMap::new(),
+        }
     }
 
     pub fn stats(&self) -> ShardStats {
@@ -437,6 +582,7 @@ impl ShardCoordinator {
             }
         }
         if expect == 0 {
+            self.stats.rebalances += 1;
             self.publish(table, ctx);
         } else {
             self.handoff = Handoff::Freezing { table, acks: 0, expect, started: ctx.now() };
@@ -477,11 +623,88 @@ impl ShardCoordinator {
         for &s in &self.params.sources {
             ctx.send_in(self.params.cost.notify_ns, s, Msg::ShardEpoch { epoch });
         }
-        self.stats.rebalances += 1;
         self.handoff = Handoff::Idle;
     }
 
-    fn on_reply(&mut self, reply: RpcReply, ctx: &mut Ctx<'_, Msg>) {
+    /// One detector tick: declare the first broker whose lease expired
+    /// (single-failure scope — one corpse per tick, and only from Idle so
+    /// a declaration never races a hand-off in flight), then probe every
+    /// broker still considered live and re-arm the tick.
+    fn on_heartbeat_tick(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let brokers = self.shard.borrow().brokers.clone();
+        let now = ctx.now();
+        if matches!(self.handoff, Handoff::Idle) {
+            let expired = (0..brokers.len()).find(|&b| {
+                !self.down[b] && now.saturating_sub(self.last_ack[b]) > self.params.lease
+            });
+            if let Some(dead) = expired {
+                self.declare_dead(dead, ctx);
+            }
+        }
+        self.hb_rids.retain(|_, b| !self.down[*b]);
+        for (b, &peer) in brokers.iter().enumerate() {
+            if !self.down[b] {
+                let id = self.next_rpc;
+                self.hb_rids.insert(id, b);
+                self.rpc(peer, RpcKind::Heartbeat, ctx);
+            }
+        }
+        ctx.send_self_in(self.params.heartbeat, Msg::Timer(1));
+    }
+
+    /// The emergency round: rebuild the table past the corpse, mark it
+    /// down (immediately — clients consult the mask on RPC deadlines),
+    /// and send every survivor the new roster plus its gained primaries.
+    fn declare_dead(&mut self, dead: usize, ctx: &mut Ctx<'_, Msg>) {
+        let (old, brokers) = {
+            let s = self.shard.borrow();
+            (s.table.clone(), s.brokers.clone())
+        };
+        let table = old.failed_over(dead);
+        self.stats.failovers += 1;
+        self.stats.promotions += old.moved_primaries(&table) as u64;
+        self.stats.detection_ns = ctx.now().saturating_sub(self.last_ack[dead]);
+        self.down[dead] = true;
+        {
+            let mut s = self.shard.borrow_mut();
+            if s.down.len() < brokers.len() {
+                s.down.resize(brokers.len(), false);
+            }
+            s.down[dead] = true;
+        }
+        let mut expect = 0;
+        for (b, &peer) in brokers.iter().enumerate() {
+            if self.down[b] {
+                continue;
+            }
+            let gained: Vec<PartitionId> = table
+                .primaries_of(b)
+                .into_iter()
+                .filter(|&p| old.primary(p) != b)
+                .collect();
+            self.rpc(
+                peer,
+                RpcKind::ShardFailover { epoch: table.epoch, dead, table: table.clone(), gained },
+                ctx,
+            );
+            expect += 1;
+        }
+        assert!(expect > 0, "fail-over needs at least one surviving broker");
+        self.handoff = Handoff::FailingOver { table, acks: 0, expect, started: ctx.now() };
+    }
+
+    fn on_reply(&mut self, id: u64, reply: RpcReply, ctx: &mut Ctx<'_, Msg>) {
+        if let Some(b) = self.hb_rids.remove(&id) {
+            match reply {
+                RpcReply::HeartbeatAck { .. } => {
+                    if !self.down[b] {
+                        self.last_ack[b] = ctx.now();
+                    }
+                }
+                other => panic!("shard coordinator: heartbeat answered with {other:?}"),
+            }
+            return;
+        }
         match reply {
             RpcReply::FreezeAck { .. } => {
                 let done = match &mut self.handoff {
@@ -518,6 +741,26 @@ impl ShardCoordinator {
                     unreachable!()
                 };
                 self.stats.handoff_ns = ctx.now() - started;
+                self.stats.rebalances += 1;
+                self.publish(table, ctx);
+            }
+            RpcReply::FailoverAck { .. } => {
+                let done = match &mut self.handoff {
+                    Handoff::FailingOver { acks, expect, .. } => {
+                        *acks += 1;
+                        *acks == *expect
+                    }
+                    _ => panic!("shard coordinator: fail-over ack outside a fail-over"),
+                };
+                if !done {
+                    return;
+                }
+                let Handoff::FailingOver { table, started, .. } =
+                    std::mem::replace(&mut self.handoff, Handoff::Idle)
+                else {
+                    unreachable!()
+                };
+                self.stats.handoff_ns = ctx.now() - started;
                 self.publish(table, ctx);
             }
             RpcReply::Error { reason } => {
@@ -533,18 +776,26 @@ impl Actor<Msg> for ShardCoordinator {
         if self.params.rebalance_at > 0 {
             ctx.send_self_in(self.params.rebalance_at, Msg::Timer(0));
         }
+        if self.params.heartbeat > 0 {
+            let n = self.shard.borrow().brokers.len();
+            self.last_ack = vec![ctx.now(); n];
+            self.down = vec![false; n];
+            ctx.send_self_in(self.params.heartbeat, Msg::Timer(1));
+        }
     }
 
     fn on_event(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
         match msg {
-            Msg::Timer(_) => {
+            Msg::Timer(0) => {
                 assert!(
                     matches!(self.handoff, Handoff::Idle),
                     "rebalance trigger while a hand-off is in flight"
                 );
                 self.begin_rebalance(ctx);
             }
-            Msg::Reply(env) => self.on_reply(env.reply, ctx),
+            Msg::Timer(1) => self.on_heartbeat_tick(ctx),
+            Msg::Timer(t) => panic!("shard coordinator: unknown timer tag {t}"),
+            Msg::Reply(env) => self.on_reply(env.id, env.reply, ctx),
             other => panic!("shard coordinator: unexpected {other:?}"),
         }
     }
@@ -650,6 +901,72 @@ mod tests {
     }
 
     #[test]
+    fn failover_leaves_a_live_primary_everywhere() {
+        forall(300, |rng| {
+            let brokers = rng.range(2, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(2, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            let dead = rng.range(0, brokers as u64 - 1) as usize;
+            let f = t.failed_over(dead);
+            assert_eq!(f.epoch, t.epoch + 1, "exactly one epoch bump");
+            assert_eq!(f.brokers(), t.brokers(), "the roster keeps its slots");
+            for p in (0..partitions).map(PartitionId) {
+                assert_ne!(f.primary(p), dead, "every partition has a live primary");
+                assert!(
+                    !f.replica_set(p).contains(&dead),
+                    "no replica set references the dead broker"
+                );
+                // Membership is the old set minus the corpse, order kept.
+                let expect: Vec<usize> =
+                    t.replica_set(p).iter().copied().filter(|&b| b != dead).collect();
+                assert_eq!(f.replica_set(p), expect.as_slice());
+                // Dead-primary partitions promote their standing replica;
+                // everything else stays put.
+                if t.primary(p) == dead {
+                    assert_eq!(f.primary(p), t.replica_set(p)[1], "standing replica promoted");
+                } else {
+                    assert_eq!(f.primary(p), t.primary(p), "live primaries do not move");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn failover_shrinks_quorums_only_where_the_dead_broker_lived() {
+        forall(300, |rng| {
+            let brokers = rng.range(2, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(2, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            let dead = rng.range(0, brokers as u64 - 1) as usize;
+            let f = t.failed_over(dead);
+            for p in (0..partitions).map(PartitionId) {
+                if t.hosts(p, dead) {
+                    assert_eq!(f.replica_set(p).len(), replication - 1);
+                    assert_eq!(f.quorum_of(p), (replication - 1) / 2 + 1);
+                } else {
+                    assert_eq!(f.quorum_of(p), t.quorum_of(p), "untouched rows keep quorum");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn failover_moves_exactly_the_dead_brokers_primaries() {
+        forall(200, |rng| {
+            let brokers = rng.range(2, 8) as usize;
+            let partitions = brokers * rng.range(1, 6) as usize;
+            let replication = rng.range(2, brokers as u64) as usize;
+            let t = ShardTable::build(partitions, brokers, replication, rng.next_u64());
+            let dead = rng.range(0, brokers as u64 - 1) as usize;
+            let f = t.failed_over(dead);
+            assert_eq!(f.moved_primaries(&t), t.primaries_of(dead).len());
+            assert!(f.primaries_of(dead).is_empty(), "the corpse serves nothing");
+        });
+    }
+
+    #[test]
     fn quorum_is_a_majority() {
         assert_eq!(ShardTable::build(4, 2, 1, 0).quorum(), 1);
         assert_eq!(ShardTable::build(4, 2, 2, 0).quorum(), 2);
@@ -675,5 +992,23 @@ mod tests {
             client.broker_for(PartitionId(0)).0,
             shard.borrow().brokers[rotated.primary(PartitionId(0))].0
         );
+    }
+
+    #[test]
+    fn down_mask_is_visible_before_the_table_publishes() {
+        let table = ShardTable::build(4, 2, 2, 7);
+        let shard = ShardState::shared(table);
+        shard.borrow_mut().brokers = vec![(ActorId(10), 0), (ActorId(11), 0)];
+        let client = ShardClient::new(&shard);
+        assert!(!client.actor_down(ActorId(11)));
+        // The coordinator marks the corpse at declaration time — no epoch
+        // bump yet — and deadline-expired clients must see it live.
+        {
+            let mut s = shard.borrow_mut();
+            s.down = vec![false, true];
+        }
+        assert!(client.actor_down(ActorId(11)));
+        assert!(!client.actor_down(ActorId(10)));
+        assert!(!client.actor_down(ActorId(99)), "unknown actors are not down");
     }
 }

@@ -50,6 +50,11 @@ pub enum StatKey {
     /// Chunks lost to retention the source skipped over (trim-floor
     /// recovery on the pull path; reported only when non-zero).
     TrimGapChunks,
+    /// RPCs re-routed after their broker was declared dead: reissued
+    /// pulls, push re-homes and forced pull fallbacks (reported only when
+    /// non-zero). Unbounded like `WrongShard` retries — read cursors make
+    /// the reissue idempotent, so counting is the only bookkeeping needed.
+    BrokerDownRetries,
 }
 
 impl StatKey {
@@ -62,6 +67,7 @@ impl StatKey {
             Self::SwitchesToPull => "switches_to_pull",
             Self::RecordsReplayed => "records_replayed",
             Self::TrimGapChunks => "trim_gap_chunks",
+            Self::BrokerDownRetries => "broker_down_retries",
         }
     }
 }

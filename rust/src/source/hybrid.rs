@@ -117,6 +117,12 @@ pub struct HybridParams {
     /// and a rebalance that moves the span away from a live subscription
     /// forces the push→pull fallback.
     pub shard: Option<crate::shard::SharedShard>,
+    /// Per-RPC deadline (`rpc_deadline_ms`): a pull or subscribe
+    /// unanswered this long is checked against the coordinator's down
+    /// mask and reissued once its broker is declared dead; a live
+    /// subscription whose broker dies is torn down locally and the
+    /// source falls back to pulling. 0 or unsharded disables it.
+    pub rpc_deadline_ns: Time,
 }
 
 /// Where the control loop currently is. The push consumption machinery
@@ -135,8 +141,9 @@ enum Phase {
     Subscribing,
     /// Push phase: consuming shared objects.
     Push { sub: SubId },
-    /// Unsubscribe RPC in flight; sealed objects still drain.
-    Unsubscribing,
+    /// Unsubscribe RPC in flight; sealed objects still drain. Carries the
+    /// subscription so a broker death mid-teardown can orphan it.
+    Unsubscribing { sub: SubId },
 }
 
 /// The hybrid source actor.
@@ -196,6 +203,13 @@ pub struct HybridSource {
     /// rebalance re-homes the span — the old primary still owns the
     /// subscription's fill pump and pool slots.
     push_home: (ActorId, NodeId),
+    /// The deadline-raced RPC currently awaiting its reply (the in-flight
+    /// pull while `PullFetching`, the subscribe while `Subscribing`).
+    inflight_rpc: Option<u64>,
+    /// Transmissions of the current raced RPC (backoff escalation).
+    rpc_attempts: u32,
+    /// RPCs re-routed (and forced fallbacks taken) after a broker death.
+    broker_down_retries: u64,
     replayed: u64,
     trim_gap_chunks: u64,
     pulls_issued: u64,
@@ -252,6 +266,9 @@ impl HybridSource {
             stale_sub_floor: 0,
             shard,
             push_home,
+            inflight_rpc: None,
+            rpc_attempts: 0,
+            broker_down_retries: 0,
             replayed: 0,
             trim_gap_chunks: 0,
             pulls_issued: 0,
@@ -297,6 +314,21 @@ impl HybridSource {
 
     // -------------------------------------------------------------- pull --
 
+    /// Exponential per-RPC deadline: base × 2^(attempts-1), capped.
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
+    }
+
+    /// Arm the deadline race for the raced RPC just issued.
+    fn arm_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        self.inflight_rpc = Some(rpc);
+        self.rpc_attempts += 1;
+        if self.shard.is_some() && self.params.rpc_deadline_ns > 0 {
+            let d = self.deadline_for(self.rpc_attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | crate::producer::DEADLINE_TAG));
+        }
+    }
+
     fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
         self.maybe_checkpoint(ctx);
         self.pulls_issued += 1;
@@ -307,8 +339,47 @@ impl HybridSource {
             max_bytes: self.params.max_bytes,
         };
         let (to, to_node) = self.home();
-        self.rpc_to(to, to_node, kind, ctx);
+        let rpc = self.rpc_to(to, to_node, kind, ctx);
+        self.arm_deadline(rpc, ctx);
         self.phase = Phase::PullFetching;
+    }
+
+    /// A raced RPC (pull or subscribe) unanswered past its deadline: once
+    /// the coordinator's down mask names its broker the request is lost —
+    /// refresh the cached table and reissue against the promoted primary.
+    /// Both reissues are exactly-once by construction: a pull is an
+    /// idempotent read (and the rpc floor strands any straggler reply), a
+    /// dead broker never granted the subscribe (its work queue died with
+    /// it). Until the detector declares the broker, re-arm and wait.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        if self.inflight_rpc != Some(rpc) {
+            return; // answered or already reissued: stale timer
+        }
+        match self.phase {
+            Phase::PullFetching => {
+                let (home, _) = self.home();
+                if self.shard.as_ref().is_some_and(|c| c.actor_down(home)) {
+                    self.shard.as_mut().expect("down mask implies sharded").refresh();
+                    self.broker_down_retries += 1;
+                    self.rpc_floor = self.next_rpc;
+                    self.issue_pull(ctx);
+                } else {
+                    let d = self.deadline_for(self.rpc_attempts);
+                    ctx.send_self_in(d, Msg::Timer(rpc | crate::producer::DEADLINE_TAG));
+                }
+            }
+            Phase::Subscribing => {
+                if self.shard.as_ref().is_some_and(|c| c.actor_down(self.push_home.0)) {
+                    self.shard.as_mut().expect("down mask implies sharded").refresh();
+                    self.broker_down_retries += 1;
+                    self.send_subscribe(ctx); // re-resolves the span's home
+                } else {
+                    let d = self.deadline_for(self.rpc_attempts);
+                    ctx.send_self_in(d, Msg::Timer(rpc | crate::producer::DEADLINE_TAG));
+                }
+            }
+            _ => {} // the raced RPC's phase already resolved
+        }
     }
 
     fn on_pull_data(
@@ -321,6 +392,8 @@ impl HybridSource {
         if id < self.rpc_floor {
             return; // reply to a pre-restore pull: the cursor was rewound
         }
+        self.inflight_rpc = None;
+        self.rpc_attempts = 0;
         assert!(
             matches!(self.phase, Phase::PullFetching),
             "hybrid source {}: pull data outside PullFetching",
@@ -451,7 +524,8 @@ impl HybridSource {
         };
         let (to, to_node) = self.home();
         self.push_home = (to, to_node);
-        self.rpc_to(to, to_node, RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
+        let rpc = self.rpc_to(to, to_node, RpcKind::PushSubscribe { sources: vec![spec] }, ctx);
+        self.arm_deadline(rpc, ctx);
     }
 
     /// The single subscription RPC, issued at the pull loop's current
@@ -484,6 +558,8 @@ impl HybridSource {
             "hybrid source {}: unexpected SubscribeAck",
             self.params.task_idx
         );
+        self.inflight_rpc = None;
+        self.rpc_attempts = 0;
         self.phase = Phase::Push { sub };
         self.last_delivery = ctx.now(); // the idle clock starts now
         self.idle_gen += 1;
@@ -514,12 +590,60 @@ impl HybridSource {
         if self.home() == self.push_home {
             return;
         }
+        if self.shard.as_ref().is_some_and(|c| c.actor_down(self.push_home.0)) {
+            // The old primary is a corpse: no unsubscribe ack will ever
+            // come — the forced local fallback handles this span.
+            self.maybe_force_pull(ctx);
+            return;
+        }
         let (to, to_node) = self.push_home;
         self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
         self.switches_to_pull += 1;
         self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, ctx.now());
         self.last_switch = ctx.now();
-        self.phase = Phase::Unsubscribing;
+        self.phase = Phase::Unsubscribing { sub };
+    }
+
+    /// Forced push→pull fallback when the broker holding the live (or
+    /// tearing-down) subscription has been declared dead. No unsubscribe
+    /// ack can ever arrive — a dead broker drops everything — so the
+    /// subscription is torn down *locally*: deactivate it on the
+    /// node-shared plasma store and sweep its sealed slots back to the
+    /// pool. Unconsumed fills are past the consumed floor and are
+    /// dropped, not consumed: the promoted primary re-serves everything
+    /// past `offsets` through the pull path, so nothing is lost and
+    /// nothing repeats. In-flight consumption drains first (its records
+    /// advance the floor exactly once); the drain paths call back here.
+    fn maybe_force_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if !self.shard.as_ref().is_some_and(|c| c.actor_down(self.push_home.0)) {
+            return;
+        }
+        let (sub, live) = match self.phase {
+            Phase::Push { sub } => (sub, true),
+            // Forced mid-teardown: the switch was already counted when
+            // the unsubscribe went out; its ack died with the broker.
+            Phase::Unsubscribing { sub } => (sub, false),
+            _ => return,
+        };
+        self.ready.clear();
+        if self.consuming.is_some() || self.pending_free.is_some() || !self.pending.is_empty() {
+            return; // drain first; after_drain retries the fallback
+        }
+        // Late notifications already in flight when the broker died
+        // resolve through `orphaned`; the ObjectFreed they trigger lands
+        // at the corpse, which is why the sealed-slot sweep happens here,
+        // not there.
+        self.store.borrow_mut().deactivate(sub);
+        self.store.borrow_mut().release_sealed(sub);
+        self.orphaned.push(sub);
+        if live {
+            self.switches_to_pull += 1;
+            self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, ctx.now());
+        }
+        self.broker_down_retries += 1;
+        self.last_switch = ctx.now();
+        self.phase = Phase::PullIdle;
+        ctx.send_self_in(0, Msg::Timer(TAG_POLL));
     }
 
     /// Start the consume thread on the next sealed object, if free. Runs in
@@ -601,13 +725,21 @@ impl HybridSource {
             && self.pending_free.is_none()
             && self.pending.is_empty();
         let starved = drained && now.saturating_sub(self.last_delivery) >= t.idle_timeout_ns;
-        if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
+        if self.shard.as_ref().is_some_and(|c| c.actor_down(self.push_home.0)) {
+            // Starvation by broker death, not by an idle stream: no
+            // unsubscribe ack can come, so tear down locally (the chain
+            // keeps ticking while the fallback waits for the drain).
+            self.maybe_force_pull(ctx);
+            if matches!(self.phase, Phase::Push { .. }) {
+                ctx.send_self_in(t.idle_timeout_ns, Msg::Timer(tag));
+            }
+        } else if starved && now.saturating_sub(self.last_switch) >= t.cooldown_ns {
             let (to, to_node) = self.push_home;
             self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
             self.switches_to_pull += 1;
             self.metrics.borrow_mut().tracer.note_switch(self.params.task_idx, false, now);
             self.last_switch = now;
-            self.phase = Phase::Unsubscribing;
+            self.phase = Phase::Unsubscribing { sub };
         } else {
             ctx.send_self_in(t.idle_timeout_ns, Msg::Timer(tag));
         }
@@ -634,7 +766,7 @@ impl HybridSource {
             return;
         }
         assert!(
-            matches!(self.phase, Phase::Unsubscribing),
+            matches!(self.phase, Phase::Unsubscribing { .. }),
             "hybrid source {}: unexpected UnsubscribeAck",
             self.params.task_idx
         );
@@ -727,10 +859,9 @@ impl HybridSource {
                 self.rpc_to(to, to_node, RpcKind::PushUnsubscribe { sub }, ctx);
             }
             Phase::Subscribing => self.orphan_subs += 1,
-            // A normal-fallback unsubscribe is in flight; its ack cannot
-            // be identified by sub id (we never learned it here), so it is
-            // counted instead.
-            Phase::Unsubscribing => self.orphan_unsub_acks += 1,
+            // A normal-fallback unsubscribe is in flight; its ack is
+            // counted rather than matched by sub id.
+            Phase::Unsubscribing { .. } => self.orphan_unsub_acks += 1,
             _ => {}
         }
         // Discard held objects (a dead incarnation cannot consume them;
@@ -753,6 +884,8 @@ impl HybridSource {
         self.rr = 0;
         self.idle_gen += 1; // stale idle chains die
         self.rpc_floor = self.next_rpc;
+        self.inflight_rpc = None;
+        self.rpc_attempts = 0;
         self.stale_sub_floor = self.store.borrow().next_sub_id();
         let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
         let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
@@ -810,6 +943,7 @@ impl HybridSource {
             ctx.send_in(self.params.cost.notify_ns, self.push_home.0, Msg::ObjectFreed { id });
         }
         self.maybe_checkpoint(ctx);
+        self.maybe_force_pull(ctx); // a deferred dead-home teardown completes here
         self.try_consume(ctx);
         if matches!(self.phase, Phase::PullBlocked) {
             if self.should_switch_to_push(ctx.now()) {
@@ -908,6 +1042,8 @@ impl Actor<Msg> for HybridSource {
                             self.orphan_subs = self.orphan_subs.saturating_sub(1);
                             return;
                         }
+                        self.inflight_rpc = None;
+                        self.rpc_attempts = 0;
                         match self.phase {
                             Phase::PullFetching => {
                                 // Cursors untouched: retry after the poll
@@ -952,6 +1088,9 @@ impl Actor<Msg> for HybridSource {
                     self.issue_pull(ctx);
                 }
             }
+            Msg::Timer(tag) if tag & crate::producer::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !crate::producer::DEADLINE_TAG, ctx)
+            }
             Msg::Timer(tag) => self.on_idle_check(tag, ctx),
             Msg::ObjectReady { id } => {
                 // Dead-incarnation fills: below the restore floor, from an
@@ -988,6 +1127,9 @@ impl Actor<Msg> for HybridSource {
                 if let Some(client) = self.shard.as_mut() {
                     client.refresh();
                 }
+                // A fail-over publish: a dead push home can never answer
+                // the teardown RPCs a migration would send.
+                self.maybe_force_pull(ctx);
                 self.maybe_migrate(ctx);
             }
             Msg::Fault { .. } => self.on_fault(ctx),
@@ -1021,6 +1163,9 @@ impl StreamSource for HybridSource {
         }
         if self.trim_gap_chunks > 0 {
             extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(StatKey::BrokerDownRetries, self.broker_down_retries);
         }
         SourceStats {
             records_consumed: self.records_consumed,
@@ -1082,6 +1227,7 @@ impl SourceFactory for HybridSourceFactory {
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                         shard: w.shard.clone(),
+                        rpc_deadline_ns: c.rpc_deadline_ms * crate::sim::MILLIS,
                     },
                     w.metrics.clone(),
                     w.net.clone(),

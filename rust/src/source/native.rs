@@ -42,6 +42,10 @@ pub struct NativeParams {
     pub cost: CostModel,
     /// The published shard view when `broker_count > 1`.
     pub shard: Option<crate::shard::SharedShard>,
+    /// Per-RPC deadline (`rpc_deadline_ms`): a pull unanswered this long
+    /// is checked against the coordinator's down mask and reissued once
+    /// its broker is declared dead. 0 or unsharded disables it.
+    pub rpc_deadline_ns: Time,
 }
 
 // Not derived: `ComputeEngine` holds a PJRT client with no Debug impl.
@@ -59,6 +63,7 @@ impl std::fmt::Debug for NativeParams {
             .field("compute", &self.compute.is_some())
             .field("checkpoint", &self.checkpoint.is_some())
             .field("cost", &self.cost)
+            .field("rpc_deadline_ns", &self.rpc_deadline_ns)
             .finish()
     }
 }
@@ -81,6 +86,12 @@ pub struct NativeConsumer {
     failed: bool,
     /// Replies to RPCs issued before the last restore are stale.
     rpc_floor: u64,
+    /// The pull currently awaiting its reply (deadline staleness check).
+    inflight_pull: Option<u64>,
+    /// Transmissions of the current logical pull (backoff escalation).
+    pull_attempts: u32,
+    /// Pulls reissued after their broker was declared dead.
+    broker_down_retries: u64,
     replayed: u64,
     trim_gap_chunks: u64,
     metrics: SharedMetrics,
@@ -106,6 +117,9 @@ impl NativeConsumer {
             inc: 0,
             failed: false,
             rpc_floor: 0,
+            inflight_pull: None,
+            pull_attempts: 0,
+            broker_down_retries: 0,
             replayed: 0,
             trim_gap_chunks: 0,
             metrics,
@@ -114,17 +128,32 @@ impl NativeConsumer {
         }
     }
 
+    /// The broker serving this consumer's span (re-resolved per pull).
+    fn home(&self) -> (ActorId, NodeId) {
+        match &self.shard {
+            Some(client) => client.broker_for(self.offsets[0].0),
+            None => (self.params.broker, self.params.broker_node),
+        }
+    }
+
+    /// Exponential per-RPC deadline: base × 2^(attempts-1), capped.
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
+    }
+
     fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
         self.maybe_checkpoint(ctx);
         let id = self.next_rpc;
         self.next_rpc += 1;
         self.pulls_issued += 1;
+        self.inflight_pull = Some(id);
+        self.pull_attempts += 1;
+        if self.shard.is_some() && self.params.rpc_deadline_ns > 0 {
+            let d = self.deadline_for(self.pull_attempts);
+            ctx.send_self_in(d, Msg::Timer(id | crate::producer::DEADLINE_TAG));
+        }
         self.metrics.borrow_mut().record(Class::PullRpcs, self.params.entity, ctx.now(), 1);
-        // The broker serving this consumer's span (re-resolved per pull).
-        let (to, to_node) = match &self.shard {
-            Some(client) => client.broker_for(self.offsets[0].0),
-            None => (self.params.broker, self.params.broker_node),
-        };
+        let (to, to_node) = self.home();
         let deliver = self.net.borrow_mut().send_control(ctx.now(), self.params.node, to_node);
         ctx.send_at(
             deliver,
@@ -152,10 +181,32 @@ impl NativeConsumer {
         super::api::ack_barrier(cp, epoch, self.checkpoint(), self.params.cost.notify_ns, ctx);
     }
 
+    /// A pull unanswered past its deadline: once the down mask names the
+    /// serving broker, refresh and reissue the same cursors against the
+    /// promoted primary (reads are idempotent; the rpc floor strands any
+    /// straggler reply). Until then, re-arm and keep waiting.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        if self.inflight_pull != Some(rpc) {
+            return; // answered or already reissued: stale timer
+        }
+        let (home, _) = self.home();
+        if self.shard.as_ref().is_some_and(|c| c.actor_down(home)) {
+            self.shard.as_mut().expect("down mask implies sharded").refresh();
+            self.broker_down_retries += 1;
+            self.rpc_floor = self.next_rpc;
+            self.issue_pull(ctx);
+        } else {
+            let d = self.deadline_for(self.pull_attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | crate::producer::DEADLINE_TAG));
+        }
+    }
+
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
         if env.id < self.rpc_floor {
             return; // reply to a pre-restore pull
         }
+        self.inflight_pull = None;
+        self.pull_attempts = 0;
         let (chunks, trims) = match env.reply {
             RpcReply::PullData { chunks, trims } => (chunks, trims),
             RpcReply::WrongShard { .. } => {
@@ -247,6 +298,8 @@ impl NativeConsumer {
         self.processing = None;
         self.pending_epoch = None;
         self.rpc_floor = self.next_rpc;
+        self.inflight_pull = None;
+        self.pull_attempts = 0;
         let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
         let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
             cursors: self.params.assignments.clone(),
@@ -297,6 +350,9 @@ impl Actor<Msg> for NativeConsumer {
                     self.on_processed(ctx);
                 }
             }
+            Msg::Timer(tag) if tag & crate::producer::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !crate::producer::DEADLINE_TAG, ctx)
+            }
             Msg::Timer(tag) => {
                 if tag == self.inc && self.processing.is_none() {
                     self.issue_pull(ctx);
@@ -341,6 +397,9 @@ impl StreamSource for NativeConsumer {
         }
         if self.trim_gap_chunks > 0 {
             extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(StatKey::BrokerDownRetries, self.broker_down_retries);
         }
         SourceStats {
             records_consumed: self.records_consumed,
@@ -395,6 +454,7 @@ impl SourceFactory for NativeSourceFactory {
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                         shard: w.shard.clone(),
+                        rpc_deadline_ns: c.rpc_deadline_ms * crate::sim::MILLIS,
                     },
                     w.metrics.clone(),
                     w.net.clone(),

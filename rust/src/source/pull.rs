@@ -50,6 +50,11 @@ pub struct PullParams {
     /// contiguous span always lives on one primary, so each pull has a
     /// single destination).
     pub shard: Option<crate::shard::SharedShard>,
+    /// Per-RPC deadline (`rpc_deadline_ms`): a pull unanswered this long
+    /// is checked against the coordinator's down mask and reissued at the
+    /// same cursors once its broker is declared dead. 0 or an unsharded
+    /// run disables the deadline plane.
+    pub rpc_deadline_ns: Time,
 }
 
 enum State {
@@ -87,6 +92,12 @@ pub struct PullSource {
     pulls_issued: u64,
     empty_pulls: u64,
     records_consumed: u64,
+    /// The pull currently awaiting its reply (deadline staleness check).
+    inflight_pull: Option<u64>,
+    /// Transmissions of the current logical pull (backoff escalation).
+    pull_attempts: u32,
+    /// Pulls reissued after their broker was declared dead.
+    broker_down_retries: u64,
     /// Records re-read after rollbacks (exactly-once replay volume).
     replayed: u64,
     /// Chunks lost to retention and skipped (trim-floor recovery).
@@ -126,6 +137,9 @@ impl PullSource {
             pulls_issued: 0,
             empty_pulls: 0,
             records_consumed: 0,
+            inflight_pull: None,
+            pull_attempts: 0,
+            broker_down_retries: 0,
             replayed: 0,
             trim_gap_chunks: 0,
             metrics,
@@ -144,11 +158,22 @@ impl PullSource {
         }
     }
 
+    /// Exponential per-RPC deadline: base × 2^(attempts-1), capped.
+    fn deadline_for(&self, attempts: u32) -> Time {
+        self.params.rpc_deadline_ns.saturating_mul(1 << attempts.saturating_sub(1).min(6))
+    }
+
     fn issue_pull(&mut self, ctx: &mut Ctx<'_, Msg>) {
         self.maybe_checkpoint(ctx);
         let id = self.next_rpc;
         self.next_rpc += 1;
         self.pulls_issued += 1;
+        self.inflight_pull = Some(id);
+        self.pull_attempts += 1;
+        if self.shard.is_some() && self.params.rpc_deadline_ns > 0 {
+            let d = self.deadline_for(self.pull_attempts);
+            ctx.send_self_in(d, Msg::Timer(id | crate::producer::DEADLINE_TAG));
+        }
         self.metrics.borrow_mut().record(Class::PullRpcs, self.params.task_idx, ctx.now(), 1);
         let (to, to_node) = self.home();
         // The request itself is a control message (tiny payload).
@@ -188,10 +213,35 @@ impl PullSource {
         }
     }
 
+    /// A pull unanswered past its deadline. A dead broker drops
+    /// everything, so once the coordinator's down mask names the serving
+    /// broker the RPC is lost: refresh the cached table and reissue the
+    /// same pull — same cursors, new rpc id — against the promoted
+    /// primary. Reads are idempotent, so the reissue is exactly-once by
+    /// construction; the rpc floor strands any straggler reply from the
+    /// corpse. Until the detector declares the broker, re-arm and wait.
+    fn on_deadline(&mut self, rpc: u64, ctx: &mut Ctx<'_, Msg>) {
+        if self.inflight_pull != Some(rpc) || !matches!(self.state, State::Fetching) {
+            return; // answered or already reissued: stale timer
+        }
+        let (home, _) = self.home();
+        if self.shard.as_ref().is_some_and(|c| c.actor_down(home)) {
+            self.shard.as_mut().expect("down mask implies sharded").refresh();
+            self.broker_down_retries += 1;
+            self.rpc_floor = self.next_rpc;
+            self.issue_pull(ctx);
+        } else {
+            let d = self.deadline_for(self.pull_attempts);
+            ctx.send_self_in(d, Msg::Timer(rpc | crate::producer::DEADLINE_TAG));
+        }
+    }
+
     fn on_reply(&mut self, env: RpcEnvelope, ctx: &mut Ctx<'_, Msg>) {
         if env.id < self.rpc_floor {
             return; // reply to a pre-restore pull: the cursor was rewound
         }
+        self.inflight_pull = None;
+        self.pull_attempts = 0;
         let (chunks, trims) = match env.reply {
             RpcReply::PullData { chunks, trims } => (chunks, trims),
             RpcReply::WrongShard { .. } => {
@@ -329,6 +379,8 @@ impl PullSource {
         self.ledger = CreditLedger::new(&self.params.downstream, self.params.queue_cap);
         self.rr = 0;
         self.rpc_floor = self.next_rpc;
+        self.inflight_pull = None;
+        self.pull_attempts = 0;
         let cp = self.params.checkpoint.as_ref().expect("restore implies checkpointing");
         let snap = cp.borrow().source_snapshot(ctx.self_id()).unwrap_or(SourceSnapshot {
             cursors: self.params.assignments.clone(),
@@ -382,6 +434,9 @@ impl Actor<Msg> for PullSource {
                 if tag == self.inc {
                     self.on_processed(ctx);
                 }
+            }
+            Msg::Timer(tag) if tag & crate::producer::DEADLINE_TAG != 0 => {
+                self.on_deadline(tag & !crate::producer::DEADLINE_TAG, ctx)
             }
             Msg::Timer(tag) => {
                 if tag == self.inc && matches!(self.state, State::Idle) {
@@ -440,6 +495,9 @@ impl StreamSource for PullSource {
         if self.trim_gap_chunks > 0 {
             extras.insert(StatKey::TrimGapChunks, self.trim_gap_chunks);
         }
+        if self.broker_down_retries > 0 {
+            extras.insert(StatKey::BrokerDownRetries, self.broker_down_retries);
+        }
         SourceStats {
             records_consumed: self.records_consumed,
             pulls_issued: self.pulls_issued,
@@ -484,6 +542,7 @@ impl SourceFactory for PullSourceFactory {
                         checkpoint: w.checkpoint.clone(),
                         cost: c.cost.clone(),
                         shard: w.shard.clone(),
+                        rpc_deadline_ns: c.rpc_deadline_ms * crate::sim::MILLIS,
                     },
                     w.metrics.clone(),
                     w.net.clone(),

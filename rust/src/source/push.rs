@@ -132,6 +132,9 @@ pub struct PushSourceGroup {
     /// replay data), everything below is a dead incarnation's and is
     /// freed. `usize::MAX` until the resubscribe goes out.
     resub_floor: usize,
+    /// Members re-homed (and in-flight subscribes re-issued) after their
+    /// broker was declared dead.
+    broker_down_retries: u64,
     replayed: u64,
     rr: usize,
     metrics: SharedMetrics,
@@ -178,6 +181,7 @@ impl PushSourceGroup {
             deferred_restore: None,
             stale_floor: 0,
             resub_floor: usize::MAX,
+            broker_down_retries: 0,
             replayed: 0,
             rr: 0,
             metrics,
@@ -441,6 +445,20 @@ impl PushSourceGroup {
         if self.recovering || self.failed {
             return; // the recovery resubscribe re-resolves homes itself
         }
+        // Subscribes still in flight towards a corpse can never be granted
+        // (the broker's work queue died with it): re-issue them against
+        // the refreshed table — re-grouped by the members' new homes.
+        let dead_rpcs: Vec<u64> = self
+            .pending_subs
+            .iter()
+            .filter(|(_, v)| self.shard.as_ref().is_some_and(|c| c.actor_down(v.0)))
+            .map(|(&rpc, _)| rpc)
+            .collect();
+        for rpc in dead_rpcs {
+            let (_, _, list) = self.pending_subs.remove(&rpc).expect("swept above");
+            self.broker_down_retries += 1;
+            self.subscribe_members(&list, ctx);
+        }
         for m in 0..self.members.len() {
             let Some((_, home, _)) = self.member_sub[m] else { continue };
             if self.migrating[m] || self.member_home(m).0 == home {
@@ -465,6 +483,21 @@ impl PushSourceGroup {
             return;
         }
         let Some((sub, home, home_node)) = self.member_sub[m].take() else { return };
+        if self.shard.as_ref().is_some_and(|c| c.actor_down(home)) {
+            // The old primary died: a dead broker drops everything, so no
+            // unsubscribe ack can ever come. Tear the subscription down
+            // *locally* — deactivate it on the node-shared plasma store
+            // and sweep its sealed slots — and resubscribe at the member's
+            // consumed floor on the promoted primary, which re-pushes
+            // everything past it: the dropped unconsumed fills replay, so
+            // nothing is lost and nothing repeats.
+            self.store.borrow_mut().deactivate(sub);
+            self.store.borrow_mut().release_sealed(sub);
+            self.sub_to_member.remove(&sub);
+            self.broker_down_retries += 1;
+            self.subscribe_members(&[m], ctx);
+            return;
+        }
         self.rpc_to(home, home_node, RpcKind::PushUnsubscribe { sub }, ctx);
     }
 
@@ -767,6 +800,9 @@ impl StreamSource for PushSourceGroup {
         extras.insert(StatKey::Subscribed, self.all_subscribed() as u64);
         if self.replayed > 0 {
             extras.insert(StatKey::RecordsReplayed, self.replayed);
+        }
+        if self.broker_down_retries > 0 {
+            extras.insert(StatKey::BrokerDownRetries, self.broker_down_retries);
         }
         SourceStats {
             records_consumed: self.records_consumed(),

@@ -76,6 +76,7 @@ fn rig_opts(
                 cost: CostModel::default(),
                 data_plane: crate::config::DataPlane::Sim,
                 shard: None,
+                rpc_deadline_ns: 0,
             },
             RecordGen::Sim,
             metrics.clone(),
@@ -111,6 +112,7 @@ fn rig_opts(
                 assignments: parts.iter().map(|&p| (p, 0)).collect(),
                 max_bytes: consumer_chunk as u64,
                 pull_timeout: 100_000,
+                rpc_deadline_ns: 0,
                 downstream: downstream.clone(),
                 queue_cap: 8,
                 checkpoint: None,
@@ -153,6 +155,7 @@ fn rig_opts(
                 assignments: parts.iter().map(|&p| (p, 0)).collect(),
                 max_bytes: consumer_chunk as u64,
                 pull_timeout: 100_000,
+                rpc_deadline_ns: 0,
                 pattern: None,
                 compute: None,
                 checkpoint: None,
@@ -171,6 +174,7 @@ fn rig_opts(
                 assignments: parts.iter().map(|&p| (p, 0)).collect(),
                 max_bytes: consumer_chunk as u64,
                 pull_timeout: 100_000,
+                rpc_deadline_ns: 0,
                 downstream: downstream.clone(),
                 queue_cap: 8,
                 objects: 4,
@@ -493,6 +497,7 @@ fn trim_rig(mode: &str, tuning: Option<HybridTuning>) -> Rig {
                 assignments: vec![(PartitionId(0), 0)],
                 max_bytes: 1024,
                 pull_timeout: 100_000,
+                rpc_deadline_ns: 0,
                 downstream,
                 queue_cap: 8,
                 checkpoint: None,
@@ -512,6 +517,7 @@ fn trim_rig(mode: &str, tuning: Option<HybridTuning>) -> Rig {
                 assignments: vec![(PartitionId(0), 0)],
                 max_bytes: 1024,
                 pull_timeout: 100_000,
+                rpc_deadline_ns: 0,
                 downstream,
                 queue_cap: 8,
                 objects: 2,

@@ -35,6 +35,11 @@ pub enum FrameError {
     /// The byte stream ended (clean EOF) in the middle of a frame —
     /// the peer dropped the connection mid-send.
     EofMidFrame { buffered: usize },
+    /// The stream stalled mid-frame for longer than the reader's idle
+    /// deadline: a partial frame sat in the decoder with no new bytes for
+    /// `ms` milliseconds. A quiet connection *between* frames never
+    /// triggers this — silence is only fatal once a frame has started.
+    IdleTimeout { ms: u64 },
     /// Socket-level failure (connect/read/write).
     Io(String),
     /// The connection (or its writer thread) is already gone.
@@ -51,6 +56,9 @@ impl fmt::Display for FrameError {
             FrameError::UnknownTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
             FrameError::EofMidFrame { buffered } => {
                 write!(f, "stream ended mid-frame ({buffered} bytes buffered)")
+            }
+            FrameError::IdleTimeout { ms } => {
+                write!(f, "stream stalled mid-frame past the {ms} ms idle deadline")
             }
             FrameError::Io(e) => write!(f, "transport i/o: {e}"),
             FrameError::Closed => write!(f, "connection closed"),

@@ -7,7 +7,12 @@
 //!   only encoded byte buffers cross threads);
 //! * one **reader thread** per connection: blocking reads into a
 //!   [`FrameDecoder`], complete frame *bodies* (raw `Vec<u8>`) go to the
-//!   owner's unbounded inbox. Unbounded on purpose — the reader never
+//!   owner's unbounded inbox. With an idle deadline armed
+//!   ([`TcpTransport::set_idle_timeout_ms`]) the reads are poll-based
+//!   instead, so a stream that stalls *mid-frame* past the deadline is
+//!   closed with a typed [`FrameError::IdleTimeout`] — the wire-level
+//!   analogue of the sim plane's broker failure detector. Unbounded
+//!   inbox on purpose — the reader never
 //!   stalls, so kernel receive buffers always drain and a peer's writer
 //!   can never deadlock against ours (the protocols above are
 //!   request/reply or credit-windowed, bounding what a peer can have in
@@ -71,6 +76,10 @@ pub struct TcpTransport {
     /// Connections whose `Closed` event has been delivered (guards the
     /// exactly-once contract when a reader error races a local close).
     closed_delivered: HashMap<ConnId, bool>,
+    /// Reader idle deadline (ms) applied to connections registered after
+    /// it is set; 0 = blocking reads with no deadline. See
+    /// [`TcpTransport::set_idle_timeout_ms`].
+    idle_timeout_ms: u64,
 }
 
 impl TcpTransport {
@@ -85,7 +94,19 @@ impl TcpTransport {
             inbox_tx,
             threads: Vec::new(),
             closed_delivered: HashMap::new(),
+            idle_timeout_ms: 0,
         }
+    }
+
+    /// Arm an idle deadline on the readers of connections opened from now
+    /// on: a stream that stalls *mid-frame* (partial frame buffered, no
+    /// new bytes) for longer than `ms` is closed with a typed
+    /// [`FrameError::IdleTimeout`] — the reader's analogue of a dead
+    /// broker's silence. Silence between frames never trips it: an idle
+    /// but healthy peer owes us nothing. `0` restores plain blocking
+    /// reads.
+    pub fn set_idle_timeout_ms(&mut self, ms: u64) {
+        self.idle_timeout_ms = ms;
     }
 
     /// An accepting endpoint bound to `addr` (use port 0 for ephemeral;
@@ -111,12 +132,13 @@ impl TcpTransport {
         let read_stream = stream.try_clone()?;
         let write_stream = stream.try_clone()?;
         let inbox = self.inbox_tx.clone();
+        let idle_ms = self.idle_timeout_ms;
         let (writer_tx, writer_rx) = sync_channel::<Vec<u8>>(WRITE_QUEUE_FRAMES);
 
         self.threads.push(
             std::thread::Builder::new()
                 .name(format!("zs-read-{conn}"))
-                .spawn(move || reader_main(conn, read_stream, inbox))
+                .spawn(move || reader_main(conn, read_stream, inbox, idle_ms))
                 .map_err(|e| FrameError::Io(e.to_string()))?,
         );
         self.threads.push(
@@ -271,9 +293,18 @@ impl Transport for TcpTransport {
     }
 }
 
-fn reader_main(conn: ConnId, mut stream: TcpStream, inbox: Sender<Inbound>) {
+fn reader_main(conn: ConnId, mut stream: TcpStream, inbox: Sender<Inbound>, idle_ms: u64) {
     let mut decoder = FrameDecoder::new();
     let mut buf = [0u8; 64 * 1024];
+    // With an idle deadline armed, reads wake periodically (poll-based)
+    // so a mid-frame stall can be noticed; without one they block forever,
+    // exactly as before.
+    if idle_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(idle_ms.clamp(1, 50))));
+    }
+    // When the stall clock started: set on the first timed-out read with a
+    // partial frame buffered, cleared whenever bytes arrive.
+    let mut stalled_since: Option<std::time::Instant> = None;
     loop {
         match stream.read(&mut buf) {
             Ok(0) => {
@@ -282,6 +313,7 @@ fn reader_main(conn: ConnId, mut stream: TcpStream, inbox: Sender<Inbound>) {
                 return;
             }
             Ok(n) => {
+                stalled_since = None;
                 decoder.push(&buf[..n]);
                 loop {
                     match decoder.next_frame() {
@@ -300,6 +332,27 @@ fn reader_main(conn: ConnId, mut stream: TcpStream, inbox: Sender<Inbound>) {
                 }
             }
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if idle_ms > 0
+                    && matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+            {
+                // The poll slice expired. Only a *partial frame* left
+                // waiting counts as a stall — silence between frames is an
+                // idle peer, not a dead one.
+                if decoder.buffered() == 0 {
+                    stalled_since = None;
+                    continue;
+                }
+                let t0 = *stalled_since.get_or_insert_with(std::time::Instant::now);
+                if t0.elapsed() >= Duration::from_millis(idle_ms) {
+                    let _ = inbox.send(Inbound::Closed {
+                        conn,
+                        error: Some(FrameError::IdleTimeout { ms: idle_ms }),
+                    });
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    return;
+                }
+            }
             Err(e) => {
                 // A local close (shutdown(2) racing the blocking read)
                 // surfaces as ConnectionReset/NotConnected — report it as

@@ -106,6 +106,68 @@ fn peer_drop_mid_frame_is_typed_eof_not_panic() {
 }
 
 #[test]
+fn mid_frame_stall_times_out_with_typed_error() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    server.set_idle_timeout_ms(100);
+    let addr = server.local_addr().unwrap();
+
+    // A raw socket starts a frame (valid prefix, torn body) and goes
+    // silent WITHOUT dropping — the EOF path never fires; only the idle
+    // deadline can reclaim the reader.
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&(100u32).to_le_bytes()).unwrap();
+    raw.write_all(&[9, 9, 9]).unwrap();
+
+    let err = poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Accepted { .. } => None,
+            TransportEvent::Closed { error, .. } => Some(error),
+            other => panic!("unexpected {other:?}"),
+        },
+        "idle-timeout close",
+    );
+    assert_eq!(err, Some(FrameError::IdleTimeout { ms: 100 }));
+    drop(raw);
+    let s = server.shutdown();
+    assert_eq!(s.spawned, s.joined);
+}
+
+#[test]
+fn silence_between_frames_never_times_out() {
+    let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+    server.set_idle_timeout_ms(50);
+    let addr = server.local_addr().unwrap();
+    let mut client = TcpTransport::client();
+    let conn = client.connect(&addr).unwrap();
+    client.send(conn, &hello(1)).unwrap();
+    poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Frame { .. } => Some(()),
+            _ => None,
+        },
+        "first frame",
+    );
+    // Several deadlines of silence with no frame in flight: legal idle.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    client.send(conn, &hello(2)).unwrap();
+    poll_for(
+        &mut server,
+        |ev| match ev {
+            TransportEvent::Frame { .. } => Some(()),
+            TransportEvent::Closed { error, .. } => {
+                panic!("connection died during legal between-frame silence: {error:?}")
+            }
+            _ => None,
+        },
+        "second frame after idle gap",
+    );
+    server.shutdown();
+    client.shutdown();
+}
+
+#[test]
 fn clean_peer_close_has_no_error() {
     let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
     let addr = server.local_addr().unwrap();

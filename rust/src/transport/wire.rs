@@ -39,8 +39,10 @@ use crate::transport::frame::{
 
 /// Protocol version carried in HELLO. Bumped on any codec change.
 /// v2 added the shard vocabulary (ShardReplicate/Freeze/Promote,
-/// WrongShard/FreezeAck/PromoteAck).
-pub const WIRE_VERSION: u32 = 2;
+/// WrongShard/FreezeAck/PromoteAck); v3 the fail-over vocabulary
+/// (Heartbeat/ShardFailover, HeartbeatAck/FailoverAck, and the
+/// idempotence origin on ShardReplicate).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Everything that can travel on a real-plane connection.
 #[derive(Debug, Clone)]
@@ -93,6 +95,8 @@ const K_REPLICATE: u8 = 7;
 const K_SHARD_REPLICATE: u8 = 8;
 const K_SHARD_FREEZE: u8 = 9;
 const K_SHARD_PROMOTE: u8 = 10;
+const K_HEARTBEAT: u8 = 11;
+const K_SHARD_FAILOVER: u8 = 12;
 
 // RpcReply tags.
 const R_APPEND_ACK: u8 = 0;
@@ -107,6 +111,8 @@ const R_ERROR: u8 = 8;
 const R_WRONG_SHARD: u8 = 9;
 const R_FREEZE_ACK: u8 = 10;
 const R_PROMOTE_ACK: u8 = 11;
+const R_HEARTBEAT_ACK: u8 = 12;
+const R_FAILOVER_ACK: u8 = 13;
 
 // Payload tags.
 const P_SIM: u8 = 0;
@@ -316,13 +322,21 @@ fn encode_kind(out: &mut Vec<u8>, kind: &RpcKind) {
             put_u64(out, *bytes);
             put_u32(out, *chunks);
         }
-        RpcKind::ShardReplicate { chunks } => {
+        RpcKind::ShardReplicate { chunks, origin } => {
             put_u8(out, K_SHARD_REPLICATE);
             put_u32(out, chunks.len() as u32);
             for sc in chunks {
                 put_u64(out, sc.partition.0 as u64);
                 put_u64(out, sc.offset);
                 encode_chunk(out, &sc.chunk);
+            }
+            match origin {
+                None => put_u8(out, 0),
+                Some((actor, rpc)) => {
+                    put_u8(out, 1);
+                    put_u64(out, actor.0 as u64);
+                    put_u64(out, *rpc);
+                }
             }
         }
         RpcKind::ShardFreeze { epoch, partitions } => {
@@ -335,7 +349,46 @@ fn encode_kind(out: &mut Vec<u8>, kind: &RpcKind) {
             put_u64(out, *epoch);
             encode_partitions(out, partitions);
         }
+        RpcKind::Heartbeat => put_u8(out, K_HEARTBEAT),
+        RpcKind::ShardFailover { epoch, dead, table, gained } => {
+            put_u8(out, K_SHARD_FAILOVER);
+            put_u64(out, *epoch);
+            put_u64(out, *dead as u64);
+            encode_shard_table(out, table);
+            encode_partitions(out, gained);
+        }
     }
+}
+
+fn encode_shard_table(out: &mut Vec<u8>, table: &crate::shard::ShardTable) {
+    put_u64(out, table.epoch);
+    put_u64(out, table.brokers() as u64);
+    put_u64(out, table.replication() as u64);
+    put_u32(out, table.partitions() as u32);
+    for p in 0..table.partitions() {
+        let set = table.replica_set(PartitionId(p));
+        put_u32(out, set.len() as u32);
+        for &b in set {
+            put_u64(out, b as u64);
+        }
+    }
+}
+
+fn decode_shard_table(r: &mut FrameReader<'_>) -> Result<crate::shard::ShardTable, FrameError> {
+    let epoch = r.u64("shard_table.epoch")?;
+    let brokers = r.u64("shard_table.brokers")? as usize;
+    let replication = r.u64("shard_table.replication")? as usize;
+    let n = r.u32("shard_table.partitions")? as usize;
+    let mut replicas = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let len = r.u32("shard_table.row")? as usize;
+        let mut row = Vec::with_capacity(len.min(64));
+        for _ in 0..len {
+            row.push(r.u64("shard_table.replica")? as usize);
+        }
+        replicas.push(row);
+    }
+    Ok(crate::shard::ShardTable::from_parts(epoch, brokers, replication, replicas))
 }
 
 fn encode_partitions(out: &mut Vec<u8>, partitions: &[PartitionId]) {
@@ -425,7 +478,15 @@ fn decode_kind(r: &mut FrameReader<'_>) -> Result<RpcKind, FrameError> {
                 let offset = r.u64("shard_replicate.offset")?;
                 chunks.push(StampedChunk { partition, offset, chunk: decode_chunk(r)? });
             }
-            Ok(RpcKind::ShardReplicate { chunks })
+            let origin = match r.u8("shard_replicate.origin tag")? {
+                0 => None,
+                1 => Some((
+                    ActorId(r.u64("shard_replicate.origin_actor")? as usize),
+                    r.u64("shard_replicate.origin_rpc")?,
+                )),
+                t => return Err(FrameError::UnknownTag { what: "origin", tag: t }),
+            };
+            Ok(RpcKind::ShardReplicate { chunks, origin })
         }
         K_SHARD_FREEZE => Ok(RpcKind::ShardFreeze {
             epoch: r.u64("shard_freeze.epoch")?,
@@ -434,6 +495,13 @@ fn decode_kind(r: &mut FrameReader<'_>) -> Result<RpcKind, FrameError> {
         K_SHARD_PROMOTE => Ok(RpcKind::ShardPromote {
             epoch: r.u64("shard_promote.epoch")?,
             partitions: decode_partitions(r, "shard_promote.partitions")?,
+        }),
+        K_HEARTBEAT => Ok(RpcKind::Heartbeat),
+        K_SHARD_FAILOVER => Ok(RpcKind::ShardFailover {
+            epoch: r.u64("shard_failover.epoch")?,
+            dead: r.u64("shard_failover.dead")? as usize,
+            table: decode_shard_table(r)?,
+            gained: decode_partitions(r, "shard_failover.gained")?,
         }),
         t => Err(FrameError::UnknownTag { what: "kind", tag: t }),
     }
@@ -495,6 +563,14 @@ fn encode_reply(out: &mut Vec<u8>, reply: &RpcReply) {
             put_u8(out, R_PROMOTE_ACK);
             put_u64(out, *epoch);
         }
+        RpcReply::HeartbeatAck { epoch } => {
+            put_u8(out, R_HEARTBEAT_ACK);
+            put_u64(out, *epoch);
+        }
+        RpcReply::FailoverAck { epoch } => {
+            put_u8(out, R_FAILOVER_ACK);
+            put_u64(out, *epoch);
+        }
     }
 }
 
@@ -538,6 +614,8 @@ fn decode_reply(r: &mut FrameReader<'_>) -> Result<RpcReply, FrameError> {
         R_WRONG_SHARD => Ok(RpcReply::WrongShard { epoch: r.u64("wrong_shard.epoch")? }),
         R_FREEZE_ACK => Ok(RpcReply::FreezeAck { epoch: r.u64("freeze_ack.epoch")? }),
         R_PROMOTE_ACK => Ok(RpcReply::PromoteAck { epoch: r.u64("promote_ack.epoch")? }),
+        R_HEARTBEAT_ACK => Ok(RpcReply::HeartbeatAck { epoch: r.u64("heartbeat_ack.epoch")? }),
+        R_FAILOVER_ACK => Ok(RpcReply::FailoverAck { epoch: r.u64("failover_ack.epoch")? }),
         t => Err(FrameError::UnknownTag { what: "reply", tag: t }),
     }
 }
@@ -559,6 +637,8 @@ pub fn msg_label(msg: &WireMsg) -> &'static str {
             RpcKind::ShardReplicate { .. } => "shard_replicate",
             RpcKind::ShardFreeze { .. } => "shard_freeze",
             RpcKind::ShardPromote { .. } => "shard_promote",
+            RpcKind::Heartbeat => "heartbeat",
+            RpcKind::ShardFailover { .. } => "shard_failover",
         },
         WireMsg::Rep { reply, .. } => match reply {
             RpcReply::AppendAck { .. } => "append_ack",
@@ -573,6 +653,8 @@ pub fn msg_label(msg: &WireMsg) -> &'static str {
             RpcReply::WrongShard { .. } => "wrong_shard",
             RpcReply::FreezeAck { .. } => "freeze_ack",
             RpcReply::PromoteAck { .. } => "promote_ack",
+            RpcReply::HeartbeatAck { .. } => "heartbeat_ack",
+            RpcReply::FailoverAck { .. } => "failover_ack",
         },
         WireMsg::Evt { .. } => "object_ready",
         WireMsg::Shutdown => "shutdown",
@@ -745,9 +827,17 @@ mod tests {
                     offset: 17,
                     chunk: Chunk::sim(8, 64),
                 }],
+                origin: Some((ActorId(42), 99)),
             },
             RpcKind::ShardFreeze { epoch: 2, partitions: vec![PartitionId(0), PartitionId(1)] },
             RpcKind::ShardPromote { epoch: 2, partitions: vec![PartitionId(0)] },
+            RpcKind::Heartbeat,
+            RpcKind::ShardFailover {
+                epoch: 3,
+                dead: 1,
+                table: crate::shard::ShardTable::build(4, 2, 2, 7).failed_over(1),
+                gained: vec![PartitionId(2), PartitionId(3)],
+            },
         ];
         for kind in kinds {
             let label_before = msg_label(&WireMsg::Req {
@@ -775,6 +865,8 @@ mod tests {
             RpcReply::WrongShard { epoch: 4 },
             RpcReply::FreezeAck { epoch: 4 },
             RpcReply::PromoteAck { epoch: 4 },
+            RpcReply::HeartbeatAck { epoch: 4 },
+            RpcReply::FailoverAck { epoch: 5 },
         ];
         for reply in replies {
             let before = msg_label(&WireMsg::Rep { wire_id: 1, reply: reply.clone() });
@@ -785,6 +877,29 @@ mod tests {
             };
             assert_eq!(before, msg_label(&WireMsg::Rep { wire_id: 1, reply: back }));
         }
+    }
+
+    #[test]
+    fn shard_failover_table_survives_the_wire() {
+        let table = crate::shard::ShardTable::build(6, 3, 2, 0xBEEF).failed_over(2);
+        let req = WireMsg::Req {
+            wire_id: 4,
+            from_node: 0,
+            kind: RpcKind::ShardFailover {
+                epoch: table.epoch,
+                dead: 2,
+                table: table.clone(),
+                gained: vec![PartitionId(4)],
+            },
+        };
+        let WireMsg::Req { kind: RpcKind::ShardFailover { epoch, dead, table: back, gained }, .. } =
+            roundtrip(&req)
+        else {
+            panic!()
+        };
+        assert_eq!((epoch, dead), (table.epoch, 2));
+        assert_eq!(back, table, "ragged post-fail-over rows decode identically");
+        assert_eq!(gained, vec![PartitionId(4)]);
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Broker fail-over golden parity: a broker death at `rf >= 2` must be
+//! invisible in the totals.
+//!
+//! Four invariants guard the fail-over subsystem:
+//!
+//! 1. **A dead broker loses nothing committed.** On a fixed seed with
+//!    bounded generators, every source mode × write mode cell reports the
+//!    same closed-form totals (`Np × corpus_records`) at
+//!    `broker_count = 3`, `rf = 2` **with a broker killed mid-run** as the
+//!    same-seed fault-free run — zero loss, zero duplication across the
+//!    promotion.
+//! 2. **The detector actually fires.** The faulted cells report the
+//!    `shard.*` fail-over gauges: one fail-over, a positive promotion
+//!    count, a detection latency bounded by the lease.
+//! 3. **A laggard reader survives the corpse.** A pull consumer throttled
+//!    far behind the producers still holds a backlog on the dead primary
+//!    when the emergency epoch publishes; its deadline-expired pulls
+//!    consult the down-mask, re-route to the promoted replica and drain
+//!    the full corpus.
+//! 4. **An in-flight quorum append crosses the fail-over.** Pipelined
+//!    writers keep a window of unacknowledged appends; the kill lands
+//!    while that window spans the victim, and the retransmits must land
+//!    exactly once under the promoted primary's dedup table.
+//!
+//! Producers are throttled (`cost.producer_record_ns`) so the corpus is
+//! still being written when the broker dies at virtual second 1 — without
+//! it the sim drains the bounded corpus in virtual milliseconds and the
+//! kill would hit an idle broker.
+
+use zettastream::cluster::launch;
+use zettastream::config::{
+    DataPlane, ExperimentConfig, FaultKind, SourceMode, Workload, WriteMode,
+};
+
+const NP: u64 = 2;
+const CORPUS: u64 = 2_000;
+
+/// One faulted cell: bc=3, rf=2, the last broker killed mid-production.
+/// The topology mirrors `tests/shard_rebalance.rs` so the rebalance and
+/// fail-over suites exercise the same shard layout.
+fn faulted_config(mode: SourceMode, write: WriteMode) -> ExperimentConfig {
+    let mut c = ExperimentConfig {
+        name: format!("failover-{}-{}", mode.name(), write.name()),
+        np: NP as usize,
+        nc: 3,
+        nmap: 4,
+        ns: 6,
+        producer_chunk: 4 * 1024,
+        consumer_chunk: 16 * 1024,
+        record_size: 100,
+        broker_cores: 8,
+        mode,
+        write_mode: write,
+        workload: Workload::Count,
+        data_plane: DataPlane::Sim,
+        corpus_records: CORPUS,
+        duration_secs: 12,
+        warmup_secs: 1,
+        seed: 0xC0FFEE,
+        broker_count: 3,
+        replication_factor: 2,
+        fault_at_secs: 1,
+        fault_kind: FaultKind::Broker,
+        ..Default::default()
+    };
+    c.cost.producer_record_ns = 1_000_000; // 1 ms/record: ~2 s of production
+    c
+}
+
+/// The same cell with the kill disarmed: same seed, same topology, same
+/// generators, same totals.
+fn fault_free_config(mode: SourceMode, write: WriteMode) -> ExperimentConfig {
+    let mut c = faulted_config(mode, write);
+    c.name = format!("failover-base-{}-{}", mode.name(), write.name());
+    c.fault_at_secs = 0;
+    c
+}
+
+#[test]
+fn golden_totals_survive_a_broker_death() {
+    let expect = NP * CORPUS;
+    for &mode in &SourceMode::ALL {
+        for &write in &WriteMode::ALL {
+            let faulted = launch(&faulted_config(mode, write), None).run();
+            assert_eq!(
+                faulted.records_produced,
+                expect,
+                "{}/{} broker-kill: bounded corpus fully produced",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                faulted.records_consumed,
+                expect,
+                "{}/{} broker-kill: consumed == produced across the promotion \
+                 (exactly once, fully drained)",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                faulted.tuples_logged,
+                expect,
+                "{}/{} broker-kill: every record logged exactly once",
+                mode.name(),
+                write.name()
+            );
+            assert_eq!(
+                faulted.report.gauge("shard.failovers"),
+                Some(1.0),
+                "{}/{}: the kill triggered exactly one fail-over",
+                mode.name(),
+                write.name()
+            );
+
+            let golden = launch(&fault_free_config(mode, write), None).run();
+            assert_eq!(
+                (golden.records_produced, golden.records_consumed, golden.tuples_logged),
+                (faulted.records_produced, faulted.records_consumed, faulted.tuples_logged),
+                "{}/{}: faulted and fault-free runs must agree on every total",
+                mode.name(),
+                write.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn failover_reports_the_detection_gauges() {
+    let summary = launch(&faulted_config(SourceMode::Pull, WriteMode::SyncRpc), None).run();
+    assert_eq!(summary.report.gauge("shard.brokers"), Some(3.0));
+    assert_eq!(summary.report.gauge("shard.failovers"), Some(1.0));
+    assert!(
+        summary.report.gauge("shard.promotions").unwrap_or(0.0) > 0.0,
+        "the fail-over promoted at least one replica"
+    );
+    let detect = summary
+        .report
+        .gauge("shard.detection_ms")
+        .expect("detection latency reported");
+    // Kill → declaration is bounded by the lease plus one heartbeat of
+    // probe skew (defaults: 500 ms lease, 100 ms heartbeat).
+    assert!(
+        detect > 0.0 && detect <= 1_000.0,
+        "detection latency {detect} ms outside (0, lease + slack]"
+    );
+    assert!(
+        summary.report.gauge("write_broker_down_retries").is_some(),
+        "write-path broker-down retry gauge exported"
+    );
+    assert!(
+        summary.report.gauge("source_broker_down_retries").is_some(),
+        "read-path broker-down retry gauge exported"
+    );
+    // The fault-free topology reports no fail-over.
+    let golden = launch(&fault_free_config(SourceMode::Pull, WriteMode::SyncRpc), None).run();
+    assert_eq!(golden.report.gauge("shard.failovers"), Some(0.0));
+}
+
+#[test]
+fn laggard_pull_reader_crosses_the_failover_without_loss() {
+    // Fast producers, slow consumers: the whole corpus is quorum-durable
+    // before the kill, but the laggard readers still need history from
+    // the dead primary. Their deadline-expired pulls consult the
+    // down-mask, reissue against the promoted replica (which holds the
+    // full log) and the drain must still be exact.
+    let mut c = faulted_config(SourceMode::Pull, WriteMode::SyncRpc);
+    c.name = "failover-laggard-pull".into();
+    c.cost.producer_record_ns = 0; // corpus lands in virtual milliseconds
+    c.cost.engine_record_ns = 1_000_000; // 1 ms/record consume: ~1.3 s behind
+    let summary = launch(&c, None).run();
+    let expect = NP * CORPUS;
+    assert_eq!(summary.records_produced, expect, "bounded corpus fully produced");
+    assert_eq!(
+        summary.records_consumed, expect,
+        "the laggard drained the full corpus across the promotion"
+    );
+    assert_eq!(summary.tuples_logged, expect);
+    assert_eq!(summary.report.gauge("shard.failovers"), Some(1.0));
+    assert!(summary.pull_rpcs > 0, "the reader kept pulling after the death");
+}
+
+#[test]
+fn in_flight_quorum_append_crosses_the_failover() {
+    // The pipelined writer keeps a bounded window of unacked appends; at
+    // 1 ms/record the kill at t=1 s lands with that window spanning the
+    // victim's partitions. The deadline plane retransmits to the promoted
+    // primary, whose append-idempotence table absorbs any duplicate — the
+    // totals must not move.
+    let summary =
+        launch(&faulted_config(SourceMode::Pull, WriteMode::Pipelined), None).run();
+    let expect = NP * CORPUS;
+    assert_eq!(summary.records_produced, expect);
+    assert_eq!(summary.records_consumed, expect);
+    assert_eq!(summary.tuples_logged, expect, "no loss and no double-count from retransmits");
+    assert_eq!(summary.report.gauge("shard.failovers"), Some(1.0));
+    assert!(
+        summary.report.gauge("write_broker_down_retries").unwrap_or(0.0) > 0.0,
+        "the kill forced at least one write-path deadline retry"
+    );
+}
